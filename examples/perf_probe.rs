@@ -1,0 +1,50 @@
+//! Perf probe (EXPERIMENTS.md §Perf): times cm_eval vs scores vs
+//! coordination on the fig2-sim workload through a delegating Engine.
+use std::time::Instant;
+use saif::cm::{Engine, NativeEngine, SubEval};
+use saif::data::synth;
+use saif::model::Problem;
+use saif::saif::{Saif, SaifConfig};
+
+struct Probe {
+    inner: NativeEngine,
+    cm_secs: f64,
+    cm_calls: usize,
+    sc_secs: f64,
+    sc_calls: usize,
+}
+impl Engine for Probe {
+    fn cm_eval(&mut self, p: &Problem, a: &[usize], b: &mut [f64], l: f64, k: usize) -> SubEval {
+        let t = Instant::now();
+        let r = self.inner.cm_eval(p, a, b, l, k);
+        self.cm_secs += t.elapsed().as_secs_f64();
+        self.cm_calls += 1;
+        r
+    }
+    fn scores(&mut self, p: &Problem, th: &[f64]) -> Vec<f64> {
+        let t = Instant::now();
+        let r = self.inner.scores(p, th);
+        self.sc_secs += t.elapsed().as_secs_f64();
+        self.sc_calls += 1;
+        r
+    }
+    fn name(&self) -> &'static str { "probe" }
+}
+
+fn main() {
+    let ds = synth::synth_linear(100, 2000, 42);
+    let prob = ds.problem();
+    let lam_max = prob.lambda_max();
+    for frac in [5e-3, 1e-3f64] {
+        let lam = lam_max * frac;
+        let mut probe = Probe { inner: NativeEngine::new(), cm_secs: 0.0, cm_calls: 0, sc_secs: 0.0, sc_calls: 0 };
+        let t = Instant::now();
+        let mut s = Saif::new(&mut probe, SaifConfig { eps: 1e-6, ..Default::default() });
+        let r = s.solve(&prob, lam);
+        let total = t.elapsed().as_secs_f64();
+        println!("frac={frac:.0e}: total={total:.3}s outer={} epochs={} p_add={} max_act={} final_act={} gap={:.1e}",
+            r.outer_iters, r.epochs, r.p_add_total, r.max_active, r.final_active, r.gap);
+        println!("  cm_eval: {:.3}s over {} calls | scores: {:.3}s over {} calls | other {:.3}s",
+            probe.cm_secs, probe.cm_calls, probe.sc_secs, probe.sc_calls, total - probe.cm_secs - probe.sc_secs);
+    }
+}

@@ -1,0 +1,131 @@
+"""AOT pipeline: lower the L2 graphs to HLO text + manifest for rust.
+
+Interchange is HLO *text*, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--report]
+
+Artifacts are shape buckets (DESIGN.md §2). For every bucket this
+writes `<name>.hlo.txt` plus one `manifest.json` describing inputs /
+outputs so the rust runtime can pack literals without guessing.
+
+--report prints the per-bucket VMEM footprint / MXU utilization
+estimate used in DESIGN.md §Perf (the real-TPU story; interpret-mode
+CPU timings are NOT a TPU proxy).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+K_EPOCHS = 10
+
+# (n_cap, p_cap) buckets. CM buckets hold the padded *active* block;
+# scores buckets hold the full feature matrix for the ADD scan.
+CM_LS_BUCKETS = [(128, 64), (128, 256), (128, 1024),
+                 (512, 64), (512, 256), (512, 1024)]
+CM_LOG_BUCKETS = [(512, 64), (512, 256), (512, 1024),
+                  (2048, 64), (2048, 256)]
+SCORES_BUCKETS = [(128, 128), (128, 5120), (512, 128), (512, 5120),
+                  (512, 8192), (2048, 256)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_cm(kind: str, n: int, p: int):
+    fn = model.cm_eval_ls if kind == "cm_ls" else model.cm_eval_logistic
+    return jax.jit(fn, static_argnames=("k",)).lower(
+        _spec(n, p), _spec(n), _spec(n), _spec(p), _spec(p), _spec(), k=K_EPOCHS
+    )
+
+
+def lower_scores(n: int, p: int):
+    return jax.jit(model.scores_scan).lower(_spec(n, p), _spec(n))
+
+
+def vmem_report(kind: str, n: int, p: int) -> str:
+    """VMEM footprint + MXU utilization estimate for the TPU mapping."""
+    f = 4  # f32 bytes
+    if kind == "scores":
+        blk = min(256, p)
+        vmem = (n * blk + n + 2 * blk) * f
+        # streaming matvec: 2*n*p flops over n*p*f bytes from HBM
+        ai = 2.0 / f  # flops/byte — HBM-bandwidth bound
+        note = f"block ({n},{blk}), arith intensity {ai:.2f} fl/B (BW-bound)"
+    else:
+        vmem = (n * p + 3 * n + 3 * p) * f  # X + y,w,resid + beta,mask,n2
+        # CM epoch: 4*n flops per coordinate step; sequential, VPU-bound
+        note = "whole active block resident; dot+axpy per coord (VPU)"
+    return f"{kind} n={n} p={p}: VMEM ~{vmem/2**20:.2f} MiB ({note})"
+
+
+def build(out_dir: str, report: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"k_epochs": K_EPOCHS, "artifacts": []}
+    jobs = (
+        [("cm_ls", n, p) for (n, p) in CM_LS_BUCKETS]
+        + [("cm_log", n, p) for (n, p) in CM_LOG_BUCKETS]
+        + [("scores", n, p) for (n, p) in SCORES_BUCKETS]
+    )
+    for kind, n, p in jobs:
+        name = f"{kind}_n{n}_p{p}"
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        lowered = lower_scores(n, p) if kind == "scores" else lower_cm(kind, n, p)
+        text = to_hlo_text(lowered)
+        assert len(text) > 100, f"suspiciously small HLO for {name}"
+        with open(path, "w") as f:
+            f.write(text)
+        if kind == "scores":
+            inputs = [["x", [n, p]], ["theta", [n]]]
+            outputs = [["scores", [p]], ["n2", [p]]]
+        else:
+            inputs = [["x", [n, p]], ["y", [n]], ["w", [n]],
+                      ["beta", [p]], ["mask", [p]], ["lam", []]]
+            outputs = [["beta", [p]], ["primal", []], ["dual", []],
+                       ["gap", []], ["theta", [n]], ["scores", [p]]]
+        manifest["artifacts"].append({
+            "name": name, "kind": kind, "n": n, "p": p,
+            "k": 0 if kind == "scores" else K_EPOCHS,
+            "file": name + ".hlo.txt",
+            "inputs": inputs, "outputs": outputs,
+        })
+        if report:
+            print(vmem_report(kind, n, p))
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--report", action="store_true",
+                    help="print VMEM/MXU estimates (DESIGN.md §Perf)")
+    args = ap.parse_args()
+    build(args.out, report=args.report)
+
+
+if __name__ == "__main__":
+    main()

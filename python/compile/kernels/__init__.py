@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT artifacts)."""
+
+from .cm_epoch import cm_epochs_ls
+from .logistic_cm import cm_epochs_logistic
+from .scores import scores
+from . import ref
+
+__all__ = ["cm_epochs_ls", "cm_epochs_logistic", "scores", "ref"]

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: K cyclic coordinate-minimization epochs (least squares).
+
+This is the SAIF inner-loop hot spot (the "shooting algorithm" of
+Fu 1998, the base algorithm the paper uses): for each active
+coordinate i,
+
+    g      = <x_i, r>                      (weighted residual corr.)
+    z      = beta_i + g / n2_i
+    beta_i <- S(z, lam / n2_i)             (soft-threshold)
+    r      += x_i * (old beta_i - beta_i)  (rank-1 residual repair)
+
+run cyclically over all coordinates, K epochs per kernel call. The
+coordinate loop is inherently sequential — the kernel expresses it as
+an in-kernel ``fori_loop`` over K * p_cap steps with the residual held
+in the output ref (VMEM-resident on a real TPU; SAIF's whole point is
+that the active block is small enough to stay resident: p_cap <= 1024,
+n_cap <= 2048 => X block <= 8 MB f32, within VMEM reach with column
+sub-tiling).
+
+TPU adaptation (DESIGN.md §3): the paper's CPU implementation walks
+columns from main memory; here BlockSpec pins the entire active
+sub-matrix + residual into VMEM once per call and the MXU/VPU do the
+length-n dot/axpy pairs. interpret=True is REQUIRED for CPU PJRT
+execution — the kernel then lowers to plain HLO (a while loop over
+fused dot/axpy), which is exactly what the rust runtime loads.
+
+Masked-out columns (mask == 0) and zero-norm columns are skipped:
+their beta entries are forced to 0 and the residual is untouched.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cm_ls_kernel(x_ref, y_ref, w_ref, beta_in_ref, mask_ref, lam_ref,
+                  beta_ref, r_ref, *, k: int, p_cap: int):
+    """Kernel body. Refs: X (n,p), y (n,), w (n,), beta_in (p,), mask (p,),
+    lam (1,1) scalar; outputs beta (p,), r (n,) residual."""
+    lam = lam_ref[0, 0]
+    x = x_ref[...]
+    w = w_ref[...]
+    beta0 = beta_in_ref[...] * mask_ref[...]
+    # weighted squared column norms (recomputed in-kernel: cheap vs K epochs)
+    n2 = jnp.sum(w[:, None] * x * x, axis=0)
+    beta_ref[...] = beta0
+    r_ref[...] = y_ref[...] - x @ beta0
+
+    def body(step, _):
+        i = step % p_cap
+        xi = jax.lax.dynamic_slice(x, (0, i), (x.shape[0], 1))[:, 0]
+        n2i = jax.lax.dynamic_slice(n2, (i,), (1,))[0]
+        mi = jax.lax.dynamic_slice(mask_ref[...], (i,), (1,))[0]
+        bi = beta_ref[pl.ds(i, 1)][0]
+        r = r_ref[...]
+        g = jnp.sum(w * xi * r)
+        live = (mi > 0.0) & (n2i > 0.0)
+        inv = jnp.where(live, 1.0 / jnp.maximum(n2i, 1e-30), 0.0)
+        z = bi + g * inv
+        bn = jnp.sign(z) * jnp.maximum(jnp.abs(z) - lam * inv, 0.0)
+        bn = jnp.where(live, bn, bi)
+        r_ref[...] = r + xi * (bi - bn)
+        beta_ref[pl.ds(i, 1)] = bn[None]
+        return 0
+
+    jax.lax.fori_loop(0, k * p_cap, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cm_epochs_ls(x, y, w, beta, mask, lam, k: int = 10):
+    """K cyclic CM epochs for LS LASSO. Returns (beta', residual)."""
+    n, p = x.shape
+    lam2d = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_cm_ls_kernel, k=k, p_cap=p)
+    return pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(x, y, w, beta, mask, lam2d)

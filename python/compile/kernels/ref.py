@@ -1,0 +1,155 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this
+package is checked against the matching function here by
+``python/tests/test_kernel.py`` (hypothesis sweeps over shapes, seeds
+and parameter ranges) before the AOT artifacts are trusted.
+
+Numeric conventions (shared with the rust native engine,
+``rust/src/model`` / ``rust/src/cm``):
+
+  least squares   f(u, y) = 1/2 (u - y)^2
+    P(beta)  = 1/2 sum_j w_j r_j^2 + lam * ||beta||_1,  r = y - X beta
+    theta^   = r / lam              (padded rows have X = y = 0 => r = 0)
+    D(theta) = 1/2 ||y||_w^2 - lam^2/2 ||theta - y/lam||_w^2
+
+  logistic        f(u, y) = log(1 + exp(-y u)),  y in {-1, +1}
+    theta^_j = w_j y_j sigmoid(-y_j u_j) / lam
+    D(theta) = -sum_j w_j [s log s + (1-s) log(1-s)],  s = lam theta_j y_j
+
+Coordinate minimization (shooting) updates coordinate i cyclically:
+
+  LS:       z = beta_i + x_i.r / n2_i,          beta_i <- S(z, lam/n2_i)
+  logistic: g = x_i.f'(u), H = 1/4 * n2_i,
+            z = beta_i - g/H,                   beta_i <- S(z, lam/H)
+
+with S the soft-threshold and n2_i = sum_j w_j x_ji^2. Masked-out
+(inactive / padding) columns are never touched and keep beta_i = 0.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def soft_threshold(z, t):
+    """Soft-thresholding operator S(z, t) = sign(z) * max(|z| - t, 0)."""
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# numpy references (plain loops — slow, unambiguous)
+# ---------------------------------------------------------------------------
+
+
+def cm_epochs_ls_np(X, y, w, beta, mask, lam, k):
+    """K cyclic CM epochs for weighted LASSO least squares (numpy loops)."""
+    X = np.asarray(X, np.float64)
+    y = np.asarray(y, np.float64)
+    w = np.asarray(w, np.float64)
+    mask = np.asarray(mask, np.float64)
+    beta = np.asarray(beta, np.float64) * mask  # masked columns forced to 0
+    n2 = (w[:, None] * X * X).sum(axis=0)
+    r = y - X @ beta
+    p = X.shape[1]
+    for _ in range(k):
+        for i in range(p):
+            if mask[i] == 0.0 or n2[i] <= 0.0:
+                continue
+            xi = X[:, i]
+            g = float((w * xi * r).sum())
+            z = beta[i] + g / n2[i]
+            bn = np.sign(z) * max(abs(z) - lam / n2[i], 0.0)
+            r += xi * (beta[i] - bn)
+            beta[i] = bn
+    return beta.astype(np.float32), r.astype(np.float32)
+
+
+def cm_epochs_logistic_np(X, y, w, beta, mask, lam, k):
+    """K cyclic CM epochs for L1 logistic regression (numpy loops)."""
+    X = np.asarray(X, np.float64)
+    y = np.asarray(y, np.float64)
+    w = np.asarray(w, np.float64)
+    mask = np.asarray(mask, np.float64)
+    beta = np.asarray(beta, np.float64) * mask  # masked columns forced to 0
+    n2 = (w[:, None] * X * X).sum(axis=0)
+    u = X @ beta
+    p = X.shape[1]
+    for _ in range(k):
+        for i in range(p):
+            if mask[i] == 0.0 or n2[i] <= 0.0:
+                continue
+            xi = X[:, i]
+            # f'(u) = -y * sigmoid(-y u)
+            fp = -y / (1.0 + np.exp(y * u))
+            g = float((w * xi * fp).sum())
+            h = 0.25 * n2[i]
+            z = beta[i] - g / h
+            bn = np.sign(z) * max(abs(z) - lam / h, 0.0)
+            u += xi * (bn - beta[i])
+            beta[i] = bn
+    return beta.astype(np.float32), u.astype(np.float32)
+
+
+def scores_np(X, theta):
+    """|X^T theta| and squared column norms (numpy)."""
+    X = np.asarray(X, np.float64)
+    theta = np.asarray(theta, np.float64)
+    s = np.abs(X.T @ theta)
+    n2 = (X * X).sum(axis=0)
+    return s.astype(np.float32), n2.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# jnp references (also used as the L2 eval maths in model.py)
+# ---------------------------------------------------------------------------
+
+
+def eval_ls_ref(X, y, w, beta, mask, lam, resid):
+    """Primal, projected dual, dual value, gap and active scores for LS.
+
+    ``resid`` must equal y - X beta (as produced by the CM kernel).
+    Returns (primal, dual, gap, theta, scores) matching model.cm_eval_ls.
+    """
+    beta = beta * mask
+    primal = 0.5 * jnp.sum(w * resid * resid) + lam * jnp.sum(jnp.abs(beta))
+    theta_hat = w * resid / lam
+    # max over *masked* columns only
+    corr = jnp.abs(X.T @ theta_hat) * mask
+    mx = jnp.maximum(jnp.max(corr), 1e-12)
+    # optimal feasible scaling (clipped): tau* = y.theta^ / (lam ||theta^||^2)
+    denom = jnp.maximum(lam * jnp.sum(theta_hat * theta_hat), 1e-30)
+    tau_star = jnp.sum(w * y * theta_hat) / denom
+    tau = jnp.clip(tau_star, -1.0 / mx, 1.0 / mx)
+    theta = tau * theta_hat
+    diff = theta - w * y / lam
+    dual = 0.5 * jnp.sum(w * y * y) - 0.5 * lam * lam * jnp.sum(diff * diff)
+    gap = jnp.maximum(primal - dual, 0.0)
+    scores = jnp.abs(X.T @ theta)
+    return primal, dual, gap, theta, scores
+
+
+def _xlogx(s):
+    return jnp.where(s > 0.0, s * jnp.log(jnp.maximum(s, 1e-30)), 0.0)
+
+
+def eval_logistic_ref(X, y, w, beta, mask, lam, u):
+    """Primal, projected dual, dual value, gap and scores for logistic.
+
+    ``u`` must equal X beta (as produced by the logistic CM kernel).
+    """
+    beta = beta * mask
+    loss = jnp.sum(w * jnp.logaddexp(0.0, -y * u))
+    primal = loss + lam * jnp.sum(jnp.abs(beta))
+    sig = 1.0 / (1.0 + jnp.exp(y * u))  # sigmoid(-y u)
+    theta_hat = w * y * sig / lam
+    corr = jnp.abs(X.T @ theta_hat) * mask
+    mx = jnp.maximum(jnp.max(corr), 1e-12)
+    tau = jnp.minimum(1.0, 1.0 / mx)
+    theta = tau * theta_hat
+    s = jnp.clip(lam * theta * y, 0.0, 1.0)
+    dual = -jnp.sum(w * (_xlogx(s) + _xlogx(1.0 - s)))
+    gap = jnp.maximum(primal - dual, 0.0)
+    scores = jnp.abs(X.T @ theta)
+    return primal, dual, gap, theta, scores

@@ -1,0 +1,60 @@
+"""L2: jax compute graphs composing the L1 Pallas kernels.
+
+Each function here is one AOT artifact (lowered by aot.py to HLO text,
+loaded by ``rust/src/runtime``). They are the complete numeric payload
+of one SAIF outer-loop step:
+
+  cm_eval_ls / cm_eval_logistic
+      K CM epochs on the padded active block (L1 kernel), then the
+      duality-gap evaluation: primal value, feasible projected dual
+      theta, dual value, gap, and per-active-column screening scores
+      |x_i^T theta| (for DEL).  Outputs, in tuple order:
+        0: beta'   (p_cap,)   updated coefficients (masked)
+        1: primal  ()         P_t(beta')
+        2: dual    ()         D(theta)
+        3: gap     ()         max(P - D, 0)
+        4: theta   (n_cap,)   feasible dual point
+        5: scores  (p_cap,)   |x_i^T theta| over the active block
+
+  scores_scan
+      |X^T theta| + squared column norms over the FULL feature matrix
+      (for ADD / lambda_max / initial correlations).  Outputs:
+        0: scores (p_cap,)    1: n2 (p_cap,)
+
+All shapes are static per artifact (shape buckets, DESIGN.md §2);
+the rust runtime pads with zero rows / masked columns.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cm_epochs_ls, cm_epochs_logistic, scores
+from .kernels.ref import eval_ls_ref, eval_logistic_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cm_eval_ls(x, y, w, beta, mask, lam, k: int = 10):
+    """K LS CM epochs + duality-gap evaluation (one SAIF inner step)."""
+    beta1, resid = cm_epochs_ls(x, y, w, beta, mask, lam, k=k)
+    beta1 = beta1 * mask
+    primal, dual, gap, theta, sc = eval_ls_ref(x, y, w, beta1, mask, lam, resid)
+    return beta1, primal, dual, gap, theta, sc
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cm_eval_logistic(x, y, w, beta, mask, lam, k: int = 10):
+    """K logistic CM epochs + duality-gap evaluation."""
+    beta1, u = cm_epochs_logistic(x, y, w, beta, mask, lam, k=k)
+    beta1 = beta1 * mask
+    primal, dual, gap, theta, sc = eval_logistic_ref(x, y, w, beta1, mask, lam, u)
+    return beta1, primal, dual, gap, theta, sc
+
+
+@jax.jit
+def scores_scan(x, theta):
+    """Full-matrix screening scan (ADD hot spot): |X^T theta|, ||x_i||^2."""
+    return scores(x, theta)

@@ -1,0 +1,49 @@
+"""AOT pipeline checks: manifest consistency, HLO text validity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lowering_produces_parseable_hlo_text():
+    lowered = aot.lower_cm("cm_ls", 128, 64)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[128,64]" in text  # the X parameter at the bucket shape
+    lowered = aot.lower_scores(128, 128)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+def test_vmem_report_mentions_sizes():
+    r = aot.vmem_report("cm_ls", 512, 1024)
+    assert "VMEM" in r and "n=512" in r
+    r = aot.vmem_report("scores", 128, 5120)
+    assert "BW-bound" in r
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_matches_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["k_epochs"] == aot.K_EPOCHS
+    assert len(m["artifacts"]) == (
+        len(aot.CM_LS_BUCKETS) + len(aot.CM_LOG_BUCKETS) + len(aot.SCORES_BUCKETS)
+    )
+    for a in m["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        assert os.path.getsize(path) > 100
+        # io shapes advertised to rust match the bucket dims
+        if a["kind"] == "scores":
+            assert a["inputs"][0][1] == [a["n"], a["p"]]
+            assert a["outputs"][0][1] == [a["p"]]
+        else:
+            assert a["inputs"][0][1] == [a["n"], a["p"]]
+            assert a["outputs"][4][1] == [a["n"]]  # theta

@@ -1,0 +1,119 @@
+"""L2 model-level invariants: gap sanity, dual feasibility, convergence."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def _ls_problem(seed, n=24, p=12):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, p)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    w = np.ones(n, np.float32)
+    mask = np.ones(p, np.float32)
+    beta = np.zeros(p, np.float32)
+    return X, y, w, beta, mask
+
+
+@SET
+@given(seed=st.integers(0, 5000), lam=st.floats(0.05, 3.0))
+def test_ls_gap_nonnegative_and_theta_feasible(seed, lam):
+    X, y, w, beta, mask = _ls_problem(seed)
+    out = model.cm_eval_ls(X, y, w, beta, mask, np.float32(lam), k=5)
+    beta1, primal, dual, gap, theta, sc = [np.array(o) for o in out]
+    assert gap >= 0.0
+    assert primal >= dual - 1e-4
+    # theta is feasible for the active block: |x_i^T theta| <= 1 (+eps)
+    corr = np.abs(X.T @ theta)
+    assert corr.max() <= 1.0 + 1e-4
+    # scores output is exactly |X^T theta|
+    np.testing.assert_allclose(sc, corr, atol=1e-5, rtol=1e-4)
+
+
+@SET
+@given(seed=st.integers(0, 5000), lam=st.floats(0.01, 0.3))
+def test_logistic_gap_nonnegative_and_feasible(seed, lam):
+    rng = np.random.default_rng(seed)
+    n, p = 24, 10
+    X = rng.normal(size=(n, p)).astype(np.float32)
+    y = np.where(rng.random(n) > 0.5, 1.0, -1.0).astype(np.float32)
+    w = np.ones(n, np.float32)
+    mask = np.ones(p, np.float32)
+    beta = np.zeros(p, np.float32)
+    out = model.cm_eval_logistic(X, y, w, beta, mask, np.float32(lam), k=5)
+    beta1, primal, dual, gap, theta, sc = [np.array(o) for o in out]
+    assert gap >= 0.0
+    corr = np.abs(X.T @ theta)
+    assert corr.max() <= 1.0 + 1e-4
+    s = lam * theta * y
+    assert s.min() >= -1e-6 and s.max() <= 1.0 + 1e-6
+
+
+def test_ls_gap_shrinks_with_iterations():
+    X, y, w, beta, mask = _ls_problem(42, n=40, p=16)
+    lam = np.float32(0.5)
+    gaps = []
+    b = beta
+    for _ in range(6):
+        out = model.cm_eval_ls(X, y, w, b, mask, lam, k=10)
+        b = np.array(out[0])
+        gaps.append(float(out[3]))
+    assert gaps[-1] < gaps[0] * 0.5
+    assert gaps[-1] < 1e-3 * max(gaps[0], 1.0) or gaps[-1] < 1e-4
+
+
+def test_ls_converges_to_kkt():
+    """At (near-)optimum the KKT conditions hold on the full block."""
+    X, y, w, beta, mask = _ls_problem(7, n=30, p=10)
+    lam = np.float32(1.0)
+    b = beta
+    for _ in range(200):
+        out = model.cm_eval_ls(X, y, w, b, mask, lam, k=10)
+        b = np.array(out[0])
+        if float(out[3]) < 1e-9:
+            break
+    r = y - X @ b
+    g = X.T @ r
+    for i in range(len(b)):
+        if b[i] != 0.0:
+            assert abs(g[i] - np.sign(b[i]) * lam) < 1e-2
+        else:
+            assert abs(g[i]) <= lam + 1e-2
+
+
+def test_padded_rows_do_not_change_answer():
+    """Zero-padding samples (w=0, zero rows) must not perturb results."""
+    X, y, w, beta, mask = _ls_problem(3, n=20, p=8)
+    lam = np.float32(0.4)
+    out1 = model.cm_eval_ls(X, y, w, beta, mask, lam, k=8)
+    Xp = np.vstack([X, np.zeros((12, 8), np.float32)])
+    yp = np.concatenate([y, np.zeros(12, np.float32)])
+    wp = np.concatenate([w, np.zeros(12, np.float32)])
+    out2 = model.cm_eval_ls(Xp, yp, wp, beta, mask, lam, k=8)
+    np.testing.assert_allclose(np.array(out1[0]), np.array(out2[0]),
+                               atol=1e-5, rtol=1e-4)
+    for i in (1, 2, 3):
+        np.testing.assert_allclose(float(out1[i]), float(out2[i]),
+                                   atol=1e-3, rtol=1e-4)
+
+
+def test_masked_columns_equivalent_to_submatrix():
+    """Masking columns == solving the sub-problem on the kept columns."""
+    X, y, w, beta, mask = _ls_problem(9, n=24, p=12)
+    keep = np.array([0, 2, 5, 7, 8])
+    mask = np.zeros(12, np.float32)
+    mask[keep] = 1.0
+    lam = np.float32(0.3)
+    out_full = model.cm_eval_ls(X, y, w, beta, mask, lam, k=8)
+    Xs = X[:, keep]
+    out_sub = model.cm_eval_ls(Xs, y, w, beta[keep],
+                               np.ones(len(keep), np.float32), lam, k=8)
+    np.testing.assert_allclose(np.array(out_full[0])[keep],
+                               np.array(out_sub[0]), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(float(out_full[3]), float(out_sub[3]),
+                               atol=1e-3, rtol=1e-3)

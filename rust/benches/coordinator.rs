@@ -1,0 +1,59 @@
+//! Bench: coordinator throughput scaling — the L3 serving-layer
+//! measurement (workers 1→8 on a fixed multi-tenant λ-path workload),
+//! plus the warm-start ablation (affinity on vs scattered keys).
+
+use std::sync::Arc;
+
+use saif::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
+use saif::data::synth;
+use saif::metrics::Table;
+
+fn workload(scatter_keys: bool) -> Vec<SolveRequest> {
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for d in 0..4u64 {
+        let ds = synth::synth_linear(100, 800, 77 + d);
+        let prob = Arc::new(ds.problem());
+        let lam_max = prob.lambda_max();
+        for k in 1..=6 {
+            reqs.push(SolveRequest {
+                id,
+                // scattered keys disable warm-start reuse/affinity
+                dataset_key: if scatter_keys { id } else { d },
+                problem: prob.clone(),
+                lam: lam_max * (1e-2f64).powf(k as f64 / 6.0),
+                method: Method::Saif,
+                eps: 1e-6,
+            });
+            id += 1;
+        }
+    }
+    reqs
+}
+
+fn main() {
+    let mut t = Table::new(
+        "coordinator throughput scaling",
+        &["workers", "affinity", "wall_s", "req/s", "p50_ms", "p99_ms", "warm_rate"],
+    );
+    for &workers in &[1usize, 2, 4, 8] {
+        for &scatter in &[false, true] {
+            let reqs = workload(scatter);
+            let total = reqs.len();
+            let (responses, lat, wall) =
+                Coordinator::run_batch(reqs, workers, EngineKind::Native);
+            let warm = responses.iter().filter(|r| r.warm_started).count();
+            t.row(vec![
+                workers.to_string(),
+                if scatter { "off".into() } else { "on".to_string() },
+                format!("{wall:.3}"),
+                format!("{:.1}", total as f64 / wall),
+                format!("{:.1}", lat.percentile_us(0.5) / 1e3),
+                format!("{:.1}", lat.percentile_us(0.99) / 1e3),
+                format!("{warm}/{total}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    t.save_csv("out", "coordinator_scaling").ok();
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Figure 2 (runtime comparison, sim + breast
+//! cancer). `SAIF_FULL=1 cargo bench --bench fig2` for paper scale.
+fn main() {
+    for id in ["fig2-sim", "fig2-bc"] {
+        saif::experiments::run(id, "out").expect("experiment");
+    }
+}

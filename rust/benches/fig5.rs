@@ -1,0 +1,4 @@
+//! Bench: regenerate Figure 5 (logistic regression runtimes).
+fn main() {
+    saif::experiments::run("fig5", "out").expect("experiment");
+}

@@ -1,0 +1,5 @@
+//! Bench: regenerate Figure 6 (λ-path runtime vs #λ: DPP vs homotopy
+//! vs warm-started SAIF).
+fn main() {
+    saif::experiments::run("fig6", "out").expect("experiment");
+}

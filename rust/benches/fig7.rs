@@ -1,0 +1,6 @@
+//! Bench: regenerate Figure 7 (tree fused LASSO: SAIF vs ADMM/CVX).
+fn main() {
+    for id in ["fig7-bc", "fig7-pet"] {
+        saif::experiments::run(id, "out").expect("experiment");
+    }
+}

@@ -1,0 +1,110 @@
+//! Micro-benchmarks of the numeric hot paths (EXPERIMENTS.md §Perf):
+//!
+//! * native dot/axpy (the CM inner loop) at the experiment sizes;
+//! * a native CM epoch and screening scan;
+//! * the same operations through the PJRT artifacts — call overhead +
+//!   the packed-buffer cache effect.
+
+use saif::cm::{Engine, NativeEngine};
+use saif::data::synth;
+use saif::linalg::{axpy, dot};
+use saif::metrics::Table;
+use saif::runtime::{artifacts_available, PjrtEngine};
+use saif::util::bench_secs;
+use saif::util::prng::Rng;
+
+fn main() {
+    let mut t = Table::new(
+        "kernel micro-benchmarks",
+        &["op", "size", "time", "gflop/s or note"],
+    );
+
+    // --- BLAS-1 hot loop ---
+    let mut rng = Rng::new(1);
+    for n in [100usize, 512, 4096] {
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut sink = 0.0;
+        let s = bench_secs(0.2, 1_000_000, || {
+            sink += dot(&x, &y);
+        });
+        t.row(vec![
+            "dot".into(),
+            n.to_string(),
+            format!("{:.1}ns", s * 1e9),
+            format!("{:.2}", 2.0 * n as f64 / s / 1e9),
+        ]);
+        let s = bench_secs(0.2, 1_000_000, || {
+            axpy(1.000001, &x, &mut y);
+        });
+        t.row(vec![
+            "axpy".into(),
+            n.to_string(),
+            format!("{:.1}ns", s * 1e9),
+            format!("{:.2}", 2.0 * n as f64 / s / 1e9),
+        ]);
+        std::hint::black_box(&sink);
+        std::hint::black_box(&y);
+    }
+
+    // --- CM epoch + scores scan, native vs PJRT ---
+    let ds = synth::synth_linear(100, 2000, 3);
+    let prob = ds.problem();
+    let lam = prob.lambda_max() * 0.05;
+    let active: Vec<usize> = (0..200).collect();
+
+    let mut native = NativeEngine::new();
+    let mut beta = vec![0.0; active.len()];
+    let s = bench_secs(0.3, 10_000, || {
+        native.cm_eval(&prob, &active, &mut beta, lam, 10);
+    });
+    t.row(vec![
+        "cm_eval native (10 epochs, |A|=200, n=100)".into(),
+        "200".into(),
+        format!("{:.2}us", s * 1e6),
+        format!("{:.2} (4-flop/coord est)", 10.0 * 200.0 * 100.0 * 4.0 / s / 1e9),
+    ]);
+    let theta = vec![0.001; prob.n()];
+    let s = bench_secs(0.3, 10_000, || {
+        std::hint::black_box(native.scores(&prob, &theta));
+    });
+    t.row(vec![
+        "scores native (p=2000, n=100)".into(),
+        "2000".into(),
+        format!("{:.2}us", s * 1e6),
+        format!("{:.2}", 2.0 * 2000.0 * 100.0 / s / 1e9),
+    ]);
+
+    if artifacts_available() {
+        let mut pjrt = PjrtEngine::new().expect("pjrt");
+        let mut beta2 = vec![0.0; active.len()];
+        let s = bench_secs(0.5, 5_000, || {
+            pjrt.cm_eval(&prob, &active, &mut beta2, lam, 10);
+        });
+        t.row(vec![
+            "cm_eval pjrt (bucket 128x256)".into(),
+            "200".into(),
+            format!("{:.2}us", s * 1e6),
+            "AOT artifact call incl. padding+transfer".into(),
+        ]);
+        let s = bench_secs(0.5, 5_000, || {
+            std::hint::black_box(pjrt.scores(&prob, &theta));
+        });
+        t.row(vec![
+            "scores pjrt (bucket 128x5120, cached pack)".into(),
+            "2000".into(),
+            format!("{:.2}us", s * 1e6),
+            "AOT artifact call".into(),
+        ]);
+    } else {
+        t.row(vec![
+            "pjrt".into(),
+            "-".into(),
+            "skipped".into(),
+            "artifacts not built".into(),
+        ]);
+    }
+
+    println!("{}", t.render());
+    t.save_csv("out", "kernels_micro").ok();
+}

@@ -1,0 +1,4 @@
+//! Bench: regenerate Table 1 (homotopy recall/precision vs SAIF).
+fn main() {
+    saif::experiments::run("table1", "out").expect("experiment");
+}

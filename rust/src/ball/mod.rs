@@ -1,0 +1,194 @@
+//! Dual-variable ball regions (the screening machinery of §2.2).
+//!
+//! * `gap_ball`   — eq. (6)/(11): radius² = 2α·gap/λ² around the
+//!   current feasible θ (α = smoothness of the loss; the paper states
+//!   the LS case α = 1).
+//! * `thm2_ball`  — Theorem 2 specialized to least squares with
+//!   λ₀ = λ_max(t) (so θ₀* = y/λ₀): center y/λ, radius
+//!   (‖y‖/λ)(1 − λ²/λ₀²) — the sequential-screening style bound SAIF
+//!   uses to tighten the gap ball early on.
+//! * `intersect`  — eq. (12): the circumscribed ball of the
+//!   intersection of two balls (Heron's formula for the lens radius).
+
+use crate::linalg::nrm2_sq;
+
+/// A ball region B(center, radius) in dual space.
+#[derive(Debug, Clone)]
+pub struct Ball {
+    pub center: Vec<f64>,
+    pub radius: f64,
+}
+
+impl Ball {
+    /// Does the ball contain the point (used by property tests)?
+    pub fn contains(&self, point: &[f64], slack: f64) -> bool {
+        let d2: f64 = self
+            .center
+            .iter()
+            .zip(point)
+            .map(|(c, p)| (c - p) * (c - p))
+            .sum();
+        d2.sqrt() <= self.radius + slack
+    }
+}
+
+/// Duality-gap ball (eq. 11): ‖θ* − θ‖ ≤ sqrt(2 α gap) / λ.
+pub fn gap_ball(theta: &[f64], gap: f64, lam: f64, alpha: f64) -> Ball {
+    Ball {
+        center: theta.to_vec(),
+        radius: (2.0 * alpha * gap.max(0.0)).sqrt() / lam,
+    }
+}
+
+/// Theorem-2 ball for least squares at λ₀ = λ_max of the current
+/// active set: θ₀* = y/λ₀, center (λ₀/λ)θ₀* = y/λ,
+/// radius (‖y‖/λ)(1 − λ²/λ₀²). Returns None when λ ≥ λ₀ (vacuous).
+pub fn thm2_ball_ls(y: &[f64], lam: f64, lam0: f64) -> Option<Ball> {
+    if lam >= lam0 || lam0 <= 0.0 {
+        return None;
+    }
+    let ratio = lam / lam0;
+    let r = (nrm2_sq(y).sqrt() / lam) * (1.0 - ratio * ratio);
+    Some(Ball {
+        center: y.iter().map(|v| v / lam).collect(),
+        radius: r,
+    })
+}
+
+/// Circumscribed ball of the intersection of b1 and b2 (eq. 12).
+/// Falls back to the smaller input ball whenever the lens construction
+/// is degenerate (nested balls, disjoint balls, zero distance) or not
+/// actually tighter.
+pub fn intersect(b1: &Ball, b2: &Ball) -> Ball {
+    let (small, big) = if b1.radius <= b2.radius { (b1, b2) } else { (b2, b1) };
+    let d2: f64 = b1
+        .center
+        .iter()
+        .zip(&b2.center)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    let d = d2.sqrt();
+    // nested: the small ball is inside the big one
+    if d + small.radius <= big.radius || d <= 1e-300 {
+        return small.clone();
+    }
+    // disjoint up to numerics: keep the smaller ball (the optimum must
+    // lie in both; numerically we just don't tighten)
+    if d >= b1.radius + b2.radius {
+        return small.clone();
+    }
+    let (r1, r2) = (b1.radius, b2.radius);
+    // Signed distances from the two centers to the chord plane. The
+    // eq-(12) circumscribed ball (center on the chord plane, radius =
+    // the rim circle's) covers the lens ONLY when the plane lies
+    // between the centers (a1, a2 ≥ 0): a spherical cap bulging past
+    // the plane on the far side of a center would escape it. In the
+    // near-nested regime where a center sits beyond the plane we fall
+    // back to the smaller input ball (still correct, just not tighter).
+    let a1 = (d * d + r1 * r1 - r2 * r2) / (2.0 * d);
+    let a2 = d - a1;
+    if a1 < 0.0 || a2 < 0.0 {
+        return small.clone();
+    }
+    let s = 0.5 * (r1 + r2 + d);
+    let area2 = s * (s - r1) * (s - r2) * (s - d);
+    if area2 <= 0.0 {
+        return small.clone();
+    }
+    let a = area2.sqrt();
+    let rt = 2.0 * a / d;
+    if rt >= small.radius {
+        return small.clone();
+    }
+    let t = a1 / d;
+    let center: Vec<f64> = b1
+        .center
+        .iter()
+        .zip(&b2.center)
+        .map(|(c1, c2)| (1.0 - t) * c1 + t * c2)
+        .collect();
+    Ball { center, radius: rt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn gap_ball_radius_formula() {
+        let b = gap_ball(&[0.0, 0.0], 2.0, 2.0, 1.0);
+        assert!((b.radius - 1.0).abs() < 1e-12);
+        let b = gap_ball(&[0.0], 2.0, 2.0, 0.25);
+        assert!((b.radius - 0.5).abs() < 1e-12);
+        // negative gap clamps to zero radius
+        assert_eq!(gap_ball(&[0.0], -1.0, 1.0, 1.0).radius, 0.0);
+    }
+
+    #[test]
+    fn thm2_vacuous_when_lam_geq_lam0() {
+        assert!(thm2_ball_ls(&[1.0, 2.0], 2.0, 1.0).is_none());
+        assert!(thm2_ball_ls(&[1.0, 2.0], 1.0, 1.0).is_none());
+        assert!(thm2_ball_ls(&[1.0, 2.0], 0.5, 1.0).is_some());
+    }
+
+    #[test]
+    fn thm2_radius_shrinks_as_lam_approaches_lam0() {
+        let y = [1.0, -2.0, 0.5];
+        let r_far = thm2_ball_ls(&y, 0.1, 1.0).unwrap().radius;
+        let r_near = thm2_ball_ls(&y, 0.9, 1.0).unwrap().radius;
+        assert!(r_near < r_far);
+        // r -> 0 as lam -> lam0
+        let r_close = thm2_ball_ls(&y, 0.999, 1.0).unwrap().radius;
+        assert!(r_close < 0.01 * r_far);
+    }
+
+    #[test]
+    fn intersect_nested_returns_small() {
+        let b1 = Ball { center: vec![0.0, 0.0], radius: 2.0 };
+        let b2 = Ball { center: vec![0.1, 0.0], radius: 0.5 };
+        let i = intersect(&b1, &b2);
+        assert_eq!(i.radius, 0.5);
+    }
+
+    #[test]
+    fn intersect_identical_centers() {
+        let b1 = Ball { center: vec![1.0, 1.0], radius: 2.0 };
+        let b2 = Ball { center: vec![1.0, 1.0], radius: 1.0 };
+        assert_eq!(intersect(&b1, &b2).radius, 1.0);
+    }
+
+    #[test]
+    fn intersect_covers_lens_property() {
+        // any point in both balls must be inside the intersection ball
+        prop::check("lens cover", 40, |rng: &mut Rng| {
+            let dim = 2 + rng.below(4);
+            let c1: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let c2: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let b1 = Ball { center: c1, radius: 0.2 + rng.uniform() };
+            let b2 = Ball { center: c2, radius: 0.2 + rng.uniform() };
+            let lens = intersect(&b1, &b2);
+            if lens.radius > b1.radius.min(b2.radius) + 1e-12 {
+                return Err("lens bigger than inputs".into());
+            }
+            // rejection-sample points in the intersection
+            for _ in 0..200 {
+                let pt: Vec<f64> = b1
+                    .center
+                    .iter()
+                    .map(|c| c + (rng.uniform() * 2.0 - 1.0) * b1.radius)
+                    .collect();
+                if b1.contains(&pt, 0.0) && b2.contains(&pt, 0.0) {
+                    if !lens.contains(&pt, 1e-9) {
+                        return Err(format!(
+                            "point escaped lens: r={} inputs {} {}",
+                            lens.radius, b1.radius, b2.radius
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,329 @@
+//! Command-line interface (hand-rolled arg parsing — no clap in the
+//! vendored registry, DESIGN.md §4).
+//!
+//! ```text
+//! repro solve      --dataset sim --lambda-frac 0.1 [--method saif]
+//!                  [--engine native|pjrt] [--eps 1e-6] [--seed 42]
+//!                  [--libsvm path --logistic]
+//! repro experiment --id fig2-sim [--out out]   (or --all)
+//! repro serve      [--workers 4] [--datasets 3] [--lambdas 8]
+//!                  [--engine native|pjrt] [--method saif]
+//! repro list
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
+use crate::data;
+use crate::runtime::PjrtEngine;
+use crate::saif::{Saif, SaifConfig};
+use crate::util::json::Json;
+
+/// Parsed `--key value` flags.
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { cmd, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// CLI entrypoint.
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let code = match args.cmd.as_str() {
+        "solve" => cmd_solve(&args),
+        "experiment" => cmd_experiment(&args),
+        "serve" => cmd_serve(&args),
+        "cv" => cmd_cv(&args),
+        "list" => cmd_list(),
+        _ => {
+            print!("{}", HELP);
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+SAIF — Safe Active Incremental Feature selection (paper reproduction)
+
+USAGE:
+  repro solve      --dataset <name> --lambda-frac <f> [--method saif|dyn|blitz]
+                   [--engine native|pjrt] [--eps 1e-6] [--seed 42]
+                   [--libsvm <path> [--logistic]]
+  repro experiment --id <id> [--out out]      run one paper experiment
+  repro experiment --all [--out out]          run every experiment
+  repro serve      [--workers N] [--datasets D] [--lambdas L]
+                   [--engine native|pjrt]     coordinator demo workload
+  repro cv         --dataset <name> [--folds 5] [--lambdas 20]
+                   [--workers 4]              k-fold CV λ selection
+  repro list                                  datasets + experiment ids
+";
+
+fn cmd_list() -> i32 {
+    println!("datasets: sim sim-small bc bc-small gisette usps pet");
+    println!("experiments: {}", crate::experiments::ALL.join(" "));
+    0
+}
+
+fn load_dataset(args: &Args) -> Result<data::Dataset, String> {
+    if let Some(path) = args.get("libsvm") {
+        return data::io::read_libsvm(path, args.has("logistic"));
+    }
+    let name = args.get("dataset").unwrap_or("sim-small");
+    let seed = args.get_usize("seed", 42) as u64;
+    data::by_name(name, seed).ok_or_else(|| format!("unknown dataset '{name}'"))
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let ds = match load_dataset(args) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let prob = ds.problem();
+    let lam_max = prob.lambda_max();
+    let lam = args
+        .get("lambda")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| lam_max * args.get_f64("lambda-frac", 0.1));
+    let eps = args.get_f64("eps", 1e-6);
+    let engine_name = args.get("engine").unwrap_or("native");
+    let method = args.get("method").unwrap_or("saif");
+
+    println!(
+        "dataset={} n={} p={} loss={:?} λ_max={lam_max:.4e} λ={lam:.4e} eps={eps:.0e} engine={engine_name} method={method}",
+        ds.name, ds.n(), ds.p(), ds.loss
+    );
+
+    let mut native = crate::cm::NativeEngine::new();
+    let mut pjrt_storage: PjrtEngine;
+    let engine: &mut dyn crate::cm::Engine = match engine_name {
+        "pjrt" => match PjrtEngine::new() {
+            Ok(e) => {
+                pjrt_storage = e;
+                &mut pjrt_storage
+            }
+            Err(e) => {
+                eprintln!("error: PJRT engine unavailable ({e}); run `make artifacts`");
+                return 2;
+            }
+        },
+        _ => &mut native,
+    };
+
+    let (beta, gap, secs) = match method {
+        "dyn" => {
+            let mut d = crate::screening::dynamic::DynScreen::new(
+                engine,
+                crate::screening::dynamic::DynScreenConfig { eps, ..Default::default() },
+            );
+            let r = d.solve(&prob, lam);
+            (r.beta, r.gap, r.secs)
+        }
+        "blitz" => {
+            let mut b = crate::workingset::Blitz::new(
+                engine,
+                crate::workingset::BlitzConfig { eps, ..Default::default() },
+            );
+            let r = b.solve(&prob, lam);
+            (r.beta, r.gap, r.secs)
+        }
+        _ => {
+            let mut s = Saif::new(engine, SaifConfig { eps, ..Default::default() });
+            let r = s.solve(&prob, lam);
+            println!(
+                "saif: outer={} epochs={} p_add={} max_active={}",
+                r.outer_iters, r.epochs, r.p_add_total, r.max_active
+            );
+            (r.beta, r.gap, r.secs)
+        }
+    };
+    let kkt = prob.kkt_violation(&beta, lam);
+    println!(
+        "solved in {:.3}s: {} nonzeros, gap={gap:.3e}, kkt_violation={kkt:.3e}",
+        secs,
+        beta.len()
+    );
+    let mut top: Vec<(usize, f64)> = beta.clone();
+    top.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+    for (i, v) in top.iter().take(10) {
+        println!("  β[{i}] = {v:+.6}");
+    }
+    0
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let out = args.get("out").unwrap_or("out");
+    let ids: Vec<&str> = if args.has("all") {
+        crate::experiments::ALL.to_vec()
+    } else {
+        match args.get("id") {
+            Some(id) => vec![id],
+            None => {
+                eprintln!("error: need --id <experiment> or --all (see `repro list`)");
+                return 2;
+            }
+        }
+    };
+    for id in ids {
+        println!("\n### experiment {id}");
+        if let Err(e) = crate::experiments::run(id, out) {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let workers = args.get_usize("workers", 4);
+    let n_datasets = args.get_usize("datasets", 3);
+    let n_lambdas = args.get_usize("lambdas", 8);
+    let engine = match args.get("engine") {
+        Some("pjrt") => EngineKind::Pjrt,
+        _ => EngineKind::Native,
+    };
+    let method = match args.get("method") {
+        Some("dyn") => Method::DynScreen,
+        Some("blitz") => Method::Blitz,
+        _ => Method::Saif,
+    };
+    let eps = args.get_f64("eps", 1e-6);
+
+    println!(
+        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={method:?}"
+    );
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for d in 0..n_datasets {
+        let ds = data::synth::synth_linear(100, 1000 + 200 * d, 1000 + d as u64);
+        let prob = Arc::new(ds.problem());
+        let lam_max = prob.lambda_max();
+        for k in 1..=n_lambdas {
+            reqs.push(SolveRequest {
+                id,
+                dataset_key: d as u64,
+                problem: prob.clone(),
+                lam: lam_max * (1e-2f64).powf(k as f64 / n_lambdas as f64),
+                method,
+                eps,
+            });
+            id += 1;
+        }
+    }
+    let total = reqs.len();
+    let (responses, lat, wall) = Coordinator::run_batch(reqs, workers, engine);
+    let worst_kkt = responses
+        .iter()
+        .map(|r| r.kkt_violation / r.lam.max(1.0))
+        .fold(0.0, f64::max);
+    let warm = responses.iter().filter(|r| r.warm_started).count();
+    println!("completed {total} requests in {wall:.3}s ({:.1} req/s)", total as f64 / wall);
+    println!("latency: {}", lat.summary());
+    println!("warm-started: {warm}/{total}; worst relative KKT violation: {worst_kkt:.2e}");
+    let mut rec = Json::obj();
+    rec.set("experiment", Json::Str("serve-demo".into()))
+        .set("requests", Json::Num(total as f64))
+        .set("wall_secs", Json::Num(wall))
+        .set("throughput_rps", Json::Num(total as f64 / wall))
+        .set("p50_us", Json::Num(lat.percentile_us(0.5)))
+        .set("p99_us", Json::Num(lat.percentile_us(0.99)))
+        .set("worst_rel_kkt", Json::Num(worst_kkt));
+    println!("{}", rec.to_string());
+    if worst_kkt > 1e-3 {
+        eprintln!("SAFETY CHECK FAILED");
+        return 1;
+    }
+    0
+}
+
+fn cmd_cv(args: &Args) -> i32 {
+    let ds = match load_dataset(args) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let folds = args.get_usize("folds", 5);
+    let n_lams = args.get_usize("lambdas", 20);
+    let workers = args.get_usize("workers", 4);
+    println!(
+        "cross-validation: {} ({}×{}), {folds} folds × {n_lams} λ, {workers} workers",
+        ds.name,
+        ds.n(),
+        ds.p()
+    );
+    let res = crate::cv::cross_validate(&ds, folds, n_lams, 1e-3, workers, 42);
+    println!("{:>12} {:>12} {:>10}", "lambda", "cv_error", "std");
+    for i in 0..res.lams.len() {
+        let mark = if (res.lams[i] - res.best_lam).abs() < 1e-12 { "  <-- best" } else { "" };
+        println!(
+            "{:>12.4e} {:>12.6} {:>10.4}{mark}",
+            res.lams[i], res.cv_error[i], res.cv_std[i]
+        );
+    }
+    println!("best λ = {:.4e}  (wall {:.2}s)", res.best_lam, res.wall_secs);
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_bools() {
+        let argv: Vec<String> = ["solve", "--dataset", "sim", "--all", "--eps", "1e-8"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.cmd, "solve");
+        assert_eq!(a.get("dataset"), Some("sim"));
+        assert!(a.has("all"));
+        assert_eq!(a.get_f64("eps", 0.0), 1e-8);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+}

@@ -1,0 +1,43 @@
+//! The `Engine` trait: the numeric contract between the L3 algorithms
+//! (SAIF, dynamic screening, BLITZ, homotopy, …) and the two inner-loop
+//! backends — the native f64 implementation and the PJRT-loaded
+//! JAX/Pallas artifacts. Both backends implement identical semantics
+//! (cross-checked in `rust/tests/engines.rs`).
+
+use crate::model::Problem;
+
+/// Result of K CM epochs + duality-gap evaluation on a sub-problem.
+#[derive(Debug, Clone)]
+pub struct SubEval {
+    /// Primal objective of the sub-problem at the updated β.
+    pub primal: f64,
+    /// Dual objective at the projected feasible θ.
+    pub dual: f64,
+    /// Duality gap max(P − D, 0).
+    pub gap: f64,
+    /// The feasible dual point (length n).
+    pub theta: Vec<f64>,
+    /// |x_iᵀ θ| for each *active* column, in `active` order (for DEL).
+    pub active_scores: Vec<f64>,
+}
+
+/// Numeric inner-loop backend.
+pub trait Engine {
+    /// Run `k` cyclic CM epochs restricted to `active` (indices into
+    /// `prob`'s columns), updating `beta` (same length/order as
+    /// `active`) in place, then evaluate the sub-problem duality gap.
+    fn cm_eval(
+        &mut self,
+        prob: &Problem,
+        active: &[usize],
+        beta: &mut [f64],
+        lam: f64,
+        k: usize,
+    ) -> SubEval;
+
+    /// Screening scan: |x_iᵀ θ| for every column of the problem.
+    fn scores(&mut self, prob: &Problem, theta: &[f64]) -> Vec<f64>;
+
+    /// Backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,386 @@
+//! The L3 serving layer: a multi-tenant LASSO solve coordinator.
+//!
+//! Downstream users of a screening library rarely solve one problem:
+//! they sweep λ grids for cross-validation across several datasets at
+//! once (§5.3 of the paper is exactly this workload). The coordinator
+//! turns the solvers into a service:
+//!
+//! * a dispatcher routes requests over worker threads with
+//!   **dataset affinity** — all requests touching a dataset land on
+//!   the same worker so its warm-start cache (last solution per
+//!   dataset, valid for the next smaller λ) and its packed PJRT
+//!   buffers are reused;
+//! * within a worker, queued requests for the same dataset are
+//!   **batched and sorted by descending λ** so the whole path is
+//!   warm-started (the Figure-6 trick, applied automatically);
+//! * every response carries a **safety certificate**: the KKT
+//!   violation of the returned β on the full problem, checked by the
+//!   coordinator, not trusted from the solver.
+//!
+//! Implementation is std-thread + channels (no tokio in the vendored
+//! registry — DESIGN.md §4); workers own their engines.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::cm::{Engine, NativeEngine};
+use crate::metrics::LatencyStats;
+use crate::model::Problem;
+use crate::runtime::PjrtEngine;
+use crate::saif::{Saif, SaifConfig};
+use crate::screening::dynamic::{DynScreen, DynScreenConfig};
+use crate::util::Stopwatch;
+use crate::workingset::{Blitz, BlitzConfig};
+
+/// Which solver a request wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Saif,
+    DynScreen,
+    Blitz,
+}
+
+/// Which engine workers use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    Pjrt,
+}
+
+/// A solve request.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub id: u64,
+    /// Key for affinity/warm-start (same dataset ⇒ same key).
+    pub dataset_key: u64,
+    pub problem: Arc<Problem>,
+    pub lam: f64,
+    pub method: Method,
+    pub eps: f64,
+}
+
+/// A solve response with its safety certificate.
+#[derive(Debug, Clone)]
+pub struct SolveResponse {
+    pub id: u64,
+    pub dataset_key: u64,
+    pub lam: f64,
+    pub beta: Vec<(usize, f64)>,
+    pub gap: f64,
+    /// KKT violation of β on the FULL problem (coordinator-verified).
+    pub kkt_violation: f64,
+    pub secs: f64,
+    pub worker: usize,
+    pub warm_started: bool,
+}
+
+enum Msg {
+    Work(SolveRequest),
+    Stop,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    senders: Vec<Sender<Msg>>,
+    results: Receiver<SolveResponse>,
+    handles: Vec<JoinHandle<()>>,
+    /// dataset_key → worker (sticky affinity)
+    affinity: HashMap<u64, usize>,
+    next_worker: usize,
+    inflight: usize,
+}
+
+impl Coordinator {
+    /// Spawn `n_workers` workers with the given engine kind.
+    pub fn new(n_workers: usize, engine: EngineKind) -> Coordinator {
+        let (res_tx, res_rx) = channel::<SolveResponse>();
+        let mut senders = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = channel::<Msg>();
+            let res_tx = res_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("saif-worker-{w}"))
+                .spawn(move || worker_loop(w, engine, rx, res_tx))
+                .expect("spawn worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Coordinator {
+            senders,
+            results: res_rx,
+            handles,
+            affinity: HashMap::new(),
+            next_worker: 0,
+            inflight: 0,
+        }
+    }
+
+    /// Submit a request (dataset-affine routing).
+    pub fn submit(&mut self, req: SolveRequest) {
+        let n = self.senders.len();
+        let worker = *self.affinity.entry(req.dataset_key).or_insert_with(|| {
+            let w = self.next_worker;
+            self.next_worker = (self.next_worker + 1) % n;
+            w
+        });
+        self.inflight += 1;
+        self.senders[worker].send(Msg::Work(req)).expect("worker alive");
+    }
+
+    /// Wait for all in-flight responses.
+    pub fn drain(&mut self) -> Vec<SolveResponse> {
+        let mut out = Vec::with_capacity(self.inflight);
+        while self.inflight > 0 {
+            out.push(self.results.recv().expect("worker result"));
+            self.inflight -= 1;
+        }
+        out
+    }
+
+    /// Stop workers and join.
+    pub fn shutdown(mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Convenience: run a whole batch and report latency stats.
+    pub fn run_batch(
+        requests: Vec<SolveRequest>,
+        n_workers: usize,
+        engine: EngineKind,
+    ) -> (Vec<SolveResponse>, LatencyStats, f64) {
+        let sw = Stopwatch::start();
+        let mut c = Coordinator::new(n_workers, engine);
+        for r in requests {
+            c.submit(r);
+        }
+        let responses = c.drain();
+        c.shutdown();
+        let wall = sw.secs();
+        let mut lat = LatencyStats::new();
+        for r in &responses {
+            lat.record_secs(r.secs);
+        }
+        (responses, lat, wall)
+    }
+}
+
+/// Worker: batches its queue by dataset, sorts each dataset's requests
+/// by descending λ, warm-starts along the path, verifies KKT.
+fn worker_loop(
+    wid: usize,
+    engine_kind: EngineKind,
+    rx: Receiver<Msg>,
+    res_tx: Sender<SolveResponse>,
+) {
+    let mut native = NativeEngine::new();
+    let mut pjrt: Option<PjrtEngine> = match engine_kind {
+        EngineKind::Pjrt => PjrtEngine::new().ok(),
+        EngineKind::Native => None,
+    };
+    // warm-start cache: dataset_key → (λ of last solution, solution)
+    let mut warm: HashMap<u64, (f64, Vec<(usize, f64)>)> = HashMap::new();
+
+    loop {
+        // block for one message, then greedily drain the queue to batch
+        let first = match rx.recv() {
+            Ok(Msg::Work(r)) => r,
+            _ => return,
+        };
+        let mut batch = vec![first];
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::Work(r) => batch.push(r),
+                Msg::Stop => {
+                    process_batch(wid, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
+                    return;
+                }
+            }
+        }
+        process_batch(wid, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
+    }
+}
+
+fn process_batch(
+    wid: usize,
+    native: &mut NativeEngine,
+    mut pjrt: Option<&mut PjrtEngine>,
+    warm: &mut HashMap<u64, (f64, Vec<(usize, f64)>)>,
+    mut batch: Vec<SolveRequest>,
+    res_tx: &Sender<SolveResponse>,
+) {
+    // dataset-major, λ-descending order ⇒ warm starts chain down paths
+    batch.sort_by(|a, b| {
+        a.dataset_key
+            .cmp(&b.dataset_key)
+            .then(b.lam.partial_cmp(&a.lam).unwrap())
+    });
+    for req in batch {
+        let sw = Stopwatch::start();
+        let prob = &*req.problem;
+        let use_pjrt = match &pjrt {
+            Some(e) => e.supports(prob, 1) && prob.offset.is_none(),
+            None => false,
+        };
+        let engine: &mut dyn Engine = if use_pjrt {
+            *pjrt.as_mut().unwrap() as &mut dyn Engine
+        } else {
+            native as &mut dyn Engine
+        };
+        let (beta, gap, warm_started) = match req.method {
+            Method::Saif => {
+                let ws = warm
+                    .get(&req.dataset_key)
+                    .filter(|(l, _)| *l >= req.lam)
+                    .map(|(_, b)| b.clone());
+                let mut s = Saif::new(
+                    engine,
+                    SaifConfig { eps: req.eps, ..Default::default() },
+                );
+                let r = s.solve_warm(prob, req.lam, ws.as_deref());
+                (r.beta, r.gap, ws.is_some())
+            }
+            Method::DynScreen => {
+                let mut d = DynScreen::new(
+                    engine,
+                    DynScreenConfig { eps: req.eps, ..Default::default() },
+                );
+                let r = d.solve(prob, req.lam);
+                (r.beta, r.gap, false)
+            }
+            Method::Blitz => {
+                let mut b = Blitz::new(
+                    engine,
+                    BlitzConfig { eps: req.eps, ..Default::default() },
+                );
+                let r = b.solve(prob, req.lam);
+                (r.beta, r.gap, false)
+            }
+        };
+        warm.insert(req.dataset_key, (req.lam, beta.clone()));
+        // coordinator-side safety certificate
+        let kkt_violation = prob.kkt_violation(&beta, req.lam);
+        let _ = res_tx.send(SolveResponse {
+            id: req.id,
+            dataset_key: req.dataset_key,
+            lam: req.lam,
+            beta,
+            gap,
+            kkt_violation,
+            secs: sw.secs(),
+            worker: wid,
+            warm_started,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn requests_for(
+        prob: Arc<Problem>,
+        key: u64,
+        fracs: &[f64],
+        base_id: u64,
+    ) -> Vec<SolveRequest> {
+        let lam_max = prob.lambda_max();
+        fracs
+            .iter()
+            .enumerate()
+            .map(|(i, f)| SolveRequest {
+                id: base_id + i as u64,
+                dataset_key: key,
+                problem: prob.clone(),
+                lam: lam_max * f,
+                method: Method::Saif,
+                eps: 1e-8,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_solves_all_and_certifies() {
+        let p1 = Arc::new(synth::synth_linear(40, 200, 201).problem());
+        let p2 = Arc::new(synth::synth_linear(40, 150, 202).problem());
+        let mut reqs = requests_for(p1.clone(), 1, &[0.5, 0.2, 0.1], 0);
+        reqs.extend(requests_for(p2.clone(), 2, &[0.4, 0.15], 100));
+        let (responses, lat, _wall) = Coordinator::run_batch(reqs, 2, EngineKind::Native);
+        assert_eq!(responses.len(), 5);
+        assert_eq!(lat.count(), 5);
+        for r in &responses {
+            assert!(r.gap <= 1e-8);
+            let lam = r.lam;
+            assert!(
+                r.kkt_violation < 1e-3 * lam.max(1.0),
+                "req {} kkt {}",
+                r.id,
+                r.kkt_violation
+            );
+        }
+    }
+
+    #[test]
+    fn dataset_affinity_holds() {
+        let p1 = Arc::new(synth::synth_linear(30, 100, 203).problem());
+        let p2 = Arc::new(synth::synth_linear(30, 100, 204).problem());
+        let mut reqs = requests_for(p1.clone(), 10, &[0.5, 0.3, 0.2, 0.1], 0);
+        reqs.extend(requests_for(p2.clone(), 20, &[0.5, 0.3, 0.2, 0.1], 100));
+        let (responses, _, _) = Coordinator::run_batch(reqs, 3, EngineKind::Native);
+        let mut per_ds: HashMap<u64, std::collections::HashSet<usize>> = HashMap::new();
+        for r in &responses {
+            per_ds.entry(r.dataset_key).or_default().insert(r.worker);
+        }
+        for (ds, workers) in per_ds {
+            assert_eq!(workers.len(), 1, "dataset {ds} split across workers");
+        }
+    }
+
+    #[test]
+    fn warm_start_used_on_descending_lambda() {
+        let p1 = Arc::new(synth::synth_linear(30, 150, 205).problem());
+        let reqs = requests_for(p1, 1, &[0.5, 0.25, 0.1], 0);
+        let (responses, _, _) = Coordinator::run_batch(reqs, 1, EngineKind::Native);
+        // submitted together ⇒ batched ⇒ all but the first warm-started
+        let warm_count = responses.iter().filter(|r| r.warm_started).count();
+        assert!(warm_count >= 2, "warm {warm_count}");
+    }
+
+    #[test]
+    fn mixed_methods_agree_on_support() {
+        let prob = Arc::new(synth::synth_linear(40, 150, 207).problem());
+        let lam = prob.lambda_max() * 0.15;
+        let reqs: Vec<SolveRequest> = [Method::Saif, Method::DynScreen, Method::Blitz]
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| SolveRequest {
+                id: i as u64,
+                dataset_key: i as u64, // different keys: no warm reuse
+                problem: prob.clone(),
+                lam,
+                method: m,
+                eps: 1e-9,
+            })
+            .collect();
+        let (responses, _, _) = Coordinator::run_batch(reqs, 3, EngineKind::Native);
+        let mut supports: Vec<Vec<usize>> = responses
+            .iter()
+            .map(|r| {
+                let mut s: Vec<usize> =
+                    r.beta.iter().filter(|(_, b)| b.abs() > 1e-7).map(|&(i, _)| i).collect();
+                s.sort();
+                s
+            })
+            .collect();
+        supports.dedup();
+        assert_eq!(supports.len(), 1, "methods disagree: {supports:?}");
+    }
+}

@@ -1,0 +1,177 @@
+//! K-fold cross-validation on top of the coordinator — the downstream
+//! workload that motivates λ-path solving (paper §5.3): pick λ by CV
+//! error over a log grid, with every fold×λ solve dispatched through
+//! the multi-tenant coordinator (fold = dataset key ⇒ warm-started
+//! descending-λ paths per fold, in parallel across workers).
+
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::model::{LossKind, Problem};
+use crate::util::prng::Rng;
+
+/// Result of a cross-validation sweep.
+#[derive(Debug, Clone)]
+pub struct CvResult {
+    /// The λ grid used (descending).
+    pub lams: Vec<f64>,
+    /// Mean held-out error per λ (MSE for LS, error rate for logistic).
+    pub cv_error: Vec<f64>,
+    /// Std of the held-out error per λ.
+    pub cv_std: Vec<f64>,
+    /// argmin λ.
+    pub best_lam: f64,
+    pub wall_secs: f64,
+}
+
+/// K-fold CV over a log-spaced λ grid.
+pub fn cross_validate(
+    ds: &Dataset,
+    k_folds: usize,
+    n_lams: usize,
+    lo_frac: f64,
+    workers: usize,
+    seed: u64,
+) -> CvResult {
+    assert!(k_folds >= 2);
+    let n = ds.n();
+    let mut rng = Rng::new(seed);
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+
+    // build fold problems (train split per fold)
+    let mut fold_train: Vec<Arc<Problem>> = Vec::with_capacity(k_folds);
+    let mut fold_test: Vec<(Mat, Vec<f64>)> = Vec::with_capacity(k_folds);
+    for f in 0..k_folds {
+        let test_idx: Vec<usize> = perm
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| j % k_folds == f)
+            .map(|(_, &i)| i)
+            .collect();
+        let train_idx: Vec<usize> = perm
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| j % k_folds != f)
+            .map(|(_, &i)| i)
+            .collect();
+        let take = |idx: &[usize]| {
+            let mut x = Mat::zeros(idx.len(), ds.p());
+            let mut y = Vec::with_capacity(idx.len());
+            for (r, &i) in idx.iter().enumerate() {
+                for c in 0..ds.p() {
+                    x.set(r, c, ds.x.get(i, c));
+                }
+                y.push(ds.y[i]);
+            }
+            (x, y)
+        };
+        let (xt, yt) = take(&train_idx);
+        fold_train.push(Arc::new(Problem::new(xt, yt, ds.loss)));
+        fold_test.push(take(&test_idx));
+    }
+
+    // shared λ grid from the full-data λ_max
+    let lam_max = ds.problem().lambda_max();
+    let lams: Vec<f64> = (1..=n_lams)
+        .map(|k| lam_max * lo_frac.powf(k as f64 / n_lams as f64))
+        .collect();
+
+    // dispatch fold × λ through the coordinator
+    let mut reqs = Vec::with_capacity(k_folds * n_lams);
+    let mut id = 0u64;
+    for (f, prob) in fold_train.iter().enumerate() {
+        for &lam in &lams {
+            reqs.push(SolveRequest {
+                id,
+                dataset_key: f as u64,
+                problem: prob.clone(),
+                lam,
+                method: Method::Saif,
+                eps: 1e-6,
+            });
+            id += 1;
+        }
+    }
+    let (responses, _lat, wall) =
+        Coordinator::run_batch(reqs, workers, EngineKind::Native);
+
+    // held-out error per (fold, λ)
+    let mut err = vec![vec![0.0f64; k_folds]; n_lams];
+    for r in &responses {
+        let f = r.dataset_key as usize;
+        let li = lams
+            .iter()
+            .position(|&l| (l - r.lam).abs() < 1e-12 * l.max(1.0))
+            .expect("λ in grid");
+        let (xt, yt) = &fold_test[f];
+        let mut u = vec![0.0; yt.len()];
+        for &(i, b) in &r.beta {
+            crate::linalg::axpy(b, xt.col(i), &mut u);
+        }
+        // column-major: xt.col(i) is feature i over test rows — u = X β
+        let e = match ds.loss {
+            LossKind::Squared => {
+                let mut s = 0.0;
+                for j in 0..yt.len() {
+                    let d = u[j] - yt[j];
+                    s += d * d;
+                }
+                s / yt.len() as f64
+            }
+            LossKind::Logistic => {
+                let wrong = (0..yt.len())
+                    .filter(|&j| u[j] * yt[j] <= 0.0)
+                    .count();
+                wrong as f64 / yt.len() as f64
+            }
+        };
+        err[li][f] = e;
+    }
+    let mut cv_error = Vec::with_capacity(n_lams);
+    let mut cv_std = Vec::with_capacity(n_lams);
+    for li in 0..n_lams {
+        let m = err[li].iter().sum::<f64>() / k_folds as f64;
+        let v = err[li].iter().map(|e| (e - m) * (e - m)).sum::<f64>() / k_folds as f64;
+        cv_error.push(m);
+        cv_std.push(v.sqrt());
+    }
+    let best = (0..n_lams)
+        .min_by(|&a, &b| cv_error[a].partial_cmp(&cv_error[b]).unwrap())
+        .unwrap();
+    let best_lam = lams[best];
+    CvResult { lams, cv_error, cv_std, best_lam, wall_secs: wall }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn cv_picks_reasonable_lambda_ls() {
+        let ds = synth::synth_linear(80, 200, 601);
+        let res = cross_validate(&ds, 4, 8, 1e-3, 2, 1);
+        assert_eq!(res.cv_error.len(), 8);
+        // best λ is neither the largest (underfit: β=0-ish) nor does
+        // the error curve stay flat
+        let worst = res.cv_error.iter().cloned().fold(f64::MIN, f64::max);
+        let best = res.cv_error.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(best < worst * 0.9, "flat CV curve: {best} vs {worst}");
+        assert!(res.best_lam < res.lams[0]);
+    }
+
+    #[test]
+    fn cv_logistic_error_rate_bounded() {
+        let ds = synth::gisette_like(120, 80, 603);
+        let res = cross_validate(&ds, 3, 5, 1e-2, 2, 2);
+        for &e in &res.cv_error {
+            assert!((0.0..=1.0).contains(&e));
+        }
+        // learned model beats chance at the best λ
+        let best = res.cv_error.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(best < 0.45, "best CV error {best}");
+    }
+}

@@ -1,0 +1,141 @@
+//! LibSVM-format dataset IO (the format the paper's logistic datasets,
+//! Gisette and USPS, ship in). Lets users run the CLI on real files:
+//! `repro solve --libsvm path.svm --lambda 0.1`.
+
+use std::io::{BufRead, BufWriter, Write};
+
+use crate::linalg::Mat;
+use crate::model::LossKind;
+
+use super::Dataset;
+
+/// Read a LibSVM file: `label idx:val idx:val ...` per line (1-based
+/// indices). Labels are mapped to ±1 when `logistic`, kept as-is
+/// otherwise.
+pub fn read_libsvm(path: &str, logistic: bool) -> Result<Dataset, String> {
+    let file = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+    let reader = std::io::BufReader::new(file);
+    let mut rows: Vec<(f64, Vec<(usize, f64)>)> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("read {path}: {e}"))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .ok_or_else(|| format!("{path}:{}: empty line", lineno + 1))?
+            .parse()
+            .map_err(|e| format!("{path}:{}: bad label: {e}", lineno + 1))?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("{path}:{}: bad token '{tok}'", lineno + 1))?;
+            let i: usize = i
+                .parse()
+                .map_err(|e| format!("{path}:{}: bad index: {e}", lineno + 1))?;
+            let v: f64 = v
+                .parse()
+                .map_err(|e| format!("{path}:{}: bad value: {e}", lineno + 1))?;
+            if i == 0 {
+                return Err(format!("{path}:{}: libsvm indices are 1-based", lineno + 1));
+            }
+            max_idx = max_idx.max(i);
+            feats.push((i - 1, v));
+        }
+        rows.push((label, feats));
+    }
+    if rows.is_empty() {
+        return Err(format!("{path}: no samples"));
+    }
+    let n = rows.len();
+    let p = max_idx;
+    let mut x = Mat::zeros(n, p);
+    let mut y = Vec::with_capacity(n);
+    for (r, (label, feats)) in rows.into_iter().enumerate() {
+        y.push(if logistic {
+            if label > 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        } else {
+            label
+        });
+        for (j, v) in feats {
+            x.set(r, j, v);
+        }
+    }
+    Ok(Dataset {
+        name: format!("libsvm({path})"),
+        x,
+        y,
+        loss: if logistic { LossKind::Logistic } else { LossKind::Squared },
+        tree: None,
+    })
+}
+
+/// Write a dataset in LibSVM format (dense columns; zeros skipped).
+pub fn write_libsvm(ds: &Dataset, path: &str) -> Result<(), String> {
+    let file = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.n() {
+        let mut line = format!("{}", ds.y[i]);
+        for j in 0..ds.p() {
+            let v = ds.x.get(i, j);
+            if v != 0.0 {
+                line.push_str(&format!(" {}:{}", j + 1, v));
+            }
+        }
+        line.push('\n');
+        w.write_all(line.as_bytes())
+            .map_err(|e| format!("write {path}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn roundtrip() {
+        let ds = synth::synth_linear(10, 6, 3);
+        let path = std::env::temp_dir().join("saif_io_test.svm");
+        let path = path.to_str().unwrap();
+        write_libsvm(&ds, path).unwrap();
+        let back = read_libsvm(path, false).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.p(), ds.p());
+        for j in 0..ds.p() {
+            for i in 0..ds.n() {
+                assert!((back.x.get(i, j) - ds.x.get(i, j)).abs() < 1e-12);
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn parses_logistic_labels() {
+        let path = std::env::temp_dir().join("saif_io_log.svm");
+        std::fs::write(&path, "2 1:0.5 3:1.0\n-1 2:2.0\n").unwrap();
+        let ds = read_libsvm(path.to_str().unwrap(), true).unwrap();
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.p(), 3);
+        assert_eq!(ds.x.get(0, 2), 1.0);
+        assert_eq!(ds.x.get(1, 1), 2.0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let path = std::env::temp_dir().join("saif_io_bad.svm");
+        std::fs::write(&path, "1 0:0.5\n").unwrap();
+        assert!(read_libsvm(path.to_str().unwrap(), false).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

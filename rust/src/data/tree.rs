@@ -1,0 +1,183 @@
+//! Feature-dependency trees for fused LASSO (§4 of the paper).
+//!
+//! * `preferential_attachment` — PPI-network stand-in: the paper uses
+//!   the largest connected component of the human PPI network (7782
+//!   nodes); scale-free trees from preferential attachment match its
+//!   degree profile.
+//! * `correlation_tree` — the Yang et al. (2012) style tree: maximum
+//!   spanning tree of the |correlation| graph (Prim's algorithm), used
+//!   for the FDG-PET experiment.
+
+use crate::linalg::{dot, Mat};
+use crate::util::prng::Rng;
+
+/// Random scale-free tree over `p` nodes: node k attaches to an
+/// existing node chosen proportionally to degree+1.
+pub fn preferential_attachment(p: usize, seed: u64) -> Vec<(usize, usize)> {
+    assert!(p >= 2);
+    let mut rng = Rng::new(seed ^ 0x7EE);
+    let mut edges = Vec::with_capacity(p - 1);
+    let mut degree = vec![0usize; p];
+    edges.push((0, 1));
+    degree[0] = 1;
+    degree[1] = 1;
+    let mut total = 2usize; // sum(degree)
+    for k in 2..p {
+        // sample attach point ∝ degree+1 over nodes [0, k)
+        let mut target = rng.below(total + k);
+        let mut attach = 0usize;
+        for (node, &d) in degree.iter().enumerate().take(k) {
+            let wt = d + 1;
+            if target < wt {
+                attach = node;
+                break;
+            }
+            target -= wt;
+        }
+        edges.push((attach, k));
+        degree[attach] += 1;
+        degree[k] = 1;
+        total += 2;
+    }
+    edges
+}
+
+/// Maximum spanning tree of the absolute-correlation graph between
+/// columns of X (Prim's algorithm, O(p²) — fine at p ≤ 10⁴). Columns
+/// are assumed standardized so dot = correlation.
+pub fn correlation_tree(x: &Mat) -> Vec<(usize, usize)> {
+    let p = x.n_cols();
+    assert!(p >= 2);
+    let mut in_tree = vec![false; p];
+    let mut best = vec![f64::NEG_INFINITY; p];
+    let mut best_from = vec![0usize; p];
+    in_tree[0] = true;
+    for j in 1..p {
+        best[j] = dot(x.col(0), x.col(j)).abs();
+        best_from[j] = 0;
+    }
+    let mut edges = Vec::with_capacity(p - 1);
+    for _ in 1..p {
+        // pick the non-tree node with the strongest link into the tree
+        let mut v = usize::MAX;
+        let mut vbest = f64::NEG_INFINITY;
+        for j in 0..p {
+            if !in_tree[j] && best[j] > vbest {
+                vbest = best[j];
+                v = j;
+            }
+        }
+        in_tree[v] = true;
+        edges.push((best_from[v], v));
+        for j in 0..p {
+            if !in_tree[j] {
+                let c = dot(x.col(v), x.col(j)).abs();
+                if c > best[j] {
+                    best[j] = c;
+                    best_from[j] = v;
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Validate that `edges` forms a spanning tree over `p` nodes.
+pub fn is_spanning_tree(p: usize, edges: &[(usize, usize)]) -> bool {
+    if edges.len() != p - 1 {
+        return false;
+    }
+    // union-find
+    let mut parent: Vec<usize> = (0..p).collect();
+    fn find(parent: &mut Vec<usize>, mut a: usize) -> usize {
+        while parent[a] != a {
+            parent[a] = parent[parent[a]];
+            a = parent[a];
+        }
+        a
+    }
+    for &(a, b) in edges {
+        if a >= p || b >= p {
+            return false;
+        }
+        let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+        if ra == rb {
+            return false; // cycle
+        }
+        parent[ra] = rb;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn pa_tree_is_spanning() {
+        for p in [2, 3, 10, 500] {
+            let e = preferential_attachment(p, 1);
+            assert!(is_spanning_tree(p, &e), "p={p}");
+        }
+    }
+
+    #[test]
+    fn pa_tree_scale_free_hub() {
+        // preferential attachment should create hubs: max degree well
+        // above the ~2 of a random chain
+        let e = preferential_attachment(2000, 3);
+        let mut deg = vec![0usize; 2000];
+        for &(a, b) in &e {
+            deg[a] += 1;
+            deg[b] += 1;
+        }
+        assert!(*deg.iter().max().unwrap() > 10);
+    }
+
+    #[test]
+    fn correlation_tree_prefers_strong_pairs() {
+        // construct 4 columns where (0,1) and (2,3) are near-duplicates
+        let mut rng = Rng::new(5);
+        let n = 50;
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut x = Mat::zeros(n, 4);
+        for i in 0..n {
+            x.set(i, 0, a[i]);
+            x.set(i, 1, a[i] + 0.01 * rng.normal());
+            x.set(i, 2, b[i]);
+            x.set(i, 3, b[i] + 0.01 * rng.normal());
+        }
+        crate::data::standardize(&mut x);
+        let e = correlation_tree(&x);
+        assert!(is_spanning_tree(4, &e));
+        let has = |u: usize, v: usize| {
+            e.iter().any(|&(a, b)| (a, b) == (u, v) || (a, b) == (v, u))
+        };
+        assert!(has(0, 1));
+        assert!(has(2, 3));
+    }
+
+    #[test]
+    fn correlation_tree_spanning_property() {
+        prop::check("corr tree spans", 10, |rng| {
+            let p = 2 + rng.below(30);
+            let n = 5 + rng.below(20);
+            let mut x = Mat::from_fn(n, p, |_, _| rng.normal());
+            crate::data::standardize(&mut x);
+            let e = correlation_tree(&x);
+            if !is_spanning_tree(p, &e) {
+                return Err(format!("not spanning at p={p}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spanning_tree_validator_rejects() {
+        assert!(!is_spanning_tree(3, &[(0, 1)])); // too few
+        assert!(!is_spanning_tree(3, &[(0, 1), (0, 1)])); // cycle
+        assert!(!is_spanning_tree(3, &[(0, 1), (0, 7)])); // out of range
+    }
+}

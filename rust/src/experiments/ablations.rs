@@ -1,0 +1,108 @@
+//! Ablations of SAIF's design choices (DESIGN.md §6):
+//!
+//! * `run_delta` — the δ radius-inflation schedule (§2.2 "improve SAIF
+//!   with an estimation factor"): start at λ/λmax vs start at 1.
+//! * `run_ball`  — the eq-(12) ball intersection (gap ball ∩ Theorem-2
+//!   ball) vs the gap ball alone.
+//! * `run_h`     — the ADD batch size constant c and the ζ violation
+//!   relaxation of Algorithm 2.
+
+use crate::cm::NativeEngine;
+use crate::data::synth;
+use crate::metrics::Table;
+use crate::saif::{Saif, SaifConfig};
+
+use super::common;
+
+fn workload() -> (crate::model::Problem, Vec<f64>) {
+    let full = super::full_scale();
+    let ds = synth::synth_linear(100, if full { 5000 } else { 1500 }, 42);
+    let prob = ds.problem();
+    let lam_max = prob.lambda_max();
+    let lams = vec![lam_max * 5e-2, lam_max * 5e-3, lam_max * 1e-3];
+    (prob, lams)
+}
+
+fn run_one(prob: &crate::model::Problem, lam: f64, cfg: SaifConfig) -> (f64, usize, usize, f64) {
+    let mut eng = NativeEngine::new();
+    let mut s = Saif::new(&mut eng, cfg);
+    let r = s.solve(prob, lam);
+    (r.secs, r.epochs, r.p_add_total, r.gap)
+}
+
+pub fn run_delta() -> Vec<Table> {
+    let (prob, lams) = workload();
+    let mut t = Table::new(
+        "Ablation: delta inflation schedule",
+        &["lam/lam_max", "variant", "secs", "epochs", "p_add", "gap"],
+    );
+    let lam_max = prob.lambda_max();
+    for &lam in &lams {
+        for (name, delta0) in [("delta=lam/lam_max (paper)", None), ("delta=1 (off)", Some(1.0))] {
+            let cfg = SaifConfig { delta0, eps: 1e-8, ..Default::default() };
+            let (secs, epochs, padd, gap) = run_one(&prob, lam, cfg);
+            t.row(vec![
+                format!("{:.0e}", lam / lam_max),
+                name.into(),
+                common::fsec(secs),
+                epochs.to_string(),
+                padd.to_string(),
+                format!("{gap:.1e}"),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+pub fn run_ball() -> Vec<Table> {
+    let (prob, lams) = workload();
+    let lam_max = prob.lambda_max();
+    let mut t = Table::new(
+        "Ablation: eq-(12) ball intersection",
+        &["lam/lam_max", "variant", "secs", "epochs", "p_add", "gap"],
+    );
+    for &lam in &lams {
+        for (name, use_t2) in [("gap ∩ thm2 (paper)", true), ("gap ball only", false)] {
+            let cfg = SaifConfig { use_thm2_ball: use_t2, eps: 1e-8, ..Default::default() };
+            let (secs, epochs, padd, gap) = run_one(&prob, lam, cfg);
+            t.row(vec![
+                format!("{:.0e}", lam / lam_max),
+                name.into(),
+                common::fsec(secs),
+                epochs.to_string(),
+                padd.to_string(),
+                format!("{gap:.1e}"),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+pub fn run_h() -> Vec<Table> {
+    let (prob, lams) = workload();
+    let lam_max = prob.lambda_max();
+    let lam = lams[1];
+    let mut t = Table::new(
+        "Ablation: ADD batch size (c) and violation relaxation (zeta)",
+        &["c", "zeta", "secs", "epochs", "p_add", "max_active", "gap"],
+    );
+    for &c in &[0.5, 1.0, 2.0] {
+        for &zeta in &[0.5, 1.0, 2.0] {
+            let cfg = SaifConfig { c, zeta, eps: 1e-8, ..Default::default() };
+            let mut eng = NativeEngine::new();
+            let mut s = Saif::new(&mut eng, cfg);
+            let r = s.solve(&prob, lam);
+            t.row(vec![
+                format!("{c}"),
+                format!("{zeta}"),
+                common::fsec(r.secs),
+                r.epochs.to_string(),
+                r.p_add_total.to_string(),
+                r.max_active.to_string(),
+                format!("{:.1e}", r.gap),
+            ]);
+        }
+    }
+    let _ = lam_max;
+    vec![t]
+}

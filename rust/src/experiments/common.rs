@@ -1,0 +1,82 @@
+//! Shared helpers for the experiment reproducers.
+
+use crate::cm::{solve_subproblem, NativeEngine};
+use crate::model::Problem;
+use crate::saif::{Saif, SaifConfig};
+use crate::screening::dynamic::{DynScreen, DynScreenConfig};
+use crate::util::Stopwatch;
+use crate::workingset::{Blitz, BlitzConfig};
+
+/// Log-evenly spaced descending λ grid in [lo_frac·λmax, λmax].
+pub fn lambda_grid(lam_max: f64, lo_frac: f64, count: usize) -> Vec<f64> {
+    assert!(count >= 1);
+    (1..=count)
+        .map(|k| lam_max * lo_frac.powf(k as f64 / count as f64))
+        .collect()
+}
+
+/// The four Figure-2/5 methods, timed. Each returns (secs, gap).
+pub fn time_no_screening(prob: &Problem, lam: f64, eps: f64, max_epochs: usize) -> (f64, f64) {
+    let sw = Stopwatch::start();
+    let all: Vec<usize> = (0..prob.p()).collect();
+    let mut beta = vec![0.0; prob.p()];
+    let mut eng = NativeEngine::new();
+    let (eval, _) =
+        solve_subproblem(&mut eng, prob, &all, &mut beta, lam, eps, 10, max_epochs);
+    (sw.secs(), eval.gap)
+}
+
+pub fn time_dynamic(prob: &Problem, lam: f64, eps: f64) -> (f64, f64) {
+    let mut eng = NativeEngine::new();
+    let mut d = DynScreen::new(&mut eng, DynScreenConfig { eps, ..Default::default() });
+    let r = d.solve(prob, lam);
+    (r.secs, r.gap)
+}
+
+pub fn time_blitz(prob: &Problem, lam: f64, eps: f64) -> (f64, f64) {
+    let mut eng = NativeEngine::new();
+    let mut b = Blitz::new(&mut eng, BlitzConfig { eps, ..Default::default() });
+    let r = b.solve(prob, lam);
+    (r.secs, r.gap)
+}
+
+pub fn time_saif(prob: &Problem, lam: f64, eps: f64) -> (f64, f64) {
+    let mut eng = NativeEngine::new();
+    let mut s = Saif::new(&mut eng, SaifConfig { eps, ..Default::default() });
+    let r = s.solve(prob, lam);
+    (r.secs, r.gap)
+}
+
+/// Format seconds for tables.
+pub fn fsec(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_descending_and_bounded() {
+        let g = lambda_grid(100.0, 1e-3, 10);
+        assert_eq!(g.len(), 10);
+        for w in g.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert!(g[0] < 100.0);
+        assert!((g[9] - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fsec_units() {
+        assert!(fsec(5e-7).ends_with("us"));
+        assert!(fsec(5e-3).ends_with("ms"));
+        assert!(fsec(2.0).ends_with('s'));
+    }
+}

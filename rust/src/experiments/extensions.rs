@@ -1,0 +1,113 @@
+//! Extension benchmarks (the paper's §6 future-work directions, built
+//! out as first-class features — DESIGN.md §6):
+//!
+//! * `abl_base`  — CM vs FISTA as SAIF's base algorithm (§3.1).
+//! * `ext_group` — group-LASSO SAIF vs no-screening block CM.
+//! * `ext_multilevel` — flat SAIF vs the two-tier remaining-set
+//!   schema at growing p (the conclusion's "multi-level" idea).
+
+use crate::cm::{FistaEngine, NativeEngine};
+use crate::data::synth;
+use crate::metrics::Table;
+use crate::saif::{
+    GroupSaif, GroupSaifConfig, Groups, MultiLevelConfig, MultiLevelSaif, Saif, SaifConfig,
+};
+
+use super::common;
+
+pub fn abl_base() -> Vec<Table> {
+    let full = super::full_scale();
+    let ds = synth::synth_linear(100, if full { 5000 } else { 1500 }, 42);
+    let prob = ds.problem();
+    let lam_max = prob.lambda_max();
+    let mut t = Table::new(
+        "Ablation: base algorithm (CM vs FISTA)",
+        &["lam/lam_max", "cm_secs", "cm_epochs", "fista_secs", "fista_epochs", "gap_both"],
+    );
+    for &f in &[5e-2, 5e-3, 1e-3] {
+        let lam = lam_max * f;
+        let mut cm = NativeEngine::new();
+        let mut s1 = Saif::new(&mut cm, SaifConfig { eps: 1e-8, ..Default::default() });
+        let r1 = s1.solve(&prob, lam);
+        let mut fi = FistaEngine::new();
+        let mut s2 = Saif::new(&mut fi, SaifConfig { eps: 1e-8, ..Default::default() });
+        let r2 = s2.solve(&prob, lam);
+        t.row(vec![
+            format!("{f:.0e}"),
+            common::fsec(r1.secs),
+            r1.epochs.to_string(),
+            common::fsec(r2.secs),
+            r2.epochs.to_string(),
+            format!("{:.0e}/{:.0e}", r1.gap, r2.gap),
+        ]);
+    }
+    vec![t]
+}
+
+pub fn ext_group() -> Vec<Table> {
+    let full = super::full_scale();
+    let p = if full { 5000 } else { 1600 };
+    let ds = synth::synth_linear(100, p, 42);
+    let prob = ds.problem();
+    let groups = Groups::contiguous(p, 8);
+    let lam_max = GroupSaif::lambda_max(&prob, &groups);
+    let mut t = Table::new(
+        "Extension: group-LASSO SAIF vs no-screening block CM",
+        &["lam/lam_max", "saif_secs", "max_groups", "noscr_secs", "speedup", "active_groups"],
+    );
+    for &f in &[0.3, 0.1, 0.03] {
+        let lam = lam_max * f;
+        let mut gs = GroupSaif::new(GroupSaifConfig { eps: 1e-8, ..Default::default() });
+        let r = gs.solve(&prob, &groups, lam);
+        let mut gn = GroupSaif::new(GroupSaifConfig { eps: 1e-8, ..Default::default() });
+        let rn = gn.solve_no_screening(&prob, &groups, lam);
+        t.row(vec![
+            format!("{f}"),
+            common::fsec(r.secs),
+            r.max_active_groups.to_string(),
+            common::fsec(rn.secs),
+            format!("{:.1}x", rn.secs / r.secs.max(1e-12)),
+            r.active_groups.len().to_string(),
+        ]);
+    }
+    vec![t]
+}
+
+pub fn ext_multilevel() -> Vec<Table> {
+    let full = super::full_scale();
+    let ps: Vec<usize> = if full { vec![2000, 8000] } else { vec![1000, 3000] };
+    let mut t = Table::new(
+        "Extension: multi-level remaining set vs flat SAIF",
+        &["p", "flat_secs", "flat_epochs", "ml_secs", "ml_epochs", "support_match"],
+    );
+    for &p in &ps {
+        let ds = synth::synth_linear(100, p, 42);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.01;
+        let mut e1 = NativeEngine::new();
+        let mut flat = Saif::new(&mut e1, SaifConfig { eps: 1e-8, ..Default::default() });
+        let r1 = flat.solve(&prob, lam);
+        let mut e2 = NativeEngine::new();
+        let mut ml = MultiLevelSaif::new(
+            &mut e2,
+            MultiLevelConfig {
+                saif: SaifConfig { eps: 1e-8, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let r2 = ml.solve(&prob, lam);
+        let mut a: Vec<usize> = r1.beta.iter().map(|&(i, _)| i).collect();
+        let mut b: Vec<usize> = r2.beta.iter().map(|&(i, _)| i).collect();
+        a.sort();
+        b.sort();
+        t.row(vec![
+            p.to_string(),
+            common::fsec(r1.secs),
+            r1.epochs.to_string(),
+            common::fsec(r2.secs),
+            r2.epochs.to_string(),
+            (a == b).to_string(),
+        ]);
+    }
+    vec![t]
+}

@@ -1,0 +1,89 @@
+//! Figure 3: (a, c) active-set size over time for SAIF vs dynamic
+//! screening at two λ; (b, d) SAIF's dual objective D(θ_t) converging
+//! from above to D(θ*). Emits full trace CSVs for plotting plus a
+//! summary table.
+//!
+//! Paper shape: SAIF grows |A_t| from a handful of features up to the
+//! optimal size; dynamic screening starts at p and only begins to drop
+//! once its gap has screening power; D(θ_t) decreases to a plateau.
+
+use crate::cm::NativeEngine;
+use crate::data::synth;
+use crate::metrics::Table;
+use crate::saif::{trace, Saif, SaifConfig, TraceOp};
+use crate::screening::dynamic::{DynScreen, DynScreenConfig};
+
+use super::common;
+
+pub fn run(out_dir: &str) -> Vec<Table> {
+    let full = super::full_scale();
+    let (n, p) = if full { (295, 8141) } else { (128, 2000) };
+    let ds = synth::gene_expr(n, p, 42);
+    let prob = ds.problem();
+    let lam_max = prob.lambda_max();
+    // paper uses λ = 0.1 and 5 on the real data; as fractions of our
+    // synthetic λmax these map to a small and a moderate penalty
+    let fracs = [0.01, 0.1];
+
+    let mut summary = Table::new(
+        "Fig 3: active set & dual trace summary",
+        &["lam/lam_max", "method", "p_opt", "max_active", "time_to_opt_size", "final_dual", "secs"],
+    );
+    for &f in &fracs {
+        let lam = lam_max * f;
+        // SAIF with trace
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(
+            &mut eng,
+            SaifConfig { trace: true, eps: 1e-8, ..Default::default() },
+        );
+        let res = saif.solve(&prob, lam);
+        let p_opt = res.beta.len();
+        let csv = trace::to_csv(&res.trace);
+        std::fs::create_dir_all(out_dir).ok();
+        let path = format!("{out_dir}/fig3_saif_trace_lam{f}.csv");
+        std::fs::write(&path, csv).ok();
+        // time until |A_t| first reaches within 1.2× of optimal size
+        let t_opt = res
+            .trace
+            .iter()
+            .find(|e| e.op == TraceOp::Eval && e.active <= (p_opt * 6 / 5).max(p_opt + 2) && e.active >= p_opt)
+            .map(|e| e.t_secs)
+            .unwrap_or(res.secs);
+        summary.row(vec![
+            format!("{f}"),
+            "saif".into(),
+            p_opt.to_string(),
+            res.max_active.to_string(),
+            common::fsec(t_opt),
+            format!("{:.6}", res.dual),
+            common::fsec(res.secs),
+        ]);
+
+        // dynamic screening with trace
+        let mut eng2 = NativeEngine::new();
+        let mut dyn_s = DynScreen::new(
+            &mut eng2,
+            DynScreenConfig { eps: 1e-8, trace: true, ..Default::default() },
+        );
+        let dres = dyn_s.solve(&prob, lam);
+        let path = format!("{out_dir}/fig3_dyn_trace_lam{f}.csv");
+        std::fs::write(&path, trace::to_csv(&dres.trace)).ok();
+        let t_opt_dyn = dres
+            .trace
+            .iter()
+            .find(|e| e.active <= (p_opt * 6 / 5).max(p_opt + 2))
+            .map(|e| e.t_secs)
+            .unwrap_or(dres.secs);
+        summary.row(vec![
+            format!("{f}"),
+            "dyn_scr".into(),
+            dres.beta.len().to_string(),
+            prob.p().to_string(), // starts from the full set
+            common::fsec(t_opt_dyn),
+            format!("{:.6}", dres.dual),
+            common::fsec(dres.secs),
+        ]);
+    }
+    vec![summary]
+}

@@ -1,0 +1,46 @@
+//! Figure 5: sparse logistic regression running time on the USPS and
+//! Gisette stand-ins — dynamic screening vs BLITZ vs SAIF across λ.
+//!
+//! Paper shape: SAIF consistently cheapest at every λ on both
+//! datasets; BLITZ occasionally comparable when the active set is
+//! tiny.
+
+use crate::data::synth;
+use crate::metrics::Table;
+
+use super::common;
+
+pub fn run() -> Vec<Table> {
+    let full = super::full_scale();
+    let datasets = vec![
+        synth::usps_like(if full { 2048 } else { 512 }, 256, 42),
+        synth::gisette_like(if full { 512 } else { 256 }, if full { 5000 } else { 1500 }, 42),
+    ];
+    let fracs = [0.5, 0.2, 0.1, 0.05];
+    let eps = 1e-6;
+
+    let mut tables = Vec::new();
+    for ds in datasets {
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let mut t = Table::new(
+            &format!("Fig 5: logistic {}", ds.name),
+            &["lam/lam_max", "dyn_scr", "blitz", "saif", "speedup_vs_dyn"],
+        );
+        for &f in &fracs {
+            let lam = lam_max * f;
+            let (s_dyn, _) = common::time_dynamic(&prob, lam, eps);
+            let (s_bl, _) = common::time_blitz(&prob, lam, eps);
+            let (s_sa, _) = common::time_saif(&prob, lam, eps);
+            t.row(vec![
+                format!("{f}"),
+                common::fsec(s_dyn),
+                common::fsec(s_bl),
+                common::fsec(s_sa),
+                format!("{:.1}x", s_dyn / s_sa.max(1e-12)),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}

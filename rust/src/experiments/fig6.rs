@@ -1,0 +1,70 @@
+//! Figure 6: λ-path running time versus the number of λ values, for
+//! DPP (sequential screening), the homotopy method, and SAIF with
+//! warm starts — on the simulation and breast-cancer stand-ins.
+//!
+//! Paper shape: SAIF much cheaper than DPP at small #λ (DPP needs a
+//! dense grid for tight sequential balls); the homotopy method is
+//! competitive on the easy data set but loses on the simulation — and
+//! it is unsafe (Table 1).
+
+use crate::cm::NativeEngine;
+use crate::data::synth;
+use crate::metrics::Table;
+use crate::saif::{Saif, SaifConfig};
+use crate::screening::dpp::DppPath;
+use crate::homotopy::{Homotopy, HomotopyConfig};
+use crate::util::Stopwatch;
+
+use super::common;
+
+pub fn run() -> Vec<Table> {
+    let full = super::full_scale();
+    let counts: Vec<usize> = if full {
+        vec![20, 50, 100, 200, 300, 400, 500]
+    } else {
+        vec![20, 50, 100]
+    };
+    let datasets = vec![
+        synth::synth_linear(100, if full { 5000 } else { 1500 }, 42),
+        synth::gene_expr(if full { 295 } else { 128 }, if full { 8141 } else { 1500 }, 42),
+    ];
+    let eps = 1e-6;
+
+    let mut tables = Vec::new();
+    for ds in datasets {
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let mut t = Table::new(
+            &format!("Fig 6: path time vs #lambda, {}", ds.name),
+            &["n_lambda", "dpp", "homotopy", "saif_warm"],
+        );
+        for &count in &counts {
+            let lams = common::lambda_grid(lam_max, 1e-3, count);
+            // DPP
+            let mut eng = NativeEngine::new();
+            let (_steps, s_dpp) = DppPath::new(&mut eng, eps).solve_path(&prob, &lams);
+            // homotopy
+            let mut eng2 = NativeEngine::new();
+            let mut h = Homotopy::new(&mut eng2, HomotopyConfig { eps, ..Default::default() });
+            let (_hsteps, s_hom) = h.solve_path(&prob, &lams);
+            // SAIF with warm starts down the path
+            let sw = Stopwatch::start();
+            let mut eng3 = NativeEngine::new();
+            let mut saif = Saif::new(&mut eng3, SaifConfig { eps, ..Default::default() });
+            let mut warm: Option<Vec<(usize, f64)>> = None;
+            for &lam in &lams {
+                let r = saif.solve_warm(&prob, lam, warm.as_deref());
+                warm = Some(r.beta);
+            }
+            let s_saif = sw.secs();
+            t.row(vec![
+                count.to_string(),
+                common::fsec(s_dpp),
+                common::fsec(s_hom),
+                common::fsec(s_saif),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}

@@ -1,0 +1,86 @@
+//! Experiment reproducers — one per table/figure of the paper's
+//! evaluation (§5), plus the ablations and the complexity validation
+//! DESIGN.md §6 calls out. Each experiment returns [`metrics::Table`]s
+//! that are printed and saved as CSV under `out/`.
+//!
+//! Scale: by default every experiment runs at a size that finishes in
+//! minutes on a laptop CPU while preserving the paper's comparisons;
+//! set `SAIF_FULL=1` for the paper-scale versions (EXPERIMENTS.md
+//! records which was used).
+
+pub mod ablations;
+pub mod common;
+pub mod complexity;
+pub mod extensions;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;
+
+use crate::metrics::Table;
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig2-sim", "fig2-bc", "fig3", "fig4", "fig5", "fig6", "table1",
+    "fig7-bc", "fig7-pet", "abl-delta", "abl-ball", "abl-h", "abl-base",
+    "ext-group", "ext-multilevel", "complexity",
+];
+
+/// Run one experiment by id; returns its tables.
+pub fn run(id: &str, out_dir: &str) -> Result<Vec<Table>, String> {
+    let tables = match id {
+        "fig2-sim" => fig2::run(fig2::Which::Sim),
+        "fig2-bc" => fig2::run(fig2::Which::BreastCancer),
+        "fig3" => fig3::run(out_dir),
+        "fig4" => fig4::run(out_dir),
+        "fig5" => fig5::run(),
+        "fig6" => fig6::run(),
+        "table1" => table1::run(),
+        "fig7-bc" => fig7::run(fig7::Which::BreastCancer),
+        "fig7-pet" => fig7::run(fig7::Which::Pet),
+        "abl-delta" => ablations::run_delta(),
+        "abl-ball" => ablations::run_ball(),
+        "abl-h" => ablations::run_h(),
+        "abl-base" => extensions::abl_base(),
+        "ext-group" => extensions::ext_group(),
+        "ext-multilevel" => extensions::ext_multilevel(),
+        "complexity" => complexity::run(),
+        _ => return Err(format!("unknown experiment '{id}' (see `repro list`)")),
+    };
+    for t in &tables {
+        println!("{}", t.render());
+        let slug = format!("{id}_{}", slugify(&t.title));
+        match t.save_csv(out_dir, &slug) {
+            Ok(path) => println!("saved {path}"),
+            Err(e) => eprintln!("could not save CSV: {e}"),
+        }
+    }
+    Ok(tables)
+}
+
+fn slugify(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
+}
+
+/// True when SAIF_FULL=1 (paper-scale runs).
+pub fn full_scale() -> bool {
+    std::env::var("SAIF_FULL").as_deref() == Ok("1")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(super::run("nope", "/tmp/saif_out").is_err());
+    }
+
+    #[test]
+    fn slugify_sane() {
+        assert_eq!(super::slugify("Fig 2 (sim)"), "fig_2__sim_");
+    }
+}

@@ -1,0 +1,47 @@
+//! Tree fused LASSO (paper §4): min f(Xβ) + λ‖Dβ‖₁ with D the edge
+//! incidence matrix of a feature tree G(F, E).
+//!
+//! * [`transform`] — Theorem 6: a column transformation T with DT
+//!   diagonal turns the problem into a plain LASSO over transformed
+//!   features X̃ = XT (edge variables u_e = β_child − β_parent) plus
+//!   one unpenalized coordinate b (the root level). For trees, T's
+//!   columns are subtree indicators, so X̃ is computed by one DFS of
+//!   subtree column sums — the "column operations" the paper §4 notes.
+//! * [`solver`] — SAIF on the transformed problem. Least squares
+//!   eliminates b exactly by projecting out the x̃_b direction;
+//!   logistic alternates SAIF on the edge block (margin offset x̃_b·b,
+//!   Problem::with_offset) with 1-D Newton steps on b.
+//! * [`admm`] — the no-screening baseline (CVX stand-in of Figure 7):
+//!   generic ADMM with conjugate-gradient β-updates.
+
+pub mod admm;
+pub mod solver;
+pub mod transform;
+
+pub use admm::{FusedAdmm, FusedAdmmConfig};
+pub use solver::{FusedSaif, FusedSaifConfig, FusedSaifResult};
+pub use transform::TreeTransform;
+
+use crate::linalg::Mat;
+use crate::model::LossKind;
+
+/// Fused-LASSO primal objective f(Xβ) + λ Σ_{(a,b)∈E} |β_a − β_b|.
+pub fn fused_objective(
+    x: &Mat,
+    y: &[f64],
+    loss: LossKind,
+    edges: &[(usize, usize)],
+    beta: &[f64],
+    lam: f64,
+) -> f64 {
+    let mut u = vec![0.0; x.n_rows()];
+    x.mul_vec(beta, &mut u);
+    let mut obj = 0.0;
+    for j in 0..x.n_rows() {
+        obj += loss.value(u[j], y[j]);
+    }
+    for &(a, b) in edges {
+        obj += lam * (beta[a] - beta[b]).abs();
+    }
+    obj
+}

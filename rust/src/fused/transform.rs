@@ -1,0 +1,229 @@
+//! The Theorem-6 tree transform.
+//!
+//! Root the feature tree at node 0. New variables:
+//!   γ = [u_1 … u_{p−1}; b],  u_e = β_child(e) − β_parent(e),  b = β_root.
+//! Then β = Tγ with T's edge-e column the indicator of subtree(child(e))
+//! and the b column all-ones, and the fused penalty becomes λ‖u‖₁ —
+//! i.e. DT is diagonal (identity on the edge block, zero on b).
+
+use crate::linalg::Mat;
+
+/// A rooted tree over p features with the machinery for the fused
+/// transform (forward/backward variable maps, X̃ = XT, and the D/Dᵀ/
+/// Laplacian products the ADMM baseline needs).
+#[derive(Debug, Clone)]
+pub struct TreeTransform {
+    /// Number of nodes p.
+    pub p: usize,
+    /// parent[v] for v ≠ root (root = 0, parent[0] = usize::MAX).
+    pub parent: Vec<usize>,
+    /// Edges in (parent, child) orientation, fixed order: edge e is
+    /// the transformed variable u_e.
+    pub edges: Vec<(usize, usize)>,
+    /// Topological order (parents before children).
+    topo: Vec<usize>,
+    /// children adjacency
+    children: Vec<Vec<usize>>,
+}
+
+impl TreeTransform {
+    /// Build from an undirected edge list (must be a spanning tree).
+    pub fn new(p: usize, undirected: &[(usize, usize)]) -> Result<TreeTransform, String> {
+        if !crate::data::tree::is_spanning_tree(p, undirected) {
+            return Err("edge list is not a spanning tree".into());
+        }
+        let mut adj = vec![Vec::new(); p];
+        for &(a, b) in undirected {
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        // BFS from root 0 to orient edges
+        let mut parent = vec![usize::MAX; p];
+        let mut topo = Vec::with_capacity(p);
+        let mut children = vec![Vec::new(); p];
+        let mut seen = vec![false; p];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        while let Some(v) = queue.pop_front() {
+            topo.push(v);
+            for &w in &adj[v] {
+                if !seen[w] {
+                    seen[w] = true;
+                    parent[w] = v;
+                    children[v].push(w);
+                    queue.push_back(w);
+                }
+            }
+        }
+        let edges: Vec<(usize, usize)> = topo
+            .iter()
+            .skip(1)
+            .map(|&v| (parent[v], v))
+            .collect();
+        Ok(TreeTransform { p, parent, edges, topo, children })
+    }
+
+    /// Edge index of each non-root node (node v's incoming edge).
+    fn edge_of_node(&self) -> Vec<usize> {
+        let mut idx = vec![usize::MAX; self.p];
+        for (e, &(_, c)) in self.edges.iter().enumerate() {
+            idx[c] = e;
+        }
+        idx
+    }
+
+    /// X̃ = XT: p−1 edge columns (subtree column sums) + the b column
+    /// (sum of ALL columns) appended last. One reverse-topological
+    /// accumulation — O(n·p), the paper's "column operations".
+    pub fn transform_x(&self, x: &Mat) -> Mat {
+        assert_eq!(x.n_cols(), self.p);
+        let n = x.n_rows();
+        // subtree sums, leaves up: sums[:, v] += sums[:, c] for every
+        // child c (reverse topological order ⇒ children are final)
+        let mut sums = x.clone();
+        for &v in self.topo.iter().rev() {
+            for &c in &self.children[v] {
+                let child_col: Vec<f64> = sums.col(c).to_vec();
+                let vcol = sums.col_mut(v);
+                for j in 0..n {
+                    vcol[j] += child_col[j];
+                }
+            }
+        }
+        let mut xt = Mat::zeros(n, self.p);
+        for (e, &(_, c)) in self.edges.iter().enumerate() {
+            xt.col_mut(e).copy_from_slice(sums.col(c));
+        }
+        // b column = subtree sum at the root = Σ_v x_v
+        xt.col_mut(self.p - 1).copy_from_slice(sums.col(0));
+        xt
+    }
+
+    /// β = Tγ (γ = [u; b]).
+    pub fn back_transform(&self, gamma: &[f64]) -> Vec<f64> {
+        assert_eq!(gamma.len(), self.p);
+        let b = gamma[self.p - 1];
+        let edge_of = self.edge_of_node();
+        let mut beta = vec![0.0; self.p];
+        for &v in &self.topo {
+            beta[v] = if v == 0 {
+                b
+            } else {
+                beta[self.parent[v]] + gamma[edge_of[v]]
+            };
+        }
+        beta
+    }
+
+    /// γ = T⁻¹β (for tests / warm starts).
+    pub fn forward_transform(&self, beta: &[f64]) -> Vec<f64> {
+        assert_eq!(beta.len(), self.p);
+        let mut gamma = vec![0.0; self.p];
+        for (e, &(par, c)) in self.edges.iter().enumerate() {
+            gamma[e] = beta[c] - beta[par];
+        }
+        gamma[self.p - 1] = beta[0];
+        gamma
+    }
+
+    /// (Dβ)_e = β_child − β_parent.
+    pub fn d_mul(&self, beta: &[f64]) -> Vec<f64> {
+        self.edges.iter().map(|&(a, b)| beta[b] - beta[a]).collect()
+    }
+
+    /// Dᵀz.
+    pub fn dt_mul(&self, z: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.p];
+        for (e, &(a, b)) in self.edges.iter().enumerate() {
+            out[b] += z[e];
+            out[a] -= z[e];
+        }
+        out
+    }
+
+    /// Tree Laplacian product DᵀD v (for the ADMM CG solves).
+    pub fn laplacian_mul(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.p];
+        for &(a, b) in &self.edges {
+            let d = v[b] - v[a];
+            out[b] += d;
+            out[a] -= d;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tree::preferential_attachment;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn round_trip_transform() {
+        prop::check("T round trip", 20, |rng| {
+            let p = 2 + rng.below(40);
+            let edges = preferential_attachment(p, rng.next_u64());
+            let t = TreeTransform::new(p, &edges).unwrap();
+            let beta: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let gamma = t.forward_transform(&beta);
+            let back = t.back_transform(&gamma);
+            prop::assert_slice_close(&back, &beta, 1e-12, 1e-12, "T T⁻¹ β")
+        });
+    }
+
+    #[test]
+    fn transform_x_equals_x_times_t() {
+        // X̃ γ must equal X (Tγ) for random γ
+        prop::check("X̃γ = X Tγ", 15, |rng| {
+            let p = 2 + rng.below(20);
+            let n = 3 + rng.below(15);
+            let edges = preferential_attachment(p, rng.next_u64());
+            let t = TreeTransform::new(p, &edges).unwrap();
+            let x = Mat::from_fn(n, p, |_, _| rng.normal());
+            let xt = t.transform_x(&x);
+            let gamma: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let beta = t.back_transform(&gamma);
+            let mut lhs = vec![0.0; n];
+            xt.mul_vec(&gamma, &mut lhs);
+            let mut rhs = vec![0.0; n];
+            x.mul_vec(&beta, &mut rhs);
+            prop::assert_slice_close(&lhs, &rhs, 1e-9, 1e-9, "margins")
+        });
+    }
+
+    #[test]
+    fn penalty_becomes_l1_of_u() {
+        let mut rng = Rng::new(9);
+        let p = 12;
+        let edges = preferential_attachment(p, 5);
+        let t = TreeTransform::new(p, &edges).unwrap();
+        let beta: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let gamma = t.forward_transform(&beta);
+        let pen_direct: f64 = edges
+            .iter()
+            .map(|&(a, b)| (beta[a] - beta[b]).abs())
+            .sum();
+        let pen_u: f64 = gamma[..p - 1].iter().map(|u| u.abs()).sum();
+        assert!((pen_direct - pen_u).abs() < 1e-12);
+    }
+
+    #[test]
+    fn laplacian_is_dt_d() {
+        let mut rng = Rng::new(11);
+        let p = 15;
+        let edges = preferential_attachment(p, 7);
+        let t = TreeTransform::new(p, &edges).unwrap();
+        let v: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let lhs = t.laplacian_mul(&v);
+        let rhs = t.dt_mul(&t.d_mul(&v));
+        prop::assert_slice_close(&lhs, &rhs, 1e-12, 1e-12, "L = DᵀD").unwrap();
+    }
+
+    #[test]
+    fn rejects_non_tree() {
+        assert!(TreeTransform::new(3, &[(0, 1)]).is_err());
+        assert!(TreeTransform::new(3, &[(0, 1), (0, 1)]).is_err());
+    }
+}

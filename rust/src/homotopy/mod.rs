@@ -1,0 +1,240 @@
+//! Homotopy / pathwise coordinate descent baseline (Zhao, Liu & Zhang
+//! 2017 style, the method of Figure 6 and Table 1).
+//!
+//! Structure (paper §1.3): an outer loop over a descending λ grid with
+//! warm starts; at each λ the candidate set is initialized by the
+//! sequential STRONG RULE (heuristic, unsafe) plus the previous
+//! support; an inner loop runs CM on the candidate set and grows it by
+//! checking KKT violations *within the strong set only*. There is no
+//! safe stopping certificate: features outside the strong set are
+//! never re-examined, which is precisely why recall/precision of the
+//! recovered support can fall below 1 (Table 1) — unlike SAIF.
+
+use crate::cm::{solve_subproblem, Engine};
+use crate::linalg::dot;
+use crate::model::Problem;
+use crate::screening::strong::strong_rule_keep;
+use crate::util::Stopwatch;
+
+/// One path point's outcome.
+#[derive(Debug, Clone)]
+pub struct HomotopyStep {
+    pub lam: f64,
+    pub beta: Vec<(usize, f64)>,
+    /// Size of the candidate (strong) set actually optimized over.
+    pub candidate_size: usize,
+    pub epochs: usize,
+}
+
+/// Homotopy path solver configuration.
+#[derive(Debug, Clone)]
+pub struct HomotopyConfig {
+    /// Inner solve tolerance — on the *sub-problem* duality gap. The
+    /// method's unsafety is structural (strong-set-only KKT checks),
+    /// not a tolerance artifact.
+    pub eps: f64,
+    /// Max inner KKT-growth rounds per λ.
+    pub max_rounds: usize,
+    pub k_epochs: usize,
+}
+
+impl Default for HomotopyConfig {
+    fn default() -> Self {
+        HomotopyConfig { eps: 1e-6, max_rounds: 20, k_epochs: 10 }
+    }
+}
+
+/// Pathwise CD with strong-rule screening and warm starts.
+pub struct Homotopy<'a> {
+    pub cfg: HomotopyConfig,
+    pub engine: &'a mut dyn Engine,
+}
+
+impl<'a> Homotopy<'a> {
+    pub fn new(engine: &'a mut dyn Engine, cfg: HomotopyConfig) -> Self {
+        Homotopy { cfg, engine }
+    }
+
+    /// Solve a descending λ path. Returns per-λ steps and total time.
+    pub fn solve_path(&mut self, prob: &Problem, lams: &[f64]) -> (Vec<HomotopyStep>, f64) {
+        let sw = Stopwatch::start();
+        let p = prob.p();
+        let mut lam_prev = prob.lambda_max();
+        let mut u_prev = prob
+            .offset
+            .clone()
+            .unwrap_or_else(|| vec![0.0; prob.n()]);
+        let mut beta_full = vec![0.0; p];
+        let mut steps = Vec::with_capacity(lams.len());
+
+        for &lam in lams {
+            // strong set ∪ previous support (warm start)
+            let mut cand = strong_rule_keep(prob, &u_prev, lam, lam_prev);
+            let mut in_cand = vec![false; p];
+            for &i in &cand {
+                in_cand[i] = true;
+            }
+            for i in 0..p {
+                if beta_full[i] != 0.0 && !in_cand[i] {
+                    in_cand[i] = true;
+                    cand.push(i);
+                }
+            }
+            let mut epochs = 0usize;
+            // inner loop: solve on the ever-active subset of the
+            // candidates, then add candidate KKT violators
+            let mut work: Vec<usize> = cand
+                .iter()
+                .cloned()
+                .filter(|&i| beta_full[i] != 0.0)
+                .collect();
+            if work.is_empty() && !cand.is_empty() {
+                // seed with the best-correlated candidate
+                let d0: Vec<f64> = (0..prob.n())
+                    .map(|j| prob.loss.deriv(u_prev[j], prob.y[j]))
+                    .collect();
+                let best = *cand
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        dot(prob.x.col(a), &d0)
+                            .abs()
+                            .partial_cmp(&dot(prob.x.col(b), &d0).abs())
+                            .unwrap()
+                    })
+                    .unwrap();
+                work.push(best);
+            }
+            let mut in_work = vec![false; p];
+            for &i in &work {
+                in_work[i] = true;
+            }
+            for _round in 0..self.cfg.max_rounds {
+                let mut beta: Vec<f64> = work.iter().map(|&i| beta_full[i]).collect();
+                let (_eval, e) = solve_subproblem(
+                    self.engine,
+                    prob,
+                    &work,
+                    &mut beta,
+                    lam,
+                    self.cfg.eps,
+                    self.cfg.k_epochs,
+                    200_000,
+                );
+                epochs += e;
+                for (a, &i) in work.iter().enumerate() {
+                    beta_full[i] = beta[a];
+                }
+                // KKT check over the STRONG SET ONLY (the unsafe part)
+                let sparse: Vec<(usize, f64)> = work
+                    .iter()
+                    .map(|&i| (i, beta_full[i]))
+                    .filter(|&(_, b)| b != 0.0)
+                    .collect();
+                let u = prob.margins_sparse(&sparse);
+                let fp: Vec<f64> = (0..prob.n())
+                    .map(|j| prob.loss.deriv(u[j], prob.y[j]))
+                    .collect();
+                let mut grew = false;
+                for &i in &cand {
+                    if !in_work[i] && dot(prob.x.col(i), &fp).abs() > lam {
+                        in_work[i] = true;
+                        work.push(i);
+                        grew = true;
+                    }
+                }
+                if !grew {
+                    u_prev = u;
+                    break;
+                }
+            }
+            lam_prev = lam;
+            steps.push(HomotopyStep {
+                lam,
+                beta: (0..p)
+                    .filter(|&i| beta_full[i] != 0.0)
+                    .map(|i| (i, beta_full[i]))
+                    .collect(),
+                candidate_size: cand.len(),
+                epochs,
+            });
+        }
+        (steps, sw.secs())
+    }
+}
+
+/// Support recovery metrics vs a reference support (Table 1).
+pub fn recall_precision(found: &[usize], truth: &[usize]) -> (f64, f64) {
+    if truth.is_empty() {
+        return (1.0, if found.is_empty() { 1.0 } else { 0.0 });
+    }
+    let tset: std::collections::HashSet<_> = truth.iter().collect();
+    let hits = found.iter().filter(|i| tset.contains(i)).count();
+    let recall = hits as f64 / truth.len() as f64;
+    let precision = if found.is_empty() {
+        1.0
+    } else {
+        hits as f64 / found.len() as f64
+    };
+    (recall, precision)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cm::NativeEngine;
+    use crate::data::synth;
+
+    #[test]
+    fn path_descends_and_returns_solutions() {
+        let ds = synth::synth_linear(40, 200, 51);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let lams: Vec<f64> = (1..=6).map(|k| lam_max * (0.7f64).powi(k)).collect();
+        let mut eng = NativeEngine::new();
+        let mut h = Homotopy::new(&mut eng, HomotopyConfig::default());
+        let (steps, _) = h.solve_path(&prob, &lams);
+        assert_eq!(steps.len(), 6);
+        // support grows (roughly) as λ decreases
+        assert!(steps.last().unwrap().beta.len() >= steps[0].beta.len());
+        // candidate sets stay well below p on the early path
+        assert!(steps[0].candidate_size < prob.p());
+    }
+
+    #[test]
+    fn recall_precision_math() {
+        let (r, p) = recall_precision(&[1, 2, 3], &[2, 3, 4]);
+        assert!((r - 2.0 / 3.0).abs() < 1e-12);
+        assert!((p - 2.0 / 3.0).abs() < 1e-12);
+        let (r, p) = recall_precision(&[], &[]);
+        assert_eq!((r, p), (1.0, 1.0));
+        let (r, _) = recall_precision(&[1], &[1]);
+        assert_eq!(r, 1.0);
+    }
+
+    #[test]
+    fn near_exact_on_easy_problem() {
+        // with a dense grid the homotopy method usually matches the
+        // exact support — Table 1 shows it failing only sometimes
+        let ds = synth::synth_linear(50, 120, 53);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let target = lam_max * 0.3;
+        let lams: Vec<f64> = (1..=10)
+            .map(|k| lam_max * (target / lam_max).powf(k as f64 / 10.0))
+            .collect();
+        let mut eng = NativeEngine::new();
+        let mut h = Homotopy::new(&mut eng, HomotopyConfig::default());
+        let (steps, _) = h.solve_path(&prob, &lams);
+        // exact reference via SAIF
+        let mut eng2 = NativeEngine::new();
+        let mut saif = crate::saif::Saif::new(
+            &mut eng2,
+            crate::saif::SaifConfig { eps: 1e-10, ..Default::default() },
+        );
+        let exact = saif.solve(&prob, target);
+        let truth: Vec<usize> = exact.beta.iter().map(|&(i, _)| i).collect();
+        let found: Vec<usize> = steps.last().unwrap().beta.iter().map(|&(i, _)| i).collect();
+        let (recall, _prec) = recall_precision(&found, &truth);
+        assert!(recall > 0.6, "recall {recall}");
+    }
+}

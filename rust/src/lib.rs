@@ -1,0 +1,39 @@
+//! # SAIF — Safe Active Feature Selection for Sparse Learning
+//!
+//! Reproduction of Ren, Huang, Huang & Qian (2018): *Safe Active
+//! Incremental Feature selection* for LASSO and tree fused LASSO, as a
+//! three-layer rust + JAX/Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   SAIF outer loop ([`saif`]), ball regions ([`ball`]), the baseline
+//!   algorithms it is evaluated against ([`screening`], [`homotopy`],
+//!   [`workingset`]), the fused-LASSO tree transform ([`fused`]), and
+//!   a multi-tenant solve-request coordinator ([`coordinator`]).
+//! * **L2/L1 (python/compile, build time only)** — JAX graphs + Pallas
+//!   kernels for the numeric inner loop, AOT-lowered to HLO text.
+//! * **Runtime bridge** ([`runtime`]) — loads the AOT artifacts via the
+//!   PJRT CPU client (`xla` crate) so Python is never on the request
+//!   path. The native f64 engine ([`cm::NativeEngine`]) implements the
+//!   identical semantics for cross-checking and for sizes beyond the
+//!   artifact shape buckets.
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
+//! the paper-vs-measured reproduction record.
+
+pub mod ball;
+pub mod cli;
+pub mod cm;
+pub mod coordinator;
+pub mod cv;
+pub mod data;
+pub mod experiments;
+pub mod fused;
+pub mod homotopy;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod saif;
+pub mod screening;
+pub mod util;
+pub mod workingset;

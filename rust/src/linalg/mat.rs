@@ -1,0 +1,192 @@
+//! Column-major dense matrix.
+
+use super::ops::{axpy, dot};
+
+/// Column-major dense matrix of f64. Columns are contiguous: the
+/// layout every solver in this repo walks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    n_rows: usize,
+    n_cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Mat {
+        Mat { n_rows, n_cols, data: vec![0.0; n_rows * n_cols] }
+    }
+
+    /// Build from a column-major data vector.
+    pub fn from_col_major(n_rows: usize, n_cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), n_rows * n_cols);
+        Mat { n_rows, n_cols, data }
+    }
+
+    /// Build from a closure `f(row, col)`.
+    pub fn from_fn(n_rows: usize, n_cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(n_rows, n_cols);
+        for j in 0..n_cols {
+            for i in 0..n_rows {
+                m.data[j * n_rows + i] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Contiguous column slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.n_cols);
+        &self.data[j * self.n_rows..(j + 1) * self.n_rows]
+    }
+
+    /// Mutable column slice.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.n_cols);
+        &mut self.data[j * self.n_rows..(j + 1) * self.n_rows]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.n_rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.n_rows + i] = v;
+    }
+
+    /// Raw column-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// y = X v  (v has n_cols entries).
+    pub fn mul_vec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.n_cols);
+        assert_eq!(out.len(), self.n_rows);
+        out.fill(0.0);
+        for j in 0..self.n_cols {
+            axpy(v[j], self.col(j), out);
+        }
+    }
+
+    /// out = X^T v  (v has n_rows entries) — the screening scan.
+    pub fn mul_t_vec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.n_rows);
+        assert_eq!(out.len(), self.n_cols);
+        for j in 0..self.n_cols {
+            out[j] = dot(self.col(j), v);
+        }
+    }
+
+    /// Squared norms of all columns.
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        (0..self.n_cols).map(|j| dot(self.col(j), self.col(j))).collect()
+    }
+
+    /// Gather a sub-matrix of the given columns (used to build the
+    /// active-block view SAIF solves over).
+    pub fn select_cols(&self, cols: &[usize]) -> Mat {
+        let mut m = Mat::zeros(self.n_rows, cols.len());
+        for (k, &j) in cols.iter().enumerate() {
+            m.col_mut(k).copy_from_slice(self.col(j));
+        }
+        m
+    }
+
+    /// Largest eigenvalue of X^T X via power iteration (used for the
+    /// complexity-model constants of Theorems 4/5).
+    pub fn sigma_max(&self, iters: usize, seed: u64) -> f64 {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(seed);
+        let mut v: Vec<f64> = (0..self.n_cols).map(|_| rng.normal()).collect();
+        let mut xv = vec![0.0; self.n_rows];
+        let mut xtxv = vec![0.0; self.n_cols];
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            self.mul_vec(&v, &mut xv);
+            self.mul_t_vec(&xv, &mut xtxv);
+            let nrm = dot(&xtxv, &xtxv).sqrt();
+            if nrm == 0.0 {
+                return 0.0;
+            }
+            for i in 0..v.len() {
+                v[i] = xtxv[i] / nrm;
+            }
+            lambda = nrm;
+        }
+        lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Mat {
+        // [[1, 3], [2, 4]]  (col-major data [1,2,3,4])
+        Mat::from_col_major(2, 2, vec![1.0, 2.0, 3.0, 4.0])
+    }
+
+    #[test]
+    fn layout_and_access() {
+        let m = small();
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 0), 2.0);
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(m.col(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn mul_vec_matches_manual() {
+        let m = small();
+        let mut out = vec![0.0; 2];
+        m.mul_vec(&[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn mul_t_vec_matches_manual() {
+        let m = small();
+        let mut out = vec![0.0; 2];
+        m.mul_t_vec(&[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn select_cols_gathers() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        let s = m.select_cols(&[2, 0]);
+        assert_eq!(s.n_cols(), 2);
+        assert_eq!(s.get(1, 0), 12.0);
+        assert_eq!(s.get(1, 1), 10.0);
+    }
+
+    #[test]
+    fn sigma_max_identityish() {
+        // X = I(3): sigma_max(X^T X) = 1
+        let m = Mat::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        let s = m.sigma_max(50, 1);
+        assert!((s - 1.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn col_norms() {
+        let m = small();
+        let n2 = m.col_norms_sq();
+        assert_eq!(n2, vec![5.0, 25.0]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate: column-major matrix + the small set
+//! of BLAS-1/2 kernels the solvers need (dot, axpy, norms, X^T v, X v).
+//!
+//! Column-major layout is deliberate: every algorithm in this repo
+//! (coordinate minimization, screening scans) walks *columns* of the
+//! design matrix, so each column is a contiguous slice. The hot kernels
+//! (`dot`, `axpy`) are manually unrolled 4-wide — this is the native
+//! engine's inner loop (see EXPERIMENTS.md §Perf for measurements).
+//! The native engine computes in f64 (the paper's 1e-9 duality gaps
+//! are unreachable in f32); the PJRT engine is f32 and is cross-checked
+//! against this one at looser tolerance.
+
+pub mod mat;
+pub mod ops;
+
+pub use mat::Mat;
+pub use ops::{axpy, dot, nrm2_sq, scale, sub};

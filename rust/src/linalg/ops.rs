@@ -1,0 +1,149 @@
+//! BLAS-1 kernels, manually unrolled. These are the native engine's
+//! hot path: a CM epoch is one `dot` + one `axpy` per coordinate.
+
+/// Dot product <x, y>. 4-wide unrolled with independent accumulators
+/// so the CPU can overlap the FMA chains.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let (xc, xr) = x.split_at(chunks * 4);
+    let (yc, yr) = y.split_at(chunks * 4);
+    for (a, b) in xc.chunks_exact(4).zip(yc.chunks_exact(4)) {
+        s0 += a[0] * b[0];
+        s1 += a[1] * b[1];
+        s2 += a[2] * b[2];
+        s3 += a[3] * b[3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (a, b) in xr.iter().zip(yr.iter()) {
+        s += a * b;
+    }
+    s
+}
+
+/// y += alpha * x (the residual-repair step of CM).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if alpha == 0.0 {
+        return;
+    }
+    let n = x.len();
+    let chunks = n / 4;
+    let (xc, xr) = x.split_at(chunks * 4);
+    let (yc, yr) = y.split_at_mut(chunks * 4);
+    for (a, b) in xc.chunks_exact(4).zip(yc.chunks_exact_mut(4)) {
+        b[0] += alpha * a[0];
+        b[1] += alpha * a[1];
+        b[2] += alpha * a[2];
+        b[3] += alpha * a[3];
+    }
+    for (a, b) in xr.iter().zip(yr.iter_mut()) {
+        *b += alpha * a;
+    }
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn nrm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// x *= alpha.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// out = a - b.
+#[inline]
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Soft-thresholding operator S(z, t) = sign(z) * max(|z| - t, 0).
+#[inline]
+pub fn soft_threshold(z: f64, t: f64) -> f64 {
+    if z > t {
+        z - t
+    } else if z < -t {
+        z + t
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn naive_dot(x: &[f64], y: &[f64]) -> f64 {
+        x.iter().zip(y).map(|(a, b)| a * b).sum()
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        let mut rng = Rng::new(1);
+        for n in 0..40 {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let d = dot(&x, &y);
+            let nd = naive_dot(&x, &y);
+            assert!((d - nd).abs() < 1e-10 * (1.0 + nd.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_naive() {
+        let mut rng = Rng::new(2);
+        for n in [0, 1, 3, 4, 5, 17, 64] {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut y2 = y.clone();
+            axpy(0.37, &x, &mut y);
+            for i in 0..n {
+                y2[i] += 0.37 * x[i];
+            }
+            for i in 0..n {
+                assert!((y[i] - y2[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_zero_alpha_noop() {
+        let x = [1.0, 2.0];
+        let mut y = [3.0, 4.0];
+        axpy(0.0, &x, &mut y);
+        assert_eq!(y, [3.0, 4.0]);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn scale_and_sub() {
+        let mut x = vec![1.0, -2.0, 3.0];
+        scale(2.0, &mut x);
+        assert_eq!(x, vec![2.0, -4.0, 6.0]);
+        let mut out = vec![0.0; 3];
+        sub(&[5.0, 5.0, 5.0], &x, &mut out);
+        assert_eq!(out, vec![3.0, 9.0, -1.0]);
+    }
+}

@@ -1,0 +1,4 @@
+//! CLI entrypoint (see `cli` module).
+fn main() {
+    saif::cli::main();
+}

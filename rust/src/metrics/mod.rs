@@ -1,0 +1,160 @@
+//! Metrics: latency histograms, experiment records and CSV/JSON
+//! emission (consumed by EXPERIMENTS.md and the bench harness).
+
+use crate::util::json::Json;
+
+/// Streaming latency/throughput recorder (microsecond buckets).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        LatencyStats::default()
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        self.samples_us.push(secs * 1e6);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    /// Percentile in microseconds (q in [0, 1]).
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        v[idx]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(0.50),
+            self.percentile_us(0.95),
+            self.percentile_us(0.99),
+        )
+    }
+}
+
+/// A row-oriented results table that renders as aligned text (for the
+/// bench harness stdout) and as CSV (for files under out/).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV under `dir/<slug>.csv` (dir created as needed).
+    pub fn save_csv(&self, dir: &str, slug: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{slug}.csv");
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// An experiment record (one JSON object per run) for EXPERIMENTS.md.
+pub fn run_record(id: &str, fields: &[(&str, Json)]) -> Json {
+    let mut o = Json::obj();
+    o.set("experiment", Json::Str(id.to_string()));
+    for (k, v) in fields {
+        o.set(k, v.clone());
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::new();
+        for i in 1..=100 {
+            l.record_secs(i as f64 * 1e-6);
+        }
+        assert_eq!(l.count(), 100);
+        assert!((l.percentile_us(0.0) - 1.0).abs() < 1e-9);
+        assert!((l.percentile_us(1.0) - 100.0).abs() < 1e-9);
+        assert!((l.mean_us() - 50.5).abs() < 1e-9);
+        assert!(l.summary().contains("n=100"));
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("fig", &["method", "secs"]);
+        t.row(vec!["saif".into(), "0.5".into()]);
+        t.row(vec!["dyn".into(), "2.0".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("method,secs\n"));
+        assert!(csv.contains("saif,0.5"));
+        let txt = t.render();
+        assert!(txt.contains("== fig =="));
+    }
+}

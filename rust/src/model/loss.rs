@@ -1,0 +1,168 @@
+//! Loss functions: squared (linear regression) and logistic.
+//!
+//! The paper's general formulation (§1.1) assumes f is α-smooth and
+//! γ-convex; its conjugate f* is then (1/α)-strongly convex, which is
+//! what turns duality gaps into dual ball radii (eq. 6). We implement
+//! the two losses the paper evaluates.
+
+/// Which loss a problem uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    /// f(u, y) = 1/2 (u - y)^2 — linear regression.
+    Squared,
+    /// f(u, y) = log(1 + exp(-y u)), y ∈ {-1, +1} — logistic regression.
+    Logistic,
+}
+
+/// Per-sample loss interface.
+pub trait Loss {
+    /// f(u, y).
+    fn value(&self, u: f64, y: f64) -> f64;
+    /// ∂f/∂u.
+    fn deriv(&self, u: f64, y: f64) -> f64;
+    /// Smoothness constant α (f'' ≤ α). Gap-ball radius² = 2α·gap/λ².
+    fn alpha(&self) -> f64;
+    /// Coordinate curvature majorizer: H_ii ≤ curv() * ‖x_i‖².
+    fn curv(&self) -> f64;
+}
+
+/// Squared loss.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Squared;
+
+impl Loss for Squared {
+    #[inline]
+    fn value(&self, u: f64, y: f64) -> f64 {
+        let d = u - y;
+        0.5 * d * d
+    }
+
+    #[inline]
+    fn deriv(&self, u: f64, y: f64) -> f64 {
+        u - y
+    }
+
+    fn alpha(&self) -> f64 {
+        1.0
+    }
+
+    fn curv(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Logistic loss with ±1 labels.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Logistic;
+
+impl Loss for Logistic {
+    #[inline]
+    fn value(&self, u: f64, y: f64) -> f64 {
+        // log(1 + exp(-yu)), stable at both tails
+        let m = -y * u;
+        if m > 30.0 {
+            m
+        } else {
+            (1.0 + m.exp()).ln()
+        }
+    }
+
+    #[inline]
+    fn deriv(&self, u: f64, y: f64) -> f64 {
+        // -y * sigmoid(-y u)
+        -y / (1.0 + (y * u).exp())
+    }
+
+    fn alpha(&self) -> f64 {
+        0.25
+    }
+
+    fn curv(&self) -> f64 {
+        0.25
+    }
+}
+
+impl LossKind {
+    /// Dispatch to the per-sample implementation.
+    pub fn value(&self, u: f64, y: f64) -> f64 {
+        match self {
+            LossKind::Squared => Squared.value(u, y),
+            LossKind::Logistic => Logistic.value(u, y),
+        }
+    }
+
+    pub fn deriv(&self, u: f64, y: f64) -> f64 {
+        match self {
+            LossKind::Squared => Squared.deriv(u, y),
+            LossKind::Logistic => Logistic.deriv(u, y),
+        }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        match self {
+            LossKind::Squared => Squared.alpha(),
+            LossKind::Logistic => Logistic.alpha(),
+        }
+    }
+
+    pub fn curv(&self) -> f64 {
+        match self {
+            LossKind::Squared => Squared.curv(),
+            LossKind::Logistic => Logistic.curv(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squared_basics() {
+        assert_eq!(Squared.value(3.0, 1.0), 2.0);
+        assert_eq!(Squared.deriv(3.0, 1.0), 2.0);
+    }
+
+    #[test]
+    fn logistic_matches_formula() {
+        let v = Logistic.value(0.5, 1.0);
+        assert!((v - (1.0f64 + (-0.5f64).exp()).ln()).abs() < 1e-12);
+        let d = Logistic.deriv(0.5, 1.0);
+        let sig = 1.0 / (1.0 + (0.5f64).exp());
+        assert!((d + sig).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logistic_stable_at_tails() {
+        assert!(Logistic.value(-100.0, 1.0).is_finite());
+        assert!(Logistic.value(100.0, 1.0) < 1e-20);
+        assert!(Logistic.deriv(-1000.0, 1.0).is_finite());
+    }
+
+    #[test]
+    fn deriv_is_gradient_of_value() {
+        // finite-difference check on both losses
+        for kind in [LossKind::Squared, LossKind::Logistic] {
+            for &(u, y) in &[(0.3, 1.0), (-1.2, -1.0), (2.0, 1.0)] {
+                let h = 1e-6;
+                let fd = (kind.value(u + h, y) - kind.value(u - h, y)) / (2.0 * h);
+                assert!(
+                    (fd - kind.deriv(u, y)).abs() < 1e-5,
+                    "{kind:?} u={u} y={y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn curvature_bounds_hold() {
+        // f'' <= alpha numerically
+        for kind in [LossKind::Squared, LossKind::Logistic] {
+            for &u in &[-2.0, 0.0, 0.7, 3.0] {
+                let h = 1e-5;
+                let f2 = (kind.deriv(u + h, 1.0) - kind.deriv(u - h, 1.0)) / (2.0 * h);
+                assert!(f2 <= kind.alpha() + 1e-6, "{kind:?} u={u} f''={f2}");
+            }
+        }
+    }
+}

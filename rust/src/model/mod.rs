@@ -1,0 +1,18 @@
+//! LASSO problem definitions: losses, primal/dual objectives, dual
+//! projection, duality gap, lambda_max and KKT certification.
+//!
+//! Conventions (mirrored exactly by the L2 jax graphs in
+//! `python/compile/kernels/ref.py` — the two implementations are
+//! cross-checked in `rust/tests/engines.rs`):
+//!
+//! * primal:  P(β) = Σ_j f(x_j·β, y_j) + λ‖β‖₁
+//! * dual:    D(θ) = −Σ_j f*(−λθ_j, y_j),  s.t. |x_iᵀθ| ≤ 1
+//! * link:    θ̂ = −f'(Xβ)/λ, projected feasible by a scaling τ
+//! * gap ball (eq. 6/11): ‖θ* − θ‖² ≤ (2α/λ²)(P(β) − D(θ)) with α the
+//!   smoothness constant of f (LS: 1, logistic: 1/4).
+
+pub mod loss;
+pub mod problem;
+
+pub use loss::{Loss, LossKind};
+pub use problem::{DualPoint, Problem};

@@ -1,0 +1,299 @@
+//! The LASSO problem container and its primal/dual machinery.
+
+use crate::linalg::{dot, Mat};
+
+use super::loss::LossKind;
+
+/// A feasible dual point together with the data needed by screening.
+#[derive(Debug, Clone)]
+pub struct DualPoint {
+    /// Feasible θ (scaled θ̂).
+    pub theta: Vec<f64>,
+    /// Scaling applied: θ = τ θ̂.
+    pub tau: f64,
+    /// Dual objective D(θ).
+    pub dual: f64,
+}
+
+/// A (sub-)problem instance: design matrix, labels, loss, plus cached
+/// column norms. The full problem owns the full X; SAIF's sub-problems
+/// are expressed as index sets *into* this problem (no column copies
+/// on the native path).
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub x: Mat,
+    pub y: Vec<f64>,
+    pub loss: LossKind,
+    /// ‖x_i‖₂² for every column (cached at construction).
+    pub col_nrm2: Vec<f64>,
+    /// Optional fixed margin offset: u = offset + Xβ. Used by the
+    /// fused-LASSO transform, whose unpenalized coordinate b enters the
+    /// margins as x̃_p·b (Theorem 6) while SAIF runs on the penalized
+    /// block.
+    pub offset: Option<Vec<f64>>,
+}
+
+impl Problem {
+    pub fn new(x: Mat, y: Vec<f64>, loss: LossKind) -> Problem {
+        assert_eq!(x.n_rows(), y.len());
+        let col_nrm2 = x.col_norms_sq();
+        Problem { x, y, loss, col_nrm2, offset: None }
+    }
+
+    /// Attach a fixed margin offset (fused-LASSO unpenalized block).
+    pub fn with_offset(mut self, offset: Vec<f64>) -> Problem {
+        assert_eq!(offset.len(), self.y.len());
+        self.offset = Some(offset);
+        self
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.x.n_rows()
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.x.n_cols()
+    }
+
+    /// −f'(u₀) vector at β = 0 (u₀ = offset or 0). λ_max and the
+    /// initial SAIF correlations are |Xᵀ f'(u₀)|.
+    pub fn neg_deriv_at_zero(&self) -> Vec<f64> {
+        (0..self.n())
+            .map(|j| {
+                let u0 = self.offset.as_ref().map_or(0.0, |o| o[j]);
+                -self.loss.deriv(u0, self.y[j])
+            })
+            .collect()
+    }
+
+    /// λ_max = max_i |x_iᵀ f'(0)|: the smallest λ with β* = 0.
+    pub fn lambda_max(&self) -> f64 {
+        let d0 = self.neg_deriv_at_zero();
+        (0..self.p())
+            .map(|i| dot(self.x.col(i), &d0).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Initial screening correlations |x_iᵀ f'(0)| for all columns.
+    pub fn init_corrs(&self) -> Vec<f64> {
+        let d0 = self.neg_deriv_at_zero();
+        (0..self.p())
+            .map(|i| dot(self.x.col(i), &d0).abs())
+            .collect()
+    }
+
+    /// Margins u = offset + Xβ for a sparse β given as (index, value)
+    /// pairs.
+    pub fn margins_sparse(&self, beta: &[(usize, f64)]) -> Vec<f64> {
+        let mut u = match &self.offset {
+            Some(o) => o.clone(),
+            None => vec![0.0; self.n()],
+        };
+        for &(i, b) in beta {
+            if b != 0.0 {
+                crate::linalg::axpy(b, self.x.col(i), &mut u);
+            }
+        }
+        u
+    }
+
+    /// Primal objective from margins and the β L1 norm.
+    pub fn primal_from_margins(&self, u: &[f64], beta_l1: f64, lam: f64) -> f64 {
+        let mut s = 0.0;
+        for j in 0..self.n() {
+            s += self.loss.value(u[j], self.y[j]);
+        }
+        s + lam * beta_l1
+    }
+
+    /// Unscaled dual direction θ̂ = −f'(u)/λ.
+    pub fn theta_hat(&self, u: &[f64], lam: f64) -> Vec<f64> {
+        (0..self.n())
+            .map(|j| -self.loss.deriv(u[j], self.y[j]) / lam)
+            .collect()
+    }
+
+    /// Project θ̂ into the dual feasible region of the sub-problem whose
+    /// max correlation is `mx = max_{i∈A} |x_iᵀθ̂|`, and evaluate D(θ).
+    ///
+    /// LS uses the clipped optimal scaling τ* = yᵀθ̂ / (λ‖θ̂‖²)
+    /// (Theorem 7 specialized to identity transform); logistic uses the
+    /// feasibility rescale τ = min(1, 1/mx) which also preserves
+    /// s = λθy ∈ [0,1].
+    pub fn project_dual(&self, theta_hat: &[f64], mx: f64, lam: f64) -> DualPoint {
+        let mx = mx.max(1e-12);
+        let tau = match self.loss {
+            LossKind::Squared => {
+                let denom = lam * dot(theta_hat, theta_hat);
+                let t = if denom.abs() < 1e-300 {
+                    0.0
+                } else {
+                    dot(&self.y, theta_hat) / denom
+                };
+                t.clamp(-1.0 / mx, 1.0 / mx)
+            }
+            LossKind::Logistic => (1.0 / mx).min(1.0),
+        };
+        let theta: Vec<f64> = theta_hat.iter().map(|t| tau * t).collect();
+        let dual = self.dual_value(&theta, lam);
+        DualPoint { theta, tau, dual }
+    }
+
+    /// Dual objective D(θ) = −Σ f*(−λθ_j, y_j).
+    pub fn dual_value(&self, theta: &[f64], lam: f64) -> f64 {
+        match self.loss {
+            LossKind::Squared => {
+                // D = 1/2‖y‖² − λ²/2 ‖θ − y/λ‖²
+                let mut s = 0.0;
+                for j in 0..self.n() {
+                    let d = theta[j] - self.y[j] / lam;
+                    s += self.y[j] * self.y[j] - lam * lam * d * d;
+                }
+                0.5 * s
+            }
+            LossKind::Logistic => {
+                // D = −Σ s log s + (1−s) log(1−s), s = λθy ∈ [0,1]
+                let mut s = 0.0;
+                for j in 0..self.n() {
+                    let sj = (lam * theta[j] * self.y[j]).clamp(0.0, 1.0);
+                    s -= xlogx(sj) + xlogx(1.0 - sj);
+                }
+                s
+            }
+        }
+    }
+
+    /// Verify the KKT conditions of the *full* problem for a sparse β.
+    /// Returns the worst violation (0 = certified optimal up to tol).
+    /// This is the safety certificate used by the tests and the
+    /// coordinator's per-request verification.
+    pub fn kkt_violation(&self, beta: &[(usize, f64)], lam: f64) -> f64 {
+        let u = self.margins_sparse(beta);
+        let fprime: Vec<f64> = (0..self.n())
+            .map(|j| self.loss.deriv(u[j], self.y[j]))
+            .collect();
+        let mut active: std::collections::HashMap<usize, f64> =
+            std::collections::HashMap::new();
+        for &(i, b) in beta {
+            if b != 0.0 {
+                active.insert(i, b);
+            }
+        }
+        let mut worst: f64 = 0.0;
+        for i in 0..self.p() {
+            let g = dot(self.x.col(i), &fprime);
+            match active.get(&i) {
+                Some(&b) => {
+                    // x_iᵀ f'(u) + λ sign(β_i) = 0
+                    worst = worst.max((g + lam * b.signum()).abs());
+                }
+                None => {
+                    worst = worst.max((g.abs() - lam).max(0.0));
+                }
+            }
+        }
+        worst
+    }
+}
+
+#[inline]
+fn xlogx(s: f64) -> f64 {
+    if s > 0.0 {
+        s * s.ln()
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_problem(seed: u64, n: usize, p: usize, loss: LossKind) -> Problem {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, p, |_, _| rng.normal());
+        let y: Vec<f64> = match loss {
+            LossKind::Squared => (0..n).map(|_| rng.normal()).collect(),
+            LossKind::Logistic => (0..n)
+                .map(|_| if rng.uniform() > 0.5 { 1.0 } else { -1.0 })
+                .collect(),
+        };
+        Problem::new(x, y, loss)
+    }
+
+    #[test]
+    fn lambda_max_kills_all_coefficients() {
+        // with λ = λ_max the zero vector satisfies KKT
+        for loss in [LossKind::Squared, LossKind::Logistic] {
+            let prob = random_problem(5, 30, 12, loss);
+            let lam = prob.lambda_max();
+            assert!(prob.kkt_violation(&[], lam) < 1e-9);
+            // and with λ slightly smaller it does not
+            assert!(prob.kkt_violation(&[], lam * 0.9) > 0.0);
+        }
+    }
+
+    #[test]
+    fn gap_nonnegative_at_feasible_dual() {
+        for loss in [LossKind::Squared, LossKind::Logistic] {
+            let prob = random_problem(6, 25, 10, loss);
+            let lam = prob.lambda_max() * 0.3;
+            // beta = 0
+            let u = vec![0.0; prob.n()];
+            let th = prob.theta_hat(&u, lam);
+            let mx = (0..prob.p())
+                .map(|i| dot(prob.x.col(i), &th).abs())
+                .fold(0.0, f64::max);
+            let dp = prob.project_dual(&th, mx, lam);
+            let primal = prob.primal_from_margins(&u, 0.0, lam);
+            assert!(
+                primal - dp.dual >= -1e-8,
+                "{loss:?}: P={primal} D={}",
+                dp.dual
+            );
+            // feasibility
+            for i in 0..prob.p() {
+                assert!(dot(prob.x.col(i), &dp.theta).abs() <= 1.0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn dual_value_ls_closed_form() {
+        let prob = random_problem(8, 10, 4, LossKind::Squared);
+        let lam = 1.3;
+        // theta = y/λ gives D = ½‖y‖²
+        let th: Vec<f64> = prob.y.iter().map(|v| v / lam).collect();
+        let d = prob.dual_value(&th, lam);
+        let ynrm: f64 = prob.y.iter().map(|v| v * v).sum();
+        assert!((d - 0.5 * ynrm).abs() < 1e-10);
+    }
+
+    #[test]
+    fn logistic_dual_bounded_by_n_log2() {
+        let prob = random_problem(9, 20, 6, LossKind::Logistic);
+        let lam = prob.lambda_max() * 0.5;
+        let u = vec![0.0; prob.n()];
+        let th = prob.theta_hat(&u, lam);
+        let mx = (0..prob.p())
+            .map(|i| dot(prob.x.col(i), &th).abs())
+            .fold(0.0, f64::max);
+        let dp = prob.project_dual(&th, mx, lam);
+        // max of dual = n log 2 (entropy bound)
+        assert!(dp.dual <= prob.n() as f64 * std::f64::consts::LN_2 + 1e-9);
+    }
+
+    #[test]
+    fn margins_sparse_matches_dense() {
+        let prob = random_problem(10, 12, 6, LossKind::Squared);
+        let beta = vec![(1usize, 0.5), (4usize, -1.2)];
+        let u = prob.margins_sparse(&beta);
+        for j in 0..prob.n() {
+            let manual = 0.5 * prob.x.get(j, 1) - 1.2 * prob.x.get(j, 4);
+            assert!((u[j] - manual).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Artifact manifest parsing (written by python/compile/aot.py).
+
+use crate::util::json::Json;
+
+/// Artifact kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// K CM epochs + gap eval, least squares.
+    CmLs,
+    /// K CM epochs + gap eval, logistic.
+    CmLog,
+    /// Full-matrix screening scan.
+    Scores,
+}
+
+/// One shape-bucketed artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub n: usize,
+    pub p: usize,
+    /// CM epochs baked into one call (0 for scores).
+    pub k: usize,
+    pub file: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub k_epochs: usize,
+    pub artifacts: Vec<Artifact>,
+    pub dir: String,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("read {path}: {e}"))?;
+        let j = Json::parse(&text)?;
+        let k_epochs = j
+            .get("k_epochs")
+            .and_then(|v| v.as_usize())
+            .ok_or("manifest: missing k_epochs")?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest: missing artifacts")?
+        {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("artifact: missing name")?
+                .to_string();
+            let kind = match a.get("kind").and_then(|v| v.as_str()) {
+                Some("cm_ls") => ArtifactKind::CmLs,
+                Some("cm_log") => ArtifactKind::CmLog,
+                Some("scores") => ArtifactKind::Scores,
+                other => return Err(format!("artifact {name}: bad kind {other:?}")),
+            };
+            artifacts.push(Artifact {
+                name,
+                kind,
+                n: a.get("n").and_then(|v| v.as_usize()).ok_or("missing n")?,
+                p: a.get("p").and_then(|v| v.as_usize()).ok_or("missing p")?,
+                k: a.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                file: a
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or("missing file")?
+                    .to_string(),
+            });
+        }
+        Ok(Manifest { k_epochs, artifacts, dir: dir.to_string() })
+    }
+
+    /// Smallest bucket of `kind` that fits (n, p), by padded area.
+    pub fn pick(&self, kind: ArtifactKind, n: usize, p: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.n >= n && a.p >= p)
+            .min_by_key(|a| a.n * a.p)
+    }
+
+    pub fn path_of(&self, a: &Artifact) -> String {
+        format!("{}/{}", self.dir, a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest(dir: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            format!("{dir}/manifest.json"),
+            r#"{"k_epochs": 10, "artifacts": [
+                {"name": "cm_ls_n128_p64", "kind": "cm_ls", "n": 128, "p": 64,
+                 "k": 10, "file": "a.hlo.txt", "inputs": [], "outputs": []},
+                {"name": "cm_ls_n128_p256", "kind": "cm_ls", "n": 128, "p": 256,
+                 "k": 10, "file": "b.hlo.txt", "inputs": [], "outputs": []},
+                {"name": "scores_n128_p5120", "kind": "scores", "n": 128,
+                 "p": 5120, "k": 0, "file": "c.hlo.txt", "inputs": [], "outputs": []}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_and_pick() {
+        let dir = std::env::temp_dir().join("saif_manifest_test");
+        let dir = dir.to_str().unwrap();
+        toy_manifest(dir);
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.k_epochs, 10);
+        assert_eq!(m.artifacts.len(), 3);
+        // picks the smallest fitting bucket
+        let a = m.pick(ArtifactKind::CmLs, 100, 60).unwrap();
+        assert_eq!(a.p, 64);
+        let a = m.pick(ArtifactKind::CmLs, 100, 65).unwrap();
+        assert_eq!(a.p, 256);
+        // nothing fits
+        assert!(m.pick(ArtifactKind::CmLs, 4096, 64).is_none());
+        assert!(m.pick(ArtifactKind::Scores, 100, 5000).is_some());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_parses_when_built() {
+        // integration sanity against the actual artifacts when present
+        let dir = crate::runtime::artifacts_dir();
+        if !crate::runtime::artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 10);
+        assert!(m.pick(ArtifactKind::Scores, 100, 5000).is_some());
+        assert!(m.pick(ArtifactKind::CmLs, 100, 512).is_some());
+        assert!(m.pick(ArtifactKind::CmLog, 512, 256).is_some());
+    }
+}

@@ -1,0 +1,30 @@
+//! Runtime bridge: load the AOT-compiled JAX/Pallas artifacts (HLO
+//! text, see python/compile/aot.py) through the PJRT CPU client and
+//! expose them as a [`crate::cm::Engine`]. Python never runs here —
+//! the artifacts are self-contained compiled programs.
+//!
+//! Shape buckets: each artifact is compiled for fixed (n_cap, p_cap);
+//! problems are packed by zero-padding rows (weights 0) and masking
+//! columns. The engine keeps a compiled-executable cache (compile
+//! once per artifact) and a packed-matrix cache (repack only when the
+//! problem or bucket changes — the SAIF hot loop reuses both).
+//!
+//! Numerics: artifacts compute in f32. Duality gaps below ~1e-6
+//! relative are not resolvable in f32 — callers use eps ≥ 1e-5 on
+//! this engine (the native f64 engine covers the paper's 1e-9 runs).
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{Artifact, ArtifactKind, Manifest};
+pub use pjrt::PjrtEngine;
+
+/// Default artifacts directory (overridden by SAIF_ARTIFACTS).
+pub fn artifacts_dir() -> String {
+    std::env::var("SAIF_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// True when the AOT artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    std::path::Path::new(&format!("{}/manifest.json", artifacts_dir())).exists()
+}

@@ -1,0 +1,246 @@
+//! The PJRT-backed `Engine`: packs problems into shape buckets and
+//! executes the AOT artifacts on the CPU PJRT client.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::cm::{Engine, SubEval};
+use crate::model::{LossKind, Problem};
+use crate::runtime::manifest::{Artifact, ArtifactKind, Manifest};
+
+/// Cache key for packed full matrices (pointer identity + dims).
+type PackKey = (usize, usize, usize, usize, usize);
+
+/// PJRT engine over the AOT artifacts.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// artifact name → compiled executable
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// packed row-major f32 copies of (sub-)matrices, keyed by
+    /// (x data ptr, n, p, n_cap, p_cap); active-block packs are keyed
+    /// with a rolling hash of the index list instead of reused — see
+    /// `pack_active`.
+    full_pack: HashMap<PackKey, Vec<f32>>,
+    /// executions counted (metrics)
+    pub calls: usize,
+}
+
+impl PjrtEngine {
+    /// Create from the default artifacts directory.
+    pub fn new() -> Result<PjrtEngine> {
+        Self::with_dir(&crate::runtime::artifacts_dir())
+    }
+
+    pub fn with_dir(dir: &str) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            full_pack: HashMap::new(),
+            calls: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Can this engine run the given problem shape at all?
+    pub fn supports(&self, prob: &Problem, active_len: usize) -> bool {
+        let kind = match prob.loss {
+            LossKind::Squared => ArtifactKind::CmLs,
+            LossKind::Logistic => ArtifactKind::CmLog,
+        };
+        self.manifest.pick(kind, prob.n(), active_len.max(1)).is_some()
+            && self
+                .manifest
+                .pick(ArtifactKind::Scores, prob.n(), prob.p())
+                .is_some()
+    }
+
+    fn executable(&mut self, art: &Artifact) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(&art.name) {
+            let path = self.manifest.path_of(art);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.executables.insert(art.name.clone(), exe);
+        }
+        Ok(self.executables.get(&art.name).unwrap())
+    }
+
+    /// Pack the active-column block row-major f32, zero-padded to the
+    /// bucket. (i, j) → row i * p_cap + j.
+    fn pack_active(prob: &Problem, active: &[usize], n_cap: usize, p_cap: usize) -> Vec<f32> {
+        let n = prob.n();
+        let mut buf = vec![0.0f32; n_cap * p_cap];
+        for (a, &col) in active.iter().enumerate() {
+            let c = prob.x.col(col);
+            for j in 0..n {
+                buf[j * p_cap + a] = c[j] as f32;
+            }
+        }
+        buf
+    }
+
+    /// Pack (and cache) the FULL matrix row-major f32 for the scores
+    /// scan — the pack is O(n·p) and reused across every outer
+    /// iteration of a solve.
+    fn pack_full(&mut self, prob: &Problem, n_cap: usize, p_cap: usize) -> &[f32] {
+        let key: PackKey = (
+            prob.x.data().as_ptr() as usize,
+            prob.n(),
+            prob.p(),
+            n_cap,
+            p_cap,
+        );
+        self.full_pack.entry(key).or_insert_with(|| {
+            let n = prob.n();
+            let p = prob.p();
+            let mut buf = vec![0.0f32; n_cap * p_cap];
+            for i in 0..p {
+                let c = prob.x.col(i);
+                for j in 0..n {
+                    buf[j * p_cap + i] = c[j] as f32;
+                }
+            }
+            buf
+        })
+    }
+
+    fn vec_padded(v: &[f64], cap: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; cap];
+        for (i, &x) in v.iter().enumerate() {
+            out[i] = x as f32;
+        }
+        out
+    }
+
+    fn lit1(v: Vec<f32>) -> xla::Literal {
+        xla::Literal::vec1(&v)
+    }
+
+    fn lit2(v: Vec<f32>, rows: usize, cols: usize) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&v).reshape(&[rows as i64, cols as i64])?)
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn cm_eval(
+        &mut self,
+        prob: &Problem,
+        active: &[usize],
+        beta: &mut [f64],
+        lam: f64,
+        k: usize,
+    ) -> SubEval {
+        assert!(
+            prob.offset.is_none(),
+            "PJRT engine does not support margin offsets (use native)"
+        );
+        let kind = match prob.loss {
+            LossKind::Squared => ArtifactKind::CmLs,
+            LossKind::Logistic => ArtifactKind::CmLog,
+        };
+        let n = prob.n();
+        let art = self
+            .manifest
+            .pick(kind, n, active.len().max(1))
+            .unwrap_or_else(|| {
+                panic!(
+                    "no {kind:?} bucket for n={n}, |A|={} — build more buckets \
+                     or use the native engine",
+                    active.len()
+                )
+            })
+            .clone();
+        let (n_cap, p_cap) = (art.n, art.p);
+        // one artifact call runs art.k epochs; round k up
+        let reps = k.div_ceil(art.k.max(1)).max(1);
+
+        let xbuf = Self::pack_active(prob, active, n_cap, p_cap);
+        let ybuf = Self::vec_padded(&prob.y, n_cap);
+        let mut wbuf = vec![0.0f32; n_cap];
+        for w in wbuf.iter_mut().take(n) {
+            *w = 1.0;
+        }
+        let mut mbuf = vec![0.0f32; p_cap];
+        for m in mbuf.iter_mut().take(active.len()) {
+            *m = 1.0;
+        }
+        let mut bbuf = Self::vec_padded(beta, p_cap);
+
+        let mut out: Option<(Vec<f32>, f32, f32, f32, Vec<f32>, Vec<f32>)> = None;
+        for _ in 0..reps {
+            let x_l = Self::lit2(xbuf.clone(), n_cap, p_cap).expect("x literal");
+            let y_l = Self::lit1(ybuf.clone());
+            let w_l = Self::lit1(wbuf.clone());
+            let b_l = Self::lit1(bbuf.clone());
+            let m_l = Self::lit1(mbuf.clone());
+            let lam_l = xla::Literal::scalar(lam as f32);
+            let exe = self.executable(&art).expect("compile artifact");
+            let res = exe
+                .execute::<xla::Literal>(&[x_l, y_l, w_l, b_l, m_l, lam_l])
+                .expect("execute cm artifact");
+            self.calls += 1;
+            let lit = res[0][0].to_literal_sync().expect("fetch result");
+            let parts = lit.to_tuple().expect("tuple outputs");
+            assert_eq!(parts.len(), 6, "cm artifact must return 6 outputs");
+            let beta_o: Vec<f32> = parts[0].to_vec().expect("beta");
+            let primal: f32 = parts[1].get_first_element().expect("primal");
+            let dual: f32 = parts[2].get_first_element().expect("dual");
+            let gap: f32 = parts[3].get_first_element().expect("gap");
+            let theta: Vec<f32> = parts[4].to_vec().expect("theta");
+            let scores: Vec<f32> = parts[5].to_vec().expect("scores");
+            bbuf.copy_from_slice(&beta_o);
+            out = Some((beta_o, primal, dual, gap, theta, scores));
+        }
+        let (beta_o, primal, dual, gap, theta, scores) = out.unwrap();
+        for (a, b) in beta.iter_mut().enumerate().take(active.len()) {
+            *b = beta_o[a] as f64;
+        }
+        SubEval {
+            primal: primal as f64,
+            dual: dual as f64,
+            gap: (gap as f64).max(0.0),
+            theta: theta.iter().take(n).map(|&v| v as f64).collect(),
+            active_scores: scores
+                .iter()
+                .take(active.len())
+                .map(|&v| v as f64)
+                .collect(),
+        }
+    }
+
+    fn scores(&mut self, prob: &Problem, theta: &[f64]) -> Vec<f64> {
+        let n = prob.n();
+        let p = prob.p();
+        let art = self
+            .manifest
+            .pick(ArtifactKind::Scores, n, p)
+            .unwrap_or_else(|| panic!("no scores bucket for n={n}, p={p}"))
+            .clone();
+        let (n_cap, p_cap) = (art.n, art.p);
+        let xbuf = self.pack_full(prob, n_cap, p_cap).to_vec();
+        let tbuf = Self::vec_padded(theta, n_cap);
+        let x_l = Self::lit2(xbuf, n_cap, p_cap).expect("x literal");
+        let t_l = Self::lit1(tbuf);
+        let exe = self.executable(&art).expect("compile artifact");
+        let res = exe
+            .execute::<xla::Literal>(&[x_l, t_l])
+            .expect("execute scores artifact");
+        self.calls += 1;
+        let lit = res[0][0].to_literal_sync().expect("fetch result");
+        let parts = lit.to_tuple().expect("tuple outputs");
+        let scores: Vec<f32> = parts[0].to_vec().expect("scores");
+        scores.iter().take(p).map(|&v| v as f64).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,516 @@
+//! Group-LASSO SAIF — the extension the paper's conclusion names
+//! ("SAIF can be potentially extended to group LASSO (Yuan & Lin
+//! 2006)"). Everything lifts block-wise:
+//!
+//!   primal   min_β Σ_j f(x_jβ, y_j) + λ Σ_g w_g ‖β_g‖₂
+//!   dual     sup_θ −Σ_j f*(−λθ_j)  s.t. ‖X_gᵀθ‖₂ ≤ w_g ∀g
+//!
+//! * base algorithm: cyclic **block** minimization with the group
+//!   soft-threshold  β_g ← (1 − λw_g/‖z_g‖)₊ z_g  under the block
+//!   Lipschitz majorizer (exact for LS with the majorized step);
+//! * screening score of a group: ‖X_gᵀθ‖₂ (vs |x_iᵀθ|);
+//! * DEL: ‖X_gᵀθ‖ + r·L_g < w_g  with L_g = σ_max(X_g) ≤ ‖X_g‖_F
+//!   (Frobenius bound, safe);
+//! * ADD stop (Theorem 1-c lifted): max over remaining groups of
+//!   ‖X_gᵀθ‖ + r·L_g < w_g ⇒ the sub-problem optimum is global.
+
+use crate::ball::gap_ball;
+use crate::linalg::{axpy, dot};
+use crate::model::{LossKind, Problem};
+use crate::util::Stopwatch;
+
+/// A group structure: contiguous index lists partitioning 0..p.
+#[derive(Debug, Clone)]
+pub struct Groups {
+    /// member feature indices per group
+    pub members: Vec<Vec<usize>>,
+    /// per-group weight w_g (usually sqrt(|g|))
+    pub weights: Vec<f64>,
+}
+
+impl Groups {
+    /// Equal-size contiguous groups with w_g = sqrt(group size).
+    pub fn contiguous(p: usize, group_size: usize) -> Groups {
+        assert!(group_size >= 1);
+        let mut members: Vec<Vec<usize>> = Vec::new();
+        let mut i = 0;
+        while i < p {
+            let end = (i + group_size).min(p);
+            members.push((i..end).collect());
+            i = end;
+        }
+        let weights = members.iter().map(|m| (m.len() as f64).sqrt()).collect();
+        Groups { members, weights }
+    }
+
+    /// From an explicit assignment vector (feature → group id).
+    pub fn from_assignment(assign: &[usize]) -> Groups {
+        let n_groups = assign.iter().max().map_or(0, |m| m + 1);
+        let mut members = vec![Vec::new(); n_groups];
+        for (i, &g) in assign.iter().enumerate() {
+            members[g].push(i);
+        }
+        members.retain(|m| !m.is_empty());
+        let weights = members
+            .iter()
+            .map(|m: &Vec<usize>| (m.len() as f64).sqrt())
+            .collect();
+        Groups { members, weights }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.members.len()
+    }
+}
+
+/// Group-SAIF configuration.
+#[derive(Debug, Clone)]
+pub struct GroupSaifConfig {
+    /// Block-CM epochs per outer iteration.
+    pub k_epochs: usize,
+    pub eps: f64,
+    /// Groups recruited per ADD.
+    pub add_batch: usize,
+    pub max_outer: usize,
+    pub stall_outer: usize,
+}
+
+impl Default for GroupSaifConfig {
+    fn default() -> Self {
+        GroupSaifConfig { k_epochs: 10, eps: 1e-8, add_batch: 8, max_outer: 100_000, stall_outer: 200 }
+    }
+}
+
+/// Result of a group-SAIF solve.
+#[derive(Debug, Clone)]
+pub struct GroupSaifResult {
+    /// Sparse solution over features.
+    pub beta: Vec<(usize, f64)>,
+    /// Indices of active groups at the solution.
+    pub active_groups: Vec<usize>,
+    pub gap: f64,
+    pub primal: f64,
+    pub max_active_groups: usize,
+    pub secs: f64,
+    pub outer_iters: usize,
+}
+
+/// Group-LASSO solver with SAIF-style incremental group screening
+/// (least squares; native engine).
+pub struct GroupSaif {
+    pub cfg: GroupSaifConfig,
+}
+
+impl GroupSaif {
+    pub fn new(cfg: GroupSaifConfig) -> Self {
+        GroupSaif { cfg }
+    }
+
+    /// λ_max for group LASSO: max_g ‖X_gᵀ f'(0)‖ / w_g.
+    pub fn lambda_max(prob: &Problem, groups: &Groups) -> f64 {
+        let d0 = prob.neg_deriv_at_zero();
+        (0..groups.n_groups())
+            .map(|g| group_norm(prob, &groups.members[g], &d0) / groups.weights[g])
+            .fold(0.0, f64::max)
+    }
+
+    /// Baseline: block CM over ALL groups, no screening (the "No Scr."
+    /// comparator for the group extension benchmark).
+    pub fn solve_no_screening(
+        &mut self,
+        prob: &Problem,
+        groups: &Groups,
+        lam: f64,
+    ) -> GroupSaifResult {
+        let saved = self.cfg.add_batch;
+        self.cfg.add_batch = groups.n_groups();
+        let res = self.solve_impl(prob, groups, lam, false);
+        self.cfg.add_batch = saved;
+        res
+    }
+
+    pub fn solve(&mut self, prob: &Problem, groups: &Groups, lam: f64) -> GroupSaifResult {
+        self.solve_impl(prob, groups, lam, true)
+    }
+
+    fn solve_impl(
+        &mut self,
+        prob: &Problem,
+        groups: &Groups,
+        lam: f64,
+        screening: bool,
+    ) -> GroupSaifResult {
+        assert_eq!(prob.loss, LossKind::Squared, "group-SAIF: LS only");
+        let sw = Stopwatch::start();
+        let n = prob.n();
+        let ng = groups.n_groups();
+        // block Lipschitz constants: Frobenius bound ≥ σ_max(X_g)
+        let l_g: Vec<f64> = (0..ng)
+            .map(|g| {
+                groups.members[g]
+                    .iter()
+                    .map(|&i| prob.col_nrm2[i])
+                    .sum::<f64>()
+                    .sqrt()
+                    .max(1e-12)
+            })
+            .collect();
+
+        // init: top groups by ‖X_gᵀ f'(0)‖/w_g
+        let d0 = prob.neg_deriv_at_zero();
+        let init_scores: Vec<f64> = (0..ng)
+            .map(|g| group_norm(prob, &groups.members[g], &d0) / groups.weights[g])
+            .collect();
+        let mut order: Vec<usize> = (0..ng).collect();
+        order.sort_by(|&a, &b| init_scores[b].partial_cmp(&init_scores[a]).unwrap());
+        let mut in_active = vec![false; ng];
+        let mut active: Vec<usize> = order
+            .iter()
+            .take(self.cfg.add_batch.min(ng))
+            .cloned()
+            .collect();
+        for &g in &active {
+            in_active[g] = true;
+        }
+        let mut beta = vec![0.0; prob.p()];
+        let mut resid = prob.y.clone();
+        let mut is_add = screening;
+        // δ radius-inflation schedule (same role as in feature-SAIF):
+        // shrink the ADD radius early so a loose ball cannot flood the
+        // active set with every group; driven to 1 before certifying.
+        let lam_max_est = init_scores.iter().cloned().fold(0.0, f64::max).max(1e-12);
+        let mut delta = (lam / lam_max_est).clamp(1e-6, 1.0);
+        let mut outer = 0;
+        let mut max_active_groups = active.len();
+        let mut best_gap = f64::INFINITY;
+        let mut stall = 0usize;
+        let (gap, primal);
+
+        loop {
+            outer += 1;
+            // --- K block-CM epochs over active groups ---
+            for _ in 0..self.cfg.k_epochs {
+                for &g in &active {
+                    block_update(prob, &groups.members[g], groups.weights[g], l_g[g], lam, &mut beta, &mut resid);
+                }
+            }
+            // --- duality gap: θ = τ r/λ, feasibility over active groups ---
+            let theta_hat: Vec<f64> = resid.iter().map(|r| r / lam).collect();
+            let mut mx: f64 = 1e-12;
+            for &g in &active {
+                let s = group_norm(prob, &groups.members[g], &theta_hat) / groups.weights[g];
+                mx = mx.max(s);
+            }
+            let tau_star = dot(&prob.y, &theta_hat) / (lam * dot(&theta_hat, &theta_hat)).max(1e-300);
+            let tau = tau_star.clamp(-1.0 / mx, 1.0 / mx);
+            let theta: Vec<f64> = theta_hat.iter().map(|t| tau * t).collect();
+            let pen: f64 = active
+                .iter()
+                .map(|&g| groups.weights[g] * group_beta_norm(&groups.members[g], &beta))
+                .sum();
+            let p_val = 0.5 * dot(&resid, &resid) + lam * pen;
+            let mut d_val = 0.0;
+            for j in 0..n {
+                let df = theta[j] - prob.y[j] / lam;
+                d_val += prob.y[j] * prob.y[j] - lam * lam * df * df;
+            }
+            d_val *= 0.5;
+            let g_val = (p_val - d_val).max(0.0);
+            let r_ball = gap_ball(&theta, g_val, lam, 1.0).radius;
+
+            // --- DEL groups (skipped in the no-screening baseline) ---
+            let mut kept = Vec::with_capacity(active.len());
+            if !screening {
+                kept = active.clone();
+                active = Vec::new();
+            }
+            for &g in &active {
+                let s = group_norm(prob, &groups.members[g], &theta);
+                if s + l_g[g] * r_ball < groups.weights[g] * (1.0 - super::solver::DEL_MARGIN) {
+                    in_active[g] = false;
+                    for &i in &groups.members[g] {
+                        if beta[i] != 0.0 {
+                            axpy(beta[i], prob.x.col(i), &mut resid);
+                            beta[i] = 0.0;
+                        }
+                    }
+                } else {
+                    kept.push(g);
+                }
+            }
+            active = kept;
+
+            if !is_add {
+                if g_val < best_gap * 0.999 {
+                    best_gap = g_val;
+                    stall = 0;
+                } else {
+                    stall += 1;
+                }
+                if g_val <= self.cfg.eps || outer >= self.cfg.max_outer || stall >= self.cfg.stall_outer {
+                    gap = g_val;
+                    primal = p_val;
+                    break;
+                }
+                continue;
+            }
+
+            // --- ADD stop test over remaining groups (δ-scaled) ---
+            let r_eff = delta * r_ball;
+            let mut violators: Vec<(f64, usize)> = Vec::new();
+            for g in 0..ng {
+                if in_active[g] {
+                    continue;
+                }
+                let s = group_norm(prob, &groups.members[g], &theta);
+                if s + l_g[g] * r_eff >= groups.weights[g] {
+                    violators.push((s / groups.weights[g], g));
+                }
+            }
+            if violators.is_empty() {
+                if delta < 1.0 {
+                    delta = (10.0 * delta).min(1.0);
+                } else {
+                    is_add = false;
+                    if g_val <= self.cfg.eps {
+                        gap = g_val;
+                        primal = p_val;
+                        break;
+                    }
+                }
+                if outer >= self.cfg.max_outer {
+                    gap = g_val;
+                    primal = p_val;
+                    break;
+                }
+                continue;
+            }
+            // --- ADD with the Algorithm-2 ambiguity throttle, lifted
+            // to groups: recruit a violating group only while its score
+            // LOWER bound dominates all but < h̃ other remaining groups'
+            // UPPER bounds; otherwise refine the ball first. Without
+            // this, a loose early ball recruits every group at once.
+            violators.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            let mut uppers: Vec<f64> = (0..ng)
+                .filter(|&g| !in_active[g])
+                .map(|g| {
+                    (group_norm(prob, &groups.members[g], &theta) + l_g[g] * r_eff)
+                        / groups.weights[g]
+                })
+                .collect();
+            uppers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let h_tilde = self.cfg.add_batch.max(1);
+            let mut added = 0usize;
+            for &(_, g) in violators.iter() {
+                if added >= self.cfg.add_batch {
+                    break;
+                }
+                let s = group_norm(prob, &groups.members[g], &theta);
+                let lower =
+                    ((s - l_g[g] * r_eff) / groups.weights[g]).abs();
+                let pos = uppers.partition_point(|&u| u < lower);
+                let v = (uppers.len() - pos).saturating_sub(1 + added);
+                if v < h_tilde {
+                    in_active[g] = true;
+                    active.push(g);
+                    added += 1;
+                } else {
+                    break;
+                }
+            }
+            max_active_groups = max_active_groups.max(active.len());
+            if outer >= self.cfg.max_outer {
+                gap = g_val;
+                primal = p_val;
+                break;
+            }
+        }
+
+        GroupSaifResult {
+            beta: (0..prob.p())
+                .filter(|&i| beta[i] != 0.0)
+                .map(|i| (i, beta[i]))
+                .collect(),
+            active_groups: active,
+            gap,
+            primal,
+            max_active_groups,
+            secs: sw.secs(),
+            outer_iters: outer,
+        }
+    }
+}
+
+/// ‖X_gᵀ v‖₂ for the member columns.
+fn group_norm(prob: &Problem, members: &[usize], v: &[f64]) -> f64 {
+    members
+        .iter()
+        .map(|&i| {
+            let c = dot(prob.x.col(i), v);
+            c * c
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+fn group_beta_norm(members: &[usize], beta: &[f64]) -> f64 {
+    members.iter().map(|&i| beta[i] * beta[i]).sum::<f64>().sqrt()
+}
+
+/// One majorized block update: z = β_g + X_gᵀr / L²,
+/// β_g ← (1 − λ w_g/(L²‖z‖))₊ · z  (with residual repair).
+fn block_update(
+    prob: &Problem,
+    members: &[usize],
+    w_g: f64,
+    l_g: f64,
+    lam: f64,
+    beta: &mut [f64],
+    resid: &mut [f64],
+) {
+    let l2 = l_g * l_g;
+    let mut z: Vec<f64> = Vec::with_capacity(members.len());
+    for &i in members {
+        z.push(beta[i] + dot(prob.x.col(i), resid) / l2);
+    }
+    let znorm = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let scale = if znorm > 1e-300 {
+        (1.0 - lam * w_g / (l2 * znorm)).max(0.0)
+    } else {
+        0.0
+    };
+    for (k, &i) in members.iter().enumerate() {
+        let bn = scale * z[k];
+        if bn != beta[i] {
+            axpy(beta[i] - bn, prob.x.col(i), resid);
+            beta[i] = bn;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::prop;
+
+    fn group_kkt_violation(prob: &Problem, groups: &Groups, beta: &[(usize, f64)], lam: f64) -> f64 {
+        let u = prob.margins_sparse(beta);
+        let fp: Vec<f64> = (0..prob.n())
+            .map(|j| prob.loss.deriv(u[j], prob.y[j]))
+            .collect();
+        let mut bmap = vec![0.0; prob.p()];
+        for &(i, b) in beta {
+            bmap[i] = b;
+        }
+        let mut worst: f64 = 0.0;
+        for (g, members) in groups.members.iter().enumerate() {
+            let gn = group_norm(prob, members, &fp);
+            let bnorm = group_beta_norm(members, &bmap);
+            if bnorm > 1e-10 {
+                // active group: X_gᵀ f' = −λ w_g β_g/‖β_g‖ ⇒ norm = λ w_g
+                worst = worst.max((gn - lam * groups.weights[g]).abs());
+            } else {
+                worst = worst.max((gn - lam * groups.weights[g]).max(0.0));
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn lambda_max_zeroes_everything() {
+        let prob = synth::synth_linear(40, 120, 301).problem();
+        let groups = Groups::contiguous(120, 5);
+        let lam_max = GroupSaif::lambda_max(&prob, &groups);
+        let mut gs = GroupSaif::new(Default::default());
+        let res = gs.solve(&prob, &groups, lam_max * 1.05);
+        assert!(res.beta.is_empty());
+    }
+
+    #[test]
+    fn converges_and_satisfies_group_kkt() {
+        prop::check("group kkt", 8, |rng| {
+            let p = 60 + rng.below(120);
+            let gsz = 2 + rng.below(6);
+            let prob = synth::synth_linear(40, p, rng.next_u64()).problem();
+            let groups = Groups::contiguous(p, gsz);
+            let lam_max = GroupSaif::lambda_max(&prob, &groups);
+            let lam = lam_max * (0.1 + 0.4 * rng.uniform());
+            let mut gs = GroupSaif::new(GroupSaifConfig { eps: 1e-9, ..Default::default() });
+            let res = gs.solve(&prob, &groups, lam);
+            if res.gap > 1e-9 {
+                return Err(format!("gap {}", res.gap));
+            }
+            let viol = group_kkt_violation(&prob, &groups, &res.beta, lam);
+            if viol > 1e-3 * lam.max(1.0) {
+                return Err(format!("group KKT violation {viol:.3e}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn active_groups_stay_sparse() {
+        // group-sparse ground truth: signal concentrated in 5 of 50
+        // groups — SAIF must keep the recruited-group count near that
+        use crate::linalg::Mat;
+        use crate::util::prng::Rng;
+        let (n, p, gsz) = (60, 400, 8);
+        let mut rng = Rng::new(305);
+        let x = Mat::from_fn(n, p, |_, _| rng.normal());
+        let mut beta_true = vec![0.0; p];
+        for g in [3usize, 11, 22, 37, 44] {
+            for i in g * gsz..(g + 1) * gsz {
+                beta_true[i] = rng.range(-1.0, 1.0);
+            }
+        }
+        let mut y = vec![0.0; n];
+        x.mul_vec(&beta_true, &mut y);
+        for v in y.iter_mut() {
+            *v += 0.1 * rng.normal();
+        }
+        let prob = Problem::new(x, y, LossKind::Squared);
+        let groups = Groups::contiguous(p, gsz);
+        let lam_max = GroupSaif::lambda_max(&prob, &groups);
+        let mut gs = GroupSaif::new(Default::default());
+        let res = gs.solve(&prob, &groups, lam_max * 0.2);
+        assert!(res.gap <= 1e-8);
+        assert!(
+            res.max_active_groups < groups.n_groups() / 2,
+            "touched {} of {}",
+            res.max_active_groups,
+            groups.n_groups()
+        );
+        // the 5 true groups are among the recruited ones
+        for g in [3usize, 11, 22, 37, 44] {
+            assert!(res.active_groups.contains(&g), "missed true group {g}");
+        }
+    }
+
+    #[test]
+    fn group_solution_zero_or_whole_groups() {
+        // group LASSO selects whole groups: within a selected group all
+        // (generic) coefficients are nonzero; unselected groups all zero
+        let prob = synth::synth_linear(60, 90, 307).problem();
+        let groups = Groups::contiguous(90, 3);
+        let lam_max = GroupSaif::lambda_max(&prob, &groups);
+        let mut gs = GroupSaif::new(GroupSaifConfig { eps: 1e-10, ..Default::default() });
+        let res = gs.solve(&prob, &groups, lam_max * 0.3);
+        let mut bmap = vec![0.0; 90];
+        for &(i, b) in &res.beta {
+            bmap[i] = b;
+        }
+        for m in &groups.members {
+            let nz = m.iter().filter(|&&i| bmap[i].abs() > 1e-12).count();
+            assert!(nz == 0 || nz == m.len(), "partial group: {nz}/{}", m.len());
+        }
+    }
+
+    #[test]
+    fn groups_from_assignment() {
+        let g = Groups::from_assignment(&[0, 0, 1, 2, 2, 2]);
+        assert_eq!(g.n_groups(), 3);
+        assert_eq!(g.members[2], vec![3, 4, 5]);
+        assert!((g.weights[2] - 3f64.sqrt()).abs() < 1e-12);
+    }
+}

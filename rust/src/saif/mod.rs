@@ -1,0 +1,35 @@
+//! SAIF — Safe Active Incremental Feature selection (Algorithms 1 & 2).
+//!
+//! The paper's contribution: solve LASSO by growing/shrinking a small
+//! active set instead of ever touching the full problem.
+//!
+//! Outer loop (Algorithm 1):
+//!   1. K CM epochs on the active sub-problem (through an `Engine`);
+//!   2. ball region B(θ_t, r_t) for the sub-problem's dual optimum —
+//!      the duality-gap ball (eq. 11), optionally tightened by the
+//!      Theorem-2 ball via the eq. (12) intersection;
+//!   3. radius inflation factor δ ∈ (0, 1] (×10 schedule to 1) that
+//!      keeps early, loose balls from recruiting junk;
+//!   4. DEL: drop active i with |x_iᵀθ_t| + ‖x_i‖ r < 1;
+//!   5. safe ADD stop: if max over the remaining set of
+//!      |x_iᵀθ_t| + ‖x_i‖ r < 1 at δ = 1, no remaining feature can be
+//!      active at the optimum (Theorem 1-c) — from then on only
+//!      accuracy pursuit runs;
+//!   6. otherwise ADD (Algorithm 2): recruit up to
+//!      h = ⌈c·log((md+mx)/λ)·log p⌉ best-scoring remaining features,
+//!      stopping early when a candidate is "ambiguous" (its score
+//!      lower bound is dominated by ≥ ⌈ζh⌉ other features).
+//!
+//! Safety: the returned β is the optimum of the FULL problem (up to
+//! the requested duality gap) — certified in tests by KKT checks and
+//! by comparison with the no-screening solver.
+
+pub mod group;
+pub mod multilevel;
+pub mod solver;
+pub mod trace;
+
+pub use group::{GroupSaif, GroupSaifConfig, GroupSaifResult, Groups};
+pub use multilevel::{MultiLevelSaif, MultiLevelConfig};
+pub use solver::{Saif, SaifConfig, SaifResult};
+pub use trace::{TraceEvent, TraceOp};

@@ -1,0 +1,672 @@
+//! The SAIF solver (Algorithm 1 + Algorithm 2).
+
+use crate::ball::{gap_ball, intersect, thm2_ball_ls, Ball};
+use crate::cm::{Engine, SubEval};
+use crate::model::{LossKind, Problem};
+use crate::util::Stopwatch;
+
+use super::trace::{TraceEvent, TraceOp};
+
+/// SAIF hyper-parameters (paper §2.2 defaults).
+#[derive(Debug, Clone)]
+pub struct SaifConfig {
+    /// ADD batch-size constant: h = ⌈c·log((md+mx)/λ)·log p⌉.
+    pub c: f64,
+    /// Violation-count relaxation: h̃ = ⌈ζ h⌉.
+    pub zeta: f64,
+    /// CM epochs between outer evaluations (K in Algorithm 1).
+    pub k_epochs: usize,
+    /// Stopping duality gap ε.
+    pub eps: f64,
+    /// Tighten the gap ball with the Theorem-2 ball via eq. (12)
+    /// (least squares only).
+    pub use_thm2_ball: bool,
+    /// Initial radius-inflation δ (default: λ/λ_max, clamped to ≤ 1).
+    pub delta0: Option<f64>,
+    /// Outer-iteration safety valve.
+    pub max_outer: usize,
+    /// Stall detector: in the accuracy-pursuit phase, stop if the gap
+    /// has not improved by ≥0.1% for this many outer iterations (the
+    /// f32 PJRT engine has a gap floor; returning the achieved gap is
+    /// more useful than spinning on an unreachable ε).
+    pub stall_outer: usize,
+    /// ADD-scan policy: rescan the remaining set only once the
+    /// sub-problem gap has shrunk to this fraction of its value at the
+    /// previous scan (≥ 1.0 ⇒ scan every iteration, the literal
+    /// Algorithm 1). Scanning is O(n·p); between scans the ball cannot
+    /// change enough to alter ADD decisions, so rescanning every outer
+    /// iteration just burns the scan cost — see EXPERIMENTS.md §Perf.
+    pub scan_gap_factor: f64,
+    /// Scale CM epochs per outer iteration as ~p/(2|A|) (capped), per
+    /// the K = Cp choice in the paper's own complexity proofs
+    /// (Theorems 4/5): balances inner-epoch cost against scan cost.
+    pub adaptive_k: bool,
+    /// Record a trace (Figures 3/4).
+    pub trace: bool,
+}
+
+impl Default for SaifConfig {
+    fn default() -> Self {
+        SaifConfig {
+            c: 1.0,
+            zeta: 1.0,
+            k_epochs: 10,
+            eps: 1e-6,
+            use_thm2_ball: true,
+            delta0: None,
+            max_outer: 200_000,
+            stall_outer: 200,
+            scan_gap_factor: 0.5,
+            adaptive_k: true,
+            trace: false,
+        }
+    }
+}
+
+/// Solve outcome with the statistics Theorem 5 reasons about.
+#[derive(Debug, Clone)]
+pub struct SaifResult {
+    /// Sparse solution in the full index space.
+    pub beta: Vec<(usize, f64)>,
+    /// Final duality gap (of the final sub-problem == full problem).
+    pub gap: f64,
+    /// Final primal objective.
+    pub primal: f64,
+    /// Final dual objective.
+    pub dual: f64,
+    /// Outer iterations used.
+    pub outer_iters: usize,
+    /// Total CM epochs executed.
+    pub epochs: usize,
+    /// p_A — total features ever recruited by ADD (Theorem 5).
+    pub p_add_total: usize,
+    /// p̄ — maximum active-set size reached (Theorem 5).
+    pub max_active: usize,
+    /// Final active-set size.
+    pub final_active: usize,
+    /// Wall-clock seconds.
+    pub secs: f64,
+    /// Trace events (empty unless cfg.trace).
+    pub trace: Vec<TraceEvent>,
+}
+
+/// The SAIF solver, generic over the numeric engine.
+pub struct Saif<'a> {
+    pub cfg: SaifConfig,
+    pub engine: &'a mut dyn Engine,
+}
+
+impl<'a> Saif<'a> {
+    pub fn new(engine: &'a mut dyn Engine, cfg: SaifConfig) -> Self {
+        Saif { cfg, engine }
+    }
+
+    /// Solve the LASSO problem at penalty `lam`. `warm` optionally
+    /// seeds the active set and coefficients (λ-path warm start, §5.3).
+    pub fn solve(&mut self, prob: &Problem, lam: f64) -> SaifResult {
+        self.solve_warm(prob, lam, None)
+    }
+
+    pub fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        warm: Option<&[(usize, f64)]>,
+    ) -> SaifResult {
+        let sw = Stopwatch::start();
+        let p = prob.p();
+        let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
+        // |x_iᵀ y| cached once: the Theorem-2 ball needs λ_max(t) =
+        // max over the ACTIVE set every outer iteration; recomputing
+        // the dots per iteration costs ~1 CM epoch each (§Perf).
+        let corr_y: Option<Vec<f64>> =
+            if self.cfg.use_thm2_ball && prob.loss == LossKind::Squared {
+                let mut v = vec![0.0; p];
+                prob.x.mul_t_vec(&prob.y, &mut v);
+                for x in v.iter_mut() {
+                    *x = x.abs();
+                }
+                Some(v)
+            } else {
+                None
+            };
+
+        // --- initial correlations, λ_max, ADD batch size h ---
+        let corrs = prob.init_corrs();
+        let lam_max = corrs.iter().cloned().fold(0.0, f64::max);
+        let mx = lam_max;
+        let md = median(&corrs);
+        let h = add_batch_size(self.cfg.c, md, mx, lam, p);
+        let h_tilde = ((self.cfg.zeta * h as f64).ceil() as usize).max(1);
+
+        // --- initial active set: top-h by |xᵀ f'(0)| (+ warm start) ---
+        let mut in_active = vec![false; p];
+        let mut active: Vec<usize> = Vec::new();
+        let mut beta: Vec<f64> = Vec::new();
+        if let Some(ws) = warm {
+            for &(i, b) in ws {
+                if !in_active[i] {
+                    in_active[i] = true;
+                    active.push(i);
+                    beta.push(b);
+                }
+            }
+        }
+        let init_k = h.min(p);
+        for &i in top_k_indices(&corrs, init_k).iter() {
+            if !in_active[i] {
+                in_active[i] = true;
+                active.push(i);
+                beta.push(0.0);
+            }
+        }
+
+        let mut delta = self
+            .cfg
+            .delta0
+            .unwrap_or(if lam_max > 0.0 { lam / lam_max } else { 1.0 })
+            .clamp(1e-6, 1.0);
+        let mut is_add = lam < lam_max; // λ ≥ λ_max ⇒ β* = 0, skip recruits
+        let mut trace: Vec<TraceEvent> = Vec::new();
+        let mut epochs = 0usize;
+        let mut p_add_total = active.len();
+        let mut max_active = active.len();
+        let mut outer = 0usize;
+        let mut best_gap = f64::INFINITY;
+        let mut stall = 0usize;
+        let mut gap_at_scan = f64::INFINITY;
+        let mut since_scan = 0usize;
+
+        let result_eval: SubEval;
+        loop {
+            outer += 1;
+            // 1. inner CM epochs + gap evaluation on the sub-problem.
+            // K is scaled with p/|A| (the paper's K = Cp): epochs on a
+            // small active block are cheap relative to the O(n·p)
+            // bookkeeping of an outer iteration.
+            let k_eff = if self.cfg.adaptive_k {
+                (p / (2 * active.len().max(1)))
+                    .clamp(self.cfg.k_epochs, 100)
+            } else {
+                self.cfg.k_epochs
+            };
+            let eval = self
+                .engine
+                .cm_eval(prob, &active, &mut beta, lam, k_eff);
+            epochs += k_eff;
+            if self.cfg.trace {
+                trace.push(TraceEvent {
+                    t_secs: sw.secs(),
+                    op: TraceOp::Eval,
+                    delta: 0,
+                    active: active.len(),
+                    dual: eval.dual,
+                    gap: eval.gap,
+                });
+            }
+
+            // 2. ball region (gap ball ∩ Theorem-2 ball). δ scales the
+            // radius for ADD decisions only: scaling DEL too (a literal
+            // reading of Algorithm 1) makes DEL fire on active features
+            // whose coefficients are still converging, zeroing their
+            // progress and thrashing with the subsequent ADD — see
+            // DESIGN.md §Deviations. DEL uses the full (safe) radius.
+            let ball = self.ball_region(prob, &active, &eval, lam, corr_y.as_deref());
+            let r_eff = delta * ball.radius;
+
+            // 3. DEL — screen the active set (unscaled radius: safe)
+            let deleted = del_op(
+                &mut active,
+                &mut beta,
+                &mut in_active,
+                &eval.active_scores,
+                &col_nrm,
+                &ball,
+                ball.radius,
+                prob,
+            );
+            if self.cfg.trace && deleted > 0 {
+                trace.push(TraceEvent {
+                    t_secs: sw.secs(),
+                    op: TraceOp::Del,
+                    delta: deleted,
+                    active: active.len(),
+                    dual: eval.dual,
+                    gap: eval.gap,
+                });
+            }
+
+            if !is_add {
+                // accuracy-pursuit phase (+ gap-floor stall detection)
+                if eval.gap < best_gap * 0.999 {
+                    best_gap = eval.gap;
+                    stall = 0;
+                } else {
+                    stall += 1;
+                }
+                if eval.gap <= self.cfg.eps
+                    || outer >= self.cfg.max_outer
+                    || stall >= self.cfg.stall_outer
+                {
+                    result_eval = eval;
+                    break;
+                }
+                continue;
+            }
+
+            // 4. remaining-set scan (the ADD hot spot: |Xᵀθ| over full
+            // p) — rescanned only once the gap has meaningfully shrunk
+            // (scan_gap_factor), or periodically as a stall fallback.
+            since_scan += 1;
+            let scan_due = eval.gap <= self.cfg.scan_gap_factor * gap_at_scan
+                || eval.gap <= self.cfg.eps
+                || since_scan >= 50;
+            if !scan_due {
+                if outer >= self.cfg.max_outer {
+                    result_eval = eval;
+                    break;
+                }
+                continue;
+            }
+            gap_at_scan = eval.gap;
+            since_scan = 0;
+            let all_scores = self.engine.scores(prob, &ball.center);
+            let mut stop_add = true;
+            for i in 0..p {
+                if !in_active[i] && all_scores[i] + col_nrm[i] * r_eff >= 1.0 {
+                    stop_add = false;
+                    break;
+                }
+            }
+            if stop_add {
+                if delta < 1.0 {
+                    // not yet safe: tighten δ toward 1 and re-verify
+                    delta = (10.0 * delta).min(1.0);
+                    if self.cfg.trace {
+                        trace.push(TraceEvent {
+                            t_secs: sw.secs(),
+                            op: TraceOp::DeltaUp,
+                            delta: 0,
+                            active: active.len(),
+                            dual: eval.dual,
+                            gap: eval.gap,
+                        });
+                    }
+                } else {
+                    // Theorem 1-c certificate: no remaining feature can
+                    // be active at the optimum — ADD phase over.
+                    is_add = false;
+                    if self.cfg.trace {
+                        trace.push(TraceEvent {
+                            t_secs: sw.secs(),
+                            op: TraceOp::SafeStop,
+                            delta: 0,
+                            active: active.len(),
+                            dual: eval.dual,
+                            gap: eval.gap,
+                        });
+                    }
+                    if eval.gap <= self.cfg.eps {
+                        result_eval = eval;
+                        break;
+                    }
+                }
+                if outer >= self.cfg.max_outer {
+                    result_eval = eval;
+                    break;
+                }
+                continue;
+            }
+
+            // 5. ADD — Algorithm 2
+            let added = add_op(
+                &mut active,
+                &mut beta,
+                &mut in_active,
+                &all_scores,
+                &col_nrm,
+                r_eff,
+                h,
+                h_tilde,
+            );
+            p_add_total += added;
+            max_active = max_active.max(active.len());
+            if self.cfg.trace && added > 0 {
+                trace.push(TraceEvent {
+                    t_secs: sw.secs(),
+                    op: TraceOp::Add,
+                    delta: added,
+                    active: active.len(),
+                    dual: eval.dual,
+                    gap: eval.gap,
+                });
+            }
+            if outer >= self.cfg.max_outer {
+                result_eval = eval;
+                break;
+            }
+        }
+
+        if self.cfg.trace {
+            trace.push(TraceEvent {
+                t_secs: sw.secs(),
+                op: TraceOp::Done,
+                delta: 0,
+                active: active.len(),
+                dual: result_eval.dual,
+                gap: result_eval.gap,
+            });
+        }
+        let beta_sparse: Vec<(usize, f64)> = active
+            .iter()
+            .zip(beta.iter())
+            .filter(|(_, &b)| b != 0.0)
+            .map(|(&i, &b)| (i, b))
+            .collect();
+        SaifResult {
+            beta: beta_sparse,
+            gap: result_eval.gap,
+            primal: result_eval.primal,
+            dual: result_eval.dual,
+            outer_iters: outer,
+            epochs,
+            p_add_total,
+            max_active,
+            final_active: active.len(),
+            secs: sw.secs(),
+            trace,
+        }
+    }
+
+    /// Gap ball, tightened by the Theorem-2 ball when configured (LS).
+    /// `corr_y` is the cached |Xᵀy| (computed once per solve).
+    fn ball_region(
+        &self,
+        prob: &Problem,
+        active: &[usize],
+        eval: &SubEval,
+        lam: f64,
+        corr_y: Option<&[f64]>,
+    ) -> Ball {
+        let g = gap_ball(&eval.theta, eval.gap, lam, prob.loss.alpha());
+        if let Some(cy) = corr_y {
+            // λ_max(t) over the ACTIVE set (Theorem 2 with λ₀ = λ_max(t))
+            let lam0 = active.iter().map(|&i| cy[i]).fold(0.0, f64::max);
+            if let Some(t2) = thm2_ball_ls(&prob.y, lam, lam0) {
+                return intersect(&g, &t2);
+            }
+        }
+        g
+    }
+}
+
+/// h = ⌈c·log((md+mx)/λ)·log p⌉ (clamped to ≥ 1).
+pub fn add_batch_size(c: f64, md: f64, mx: f64, lam: f64, p: usize) -> usize {
+    let ratio = ((md + mx) / lam).max(1.0001);
+    let h = (c * ratio.ln() * (p.max(2) as f64).ln()).ceil();
+    (h as usize).max(1)
+}
+
+fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+/// Indices of the k largest values.
+fn top_k_indices(xs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Numerical slack on the screening boundary. In exact arithmetic the
+/// DEL rule is `score + ‖x‖r < 1`, and truly-active features sit at
+/// score == 1 exactly (KKT); in floating point they land at 1 − O(ulp)
+/// and a strict test would delete them at convergence, silently
+/// dropping their coefficients. The margin keeps the rule safe for
+/// both the f64 native engine and the f32 PJRT artifacts.
+pub const DEL_MARGIN: f64 = 1e-6;
+
+/// DEL operation: remove active features certified inactive by the
+/// ball. A removed feature's coefficient is zeroed (it is zero at the
+/// sub-problem optimum by eq. 5; zeroing keeps the iterate consistent).
+#[allow(clippy::too_many_arguments)]
+fn del_op(
+    active: &mut Vec<usize>,
+    beta: &mut Vec<f64>,
+    in_active: &mut [bool],
+    active_scores: &[f64],
+    col_nrm: &[f64],
+    _ball: &Ball,
+    r_eff: f64,
+    _prob: &Problem,
+) -> usize {
+    let mut kept_active = Vec::with_capacity(active.len());
+    let mut kept_beta = Vec::with_capacity(beta.len());
+    let mut deleted = 0usize;
+    for (a, &i) in active.iter().enumerate() {
+        if active_scores[a] + col_nrm[i] * r_eff < 1.0 - DEL_MARGIN {
+            in_active[i] = false;
+            deleted += 1;
+        } else {
+            kept_active.push(i);
+            kept_beta.push(beta[a]);
+        }
+    }
+    if deleted > 0 {
+        *active = kept_active;
+        *beta = kept_beta;
+    }
+    deleted
+}
+
+/// ADD operation (Algorithm 2): recruit up to `h` remaining features in
+/// descending score order; stop early when the candidate's score lower
+/// bound |s_i − ‖x_i‖r| is dominated by ≥ h̃ other remaining features'
+/// upper bounds (the V_i test).
+#[allow(clippy::too_many_arguments)]
+fn add_op(
+    active: &mut Vec<usize>,
+    beta: &mut Vec<f64>,
+    in_active: &mut [bool],
+    all_scores: &[f64],
+    col_nrm: &[f64],
+    r_eff: f64,
+    h: usize,
+    h_tilde: usize,
+) -> usize {
+    let p = all_scores.len();
+    // remaining features sorted by score desc; uppers sorted asc for
+    // binary-search counting of V_i
+    let mut remaining: Vec<usize> = (0..p).filter(|&i| !in_active[i]).collect();
+    if remaining.is_empty() {
+        return 0;
+    }
+    remaining.sort_by(|&a, &b| all_scores[b].partial_cmp(&all_scores[a]).unwrap());
+    let mut uppers: Vec<f64> = remaining
+        .iter()
+        .map(|&i| all_scores[i] + col_nrm[i] * r_eff)
+        .collect();
+    uppers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut added_uppers: Vec<f64> = Vec::new();
+    let mut added = 0usize;
+    for &i in remaining.iter().take(h) {
+        let lower = (all_scores[i] - col_nrm[i] * r_eff).abs();
+        // |V_i| = #remaining ĩ≠i with upper_ĩ ≥ lower_i
+        let pos = uppers.partition_point(|&u| u < lower);
+        let mut v_i = uppers.len() - pos;
+        // exclude self
+        if all_scores[i] + col_nrm[i] * r_eff >= lower {
+            v_i = v_i.saturating_sub(1);
+        }
+        // exclude features added earlier in this same ADD op
+        v_i -= added_uppers.iter().filter(|&&u| u >= lower).count();
+        if v_i < h_tilde {
+            in_active[i] = true;
+            active.push(i);
+            beta.push(0.0);
+            added_uppers.push(all_scores[i] + col_nrm[i] * r_eff);
+            added += 1;
+        } else {
+            break; // candidate ambiguous — refine the ball first
+        }
+    }
+    added
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cm::NativeEngine;
+    use crate::data::synth;
+
+    fn solve_no_screen(prob: &Problem, lam: f64, eps: f64) -> (Vec<f64>, f64) {
+        let all: Vec<usize> = (0..prob.p()).collect();
+        let mut beta = vec![0.0; prob.p()];
+        let mut eng = NativeEngine::new();
+        let (e, _) =
+            crate::cm::solve_subproblem(&mut eng, prob, &all, &mut beta, lam, eps, 10, 400_000);
+        (beta, e.gap)
+    }
+
+    #[test]
+    fn saif_matches_no_screening_solution() {
+        let ds = synth::synth_linear(50, 300, 7);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        for frac in [0.5, 0.1, 0.02] {
+            let lam = lam_max * frac;
+            let mut eng = NativeEngine::new();
+            let mut saif = Saif::new(&mut eng, SaifConfig { eps: 1e-9, ..Default::default() });
+            let res = saif.solve(&prob, lam);
+            assert!(res.gap <= 1e-9, "gap {}", res.gap);
+            // KKT certificate on the FULL problem
+            let viol = prob.kkt_violation(&res.beta, lam);
+            assert!(viol < 1e-3 * lam.max(1.0), "λ={lam}: kkt viol {viol}");
+            // same support + values as exhaustive solve
+            let (full, _) = solve_no_screen(&prob, lam, 1e-9);
+            for (i, b) in res.beta.iter() {
+                assert!(
+                    (full[*i] - b).abs() < 1e-4 * b.abs().max(1.0),
+                    "β[{i}]: saif {b} vs full {}",
+                    full[*i]
+                );
+            }
+            let full_support: Vec<usize> = (0..prob.p()).filter(|&i| full[i].abs() > 1e-7).collect();
+            let saif_support: Vec<usize> =
+                res.beta.iter().filter(|(_, b)| b.abs() > 1e-7).map(|&(i, _)| i).collect();
+            assert_eq!(full_support, {
+                let mut s = saif_support.clone();
+                s.sort();
+                s
+            });
+        }
+    }
+
+    #[test]
+    fn saif_active_set_stays_small() {
+        let ds = synth::synth_linear(60, 1500, 9);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.3;
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(&mut eng, SaifConfig::default());
+        let res = saif.solve(&prob, lam);
+        assert!(res.gap <= 1e-6);
+        // the whole point: never touched more than a fraction of p
+        assert!(
+            res.max_active < prob.p() / 4,
+            "max_active {} vs p {}",
+            res.max_active,
+            prob.p()
+        );
+    }
+
+    #[test]
+    fn saif_lambda_geq_lambda_max_returns_zero() {
+        let ds = synth::synth_linear(30, 100, 3);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 1.1;
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(&mut eng, SaifConfig::default());
+        let res = saif.solve(&prob, lam);
+        assert!(res.beta.is_empty());
+        assert!(res.gap <= 1e-6);
+    }
+
+    #[test]
+    fn saif_logistic_converges_and_certifies() {
+        let ds = synth::gisette_like(60, 200, 5);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.2;
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(
+            &mut eng,
+            SaifConfig { eps: 1e-7, ..Default::default() },
+        );
+        let res = saif.solve(&prob, lam);
+        assert!(res.gap <= 1e-7, "gap {}", res.gap);
+        let viol = prob.kkt_violation(&res.beta, lam);
+        assert!(viol < 1e-2 * lam.max(1.0), "kkt viol {viol}");
+    }
+
+    #[test]
+    fn saif_warm_start_reduces_epochs() {
+        let ds = synth::synth_linear(50, 500, 11);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(&mut eng, SaifConfig { eps: 1e-8, ..Default::default() });
+        let hi = saif.solve(&prob, lam_max * 0.2);
+        let cold = saif.solve(&prob, lam_max * 0.15);
+        let warm = saif.solve_warm(&prob, lam_max * 0.15, Some(&hi.beta));
+        assert!(warm.gap <= 1e-8);
+        assert!(
+            warm.epochs <= cold.epochs,
+            "warm {} vs cold {}",
+            warm.epochs,
+            cold.epochs
+        );
+    }
+
+    #[test]
+    fn trace_records_lifecycle() {
+        let ds = synth::synth_linear(40, 400, 13);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.1;
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(
+            &mut eng,
+            SaifConfig { trace: true, ..Default::default() },
+        );
+        let res = saif.solve(&prob, lam);
+        assert!(!res.trace.is_empty());
+        assert!(res.trace.iter().any(|e| e.op == TraceOp::SafeStop));
+        assert_eq!(res.trace.last().unwrap().op, TraceOp::Done);
+        // Theorem 1-a/3-b: the sub-problem dual OPTIMUM decreases as
+        // features are added; our evaluated D(θ_t) converges to it, so
+        // the final dual must sit at or below the first one (Fig 3b/d).
+        let duals: Vec<f64> = res
+            .trace
+            .iter()
+            .filter(|e| e.op == TraceOp::Eval)
+            .map(|e| e.dual)
+            .collect();
+        let first = duals.first().unwrap();
+        let last = duals.last().unwrap();
+        assert!(last <= &(first + 1e-6 * first.abs().max(1.0)));
+    }
+
+    #[test]
+    fn add_batch_size_formula() {
+        // grows with p, shrinks with λ
+        let h_small_lam = add_batch_size(1.0, 10.0, 100.0, 1.0, 5000);
+        let h_big_lam = add_batch_size(1.0, 10.0, 100.0, 50.0, 5000);
+        assert!(h_small_lam > h_big_lam);
+        assert!(add_batch_size(1.0, 0.0, 0.0, 100.0, 10) >= 1);
+    }
+}

@@ -1,0 +1,165 @@
+//! Sequential (DPP-style) safe screening for λ-paths (Wang et al.
+//! 2014a). Given a descending λ sequence, each problem is screened
+//! with a ball around the *previous* λ's dual solution:
+//!
+//!   ‖θ*(λ) − θ*(λ₀)‖ ≤ ‖y‖ · |1/λ − 1/λ₀|      (least squares)
+//!
+//! so feature i is discarded at λ when
+//!   |x_iᵀθ*(λ₀)| + ‖x_i‖·‖y‖·|1/λ − 1/λ₀| < 1.
+//!
+//! This is the baseline of Figure 6: efficient when the λ grid is
+//! dense (balls are tight), expensive when it is sparse — and it
+//! inherits solver error in θ*(λ₀), the safety caveat the paper
+//! (§1.1) raises about all sequential rules.
+
+use crate::cm::{solve_subproblem, Engine};
+use crate::linalg::{dot, nrm2_sq};
+use crate::model::{LossKind, Problem};
+use crate::util::Stopwatch;
+
+/// Per-λ outcome on the path.
+#[derive(Debug, Clone)]
+pub struct DppStep {
+    pub lam: f64,
+    pub beta: Vec<(usize, f64)>,
+    pub gap: f64,
+    /// Features surviving the screen (the reduced problem size).
+    pub kept: usize,
+    pub epochs: usize,
+}
+
+/// DPP sequential path solver (least squares only — the DPP projection
+/// bound is specific to the quadratic loss).
+pub struct DppPath<'a> {
+    pub engine: &'a mut dyn Engine,
+    pub eps: f64,
+    pub k_epochs: usize,
+}
+
+impl<'a> DppPath<'a> {
+    pub fn new(engine: &'a mut dyn Engine, eps: f64) -> Self {
+        DppPath { engine, eps, k_epochs: 10 }
+    }
+
+    /// Solve the path at the given descending λ values. Returns the
+    /// per-λ results and total seconds.
+    pub fn solve_path(&mut self, prob: &Problem, lams: &[f64]) -> (Vec<DppStep>, f64) {
+        assert_eq!(prob.loss, LossKind::Squared, "DPP bound is LS-specific");
+        let sw = Stopwatch::start();
+        let p = prob.p();
+        let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
+        let y_nrm = nrm2_sq(&prob.y).sqrt();
+        let lam_max = prob.lambda_max();
+
+        // θ*(λ_max) = y / λ_max exactly
+        let mut theta_prev: Vec<f64> = prob.y.iter().map(|v| v / lam_max).collect();
+        let mut lam_prev = lam_max;
+        let mut beta_full = vec![0.0; p];
+        let mut steps = Vec::with_capacity(lams.len());
+
+        for &lam in lams {
+            let lam = lam.min(lam_max);
+            // --- screen with the DPP ball around θ*(λ_prev) ---
+            let r = y_nrm * (1.0 / lam - 1.0 / lam_prev).abs();
+            let mut kept: Vec<usize> = Vec::new();
+            for i in 0..p {
+                let c = dot(prob.x.col(i), &theta_prev).abs();
+                if c + col_nrm[i] * r >= 1.0 || beta_full[i] != 0.0 {
+                    kept.push(i);
+                }
+            }
+            // --- solve the reduced problem (warm start from prev β) ---
+            let mut beta: Vec<f64> = kept.iter().map(|&i| beta_full[i]).collect();
+            let (eval, epochs) = solve_subproblem(
+                self.engine,
+                prob,
+                &kept,
+                &mut beta,
+                lam,
+                self.eps,
+                self.k_epochs,
+                500_000,
+            );
+            // update state for the next λ
+            beta_full.fill(0.0);
+            for (a, &i) in kept.iter().enumerate() {
+                beta_full[i] = beta[a];
+            }
+            // exact-ish dual at λ: θ = (y − Xβ)/λ, rescaled feasible
+            let u = prob.margins_sparse(
+                &kept.iter().zip(beta.iter()).map(|(&i, &b)| (i, b)).collect::<Vec<_>>(),
+            );
+            let theta_hat = prob.theta_hat(&u, lam);
+            let mx = (0..p)
+                .map(|i| dot(prob.x.col(i), &theta_hat).abs())
+                .fold(0.0, f64::max);
+            let dp = prob.project_dual(&theta_hat, mx, lam);
+            theta_prev = dp.theta;
+            lam_prev = lam;
+            steps.push(DppStep {
+                lam,
+                beta: kept
+                    .iter()
+                    .zip(beta.iter())
+                    .filter(|(_, &b)| b != 0.0)
+                    .map(|(&i, &b)| (i, b))
+                    .collect(),
+                gap: eval.gap,
+                kept: kept.len(),
+                epochs,
+            });
+        }
+        (steps, sw.secs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cm::NativeEngine;
+    use crate::data::synth;
+
+    #[test]
+    fn path_solutions_satisfy_kkt() {
+        let ds = synth::synth_linear(40, 200, 31);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let lams: Vec<f64> = (1..=5).map(|k| lam_max * (0.8f64).powi(k)).collect();
+        let mut eng = NativeEngine::new();
+        let mut dpp = DppPath::new(&mut eng, 1e-9);
+        let (steps, _secs) = dpp.solve_path(&prob, &lams);
+        assert_eq!(steps.len(), 5);
+        for s in &steps {
+            assert!(s.gap <= 1e-9);
+            assert!(
+                prob.kkt_violation(&s.beta, s.lam) < 1e-3 * s.lam.max(1.0),
+                "λ={}",
+                s.lam
+            );
+        }
+    }
+
+    #[test]
+    fn dense_grid_screens_harder_than_sparse() {
+        let ds = synth::synth_linear(40, 400, 33);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let target = lam_max * 0.05;
+        // sparse grid: jump straight to the target
+        let mut eng = NativeEngine::new();
+        let (sparse_steps, _) = DppPath::new(&mut eng, 1e-6).solve_path(&prob, &[target]);
+        // dense grid: geometric path down to the target
+        let lams: Vec<f64> = (1..=20)
+            .map(|k| lam_max * (target / lam_max).powf(k as f64 / 20.0))
+            .collect();
+        let mut eng2 = NativeEngine::new();
+        let (dense_steps, _) = DppPath::new(&mut eng2, 1e-6).solve_path(&prob, &lams);
+        // at the shared target λ the dense path solved a smaller problem
+        let sparse_kept = sparse_steps.last().unwrap().kept;
+        let dense_kept = dense_steps.last().unwrap().kept;
+        assert!(
+            dense_kept <= sparse_kept,
+            "dense {dense_kept} vs sparse {sparse_kept}"
+        );
+    }
+}

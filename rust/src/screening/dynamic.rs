@@ -1,0 +1,233 @@
+//! Gap-safe dynamic screening (Ndiaye et al. 2015) — the paper's main
+//! safe baseline. Starts from the full feature set, interleaves K CM
+//! epochs with duality-gap-ball screening (the same rule as SAIF's
+//! DEL), never adds features back. Complexity analyzed in Theorem 4:
+//! the cost is dominated by the epochs needed on the full set before
+//! the gap is small enough to have screening power.
+
+use crate::ball::gap_ball;
+use crate::cm::Engine;
+use crate::model::Problem;
+use crate::saif::{TraceEvent, TraceOp};
+use crate::util::Stopwatch;
+
+/// Dynamic-screening configuration.
+#[derive(Debug, Clone)]
+pub struct DynScreenConfig {
+    /// CM epochs between screenings (K).
+    pub k_epochs: usize,
+    /// Stopping duality gap ε.
+    pub eps: f64,
+    pub max_outer: usize,
+    /// Stall detector (gap floor of the f32 engine — see SaifConfig).
+    pub stall_outer: usize,
+    pub trace: bool,
+}
+
+impl Default for DynScreenConfig {
+    fn default() -> Self {
+        DynScreenConfig {
+            k_epochs: 10,
+            eps: 1e-6,
+            max_outer: 200_000,
+            stall_outer: 200,
+            trace: false,
+        }
+    }
+}
+
+/// Result of a dynamic-screening solve.
+#[derive(Debug, Clone)]
+pub struct DynScreenResult {
+    pub beta: Vec<(usize, f64)>,
+    pub gap: f64,
+    pub primal: f64,
+    pub dual: f64,
+    pub epochs: usize,
+    /// Feature-set size after each screening pass (p_t, Figure 4).
+    pub sizes: Vec<usize>,
+    pub secs: f64,
+    pub trace: Vec<TraceEvent>,
+}
+
+/// Dynamic screening solver.
+pub struct DynScreen<'a> {
+    pub cfg: DynScreenConfig,
+    pub engine: &'a mut dyn Engine,
+}
+
+impl<'a> DynScreen<'a> {
+    pub fn new(engine: &'a mut dyn Engine, cfg: DynScreenConfig) -> Self {
+        DynScreen { cfg, engine }
+    }
+
+    pub fn solve(&mut self, prob: &Problem, lam: f64) -> DynScreenResult {
+        let sw = Stopwatch::start();
+        let p = prob.p();
+        let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
+        let mut active: Vec<usize> = (0..p).collect();
+        let mut beta = vec![0.0; p];
+        let mut epochs = 0usize;
+        let mut sizes = vec![p];
+        let mut trace = Vec::new();
+        let alpha = prob.loss.alpha();
+        let mut best_gap = f64::INFINITY;
+        let mut stall = 0usize;
+        let (gap, primal, dual, final_eval);
+        loop {
+            let eval = self
+                .engine
+                .cm_eval(prob, &active, &mut beta, lam, self.cfg.k_epochs);
+            epochs += self.cfg.k_epochs;
+            if self.cfg.trace {
+                trace.push(TraceEvent {
+                    t_secs: sw.secs(),
+                    op: TraceOp::Eval,
+                    delta: 0,
+                    active: active.len(),
+                    dual: eval.dual,
+                    gap: eval.gap,
+                });
+            }
+            if eval.gap < best_gap * 0.999 {
+                best_gap = eval.gap;
+                stall = 0;
+            } else {
+                stall += 1;
+            }
+            let done = eval.gap <= self.cfg.eps
+                || epochs >= self.cfg.max_outer
+                || stall >= self.cfg.stall_outer;
+            if !done {
+                // gap-ball screening (eq. 5 + 11)
+                let r = gap_ball(&eval.theta, eval.gap, lam, alpha).radius;
+                let mut kept = Vec::with_capacity(active.len());
+                let mut kept_beta = Vec::with_capacity(active.len());
+                let mut deleted = 0usize;
+                for (a, &i) in active.iter().enumerate() {
+                    if eval.active_scores[a] + col_nrm[i] * r
+                        < 1.0 - crate::saif::solver::DEL_MARGIN
+                    {
+                        deleted += 1;
+                    } else {
+                        kept.push(i);
+                        kept_beta.push(beta[a]);
+                    }
+                }
+                if deleted > 0 {
+                    active = kept;
+                    beta = kept_beta;
+                    if self.cfg.trace {
+                        trace.push(TraceEvent {
+                            t_secs: sw.secs(),
+                            op: TraceOp::Del,
+                            delta: deleted,
+                            active: active.len(),
+                            dual: eval.dual,
+                            gap: eval.gap,
+                        });
+                    }
+                }
+                sizes.push(active.len());
+            }
+            if done {
+                gap = eval.gap;
+                primal = eval.primal;
+                dual = eval.dual;
+                final_eval = eval;
+                break;
+            }
+        }
+        let _ = final_eval;
+        if self.cfg.trace {
+            trace.push(TraceEvent {
+                t_secs: sw.secs(),
+                op: TraceOp::Done,
+                delta: 0,
+                active: active.len(),
+                dual,
+                gap,
+            });
+        }
+        let beta_sparse: Vec<(usize, f64)> = active
+            .iter()
+            .zip(beta.iter())
+            .filter(|(_, &b)| b != 0.0)
+            .map(|(&i, &b)| (i, b))
+            .collect();
+        DynScreenResult {
+            beta: beta_sparse,
+            gap,
+            primal,
+            dual,
+            epochs,
+            sizes,
+            secs: sw.secs(),
+            trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cm::NativeEngine;
+    use crate::data::synth;
+
+    #[test]
+    fn matches_saif_solution() {
+        let ds = synth::synth_linear(40, 250, 21);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.1;
+        let mut eng = NativeEngine::new();
+        let mut dsn = DynScreen::new(
+            &mut eng,
+            DynScreenConfig { eps: 1e-9, ..Default::default() },
+        );
+        let res = dsn.solve(&prob, lam);
+        assert!(res.gap <= 1e-9);
+        assert!(prob.kkt_violation(&res.beta, lam) < 1e-3 * lam.max(1.0));
+
+        let mut eng2 = NativeEngine::new();
+        let mut saif = crate::saif::Saif::new(
+            &mut eng2,
+            crate::saif::SaifConfig { eps: 1e-9, ..Default::default() },
+        );
+        let sres = saif.solve(&prob, lam);
+        let mut a: Vec<usize> = res.beta.iter().map(|&(i, _)| i).collect();
+        let mut b: Vec<usize> = sres.beta.iter().map(|&(i, _)| i).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "supports differ");
+    }
+
+    #[test]
+    fn screens_most_features_eventually() {
+        let ds = synth::synth_linear(40, 600, 23);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.3;
+        let mut eng = NativeEngine::new();
+        let mut dsn = DynScreen::new(&mut eng, DynScreenConfig::default());
+        let res = dsn.solve(&prob, lam);
+        // the *final* feature-set size must be far below p
+        assert!(*res.sizes.last().unwrap() < prob.p() / 4);
+        // sizes never grow (dynamic screening never re-adds)
+        for w in res.sizes.windows(2) {
+            assert!(w[1] <= w[0]);
+        }
+    }
+
+    #[test]
+    fn logistic_solve_converges() {
+        let ds = synth::gisette_like(50, 120, 25);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.3;
+        let mut eng = NativeEngine::new();
+        let mut dsn = DynScreen::new(
+            &mut eng,
+            DynScreenConfig { eps: 1e-7, ..Default::default() },
+        );
+        let res = dsn.solve(&prob, lam);
+        assert!(res.gap <= 1e-7);
+    }
+}

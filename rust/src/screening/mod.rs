@@ -1,0 +1,17 @@
+//! Screening baselines the paper compares against:
+//!
+//! * [`dynamic`] — gap-safe dynamic screening (Ndiaye et al. 2015,
+//!   Fercoq et al. 2015): starts from the FULL feature set, screens
+//!   with the duality-gap ball during optimization.
+//! * [`dpp`] — sequential (DPP-style) screening for λ-paths: screens
+//!   each λ with a ball around the previous λ's exact dual solution.
+//! * [`strong`] — the (unsafe) sequential strong rule of Tibshirani
+//!   et al. 2012, used inside the homotopy baseline.
+
+pub mod dpp;
+pub mod dynamic;
+pub mod strong;
+
+pub use dpp::DppPath;
+pub use dynamic::{DynScreen, DynScreenResult};
+pub use strong::strong_rule_keep;

@@ -1,0 +1,62 @@
+//! The sequential strong rule (Tibshirani et al. 2012): keep feature i
+//! at λ when |x_iᵀ f'(u(λ_prev))| ≥ 2λ − λ_prev. HEURISTIC, not safe —
+//! it assumes the correlations are non-expansive in λ, which can fail;
+//! this is exactly why the homotopy baseline built on it misses active
+//! features (Table 1) while SAIF cannot.
+
+use crate::linalg::dot;
+use crate::model::Problem;
+
+/// Indices surviving the sequential strong rule at `lam`, given the
+/// margins `u_prev` of the solution at `lam_prev` (use u = 0 and
+/// lam_prev = λ_max for the first path point).
+pub fn strong_rule_keep(prob: &Problem, u_prev: &[f64], lam: f64, lam_prev: f64) -> Vec<usize> {
+    let thresh = 2.0 * lam - lam_prev;
+    let fprime: Vec<f64> = (0..prob.n())
+        .map(|j| prob.loss.deriv(u_prev[j], prob.y[j]))
+        .collect();
+    (0..prob.p())
+        .filter(|&i| dot(prob.x.col(i), &fprime).abs() >= thresh)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn keeps_everything_when_threshold_nonpositive() {
+        let ds = synth::synth_linear(20, 30, 41);
+        let prob = ds.problem();
+        let u = vec![0.0; prob.n()];
+        // 2λ − λ_prev ≤ 0 keeps all features
+        let kept = strong_rule_keep(&prob, &u, 1.0, 3.0);
+        assert_eq!(kept.len(), prob.p());
+    }
+
+    #[test]
+    fn discards_aggressively_near_lambda_max() {
+        let ds = synth::synth_linear(30, 200, 43);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let u = vec![0.0; prob.n()];
+        let kept = strong_rule_keep(&prob, &u, lam_max * 0.95, lam_max);
+        assert!(kept.len() < prob.p() / 2, "kept {}", kept.len());
+    }
+
+    #[test]
+    fn keeps_the_argmax_feature() {
+        let ds = synth::synth_linear(30, 100, 45);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let u = vec![0.0; prob.n()];
+        let kept = strong_rule_keep(&prob, &u, lam_max * 0.999, lam_max);
+        // the feature achieving λ_max survives any λ < λ_max screen
+        let corrs = prob.init_corrs();
+        let argmax = (0..prob.p())
+            .max_by(|&a, &b| corrs[a].partial_cmp(&corrs[b]).unwrap())
+            .unwrap();
+        assert!(kept.contains(&argmax));
+    }
+}

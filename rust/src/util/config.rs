@@ -1,0 +1,125 @@
+//! Minimal key=value config files with `[section]` headers (an INI/TOML
+//! subset) plus `key=value` CLI overrides. Stands in for the absent
+//! `serde`/`toml` crates (DESIGN.md §4).
+//!
+//! ```text
+//! [saif]
+//! c = 1.0
+//! zeta = 1.0
+//! engine = native
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed configuration: `section.key -> value` (top-level keys have no dot).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config::default()
+    }
+
+    /// Parse INI-subset text. Later keys win. `#` and `;` start comments.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: bad section header", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key=value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            cfg.map.insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    /// Apply a `section.key=value` override (from the CLI).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_overrides() {
+        let cfg = Config::parse(
+            "top = 1\n[saif]\nc = 2.5  # comment\nengine = \"pjrt\"\n[cm]\nk=10\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_f64("top", 0.0), 1.0);
+        assert_eq!(cfg.get_f64("saif.c", 0.0), 2.5);
+        assert_eq!(cfg.get_str("saif.engine", ""), "pjrt");
+        assert_eq!(cfg.get_usize("cm.k", 0), 10);
+        let mut cfg = cfg;
+        cfg.set("saif.c", "9");
+        assert_eq!(cfg.get_f64("saif.c", 0.0), 9.0);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let cfg = Config::new();
+        assert_eq!(cfg.get_f64("nope", 3.5), 3.5);
+        assert!(cfg.get_bool("nope", true));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("[unclosed\n").is_err());
+        assert!(Config::parse("no equals here\n").is_err());
+    }
+}

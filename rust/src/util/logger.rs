@@ -1,0 +1,98 @@
+//! Tiny leveled logger controlled by the `SAIF_LOG` environment
+//! variable (`error|warn|info|debug|trace`, default `warn`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static INIT: Once = Once::new();
+
+fn init() {
+    INIT.call_once(|| {
+        let lvl = match std::env::var("SAIF_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("info") => Level::Info,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Warn,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+}
+
+pub fn enabled(level: Level) -> bool {
+    init();
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {module}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        init();
+        // default is warn: error and warn enabled, debug not (unless env set)
+        if std::env::var("SAIF_LOG").is_err() {
+            assert!(enabled(Level::Error));
+            assert!(enabled(Level::Warn));
+            assert!(!enabled(Level::Trace));
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared substrates: PRNG, timing, JSON, config, logging and the mini
+//! property-test runner. Everything here is dependency-free (the
+//! vendored crate registry is tiny — see DESIGN.md §4).
+
+pub mod config;
+pub mod json;
+pub mod logger;
+pub mod prng;
+pub mod prop;
+pub mod timer;
+
+pub use config::Config;
+pub use json::Json;
+pub use prng::Rng;
+pub use timer::{bench_secs, timed, Stopwatch};

@@ -1,0 +1,103 @@
+//! Mini property-testing runner (the vendored registry has no
+//! `proptest`/`quickcheck` — DESIGN.md §4). Runs a property over many
+//! seeded random cases; on failure it reports the seed and case index
+//! so the case can be replayed deterministically with
+//! `SAIF_PROP_SEED=<seed> SAIF_PROP_CASE=<i>`.
+
+use super::prng::Rng;
+
+/// Number of cases per property (override with SAIF_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("SAIF_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+}
+
+/// Run `prop` over `cases` seeded rngs. Panics with a replay hint on
+/// the first failing case. `prop` returns `Err(msg)` to fail softly or
+/// may panic itself (both are reported).
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let base_seed: u64 = std::env::var("SAIF_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let only_case: Option<usize> = std::env::var("SAIF_PROP_CASE")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    for case in 0..cases {
+        if let Some(c) = only_case {
+            if case != c {
+                continue;
+            }
+        }
+        let mut rng = Rng::new(base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}: {msg}\n\
+                 replay: SAIF_PROP_SEED={base_seed} SAIF_PROP_CASE={case}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are close (absolute + relative tolerance).
+pub fn assert_close(a: f64, b: f64, atol: f64, rtol: f64, what: &str) -> Result<(), String> {
+    let tol = atol + rtol * b.abs().max(a.abs());
+    if (a - b).abs() > tol {
+        return Err(format!("{what}: {a} vs {b} (tol {tol})"));
+    }
+    Ok(())
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_slice_close(
+    a: &[f64],
+    b: &[f64],
+    atol: f64,
+    rtol: f64,
+    what: &str,
+) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_close(*x, *y, atol, rtol, &format!("{what}[{i}]"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 10, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_replay() {
+        check("fails", 5, |rng| {
+            if rng.uniform() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert!(assert_close(1.0, 1.0 + 1e-9, 1e-8, 0.0, "x").is_ok());
+        assert!(assert_close(1.0, 2.0, 1e-8, 0.0, "x").is_err());
+        assert!(assert_slice_close(&[1.0, 2.0], &[1.0, 2.0], 1e-9, 0.0, "v").is_ok());
+        assert!(assert_slice_close(&[1.0], &[1.0, 2.0], 1e-9, 0.0, "v").is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Wall-clock timing helpers used by the metrics layer and benches.
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    pub fn restart(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.secs())
+}
+
+/// Run a closure repeatedly until `min_secs` of total runtime or
+/// `max_iters` iterations, returning the mean seconds per iteration.
+/// This is the measurement core of the harness=false benches
+/// (criterion is not in the vendored registry — DESIGN.md §4).
+pub fn bench_secs(min_secs: f64, max_iters: usize, mut f: impl FnMut()) -> f64 {
+    // warm-up
+    f();
+    let sw = Stopwatch::start();
+    let mut iters = 0usize;
+    loop {
+        f();
+        iters += 1;
+        if sw.secs() >= min_secs || iters >= max_iters {
+            break;
+        }
+    }
+    sw.secs() / iters as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, t) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_at_least_once() {
+        let mut count = 0;
+        let mean = bench_secs(0.0, 3, || count += 1);
+        assert!(count >= 2); // warmup + 1
+        assert!(mean >= 0.0);
+    }
+}

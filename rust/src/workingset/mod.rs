@@ -1,0 +1,241 @@
+//! BLITZ-like working-set method (Johnson & Guestrin 2015) — the
+//! paper's working-set baseline (§1.3, Figures 2 and 5).
+//!
+//! Sketch of the reimplementation (the original is a Matlab/C
+//! package; DESIGN.md §4): maintain a globally feasible dual point
+//! θ_feas and a working set W.
+//!
+//! 1. solve the sub-problem restricted to W (CM, to tolerance ξ·gap);
+//! 2. the sub-problem dual θ_sub may violate constraints outside W:
+//!    back-track α ∈ [0, 1] so θ' = (1−α)θ_feas + α·θ_sub is feasible
+//!    for ALL constraints (the "extreme feasible point");
+//! 3. global duality gap at (β, θ'): done if ≤ ε;
+//! 4. otherwise rebuild W with the constraints *closest to θ'*
+//!    (distance (1 − |x_iᵀθ'|)/‖x_i‖), doubling the budget, always
+//!    keeping the support of β.
+
+use crate::cm::{solve_subproblem, Engine};
+use crate::linalg::dot;
+use crate::model::Problem;
+use crate::util::Stopwatch;
+
+/// BLITZ configuration.
+#[derive(Debug, Clone)]
+pub struct BlitzConfig {
+    /// Final duality-gap tolerance ε.
+    pub eps: f64,
+    /// Sub-problem gap tolerance as a fraction of the current global
+    /// gap (BLITZ solves sub-problems only as far as useful).
+    pub xi: f64,
+    /// Initial working-set budget.
+    pub init_budget: usize,
+    pub k_epochs: usize,
+    pub max_outer: usize,
+}
+
+impl Default for BlitzConfig {
+    fn default() -> Self {
+        BlitzConfig { eps: 1e-6, xi: 0.1, init_budget: 32, k_epochs: 10, max_outer: 10_000 }
+    }
+}
+
+/// Result of a BLITZ solve.
+#[derive(Debug, Clone)]
+pub struct BlitzResult {
+    pub beta: Vec<(usize, f64)>,
+    pub gap: f64,
+    pub outer_iters: usize,
+    pub epochs: usize,
+    pub max_working: usize,
+    pub secs: f64,
+}
+
+/// BLITZ-like solver.
+pub struct Blitz<'a> {
+    pub cfg: BlitzConfig,
+    pub engine: &'a mut dyn Engine,
+}
+
+impl<'a> Blitz<'a> {
+    pub fn new(engine: &'a mut dyn Engine, cfg: BlitzConfig) -> Self {
+        Blitz { cfg, engine }
+    }
+
+    pub fn solve(&mut self, prob: &Problem, lam: f64) -> BlitzResult {
+        let sw = Stopwatch::start();
+        let p = prob.p();
+        let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
+
+        // globally feasible start: θ at β = 0 rescaled over ALL columns
+        let u0 = prob
+            .offset
+            .clone()
+            .unwrap_or_else(|| vec![0.0; prob.n()]);
+        let th_hat = prob.theta_hat(&u0, lam);
+        let mut scores = self.engine.scores(prob, &th_hat);
+        let mx0 = scores.iter().cloned().fold(0.0, f64::max);
+        let mut theta_feas = prob.project_dual(&th_hat, mx0, lam).theta;
+
+        let mut budget = self.cfg.init_budget.min(p);
+        let mut beta_full = vec![0.0; p];
+        let mut outer = 0usize;
+        let mut epochs = 0usize;
+        let mut max_working = 0usize;
+        let mut gap = f64::INFINITY;
+
+        loop {
+            outer += 1;
+            // working set = support ∪ top-`budget` closest constraints
+            for (i, s) in scores.iter_mut().enumerate() {
+                // distance of constraint i's boundary to θ_feas
+                *s = (1.0 - dot(prob.x.col(i), &theta_feas).abs()).max(0.0)
+                    / col_nrm[i].max(1e-12);
+            }
+            let mut order: Vec<usize> = (0..p).collect();
+            order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+            let mut work: Vec<usize> = Vec::with_capacity(budget + 8);
+            let mut in_work = vec![false; p];
+            for i in 0..p {
+                if beta_full[i] != 0.0 {
+                    in_work[i] = true;
+                    work.push(i);
+                }
+            }
+            for &i in order.iter() {
+                if work.len() >= budget {
+                    break;
+                }
+                if !in_work[i] {
+                    in_work[i] = true;
+                    work.push(i);
+                }
+            }
+            max_working = max_working.max(work.len());
+
+            // sub-problem solve to a fraction of the current gap
+            let sub_eps = if gap.is_finite() {
+                (self.cfg.xi * gap).max(self.cfg.eps * 0.5)
+            } else {
+                self.cfg.eps
+            };
+            let mut beta: Vec<f64> = work.iter().map(|&i| beta_full[i]).collect();
+            let (eval, e) = solve_subproblem(
+                self.engine,
+                prob,
+                &work,
+                &mut beta,
+                lam,
+                sub_eps,
+                self.cfg.k_epochs,
+                200_000,
+            );
+            epochs += e;
+            for (a, &i) in work.iter().enumerate() {
+                beta_full[i] = beta[a];
+            }
+
+            // back-track θ_sub toward θ_feas until globally feasible
+            let all = self.engine.scores(prob, &eval.theta);
+            let mut alpha = 1.0f64;
+            for i in 0..p {
+                if all[i] > 1.0 {
+                    // |a + α(b−a)| ≤ 1 with a = x_iᵀθ_feas, b = x_iᵀθ_sub
+                    let a = dot(prob.x.col(i), &theta_feas);
+                    let b = dot(prob.x.col(i), &eval.theta);
+                    let hi = (1.0 - a) / (b - a);
+                    let lo = (-1.0 - a) / (b - a);
+                    let step = hi.max(lo);
+                    if step.is_finite() && step >= 0.0 {
+                        alpha = alpha.min(step);
+                    }
+                }
+            }
+            for j in 0..theta_feas.len() {
+                theta_feas[j] += alpha * (eval.theta[j] - theta_feas[j]);
+            }
+            // global gap at (β, θ_feas)
+            let sparse: Vec<(usize, f64)> = work
+                .iter()
+                .map(|&i| (i, beta_full[i]))
+                .filter(|&(_, b)| b != 0.0)
+                .collect();
+            let uu = prob.margins_sparse(&sparse);
+            let l1: f64 = sparse.iter().map(|(_, b)| b.abs()).sum();
+            let primal = prob.primal_from_margins(&uu, l1, lam);
+            let dual = prob.dual_value(&theta_feas, lam);
+            gap = (primal - dual).max(0.0);
+            if gap <= self.cfg.eps || outer >= self.cfg.max_outer {
+                return BlitzResult {
+                    beta: sparse,
+                    gap,
+                    outer_iters: outer,
+                    epochs,
+                    max_working,
+                    secs: sw.secs(),
+                };
+            }
+            budget = (budget * 2).min(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cm::NativeEngine;
+    use crate::data::synth;
+
+    #[test]
+    fn blitz_matches_saif_support() {
+        let ds = synth::synth_linear(40, 300, 61);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.1;
+        let mut eng = NativeEngine::new();
+        let mut blitz = Blitz::new(&mut eng, BlitzConfig { eps: 1e-9, ..Default::default() });
+        let res = blitz.solve(&prob, lam);
+        assert!(res.gap <= 1e-9, "gap {}", res.gap);
+        assert!(prob.kkt_violation(&res.beta, lam) < 1e-3 * lam.max(1.0));
+
+        let mut eng2 = NativeEngine::new();
+        let mut saif = crate::saif::Saif::new(
+            &mut eng2,
+            crate::saif::SaifConfig { eps: 1e-9, ..Default::default() },
+        );
+        let sres = saif.solve(&prob, lam);
+        let mut a: Vec<usize> = res.beta.iter().map(|&(i, _)| i).collect();
+        let mut b: Vec<usize> = sres.beta.iter().map(|&(i, _)| i).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn blitz_working_set_stays_small() {
+        // near λ_max the active set is tiny and BLITZ must converge
+        // without ever growing its working set to the full problem
+        let ds = synth::synth_linear(50, 800, 63);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.6;
+        let mut eng = NativeEngine::new();
+        let mut blitz = Blitz::new(&mut eng, BlitzConfig::default());
+        let res = blitz.solve(&prob, lam);
+        assert!(res.gap <= 1e-6);
+        assert!(res.max_working < prob.p() / 2, "working {}", res.max_working);
+        // harder λ may legitimately grow the budget, but must converge
+        let lam2 = prob.lambda_max() * 0.3;
+        let res2 = blitz.solve(&prob, lam2);
+        assert!(res2.gap <= 1e-6);
+        assert!(res2.max_working <= prob.p());
+    }
+
+    #[test]
+    fn blitz_logistic_converges() {
+        let ds = synth::gisette_like(50, 150, 65);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.2;
+        let mut eng = NativeEngine::new();
+        let mut blitz = Blitz::new(&mut eng, BlitzConfig { eps: 1e-7, ..Default::default() });
+        let res = blitz.solve(&prob, lam);
+        assert!(res.gap <= 1e-7, "gap {}", res.gap);
+    }
+}

@@ -1,0 +1,83 @@
+//! End-to-end coordinator tests, including the full three-layer stack
+//! (coordinator → PJRT runtime → AOT JAX/Pallas artifacts) when the
+//! artifacts are built.
+
+use std::sync::Arc;
+
+use saif::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
+use saif::data::synth;
+use saif::runtime::artifacts_available;
+
+fn path_requests(seed: u64, key: u64, n_lams: usize, eps: f64) -> Vec<SolveRequest> {
+    let ds = synth::synth_linear(100, 900, seed);
+    let prob = Arc::new(ds.problem());
+    let lam_max = prob.lambda_max();
+    (1..=n_lams)
+        .map(|k| SolveRequest {
+            id: key * 1000 + k as u64,
+            dataset_key: key,
+            problem: prob.clone(),
+            lam: lam_max * (5e-2f64).powf(k as f64 / n_lams as f64),
+            method: Method::Saif,
+            eps,
+        })
+        .collect()
+}
+
+#[test]
+fn multi_tenant_batch_native() {
+    let mut reqs = Vec::new();
+    for d in 0..3 {
+        reqs.extend(path_requests(100 + d, d, 4, 1e-8));
+    }
+    let total = reqs.len();
+    let (responses, lat, wall) = Coordinator::run_batch(reqs, 3, EngineKind::Native);
+    assert_eq!(responses.len(), total);
+    assert!(wall > 0.0);
+    assert_eq!(lat.count(), total);
+    for r in &responses {
+        assert!(r.gap <= 1e-8, "req {}: gap {}", r.id, r.gap);
+        assert!(
+            r.kkt_violation < 1e-3 * r.lam.max(1.0),
+            "req {}: kkt {}",
+            r.id,
+            r.kkt_violation
+        );
+    }
+}
+
+#[test]
+fn full_stack_pjrt_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut reqs = Vec::new();
+    for d in 0..2 {
+        // f32 artifacts: relative gap floor, use loose eps
+        reqs.extend(path_requests(200 + d, d, 3, 1e-2));
+    }
+    let total = reqs.len();
+    let (responses, _lat, _wall) = Coordinator::run_batch(reqs, 2, EngineKind::Pjrt);
+    assert_eq!(responses.len(), total);
+    for r in &responses {
+        // coordinator certifies in f64 regardless of engine; f32 path
+        // solutions are near-optimal: relative KKT violation small
+        assert!(
+            r.kkt_violation < 5e-2 * r.lam.max(1.0),
+            "req {}: kkt {} (λ={})",
+            r.id,
+            r.kkt_violation,
+            r.lam
+        );
+    }
+}
+
+#[test]
+fn responses_preserve_request_ids() {
+    let reqs = path_requests(300, 9, 5, 1e-6);
+    let ids: std::collections::HashSet<u64> = reqs.iter().map(|r| r.id).collect();
+    let (responses, _, _) = Coordinator::run_batch(reqs, 2, EngineKind::Native);
+    let got: std::collections::HashSet<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids, got);
+}

@@ -1,0 +1,132 @@
+//! Cross-validation of the two Engine backends: the PJRT-loaded
+//! JAX/Pallas artifacts must agree with the native f64 implementation
+//! (identical semantics, f32 tolerance). Skipped when the artifacts
+//! have not been built (`make artifacts`).
+
+use saif::cm::{Engine, NativeEngine};
+use saif::data::synth;
+use saif::model::LossKind;
+use saif::runtime::{artifacts_available, PjrtEngine};
+use saif::saif::{Saif, SaifConfig};
+
+fn require_artifacts() -> Option<PjrtEngine> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::new().expect("PJRT engine"))
+}
+
+#[test]
+fn cm_eval_agrees_ls() {
+    let Some(mut pjrt) = require_artifacts() else { return };
+    let mut native = NativeEngine::new();
+    let ds = synth::synth_linear(60, 40, 101);
+    let prob = ds.problem();
+    let lam = prob.lambda_max() * 0.2;
+    let active: Vec<usize> = (0..prob.p()).collect();
+    let mut b1 = vec![0.0; prob.p()];
+    let mut b2 = vec![0.0; prob.p()];
+    let e1 = native.cm_eval(&prob, &active, &mut b1, lam, 10);
+    let e2 = pjrt.cm_eval(&prob, &active, &mut b2, lam, 10);
+    // f32 path vs f64 path: relative agreement
+    let scale = e1.primal.abs().max(1.0);
+    assert!(
+        (e1.primal - e2.primal).abs() < 2e-4 * scale,
+        "primal {} vs {}",
+        e1.primal,
+        e2.primal
+    );
+    assert!(
+        (e1.dual - e2.dual).abs() < 2e-4 * scale,
+        "dual {} vs {}",
+        e1.dual,
+        e2.dual
+    );
+    for i in 0..prob.p() {
+        assert!(
+            (b1[i] - b2[i]).abs() < 1e-3 * b1[i].abs().max(1.0),
+            "beta[{i}]: {} vs {}",
+            b1[i],
+            b2[i]
+        );
+    }
+}
+
+#[test]
+fn cm_eval_agrees_logistic() {
+    let Some(mut pjrt) = require_artifacts() else { return };
+    let mut native = NativeEngine::new();
+    let ds = synth::gisette_like(80, 50, 103);
+    let prob = ds.problem();
+    assert_eq!(prob.loss, LossKind::Logistic);
+    let lam = prob.lambda_max() * 0.3;
+    let active: Vec<usize> = (0..prob.p()).collect();
+    let mut b1 = vec![0.0; prob.p()];
+    let mut b2 = vec![0.0; prob.p()];
+    let e1 = native.cm_eval(&prob, &active, &mut b1, lam, 10);
+    let e2 = pjrt.cm_eval(&prob, &active, &mut b2, lam, 10);
+    let scale = e1.primal.abs().max(1.0);
+    assert!((e1.primal - e2.primal).abs() < 5e-4 * scale);
+    assert!((e1.gap - e2.gap).abs() < 5e-3 * scale, "gap {} vs {}", e1.gap, e2.gap);
+    for i in 0..prob.p() {
+        assert!((b1[i] - b2[i]).abs() < 2e-3 * b1[i].abs().max(1.0));
+    }
+}
+
+#[test]
+fn scores_agree() {
+    let Some(mut pjrt) = require_artifacts() else { return };
+    let mut native = NativeEngine::new();
+    let ds = synth::synth_linear(100, 3000, 105);
+    let prob = ds.problem();
+    let theta: Vec<f64> = (0..prob.n()).map(|j| (j as f64 * 0.37).sin() * 0.01).collect();
+    let s1 = native.scores(&prob, &theta);
+    let s2 = pjrt.scores(&prob, &theta);
+    assert_eq!(s1.len(), s2.len());
+    for i in 0..s1.len() {
+        assert!(
+            (s1[i] - s2[i]).abs() < 1e-3 * s1[i].abs().max(1.0),
+            "scores[{i}]: {} vs {}",
+            s1[i],
+            s2[i]
+        );
+    }
+}
+
+#[test]
+fn saif_end_to_end_on_pjrt_engine() {
+    let Some(mut pjrt) = require_artifacts() else { return };
+    let ds = synth::synth_linear(100, 2000, 107);
+    let prob = ds.problem();
+    let lam = prob.lambda_max() * 0.2;
+    // f32 artifacts: use a gap achievable in f32 (relative to primal
+    // scale, which is large on this unstandardized sim data)
+    let eps = 1e-2;
+    let mut s = Saif::new(&mut pjrt, SaifConfig { eps, ..Default::default() });
+    let res = s.solve(&prob, lam);
+    assert!(res.gap <= eps, "gap {}", res.gap);
+    assert!(res.max_active < 1024, "bucket overflow {}", res.max_active);
+    // support agrees with the exact native solve
+    let mut native = NativeEngine::new();
+    let mut s2 = Saif::new(&mut native, SaifConfig { eps: 1e-9, ..Default::default() });
+    let exact = s2.solve(&prob, lam);
+    let sup_pjrt: std::collections::HashSet<usize> =
+        res.beta.iter().filter(|(_, b)| b.abs() > 1e-4).map(|&(i, _)| i).collect();
+    let sup_exact: std::collections::HashSet<usize> =
+        exact.beta.iter().filter(|(_, b)| b.abs() > 1e-4).map(|&(i, _)| i).collect();
+    // f32 vs f64 at loose gap: supports need not be identical, but the
+    // overlap must be overwhelming
+    let inter = sup_pjrt.intersection(&sup_exact).count();
+    assert!(
+        inter * 10 >= sup_exact.len() * 8,
+        "support overlap {inter}/{} too small",
+        sup_exact.len()
+    );
+    // every returned coefficient close to the exact one
+    let exact_map: std::collections::HashMap<usize, f64> = exact.beta.iter().cloned().collect();
+    for &(i, b) in &res.beta {
+        let e = exact_map.get(&i).copied().unwrap_or(0.0);
+        assert!((b - e).abs() < 0.05 * e.abs().max(1.0), "β[{i}] {b} vs {e}");
+    }
+}

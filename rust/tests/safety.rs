@@ -1,0 +1,185 @@
+//! The paper's central claim, tested adversarially: SAIF is SAFE —
+//! it returns the optimum of the FULL problem (same support, same
+//! coefficients, KKT-certified) no matter how the active set evolved.
+//! Randomized across data distributions, losses, λ and hyper-params.
+
+use saif::cm::{solve_subproblem, NativeEngine};
+use saif::data::synth;
+use saif::model::{LossKind, Problem};
+use saif::saif::{Saif, SaifConfig};
+use saif::util::prop;
+
+fn exact_support(prob: &Problem, lam: f64) -> (Vec<f64>, Vec<usize>) {
+    let all: Vec<usize> = (0..prob.p()).collect();
+    let mut beta = vec![0.0; prob.p()];
+    let mut eng = NativeEngine::new();
+    let (_e, _) =
+        solve_subproblem(&mut eng, prob, &all, &mut beta, lam, 1e-10, 10, 500_000);
+    let sup = (0..prob.p()).filter(|&i| beta[i].abs() > 1e-8).collect();
+    (beta, sup)
+}
+
+#[test]
+fn saif_support_equals_exhaustive_support_randomized() {
+    prop::check("saif == no-screening", 12, |rng| {
+        let n = 20 + rng.below(60);
+        let p = 50 + rng.below(250);
+        let prob = if rng.uniform() > 0.4 {
+            synth::synth_linear(n, p, rng.next_u64()).problem()
+        } else {
+            synth::gene_expr(n, p, rng.next_u64()).problem()
+        };
+        let lam = prob.lambda_max() * (0.01 + 0.4 * rng.uniform());
+        let (full, sup) = exact_support(&prob, lam);
+        let mut eng = NativeEngine::new();
+        let cfg = SaifConfig {
+            eps: 1e-10,
+            c: 0.5 + 1.5 * rng.uniform(),
+            zeta: 0.5 + 1.5 * rng.uniform(),
+            use_thm2_ball: rng.uniform() > 0.5,
+            ..Default::default()
+        };
+        let mut saif = Saif::new(&mut eng, cfg);
+        let res = saif.solve(&prob, lam);
+        let mut saif_sup: Vec<usize> = res
+            .beta
+            .iter()
+            .filter(|(_, b)| b.abs() > 1e-8)
+            .map(|&(i, _)| i)
+            .collect();
+        saif_sup.sort();
+        if saif_sup != sup {
+            return Err(format!(
+                "support mismatch: saif {saif_sup:?} vs exact {sup:?} (λ={lam:.3e})"
+            ));
+        }
+        for &(i, b) in &res.beta {
+            prop::assert_close(b, full[i], 1e-5, 1e-4, &format!("β[{i}]"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn saif_logistic_safety_randomized() {
+    prop::check("saif logistic safe", 8, |rng| {
+        let n = 30 + rng.below(50);
+        let p = 40 + rng.below(160);
+        let prob = synth::gisette_like(n, p, rng.next_u64()).problem();
+        let lam = prob.lambda_max() * (0.05 + 0.4 * rng.uniform());
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(
+            &mut eng,
+            SaifConfig { eps: 1e-9, ..Default::default() },
+        );
+        let res = saif.solve(&prob, lam);
+        let viol = prob.kkt_violation(&res.beta, lam);
+        if viol > 1e-2 * lam.max(1.0) {
+            return Err(format!("KKT violation {viol:.3e} at λ={lam:.3e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn saif_never_misses_active_feature_even_with_aggressive_delta() {
+    // δ starting tiny screens aggressively early; safety must still
+    // hold because the algorithm drives δ → 1 before the safe stop
+    prop::check("delta schedule safe", 8, |rng| {
+        let prob = synth::synth_linear(40, 200, rng.next_u64()).problem();
+        let lam = prob.lambda_max() * 0.05;
+        let (_, sup) = exact_support(&prob, lam);
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(
+            &mut eng,
+            SaifConfig { eps: 1e-10, delta0: Some(1e-6), ..Default::default() },
+        );
+        let res = saif.solve(&prob, lam);
+        let got: std::collections::HashSet<usize> =
+            res.beta.iter().map(|&(i, _)| i).collect();
+        for i in &sup {
+            if !got.contains(i) {
+                return Err(format!("missed active feature {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn warm_start_from_wrong_solution_is_still_safe() {
+    // adversarial warm start: seed SAIF with junk coefficients on
+    // junk features — the result must still be the exact optimum
+    prop::check("junk warm start", 6, |rng| {
+        let prob = synth::synth_linear(40, 150, rng.next_u64()).problem();
+        let lam = prob.lambda_max() * 0.1;
+        let junk: Vec<(usize, f64)> = (0..20)
+            .map(|_| (rng.below(prob.p()), rng.normal()))
+            .collect();
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(
+            &mut eng,
+            SaifConfig { eps: 1e-10, ..Default::default() },
+        );
+        let res = saif.solve_warm(&prob, lam, Some(&junk));
+        let viol = prob.kkt_violation(&res.beta, lam);
+        if viol > 1e-3 * lam.max(1.0) {
+            return Err(format!("KKT violation {viol:.3e} from junk warm start"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_lambda_on_grid_is_safe() {
+    let prob = synth::synth_linear(50, 300, 999).problem();
+    let lam_max = prob.lambda_max();
+    for k in 0..12 {
+        let lam = lam_max * (1e-3f64).powf(k as f64 / 11.0);
+        let mut eng = NativeEngine::new();
+        let mut saif = Saif::new(
+            &mut eng,
+            SaifConfig { eps: 1e-9, ..Default::default() },
+        );
+        let res = saif.solve(&prob, lam);
+        let viol = prob.kkt_violation(&res.beta, lam);
+        assert!(
+            viol < 1e-3 * lam.max(1.0),
+            "λ={lam:.3e}: violation {viol:.3e}"
+        );
+    }
+}
+
+#[test]
+fn fused_saif_is_safe_on_trees() {
+    use saif::fused::{FusedSaif, FusedSaifConfig};
+    prop::check("fused safety", 6, |rng| {
+        let p = 20 + rng.below(60);
+        let n = 20 + rng.below(40);
+        let ds = synth::gene_expr(n, p, rng.next_u64());
+        let edges = saif::data::tree::preferential_attachment(p, rng.next_u64());
+        let lam_max =
+            FusedSaif::lambda_max(&ds.x, &ds.y, LossKind::Squared, &edges).unwrap();
+        let lam = lam_max * (0.05 + 0.5 * rng.uniform());
+        let mut eng = NativeEngine::new();
+        let mut fs = FusedSaif::new(
+            &mut eng,
+            FusedSaifConfig {
+                saif: SaifConfig { eps: 1e-10, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let res = fs.solve(&ds.x, &ds.y, LossKind::Squared, &edges, lam).unwrap();
+        // certificate: ADMM from a different initialization cannot beat
+        // SAIF's objective by more than the tolerance
+        let mut admm = saif::fused::FusedAdmm::new(Default::default());
+        let ares = admm.solve(&ds.x, &ds.y, LossKind::Squared, &edges, lam, None);
+        if ares.objective < res.objective - 1e-4 * res.objective.abs().max(1.0) {
+            return Err(format!(
+                "ADMM found better objective: {} < {}",
+                ares.objective, res.objective
+            ));
+        }
+        Ok(())
+    });
+}
