@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 gate (see ROADMAP.md): build, tests, formatting, lints.
+# Run from the repo root: ./ci.sh      (SKIP_LINT=1 ./ci.sh to gate on
+# build+tests only, e.g. while triaging fmt/clippy drift.)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+cargo build --release
+cargo test -q
+
+if [[ "${SKIP_LINT:-0}" != "1" ]]; then
+    cargo fmt --check
+    cargo clippy --all-targets -- -D warnings
+fi

@@ -15,7 +15,7 @@ fn main() {
     let (n, p) = (96, 1500);
     let ds = synth::gene_expr(n, p, 13);
     let edges = tree::preferential_attachment(p, 13);
-    let lam_max = FusedSaif::lambda_max(&ds.x, &ds.y, LossKind::Squared, &edges).unwrap();
+    let lam_max = FusedSaif::lambda_max(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges).unwrap();
     let lam = lam_max * 0.1;
     println!("fused LASSO: n={n}, p={p}, tree edges={}, λ = {lam:.3e} (0.1 λ_max)", edges.len());
 
@@ -24,7 +24,7 @@ fn main() {
         &mut eng,
         FusedSaifConfig { saif: SaifConfig { eps: 1e-8, ..Default::default() }, ..Default::default() },
     );
-    let res = fs.solve(&ds.x, &ds.y, LossKind::Squared, &edges, lam).unwrap();
+    let res = fs.solve(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges, lam).unwrap();
     let n_groups = {
         // count distinct fused levels along the tree
         let mut distinct = 1;
@@ -42,12 +42,12 @@ fn main() {
 
     let mut admm = FusedAdmm::new(Default::default());
     let target = res.objective * (1.0 + 1e-6);
-    let ares = admm.solve(&ds.x, &ds.y, LossKind::Squared, &edges, lam, Some(target));
+    let ares = admm.solve(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges, lam, Some(target));
     println!(
         "ADMM (CVX stand-in): objective {:.6} in {:.3}s ({} iters) — SAIF speedup {:.0}x",
         ares.objective, ares.secs, ares.iters, ares.secs / res.secs.max(1e-9)
     );
-    let check = fused_objective(&ds.x, &ds.y, LossKind::Squared, &edges, &res.beta, lam);
+    let check = fused_objective(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges, &res.beta, lam);
     assert!((check - res.objective).abs() < 1e-9);
     assert!(ares.objective >= res.objective - 1e-6 * res.objective.abs());
     println!("objective parity verified. done.");

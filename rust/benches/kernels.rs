@@ -2,15 +2,18 @@
 //!
 //! * native dot/axpy (the CM inner loop) at the experiment sizes;
 //! * a native CM epoch and screening scan;
+//! * the sparse (CSC) vs dense scores scan, serial vs parallel, at
+//!   p = 10⁴ — recorded to BENCH_kernels.json;
 //! * the same operations through the PJRT artifacts — call overhead +
 //!   the packed-buffer cache effect.
 
 use saif::cm::{Engine, NativeEngine};
 use saif::data::synth;
-use saif::linalg::{axpy, dot};
+use saif::linalg::{axpy, dot, Parallelism};
 use saif::metrics::Table;
 use saif::runtime::{artifacts_available, PjrtEngine};
 use saif::util::bench_secs;
+use saif::util::json::Json;
 use saif::util::prng::Rng;
 
 fn main() {
@@ -74,6 +77,65 @@ fn main() {
         format!("{:.2}us", s * 1e6),
         format!("{:.2}", 2.0 * 2000.0 * 100.0 / s / 1e9),
     ]);
+
+    // --- sparse vs dense scores scan, serial vs parallel, p = 10⁴ ---
+    // The ADD scan is SAIF's O(n·p) hot path; this measures the CSC
+    // backend win (scan cost ∝ nnz) and the column-chunked thread win.
+    let (n_big, p_big, density) = (256usize, 10_000usize, 0.01f64);
+    let dense_prob = synth::synth_linear(n_big, p_big, 5).problem();
+    let sparse_prob = synth::synth_sparse(n_big, p_big, density, 5).problem();
+    let theta_big: Vec<f64> = (0..n_big).map(|j| (j as f64 * 0.13).sin() * 1e-3).collect();
+    let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let mut bench_rec = Json::obj();
+    bench_rec
+        .set("bench", Json::Str("kernels/scores-scan".into()))
+        .set("n", Json::Num(n_big as f64))
+        .set("p", Json::Num(p_big as f64))
+        .set("density", Json::Num(density))
+        .set("threads", Json::Num(hw as f64));
+    let mut serial_us = [0.0f64; 2];
+    for (k, &(label, prob)) in
+        [("dense", &dense_prob), ("sparse1pct", &sparse_prob)].iter().enumerate()
+    {
+        // flops actually executed: 2·nnz (dense nnz = n·p)
+        let flops = 2.0 * prob.x.nnz() as f64;
+        let mut serial = NativeEngine::new();
+        let s = bench_secs(0.3, 2_000, || {
+            std::hint::black_box(serial.scores(prob, &theta_big));
+        });
+        serial_us[k] = s * 1e6;
+        t.row(vec![
+            format!("scores {label} serial (p={p_big}, n={n_big})"),
+            p_big.to_string(),
+            format!("{:.2}us", s * 1e6),
+            format!("{:.2} GF/s", flops / s / 1e9),
+        ]);
+        bench_rec.set(&format!("{label}_serial_us"), Json::Num(s * 1e6));
+
+        let mut par = NativeEngine::with_parallelism(Parallelism::Fixed(hw));
+        let sp = bench_secs(0.3, 2_000, || {
+            std::hint::black_box(par.scores(prob, &theta_big));
+        });
+        t.row(vec![
+            format!("scores {label} parallel x{hw}"),
+            p_big.to_string(),
+            format!("{:.2}us", sp * 1e6),
+            format!("speedup {:.2}x over serial", s / sp),
+        ]);
+        bench_rec
+            .set(&format!("{label}_parallel_us"), Json::Num(sp * 1e6))
+            .set(&format!("{label}_parallel_speedup"), Json::Num(s / sp));
+    }
+    bench_rec.set(
+        "sparse_over_dense_serial_speedup",
+        Json::Num(serial_us[0] / serial_us[1].max(1e-12)),
+    );
+    // repo root, independent of the invocation CWD
+    let bench_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+    match std::fs::write(bench_path, bench_rec.to_string() + "\n") {
+        Ok(()) => println!("wrote {bench_path}"),
+        Err(e) => eprintln!("could not write {bench_path}: {e}"),
+    }
 
     if artifacts_available() {
         let mut pjrt = PjrtEngine::new().expect("pjrt");

@@ -4,18 +4,24 @@
 //! ```text
 //! repro solve      --dataset sim --lambda-frac 0.1 [--method saif]
 //!                  [--engine native|pjrt] [--eps 1e-6] [--seed 42]
-//!                  [--libsvm path --logistic]
+//!                  [--libsvm path --logistic [--dense]]
+//!                  [--threads serial|auto|N]
 //! repro experiment --id fig2-sim [--out out]   (or --all)
 //! repro serve      [--workers 4] [--datasets 3] [--lambdas 8]
 //!                  [--engine native|pjrt] [--method saif]
 //! repro list
 //! ```
+//!
+//! `--libsvm` loads SPARSE (CSC, no n×p densification) so text-scale
+//! files fit in memory; `--dense` densifies explicitly for dense-path
+//! comparisons. `--threads` parallelizes the full-p screening scans.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
 use crate::data;
+use crate::linalg::Parallelism;
 use crate::runtime::PjrtEngine;
 use crate::saif::{Saif, SaifConfig};
 use crate::util::json::Json;
@@ -89,29 +95,48 @@ SAIF — Safe Active Incremental Feature selection (paper reproduction)
 USAGE:
   repro solve      --dataset <name> --lambda-frac <f> [--method saif|dyn|blitz]
                    [--engine native|pjrt] [--eps 1e-6] [--seed 42]
-                   [--libsvm <path> [--logistic]]
+                   [--libsvm <path> [--logistic] [--dense]]
+                   [--threads serial|auto|N]
   repro experiment --id <id> [--out out]      run one paper experiment
   repro experiment --all [--out out]          run every experiment
   repro serve      [--workers N] [--datasets D] [--lambdas L]
-                   [--engine native|pjrt]     coordinator demo workload
+                   [--engine native|pjrt] [--threads serial|auto|N]
+                                              coordinator demo workload
   repro cv         --dataset <name> [--folds 5] [--lambdas 20]
                    [--workers 4]              k-fold CV λ selection
   repro list                                  datasets + experiment ids
+
+  --libsvm loads sparse (CSC; the file is never densified), so
+  rcv1-scale text corpora fit in memory; add --dense to densify.
+  --threads chunks the O(n·p) screening scans over worker threads.
 ";
 
 fn cmd_list() -> i32 {
-    println!("datasets: sim sim-small bc bc-small gisette usps pet");
+    println!("datasets: sim sim-small sim-sparse sim-sparse-small bc bc-small gisette usps pet");
     println!("experiments: {}", crate::experiments::ALL.join(" "));
     0
 }
 
 fn load_dataset(args: &Args) -> Result<data::Dataset, String> {
     if let Some(path) = args.get("libsvm") {
-        return data::io::read_libsvm(path, args.has("logistic"));
+        let mut ds = data::io::read_libsvm(path, args.has("logistic"))?;
+        if args.has("dense") {
+            ds.x = ds.x.to_dense().into();
+        }
+        return Ok(ds);
     }
     let name = args.get("dataset").unwrap_or("sim-small");
     let seed = args.get_usize("seed", 42) as u64;
     data::by_name(name, seed).ok_or_else(|| format!("unknown dataset '{name}'"))
+}
+
+fn parallelism_arg(args: &Args) -> Result<Parallelism, String> {
+    match args.get("threads") {
+        None => Ok(Parallelism::Serial),
+        Some(s) => {
+            Parallelism::parse(s).ok_or_else(|| format!("bad --threads value '{s}'"))
+        }
+    }
 }
 
 fn cmd_solve(args: &Args) -> i32 {
@@ -131,13 +156,20 @@ fn cmd_solve(args: &Args) -> i32 {
     let eps = args.get_f64("eps", 1e-6);
     let engine_name = args.get("engine").unwrap_or("native");
     let method = args.get("method").unwrap_or("saif");
+    let par = match parallelism_arg(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
 
     println!(
-        "dataset={} n={} p={} loss={:?} λ_max={lam_max:.4e} λ={lam:.4e} eps={eps:.0e} engine={engine_name} method={method}",
-        ds.name, ds.n(), ds.p(), ds.loss
+        "dataset={} n={} p={} storage={}(nnz={}) loss={:?} λ_max={lam_max:.4e} λ={lam:.4e} eps={eps:.0e} engine={engine_name} method={method}",
+        ds.name, ds.n(), ds.p(), ds.x.storage(), ds.x.nnz(), ds.loss
     );
 
-    let mut native = crate::cm::NativeEngine::new();
+    let mut native = crate::cm::NativeEngine::with_parallelism(par);
     let mut pjrt_storage: PjrtEngine;
     let engine: &mut dyn crate::cm::Engine = match engine_name {
         "pjrt" => match PjrtEngine::new() {
@@ -171,7 +203,10 @@ fn cmd_solve(args: &Args) -> i32 {
             (r.beta, r.gap, r.secs)
         }
         _ => {
-            let mut s = Saif::new(engine, SaifConfig { eps, ..Default::default() });
+            let mut s = Saif::new(
+                engine,
+                SaifConfig { eps, parallelism: Some(par), ..Default::default() },
+            );
             let r = s.solve(&prob, lam);
             println!(
                 "saif: outer={} epochs={} p_add={} max_active={}",
@@ -187,7 +222,7 @@ fn cmd_solve(args: &Args) -> i32 {
         beta.len()
     );
     let mut top: Vec<(usize, f64)> = beta.clone();
-    top.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+    top.sort_by(|a, b| b.1.abs().total_cmp(&a.1.abs()));
     for (i, v) in top.iter().take(10) {
         println!("  β[{i}] = {v:+.6}");
     }
@@ -231,9 +266,16 @@ fn cmd_serve(args: &Args) -> i32 {
         _ => Method::Saif,
     };
     let eps = args.get_f64("eps", 1e-6);
+    let par = match parallelism_arg(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
 
     println!(
-        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={method:?}"
+        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={method:?}, scan threads={par:?}"
     );
     let mut reqs = Vec::new();
     let mut id = 0u64;
@@ -254,7 +296,7 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     }
     let total = reqs.len();
-    let (responses, lat, wall) = Coordinator::run_batch(reqs, workers, engine);
+    let (responses, lat, wall) = Coordinator::run_batch_with(reqs, workers, engine, par);
     let worst_kkt = responses
         .iter()
         .map(|r| r.kkt_violation / r.lam.max(1.0))

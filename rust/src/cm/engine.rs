@@ -4,6 +4,7 @@
 //! JAX/Pallas artifacts. Both backends implement identical semantics
 //! (cross-checked in `rust/tests/engines.rs`).
 
+use crate::linalg::Parallelism;
 use crate::model::Problem;
 
 /// Result of K CM epochs + duality-gap evaluation on a sub-problem.
@@ -37,6 +38,17 @@ pub trait Engine {
 
     /// Screening scan: |x_iᵀ θ| for every column of the problem.
     fn scores(&mut self, prob: &Problem, theta: &[f64]) -> Vec<f64>;
+
+    /// Set the column-parallelism used for full-p scans. Default: a
+    /// no-op — engines without a native scan loop (the PJRT artifacts
+    /// run on their own executor) ignore it.
+    fn set_parallelism(&mut self, _par: Parallelism) {}
+
+    /// The engine's current scan parallelism, so solver-level full-p
+    /// scans (e.g. SAIF's init corrs) can match the engine's setting.
+    fn parallelism(&self) -> Parallelism {
+        Parallelism::Serial
+    }
 
     /// Backend name for logs/metrics.
     fn name(&self) -> &'static str;

@@ -9,7 +9,7 @@
 //! One "epoch" = one proximal gradient step at cost O(n·|A|) — the
 //! same order as one CM epoch, making epoch counts comparable.
 
-use crate::linalg::{axpy, dot, ops::soft_threshold};
+use crate::linalg::{dot, ops::soft_threshold, Parallelism};
 use crate::model::Problem;
 
 use super::engine::{Engine, SubEval};
@@ -42,10 +42,10 @@ impl FistaEngine {
         for _ in 0..12 {
             xv.fill(0.0);
             for (a, &i) in active.iter().enumerate() {
-                axpy(v[a], prob.x.col(i), &mut xv);
+                prob.x.col_axpy(v[a], i, &mut xv);
             }
             for (a, &i) in active.iter().enumerate() {
-                out[a] = dot(prob.x.col(i), &xv);
+                out[a] = prob.x.col_dot(i, &xv);
             }
             let nrm = dot(&out, &out).sqrt();
             if nrm < 1e-300 {
@@ -88,14 +88,14 @@ impl Engine for FistaEngine {
             }
             for (a, &i) in active.iter().enumerate() {
                 if y_point[a] != 0.0 {
-                    axpy(y_point[a], prob.x.col(i), &mut u);
+                    prob.x.col_axpy(y_point[a], i, &mut u);
                 }
             }
             let fp: Vec<f64> = (0..n)
                 .map(|j| prob.loss.deriv(u[j], prob.y[j]))
                 .collect();
             for (a, &i) in active.iter().enumerate() {
-                grad[a] = dot(prob.x.col(i), &fp);
+                grad[a] = prob.x.col_dot(i, &fp);
             }
             // prox step + momentum
             let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt());
@@ -114,6 +114,14 @@ impl Engine for FistaEngine {
 
     fn scores(&mut self, prob: &Problem, theta: &[f64]) -> Vec<f64> {
         self.eval_helper.scores(prob, theta)
+    }
+
+    fn set_parallelism(&mut self, par: Parallelism) {
+        self.eval_helper.set_parallelism(par);
+    }
+
+    fn parallelism(&self) -> Parallelism {
+        Engine::parallelism(&self.eval_helper)
     }
 
     fn name(&self) -> &'static str {

@@ -26,6 +26,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::cm::{Engine, NativeEngine};
+use crate::linalg::Parallelism;
 use crate::metrics::LatencyStats;
 use crate::model::Problem;
 use crate::runtime::PjrtEngine;
@@ -93,8 +94,22 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn `n_workers` workers with the given engine kind.
+    /// Spawn `n_workers` workers with the given engine kind. Workers
+    /// run their full-p scans serially: the coordinator already
+    /// parallelizes across requests, so per-scan threading
+    /// ([`Coordinator::with_parallelism`]) is opt-in for
+    /// low-concurrency, huge-p workloads.
     pub fn new(n_workers: usize, engine: EngineKind) -> Coordinator {
+        Coordinator::with_parallelism(n_workers, engine, Parallelism::Serial)
+    }
+
+    /// [`Coordinator::new`], with each worker's native engine running
+    /// full-p scans under the given column parallelism.
+    pub fn with_parallelism(
+        n_workers: usize,
+        engine: EngineKind,
+        par: Parallelism,
+    ) -> Coordinator {
         let (res_tx, res_rx) = channel::<SolveResponse>();
         let mut senders = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
@@ -103,7 +118,7 @@ impl Coordinator {
             let res_tx = res_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("saif-worker-{w}"))
-                .spawn(move || worker_loop(w, engine, rx, res_tx))
+                .spawn(move || worker_loop(w, engine, par, rx, res_tx))
                 .expect("spawn worker");
             senders.push(tx);
             handles.push(handle);
@@ -156,8 +171,18 @@ impl Coordinator {
         n_workers: usize,
         engine: EngineKind,
     ) -> (Vec<SolveResponse>, LatencyStats, f64) {
+        Coordinator::run_batch_with(requests, n_workers, engine, Parallelism::Serial)
+    }
+
+    /// [`Coordinator::run_batch`] with per-worker scan parallelism.
+    pub fn run_batch_with(
+        requests: Vec<SolveRequest>,
+        n_workers: usize,
+        engine: EngineKind,
+        par: Parallelism,
+    ) -> (Vec<SolveResponse>, LatencyStats, f64) {
         let sw = Stopwatch::start();
-        let mut c = Coordinator::new(n_workers, engine);
+        let mut c = Coordinator::with_parallelism(n_workers, engine, par);
         for r in requests {
             c.submit(r);
         }
@@ -177,10 +202,11 @@ impl Coordinator {
 fn worker_loop(
     wid: usize,
     engine_kind: EngineKind,
+    par: Parallelism,
     rx: Receiver<Msg>,
     res_tx: Sender<SolveResponse>,
 ) {
-    let mut native = NativeEngine::new();
+    let mut native = NativeEngine::with_parallelism(par);
     let mut pjrt: Option<PjrtEngine> = match engine_kind {
         EngineKind::Pjrt => PjrtEngine::new().ok(),
         EngineKind::Native => None,
@@ -199,17 +225,18 @@ fn worker_loop(
             match msg {
                 Msg::Work(r) => batch.push(r),
                 Msg::Stop => {
-                    process_batch(wid, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
+                    process_batch(wid, par, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
                     return;
                 }
             }
         }
-        process_batch(wid, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
+        process_batch(wid, par, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
     }
 }
 
 fn process_batch(
     wid: usize,
+    par: Parallelism,
     native: &mut NativeEngine,
     mut pjrt: Option<&mut PjrtEngine>,
     warm: &mut HashMap<u64, (f64, Vec<(usize, f64)>)>,
@@ -220,7 +247,7 @@ fn process_batch(
     batch.sort_by(|a, b| {
         a.dataset_key
             .cmp(&b.dataset_key)
-            .then(b.lam.partial_cmp(&a.lam).unwrap())
+            .then(b.lam.total_cmp(&a.lam))
     });
     for req in batch {
         let sw = Stopwatch::start();
@@ -242,7 +269,11 @@ fn process_batch(
                     .map(|(_, b)| b.clone());
                 let mut s = Saif::new(
                     engine,
-                    SaifConfig { eps: req.eps, ..Default::default() },
+                    SaifConfig {
+                        eps: req.eps,
+                        parallelism: Some(par),
+                        ..Default::default()
+                    },
                 );
                 let r = s.solve_warm(prob, req.lam, ws.as_deref());
                 (r.beta, r.gap, ws.is_some())
@@ -322,6 +353,35 @@ mod tests {
             assert!(
                 r.kkt_violation < 1e-3 * lam.max(1.0),
                 "req {} kkt {}",
+                r.id,
+                r.kkt_violation
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_dataset_solves_end_to_end_with_certificate() {
+        // a CSC design flows through the coordinator untouched and the
+        // KKT certificate is checked on the sparse problem
+        let ds = synth::synth_sparse(60, 800, 0.05, 301);
+        assert!(ds.x.is_sparse());
+        let prob = Arc::new(ds.problem());
+        let mut reqs = requests_for(prob.clone(), 7, &[0.3, 0.1], 0);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.method = if i == 0 { Method::Saif } else { Method::DynScreen };
+        }
+        let (responses, _, _) = Coordinator::run_batch_with(
+            reqs,
+            2,
+            EngineKind::Native,
+            Parallelism::Fixed(2),
+        );
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert!(r.gap <= 1e-8, "gap {}", r.gap);
+            assert!(
+                r.kkt_violation < 1e-3 * r.lam.max(1.0),
+                "sparse req {}: kkt {}",
                 r.id,
                 r.kkt_violation
             );

@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use crate::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
 use crate::data::Dataset;
-use crate::linalg::Mat;
+use crate::linalg::Design;
 use crate::model::{LossKind, Problem};
 use crate::util::prng::Rng;
 
@@ -41,9 +41,10 @@ pub fn cross_validate(
     let mut perm: Vec<usize> = (0..n).collect();
     rng.shuffle(&mut perm);
 
-    // build fold problems (train split per fold)
+    // build fold problems (train split per fold); `select_rows` keeps
+    // the design's backend, so sparse datasets cross-validate sparse
     let mut fold_train: Vec<Arc<Problem>> = Vec::with_capacity(k_folds);
-    let mut fold_test: Vec<(Mat, Vec<f64>)> = Vec::with_capacity(k_folds);
+    let mut fold_test: Vec<(Design, Vec<f64>)> = Vec::with_capacity(k_folds);
     for f in 0..k_folds {
         let test_idx: Vec<usize> = perm
             .iter()
@@ -58,15 +59,8 @@ pub fn cross_validate(
             .map(|(_, &i)| i)
             .collect();
         let take = |idx: &[usize]| {
-            let mut x = Mat::zeros(idx.len(), ds.p());
-            let mut y = Vec::with_capacity(idx.len());
-            for (r, &i) in idx.iter().enumerate() {
-                for c in 0..ds.p() {
-                    x.set(r, c, ds.x.get(i, c));
-                }
-                y.push(ds.y[i]);
-            }
-            (x, y)
+            let y: Vec<f64> = idx.iter().map(|&i| ds.y[i]).collect();
+            (ds.x.select_rows(idx), y)
         };
         let (xt, yt) = take(&train_idx);
         fold_train.push(Arc::new(Problem::new(xt, yt, ds.loss)));
@@ -109,9 +103,9 @@ pub fn cross_validate(
         let (xt, yt) = &fold_test[f];
         let mut u = vec![0.0; yt.len()];
         for &(i, b) in &r.beta {
-            crate::linalg::axpy(b, xt.col(i), &mut u);
+            xt.col_axpy(b, i, &mut u);
         }
-        // column-major: xt.col(i) is feature i over test rows — u = X β
+        // column i of xt is feature i over the test rows — u = X β
         let e = match ds.loss {
             LossKind::Squared => {
                 let mut s = 0.0;
@@ -161,6 +155,15 @@ mod tests {
         let best = res.cv_error.iter().cloned().fold(f64::MAX, f64::min);
         assert!(best < worst * 0.9, "flat CV curve: {best} vs {worst}");
         assert!(res.best_lam < res.lams[0]);
+    }
+
+    #[test]
+    fn cv_stays_sparse_end_to_end() {
+        let ds = synth::synth_sparse(60, 400, 0.05, 605);
+        let res = cross_validate(&ds, 3, 4, 1e-2, 2, 3);
+        assert_eq!(res.cv_error.len(), 4);
+        assert!(res.cv_error.iter().all(|e| e.is_finite()));
+        assert!(res.best_lam > 0.0);
     }
 
     #[test]

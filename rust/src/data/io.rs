@@ -1,26 +1,61 @@
 //! LibSVM-format dataset IO (the format the paper's logistic datasets,
-//! Gisette and USPS, ship in). Lets users run the CLI on real files:
+//! Gisette and USPS, and the rcv1-style text corpora ship in). Lets
+//! users run the CLI on real files:
 //! `repro solve --libsvm path.svm --lambda 0.1`.
+//!
+//! Loading is SPARSE: rows parse into (index, value) pairs that build
+//! a CSC design directly — no n×p densification — so text-scale
+//! workloads load in O(nnz). Pass `--dense` to the CLI (or call
+//! `Design::to_dense`) to densify explicitly.
+//!
+//! Dimension handling: the bare format cannot represent trailing
+//! all-zero features (a writer that skips zeros never mentions the
+//! last column, so a reader inferring p from the max index silently
+//! shrinks the dataset and downstream β indices go out of range).
+//! `write_libsvm` therefore emits a `# saif-libsvm n=.. p=..` header
+//! comment which `read_libsvm` honours, and `read_libsvm_with_dim`
+//! accepts an explicit expected dimension (e.g. from a model
+//! checkpoint) that overrides both.
 
 use std::io::{BufRead, BufWriter, Write};
 
-use crate::linalg::Mat;
+use crate::linalg::CscMat;
 use crate::model::LossKind;
 
 use super::Dataset;
 
 /// Read a LibSVM file: `label idx:val idx:val ...` per line (1-based
 /// indices). Labels are mapped to ±1 when `logistic`, kept as-is
-/// otherwise.
+/// otherwise. The feature dimension comes from a `# saif-libsvm p=..`
+/// header when present, else the maximum index seen.
 pub fn read_libsvm(path: &str, logistic: bool) -> Result<Dataset, String> {
+    read_libsvm_with_dim(path, logistic, None)
+}
+
+/// [`read_libsvm`] with an explicit expected feature dimension, which
+/// takes precedence over the header. Indices beyond it are an error;
+/// trailing all-zero features are preserved instead of silently
+/// dropped.
+pub fn read_libsvm_with_dim(
+    path: &str,
+    logistic: bool,
+    expected_p: Option<usize>,
+) -> Result<Dataset, String> {
     let file = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
     let reader = std::io::BufReader::new(file);
     let mut rows: Vec<(f64, Vec<(usize, f64)>)> = Vec::new();
     let mut max_idx = 0usize;
+    let mut header_p: Option<usize> = None;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line.map_err(|e| format!("read {path}: {e}"))?;
         let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('#') {
+            if header_p.is_none() {
+                header_p = parse_header_p(line);
+            }
             continue;
         }
         let mut parts = line.split_whitespace();
@@ -46,14 +81,33 @@ pub fn read_libsvm(path: &str, logistic: bool) -> Result<Dataset, String> {
             max_idx = max_idx.max(i);
             feats.push((i - 1, v));
         }
+        // reject duplicate indices rather than silently picking a
+        // winner (the old dense loader kept the last occurrence; the
+        // CSC builder would sum them — neither is what the file means)
+        feats.sort_by_key(|&(j, _)| j);
+        if let Some(w) = feats.windows(2).find(|w| w[0].0 == w[1].0) {
+            return Err(format!(
+                "{path}:{}: duplicate feature index {}",
+                lineno + 1,
+                w[0].0 + 1
+            ));
+        }
         rows.push((label, feats));
     }
     if rows.is_empty() {
         return Err(format!("{path}: no samples"));
     }
+    let declared = expected_p.or(header_p);
+    if let Some(dp) = declared {
+        if max_idx > dp {
+            return Err(format!(
+                "{path}: feature index {max_idx} exceeds declared dimension {dp}"
+            ));
+        }
+    }
+    let p = declared.unwrap_or(max_idx);
     let n = rows.len();
-    let p = max_idx;
-    let mut x = Mat::zeros(n, p);
+    let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); p];
     let mut y = Vec::with_capacity(n);
     for (r, (label, feats)) in rows.into_iter().enumerate() {
         y.push(if logistic {
@@ -66,33 +120,56 @@ pub fn read_libsvm(path: &str, logistic: bool) -> Result<Dataset, String> {
             label
         });
         for (j, v) in feats {
-            x.set(r, j, v);
+            if v != 0.0 {
+                cols[j].push((r, v));
+            }
         }
     }
+    let x = CscMat::from_cols(n, cols);
     Ok(Dataset {
         name: format!("libsvm({path})"),
-        x,
+        x: x.into(),
         y,
         loss: if logistic { LossKind::Logistic } else { LossKind::Squared },
         tree: None,
     })
 }
 
-/// Write a dataset in LibSVM format (dense columns; zeros skipped).
+/// `# saif-libsvm n=.. p=..` → the declared p. The magic token is
+/// required so unrelated `p=` fragments in foreign tools' comments
+/// cannot override the inferred dimension.
+fn parse_header_p(line: &str) -> Option<usize> {
+    let rest = line.trim_start_matches('#').trim_start();
+    let rest = rest.strip_prefix("saif-libsvm")?;
+    rest.split_whitespace()
+        .find_map(|tok| tok.strip_prefix("p=").and_then(|v| v.parse().ok()))
+}
+
+/// Write a dataset in LibSVM format (zeros skipped), preceded by a
+/// `# saif-libsvm n=.. p=..` header so the roundtrip preserves the
+/// feature dimension exactly — including trailing all-zero columns.
 pub fn write_libsvm(ds: &Dataset, path: &str) -> Result<(), String> {
     let file = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
     let mut w = BufWriter::new(file);
-    for i in 0..ds.n() {
-        let mut line = format!("{}", ds.y[i]);
-        for j in 0..ds.p() {
-            let v = ds.x.get(i, j);
+    let werr = |e: std::io::Error| format!("write {path}: {e}");
+    writeln!(w, "# saif-libsvm n={} p={}", ds.n(), ds.p()).map_err(werr)?;
+    // row-major nonzero lists gathered from the (possibly sparse)
+    // column-major design — O(nnz)
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); ds.n()];
+    for j in 0..ds.p() {
+        for (i, v) in ds.x.col_iter(j) {
             if v != 0.0 {
-                line.push_str(&format!(" {}:{}", j + 1, v));
+                rows[i].push((j, v));
             }
         }
+    }
+    for (i, feats) in rows.iter().enumerate() {
+        let mut line = format!("{}", ds.y[i]);
+        for &(j, v) in feats {
+            line.push_str(&format!(" {}:{}", j + 1, v));
+        }
         line.push('\n');
-        w.write_all(line.as_bytes())
-            .map_err(|e| format!("write {path}: {e}"))?;
+        w.write_all(line.as_bytes()).map_err(werr)?;
     }
     Ok(())
 }
@@ -120,6 +197,68 @@ mod tests {
     }
 
     #[test]
+    fn loads_sparse_without_densifying() {
+        let path = std::env::temp_dir().join("saif_io_sparse.svm");
+        std::fs::write(&path, "1 1:0.5 40:1.0\n-1 2:2.0\n").unwrap();
+        let ds = read_libsvm(path.to_str().unwrap(), false).unwrap();
+        assert!(ds.x.is_sparse());
+        assert_eq!(ds.p(), 40);
+        assert_eq!(ds.x.nnz(), 3);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn roundtrip_preserves_trailing_zero_columns() {
+        // last column all zero: without the header the reload would
+        // shrink p and downstream β indices would go out of range
+        let mut ds = synth::synth_linear(8, 5, 13);
+        let mut x = ds.x.to_dense();
+        x.col_mut(4).fill(0.0);
+        ds.x = x.into();
+        let path = std::env::temp_dir().join("saif_io_zero_col.svm");
+        let path = path.to_str().unwrap();
+        write_libsvm(&ds, path).unwrap();
+        let back = read_libsvm(path, false).unwrap();
+        assert_eq!(back.p(), 5, "trailing zero column dropped on reload");
+        for i in 0..8 {
+            assert_eq!(back.x.get(i, 4), 0.0);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn expected_dim_overrides_and_validates() {
+        let path = std::env::temp_dir().join("saif_io_dim.svm");
+        std::fs::write(&path, "1 3:1.0\n").unwrap();
+        let p = path.to_str().unwrap();
+        // pad out to a larger declared dimension
+        assert_eq!(read_libsvm_with_dim(p, false, Some(7)).unwrap().p(), 7);
+        // declared dimension smaller than an observed index: error
+        assert!(read_libsvm_with_dim(p, false, Some(2)).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn header_comment_sets_dimension() {
+        let path = std::env::temp_dir().join("saif_io_header.svm");
+        std::fs::write(&path, "# saif-libsvm n=2 p=9\n1 1:1.0\n-1 2:0.5\n").unwrap();
+        let ds = read_libsvm(path.to_str().unwrap(), false).unwrap();
+        assert_eq!(ds.p(), 9);
+        assert_eq!(ds.n(), 2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn foreign_comments_do_not_set_dimension() {
+        // a non-saif comment containing `p=` must not override inference
+        let path = std::env::temp_dir().join("saif_io_foreign.svm");
+        std::fs::write(&path, "# fold p=3 of 10\n1 1:1.0 5:2.0\n").unwrap();
+        let ds = read_libsvm(path.to_str().unwrap(), false).unwrap();
+        assert_eq!(ds.p(), 5);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn parses_logistic_labels() {
         let path = std::env::temp_dir().join("saif_io_log.svm");
         std::fs::write(&path, "2 1:0.5 3:1.0\n-1 2:2.0\n").unwrap();
@@ -136,6 +275,15 @@ mod tests {
         let path = std::env::temp_dir().join("saif_io_bad.svm");
         std::fs::write(&path, "1 0:0.5\n").unwrap();
         assert!(read_libsvm(path.to_str().unwrap(), false).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_duplicate_feature_index() {
+        let path = std::env::temp_dir().join("saif_io_dup.svm");
+        std::fs::write(&path, "1 2:1.0 2:2.0\n").unwrap();
+        let err = read_libsvm(path.to_str().unwrap(), false).unwrap_err();
+        assert!(err.contains("duplicate feature index 2"), "{err}");
         std::fs::remove_file(path).ok();
     }
 }

@@ -6,15 +6,16 @@ pub mod io;
 pub mod synth;
 pub mod tree;
 
-use crate::linalg::Mat;
+use crate::linalg::{Design, Mat};
 use crate::model::{LossKind, Problem};
 
-/// A named dataset: design matrix, targets, loss kind and (for fused
-/// LASSO) an optional feature dependency tree given as edge list.
+/// A named dataset: design matrix (dense or sparse [`Design`]),
+/// targets, loss kind and (for fused LASSO) an optional feature
+/// dependency tree given as edge list.
 #[derive(Debug, Clone)]
 pub struct Dataset {
     pub name: String,
-    pub x: Mat,
+    pub x: Design,
     pub y: Vec<f64>,
     pub loss: LossKind,
     pub tree: Option<Vec<(usize, usize)>>,
@@ -64,6 +65,8 @@ pub fn by_name(name: &str, seed: u64) -> Option<Dataset> {
     match name {
         "sim" => Some(synth::synth_linear(100, 5000, seed)),
         "sim-small" => Some(synth::synth_linear(100, 1000, seed)),
+        "sim-sparse" => Some(synth::synth_sparse(200, 20_000, 0.005, seed)),
+        "sim-sparse-small" => Some(synth::synth_sparse(100, 2000, 0.02, seed)),
         "bc" => Some(synth::gene_expr(295, 8141, seed)),
         "bc-small" => Some(synth::gene_expr(128, 2000, seed)),
         "gisette" => Some(synth::gisette_like(512, 5000, seed)),
@@ -97,5 +100,14 @@ mod tests {
         assert_eq!(d.n(), 100);
         assert_eq!(d.p(), 1000);
         assert!(by_name("nope", 1).is_none());
+    }
+
+    #[test]
+    fn registry_sparse_is_sparse() {
+        let d = by_name("sim-sparse-small", 1).unwrap();
+        assert!(d.x.is_sparse());
+        assert_eq!(d.n(), 100);
+        assert_eq!(d.p(), 2000);
+        assert!(d.x.nnz() < d.n() * d.p() / 10);
     }
 }

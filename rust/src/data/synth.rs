@@ -2,7 +2,7 @@
 //! workloads. Each function documents which paper dataset it stands in
 //! for and which structural properties are preserved (DESIGN.md §4).
 
-use crate::linalg::Mat;
+use crate::linalg::{CscMat, Mat};
 use crate::model::LossKind;
 use crate::util::prng::Rng;
 
@@ -27,7 +27,51 @@ pub fn synth_linear(n: usize, p: usize, seed: u64) -> Dataset {
     }
     Dataset {
         name: format!("sim(n={n},p={p})"),
-        x,
+        x: x.into(),
+        y,
+        loss: LossKind::Squared,
+        tree: None,
+    }
+}
+
+/// Sparse design stand-in for the rcv1/news20-style text corpora the
+/// paper's scalability claim targets: each column has ~`density`·n
+/// nonzero N(0,1) entries, rescaled to unit column norm (centering
+/// would destroy sparsity, so columns are normalized, not
+/// standardized); a (p/100)-sparse true β; y = Xβ + small noise; LS
+/// loss. Stored as CSC — no dense n×p block is ever materialized.
+pub fn synth_sparse(n: usize, p: usize, density: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x59A2);
+    let nnz_per_col = ((n as f64 * density).round() as usize).clamp(1, n);
+    let mut cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        let mut col: Vec<(usize, f64)> = rng
+            .sample_indices(n, nnz_per_col)
+            .into_iter()
+            .map(|i| (i, rng.normal()))
+            .collect();
+        let nrm = col.iter().map(|&(_, v)| v * v).sum::<f64>().sqrt();
+        if nrm > 1e-12 {
+            for e in col.iter_mut() {
+                e.1 /= nrm;
+            }
+        }
+        cols.push(col);
+    }
+    let x = CscMat::from_cols(n, cols);
+    let mut beta = vec![0.0; p];
+    let k = (p / 100).clamp(5.min(p), p);
+    for i in rng.sample_indices(p, k) {
+        beta[i] = rng.range(-1.0, 1.0);
+    }
+    let mut y = vec![0.0; n];
+    x.mul_vec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += 0.01 * rng.normal();
+    }
+    Dataset {
+        name: format!("sparse(n={n},p={p},d={density})"),
+        x: x.into(),
         y,
         loss: LossKind::Squared,
         tree: None,
@@ -76,7 +120,7 @@ pub fn gene_expr(n: usize, p: usize, seed: u64) -> Dataset {
     }
     Dataset {
         name: format!("gene-expr(n={n},p={p})"),
-        x,
+        x: x.into(),
         y,
         loss: LossKind::Squared, // paper fits LASSO linear regression to ±1
         tree: None,
@@ -112,7 +156,7 @@ pub fn gisette_like(n: usize, p: usize, seed: u64) -> Dataset {
     super::standardize(&mut x);
     Dataset {
         name: format!("gisette-like(n={n},p={p})"),
-        x,
+        x: x.into(),
         y,
         loss: LossKind::Logistic,
         tree: None,
@@ -150,7 +194,7 @@ pub fn usps_like(n: usize, p: usize, seed: u64) -> Dataset {
     super::standardize(&mut x);
     Dataset {
         name: format!("usps-like(n={n},p={p})"),
-        x,
+        x: x.into(),
         y,
         loss: LossKind::Logistic,
         tree: None,
@@ -189,7 +233,7 @@ pub fn pet_like(n: usize, p: usize, seed: u64) -> Dataset {
     let tree = super::tree::correlation_tree(&x);
     Dataset {
         name: format!("pet-like(n={n},p={p})"),
-        x,
+        x: x.into(),
         y,
         loss: LossKind::Logistic,
         tree: Some(tree),
@@ -217,18 +261,34 @@ mod tests {
     fn generators_deterministic() {
         let a = synth_linear(50, 80, 9);
         let b = synth_linear(50, 80, 9);
-        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.x, b.x);
         assert_eq!(a.y, b.y);
+        let c = synth_sparse(40, 300, 0.05, 9);
+        let d = synth_sparse(40, 300, 0.05, 9);
+        assert_eq!(c.x, d.x);
+        assert_eq!(c.y, d.y);
     }
 
     #[test]
     fn gene_expr_block_correlation() {
         let d = gene_expr(60, 200, 2);
         // columns in the same module correlate far more than across
-        let c_in = crate::linalg::dot(d.x.col(0), d.x.col(1)).abs();
-        let c_out = crate::linalg::dot(d.x.col(0), d.x.col(150)).abs();
+        let xm = d.x.as_dense();
+        let c_in = crate::linalg::dot(xm.col(0), xm.col(1)).abs();
+        let c_out = crate::linalg::dot(xm.col(0), xm.col(150)).abs();
         assert!(c_in > 0.3, "in-module corr {c_in}");
         assert!(c_in > c_out, "in {c_in} vs out {c_out}");
+    }
+
+    #[test]
+    fn synth_sparse_has_unit_norm_sparse_columns() {
+        let d = synth_sparse(50, 400, 0.1, 3);
+        assert!(d.x.is_sparse());
+        // ~5 nonzeros per column, never densified
+        assert!(d.x.nnz() <= 400 * 5);
+        for &n2 in &d.problem().col_nrm2 {
+            assert!((n2 - 1.0).abs() < 1e-9, "col norm² {n2}");
+        }
     }
 
     #[test]

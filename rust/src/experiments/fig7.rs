@@ -36,7 +36,7 @@ pub fn run(which: Which) -> Vec<Table> {
             (ds, edges, LossKind::Logistic, "Fig 7 right: fused logistic, FDG-PET + corr tree")
         }
     };
-    let lam_max = FusedSaif::lambda_max(&ds.x, &ds.y, loss, &edges).expect("λmax");
+    let lam_max = FusedSaif::lambda_max(ds.x.as_dense(), &ds.y, loss, &edges).expect("λmax");
     let fracs = [0.5, 0.2, 0.05];
     let eps = 1e-6;
 
@@ -51,14 +51,14 @@ pub fn run(which: Which) -> Vec<Table> {
             &mut eng,
             FusedSaifConfig { saif: SaifConfig { eps, ..Default::default() }, ..Default::default() },
         );
-        let sres = fs.solve(&ds.x, &ds.y, loss, &edges, lam).expect("fused saif");
+        let sres = fs.solve(ds.x.as_dense(), &ds.y, loss, &edges, lam).expect("fused saif");
         // ADMM runs until objective parity with SAIF (same accuracy)
         let mut admm = FusedAdmm::new(FusedAdmmConfig {
             max_iters: if full { 50_000 } else { 8_000 },
             ..Default::default()
         });
         let target = sres.objective * (1.0 + 1e-6) + 1e-9;
-        let ares = admm.solve(&ds.x, &ds.y, loss, &edges, lam, Some(target));
+        let ares = admm.solve(ds.x.as_dense(), &ds.y, loss, &edges, lam, Some(target));
         t.row(vec![
             format!("{f}"),
             common::fsec(sres.secs),

@@ -265,7 +265,7 @@ mod tests {
         let edges: Vec<(usize, usize)> = (0..19).map(|i| (i, i + 1)).collect();
         let mut admm = FusedAdmm::new(Default::default());
         let lam_big = 50.0;
-        let res = admm.solve(&ds.x, &ds.y, LossKind::Squared, &edges, lam_big, None);
+        let res = admm.solve(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges, lam_big, None);
         // with a huge fusion penalty all coefficients collapse together
         let b0 = res.beta[0];
         for &b in &res.beta {
@@ -279,9 +279,9 @@ mod tests {
         let edges = tree::preferential_attachment(16, 9);
         let mut admm = FusedAdmm::new(FusedAdmmConfig { max_iters: 300, ..Default::default() });
         let lam = 0.05;
-        let res = admm.solve(&ds.x, &ds.y, LossKind::Logistic, &edges, lam, None);
+        let res = admm.solve(ds.x.as_dense(), &ds.y, LossKind::Logistic, &edges, lam, None);
         let zero_obj = super::super::fused_objective(
-            &ds.x, &ds.y, LossKind::Logistic, &edges, &vec![0.0; 16], lam,
+            ds.x.as_dense(), &ds.y, LossKind::Logistic, &edges, &vec![0.0; 16], lam,
         );
         assert!(res.objective < zero_obj, "{} vs {zero_obj}", res.objective);
     }

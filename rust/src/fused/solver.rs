@@ -243,7 +243,7 @@ mod tests {
         let ds = synth::gene_expr(40, 60, 71);
         let edges = tree::preferential_attachment(60, 3);
         let lam_max =
-            FusedSaif::lambda_max(&ds.x, &ds.y, LossKind::Squared, &edges).unwrap();
+            FusedSaif::lambda_max(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges).unwrap();
         let lam = lam_max * 0.3;
         let mut eng = NativeEngine::new();
         let mut fs = FusedSaif::new(
@@ -253,12 +253,12 @@ mod tests {
                 ..Default::default()
             },
         );
-        let res = fs.solve(&ds.x, &ds.y, LossKind::Squared, &edges, lam).unwrap();
+        let res = fs.solve(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges, lam).unwrap();
         assert!(res.gap <= 1e-10);
         // cross-check with ADMM until objective parity
         let mut admm = super::super::admm::FusedAdmm::new(Default::default());
         let ares = admm.solve(
-            &ds.x,
+            ds.x.as_dense(),
             &ds.y,
             LossKind::Squared,
             &edges,
@@ -279,11 +279,11 @@ mod tests {
         let ds = synth::gene_expr(30, 40, 73);
         let edges = tree::preferential_attachment(40, 5);
         let lam_max =
-            FusedSaif::lambda_max(&ds.x, &ds.y, LossKind::Squared, &edges).unwrap();
+            FusedSaif::lambda_max(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges).unwrap();
         let mut eng = NativeEngine::new();
         let mut fs = FusedSaif::new(&mut eng, Default::default());
         let res = fs
-            .solve(&ds.x, &ds.y, LossKind::Squared, &edges, lam_max * 1.05)
+            .solve(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges, lam_max * 1.05)
             .unwrap();
         // all β equal (all edge differences zero)
         let b0 = res.beta[0];
@@ -297,7 +297,7 @@ mod tests {
         let ds = synth::pet_like(60, 24, 75);
         let edges = ds.tree.clone().unwrap();
         let lam_max =
-            FusedSaif::lambda_max(&ds.x, &ds.y, LossKind::Logistic, &edges).unwrap();
+            FusedSaif::lambda_max(ds.x.as_dense(), &ds.y, LossKind::Logistic, &edges).unwrap();
         let lam = lam_max * 0.3;
         let mut eng = NativeEngine::new();
         // 1e-6: the transformed subtree-sum columns are near-collinear,
@@ -310,17 +310,17 @@ mod tests {
                 ..Default::default()
             },
         );
-        let res = fs.solve(&ds.x, &ds.y, LossKind::Logistic, &edges, lam).unwrap();
+        let res = fs.solve(ds.x.as_dense(), &ds.y, LossKind::Logistic, &edges, lam).unwrap();
         assert!(res.gap <= 1e-6, "gap {}", res.gap);
         // objective should beat the trivial all-equal solution
         let lam_hi = lam_max * 2.0;
         let mut eng2 = NativeEngine::new();
         let mut fs2 = FusedSaif::new(&mut eng2, Default::default());
         let triv = fs2
-            .solve(&ds.x, &ds.y, LossKind::Logistic, &edges, lam_hi)
+            .solve(ds.x.as_dense(), &ds.y, LossKind::Logistic, &edges, lam_hi)
             .unwrap();
         let triv_obj_at_lam =
-            super::super::fused_objective(&ds.x, &ds.y, LossKind::Logistic, &edges, &triv.beta, lam);
+            super::super::fused_objective(ds.x.as_dense(), &ds.y, LossKind::Logistic, &edges, &triv.beta, lam);
         assert!(res.objective <= triv_obj_at_lam + 1e-9);
     }
 }

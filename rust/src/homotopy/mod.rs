@@ -11,7 +11,6 @@
 //! recovered support can fall below 1 (Table 1) — unlike SAIF.
 
 use crate::cm::{solve_subproblem, Engine};
-use crate::linalg::dot;
 use crate::model::Problem;
 use crate::screening::strong::strong_rule_keep;
 use crate::util::Stopwatch;
@@ -96,10 +95,10 @@ impl<'a> Homotopy<'a> {
                 let best = *cand
                     .iter()
                     .max_by(|&&a, &&b| {
-                        dot(prob.x.col(a), &d0)
+                        prob.x
+                            .col_dot(a, &d0)
                             .abs()
-                            .partial_cmp(&dot(prob.x.col(b), &d0).abs())
-                            .unwrap()
+                            .total_cmp(&prob.x.col_dot(b, &d0).abs())
                     })
                     .unwrap();
                 work.push(best);
@@ -136,7 +135,7 @@ impl<'a> Homotopy<'a> {
                     .collect();
                 let mut grew = false;
                 for &i in &cand {
-                    if !in_work[i] && dot(prob.x.col(i), &fp).abs() > lam {
+                    if !in_work[i] && prob.x.col_dot(i, &fp).abs() > lam {
                         in_work[i] = true;
                         work.push(i);
                         grew = true;

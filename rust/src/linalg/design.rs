@@ -1,0 +1,403 @@
+//! The `Design` abstraction: one type for the design matrix X that
+//! every solver layer (model, CM engines, SAIF, screening, BLITZ,
+//! homotopy, coordinator) works against, with dense column-major and
+//! compressed-sparse-column backends. Solvers only ever use the small
+//! operation set exposed here — `col_dot`, `col_axpy`, `mul_t_vec`,
+//! `col_norms_sq`, `n_rows`/`n_cols` — so the sparse text workloads
+//! the paper is fastest on (rcv1-style corpora) run without ever
+//! materializing an n×p block.
+//!
+//! The two O(n·p) (dense) / O(nnz) (sparse) hot paths — the full-p
+//! screening scan and `mul_t_vec` — are parallelizable over column
+//! chunks via [`Parallelism`] and `std::thread::scope` (the vendored
+//! registry has no rayon).
+
+use super::mat::Mat;
+use super::sparse::CscMat;
+
+/// Column-parallelism policy for full-p scans. `Serial` is the default
+/// everywhere: the coordinator already parallelizes across requests,
+/// so per-scan threading is opt-in for low-concurrency, huge-p solves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// Single-threaded (default).
+    #[default]
+    Serial,
+    /// Exactly this many worker threads (clamped to the column count).
+    Fixed(usize),
+    /// `available_parallelism()`, but only once the scan is wide enough
+    /// (≥ `AUTO_MIN_COLS` columns) to amortize thread spawns.
+    Auto,
+}
+
+impl Parallelism {
+    /// Below this column count `Auto` stays serial: spawning threads
+    /// costs more than the scan itself.
+    pub const AUTO_MIN_COLS: usize = 4096;
+
+    /// Worker threads to use for a scan over `n_cols` columns.
+    pub fn threads(&self, n_cols: usize) -> usize {
+        match *self {
+            Parallelism::Serial => 1,
+            Parallelism::Fixed(k) => k.clamp(1, n_cols.max(1)),
+            Parallelism::Auto => {
+                if n_cols < Self::AUTO_MIN_COLS {
+                    return 1;
+                }
+                let hw = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1);
+                hw.clamp(1, (n_cols / 1024).max(1))
+            }
+        }
+    }
+
+    /// Parse a CLI/config value: "serial", "auto", or a thread count.
+    pub fn parse(s: &str) -> Option<Parallelism> {
+        match s {
+            "serial" | "off" | "1" => Some(Parallelism::Serial),
+            "auto" => Some(Parallelism::Auto),
+            _ => s.parse::<usize>().ok().map(|k| {
+                if k <= 1 {
+                    Parallelism::Serial
+                } else {
+                    Parallelism::Fixed(k)
+                }
+            }),
+        }
+    }
+}
+
+/// A design matrix: dense column-major or compressed sparse column.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Design {
+    Dense(Mat),
+    Sparse(CscMat),
+}
+
+impl From<Mat> for Design {
+    fn from(m: Mat) -> Design {
+        Design::Dense(m)
+    }
+}
+
+impl From<CscMat> for Design {
+    fn from(m: CscMat) -> Design {
+        Design::Sparse(m)
+    }
+}
+
+/// Iterator over one column's stored entries as (row, value). For the
+/// dense backend this yields every row (including zeros); for the
+/// sparse backend only the stored nonzeros, in increasing row order.
+pub enum ColIter<'a> {
+    Dense(std::iter::Enumerate<std::slice::Iter<'a, f64>>),
+    Sparse(std::iter::Zip<std::slice::Iter<'a, usize>, std::slice::Iter<'a, f64>>),
+}
+
+impl<'a> Iterator for ColIter<'a> {
+    type Item = (usize, f64);
+
+    #[inline]
+    fn next(&mut self) -> Option<(usize, f64)> {
+        match self {
+            ColIter::Dense(it) => it.next().map(|(i, &v)| (i, v)),
+            ColIter::Sparse(it) => it.next().map(|(&i, &v)| (i, v)),
+        }
+    }
+}
+
+impl Design {
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.n_rows(),
+            Design::Sparse(m) => m.n_rows(),
+        }
+    }
+
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.n_cols(),
+            Design::Sparse(m) => m.n_cols(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Design::Sparse(_))
+    }
+
+    /// Stored entries (dense: n·p, sparse: nnz).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.n_rows() * m.n_cols(),
+            Design::Sparse(m) => m.nnz(),
+        }
+    }
+
+    /// Short storage tag for logs ("dense" / "csc").
+    pub fn storage(&self) -> &'static str {
+        match self {
+            Design::Dense(_) => "dense",
+            Design::Sparse(_) => "csc",
+        }
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            Design::Dense(m) => m.get(i, j),
+            Design::Sparse(m) => m.get(i, j),
+        }
+    }
+
+    /// x_jᵀ v.
+    #[inline]
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        match self {
+            Design::Dense(m) => super::ops::dot(m.col(j), v),
+            Design::Sparse(m) => m.col_dot(j, v),
+        }
+    }
+
+    /// out += alpha * x_j.
+    #[inline]
+    pub fn col_axpy(&self, alpha: f64, j: usize, out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => super::ops::axpy(alpha, m.col(j), out),
+            Design::Sparse(m) => m.col_axpy(alpha, j, out),
+        }
+    }
+
+    /// Stored entries of column j as (row, value) pairs.
+    pub fn col_iter(&self, j: usize) -> ColIter<'_> {
+        match self {
+            Design::Dense(m) => ColIter::Dense(m.col(j).iter().enumerate()),
+            Design::Sparse(m) => {
+                let (rows, vals) = m.col(j);
+                ColIter::Sparse(rows.iter().zip(vals.iter()))
+            }
+        }
+    }
+
+    /// y = X v.
+    pub fn mul_vec(&self, v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.mul_vec(v, out),
+            Design::Sparse(m) => m.mul_vec(v, out),
+        }
+    }
+
+    /// out = Xᵀ v (the screening scan), single-threaded.
+    pub fn mul_t_vec(&self, v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.mul_t_vec(v, out),
+            Design::Sparse(m) => m.mul_t_vec(v, out),
+        }
+    }
+
+    /// out = Xᵀ v, chunked over columns across `par.threads()` scoped
+    /// threads. Each thread owns a disjoint slice of `out`, so results
+    /// are bitwise identical to the serial scan (per-column reduction
+    /// order is unchanged).
+    pub fn mul_t_vec_par(&self, v: &[f64], out: &mut [f64], par: Parallelism) {
+        assert_eq!(v.len(), self.n_rows());
+        assert_eq!(out.len(), self.n_cols());
+        let threads = par.threads(self.n_cols());
+        if threads <= 1 || out.is_empty() {
+            self.mul_t_vec(v, out);
+            return;
+        }
+        let chunk = out.len().div_ceil(threads);
+        std::thread::scope(|s| {
+            for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                let start = c * chunk;
+                s.spawn(move || {
+                    for (k, o) in out_chunk.iter_mut().enumerate() {
+                        *o = self.col_dot(start + k, v);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Squared norms of all columns.
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => m.col_norms_sq(),
+            Design::Sparse(m) => m.col_norms_sq(),
+        }
+    }
+
+    /// Gather a sub-matrix of the given columns (keeps the backend).
+    pub fn select_cols(&self, cols: &[usize]) -> Design {
+        match self {
+            Design::Dense(m) => Design::Dense(m.select_cols(cols)),
+            Design::Sparse(m) => Design::Sparse(m.select_cols(cols)),
+        }
+    }
+
+    /// Gather a sub-matrix of the given rows, in `rows` order (CV fold
+    /// splits; keeps the backend). Duplicate row indices repeat the
+    /// row on both backends.
+    pub fn select_rows(&self, rows: &[usize]) -> Design {
+        match self {
+            Design::Dense(m) => Design::Dense(m.select_rows(rows)),
+            Design::Sparse(m) => Design::Sparse(m.select_rows(rows)),
+        }
+    }
+
+    /// The dense backend, for consumers that require contiguous column
+    /// slices (the fused-LASSO tree transform). Panics on a sparse
+    /// design — densify explicitly with [`Design::to_dense`] first.
+    pub fn as_dense(&self) -> &Mat {
+        match self {
+            Design::Dense(m) => m,
+            Design::Sparse(_) => {
+                panic!("dense design required; call to_dense() to densify explicitly")
+            }
+        }
+    }
+
+    /// Materialize a dense copy.
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            Design::Dense(m) => m.clone(),
+            Design::Sparse(m) => m.to_dense(),
+        }
+    }
+
+    /// Address of the backing storage — a cheap identity key for packed
+    /// buffer caches (see `runtime::pjrt`).
+    pub fn data_ptr(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.data().as_ptr() as usize,
+            Design::Sparse(m) => m.values().as_ptr() as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_pair(rng: &mut Rng, n: usize, p: usize) -> (Design, Design) {
+        let mut cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let nnz = rng.below(n.min(6) + 1);
+            cols.push(
+                rng.sample_indices(n, nnz)
+                    .into_iter()
+                    .map(|i| (i, rng.normal()))
+                    .collect(),
+            );
+        }
+        let sp = CscMat::from_cols(n, cols);
+        let dn = sp.to_dense();
+        (Design::Sparse(sp), Design::Dense(dn))
+    }
+
+    #[test]
+    fn backends_agree_on_all_kernels() {
+        let mut rng = Rng::new(77);
+        for _ in 0..10 {
+            let n = 5 + rng.below(20);
+            let p = 3 + rng.below(30);
+            let (sp, dn) = random_pair(&mut rng, n, p);
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            for j in 0..p {
+                assert!((sp.col_dot(j, &v) - dn.col_dot(j, &v)).abs() < 1e-12);
+            }
+            let (mut a, mut b) = (vec![0.0; p], vec![0.0; p]);
+            sp.mul_t_vec(&v, &mut a);
+            dn.mul_t_vec(&v, &mut b);
+            for j in 0..p {
+                assert!((a[j] - b[j]).abs() < 1e-12);
+            }
+            let (mut ya, mut yb) = (vec![0.0; n], vec![0.0; n]);
+            sp.mul_vec(&w, &mut ya);
+            dn.mul_vec(&w, &mut yb);
+            for i in 0..n {
+                assert!((ya[i] - yb[i]).abs() < 1e-12);
+            }
+            let (na, nb) = (sp.col_norms_sq(), dn.col_norms_sq());
+            for j in 0..p {
+                assert!((na[j] - nb[j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_scan_matches_serial_exactly() {
+        let mut rng = Rng::new(78);
+        let (n, p) = (30, 500);
+        let (sp, dn) = random_pair(&mut rng, n, p);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        for design in [&sp, &dn] {
+            let mut serial = vec![0.0; p];
+            design.mul_t_vec(&v, &mut serial);
+            for threads in [2, 3, 7, 64] {
+                let mut par = vec![0.0; p];
+                design.mul_t_vec_par(&v, &mut par, Parallelism::Fixed(threads));
+                assert_eq!(serial, par, "threads={threads}");
+            }
+            let mut auto = vec![0.0; p];
+            design.mul_t_vec_par(&v, &mut auto, Parallelism::Auto);
+            assert_eq!(serial, auto);
+        }
+    }
+
+    #[test]
+    fn col_axpy_and_iter_agree() {
+        let mut rng = Rng::new(79);
+        let (sp, dn) = random_pair(&mut rng, 12, 8);
+        for j in 0..8 {
+            let (mut a, mut b) = (vec![0.5; 12], vec![0.5; 12]);
+            sp.col_axpy(1.5, j, &mut a);
+            dn.col_axpy(1.5, j, &mut b);
+            assert_eq!(a, b);
+            // iter: sparse yields only nonzeros; both reconstruct the column
+            let mut ca = vec![0.0; 12];
+            for (i, v) in sp.col_iter(j) {
+                ca[i] = v;
+            }
+            let mut cb = vec![0.0; 12];
+            for (i, v) in dn.col_iter(j) {
+                cb[i] = v;
+            }
+            assert_eq!(ca, cb);
+        }
+    }
+
+    #[test]
+    fn select_rows_cols_keep_backend() {
+        let mut rng = Rng::new(80);
+        let (sp, dn) = random_pair(&mut rng, 10, 6);
+        assert!(sp.select_cols(&[0, 3]).is_sparse());
+        assert!(!dn.select_cols(&[0, 3]).is_sparse());
+        let rows = [7usize, 2, 4];
+        let (rs, rd) = (sp.select_rows(&rows), dn.select_rows(&rows));
+        for j in 0..6 {
+            for (new, &old) in rows.iter().enumerate() {
+                assert_eq!(rs.get(new, j), sp.get(old, j));
+                assert_eq!(rd.get(new, j), dn.get(old, j));
+            }
+        }
+    }
+
+    #[test]
+    fn parallelism_policy() {
+        assert_eq!(Parallelism::Serial.threads(1_000_000), 1);
+        assert_eq!(Parallelism::Fixed(8).threads(1_000_000), 8);
+        assert_eq!(Parallelism::Fixed(8).threads(3), 3);
+        assert_eq!(Parallelism::Auto.threads(100), 1);
+        assert!(Parallelism::Auto.threads(1_000_000) >= 1);
+        assert_eq!(Parallelism::parse("serial"), Some(Parallelism::Serial));
+        assert_eq!(Parallelism::parse("auto"), Some(Parallelism::Auto));
+        assert_eq!(Parallelism::parse("4"), Some(Parallelism::Fixed(4)));
+        assert_eq!(Parallelism::parse("1"), Some(Parallelism::Serial));
+        assert_eq!(Parallelism::parse("nope"), None);
+    }
+}

@@ -107,6 +107,20 @@ impl Mat {
         m
     }
 
+    /// Gather a sub-matrix of the given rows, in `rows` order (CV fold
+    /// splits).
+    pub fn select_rows(&self, rows: &[usize]) -> Mat {
+        let mut m = Mat::zeros(rows.len(), self.n_cols);
+        for j in 0..self.n_cols {
+            let src = self.col(j);
+            let dst = m.col_mut(j);
+            for (r, &i) in rows.iter().enumerate() {
+                dst[r] = src[i];
+            }
+        }
+        m
+    }
+
     /// Largest eigenvalue of X^T X via power iteration (used for the
     /// complexity-model constants of Theorems 4/5).
     pub fn sigma_max(&self, iters: usize, seed: u64) -> f64 {
@@ -173,6 +187,15 @@ mod tests {
         assert_eq!(s.n_cols(), 2);
         assert_eq!(s.get(1, 0), 12.0);
         assert_eq!(s.get(1, 1), 10.0);
+    }
+
+    #[test]
+    fn select_rows_gathers_in_order() {
+        let m = Mat::from_fn(4, 3, |i, j| (i * 10 + j) as f64);
+        let s = m.select_rows(&[3, 1]);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.get(0, 2), 32.0);
+        assert_eq!(s.get(1, 0), 10.0);
     }
 
     #[test]

@@ -1,17 +1,27 @@
-//! Dense linear algebra substrate: column-major matrix + the small set
-//! of BLAS-1/2 kernels the solvers need (dot, axpy, norms, X^T v, X v).
+//! Linear-algebra substrate: the [`Design`] matrix abstraction (dense
+//! column-major [`Mat`] or compressed-sparse-column [`CscMat`]) plus
+//! the small set of BLAS-1/2 kernels the solvers need (dot, axpy,
+//! norms, Xᵀv, Xv).
 //!
-//! Column-major layout is deliberate: every algorithm in this repo
-//! (coordinate minimization, screening scans) walks *columns* of the
-//! design matrix, so each column is a contiguous slice. The hot kernels
-//! (`dot`, `axpy`) are manually unrolled 4-wide — this is the native
-//! engine's inner loop (see EXPERIMENTS.md §Perf for measurements).
+//! Column-contiguous layouts are deliberate: every algorithm in this
+//! repo (coordinate minimization, screening scans) walks *columns* of
+//! the design matrix, so each column is contiguous — a slice for the
+//! dense backend, an (indices, values) pair for the sparse one. The
+//! dense hot kernels (`dot`, `axpy`) are manually unrolled 4-wide —
+//! this is the native engine's inner loop (see EXPERIMENTS.md §Perf).
 //! The native engine computes in f64 (the paper's 1e-9 duality gaps
 //! are unreachable in f32); the PJRT engine is f32 and is cross-checked
 //! against this one at looser tolerance.
+//!
+//! Full-p scans (`Design::mul_t_vec_par`) can be chunked over columns
+//! across scoped threads via [`Parallelism`].
 
+pub mod design;
 pub mod mat;
 pub mod ops;
+pub mod sparse;
 
+pub use design::{ColIter, Design, Parallelism};
 pub use mat::Mat;
 pub use ops::{axpy, dot, nrm2_sq, scale, sub};
+pub use sparse::CscMat;

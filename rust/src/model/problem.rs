@@ -1,6 +1,6 @@
 //! The LASSO problem container and its primal/dual machinery.
 
-use crate::linalg::{dot, Mat};
+use crate::linalg::{dot, Design, Parallelism};
 
 use super::loss::LossKind;
 
@@ -15,13 +15,13 @@ pub struct DualPoint {
     pub dual: f64,
 }
 
-/// A (sub-)problem instance: design matrix, labels, loss, plus cached
-/// column norms. The full problem owns the full X; SAIF's sub-problems
-/// are expressed as index sets *into* this problem (no column copies
-/// on the native path).
+/// A (sub-)problem instance: design matrix (dense or sparse
+/// [`Design`]), labels, loss, plus cached column norms. The full
+/// problem owns the full X; SAIF's sub-problems are expressed as index
+/// sets *into* this problem (no column copies on the native path).
 #[derive(Debug, Clone)]
 pub struct Problem {
-    pub x: Mat,
+    pub x: Design,
     pub y: Vec<f64>,
     pub loss: LossKind,
     /// ‖x_i‖₂² for every column (cached at construction).
@@ -34,7 +34,8 @@ pub struct Problem {
 }
 
 impl Problem {
-    pub fn new(x: Mat, y: Vec<f64>, loss: LossKind) -> Problem {
+    pub fn new(x: impl Into<Design>, y: Vec<f64>, loss: LossKind) -> Problem {
+        let x = x.into();
         assert_eq!(x.n_rows(), y.len());
         let col_nrm2 = x.col_norms_sq();
         Problem { x, y, loss, col_nrm2, offset: None }
@@ -70,18 +71,31 @@ impl Problem {
 
     /// λ_max = max_i |x_iᵀ f'(0)|: the smallest λ with β* = 0.
     pub fn lambda_max(&self) -> f64 {
-        let d0 = self.neg_deriv_at_zero();
-        (0..self.p())
-            .map(|i| dot(self.x.col(i), &d0).abs())
+        self.lambda_max_par(Parallelism::Serial)
+    }
+
+    /// λ_max computed with a parallel full-p scan.
+    pub fn lambda_max_par(&self, par: Parallelism) -> f64 {
+        self.init_corrs_par(par)
+            .into_iter()
             .fold(0.0, f64::max)
     }
 
     /// Initial screening correlations |x_iᵀ f'(0)| for all columns.
     pub fn init_corrs(&self) -> Vec<f64> {
+        self.init_corrs_par(Parallelism::Serial)
+    }
+
+    /// Initial correlations via a parallel full-p scan (one |Xᵀ f'(0)|
+    /// pass — the first of SAIF's O(n·p) costs).
+    pub fn init_corrs_par(&self, par: Parallelism) -> Vec<f64> {
         let d0 = self.neg_deriv_at_zero();
-        (0..self.p())
-            .map(|i| dot(self.x.col(i), &d0).abs())
-            .collect()
+        let mut out = vec![0.0; self.p()];
+        self.x.mul_t_vec_par(&d0, &mut out, par);
+        for v in out.iter_mut() {
+            *v = v.abs();
+        }
+        out
     }
 
     /// Margins u = offset + Xβ for a sparse β given as (index, value)
@@ -93,7 +107,7 @@ impl Problem {
         };
         for &(i, b) in beta {
             if b != 0.0 {
-                crate::linalg::axpy(b, self.x.col(i), &mut u);
+                self.x.col_axpy(b, i, &mut u);
             }
         }
         u
@@ -183,7 +197,7 @@ impl Problem {
         }
         let mut worst: f64 = 0.0;
         for i in 0..self.p() {
-            let g = dot(self.x.col(i), &fprime);
+            let g = self.x.col_dot(i, &fprime);
             match active.get(&i) {
                 Some(&b) => {
                     // x_iᵀ f'(u) + λ sign(β_i) = 0
@@ -210,6 +224,7 @@ fn xlogx(s: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Mat;
     use crate::util::prng::Rng;
 
     fn random_problem(seed: u64, n: usize, p: usize, loss: LossKind) -> Problem {
@@ -245,7 +260,7 @@ mod tests {
             let u = vec![0.0; prob.n()];
             let th = prob.theta_hat(&u, lam);
             let mx = (0..prob.p())
-                .map(|i| dot(prob.x.col(i), &th).abs())
+                .map(|i| prob.x.col_dot(i, &th).abs())
                 .fold(0.0, f64::max);
             let dp = prob.project_dual(&th, mx, lam);
             let primal = prob.primal_from_margins(&u, 0.0, lam);
@@ -256,7 +271,7 @@ mod tests {
             );
             // feasibility
             for i in 0..prob.p() {
-                assert!(dot(prob.x.col(i), &dp.theta).abs() <= 1.0 + 1e-9);
+                assert!(prob.x.col_dot(i, &dp.theta).abs() <= 1.0 + 1e-9);
             }
         }
     }
@@ -279,7 +294,7 @@ mod tests {
         let u = vec![0.0; prob.n()];
         let th = prob.theta_hat(&u, lam);
         let mx = (0..prob.p())
-            .map(|i| dot(prob.x.col(i), &th).abs())
+            .map(|i| prob.x.col_dot(i, &th).abs())
             .fold(0.0, f64::max);
         let dp = prob.project_dual(&th, mx, lam);
         // max of dual = n log 2 (entropy bound)

@@ -74,38 +74,29 @@ impl PjrtEngine {
     }
 
     /// Pack the active-column block row-major f32, zero-padded to the
-    /// bucket. (i, j) → row i * p_cap + j.
+    /// bucket. (i, j) → row i * p_cap + j. Iterates stored entries, so
+    /// sparse designs pack in O(nnz of the block).
     fn pack_active(prob: &Problem, active: &[usize], n_cap: usize, p_cap: usize) -> Vec<f32> {
-        let n = prob.n();
         let mut buf = vec![0.0f32; n_cap * p_cap];
         for (a, &col) in active.iter().enumerate() {
-            let c = prob.x.col(col);
-            for j in 0..n {
-                buf[j * p_cap + a] = c[j] as f32;
+            for (j, v) in prob.x.col_iter(col) {
+                buf[j * p_cap + a] = v as f32;
             }
         }
         buf
     }
 
     /// Pack (and cache) the FULL matrix row-major f32 for the scores
-    /// scan — the pack is O(n·p) and reused across every outer
+    /// scan — the pack is O(nnz) and reused across every outer
     /// iteration of a solve.
     fn pack_full(&mut self, prob: &Problem, n_cap: usize, p_cap: usize) -> &[f32] {
-        let key: PackKey = (
-            prob.x.data().as_ptr() as usize,
-            prob.n(),
-            prob.p(),
-            n_cap,
-            p_cap,
-        );
+        let key: PackKey = (prob.x.data_ptr(), prob.n(), prob.p(), n_cap, p_cap);
         self.full_pack.entry(key).or_insert_with(|| {
-            let n = prob.n();
             let p = prob.p();
             let mut buf = vec![0.0f32; n_cap * p_cap];
             for i in 0..p {
-                let c = prob.x.col(i);
-                for j in 0..n {
-                    buf[j * p_cap + i] = c[j] as f32;
+                for (j, v) in prob.x.col_iter(i) {
+                    buf[j * p_cap + i] = v as f32;
                 }
             }
             buf

@@ -1,0 +1,57 @@
+//! Always-unavailable stand-in for the PJRT engine, compiled when the
+//! `pjrt` feature is off (the `xla` runtime crate is not in the
+//! vendored registry). Mirrors the constructor surface of `pjrt.rs`;
+//! `new`/`with_dir` always fail, so the CLI, coordinator and tests
+//! fall back to the native engine gracefully.
+
+use crate::cm::{Engine, SubEval};
+use crate::model::Problem;
+use crate::runtime::manifest::Manifest;
+
+/// Placeholder PJRT engine. Build with `--features pjrt` (and the
+/// `xla` crate available) for the real artifact-backed engine.
+pub struct PjrtEngine {
+    manifest: Manifest,
+}
+
+impl PjrtEngine {
+    pub fn new() -> Result<PjrtEngine, String> {
+        Err("built without the `pjrt` feature (xla runtime unavailable); \
+             rebuild with --features pjrt"
+            .into())
+    }
+
+    pub fn with_dir(_dir: &str) -> Result<PjrtEngine, String> {
+        Self::new()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Always false: the stub can execute nothing.
+    pub fn supports(&self, _prob: &Problem, _active_len: usize) -> bool {
+        false
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn cm_eval(
+        &mut self,
+        _prob: &Problem,
+        _active: &[usize],
+        _beta: &mut [f64],
+        _lam: f64,
+        _k: usize,
+    ) -> SubEval {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+
+    fn scores(&mut self, _prob: &Problem, _theta: &[f64]) -> Vec<f64> {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}

@@ -15,7 +15,7 @@
 //!   ‖X_gᵀθ‖ + r·L_g < w_g ⇒ the sub-problem optimum is global.
 
 use crate::ball::gap_ball;
-use crate::linalg::{axpy, dot};
+use crate::linalg::dot;
 use crate::model::{LossKind, Problem};
 use crate::util::Stopwatch;
 
@@ -162,7 +162,7 @@ impl GroupSaif {
             .map(|g| group_norm(prob, &groups.members[g], &d0) / groups.weights[g])
             .collect();
         let mut order: Vec<usize> = (0..ng).collect();
-        order.sort_by(|&a, &b| init_scores[b].partial_cmp(&init_scores[a]).unwrap());
+        order.sort_by(|&a, &b| init_scores[b].total_cmp(&init_scores[a]));
         let mut in_active = vec![false; ng];
         let mut active: Vec<usize> = order
             .iter()
@@ -230,7 +230,7 @@ impl GroupSaif {
                     in_active[g] = false;
                     for &i in &groups.members[g] {
                         if beta[i] != 0.0 {
-                            axpy(beta[i], prob.x.col(i), &mut resid);
+                            prob.x.col_axpy(beta[i], i, &mut resid);
                             beta[i] = 0.0;
                         }
                     }
@@ -290,7 +290,7 @@ impl GroupSaif {
             // LOWER bound dominates all but < h̃ other remaining groups'
             // UPPER bounds; otherwise refine the ball first. Without
             // this, a loose early ball recruits every group at once.
-            violators.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            violators.sort_by(|a, b| b.0.total_cmp(&a.0));
             let mut uppers: Vec<f64> = (0..ng)
                 .filter(|&g| !in_active[g])
                 .map(|g| {
@@ -298,7 +298,7 @@ impl GroupSaif {
                         / groups.weights[g]
                 })
                 .collect();
-            uppers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            uppers.sort_by(|a, b| a.total_cmp(b));
             let h_tilde = self.cfg.add_batch.max(1);
             let mut added = 0usize;
             for &(_, g) in violators.iter() {
@@ -346,7 +346,7 @@ fn group_norm(prob: &Problem, members: &[usize], v: &[f64]) -> f64 {
     members
         .iter()
         .map(|&i| {
-            let c = dot(prob.x.col(i), v);
+            let c = prob.x.col_dot(i, v);
             c * c
         })
         .sum::<f64>()
@@ -371,7 +371,7 @@ fn block_update(
     let l2 = l_g * l_g;
     let mut z: Vec<f64> = Vec::with_capacity(members.len());
     for &i in members {
-        z.push(beta[i] + dot(prob.x.col(i), resid) / l2);
+        z.push(beta[i] + prob.x.col_dot(i, resid) / l2);
     }
     let znorm = z.iter().map(|v| v * v).sum::<f64>().sqrt();
     let scale = if znorm > 1e-300 {
@@ -382,7 +382,7 @@ fn block_update(
     for (k, &i) in members.iter().enumerate() {
         let bn = scale * z[k];
         if bn != beta[i] {
-            axpy(beta[i] - bn, prob.x.col(i), resid);
+            prob.x.col_axpy(beta[i] - bn, i, resid);
             beta[i] = bn;
         }
     }

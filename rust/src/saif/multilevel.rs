@@ -53,7 +53,7 @@ impl<'a> MultiLevelSaif<'a> {
         // tier split by initial correlations
         let corrs = prob.init_corrs();
         let mut order: Vec<usize> = (0..prob.p()).collect();
-        order.sort_by(|&a, &b| corrs[b].partial_cmp(&corrs[a]).unwrap());
+        order.sort_by(|&a, &b| corrs[b].total_cmp(&corrs[a]));
         let hot_n = ((prob.p() as f64 * self.cfg.hot_frac).ceil() as usize)
             .clamp(1, prob.p());
         let hot: Vec<usize> = order[..hot_n].to_vec();

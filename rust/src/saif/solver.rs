@@ -2,6 +2,7 @@
 
 use crate::ball::{gap_ball, intersect, thm2_ball_ls, Ball};
 use crate::cm::{Engine, SubEval};
+use crate::linalg::Parallelism;
 use crate::model::{LossKind, Problem};
 use crate::util::Stopwatch;
 
@@ -41,6 +42,11 @@ pub struct SaifConfig {
     /// the K = Cp choice in the paper's own complexity proofs
     /// (Theorems 4/5): balances inner-epoch cost against scan cost.
     pub adaptive_k: bool,
+    /// Column parallelism for the O(n·p) full scans (init corrs and
+    /// the engine's ADD scores scan). `None` inherits whatever the
+    /// engine is already configured with (the coordinator sets
+    /// engine-level parallelism per worker); `Some(par)` forces it.
+    pub parallelism: Option<Parallelism>,
     /// Record a trace (Figures 3/4).
     pub trace: bool,
 }
@@ -58,6 +64,7 @@ impl Default for SaifConfig {
             stall_outer: 200,
             scan_gap_factor: 0.5,
             adaptive_k: true,
+            parallelism: None,
             trace: false,
         }
     }
@@ -115,6 +122,12 @@ impl<'a> Saif<'a> {
     ) -> SaifResult {
         let sw = Stopwatch::start();
         let p = prob.p();
+        if let Some(par) = self.cfg.parallelism {
+            self.engine.set_parallelism(par);
+        }
+        // problem-level scans match the engine's setting, so `None`
+        // genuinely inherits (coordinator workers configure the engine)
+        let scan_par = self.cfg.parallelism.unwrap_or_else(|| self.engine.parallelism());
         let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
         // |x_iᵀ y| cached once: the Theorem-2 ball needs λ_max(t) =
         // max over the ACTIVE set every outer iteration; recomputing
@@ -122,7 +135,7 @@ impl<'a> Saif<'a> {
         let corr_y: Option<Vec<f64>> =
             if self.cfg.use_thm2_ball && prob.loss == LossKind::Squared {
                 let mut v = vec![0.0; p];
-                prob.x.mul_t_vec(&prob.y, &mut v);
+                prob.x.mul_t_vec_par(&prob.y, &mut v, scan_par);
                 for x in v.iter_mut() {
                     *x = x.abs();
                 }
@@ -132,7 +145,7 @@ impl<'a> Saif<'a> {
             };
 
         // --- initial correlations, λ_max, ADD batch size h ---
-        let corrs = prob.init_corrs();
+        let corrs = prob.init_corrs_par(scan_par);
         let lam_max = corrs.iter().cloned().fold(0.0, f64::max);
         let mx = lam_max;
         let md = median(&corrs);
@@ -212,18 +225,16 @@ impl<'a> Saif<'a> {
             // progress and thrashing with the subsequent ADD — see
             // DESIGN.md §Deviations. DEL uses the full (safe) radius.
             let ball = self.ball_region(prob, &active, &eval, lam, corr_y.as_deref());
-            let r_eff = delta * ball.radius;
+            let r_add = delta * ball.radius;
 
-            // 3. DEL — screen the active set (unscaled radius: safe)
+            // 3. DEL — screen the active set (full radius: safe)
             let deleted = del_op(
                 &mut active,
                 &mut beta,
                 &mut in_active,
                 &eval.active_scores,
                 &col_nrm,
-                &ball,
                 ball.radius,
-                prob,
             );
             if self.cfg.trace && deleted > 0 {
                 trace.push(TraceEvent {
@@ -273,7 +284,7 @@ impl<'a> Saif<'a> {
             let all_scores = self.engine.scores(prob, &ball.center);
             let mut stop_add = true;
             for i in 0..p {
-                if !in_active[i] && all_scores[i] + col_nrm[i] * r_eff >= 1.0 {
+                if !in_active[i] && all_scores[i] + col_nrm[i] * r_add >= 1.0 {
                     stop_add = false;
                     break;
                 }
@@ -325,7 +336,7 @@ impl<'a> Saif<'a> {
                 &mut in_active,
                 &all_scores,
                 &col_nrm,
-                r_eff,
+                r_add,
                 h,
                 h_tilde,
             );
@@ -407,19 +418,30 @@ pub fn add_batch_size(c: f64, md: f64, mx: f64, lam: f64, p: usize) -> usize {
     (h as usize).max(1)
 }
 
+/// Median matching the paper's `md` definition: for even-length inputs
+/// the two middle elements are averaged (taking the upper one inflates
+/// the ADD batch size h). NaN-safe via `total_cmp` — a NaN score from
+/// the f32 PJRT engine must degrade the estimate, not abort the solve.
 fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    v[v.len() / 2]
+    v.sort_by(f64::total_cmp);
+    let m = v.len() / 2;
+    if v.len() % 2 == 1 {
+        v[m]
+    } else {
+        0.5 * (v[m - 1] + v[m])
+    }
 }
 
-/// Indices of the k largest values.
+/// Indices of the k largest values. `total_cmp` orders NaNs as larger
+/// than every finite value, so poisoned scores are recruited (and then
+/// handled by the solve) instead of panicking the sort.
 fn top_k_indices(xs: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.sort_by(|&a, &b| xs[b].total_cmp(&xs[a]));
     idx.truncate(k);
     idx
 }
@@ -435,22 +457,23 @@ pub const DEL_MARGIN: f64 = 1e-6;
 /// DEL operation: remove active features certified inactive by the
 /// ball. A removed feature's coefficient is zeroed (it is zero at the
 /// sub-problem optimum by eq. 5; zeroing keeps the iterate consistent).
-#[allow(clippy::too_many_arguments)]
+///
+/// `r_full` is the FULL (unscaled) ball radius: only ADD uses the
+/// δ-scaled radius — scaling DEL too would fire on active features
+/// whose coefficients are still converging (see DESIGN.md §Deviations).
 fn del_op(
     active: &mut Vec<usize>,
     beta: &mut Vec<f64>,
     in_active: &mut [bool],
     active_scores: &[f64],
     col_nrm: &[f64],
-    _ball: &Ball,
-    r_eff: f64,
-    _prob: &Problem,
+    r_full: f64,
 ) -> usize {
     let mut kept_active = Vec::with_capacity(active.len());
     let mut kept_beta = Vec::with_capacity(beta.len());
     let mut deleted = 0usize;
     for (a, &i) in active.iter().enumerate() {
-        if active_scores[a] + col_nrm[i] * r_eff < 1.0 - DEL_MARGIN {
+        if active_scores[a] + col_nrm[i] * r_full < 1.0 - DEL_MARGIN {
             in_active[i] = false;
             deleted += 1;
         } else {
@@ -487,12 +510,12 @@ fn add_op(
     if remaining.is_empty() {
         return 0;
     }
-    remaining.sort_by(|&a, &b| all_scores[b].partial_cmp(&all_scores[a]).unwrap());
+    remaining.sort_by(|&a, &b| all_scores[b].total_cmp(&all_scores[a]));
     let mut uppers: Vec<f64> = remaining
         .iter()
         .map(|&i| all_scores[i] + col_nrm[i] * r_eff)
         .collect();
-    uppers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    uppers.sort_by(f64::total_cmp);
     let mut added_uppers: Vec<f64> = Vec::new();
     let mut added = 0usize;
     for &i in remaining.iter().take(h) {
@@ -659,6 +682,63 @@ mod tests {
         let first = duals.first().unwrap();
         let last = duals.last().unwrap();
         assert!(last <= &(first + 1e-6 * first.abs().max(1.0)));
+    }
+
+    #[test]
+    fn median_matches_md_definition() {
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(median(&[3.0]), 3.0);
+        assert_eq!(median(&[1.0, 3.0]), 2.0); // even: average, not upper
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn nan_poisoned_scores_do_not_panic() {
+        // a single NaN from the f32 engine must not abort the solve
+        let scores = vec![0.5, f64::NAN, 0.9, 0.1];
+        let top = top_k_indices(&scores, 2);
+        assert_eq!(top.len(), 2);
+        assert!(top.contains(&1), "NaN ordered as extreme, not dropped");
+        let m = median(&scores);
+        assert!(m.is_nan() || m.is_finite()); // defined, not a panic
+        let col_nrm = vec![1.0; 4];
+        let mut active = vec![2usize];
+        let mut beta = vec![0.3];
+        let mut in_active = vec![false, false, true, false];
+        let added = add_op(
+            &mut active,
+            &mut beta,
+            &mut in_active,
+            &scores,
+            &col_nrm,
+            0.01,
+            2,
+            1,
+        );
+        assert!(added <= 2);
+        assert_eq!(active.len(), beta.len());
+    }
+
+    #[test]
+    fn del_uses_full_radius() {
+        // score + ‖x‖·r_full just above the boundary: kept
+        let mut active = vec![0usize, 1];
+        let mut beta = vec![0.5, 0.2];
+        let mut in_active = vec![true, true];
+        let deleted = del_op(
+            &mut active,
+            &mut beta,
+            &mut in_active,
+            &[0.999_999_9, 0.5],
+            &[1.0, 1.0],
+            0.1,
+        );
+        // feature 0 survives (score + r ≥ 1), feature 1 deleted
+        assert_eq!(deleted, 1);
+        assert_eq!(active, vec![0]);
+        assert_eq!(beta, vec![0.5]);
+        assert!(!in_active[1]);
     }
 
     #[test]

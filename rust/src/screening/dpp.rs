@@ -13,7 +13,7 @@
 //! (§1.1) raises about all sequential rules.
 
 use crate::cm::{solve_subproblem, Engine};
-use crate::linalg::{dot, nrm2_sq};
+use crate::linalg::nrm2_sq;
 use crate::model::{LossKind, Problem};
 use crate::util::Stopwatch;
 
@@ -63,7 +63,7 @@ impl<'a> DppPath<'a> {
             let r = y_nrm * (1.0 / lam - 1.0 / lam_prev).abs();
             let mut kept: Vec<usize> = Vec::new();
             for i in 0..p {
-                let c = dot(prob.x.col(i), &theta_prev).abs();
+                let c = prob.x.col_dot(i, &theta_prev).abs();
                 if c + col_nrm[i] * r >= 1.0 || beta_full[i] != 0.0 {
                     kept.push(i);
                 }
@@ -91,7 +91,7 @@ impl<'a> DppPath<'a> {
             );
             let theta_hat = prob.theta_hat(&u, lam);
             let mx = (0..p)
-                .map(|i| dot(prob.x.col(i), &theta_hat).abs())
+                .map(|i| prob.x.col_dot(i, &theta_hat).abs())
                 .fold(0.0, f64::max);
             let dp = prob.project_dual(&theta_hat, mx, lam);
             theta_prev = dp.theta;

@@ -4,7 +4,6 @@
 //! this is exactly why the homotopy baseline built on it misses active
 //! features (Table 1) while SAIF cannot.
 
-use crate::linalg::dot;
 use crate::model::Problem;
 
 /// Indices surviving the sequential strong rule at `lam`, given the
@@ -16,7 +15,7 @@ pub fn strong_rule_keep(prob: &Problem, u_prev: &[f64], lam: f64, lam_prev: f64)
         .map(|j| prob.loss.deriv(u_prev[j], prob.y[j]))
         .collect();
     (0..prob.p())
-        .filter(|&i| dot(prob.x.col(i), &fprime).abs() >= thresh)
+        .filter(|&i| prob.x.col_dot(i, &fprime).abs() >= thresh)
         .collect()
 }
 

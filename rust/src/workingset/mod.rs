@@ -15,7 +15,6 @@
 //!    keeping the support of β.
 
 use crate::cm::{solve_subproblem, Engine};
-use crate::linalg::dot;
 use crate::model::Problem;
 use crate::util::Stopwatch;
 
@@ -88,11 +87,11 @@ impl<'a> Blitz<'a> {
             // working set = support ∪ top-`budget` closest constraints
             for (i, s) in scores.iter_mut().enumerate() {
                 // distance of constraint i's boundary to θ_feas
-                *s = (1.0 - dot(prob.x.col(i), &theta_feas).abs()).max(0.0)
+                *s = (1.0 - prob.x.col_dot(i, &theta_feas).abs()).max(0.0)
                     / col_nrm[i].max(1e-12);
             }
             let mut order: Vec<usize> = (0..p).collect();
-            order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+            order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
             let mut work: Vec<usize> = Vec::with_capacity(budget + 8);
             let mut in_work = vec![false; p];
             for i in 0..p {
@@ -140,8 +139,8 @@ impl<'a> Blitz<'a> {
             for i in 0..p {
                 if all[i] > 1.0 {
                     // |a + α(b−a)| ≤ 1 with a = x_iᵀθ_feas, b = x_iᵀθ_sub
-                    let a = dot(prob.x.col(i), &theta_feas);
-                    let b = dot(prob.x.col(i), &eval.theta);
+                    let a = prob.x.col_dot(i, &theta_feas);
+                    let b = prob.x.col_dot(i, &eval.theta);
                     let hi = (1.0 - a) / (b - a);
                     let lo = (-1.0 - a) / (b - a);
                     let step = hi.max(lo);

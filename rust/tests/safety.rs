@@ -159,7 +159,7 @@ fn fused_saif_is_safe_on_trees() {
         let ds = synth::gene_expr(n, p, rng.next_u64());
         let edges = saif::data::tree::preferential_attachment(p, rng.next_u64());
         let lam_max =
-            FusedSaif::lambda_max(&ds.x, &ds.y, LossKind::Squared, &edges).unwrap();
+            FusedSaif::lambda_max(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges).unwrap();
         let lam = lam_max * (0.05 + 0.5 * rng.uniform());
         let mut eng = NativeEngine::new();
         let mut fs = FusedSaif::new(
@@ -169,11 +169,11 @@ fn fused_saif_is_safe_on_trees() {
                 ..Default::default()
             },
         );
-        let res = fs.solve(&ds.x, &ds.y, LossKind::Squared, &edges, lam).unwrap();
+        let res = fs.solve(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges, lam).unwrap();
         // certificate: ADMM from a different initialization cannot beat
         // SAIF's objective by more than the tolerance
         let mut admm = saif::fused::FusedAdmm::new(Default::default());
-        let ares = admm.solve(&ds.x, &ds.y, LossKind::Squared, &edges, lam, None);
+        let ares = admm.solve(ds.x.as_dense(), &ds.y, LossKind::Squared, &edges, lam, None);
         if ares.objective < res.objective - 1e-4 * res.objective.abs().max(1.0) {
             return Err(format!(
                 "ADMM found better objective: {} < {}",

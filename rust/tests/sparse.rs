@@ -1,0 +1,198 @@
+//! Sparse-design parity: the CSC backend must be numerically
+//! indistinguishable from the dense backend on every kernel the
+//! solvers use, and a libsvm file loaded sparse (never densified) must
+//! solve through SAIF, dynamic screening and BLITZ with a full KKT
+//! certificate.
+
+use saif::cm::NativeEngine;
+use saif::data::{io, synth};
+use saif::linalg::{CscMat, Design, Parallelism};
+use saif::model::Problem;
+use saif::saif::{Saif, SaifConfig};
+use saif::screening::dynamic::{DynScreen, DynScreenConfig};
+use saif::util::prop;
+use saif::workingset::{Blitz, BlitzConfig};
+
+/// Random sparse/dense design pair with identical entries.
+fn random_designs(rng: &mut saif::util::Rng, n: usize, p: usize) -> (Design, Design) {
+    let mut cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        let nnz = 1 + rng.below(n.min(10));
+        cols.push(
+            rng.sample_indices(n, nnz)
+                .into_iter()
+                .map(|i| (i, rng.normal()))
+                .collect(),
+        );
+    }
+    let sp = CscMat::from_cols(n, cols);
+    let dn = sp.to_dense();
+    (Design::Sparse(sp), Design::Dense(dn))
+}
+
+#[test]
+fn sparse_dense_kernel_parity() {
+    prop::check("sparse == dense kernels", 16, |rng| {
+        let n = 10 + rng.below(40);
+        let p = 5 + rng.below(80);
+        let (sp, dn) = random_designs(rng, n, p);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (mut a, mut b) = (vec![0.0; p], vec![0.0; p]);
+        sp.mul_t_vec(&v, &mut a);
+        dn.mul_t_vec(&v, &mut b);
+        prop::assert_slice_close(&a, &b, 1e-12, 1e-12, "mul_t_vec")?;
+        let mut c = vec![0.0; p];
+        sp.mul_t_vec_par(&v, &mut c, Parallelism::Fixed(4));
+        if a != c {
+            return Err("parallel scan differs from serial".into());
+        }
+        prop::assert_slice_close(
+            &sp.col_norms_sq(),
+            &dn.col_norms_sq(),
+            1e-12,
+            1e-12,
+            "col_norms_sq",
+        )?;
+        for j in 0..p {
+            prop::assert_close(sp.col_dot(j, &v), dn.col_dot(j, &v), 1e-12, 1e-12, "col_dot")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_dense_problem_parity() {
+    prop::check("sparse == dense lambda_max/init_corrs", 10, |rng| {
+        let n = 20 + rng.below(40);
+        let p = 30 + rng.below(100);
+        let (sp, dn) = random_designs(rng, n, p);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let ps = Problem::new(sp, y.clone(), saif::model::LossKind::Squared);
+        let pd = Problem::new(dn, y, saif::model::LossKind::Squared);
+        prop::assert_close(ps.lambda_max(), pd.lambda_max(), 1e-12, 1e-12, "lambda_max")?;
+        prop::assert_slice_close(&ps.init_corrs(), &pd.init_corrs(), 1e-12, 1e-12, "init_corrs")?;
+        prop::assert_slice_close(
+            &ps.init_corrs_par(Parallelism::Fixed(3)),
+            &pd.init_corrs(),
+            1e-12,
+            1e-12,
+            "init_corrs_par",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_dense_saif_solutions_agree() {
+    prop::check("sparse == dense SAIF solve", 6, |rng| {
+        let n = 40 + rng.below(30);
+        let p = 200 + rng.below(200);
+        let density = 0.05 + 0.1 * rng.uniform();
+        let ds = synth::synth_sparse(n, p, density, rng.next_u64());
+        let sparse_prob = ds.problem();
+        let dense_prob = Problem::new(ds.x.to_dense(), ds.y.clone(), ds.loss);
+        let lam = sparse_prob.lambda_max() * (0.05 + 0.2 * rng.uniform());
+
+        let mut e1 = NativeEngine::new();
+        let rs = Saif::new(&mut e1, SaifConfig { eps: 1e-12, ..Default::default() })
+            .solve(&sparse_prob, lam);
+        let mut e2 = NativeEngine::new();
+        let rd = Saif::new(&mut e2, SaifConfig { eps: 1e-12, ..Default::default() })
+            .solve(&dense_prob, lam);
+
+        let sup = |beta: &[(usize, f64)]| {
+            let mut s: Vec<usize> =
+                beta.iter().filter(|(_, b)| b.abs() > 1e-10).map(|&(i, _)| i).collect();
+            s.sort();
+            s
+        };
+        let (sup_s, sup_d) = (sup(&rs.beta), sup(&rd.beta));
+        if sup_s != sup_d {
+            return Err(format!("supports differ: {sup_s:?} vs {sup_d:?}"));
+        }
+        let dmap: std::collections::HashMap<usize, f64> = rd.beta.iter().cloned().collect();
+        for &(i, b) in &rs.beta {
+            let d = dmap.get(&i).copied().unwrap_or(0.0);
+            prop::assert_close(b, d, 1e-8, 1e-8, &format!("β[{i}]"))?;
+        }
+        // certificate on the sparse problem
+        let viol = sparse_prob.kkt_violation(&rs.beta, lam);
+        if viol > 1e-3 * lam.max(1.0) {
+            return Err(format!("sparse KKT violation {viol:.3e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn libsvm_sparse_load_solves_all_safe_methods() {
+    let ds = synth::synth_sparse(60, 600, 0.03, 991);
+    let path = std::env::temp_dir().join("saif_sparse_e2e.svm");
+    let path = path.to_str().unwrap();
+    io::write_libsvm(&ds, path).unwrap();
+    let back = io::read_libsvm(path, false).unwrap();
+    std::fs::remove_file(path).ok();
+    assert!(back.x.is_sparse(), "libsvm load must not densify");
+    assert_eq!(back.p(), ds.p(), "dimension lost on roundtrip");
+    assert_eq!(back.n(), ds.n());
+
+    let prob = back.problem();
+    let lam = prob.lambda_max() * 0.1;
+    let eps = 1e-9;
+
+    let mut e1 = NativeEngine::new();
+    let saif_res =
+        Saif::new(&mut e1, SaifConfig { eps, ..Default::default() }).solve(&prob, lam);
+    assert!(saif_res.gap <= eps);
+    assert!(
+        prob.kkt_violation(&saif_res.beta, lam) < 1e-3 * lam.max(1.0),
+        "saif sparse certificate"
+    );
+    // SAIF on sparse text-like data must keep the active set small —
+    // the workload class the paper's scalability claim targets
+    assert!(saif_res.max_active < prob.p() / 4);
+
+    let mut e2 = NativeEngine::new();
+    let dyn_res = DynScreen::new(&mut e2, DynScreenConfig { eps, ..Default::default() })
+        .solve(&prob, lam);
+    assert!(prob.kkt_violation(&dyn_res.beta, lam) < 1e-3 * lam.max(1.0));
+
+    let mut e3 = NativeEngine::new();
+    let blitz_res =
+        Blitz::new(&mut e3, BlitzConfig { eps, ..Default::default() }).solve(&prob, lam);
+    assert!(prob.kkt_violation(&blitz_res.beta, lam) < 1e-3 * lam.max(1.0));
+
+    // all three agree on the support
+    let sup = |beta: &[(usize, f64)]| {
+        let mut s: Vec<usize> =
+            beta.iter().filter(|(_, b)| b.abs() > 1e-7).map(|&(i, _)| i).collect();
+        s.sort();
+        s
+    };
+    assert_eq!(sup(&saif_res.beta), sup(&dyn_res.beta), "saif vs dyn");
+    assert_eq!(sup(&saif_res.beta), sup(&blitz_res.beta), "saif vs blitz");
+}
+
+#[test]
+fn parallel_saif_matches_serial() {
+    let ds = synth::synth_sparse(50, 1000, 0.02, 4242);
+    let prob = ds.problem();
+    let lam = prob.lambda_max() * 0.1;
+    let mut e1 = NativeEngine::new();
+    let serial = Saif::new(&mut e1, SaifConfig { eps: 1e-10, ..Default::default() })
+        .solve(&prob, lam);
+    let mut e2 = NativeEngine::new();
+    let parallel = Saif::new(
+        &mut e2,
+        SaifConfig {
+            eps: 1e-10,
+            parallelism: Some(Parallelism::Fixed(4)),
+            ..Default::default()
+        },
+    )
+    .solve(&prob, lam);
+    // chunked scans are bitwise-identical to serial, so the whole
+    // solve trajectory matches
+    assert_eq!(serial.beta, parallel.beta);
+    assert_eq!(serial.outer_iters, parallel.outer_iters);
+}
