@@ -1,14 +1,27 @@
 #!/usr/bin/env bash
 # Tier-1 gate (see ROADMAP.md): build, tests, formatting, lints.
 # Run from the repo root: ./ci.sh      (SKIP_LINT=1 ./ci.sh to gate on
-# build+tests only, e.g. while triaging fmt/clippy drift.)
+# build+tests only, e.g. while triaging fmt/clippy drift; SKIP_BENCH=1
+# to skip the BENCH_kernels.json regeneration.)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
 cargo build --release
-cargo test -q
+
+# The suite runs twice so the parallel epoch + scan paths are tier-1:
+# SAIF_TEST_THREADS drives tests/common::test_parallelism() (serial vs
+# 4 scan threads, which FollowParallelism turns into 4 epoch shards on
+# wide active blocks).
+SAIF_TEST_THREADS=1 cargo test -q
+SAIF_TEST_THREADS=4 cargo test -q
 
 if [[ "${SKIP_LINT:-0}" != "1" ]]; then
     cargo fmt --check
     cargo clippy --all-targets -- -D warnings
+fi
+
+# Regenerate the kernel benchmark record (serial vs parallel scans,
+# serial vs sharded epochs) at the repo root.
+if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+    cargo bench --bench kernels
 fi

@@ -7,7 +7,7 @@
 //! * the same operations through the PJRT artifacts — call overhead +
 //!   the packed-buffer cache effect.
 
-use saif::cm::{Engine, NativeEngine};
+use saif::cm::{Engine, EpochShards, NativeEngine};
 use saif::data::synth;
 use saif::linalg::{axpy, dot, Parallelism};
 use saif::metrics::Table;
@@ -130,6 +130,41 @@ fn main() {
         "sparse_over_dense_serial_speedup",
         Json::Num(serial_us[0] / serial_us[1].max(1e-12)),
     );
+
+    // --- serial vs sharded active-block CM epoch, |A| = 2000 ---
+    // The reduced-model epoch is SAIF's hot path once |A| grows; this
+    // measures the Jacobi-shard + ordered-residual-merge win over the
+    // serial Gauss–Seidel sweep at a Gisette-scale active block.
+    let wide_active: Vec<usize> = (0..2000.min(p_big)).collect();
+    let lam_big = dense_prob.lambda_max() * 0.05;
+    let mut beta_ser = vec![0.0; wide_active.len()];
+    let mut epoch_serial = NativeEngine::new();
+    let s_ser = bench_secs(0.3, 2_000, || {
+        epoch_serial.cm_eval(&dense_prob, &wide_active, &mut beta_ser, lam_big, 1);
+    });
+    t.row(vec![
+        format!("cm epoch serial (|A|={}, n={n_big})", wide_active.len()),
+        wide_active.len().to_string(),
+        format!("{:.2}us", s_ser * 1e6),
+        "1 epoch + gap eval".into(),
+    ]);
+    bench_rec.set("epoch_serial_us", Json::Num(s_ser * 1e6));
+    let mut beta_sh = vec![0.0; wide_active.len()];
+    let mut epoch_sharded = NativeEngine::new();
+    epoch_sharded.set_epoch_shards(EpochShards::Fixed(hw));
+    let s_sh = bench_secs(0.3, 2_000, || {
+        epoch_sharded.cm_eval(&dense_prob, &wide_active, &mut beta_sh, lam_big, 1);
+    });
+    t.row(vec![
+        format!("cm epoch sharded x{hw} (|A|={}, n={n_big})", wide_active.len()),
+        wide_active.len().to_string(),
+        format!("{:.2}us", s_sh * 1e6),
+        format!("speedup {:.2}x over serial", s_ser / s_sh),
+    ]);
+    bench_rec
+        .set("epoch_sharded_us", Json::Num(s_sh * 1e6))
+        .set("epoch_shards", Json::Num(hw as f64))
+        .set("epoch_shard_speedup", Json::Num(s_ser / s_sh));
     // repo root, independent of the invocation CWD
     let bench_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     match std::fs::write(bench_path, bench_rec.to_string() + "\n") {

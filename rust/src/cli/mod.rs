@@ -5,7 +5,7 @@
 //! repro solve      --dataset sim --lambda-frac 0.1 [--method saif]
 //!                  [--engine native|pjrt] [--eps 1e-6] [--seed 42]
 //!                  [--libsvm path --logistic [--dense]]
-//!                  [--threads serial|auto|N]
+//!                  [--threads serial|auto|N] [--epoch-shards auto|N]
 //! repro experiment --id fig2-sim [--out out]   (or --all)
 //! repro serve      [--workers 4] [--datasets 3] [--lambdas 8]
 //!                  [--engine native|pjrt] [--method saif]
@@ -14,11 +14,15 @@
 //!
 //! `--libsvm` loads SPARSE (CSC, no n×p densification) so text-scale
 //! files fit in memory; `--dense` densifies explicitly for dense-path
-//! comparisons. `--threads` parallelizes the full-p screening scans.
+//! comparisons. `--threads` parallelizes the full-p screening scans;
+//! `--epoch-shards` shards the active-block CM epochs (default: follow
+//! `--threads` once the block is wide enough; a fixed N makes the
+//! solve trajectory bitwise reproducible across machines).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::cm::{Engine, EpochShards};
 use crate::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
 use crate::data;
 use crate::linalg::Parallelism;
@@ -96,12 +100,12 @@ USAGE:
   repro solve      --dataset <name> --lambda-frac <f> [--method saif|dyn|blitz]
                    [--engine native|pjrt] [--eps 1e-6] [--seed 42]
                    [--libsvm <path> [--logistic] [--dense]]
-                   [--threads serial|auto|N]
+                   [--threads serial|auto|N] [--epoch-shards auto|N]
   repro experiment --id <id> [--out out]      run one paper experiment
   repro experiment --all [--out out]          run every experiment
   repro serve      [--workers N] [--datasets D] [--lambdas L]
                    [--engine native|pjrt] [--threads serial|auto|N]
-                                              coordinator demo workload
+                   [--epoch-shards auto|N]    coordinator demo workload
   repro cv         --dataset <name> [--folds 5] [--lambdas 20]
                    [--workers 4]              k-fold CV λ selection
   repro list                                  datasets + experiment ids
@@ -109,6 +113,10 @@ USAGE:
   --libsvm loads sparse (CSC; the file is never densified), so
   rcv1-scale text corpora fit in memory; add --dense to densify.
   --threads chunks the O(n·p) screening scans over worker threads.
+  --epoch-shards shards the active-block CM epochs (Jacobi shards +
+  deterministic residual merge). Default 'auto' follows --threads once
+  the active block is wide enough; a fixed N pins the shard count so
+  the solve trajectory is bitwise reproducible across machines.
 ";
 
 fn cmd_list() -> i32 {
@@ -139,6 +147,15 @@ fn parallelism_arg(args: &Args) -> Result<Parallelism, String> {
     }
 }
 
+fn epoch_shards_arg(args: &Args) -> Result<EpochShards, String> {
+    match args.get("epoch-shards") {
+        None => Ok(EpochShards::FollowParallelism),
+        Some(s) => {
+            EpochShards::parse(s).ok_or_else(|| format!("bad --epoch-shards value '{s}'"))
+        }
+    }
+}
+
 fn cmd_solve(args: &Args) -> i32 {
     let ds = match load_dataset(args) {
         Ok(d) => d,
@@ -163,6 +180,13 @@ fn cmd_solve(args: &Args) -> i32 {
             return 2;
         }
     };
+    let shards = match epoch_shards_arg(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
 
     println!(
         "dataset={} n={} p={} storage={}(nnz={}) loss={:?} λ_max={lam_max:.4e} λ={lam:.4e} eps={eps:.0e} engine={engine_name} method={method}",
@@ -170,6 +194,7 @@ fn cmd_solve(args: &Args) -> i32 {
     );
 
     let mut native = crate::cm::NativeEngine::with_parallelism(par);
+    native.set_epoch_shards(shards);
     let mut pjrt_storage: PjrtEngine;
     let engine: &mut dyn crate::cm::Engine = match engine_name {
         "pjrt" => match PjrtEngine::new() {
@@ -205,7 +230,12 @@ fn cmd_solve(args: &Args) -> i32 {
         _ => {
             let mut s = Saif::new(
                 engine,
-                SaifConfig { eps, parallelism: Some(par), ..Default::default() },
+                SaifConfig {
+                    eps,
+                    parallelism: Some(par),
+                    epoch_shards: Some(shards),
+                    ..Default::default()
+                },
             );
             let r = s.solve(&prob, lam);
             println!(
@@ -273,9 +303,16 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    let shards = match epoch_shards_arg(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
 
     println!(
-        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={method:?}, scan threads={par:?}"
+        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={method:?}, scan threads={par:?}, epoch shards={shards:?}"
     );
     let mut reqs = Vec::new();
     let mut id = 0u64;
@@ -296,7 +333,8 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     }
     let total = reqs.len();
-    let (responses, lat, wall) = Coordinator::run_batch_with(reqs, workers, engine, par);
+    let (responses, lat, wall) =
+        Coordinator::run_batch_with_policy(reqs, workers, engine, par, shards);
     let worst_kkt = responses
         .iter()
         .map(|r| r.kkt_violation / r.lam.max(1.0))

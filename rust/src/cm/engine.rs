@@ -7,6 +7,41 @@
 use crate::linalg::Parallelism;
 use crate::model::Problem;
 
+/// Sharding policy for the active-block CM epochs (the reduced-model
+/// solve — SAIF's hot path once |A| grows). The sharded epoch is
+/// Jacobi across shards / Gauss–Seidel within a shard, merged through
+/// a deterministic ordered residual fold, so for a FIXED shard count
+/// the solve trajectory is bitwise reproducible (see
+/// `NativeEngine::effective_epoch_shards`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EpochShards {
+    /// Derive the shard count from the engine's scan [`Parallelism`]
+    /// (the default): epochs shard with the same thread budget as the
+    /// full-p scans once the sweep is wide enough to amortize spawns.
+    /// `Engine::set_parallelism` therefore reconfigures the epoch path
+    /// too — there is no way to leave epochs serial-forever by
+    /// configuring threads after engine construction.
+    #[default]
+    FollowParallelism,
+    /// This many shards (1 ⇒ the serial epoch, bitwise). Engines clamp
+    /// the count so each shard keeps a minimum number of columns
+    /// (`NativeEngine::MIN_SHARD_COLS`) — narrow support sweeps run
+    /// serial rather than paying thread spawns per handful of columns.
+    Fixed(usize),
+}
+
+impl EpochShards {
+    /// Parse a CLI/config value: "auto"/"follow" (derive from
+    /// `--threads`), or an explicit shard count ("1" ⇒ serial).
+    pub fn parse(s: &str) -> Option<EpochShards> {
+        match s {
+            "auto" | "follow" => Some(EpochShards::FollowParallelism),
+            "serial" | "off" => Some(EpochShards::Fixed(1)),
+            _ => s.parse::<usize>().ok().map(|k| EpochShards::Fixed(k.max(1))),
+        }
+    }
+}
+
 /// Result of K CM epochs + duality-gap evaluation on a sub-problem.
 #[derive(Debug, Clone)]
 pub struct SubEval {
@@ -50,6 +85,32 @@ pub trait Engine {
         Parallelism::Serial
     }
 
+    /// Set the sharding policy for the active-block CM epochs. Default:
+    /// a no-op — engines without a native epoch loop (the PJRT
+    /// artifacts batch coordinates on their own executor) ignore it.
+    fn set_epoch_shards(&mut self, _shards: EpochShards) {}
+
+    /// The engine's current epoch-sharding policy.
+    fn epoch_shards(&self) -> EpochShards {
+        EpochShards::Fixed(1)
+    }
+
     /// Backend name for logs/metrics.
     fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_shards_parse() {
+        assert_eq!(EpochShards::parse("auto"), Some(EpochShards::FollowParallelism));
+        assert_eq!(EpochShards::parse("follow"), Some(EpochShards::FollowParallelism));
+        assert_eq!(EpochShards::parse("serial"), Some(EpochShards::Fixed(1)));
+        assert_eq!(EpochShards::parse("off"), Some(EpochShards::Fixed(1)));
+        assert_eq!(EpochShards::parse("4"), Some(EpochShards::Fixed(4)));
+        assert_eq!(EpochShards::parse("0"), Some(EpochShards::Fixed(1)));
+        assert_eq!(EpochShards::parse("nope"), None);
+    }
 }

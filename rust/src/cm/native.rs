@@ -12,27 +12,74 @@
 use crate::linalg::{ops::soft_threshold, Parallelism};
 use crate::model::{LossKind, Problem};
 
-use super::engine::{Engine, SubEval};
+use super::engine::{Engine, EpochShards, SubEval};
 
 /// Pure-rust engine. Stateless between calls apart from scratch
 /// buffers (margins/residual), which are reused to keep the outer loop
-/// allocation-free, and the scan parallelism policy.
+/// allocation-free, plus the scan parallelism and epoch-sharding
+/// policies.
 #[derive(Debug, Default)]
 pub struct NativeEngine {
     scratch_u: Vec<f64>,
     scratch_fp: Vec<f64>,
     par: Parallelism,
+    epoch_shards: EpochShards,
 }
 
+/// One coordinate move proposed by a shard: position `a` in the active
+/// block, the new value `bn`, and the axpy coefficient `alpha` that
+/// repairs the frozen residual/margins (bi − bn for LS residuals,
+/// bn − bi for logistic margins).
+type ShardMove = (usize, f64, f64);
+
 impl NativeEngine {
+    /// Sweep width below which [`EpochShards::FollowParallelism`]
+    /// keeps epochs serial: a Jacobi pass over a narrow active block
+    /// costs more in thread spawns + residual copies than it saves.
+    pub const EPOCH_SHARD_MIN_SWEEP: usize = 256;
+
+    /// Minimum sweep positions per shard under an explicit
+    /// [`EpochShards::Fixed`] policy: `Fixed(k)` is clamped so every
+    /// shard keeps at least this many columns — sharding a near-empty
+    /// support sweep (the common case on sparse solutions) would spend
+    /// more on thread spawns and residual copies than the sweep
+    /// itself. The clamp depends only on the sweep width, so a fixed
+    /// policy remains bitwise reproducible across machines.
+    pub const MIN_SHARD_COLS: usize = 16;
+
     pub fn new() -> Self {
         NativeEngine::default()
     }
 
     /// Engine whose full-p scans (`scores`) run with the given column
-    /// parallelism.
+    /// parallelism. Epoch sharding defaults to
+    /// [`EpochShards::FollowParallelism`], so the same setting also
+    /// shards the active-block epochs once |A| is wide enough.
     pub fn with_parallelism(par: Parallelism) -> Self {
         NativeEngine { par, ..NativeEngine::default() }
+    }
+
+    /// The shard count a sweep of `sweep_len` positions will actually
+    /// run with under the current policy. `Fixed(k)` is honored once
+    /// every shard keeps ≥ [`Self::MIN_SHARD_COLS`] positions (clamped
+    /// down otherwise; narrow sweeps run serial); `FollowParallelism`
+    /// derives the count from the scan [`Parallelism`] (so
+    /// `set_parallelism` after construction reconfigures the epoch
+    /// path too) and stays serial below
+    /// [`Self::EPOCH_SHARD_MIN_SWEEP`].
+    pub fn effective_epoch_shards(&self, sweep_len: usize) -> usize {
+        match self.epoch_shards {
+            EpochShards::Fixed(k) => {
+                k.clamp(1, (sweep_len / Self::MIN_SHARD_COLS).max(1))
+            }
+            EpochShards::FollowParallelism => {
+                if sweep_len < Self::EPOCH_SHARD_MIN_SWEEP {
+                    1
+                } else {
+                    self.par.threads(sweep_len)
+                }
+            }
+        }
     }
 
     /// Margins u = offset + Σ_a β_a x_a over the active set.
@@ -111,6 +158,205 @@ impl NativeEngine {
             }
         }
     }
+
+    /// One CM epoch over `sweep`, sharded if the policy asks for it.
+    /// Sharding splits the sweep into `shards` contiguous column
+    /// shards run on scoped threads: Gauss–Seidel *within* a shard
+    /// (each shard owns a private copy of the frozen residual/margins),
+    /// Jacobi *across* shards. The per-shard moves are then folded into
+    /// the true residual in shard order (`Design::cols_axpy`), which
+    /// makes the merged state a deterministic function of the shard
+    /// count. A merged step that fails the descent check (shards fought
+    /// over correlated columns) is discarded and the epoch reruns as
+    /// the serial sweep, so correctness never depends on the shards
+    /// being independent.
+    ///
+    /// `shards <= 1` runs the serial epoch directly — bitwise identical
+    /// to the pre-sharding code path by construction.
+    #[allow(clippy::too_many_arguments)]
+    fn epoch_dispatch(
+        prob: &Problem,
+        active: &[usize],
+        sweep: &[usize],
+        beta: &mut [f64],
+        state: &mut [f64],
+        fp: &mut [f64],
+        lam: f64,
+        shards: usize,
+    ) {
+        let serial = |beta: &mut [f64], state: &mut [f64], fp: &mut [f64]| match prob.loss {
+            LossKind::Squared => Self::epoch_ls(prob, active, sweep, beta, state, lam),
+            LossKind::Logistic => {
+                Self::epoch_logistic(prob, active, sweep, beta, state, fp, lam)
+            }
+        };
+        if shards <= 1 || sweep.len() < 2 {
+            serial(beta, state, fp);
+            return;
+        }
+        let moves = Self::shard_moves(prob, active, sweep, beta, state, lam, shards);
+        if !Self::merge_moves(prob, active, &moves, beta, state, lam) {
+            serial(beta, state, fp);
+        }
+    }
+
+    /// Run the Jacobi shards against the frozen `state` (LS residual or
+    /// logistic margins) and collect each shard's proposed moves, in
+    /// shard order. Every sweep position is visited by exactly one
+    /// shard, so each position appears in at most one move.
+    fn shard_moves(
+        prob: &Problem,
+        active: &[usize],
+        sweep: &[usize],
+        beta: &[f64],
+        state: &[f64],
+        lam: f64,
+        shards: usize,
+    ) -> Vec<Vec<ShardMove>> {
+        let chunk = sweep.len().div_ceil(shards);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = sweep
+                .chunks(chunk)
+                .map(|shard_sweep| {
+                    s.spawn(move || match prob.loss {
+                        LossKind::Squared => {
+                            Self::shard_pass_ls(prob, active, shard_sweep, beta, state, lam)
+                        }
+                        LossKind::Logistic => Self::shard_pass_logistic(
+                            prob,
+                            active,
+                            shard_sweep,
+                            beta,
+                            state,
+                            lam,
+                        ),
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("epoch shard panicked"))
+                .collect()
+        })
+    }
+
+    /// Gauss–Seidel pass of one LS shard on a private residual copy.
+    fn shard_pass_ls(
+        prob: &Problem,
+        active: &[usize],
+        shard_sweep: &[usize],
+        beta: &[f64],
+        r_frozen: &[f64],
+        lam: f64,
+    ) -> Vec<ShardMove> {
+        let mut r_loc = r_frozen.to_vec();
+        let mut moves = Vec::new();
+        for &a in shard_sweep {
+            let i = active[a];
+            let n2 = prob.col_nrm2[i];
+            if n2 <= 0.0 {
+                continue;
+            }
+            let g = prob.x.col_dot(i, &r_loc);
+            let bi = beta[a];
+            let z = bi + g / n2;
+            let bn = soft_threshold(z, lam / n2);
+            if bn != bi {
+                prob.x.col_axpy(bi - bn, i, &mut r_loc);
+                moves.push((a, bn, bi - bn));
+            }
+        }
+        moves
+    }
+
+    /// Majorized-Newton pass of one logistic shard on private margins.
+    fn shard_pass_logistic(
+        prob: &Problem,
+        active: &[usize],
+        shard_sweep: &[usize],
+        beta: &[f64],
+        u_frozen: &[f64],
+        lam: f64,
+    ) -> Vec<ShardMove> {
+        let y = &prob.y;
+        let mut u_loc = u_frozen.to_vec();
+        let mut fp_loc = vec![0.0; u_loc.len()];
+        let mut moves = Vec::new();
+        for &a in shard_sweep {
+            let i = active[a];
+            let n2 = prob.col_nrm2[i];
+            if n2 <= 0.0 {
+                continue;
+            }
+            for j in 0..u_loc.len() {
+                fp_loc[j] = -y[j] / (1.0 + (y[j] * u_loc[j]).exp());
+            }
+            let g = prob.x.col_dot(i, &fp_loc);
+            let h = 0.25 * n2;
+            let bi = beta[a];
+            let z = bi - g / h;
+            let bn = soft_threshold(z, lam / h);
+            if bn != bi {
+                prob.x.col_axpy(bn - bi, i, &mut u_loc);
+                moves.push((a, bn, bn - bi));
+            }
+        }
+        moves
+    }
+
+    /// Fold the shard moves into (beta, state) in shard order iff the
+    /// merged step passes the descent check; returns whether it was
+    /// accepted. On rejection beta/state are untouched (the caller
+    /// falls back to the serial epoch from the exact same iterate).
+    fn merge_moves(
+        prob: &Problem,
+        active: &[usize],
+        moves: &[Vec<ShardMove>],
+        beta: &mut [f64],
+        state: &mut [f64],
+        lam: f64,
+    ) -> bool {
+        let updates: Vec<(usize, f64)> = moves
+            .iter()
+            .flatten()
+            .map(|&(a, _, alpha)| (active[a], alpha))
+            .collect();
+        if updates.is_empty() {
+            return true; // all shards at their coordinate optima
+        }
+        let mut merged = state.to_vec();
+        prob.x.cols_axpy(&updates, &mut merged);
+        let l1 = |b: &[f64]| b.iter().map(|v| v.abs()).sum::<f64>();
+        let mut l1_new = l1(beta);
+        for &(a, bn, _) in moves.iter().flatten() {
+            l1_new += bn.abs() - beta[a].abs();
+        }
+        let (obj_before, obj_after) = match prob.loss {
+            LossKind::Squared => (
+                0.5 * crate::linalg::nrm2_sq(state) + lam * l1(beta),
+                0.5 * crate::linalg::nrm2_sq(&merged) + lam * l1_new,
+            ),
+            LossKind::Logistic => (
+                prob.primal_from_margins(state, l1(beta), lam),
+                prob.primal_from_margins(&merged, l1_new, lam),
+            ),
+        };
+        // strict monotone check: ANY computed increase — or a NaN from
+        // an overflowed merge — rejects it (shards fought over
+        // correlated columns, or rounding on a near-converged iterate;
+        // either way the serial sweep is the safe move). No slack:
+        // accepted epochs never ascend, so the sharded solve converges
+        // whenever the serial one does, and the accept/reject decision
+        // stays a deterministic function of the shard results.
+        if obj_after > obj_before || obj_after.is_nan() {
+            return false;
+        }
+        state.copy_from_slice(&merged);
+        for &(a, bn, _) in moves.iter().flatten() {
+            beta[a] = bn;
+        }
+        true
+    }
 }
 
 impl Engine for NativeEngine {
@@ -144,18 +390,24 @@ impl Engine for NativeEngine {
                 let mut done = 0usize;
                 while done < k {
                     let mut r = std::mem::take(&mut self.scratch_u);
-                    Self::epoch_ls(prob, active, &full, beta, &mut r, lam);
+                    let mut fp = std::mem::take(&mut self.scratch_fp);
+                    let sh = self.effective_epoch_shards(full.len());
+                    Self::epoch_dispatch(prob, active, &full, beta, &mut r, &mut fp, lam, sh);
                     done += 1;
                     let sup = support(beta);
                     if sup.len() < active.len() {
                         // support sweeps are ~free relative to full
                         // passes; run up to 3 per full pass
+                        let sh = self.effective_epoch_shards(sup.len());
                         for _ in 0..3usize.min(k.saturating_sub(done)) {
-                            Self::epoch_ls(prob, active, &sup, beta, &mut r, lam);
+                            Self::epoch_dispatch(
+                                prob, active, &sup, beta, &mut r, &mut fp, lam, sh,
+                            );
                             done += 1;
                         }
                     }
                     self.scratch_u = r;
+                    self.scratch_fp = fp;
                 }
                 // back to margins for the shared eval path
                 for j in 0..n {
@@ -168,12 +420,16 @@ impl Engine for NativeEngine {
                 while done < k {
                     let mut u = std::mem::take(&mut self.scratch_u);
                     let mut fp = std::mem::take(&mut self.scratch_fp);
-                    Self::epoch_logistic(prob, active, &full, beta, &mut u, &mut fp, lam);
+                    let sh = self.effective_epoch_shards(full.len());
+                    Self::epoch_dispatch(prob, active, &full, beta, &mut u, &mut fp, lam, sh);
                     done += 1;
                     let sup = support(beta);
                     if sup.len() < active.len() {
+                        let sh = self.effective_epoch_shards(sup.len());
                         for _ in 0..3usize.min(k.saturating_sub(done)) {
-                            Self::epoch_logistic(prob, active, &sup, beta, &mut u, &mut fp, lam);
+                            Self::epoch_dispatch(
+                                prob, active, &sup, beta, &mut u, &mut fp, lam, sh,
+                            );
                             done += 1;
                         }
                     }
@@ -187,12 +443,14 @@ impl Engine for NativeEngine {
         let beta_l1: f64 = beta.iter().map(|b| b.abs()).sum();
         let primal = prob.primal_from_margins(u, beta_l1, lam);
         let theta_hat = prob.theta_hat(u, lam);
+        // batched dots over the active block: one backend dispatch for
+        // the whole sweep (per-column values identical to col_dot)
+        let mut corr_active = vec![0.0; active.len()];
+        prob.x.cols_dot(active, &theta_hat, &mut corr_active);
         let mut mx = 0.0f64;
-        let mut corr_active = Vec::with_capacity(active.len());
-        for &i in active {
-            let c = prob.x.col_dot(i, &theta_hat).abs();
-            corr_active.push(c);
-            mx = mx.max(c);
+        for c in corr_active.iter_mut() {
+            *c = c.abs();
+            mx = mx.max(*c);
         }
         let dp = prob.project_dual(&theta_hat, mx, lam);
         let gap = (primal - dp.dual).max(0.0);
@@ -216,12 +474,26 @@ impl Engine for NativeEngine {
         out
     }
 
+    /// Also reconfigures the epoch shard count: under the default
+    /// [`EpochShards::FollowParallelism`] policy the shard count is
+    /// derived from `par` at every epoch, so setting parallelism after
+    /// construction (the coordinator/solver path) switches the epoch
+    /// loop too — `with_parallelism` at construction and
+    /// `set_parallelism` later are equivalent.
     fn set_parallelism(&mut self, par: Parallelism) {
         self.par = par;
     }
 
     fn parallelism(&self) -> Parallelism {
         self.par
+    }
+
+    fn set_epoch_shards(&mut self, shards: EpochShards) {
+        self.epoch_shards = shards;
+    }
+
+    fn epoch_shards(&self) -> EpochShards {
+        self.epoch_shards
     }
 
     fn name(&self) -> &'static str {
@@ -312,6 +584,110 @@ mod tests {
                 "score mismatch at {i}"
             );
         }
+    }
+
+    #[test]
+    fn shards_one_is_bitwise_serial() {
+        for ds in [synth::synth_linear(30, 50, 21), synth::gisette_like(30, 50, 22)] {
+            let prob = ds.problem();
+            let lam = prob.lambda_max() * 0.1;
+            let active: Vec<usize> = (0..prob.p()).collect();
+            let mut b_ser = vec![0.0; prob.p()];
+            let mut e_ser = NativeEngine::new();
+            let mut b_one = vec![0.0; prob.p()];
+            let mut e_one = NativeEngine::new();
+            e_one.set_epoch_shards(EpochShards::Fixed(1));
+            for _ in 0..5 {
+                let es = e_ser.cm_eval(&prob, &active, &mut b_ser, lam, 3);
+                let eo = e_one.cm_eval(&prob, &active, &mut b_one, lam, 3);
+                assert_eq!(b_ser, b_one, "beta diverged");
+                assert_eq!(es.primal.to_bits(), eo.primal.to_bits());
+                assert_eq!(es.theta, eo.theta);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_epochs_converge_to_serial_objective() {
+        for ds in [synth::synth_linear(40, 300, 23), synth::gisette_like(40, 300, 24)] {
+            let prob = ds.problem();
+            let lam = prob.lambda_max() * 0.1;
+            let active: Vec<usize> = (0..prob.p()).collect();
+            let mut b_ser = vec![0.0; prob.p()];
+            let mut e_ser = NativeEngine::new();
+            let (ref_eval, _) = crate::cm::solve_subproblem(
+                &mut e_ser, &prob, &active, &mut b_ser, lam, 1e-11, 10, 200_000,
+            );
+            for shards in [2usize, 4] {
+                let mut b = vec![0.0; prob.p()];
+                let mut eng = NativeEngine::new();
+                eng.set_epoch_shards(EpochShards::Fixed(shards));
+                let (eval, _) = crate::cm::solve_subproblem(
+                    &mut eng, &prob, &active, &mut b, lam, 1e-11, 10, 200_000,
+                );
+                let tol = 1e-10 * ref_eval.primal.abs().max(1.0);
+                assert!(
+                    (eval.primal - ref_eval.primal).abs() <= tol,
+                    "shards={shards}: primal {} vs {}",
+                    eval.primal,
+                    ref_eval.primal
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_epoch_is_deterministic_for_fixed_shard_count() {
+        let prob = synth::synth_linear(40, 200, 25).problem();
+        let lam = prob.lambda_max() * 0.05;
+        let active: Vec<usize> = (0..prob.p()).collect();
+        let run = || {
+            let mut b = vec![0.0; prob.p()];
+            let mut eng = NativeEngine::new();
+            eng.set_epoch_shards(EpochShards::Fixed(3));
+            eng.cm_eval(&prob, &active, &mut b, lam, 20);
+            b
+        };
+        let (b1, b2) = (run(), run());
+        assert_eq!(b1, b2, "same shard count must reproduce the same bits");
+    }
+
+    #[test]
+    fn set_parallelism_reconfigures_epoch_shards() {
+        // regression: configuring --threads AFTER engine construction
+        // (the coordinator/solver path) must drive the epoch shard
+        // count exactly like constructing with it up front
+        let mut late = NativeEngine::new();
+        assert_eq!(late.effective_epoch_shards(10_000), 1);
+        late.set_parallelism(Parallelism::Fixed(4));
+        assert_eq!(late.effective_epoch_shards(10_000), 4);
+        // below the gate, FollowParallelism stays serial
+        assert_eq!(
+            late.effective_epoch_shards(NativeEngine::EPOCH_SHARD_MIN_SWEEP - 1),
+            1
+        );
+        // an explicit Fixed policy skips the FollowParallelism gate
+        // but still keeps MIN_SHARD_COLS positions per shard
+        late.set_epoch_shards(EpochShards::Fixed(2));
+        assert_eq!(late.effective_epoch_shards(4 * NativeEngine::MIN_SHARD_COLS), 2);
+        assert_eq!(late.effective_epoch_shards(2 * NativeEngine::MIN_SHARD_COLS), 2);
+        assert_eq!(late.effective_epoch_shards(NativeEngine::MIN_SHARD_COLS - 1), 1);
+        assert_eq!(late.effective_epoch_shards(1), 1);
+        late.set_epoch_shards(EpochShards::Fixed(8));
+        assert_eq!(late.effective_epoch_shards(3 * NativeEngine::MIN_SHARD_COLS), 3);
+
+        // and the solves are bitwise identical either way
+        let prob = synth::synth_linear(50, 600, 26).problem();
+        let lam = prob.lambda_max() * 0.1;
+        let active: Vec<usize> = (0..prob.p()).collect();
+        let mut b_early = vec![0.0; prob.p()];
+        let mut early = NativeEngine::with_parallelism(Parallelism::Fixed(4));
+        early.cm_eval(&prob, &active, &mut b_early, lam, 10);
+        let mut b_late = vec![0.0; prob.p()];
+        let mut late = NativeEngine::new();
+        late.set_parallelism(Parallelism::Fixed(4));
+        late.cm_eval(&prob, &active, &mut b_late, lam, 10);
+        assert_eq!(b_early, b_late);
     }
 
     #[test]

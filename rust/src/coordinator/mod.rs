@@ -25,7 +25,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::cm::{Engine, NativeEngine};
+use crate::cm::{Engine, EpochShards, NativeEngine};
 use crate::linalg::Parallelism;
 use crate::metrics::LatencyStats;
 use crate::model::Problem;
@@ -104,11 +104,27 @@ impl Coordinator {
     }
 
     /// [`Coordinator::new`], with each worker's native engine running
-    /// full-p scans under the given column parallelism.
+    /// full-p scans under the given column parallelism. Epoch sharding
+    /// follows the same setting ([`EpochShards::FollowParallelism`]):
+    /// a worker given `--threads 4` also shards wide active-block
+    /// epochs 4 ways.
     pub fn with_parallelism(
         n_workers: usize,
         engine: EngineKind,
         par: Parallelism,
+    ) -> Coordinator {
+        Coordinator::with_policy(n_workers, engine, par, EpochShards::FollowParallelism)
+    }
+
+    /// [`Coordinator::with_parallelism`], with an explicit sharding
+    /// policy for the active-block CM epochs (e.g. `Fixed(1)` to pin
+    /// epochs serial while keeping parallel scans, or `Fixed(k)` for a
+    /// machine-independent, bitwise-reproducible solve trajectory).
+    pub fn with_policy(
+        n_workers: usize,
+        engine: EngineKind,
+        par: Parallelism,
+        shards: EpochShards,
     ) -> Coordinator {
         let (res_tx, res_rx) = channel::<SolveResponse>();
         let mut senders = Vec::with_capacity(n_workers);
@@ -118,7 +134,7 @@ impl Coordinator {
             let res_tx = res_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("saif-worker-{w}"))
-                .spawn(move || worker_loop(w, engine, par, rx, res_tx))
+                .spawn(move || worker_loop(w, engine, par, shards, rx, res_tx))
                 .expect("spawn worker");
             senders.push(tx);
             handles.push(handle);
@@ -174,15 +190,34 @@ impl Coordinator {
         Coordinator::run_batch_with(requests, n_workers, engine, Parallelism::Serial)
     }
 
-    /// [`Coordinator::run_batch`] with per-worker scan parallelism.
+    /// [`Coordinator::run_batch`] with per-worker scan parallelism
+    /// (epoch sharding follows it).
     pub fn run_batch_with(
         requests: Vec<SolveRequest>,
         n_workers: usize,
         engine: EngineKind,
         par: Parallelism,
     ) -> (Vec<SolveResponse>, LatencyStats, f64) {
+        Coordinator::run_batch_with_policy(
+            requests,
+            n_workers,
+            engine,
+            par,
+            EpochShards::FollowParallelism,
+        )
+    }
+
+    /// [`Coordinator::run_batch_with`] with an explicit epoch-sharding
+    /// policy.
+    pub fn run_batch_with_policy(
+        requests: Vec<SolveRequest>,
+        n_workers: usize,
+        engine: EngineKind,
+        par: Parallelism,
+        shards: EpochShards,
+    ) -> (Vec<SolveResponse>, LatencyStats, f64) {
         let sw = Stopwatch::start();
-        let mut c = Coordinator::with_parallelism(n_workers, engine, par);
+        let mut c = Coordinator::with_policy(n_workers, engine, par, shards);
         for r in requests {
             c.submit(r);
         }
@@ -203,10 +238,12 @@ fn worker_loop(
     wid: usize,
     engine_kind: EngineKind,
     par: Parallelism,
+    shards: EpochShards,
     rx: Receiver<Msg>,
     res_tx: Sender<SolveResponse>,
 ) {
     let mut native = NativeEngine::with_parallelism(par);
+    native.set_epoch_shards(shards);
     let mut pjrt: Option<PjrtEngine> = match engine_kind {
         EngineKind::Pjrt => PjrtEngine::new().ok(),
         EngineKind::Native => None,
@@ -225,18 +262,22 @@ fn worker_loop(
             match msg {
                 Msg::Work(r) => batch.push(r),
                 Msg::Stop => {
-                    process_batch(wid, par, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
+                    process_batch(
+                        wid, par, shards, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx,
+                    );
                     return;
                 }
             }
         }
-        process_batch(wid, par, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
+        process_batch(wid, par, shards, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn process_batch(
     wid: usize,
     par: Parallelism,
+    shards: EpochShards,
     native: &mut NativeEngine,
     mut pjrt: Option<&mut PjrtEngine>,
     warm: &mut HashMap<u64, (f64, Vec<(usize, f64)>)>,
@@ -272,6 +313,7 @@ fn process_batch(
                     SaifConfig {
                         eps: req.eps,
                         parallelism: Some(par),
+                        epoch_shards: Some(shards),
                         ..Default::default()
                     },
                 );
@@ -382,6 +424,29 @@ mod tests {
             assert!(
                 r.kkt_violation < 1e-3 * r.lam.max(1.0),
                 "sparse req {}: kkt {}",
+                r.id,
+                r.kkt_violation
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_epoch_policy_solves_and_certifies() {
+        let prob = Arc::new(synth::synth_linear(40, 400, 206).problem());
+        let reqs = requests_for(prob.clone(), 3, &[0.3, 0.1, 0.05], 0);
+        let (responses, _, _) = Coordinator::run_batch_with_policy(
+            reqs,
+            2,
+            EngineKind::Native,
+            Parallelism::Fixed(2),
+            EpochShards::Fixed(3),
+        );
+        assert_eq!(responses.len(), 3);
+        for r in &responses {
+            assert!(r.gap <= 1e-8, "gap {}", r.gap);
+            assert!(
+                r.kkt_violation < 1e-3 * r.lam.max(1.0),
+                "sharded-epoch req {}: kkt {}",
                 r.id,
                 r.kkt_violation
             );

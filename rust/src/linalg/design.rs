@@ -169,6 +169,37 @@ impl Design {
         }
     }
 
+    /// Batched column dots: out[k] = x_{cols[k]}ᵀ v, one backend
+    /// dispatch for the whole batch instead of one per column (the
+    /// active-block gap evaluation scores its sweep through this).
+    /// Per-column results are identical to [`Design::col_dot`].
+    pub fn cols_dot(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), out.len());
+        match self {
+            Design::Dense(m) => {
+                for (o, &j) in out.iter_mut().zip(cols) {
+                    *o = super::ops::dot(m.col(j), v);
+                }
+            }
+            Design::Sparse(m) => m.cols_dot(cols, v, out),
+        }
+    }
+
+    /// Ordered fold of per-column updates: out += Σ_k alpha_k·x_{j_k},
+    /// applied strictly in `updates` order. The sharded CM epoch's
+    /// residual merge relies on this order being deterministic — the
+    /// same updates in the same order produce the same bits.
+    pub fn cols_axpy(&self, updates: &[(usize, f64)], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => {
+                for &(j, alpha) in updates {
+                    super::ops::axpy(alpha, m.col(j), out);
+                }
+            }
+            Design::Sparse(m) => m.cols_axpy(updates, out),
+        }
+    }
+
     /// Stored entries of column j as (row, value) pairs.
     pub fn col_iter(&self, j: usize) -> ColIter<'_> {
         match self {
@@ -368,6 +399,38 @@ mod tests {
                 cb[i] = v;
             }
             assert_eq!(ca, cb);
+        }
+    }
+
+    #[test]
+    fn batched_cols_dot_axpy_match_per_column() {
+        let mut rng = Rng::new(81);
+        let (sp, dn) = random_pair(&mut rng, 15, 12);
+        let v: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let shard = [3usize, 0, 7, 11, 7]; // repeats allowed
+        for design in [&sp, &dn] {
+            let mut batched = vec![0.0; shard.len()];
+            design.cols_dot(&shard, &v, &mut batched);
+            for (k, &j) in shard.iter().enumerate() {
+                assert_eq!(batched[k], design.col_dot(j, &v), "col {j}");
+            }
+            let updates = [(2usize, 0.5), (9, -1.25), (2, 0.75)];
+            let mut folded = v.clone();
+            design.cols_axpy(&updates, &mut folded);
+            let mut manual = v.clone();
+            for &(j, a) in &updates {
+                design.col_axpy(a, j, &mut manual);
+            }
+            // bitwise: the fold applies in `updates` order exactly
+            assert_eq!(folded, manual);
+        }
+        // backends agree too
+        let mut a = vec![0.0; shard.len()];
+        let mut b = vec![0.0; shard.len()];
+        sp.cols_dot(&shard, &v, &mut a);
+        dn.cols_dot(&shard, &v, &mut b);
+        for k in 0..shard.len() {
+            assert!((a[k] - b[k]).abs() < 1e-12);
         }
     }
 

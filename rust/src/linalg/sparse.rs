@@ -174,6 +174,25 @@ impl CscMat {
         }
     }
 
+    /// Batched column dots: out[k] = x_{cols[k]}ᵀ v — O(Σ nnz(cols)),
+    /// a per-column [`CscMat::col_dot`] loop behind a single entry
+    /// point so [`super::Design`] hands a whole batch to this backend
+    /// in one dispatch.
+    pub fn cols_dot(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), out.len());
+        for (o, &j) in out.iter_mut().zip(cols) {
+            *o = self.col_dot(j, v);
+        }
+    }
+
+    /// Ordered fold out += Σ_k alpha_k·x_{j_k}, applied strictly in
+    /// `updates` order (deterministic residual merge).
+    pub fn cols_axpy(&self, updates: &[(usize, f64)], out: &mut [f64]) {
+        for &(j, alpha) in updates {
+            self.col_axpy(alpha, j, out);
+        }
+    }
+
     /// y = X v (v has n_cols entries) — O(nnz).
     pub fn mul_vec(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.n_cols);

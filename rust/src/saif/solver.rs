@@ -1,7 +1,7 @@
 //! The SAIF solver (Algorithm 1 + Algorithm 2).
 
 use crate::ball::{gap_ball, intersect, thm2_ball_ls, Ball};
-use crate::cm::{Engine, SubEval};
+use crate::cm::{Engine, EpochShards, SubEval};
 use crate::linalg::Parallelism;
 use crate::model::{LossKind, Problem};
 use crate::util::Stopwatch;
@@ -47,6 +47,12 @@ pub struct SaifConfig {
     /// engine is already configured with (the coordinator sets
     /// engine-level parallelism per worker); `Some(par)` forces it.
     pub parallelism: Option<Parallelism>,
+    /// Sharding policy for the active-block CM epochs (the reduced
+    /// solve that dominates once |A| grows). `None` inherits the
+    /// engine's setting — under the default
+    /// [`EpochShards::FollowParallelism`] the epochs shard with the
+    /// same thread budget as the scans; `Some(sh)` forces it.
+    pub epoch_shards: Option<EpochShards>,
     /// Record a trace (Figures 3/4).
     pub trace: bool,
 }
@@ -65,6 +71,7 @@ impl Default for SaifConfig {
             scan_gap_factor: 0.5,
             adaptive_k: true,
             parallelism: None,
+            epoch_shards: None,
             trace: false,
         }
     }
@@ -124,6 +131,9 @@ impl<'a> Saif<'a> {
         let p = prob.p();
         if let Some(par) = self.cfg.parallelism {
             self.engine.set_parallelism(par);
+        }
+        if let Some(sh) = self.cfg.epoch_shards {
+            self.engine.set_epoch_shards(sh);
         }
         // problem-level scans match the engine's setting, so `None`
         // genuinely inherits (coordinator workers configure the engine)

@@ -1,0 +1,138 @@
+//! Shared KKT-certificate test oracle.
+//!
+//! Every safe-screening claim in this repo bottoms out in the same
+//! three checks: (1) the subgradient residual of the returned β on the
+//! FULL problem is within tolerance (the safety certificate), (2) the
+//! reported duality gap met the requested ε, and (3) when a reference
+//! solve exists, the supports (and coefficients) match. These used to
+//! be re-implemented inline per test file; this module is the single
+//! implementation, usable both from `assert!`-style tests (the
+//! `assert_*` wrappers panic) and from `util::prop` property closures
+//! (the `check_*` functions return `Result<(), String>` for `?`).
+//!
+//! `#![allow(dead_code)]`: each integration-test binary compiles this
+//! module independently and uses a different subset of the oracle.
+#![allow(dead_code)]
+
+use saif::linalg::Parallelism;
+use saif::model::Problem;
+use saif::util::prop;
+
+/// Default relative KKT tolerance: a solve converged to a ~1e-9 gap
+/// certifies at ≲1e-3·max(λ, 1) subgradient residual (the scale the
+/// repo's tests have always used for f64 engines).
+pub const KKT_REL_TOL: f64 = 1e-3;
+
+/// Default |β| threshold below which a coefficient does not count as
+/// support (numerical zeros from soft-thresholding near convergence).
+pub const SUPPORT_TOL: f64 = 1e-7;
+
+/// Subgradient-residual check (the safety certificate): the worst KKT
+/// violation of `beta` on the FULL problem must be below
+/// `rel_tol · max(λ, 1)`.
+pub fn check_kkt(
+    prob: &Problem,
+    beta: &[(usize, f64)],
+    lam: f64,
+    rel_tol: f64,
+) -> Result<(), String> {
+    let viol = prob.kkt_violation(beta, lam);
+    if viol > rel_tol * lam.max(1.0) {
+        return Err(format!(
+            "KKT violation {viol:.3e} > {rel_tol:.0e}·max(λ,1) at λ={lam:.3e}"
+        ));
+    }
+    Ok(())
+}
+
+/// Duality-gap check: the solver must have reached the ε it was asked
+/// for, and a gap can never be negative.
+pub fn check_gap(gap: f64, eps: f64) -> Result<(), String> {
+    if gap < 0.0 {
+        return Err(format!("negative duality gap {gap:.3e}"));
+    }
+    if gap > eps {
+        return Err(format!("duality gap {gap:.3e} > requested ε {eps:.0e}"));
+    }
+    Ok(())
+}
+
+/// Support of a sparse β (sorted indices with |β_i| > tol).
+pub fn support_sparse(beta: &[(usize, f64)], tol: f64) -> Vec<usize> {
+    let mut s: Vec<usize> =
+        beta.iter().filter(|(_, b)| b.abs() > tol).map(|&(i, _)| i).collect();
+    s.sort_unstable();
+    s
+}
+
+/// Support of a dense β (sorted indices with |β_i| > tol).
+pub fn support_dense(beta: &[f64], tol: f64) -> Vec<usize> {
+    (0..beta.len()).filter(|&i| beta[i].abs() > tol).collect()
+}
+
+/// Support-match check between two sparse solutions.
+pub fn check_supports_match(
+    a: &[(usize, f64)],
+    b: &[(usize, f64)],
+    tol: f64,
+    what: &str,
+) -> Result<(), String> {
+    let (sa, sb) = (support_sparse(a, tol), support_sparse(b, tol));
+    if sa != sb {
+        return Err(format!("{what}: supports differ: {sa:?} vs {sb:?}"));
+    }
+    Ok(())
+}
+
+/// Coefficient-match check of a sparse solution against a dense
+/// reference (per-coefficient `prop::assert_close` semantics).
+pub fn check_coeffs_match(
+    beta: &[(usize, f64)],
+    reference: &[f64],
+    atol: f64,
+    rtol: f64,
+) -> Result<(), String> {
+    for &(i, b) in beta {
+        prop::assert_close(b, reference[i], atol, rtol, &format!("β[{i}]"))?;
+    }
+    Ok(())
+}
+
+/// The full certificate: gap reached ε AND the subgradient residual
+/// certifies optimality on the full problem.
+pub fn check_certificate(
+    prob: &Problem,
+    beta: &[(usize, f64)],
+    lam: f64,
+    gap: f64,
+    eps: f64,
+) -> Result<(), String> {
+    check_gap(gap, eps)?;
+    check_kkt(prob, beta, lam, KKT_REL_TOL)
+}
+
+/// Panicking wrapper of [`check_certificate`] for `#[test]` bodies.
+pub fn assert_certificate(prob: &Problem, beta: &[(usize, f64)], lam: f64, gap: f64, eps: f64) {
+    if let Err(msg) = check_certificate(prob, beta, lam, gap, eps) {
+        panic!("certificate failed: {msg}");
+    }
+}
+
+/// Panicking wrapper of [`check_kkt`] at the default tolerance.
+pub fn assert_kkt(prob: &Problem, beta: &[(usize, f64)], lam: f64) {
+    if let Err(msg) = check_kkt(prob, beta, lam, KKT_REL_TOL) {
+        panic!("certificate failed: {msg}");
+    }
+}
+
+/// Scan parallelism for the test run, from `SAIF_TEST_THREADS`
+/// ("serial"/"auto"/N — see `Parallelism::parse`; unset ⇒ serial).
+/// `ci.sh` runs the suite once with 1 and once with 4 so the sharded
+/// epoch + parallel scan paths are exercised in tier-1.
+pub fn test_parallelism() -> Parallelism {
+    match std::env::var("SAIF_TEST_THREADS") {
+        Ok(s) => Parallelism::parse(&s)
+            .unwrap_or_else(|| panic!("bad SAIF_TEST_THREADS value '{s}'")),
+        Err(_) => Parallelism::Serial,
+    }
+}

@@ -3,6 +3,8 @@
 //! (identical semantics, f32 tolerance). Skipped when the artifacts
 //! have not been built (`make artifacts`).
 
+mod common;
+
 use saif::cm::{Engine, NativeEngine};
 use saif::data::synth;
 use saif::model::LossKind;
@@ -15,6 +17,38 @@ fn require_artifacts() -> Option<PjrtEngine> {
         return None;
     }
     Some(PjrtEngine::new().expect("PJRT engine"))
+}
+
+#[test]
+fn sharded_native_engine_agrees_with_serial_native() {
+    // same cross-validation contract as native-vs-PJRT, but between
+    // the serial and the sharded configurations of the native engine
+    // (f64 vs f64, so tolerances are tight); runs without artifacts
+    use saif::cm::EpochShards;
+    for ds in [synth::synth_linear(60, 400, 111), synth::gisette_like(60, 400, 112)] {
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.2;
+        let eps = 1e-10;
+        let mut serial = NativeEngine::new();
+        let r1 = Saif::new(&mut serial, SaifConfig { eps, ..Default::default() })
+            .solve(&prob, lam);
+        let mut sharded = NativeEngine::new();
+        sharded.set_epoch_shards(EpochShards::Fixed(4));
+        let r2 = Saif::new(&mut sharded, SaifConfig { eps, ..Default::default() })
+            .solve(&prob, lam);
+        common::assert_certificate(&prob, &r1.beta, lam, r1.gap, eps);
+        common::assert_certificate(&prob, &r2.beta, lam, r2.gap, eps);
+        common::check_supports_match(&r1.beta, &r2.beta, common::SUPPORT_TOL, "serial vs sharded")
+            .unwrap();
+        // both primals sit within eps of the same optimum value
+        let scale = r1.primal.abs().max(1.0);
+        assert!(
+            (r1.primal - r2.primal).abs() <= 2.0 * eps * scale,
+            "primal {} vs {}",
+            r1.primal,
+            r2.primal
+        );
+    }
 }
 
 #[test]
@@ -105,16 +139,18 @@ fn saif_end_to_end_on_pjrt_engine() {
     let eps = 1e-2;
     let mut s = Saif::new(&mut pjrt, SaifConfig { eps, ..Default::default() });
     let res = s.solve(&prob, lam);
-    assert!(res.gap <= eps, "gap {}", res.gap);
+    common::check_gap(res.gap, eps).unwrap();
     assert!(res.max_active < 1024, "bucket overflow {}", res.max_active);
-    // support agrees with the exact native solve
+    // support agrees with the exact native solve (which also carries
+    // the full f64 certificate)
     let mut native = NativeEngine::new();
     let mut s2 = Saif::new(&mut native, SaifConfig { eps: 1e-9, ..Default::default() });
     let exact = s2.solve(&prob, lam);
+    common::assert_certificate(&prob, &exact.beta, lam, exact.gap, 1e-9);
     let sup_pjrt: std::collections::HashSet<usize> =
-        res.beta.iter().filter(|(_, b)| b.abs() > 1e-4).map(|&(i, _)| i).collect();
+        common::support_sparse(&res.beta, 1e-4).into_iter().collect();
     let sup_exact: std::collections::HashSet<usize> =
-        exact.beta.iter().filter(|(_, b)| b.abs() > 1e-4).map(|&(i, _)| i).collect();
+        common::support_sparse(&exact.beta, 1e-4).into_iter().collect();
     // f32 vs f64 at loose gap: supports need not be identical, but the
     // overlap must be overwhelming
     let inter = sup_pjrt.intersection(&sup_exact).count();

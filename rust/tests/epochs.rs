@@ -1,0 +1,190 @@
+//! Sharded active-block CM epochs: parity with the serial epoch,
+//! certified by the shared KKT oracle (`tests/common`).
+//!
+//! The contract under test (see `cm::native`):
+//! * shards = 1 is BITWISE identical to the serial epoch — same β,
+//!   same primal bits, at every evaluation;
+//! * shards > 1 changes the iterate trajectory (Jacobi across shards)
+//!   but not the answer: the converged objective matches the serial
+//!   solve within 1e-10 and the solution passes the KKT certificate —
+//!   on dense and sparse designs, least-squares and logistic losses;
+//! * a fixed shard count reproduces the same bits run-to-run (the
+//!   ordered residual merge is deterministic).
+
+mod common;
+
+use saif::cm::{solve_subproblem, Engine, EpochShards, NativeEngine, SubEval};
+use saif::data::synth;
+use saif::linalg::Parallelism;
+use saif::model::{LossKind, Problem};
+use saif::saif::{Saif, SaifConfig};
+use saif::util::prop;
+use saif::util::Rng;
+
+/// Random problem drawn over {dense, sparse} × {ls, logistic}.
+/// p ≥ 64 so an explicit Fixed(4) policy genuinely runs 4 shards
+/// (each shard must keep `NativeEngine::MIN_SHARD_COLS` = 16 columns).
+fn random_problem(rng: &mut Rng) -> Problem {
+    let n = 20 + rng.below(40);
+    let p = 64 + rng.below(120);
+    let sparse = rng.uniform() > 0.5;
+    let logistic = rng.uniform() > 0.5;
+    let ds = if sparse {
+        synth::synth_sparse(n, p, 0.05 + 0.15 * rng.uniform(), rng.next_u64())
+    } else {
+        synth::synth_linear(n, p, rng.next_u64())
+    };
+    if logistic {
+        // ±1 labels from the regression targets: a sparse/dense
+        // logistic problem on the same design
+        let y: Vec<f64> =
+            ds.y.iter().map(|v| if *v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        Problem::new(ds.x, y, LossKind::Logistic)
+    } else {
+        ds.problem()
+    }
+}
+
+/// Solve the reduced problem over ALL columns with the given engine.
+fn solve_with(eng: &mut NativeEngine, prob: &Problem, lam: f64, eps: f64) -> (Vec<f64>, SubEval) {
+    let active: Vec<usize> = (0..prob.p()).collect();
+    let mut beta = vec![0.0; prob.p()];
+    let (eval, _) = solve_subproblem(eng, prob, &active, &mut beta, lam, eps, 10, 400_000);
+    (beta, eval)
+}
+
+fn sparse_beta(beta: &[f64]) -> Vec<(usize, f64)> {
+    beta.iter().enumerate().filter(|(_, b)| **b != 0.0).map(|(i, &b)| (i, b)).collect()
+}
+
+#[test]
+fn sharded_epoch_parity_randomized() {
+    prop::check("sharded == serial epochs", 8, |rng| {
+        let prob = random_problem(rng);
+        let lam = prob.lambda_max() * (0.05 + 0.3 * rng.uniform());
+        let eps = 1e-11;
+
+        let mut serial = NativeEngine::new();
+        let (b_ser, ev_ser) = solve_with(&mut serial, &prob, lam, eps);
+        common::check_certificate(&prob, &sparse_beta(&b_ser), lam, ev_ser.gap, eps)?;
+
+        // shards = 1: bitwise identical to the serial epoch
+        let mut one = NativeEngine::new();
+        one.set_epoch_shards(EpochShards::Fixed(1));
+        let (b_one, ev_one) = solve_with(&mut one, &prob, lam, eps);
+        if b_one != b_ser {
+            return Err("shards=1 β differs bitwise from serial".into());
+        }
+        if ev_one.primal.to_bits() != ev_ser.primal.to_bits() {
+            return Err(format!(
+                "shards=1 primal bits differ: {} vs {}",
+                ev_one.primal, ev_ser.primal
+            ));
+        }
+
+        // shards ∈ {2, 4}: same objective within 1e-10 + KKT oracle
+        for shards in [2usize, 4] {
+            let mut eng = NativeEngine::new();
+            eng.set_epoch_shards(EpochShards::Fixed(shards));
+            let (b_sh, ev_sh) = solve_with(&mut eng, &prob, lam, eps);
+            prop::assert_close(
+                ev_sh.primal,
+                ev_ser.primal,
+                1e-10,
+                1e-10,
+                &format!("primal (shards={shards}, {:?})", prob.loss),
+            )?;
+            common::check_certificate(&prob, &sparse_beta(&b_sh), lam, ev_sh.gap, eps)
+                .map_err(|e| format!("shards={shards}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_saif_end_to_end_randomized() {
+    // the full SAIF loop (ADD/DEL + sharded reduced solves) stays safe
+    prop::check("saif with sharded epochs is safe", 6, |rng| {
+        let prob = random_problem(rng);
+        let lam = prob.lambda_max() * (0.05 + 0.25 * rng.uniform());
+        let eps = 1e-9;
+        let mut serial = NativeEngine::new();
+        let r_ser = Saif::new(&mut serial, SaifConfig { eps, ..Default::default() })
+            .solve(&prob, lam);
+        let shards = 2 + rng.below(3); // 2..=4
+        let mut eng = NativeEngine::new();
+        eng.set_epoch_shards(EpochShards::Fixed(shards));
+        let r_sh =
+            Saif::new(&mut eng, SaifConfig { eps, ..Default::default() }).solve(&prob, lam);
+        common::check_certificate(&prob, &r_sh.beta, lam, r_sh.gap, eps)
+            .map_err(|e| format!("shards={shards}: {e}"))?;
+        common::check_supports_match(
+            &r_ser.beta,
+            &r_sh.beta,
+            common::SUPPORT_TOL,
+            "serial vs sharded SAIF",
+        )
+    });
+}
+
+#[test]
+fn fixed_shard_count_reproduces_bitwise() {
+    let prob = synth::synth_sparse(50, 500, 0.05, 77).problem();
+    let lam = prob.lambda_max() * 0.1;
+    let run = |shards: usize| {
+        let mut eng = NativeEngine::new();
+        eng.set_epoch_shards(EpochShards::Fixed(shards));
+        let (beta, _) = solve_with(&mut eng, &prob, lam, 1e-10);
+        beta
+    };
+    for shards in [2usize, 3, 4] {
+        assert_eq!(run(shards), run(shards), "shards={shards} not reproducible");
+    }
+}
+
+#[test]
+fn env_driven_parallelism_exercises_epoch_path() {
+    // ci.sh runs the suite with SAIF_TEST_THREADS ∈ {1, 4}: under 4
+    // the FollowParallelism engine shards this p=600 reduced solve,
+    // under 1 it stays serial — both must certify and agree
+    let par = common::test_parallelism();
+    let prob = synth::synth_linear(50, 600, 88).problem();
+    let lam = prob.lambda_max() * 0.1;
+    let eps = 1e-10;
+    let mut serial = NativeEngine::new();
+    let (b_ser, ev_ser) = solve_with(&mut serial, &prob, lam, eps);
+    let mut eng = NativeEngine::with_parallelism(par);
+    assert_eq!(
+        eng.effective_epoch_shards(prob.p()),
+        par.threads(prob.p()),
+        "FollowParallelism must track the scan parallelism"
+    );
+    let (b_env, ev_env) = solve_with(&mut eng, &prob, lam, eps);
+    common::check_certificate(&prob, &sparse_beta(&b_env), lam, ev_env.gap, eps).unwrap();
+    let scale = ev_ser.primal.abs().max(1.0);
+    assert!(
+        (ev_env.primal - ev_ser.primal).abs() <= 2.0 * eps * scale,
+        "primal {} vs {}",
+        ev_env.primal,
+        ev_ser.primal
+    );
+    if par.threads(prob.p()) <= 1 {
+        // serial policy ⇒ the trajectory itself is identical
+        assert_eq!(b_env, b_ser);
+    }
+}
+
+#[test]
+fn set_parallelism_late_matches_construction_time() {
+    // regression (coordinator path): --threads applied AFTER engine
+    // construction must shard epochs exactly like with_parallelism
+    let prob = synth::synth_linear(40, 500, 99).problem();
+    let lam = prob.lambda_max() * 0.15;
+    let mut early = NativeEngine::with_parallelism(Parallelism::Fixed(3));
+    let (b_early, _) = solve_with(&mut early, &prob, lam, 1e-10);
+    let mut late = NativeEngine::new();
+    late.set_parallelism(Parallelism::Fixed(3));
+    assert_eq!(late.effective_epoch_shards(prob.p()), 3);
+    let (b_late, _) = solve_with(&mut late, &prob, lam, 1e-10);
+    assert_eq!(b_early, b_late, "late set_parallelism took a different epoch path");
+}

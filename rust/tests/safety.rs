@@ -3,6 +3,8 @@
 //! coefficients, KKT-certified) no matter how the active set evolved.
 //! Randomized across data distributions, losses, λ and hyper-params.
 
+mod common;
+
 use saif::cm::{solve_subproblem, NativeEngine};
 use saif::data::synth;
 use saif::model::{LossKind, Problem};
@@ -15,7 +17,7 @@ fn exact_support(prob: &Problem, lam: f64) -> (Vec<f64>, Vec<usize>) {
     let mut eng = NativeEngine::new();
     let (_e, _) =
         solve_subproblem(&mut eng, prob, &all, &mut beta, lam, 1e-10, 10, 500_000);
-    let sup = (0..prob.p()).filter(|&i| beta[i].abs() > 1e-8).collect();
+    let sup = common::support_dense(&beta, 1e-8);
     (beta, sup)
 }
 
@@ -41,21 +43,14 @@ fn saif_support_equals_exhaustive_support_randomized() {
         };
         let mut saif = Saif::new(&mut eng, cfg);
         let res = saif.solve(&prob, lam);
-        let mut saif_sup: Vec<usize> = res
-            .beta
-            .iter()
-            .filter(|(_, b)| b.abs() > 1e-8)
-            .map(|&(i, _)| i)
-            .collect();
-        saif_sup.sort();
+        let saif_sup = common::support_sparse(&res.beta, 1e-8);
         if saif_sup != sup {
             return Err(format!(
                 "support mismatch: saif {saif_sup:?} vs exact {sup:?} (λ={lam:.3e})"
             ));
         }
-        for &(i, b) in &res.beta {
-            prop::assert_close(b, full[i], 1e-5, 1e-4, &format!("β[{i}]"))?;
-        }
+        common::check_coeffs_match(&res.beta, &full, 1e-5, 1e-4)?;
+        common::check_kkt(&prob, &res.beta, lam, common::KKT_REL_TOL)?;
         Ok(())
     });
 }
@@ -73,10 +68,7 @@ fn saif_logistic_safety_randomized() {
             SaifConfig { eps: 1e-9, ..Default::default() },
         );
         let res = saif.solve(&prob, lam);
-        let viol = prob.kkt_violation(&res.beta, lam);
-        if viol > 1e-2 * lam.max(1.0) {
-            return Err(format!("KKT violation {viol:.3e} at λ={lam:.3e}"));
-        }
+        common::check_kkt(&prob, &res.beta, lam, 1e-2)?;
         Ok(())
     });
 }
@@ -122,10 +114,8 @@ fn warm_start_from_wrong_solution_is_still_safe() {
             SaifConfig { eps: 1e-10, ..Default::default() },
         );
         let res = saif.solve_warm(&prob, lam, Some(&junk));
-        let viol = prob.kkt_violation(&res.beta, lam);
-        if viol > 1e-3 * lam.max(1.0) {
-            return Err(format!("KKT violation {viol:.3e} from junk warm start"));
-        }
+        common::check_kkt(&prob, &res.beta, lam, common::KKT_REL_TOL)
+            .map_err(|e| format!("junk warm start: {e}"))?;
         Ok(())
     });
 }
@@ -142,11 +132,7 @@ fn every_lambda_on_grid_is_safe() {
             SaifConfig { eps: 1e-9, ..Default::default() },
         );
         let res = saif.solve(&prob, lam);
-        let viol = prob.kkt_violation(&res.beta, lam);
-        assert!(
-            viol < 1e-3 * lam.max(1.0),
-            "λ={lam:.3e}: violation {viol:.3e}"
-        );
+        common::assert_certificate(&prob, &res.beta, lam, res.gap, 1e-9);
     }
 }
 

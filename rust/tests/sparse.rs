@@ -4,6 +4,8 @@
 //! solve through SAIF, dynamic screening and BLITZ with a full KKT
 //! certificate.
 
+mod common;
+
 use saif::cm::NativeEngine;
 use saif::data::{io, synth};
 use saif::linalg::{CscMat, Design, Parallelism};
@@ -100,26 +102,14 @@ fn sparse_dense_saif_solutions_agree() {
         let rd = Saif::new(&mut e2, SaifConfig { eps: 1e-12, ..Default::default() })
             .solve(&dense_prob, lam);
 
-        let sup = |beta: &[(usize, f64)]| {
-            let mut s: Vec<usize> =
-                beta.iter().filter(|(_, b)| b.abs() > 1e-10).map(|&(i, _)| i).collect();
-            s.sort();
-            s
-        };
-        let (sup_s, sup_d) = (sup(&rs.beta), sup(&rd.beta));
-        if sup_s != sup_d {
-            return Err(format!("supports differ: {sup_s:?} vs {sup_d:?}"));
-        }
+        common::check_supports_match(&rs.beta, &rd.beta, 1e-10, "sparse vs dense")?;
         let dmap: std::collections::HashMap<usize, f64> = rd.beta.iter().cloned().collect();
         for &(i, b) in &rs.beta {
             let d = dmap.get(&i).copied().unwrap_or(0.0);
             prop::assert_close(b, d, 1e-8, 1e-8, &format!("β[{i}]"))?;
         }
         // certificate on the sparse problem
-        let viol = sparse_prob.kkt_violation(&rs.beta, lam);
-        if viol > 1e-3 * lam.max(1.0) {
-            return Err(format!("sparse KKT violation {viol:.3e}"));
-        }
+        common::check_kkt(&sparse_prob, &rs.beta, lam, common::KKT_REL_TOL)?;
         Ok(())
     });
 }
@@ -143,11 +133,7 @@ fn libsvm_sparse_load_solves_all_safe_methods() {
     let mut e1 = NativeEngine::new();
     let saif_res =
         Saif::new(&mut e1, SaifConfig { eps, ..Default::default() }).solve(&prob, lam);
-    assert!(saif_res.gap <= eps);
-    assert!(
-        prob.kkt_violation(&saif_res.beta, lam) < 1e-3 * lam.max(1.0),
-        "saif sparse certificate"
-    );
+    common::assert_certificate(&prob, &saif_res.beta, lam, saif_res.gap, eps);
     // SAIF on sparse text-like data must keep the active set small —
     // the workload class the paper's scalability claim targets
     assert!(saif_res.max_active < prob.p() / 4);
@@ -155,44 +141,75 @@ fn libsvm_sparse_load_solves_all_safe_methods() {
     let mut e2 = NativeEngine::new();
     let dyn_res = DynScreen::new(&mut e2, DynScreenConfig { eps, ..Default::default() })
         .solve(&prob, lam);
-    assert!(prob.kkt_violation(&dyn_res.beta, lam) < 1e-3 * lam.max(1.0));
+    common::assert_kkt(&prob, &dyn_res.beta, lam);
 
     let mut e3 = NativeEngine::new();
     let blitz_res =
         Blitz::new(&mut e3, BlitzConfig { eps, ..Default::default() }).solve(&prob, lam);
-    assert!(prob.kkt_violation(&blitz_res.beta, lam) < 1e-3 * lam.max(1.0));
+    common::assert_kkt(&prob, &blitz_res.beta, lam);
 
     // all three agree on the support
-    let sup = |beta: &[(usize, f64)]| {
-        let mut s: Vec<usize> =
-            beta.iter().filter(|(_, b)| b.abs() > 1e-7).map(|&(i, _)| i).collect();
-        s.sort();
-        s
-    };
-    assert_eq!(sup(&saif_res.beta), sup(&dyn_res.beta), "saif vs dyn");
-    assert_eq!(sup(&saif_res.beta), sup(&blitz_res.beta), "saif vs blitz");
+    common::check_supports_match(
+        &saif_res.beta,
+        &dyn_res.beta,
+        common::SUPPORT_TOL,
+        "saif vs dyn",
+    )
+    .unwrap();
+    common::check_supports_match(
+        &saif_res.beta,
+        &blitz_res.beta,
+        common::SUPPORT_TOL,
+        "saif vs blitz",
+    )
+    .unwrap();
 }
 
 #[test]
 fn parallel_saif_matches_serial() {
+    use saif::cm::EpochShards;
     let ds = synth::synth_sparse(50, 1000, 0.02, 4242);
     let prob = ds.problem();
     let lam = prob.lambda_max() * 0.1;
     let mut e1 = NativeEngine::new();
     let serial = Saif::new(&mut e1, SaifConfig { eps: 1e-10, ..Default::default() })
         .solve(&prob, lam);
+    // chunked scans are bitwise-identical to serial; epochs are pinned
+    // serial (shards=1) so the whole solve trajectory matches bitwise
+    // even though --threads normally shards wide epochs too
     let mut e2 = NativeEngine::new();
     let parallel = Saif::new(
         &mut e2,
         SaifConfig {
             eps: 1e-10,
             parallelism: Some(Parallelism::Fixed(4)),
+            epoch_shards: Some(EpochShards::Fixed(1)),
             ..Default::default()
         },
     )
     .solve(&prob, lam);
-    // chunked scans are bitwise-identical to serial, so the whole
-    // solve trajectory matches
     assert_eq!(serial.beta, parallel.beta);
     assert_eq!(serial.outer_iters, parallel.outer_iters);
+
+    // with sharded epochs the trajectory may differ, but the result
+    // must still carry the full certificate and the same support
+    let mut e3 = NativeEngine::new();
+    let sharded = Saif::new(
+        &mut e3,
+        SaifConfig {
+            eps: 1e-10,
+            parallelism: Some(Parallelism::Fixed(4)),
+            epoch_shards: Some(EpochShards::Fixed(4)),
+            ..Default::default()
+        },
+    )
+    .solve(&prob, lam);
+    common::assert_certificate(&prob, &sharded.beta, lam, sharded.gap, 1e-10);
+    common::check_supports_match(
+        &serial.beta,
+        &sharded.beta,
+        common::SUPPORT_TOL,
+        "serial vs sharded epochs",
+    )
+    .unwrap();
 }
