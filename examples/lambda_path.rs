@@ -8,9 +8,8 @@
 use saif::cm::NativeEngine;
 use saif::data::synth;
 use saif::homotopy::{recall_precision, Homotopy, HomotopyConfig};
-use saif::saif::{Saif, SaifConfig};
 use saif::screening::dpp::DppPath;
-use saif::util::Stopwatch;
+use saif::solver::{make, Method, SolveSpec, Solver};
 
 fn main() {
     let n_lam: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(50);
@@ -22,18 +21,16 @@ fn main() {
         .collect();
     println!("{} λ values in [{:.2e}, {:.2e}], eps 1e-6", n_lam, lams[n_lam - 1], lams[0]);
 
-    // SAIF with warm starts
-    let sw = Stopwatch::start();
+    // SAIF λ-path session (warm-chained behind the unified Solver API)
     let mut eng = NativeEngine::new();
-    let mut saif = Saif::new(&mut eng, SaifConfig { eps: 1e-6, ..Default::default() });
-    let mut warm = None;
-    let mut saif_supports = Vec::new();
-    for &lam in &lams {
-        let r = saif.solve_warm(&prob, lam, warm.as_deref());
-        saif_supports.push(r.beta.iter().map(|&(i, _)| i).collect::<Vec<_>>());
-        warm = Some(r.beta);
-    }
-    println!("SAIF(warm):  {:.3}s", sw.secs());
+    let spec = SolveSpec { eps: 1e-6, ..Default::default() };
+    let path = make(Method::Saif, &mut eng, &spec).path(&prob, &lams);
+    let saif_supports: Vec<Vec<usize>> = path
+        .points
+        .iter()
+        .map(|sol| sol.beta.iter().map(|&(i, _)| i).collect())
+        .collect();
+    println!("SAIF(warm):  {:.3}s", path.secs);
 
     // DPP sequential screening
     let mut eng2 = NativeEngine::new();

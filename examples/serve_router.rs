@@ -16,7 +16,7 @@
 
 use std::sync::Arc;
 
-use saif::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
+use saif::coordinator::{Coordinator, EngineKind, Method, SolveRequest, SolveSpec};
 use saif::data::synth;
 use saif::runtime::artifacts_available;
 
@@ -48,8 +48,11 @@ fn main() {
                 problem: prob.clone(),
                 lam: lam_max * (2e-2f64).powf(k as f64 / n_lambdas as f64),
                 method: Method::Saif,
-                // f32 artifacts: gap floor ~1e-4 relative on this scale
-                eps: if engine == EngineKind::Pjrt { 1e-2 } else { 1e-6 },
+                spec: SolveSpec {
+                    // f32 artifacts: gap floor ~1e-4 relative here
+                    eps: if engine == EngineKind::Pjrt { 1e-2 } else { 1e-6 },
+                    ..Default::default()
+                },
             });
             id += 1;
         }
@@ -57,7 +60,12 @@ fn main() {
     let total = requests.len();
     println!("workload: {n_datasets} datasets × {n_lambdas} λ = {total} requests, {workers} workers");
 
-    let (responses, lat, wall) = Coordinator::run_batch(requests, workers, engine);
+    let batch = Coordinator::builder()
+        .workers(workers)
+        .engine(engine)
+        .run_batch(requests)
+        .expect("coordinator workers alive");
+    let (responses, lat, wall) = (batch.responses, batch.latency, batch.wall_secs);
 
     assert_eq!(responses.len(), total);
     let warm = responses.iter().filter(|r| r.warm_started).count();

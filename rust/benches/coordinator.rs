@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use saif::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
+use saif::coordinator::{Coordinator, EngineKind, Method, SolveRequest, SolveSpec};
 use saif::data::synth;
 use saif::metrics::Table;
 
@@ -23,7 +23,7 @@ fn workload(scatter_keys: bool) -> Vec<SolveRequest> {
                 problem: prob.clone(),
                 lam: lam_max * (1e-2f64).powf(k as f64 / 6.0),
                 method: Method::Saif,
-                eps: 1e-6,
+                spec: SolveSpec { eps: 1e-6, ..Default::default() },
             });
             id += 1;
         }
@@ -40,8 +40,12 @@ fn main() {
         for &scatter in &[false, true] {
             let reqs = workload(scatter);
             let total = reqs.len();
-            let (responses, lat, wall) =
-                Coordinator::run_batch(reqs, workers, EngineKind::Native);
+            let batch = Coordinator::builder()
+                .workers(workers)
+                .engine(EngineKind::Native)
+                .run_batch(reqs)
+                .expect("workers alive");
+            let (responses, lat, wall) = (batch.responses, batch.latency, batch.wall_secs);
             let warm = responses.iter().filter(|r| r.warm_started).count();
             t.row(vec![
                 workers.to_string(),

@@ -12,9 +12,11 @@ use saif::data::synth;
 use saif::linalg::{axpy, dot, Parallelism};
 use saif::metrics::Table;
 use saif::runtime::{artifacts_available, PjrtEngine};
+use saif::solver::{make, Method, SolveSpec, Solver};
 use saif::util::bench_secs;
 use saif::util::json::Json;
 use saif::util::prng::Rng;
+use saif::util::Stopwatch;
 
 fn main() {
     let mut t = Table::new(
@@ -165,6 +167,48 @@ fn main() {
         .set("epoch_sharded_us", Json::Num(s_sh * 1e6))
         .set("epoch_shards", Json::Num(hw as f64))
         .set("epoch_shard_speedup", Json::Num(s_ser / s_sh));
+
+    // --- λ-path sweep: 64 points, independent solves vs one
+    // warm-chained `Solver::path` session (the Figure-6 trick behind
+    // the unified solver API) ---
+    let path_prob = synth::synth_linear(100, 1500, 7).problem();
+    let lam_max_p = path_prob.lambda_max();
+    let n_pts = 64usize;
+    let grid: Vec<f64> = (1..=n_pts)
+        .map(|k| lam_max_p * (1e-2f64).powf(k as f64 / n_pts as f64))
+        .collect();
+    let spec = SolveSpec { eps: 1e-6, ..Default::default() };
+    let sw = Stopwatch::start();
+    {
+        let mut eng = NativeEngine::new();
+        let mut s = make(Method::Saif, &mut eng, &spec);
+        for &lam in &grid {
+            std::hint::black_box(s.solve(&path_prob, lam));
+        }
+    }
+    let s_cold = sw.secs();
+    let sw = Stopwatch::start();
+    {
+        let mut eng = NativeEngine::new();
+        std::hint::black_box(make(Method::Saif, &mut eng, &spec).path(&path_prob, &grid));
+    }
+    let s_warm = sw.secs();
+    t.row(vec![
+        format!("saif path_{n_pts}pts serial (p=1500, n=100)"),
+        n_pts.to_string(),
+        format!("{:.1}ms", s_cold * 1e3),
+        "independent per-λ solves".into(),
+    ]);
+    t.row(vec![
+        format!("saif path_{n_pts}pts warm-chained"),
+        n_pts.to_string(),
+        format!("{:.1}ms", s_warm * 1e3),
+        format!("speedup {:.2}x over serial", s_cold / s_warm),
+    ]);
+    bench_rec
+        .set("path64_serial_ms", Json::Num(s_cold * 1e3))
+        .set("path64_warm_ms", Json::Num(s_warm * 1e3))
+        .set("path64_warm_speedup", Json::Num(s_cold / s_warm));
     // repo root, independent of the invocation CWD
     let bench_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     match std::fs::write(bench_path, bench_rec.to_string() + "\n") {

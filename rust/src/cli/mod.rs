@@ -6,11 +6,20 @@
 //!                  [--engine native|pjrt] [--eps 1e-6] [--seed 42]
 //!                  [--libsvm path --logistic [--dense]]
 //!                  [--threads serial|auto|N] [--epoch-shards auto|N]
+//! repro path       --dataset sim --lambdas 0.9:0.01:16 [--method saif]
+//!                  [--engine native|pjrt] [--eps 1e-6] [...]
 //! repro experiment --id fig2-sim [--out out]   (or --all)
 //! repro serve      [--workers 4] [--datasets 3] [--lambdas 8]
 //!                  [--engine native|pjrt] [--method saif]
 //! repro list
 //! ```
+//!
+//! All solve subcommands dispatch through the unified
+//! [`crate::solver::Solver`] API, so every method (saif, dynscreen,
+//! blitz, homotopy, fused, group[:K]) is available everywhere a
+//! `--method` flag is accepted. Unknown `--flags` are rejected with
+//! the valid set for the subcommand (a typo like `--epoch-shard` is an
+//! error, not silently ignored).
 //!
 //! `--libsvm` loads SPARSE (CSC, no n×p densification) so text-scale
 //! files fit in memory; `--dense` densifies explicitly for dense-path
@@ -23,11 +32,11 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::cm::{Engine, EpochShards};
-use crate::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
+use crate::coordinator::{Coordinator, EngineKind, SolveRequest};
 use crate::data;
 use crate::linalg::Parallelism;
 use crate::runtime::PjrtEngine;
-use crate::saif::{Saif, SaifConfig};
+use crate::solver::{Method, SolveSpec, Solver};
 use crate::util::json::Json;
 
 /// Parsed `--key value` flags.
@@ -58,6 +67,34 @@ impl Args {
         Args { cmd, flags }
     }
 
+    /// Reject flags outside `valid`, naming the offenders and the
+    /// valid set for the subcommand.
+    pub fn check_flags(&self, valid: &[&str]) -> Result<(), String> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(|k| k.as_str())
+            .filter(|k| !valid.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        unknown.sort_unstable();
+        let mut valid_sorted: Vec<&str> = valid.to_vec();
+        valid_sorted.sort_unstable();
+        Err(format!(
+            "unknown flag{} for `{}`: {}; valid flags: {}",
+            if unknown.len() > 1 { "s" } else { "" },
+            self.cmd,
+            unknown.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(", "),
+            if valid_sorted.is_empty() {
+                "(none)".to_string()
+            } else {
+                valid_sorted.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(", ")
+            },
+        ))
+    }
+
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
@@ -75,19 +112,64 @@ impl Args {
     }
 }
 
+/// Dataset-selection flags shared by `solve`/`path`/`cv`.
+const DATASET_FLAGS: &[&str] = &["dataset", "seed", "libsvm", "logistic", "dense"];
+
+/// Valid flags per subcommand (`None` ⇒ unknown subcommand → help).
+fn valid_flags(cmd: &str) -> Option<Vec<&'static str>> {
+    let mut v: Vec<&'static str> = Vec::new();
+    match cmd {
+        "solve" => {
+            v.extend_from_slice(DATASET_FLAGS);
+            v.extend_from_slice(&[
+                "lambda", "lambda-frac", "method", "engine", "eps", "threads", "epoch-shards",
+            ]);
+        }
+        "path" => {
+            v.extend_from_slice(DATASET_FLAGS);
+            v.extend_from_slice(&[
+                "lambdas", "method", "engine", "eps", "threads", "epoch-shards",
+            ]);
+        }
+        "experiment" => v.extend_from_slice(&["id", "all", "out"]),
+        "serve" => v.extend_from_slice(&[
+            "workers", "datasets", "lambdas", "method", "engine", "eps", "threads",
+            "epoch-shards",
+        ]),
+        "cv" => {
+            v.extend_from_slice(DATASET_FLAGS);
+            v.extend_from_slice(&["folds", "lambdas", "workers"]);
+        }
+        "list" => {}
+        _ => return None,
+    }
+    Some(v)
+}
+
 /// CLI entrypoint.
 pub fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
-    let code = match args.cmd.as_str() {
-        "solve" => cmd_solve(&args),
-        "experiment" => cmd_experiment(&args),
-        "serve" => cmd_serve(&args),
-        "cv" => cmd_cv(&args),
-        "list" => cmd_list(),
-        _ => {
+    let code = match valid_flags(&args.cmd) {
+        None => {
             print!("{}", HELP);
             0
+        }
+        Some(valid) => {
+            if let Err(e) = args.check_flags(&valid) {
+                eprintln!("error: {e}");
+                2
+            } else {
+                match args.cmd.as_str() {
+                    "solve" => cmd_solve(&args),
+                    "path" => cmd_path(&args),
+                    "experiment" => cmd_experiment(&args),
+                    "serve" => cmd_serve(&args),
+                    "cv" => cmd_cv(&args),
+                    "list" => cmd_list(),
+                    _ => unreachable!("valid_flags covers the dispatch set"),
+                }
+            }
         }
     };
     std::process::exit(code);
@@ -97,19 +179,29 @@ const HELP: &str = "\
 SAIF — Safe Active Incremental Feature selection (paper reproduction)
 
 USAGE:
-  repro solve      --dataset <name> --lambda-frac <f> [--method saif|dyn|blitz]
+  repro solve      --dataset <name> --lambda-frac <f>
+                   [--method saif|dyn|blitz|homotopy|fused|group[:K]]
                    [--engine native|pjrt] [--eps 1e-6] [--seed 42]
                    [--libsvm <path> [--logistic] [--dense]]
                    [--threads serial|auto|N] [--epoch-shards auto|N]
+  repro path       --dataset <name> --lambdas a:b:k   warm-chained λ-path
+                   [--method ...] [--engine ...] [--eps 1e-6] [...]
+                   (k log-spaced λ from a·λ_max down to b·λ_max)
   repro experiment --id <id> [--out out]      run one paper experiment
   repro experiment --all [--out out]          run every experiment
   repro serve      [--workers N] [--datasets D] [--lambdas L]
-                   [--engine native|pjrt] [--threads serial|auto|N]
-                   [--epoch-shards auto|N]    coordinator demo workload
+                   [--method ...] [--engine native|pjrt]
+                   [--threads serial|auto|N] [--epoch-shards auto|N]
+                                              coordinator demo workload
   repro cv         --dataset <name> [--folds 5] [--lambdas 20]
                    [--workers 4]              k-fold CV λ selection
   repro list                                  datasets + experiment ids
 
+  Unknown --flags are rejected with the valid set for the subcommand.
+  --method accepts all six solvers behind the unified Solver API:
+  saif, dyn (dynscreen), blitz, homotopy, fused (chain-tree fused
+  LASSO, or the dataset's tree when it has one), group[:K] (contiguous
+  groups of K features, default 8; least squares only).
   --libsvm loads sparse (CSC; the file is never densified), so
   rcv1-scale text corpora fit in memory; add --dense to densify.
   --threads chunks the O(n·p) screening scans over worker threads.
@@ -156,107 +248,235 @@ fn epoch_shards_arg(args: &Args) -> Result<EpochShards, String> {
     }
 }
 
-fn cmd_solve(args: &Args) -> i32 {
-    let ds = match load_dataset(args) {
-        Ok(d) => d,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 2;
-        }
-    };
-    let prob = ds.problem();
-    let lam_max = prob.lambda_max();
-    let lam = args
-        .get("lambda")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| lam_max * args.get_f64("lambda-frac", 0.1));
-    let eps = args.get_f64("eps", 1e-6);
+fn engine_arg(args: &Args) -> Result<EngineKind, String> {
+    match args.get("engine") {
+        None | Some("native") => Ok(EngineKind::Native),
+        Some("pjrt") => Ok(EngineKind::Pjrt),
+        Some(other) => Err(format!("bad --engine value '{other}' (native|pjrt)")),
+    }
+}
+
+fn method_arg(args: &Args) -> Result<Method, String> {
+    let s = args.get("method").unwrap_or("saif");
+    Method::parse(s).ok_or_else(|| {
+        format!(
+            "bad --method value '{s}'; valid: saif, dyn, dynscreen, blitz, homotopy, hom, \
+             fused, group, group:K"
+        )
+    })
+}
+
+/// Parse `a:b:k` into k log-spaced λ values from a·λ_max down to
+/// b·λ_max, both endpoints included (k = 1 ⇒ just a·λ_max).
+fn parse_lambda_grid(s: &str, lam_max: f64) -> Result<Vec<f64>, String> {
+    let parts: Vec<&str> = s.split(':').collect();
+    let err = || format!("bad --lambdas value '{s}' (expected a:b:k, e.g. 0.9:0.01:16)");
+    if parts.len() != 3 {
+        return Err(err());
+    }
+    let a: f64 = parts[0].parse().map_err(|_| err())?;
+    let b: f64 = parts[1].parse().map_err(|_| err())?;
+    let k: usize = parts[2].parse().map_err(|_| err())?;
+    if !(a.is_finite() && b.is_finite()) || a <= 0.0 || b <= 0.0 || b > a || k == 0 {
+        return Err(format!(
+            "bad --lambdas value '{s}': need 0 < b ≤ a and k ≥ 1"
+        ));
+    }
+    if k == 1 {
+        return Ok(vec![lam_max * a]);
+    }
+    Ok((0..k)
+        .map(|i| lam_max * a * (b / a).powf(i as f64 / (k - 1) as f64))
+        .collect())
+}
+
+/// Engine + solver setup shared by `solve` and `path`. Calls `f` with
+/// the configured solver (the dataset's feature tree, if any, is wired
+/// into the fused adapter).
+fn with_solver<R>(
+    args: &Args,
+    ds: &data::Dataset,
+    method: Method,
+    spec: &SolveSpec,
+    f: impl FnOnce(&mut dyn Solver) -> R,
+) -> Result<R, String> {
     let engine_name = args.get("engine").unwrap_or("native");
-    let method = args.get("method").unwrap_or("saif");
-    let par = match parallelism_arg(args) {
-        Ok(p) => p,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 2;
-        }
-    };
-    let shards = match epoch_shards_arg(args) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 2;
-        }
-    };
-
-    println!(
-        "dataset={} n={} p={} storage={}(nnz={}) loss={:?} λ_max={lam_max:.4e} λ={lam:.4e} eps={eps:.0e} engine={engine_name} method={method}",
-        ds.name, ds.n(), ds.p(), ds.x.storage(), ds.x.nnz(), ds.loss
-    );
-
-    let mut native = crate::cm::NativeEngine::with_parallelism(par);
-    native.set_epoch_shards(shards);
+    let mut native = crate::cm::NativeEngine::new();
     let mut pjrt_storage: PjrtEngine;
-    let engine: &mut dyn crate::cm::Engine = match engine_name {
+    let engine: &mut dyn Engine = match engine_name {
         "pjrt" => match PjrtEngine::new() {
             Ok(e) => {
                 pjrt_storage = e;
                 &mut pjrt_storage
             }
             Err(e) => {
-                eprintln!("error: PJRT engine unavailable ({e}); run `make artifacts`");
-                return 2;
+                return Err(format!("PJRT engine unavailable ({e}); run `make artifacts`"));
             }
         },
-        _ => &mut native,
+        "native" => &mut native,
+        other => return Err(format!("bad --engine value '{other}' (native|pjrt)")),
     };
+    engine.set_parallelism(spec.parallelism.unwrap_or(Parallelism::Serial));
+    engine.set_epoch_shards(spec.epoch_shards.unwrap_or(EpochShards::FollowParallelism));
+    let mut solver = crate::solver::make_with_tree(method, engine, spec, ds.tree.as_deref());
+    Ok(f(&mut *solver))
+}
 
-    let (beta, gap, secs) = match method {
-        "dyn" => {
-            let mut d = crate::screening::dynamic::DynScreen::new(
-                engine,
-                crate::screening::dynamic::DynScreenConfig { eps, ..Default::default() },
-            );
-            let r = d.solve(&prob, lam);
-            (r.beta, r.gap, r.secs)
-        }
-        "blitz" => {
-            let mut b = crate::workingset::Blitz::new(
-                engine,
-                crate::workingset::BlitzConfig { eps, ..Default::default() },
-            );
-            let r = b.solve(&prob, lam);
-            (r.beta, r.gap, r.secs)
-        }
-        _ => {
-            let mut s = Saif::new(
-                engine,
-                SaifConfig {
-                    eps,
-                    parallelism: Some(par),
-                    epoch_shards: Some(shards),
-                    ..Default::default()
-                },
-            );
-            let r = s.solve(&prob, lam);
-            println!(
-                "saif: outer={} epochs={} p_add={} max_active={}",
-                r.outer_iters, r.epochs, r.p_add_total, r.max_active
-            );
-            (r.beta, r.gap, r.secs)
-        }
-    };
-    let kkt = prob.kkt_violation(&beta, lam);
-    println!(
-        "solved in {:.3}s: {} nonzeros, gap={gap:.3e}, kkt_violation={kkt:.3e}",
-        secs,
-        beta.len()
-    );
-    let mut top: Vec<(usize, f64)> = beta.clone();
-    top.sort_by(|a, b| b.1.abs().total_cmp(&a.1.abs()));
-    for (i, v) in top.iter().take(10) {
-        println!("  β[{i}] = {v:+.6}");
+/// Reject method/problem combinations the solvers would panic on, so
+/// the CLI fails with a clean `error:` + exit 2 like every other bad
+/// input.
+fn check_method_fits(method: Method, ds: &data::Dataset) -> Result<(), String> {
+    if matches!(method, Method::Group { .. }) && ds.loss != crate::model::LossKind::Squared {
+        return Err(format!(
+            "--method group supports least squares only, but dataset '{}' is {:?}",
+            ds.name, ds.loss
+        ));
     }
-    0
+    Ok(())
+}
+
+fn solve_spec(args: &Args) -> Result<SolveSpec, String> {
+    Ok(SolveSpec {
+        eps: args.get_f64("eps", 1e-6),
+        parallelism: Some(parallelism_arg(args)?),
+        epoch_shards: Some(epoch_shards_arg(args)?),
+        ..Default::default()
+    })
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let run = || -> Result<i32, String> {
+        let ds = load_dataset(args)?;
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let lam = match args.get("lambda") {
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("bad --lambda value '{s}'"))?,
+            None => lam_max * args.get_f64("lambda-frac", 0.1),
+        };
+        let spec = solve_spec(args)?;
+        let method = method_arg(args)?;
+        check_method_fits(method, &ds)?;
+
+        println!(
+            "dataset={} n={} p={} storage={}(nnz={}) loss={:?} λ_max={lam_max:.4e} λ={lam:.4e} eps={:.0e} engine={} method={}",
+            ds.name,
+            ds.n(),
+            ds.p(),
+            ds.x.storage(),
+            ds.x.nnz(),
+            ds.loss,
+            spec.eps,
+            args.get("engine").unwrap_or("native"),
+            method.name(),
+        );
+
+        let (sol, kkt) = with_solver(args, &ds, method, &spec, |solver| {
+            let sol = solver.solve(&prob, lam);
+            let kkt = solver.kkt_violation(&prob, &sol.beta, lam);
+            (sol, kkt)
+        })?;
+        if !sol.stats.is_empty() {
+            let stats: Vec<String> = sol
+                .stats
+                .iter()
+                .map(|(k, v)| {
+                    if v.fract() == 0.0 {
+                        format!("{k}={v:.0}")
+                    } else {
+                        format!("{k}={v:.4}")
+                    }
+                })
+                .collect();
+            println!("{}: {}", method.name(), stats.join(" "));
+        }
+        println!(
+            "solved in {:.3}s: {} nonzeros, gap={:.3e}, kkt_violation={kkt:.3e}",
+            sol.secs,
+            sol.beta.len(),
+            sol.gap,
+        );
+        let mut top: Vec<(usize, f64)> = sol.beta.clone();
+        top.sort_by(|a, b| b.1.abs().total_cmp(&a.1.abs()));
+        for (i, v) in top.iter().take(10) {
+            println!("  β[{i}] = {v:+.6}");
+        }
+        Ok(0)
+    };
+    run().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        2
+    })
+}
+
+fn cmd_path(args: &Args) -> i32 {
+    let run = || -> Result<i32, String> {
+        let ds = load_dataset(args)?;
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let grid = parse_lambda_grid(args.get("lambdas").unwrap_or("0.9:0.01:16"), lam_max)?;
+        let spec = solve_spec(args)?;
+        let method = method_arg(args)?;
+        check_method_fits(method, &ds)?;
+
+        println!(
+            "path: dataset={} n={} p={} method={} {} λ in [{:.3e}, {:.3e}] eps={:.0e}",
+            ds.name,
+            ds.n(),
+            ds.p(),
+            method.name(),
+            grid.len(),
+            grid.last().unwrap(),
+            grid[0],
+            spec.eps,
+        );
+
+        let (path, worst_kkt) = with_solver(args, &ds, method, &spec, |solver| {
+            let path = solver.path(&prob, &grid);
+            let worst = path
+                .lams
+                .iter()
+                .zip(&path.points)
+                .map(|(&lam, sol)| solver.kkt_violation(&prob, &sol.beta, lam) / lam.max(1.0))
+                .fold(0.0f64, f64::max);
+            (path, worst)
+        })?;
+
+        println!(
+            "{:>12} {:>8} {:>11} {:>10} {:>5}",
+            "lambda", "nnz", "gap", "secs", "warm"
+        );
+        for (lam, sol) in path.lams.iter().zip(&path.points) {
+            println!(
+                "{:>12.4e} {:>8} {:>11.3e} {:>10.4} {:>5}",
+                lam,
+                sol.beta.len(),
+                sol.gap,
+                sol.secs,
+                if sol.warm_started { "yes" } else { "no" },
+            );
+        }
+        let warm = path.points.iter().filter(|s| s.warm_started).count();
+        println!(
+            "path of {} λ in {:.3}s; warm-started {warm}/{}; worst relative KKT violation {worst_kkt:.2e}",
+            grid.len(),
+            path.secs,
+            grid.len(),
+        );
+        let mut rec = Json::obj();
+        rec.set("experiment", Json::Str("cli-path".into()))
+            .set("method", Json::Str(method.name().into()))
+            .set("n_lambdas", Json::Num(grid.len() as f64))
+            .set("wall_secs", Json::Num(path.secs))
+            .set("worst_rel_kkt", Json::Num(worst_kkt));
+        println!("{}", rec.to_string());
+        Ok(0)
+    };
+    run().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        2
+    })
 }
 
 fn cmd_experiment(args: &Args) -> i32 {
@@ -286,14 +506,19 @@ fn cmd_serve(args: &Args) -> i32 {
     let workers = args.get_usize("workers", 4);
     let n_datasets = args.get_usize("datasets", 3);
     let n_lambdas = args.get_usize("lambdas", 8);
-    let engine = match args.get("engine") {
-        Some("pjrt") => EngineKind::Pjrt,
-        _ => EngineKind::Native,
+    let engine = match engine_arg(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
     };
-    let method = match args.get("method") {
-        Some("dyn") => Method::DynScreen,
-        Some("blitz") => Method::Blitz,
-        _ => Method::Saif,
+    let method = match method_arg(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
     };
     let eps = args.get_f64("eps", 1e-6);
     let par = match parallelism_arg(args) {
@@ -312,7 +537,8 @@ fn cmd_serve(args: &Args) -> i32 {
     };
 
     println!(
-        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={method:?}, scan threads={par:?}, epoch shards={shards:?}"
+        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={}, scan threads={par:?}, epoch shards={shards:?}",
+        method.name()
     );
     let mut reqs = Vec::new();
     let mut id = 0u64;
@@ -327,14 +553,26 @@ fn cmd_serve(args: &Args) -> i32 {
                 problem: prob.clone(),
                 lam: lam_max * (1e-2f64).powf(k as f64 / n_lambdas as f64),
                 method,
-                eps,
+                spec: SolveSpec { eps, ..Default::default() },
             });
             id += 1;
         }
     }
     let total = reqs.len();
-    let (responses, lat, wall) =
-        Coordinator::run_batch_with_policy(reqs, workers, engine, par, shards);
+    let batch = match Coordinator::builder()
+        .workers(workers)
+        .engine(engine)
+        .parallelism(par)
+        .epoch_shards(shards)
+        .run_batch(reqs)
+    {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let (responses, lat, wall) = (batch.responses, batch.latency, batch.wall_secs);
     let worst_kkt = responses
         .iter()
         .map(|r| r.kkt_violation / r.lam.max(1.0))
@@ -393,17 +631,87 @@ fn cmd_cv(args: &Args) -> i32 {
 mod tests {
     use super::*;
 
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
     #[test]
     fn args_parse_flags_and_bools() {
-        let argv: Vec<String> = ["solve", "--dataset", "sim", "--all", "--eps", "1e-8"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
-        let a = Args::parse(&argv);
+        let a = Args::parse(&argv(&["solve", "--dataset", "sim", "--all", "--eps", "1e-8"]));
         assert_eq!(a.cmd, "solve");
         assert_eq!(a.get("dataset"), Some("sim"));
         assert!(a.has("all"));
         assert_eq!(a.get_f64("eps", 0.0), 1e-8);
         assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_valid_set() {
+        let a = Args::parse(&argv(&["solve", "--dataset", "sim", "--epoch-shard", "4"]));
+        let valid = valid_flags("solve").unwrap();
+        let err = a.check_flags(&valid).unwrap_err();
+        assert!(err.contains("--epoch-shard"), "{err}");
+        assert!(err.contains("--epoch-shards"), "{err}");
+        assert!(err.contains("`solve`"), "{err}");
+        // several typos: all listed, plural message
+        let a = Args::parse(&argv(&["serve", "--worker", "2", "--lambda", "3"]));
+        let err = a.check_flags(&valid_flags("serve").unwrap()).unwrap_err();
+        assert!(err.contains("--worker") && err.contains("--lambda"), "{err}");
+        assert!(err.contains("flags"), "{err}");
+        // exact flags pass
+        let a = Args::parse(&argv(&["solve", "--dataset", "sim", "--epoch-shards", "4"]));
+        assert!(a.check_flags(&valid_flags("solve").unwrap()).is_ok());
+    }
+
+    #[test]
+    fn every_subcommand_has_a_flag_table() {
+        for cmd in ["solve", "path", "experiment", "serve", "cv", "list"] {
+            assert!(valid_flags(cmd).is_some(), "{cmd}");
+        }
+        assert!(valid_flags("frobnicate").is_none());
+    }
+
+    #[test]
+    fn lambda_grid_parse() {
+        let g = parse_lambda_grid("0.9:0.01:5", 2.0).unwrap();
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 1.8).abs() < 1e-12);
+        assert!((g[4] - 0.02).abs() < 1e-12);
+        for w in g.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert_eq!(parse_lambda_grid("0.5:0.5:1", 2.0).unwrap(), vec![1.0]);
+        assert!(parse_lambda_grid("0.1:0.5:4", 1.0).is_err()); // b > a
+        assert!(parse_lambda_grid("0.5:0.1:0", 1.0).is_err()); // k = 0
+        assert!(parse_lambda_grid("0.5:0.1", 1.0).is_err());
+        assert!(parse_lambda_grid("x:0.1:4", 1.0).is_err());
+    }
+
+    #[test]
+    fn group_method_rejected_on_logistic_dataset() {
+        let logistic = crate::data::synth::gisette_like(10, 8, 1);
+        assert!(check_method_fits(Method::Group { size: 2 }, &logistic).is_err());
+        assert!(check_method_fits(Method::Saif, &logistic).is_ok());
+        let ls = crate::data::synth::synth_linear(10, 8, 1);
+        assert!(check_method_fits(Method::Group { size: 2 }, &ls).is_ok());
+    }
+
+    #[test]
+    fn method_arg_parses_all_methods() {
+        for (s, m) in [
+            ("saif", Method::Saif),
+            ("dyn", Method::DynScreen),
+            ("blitz", Method::Blitz),
+            ("homotopy", Method::Homotopy),
+            ("fused", Method::Fused),
+            ("group:4", Method::Group { size: 4 }),
+        ] {
+            let a = Args::parse(&argv(&["solve", "--method", s]));
+            assert_eq!(method_arg(&a).unwrap(), m);
+        }
+        let a = Args::parse(&argv(&["solve", "--method", "nope"]));
+        assert!(method_arg(&a).is_err());
+        let a = Args::parse(&argv(&["solve"]));
+        assert_eq!(method_arg(&a).unwrap(), Method::Saif);
     }
 }

@@ -8,40 +8,42 @@
 //! * a dispatcher routes requests over worker threads with
 //!   **dataset affinity** — all requests touching a dataset land on
 //!   the same worker so its warm-start cache (last solution per
-//!   dataset, valid for the next smaller λ) and its packed PJRT
-//!   buffers are reused;
+//!   (dataset, method), valid for the next smaller λ) and its packed
+//!   PJRT buffers are reused;
 //! * within a worker, queued requests for the same dataset are
-//!   **batched and sorted by descending λ** so the whole path is
-//!   warm-started (the Figure-6 trick, applied automatically);
+//!   **batched, sorted by descending λ and handed to the solver as one
+//!   [`Solver::path_warm`](crate::solver::Solver::path_warm) session**
+//!   (the Figure-6 trick, applied automatically) — warm-start chaining
+//!   lives behind the solver API, not in the worker;
 //! * every response carries a **safety certificate**: the KKT
-//!   violation of the returned β on the full problem, checked by the
-//!   coordinator, not trusted from the solver.
+//!   violation of the returned β on the full problem, computed through
+//!   the method's own [`Solver::kkt_violation`] (plain-LASSO,
+//!   group-norm or fused-transform conditions), checked by the
+//!   coordinator, not trusted from the solver's gap.
+//!
+//! Construction goes through [`Coordinator::builder`]; method dispatch
+//! is a `Box<dyn Solver>` factory over [`Method`] (all six solve
+//! methods — saif, dynscreen, blitz, homotopy, fused, group — are
+//! servable), and per-request [`SolveSpec`]s can override the worker
+//! defaults. The pre-builder constructor/`run_batch` ladder survives
+//! as deprecated one-line shims.
 //!
 //! Implementation is std-thread + channels (no tokio in the vendored
 //! registry — DESIGN.md §4); workers own their engines.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::cm::{Engine, EpochShards, NativeEngine};
 use crate::linalg::Parallelism;
 use crate::metrics::LatencyStats;
 use crate::model::Problem;
 use crate::runtime::PjrtEngine;
-use crate::saif::{Saif, SaifConfig};
-use crate::screening::dynamic::{DynScreen, DynScreenConfig};
+pub use crate::solver::{Method, SolveSpec};
 use crate::util::Stopwatch;
-use crate::workingset::{Blitz, BlitzConfig};
-
-/// Which solver a request wants.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Method {
-    Saif,
-    DynScreen,
-    Blitz,
-}
 
 /// Which engine workers use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,7 +52,9 @@ pub enum EngineKind {
     Pjrt,
 }
 
-/// A solve request.
+/// A solve request. `spec` carries the per-request solve knobs; its
+/// `parallelism`/`epoch_shards` (when `Some`) override the worker
+/// defaults configured at build time.
 #[derive(Debug, Clone)]
 pub struct SolveRequest {
     pub id: u64,
@@ -59,7 +63,7 @@ pub struct SolveRequest {
     pub problem: Arc<Problem>,
     pub lam: f64,
     pub method: Method,
-    pub eps: f64,
+    pub spec: SolveSpec,
 }
 
 /// A solve response with its safety certificate.
@@ -70,68 +74,100 @@ pub struct SolveResponse {
     pub lam: f64,
     pub beta: Vec<(usize, f64)>,
     pub gap: f64,
-    /// KKT violation of β on the FULL problem (coordinator-verified).
+    /// KKT violation of β on the FULL problem, via the method's own
+    /// optimality conditions (coordinator-verified).
     pub kkt_violation: f64,
     pub secs: f64,
     pub worker: usize,
     pub warm_started: bool,
 }
 
+/// Why a coordinator call failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoordinatorError {
+    /// A worker thread died (e.g. a solver panicked on an invalid
+    /// request); its queued responses are lost.
+    WorkerDead { worker: usize },
+}
+
+impl std::fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorError::WorkerDead { worker } => {
+                write!(f, "coordinator worker {worker} died")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {}
+
 enum Msg {
     Work(SolveRequest),
     Stop,
 }
 
-/// The coordinator.
-pub struct Coordinator {
-    senders: Vec<Sender<Msg>>,
-    results: Receiver<SolveResponse>,
-    handles: Vec<JoinHandle<()>>,
-    /// dataset_key → worker (sticky affinity)
-    affinity: HashMap<u64, usize>,
-    next_worker: usize,
-    inflight: usize,
+/// Builder for [`Coordinator`] — the one construction path (the old
+/// `new`/`with_parallelism`/`with_policy` ladder shims onto it).
+#[derive(Debug, Clone)]
+pub struct CoordinatorBuilder {
+    n_workers: usize,
+    engine: EngineKind,
+    parallelism: Parallelism,
+    epoch_shards: EpochShards,
 }
 
-impl Coordinator {
-    /// Spawn `n_workers` workers with the given engine kind. Workers
-    /// run their full-p scans serially: the coordinator already
-    /// parallelizes across requests, so per-scan threading
-    /// ([`Coordinator::with_parallelism`]) is opt-in for
-    /// low-concurrency, huge-p workloads.
-    pub fn new(n_workers: usize, engine: EngineKind) -> Coordinator {
-        Coordinator::with_parallelism(n_workers, engine, Parallelism::Serial)
+impl Default for CoordinatorBuilder {
+    fn default() -> Self {
+        CoordinatorBuilder {
+            n_workers: 4,
+            engine: EngineKind::Native,
+            parallelism: Parallelism::Serial,
+            epoch_shards: EpochShards::FollowParallelism,
+        }
+    }
+}
+
+impl CoordinatorBuilder {
+    /// Worker thread count (default 4).
+    pub fn workers(mut self, n: usize) -> Self {
+        assert!(n >= 1, "coordinator needs at least one worker");
+        self.n_workers = n;
+        self
     }
 
-    /// [`Coordinator::new`], with each worker's native engine running
-    /// full-p scans under the given column parallelism. Epoch sharding
-    /// follows the same setting ([`EpochShards::FollowParallelism`]):
-    /// a worker given `--threads 4` also shards wide active-block
-    /// epochs 4 ways.
-    pub fn with_parallelism(
-        n_workers: usize,
-        engine: EngineKind,
-        par: Parallelism,
-    ) -> Coordinator {
-        Coordinator::with_policy(n_workers, engine, par, EpochShards::FollowParallelism)
+    /// Engine kind workers solve with (default native f64).
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
     }
 
-    /// [`Coordinator::with_parallelism`], with an explicit sharding
-    /// policy for the active-block CM epochs (e.g. `Fixed(1)` to pin
-    /// epochs serial while keeping parallel scans, or `Fixed(k)` for a
-    /// machine-independent, bitwise-reproducible solve trajectory).
-    pub fn with_policy(
-        n_workers: usize,
-        engine: EngineKind,
-        par: Parallelism,
-        shards: EpochShards,
-    ) -> Coordinator {
+    /// Default column parallelism for each worker's full-p scans
+    /// (default serial: the coordinator already parallelizes across
+    /// requests, so per-scan threading is opt-in for low-concurrency,
+    /// huge-p workloads). Per-request `SolveSpec` overrides win.
+    pub fn parallelism(mut self, par: Parallelism) -> Self {
+        self.parallelism = par;
+        self
+    }
+
+    /// Default sharding policy for the active-block CM epochs
+    /// (default: follow the scan parallelism). Per-request `SolveSpec`
+    /// overrides win.
+    pub fn epoch_shards(mut self, shards: EpochShards) -> Self {
+        self.epoch_shards = shards;
+        self
+    }
+
+    /// Spawn the workers and return the running coordinator.
+    pub fn build(self) -> Coordinator {
         let (res_tx, res_rx) = channel::<SolveResponse>();
-        let mut senders = Vec::with_capacity(n_workers);
-        let mut handles = Vec::with_capacity(n_workers);
-        for w in 0..n_workers {
+        let mut senders = Vec::with_capacity(self.n_workers);
+        let mut handles = Vec::with_capacity(self.n_workers);
+        for w in 0..self.n_workers {
             let (tx, rx) = channel::<Msg>();
             let res_tx = res_tx.clone();
+            let (engine, par, shards) = (self.engine, self.parallelism, self.epoch_shards);
             let handle = std::thread::Builder::new()
                 .name(format!("saif-worker-{w}"))
                 .spawn(move || worker_loop(w, engine, par, shards, rx, res_tx))
@@ -145,30 +181,96 @@ impl Coordinator {
             handles,
             affinity: HashMap::new(),
             next_worker: 0,
-            inflight: 0,
+            inflight: vec![0; self.n_workers],
         }
     }
 
-    /// Submit a request (dataset-affine routing).
-    pub fn submit(&mut self, req: SolveRequest) {
+    /// Convenience: build, submit the whole batch, drain, shut down.
+    pub fn run_batch(self, requests: Vec<SolveRequest>) -> Result<BatchRun, CoordinatorError> {
+        let sw = Stopwatch::start();
+        let mut c = self.build();
+        for r in requests {
+            c.submit(r)?;
+        }
+        let responses = c.drain()?;
+        c.shutdown();
+        let wall_secs = sw.secs();
+        let mut latency = LatencyStats::new();
+        for r in &responses {
+            latency.record_secs(r.secs);
+        }
+        Ok(BatchRun { responses, latency, wall_secs })
+    }
+}
+
+/// Outcome of [`CoordinatorBuilder::run_batch`].
+#[derive(Debug)]
+pub struct BatchRun {
+    pub responses: Vec<SolveResponse>,
+    pub latency: LatencyStats,
+    pub wall_secs: f64,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    senders: Vec<Sender<Msg>>,
+    results: Receiver<SolveResponse>,
+    handles: Vec<JoinHandle<()>>,
+    /// dataset_key → worker (sticky affinity)
+    affinity: HashMap<u64, usize>,
+    next_worker: usize,
+    /// Outstanding requests per worker.
+    inflight: Vec<usize>,
+}
+
+impl Coordinator {
+    /// Start configuring a coordinator.
+    pub fn builder() -> CoordinatorBuilder {
+        CoordinatorBuilder::default()
+    }
+
+    /// Submit a request (dataset-affine routing). Fails with the dead
+    /// worker's id if the affine worker's thread has died.
+    pub fn submit(&mut self, req: SolveRequest) -> Result<(), CoordinatorError> {
         let n = self.senders.len();
         let worker = *self.affinity.entry(req.dataset_key).or_insert_with(|| {
             let w = self.next_worker;
             self.next_worker = (self.next_worker + 1) % n;
             w
         });
-        self.inflight += 1;
-        self.senders[worker].send(Msg::Work(req)).expect("worker alive");
+        self.senders[worker]
+            .send(Msg::Work(req))
+            .map_err(|_| CoordinatorError::WorkerDead { worker })?;
+        self.inflight[worker] += 1;
+        Ok(())
     }
 
-    /// Wait for all in-flight responses.
-    pub fn drain(&mut self) -> Vec<SolveResponse> {
-        let mut out = Vec::with_capacity(self.inflight);
-        while self.inflight > 0 {
-            out.push(self.results.recv().expect("worker result"));
-            self.inflight -= 1;
+    /// Wait for all in-flight responses. Fails with the dead worker's
+    /// id if a worker dies while it still owes responses (its queued
+    /// work is lost; responses already received are dropped with it —
+    /// resubmit on a fresh coordinator).
+    pub fn drain(&mut self) -> Result<Vec<SolveResponse>, CoordinatorError> {
+        let total: usize = self.inflight.iter().sum();
+        let mut out = Vec::with_capacity(total);
+        while self.inflight.iter().sum::<usize>() > 0 {
+            match self.results.recv_timeout(Duration::from_millis(25)) {
+                Ok(r) => {
+                    self.inflight[r.worker] -= 1;
+                    out.push(r);
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                    // a worker still owing responses whose thread has
+                    // terminated can never answer: surface it
+                    let dead = (0..self.inflight.len())
+                        .find(|&w| self.inflight[w] > 0 && self.handles[w].is_finished());
+                    if let Some(worker) = dead {
+                        self.inflight[worker] = 0;
+                        return Err(CoordinatorError::WorkerDead { worker });
+                    }
+                }
+            }
         }
-        out
+        Ok(out)
     }
 
     /// Stop workers and join.
@@ -181,34 +283,77 @@ impl Coordinator {
         }
     }
 
-    /// Convenience: run a whole batch and report latency stats.
+    // --- deprecated pre-builder constructor/batch ladder (shims) ---
+
+    /// Deprecated alias of `Coordinator::builder().workers(n).engine(e).build()`.
+    #[deprecated(note = "use Coordinator::builder()")]
+    pub fn new(n_workers: usize, engine: EngineKind) -> Coordinator {
+        Coordinator::builder().workers(n_workers).engine(engine).build()
+    }
+
+    /// Deprecated alias of the builder with `.parallelism(par)`.
+    #[deprecated(note = "use Coordinator::builder()")]
+    pub fn with_parallelism(
+        n_workers: usize,
+        engine: EngineKind,
+        par: Parallelism,
+    ) -> Coordinator {
+        Coordinator::builder().workers(n_workers).engine(engine).parallelism(par).build()
+    }
+
+    /// Deprecated alias of the builder with `.epoch_shards(shards)`.
+    #[deprecated(note = "use Coordinator::builder()")]
+    pub fn with_policy(
+        n_workers: usize,
+        engine: EngineKind,
+        par: Parallelism,
+        shards: EpochShards,
+    ) -> Coordinator {
+        Coordinator::builder()
+            .workers(n_workers)
+            .engine(engine)
+            .parallelism(par)
+            .epoch_shards(shards)
+            .build()
+    }
+
+    /// Deprecated alias of [`CoordinatorBuilder::run_batch`] (panics
+    /// if a worker dies, matching the old behavior).
+    #[deprecated(note = "use Coordinator::builder().run_batch(..)")]
     pub fn run_batch(
         requests: Vec<SolveRequest>,
         n_workers: usize,
         engine: EngineKind,
     ) -> (Vec<SolveResponse>, LatencyStats, f64) {
-        Coordinator::run_batch_with(requests, n_workers, engine, Parallelism::Serial)
+        let b = Coordinator::builder()
+            .workers(n_workers)
+            .engine(engine)
+            .run_batch(requests)
+            .expect("worker alive");
+        (b.responses, b.latency, b.wall_secs)
     }
 
-    /// [`Coordinator::run_batch`] with per-worker scan parallelism
-    /// (epoch sharding follows it).
+    /// Deprecated alias of [`CoordinatorBuilder::run_batch`] with scan
+    /// parallelism.
+    #[deprecated(note = "use Coordinator::builder().run_batch(..)")]
     pub fn run_batch_with(
         requests: Vec<SolveRequest>,
         n_workers: usize,
         engine: EngineKind,
         par: Parallelism,
     ) -> (Vec<SolveResponse>, LatencyStats, f64) {
-        Coordinator::run_batch_with_policy(
-            requests,
-            n_workers,
-            engine,
-            par,
-            EpochShards::FollowParallelism,
-        )
+        let b = Coordinator::builder()
+            .workers(n_workers)
+            .engine(engine)
+            .parallelism(par)
+            .run_batch(requests)
+            .expect("worker alive");
+        (b.responses, b.latency, b.wall_secs)
     }
 
-    /// [`Coordinator::run_batch_with`] with an explicit epoch-sharding
-    /// policy.
+    /// Deprecated alias of [`CoordinatorBuilder::run_batch`] with an
+    /// explicit epoch-sharding policy.
+    #[deprecated(note = "use Coordinator::builder().run_batch(..)")]
     pub fn run_batch_with_policy(
         requests: Vec<SolveRequest>,
         n_workers: usize,
@@ -216,24 +361,19 @@ impl Coordinator {
         par: Parallelism,
         shards: EpochShards,
     ) -> (Vec<SolveResponse>, LatencyStats, f64) {
-        let sw = Stopwatch::start();
-        let mut c = Coordinator::with_policy(n_workers, engine, par, shards);
-        for r in requests {
-            c.submit(r);
-        }
-        let responses = c.drain();
-        c.shutdown();
-        let wall = sw.secs();
-        let mut lat = LatencyStats::new();
-        for r in &responses {
-            lat.record_secs(r.secs);
-        }
-        (responses, lat, wall)
+        let b = Coordinator::builder()
+            .workers(n_workers)
+            .engine(engine)
+            .parallelism(par)
+            .epoch_shards(shards)
+            .run_batch(requests)
+            .expect("worker alive");
+        (b.responses, b.latency, b.wall_secs)
     }
 }
 
-/// Worker: batches its queue by dataset, sorts each dataset's requests
-/// by descending λ, warm-starts along the path, verifies KKT.
+/// Worker: batches its queue, groups it into per-dataset λ-descending
+/// path sessions, and runs each through the unified solver API.
 fn worker_loop(
     wid: usize,
     engine_kind: EngineKind,
@@ -248,8 +388,11 @@ fn worker_loop(
         EngineKind::Pjrt => PjrtEngine::new().ok(),
         EngineKind::Native => None,
     };
-    // warm-start cache: dataset_key → (λ of last solution, solution)
-    let mut warm: HashMap<u64, (f64, Vec<(usize, f64)>)> = HashMap::new();
+    // warm-start cache: (dataset_key, method) → (λ of last solution,
+    // solution). Keyed per method so a structured-penalty solution
+    // (fused is piecewise-constant, not sparse) can never seed a
+    // plain-LASSO session on the same dataset.
+    let mut warm: HashMap<(u64, Method), (f64, Vec<(usize, f64)>)> = HashMap::new();
 
     loop {
         // block for one message, then greedily drain the queue to batch
@@ -280,7 +423,7 @@ fn process_batch(
     shards: EpochShards,
     native: &mut NativeEngine,
     mut pjrt: Option<&mut PjrtEngine>,
-    warm: &mut HashMap<u64, (f64, Vec<(usize, f64)>)>,
+    warm: &mut HashMap<(u64, Method), (f64, Vec<(usize, f64)>)>,
     mut batch: Vec<SolveRequest>,
     res_tx: &Sender<SolveResponse>,
 ) {
@@ -290,9 +433,25 @@ fn process_batch(
             .cmp(&b.dataset_key)
             .then(b.lam.total_cmp(&a.lam))
     });
-    for req in batch {
-        let sw = Stopwatch::start();
-        let prob = &*req.problem;
+    // each maximal run with the same (dataset, problem, method, spec)
+    // is one λ-path session behind `Solver::path_warm`
+    let mut i = 0;
+    while i < batch.len() {
+        let mut j = i + 1;
+        while j < batch.len()
+            && batch[j].dataset_key == batch[i].dataset_key
+            && Arc::ptr_eq(&batch[j].problem, &batch[i].problem)
+            && batch[j].method == batch[i].method
+            && batch[j].spec == batch[i].spec
+        {
+            j += 1;
+        }
+        let chunk = &batch[i..j];
+        i = j;
+
+        let first = &chunk[0];
+        let prob = &*first.problem;
+        let spec = &first.spec;
         let use_pjrt = match &pjrt {
             Some(e) => e.supports(prob, 1) && prob.offset.is_none(),
             None => false,
@@ -302,55 +461,36 @@ fn process_batch(
         } else {
             native as &mut dyn Engine
         };
-        let (beta, gap, warm_started) = match req.method {
-            Method::Saif => {
-                let ws = warm
-                    .get(&req.dataset_key)
-                    .filter(|(l, _)| *l >= req.lam)
-                    .map(|(_, b)| b.clone());
-                let mut s = Saif::new(
-                    engine,
-                    SaifConfig {
-                        eps: req.eps,
-                        parallelism: Some(par),
-                        epoch_shards: Some(shards),
-                        ..Default::default()
-                    },
-                );
-                let r = s.solve_warm(prob, req.lam, ws.as_deref());
-                (r.beta, r.gap, ws.is_some())
-            }
-            Method::DynScreen => {
-                let mut d = DynScreen::new(
-                    engine,
-                    DynScreenConfig { eps: req.eps, ..Default::default() },
-                );
-                let r = d.solve(prob, req.lam);
-                (r.beta, r.gap, false)
-            }
-            Method::Blitz => {
-                let mut b = Blitz::new(
-                    engine,
-                    BlitzConfig { eps: req.eps, ..Default::default() },
-                );
-                let r = b.solve(prob, req.lam);
-                (r.beta, r.gap, false)
-            }
-        };
-        warm.insert(req.dataset_key, (req.lam, beta.clone()));
-        // coordinator-side safety certificate
-        let kkt_violation = prob.kkt_violation(&beta, req.lam);
-        let _ = res_tx.send(SolveResponse {
-            id: req.id,
-            dataset_key: req.dataset_key,
-            lam: req.lam,
-            beta,
-            gap,
-            kkt_violation,
-            secs: sw.secs(),
-            worker: wid,
-            warm_started,
-        });
+        // per-request overrides over the worker defaults
+        engine.set_parallelism(spec.parallelism.unwrap_or(par));
+        engine.set_epoch_shards(spec.epoch_shards.unwrap_or(shards));
+
+        let lams: Vec<f64> = chunk.iter().map(|r| r.lam).collect();
+        let seed = warm
+            .get(&(first.dataset_key, first.method))
+            .filter(|(l, _)| *l >= first.lam)
+            .map(|(_, b)| b.clone());
+        let mut solver = crate::solver::make(first.method, engine, spec);
+        let path = solver.path_warm(prob, &lams, seed.as_deref());
+        for (req, sol) in chunk.iter().zip(&path.points) {
+            // coordinator-side safety certificate, through the
+            // method's own optimality conditions
+            let kkt_violation = solver.kkt_violation(prob, &sol.beta, req.lam);
+            let _ = res_tx.send(SolveResponse {
+                id: req.id,
+                dataset_key: req.dataset_key,
+                lam: req.lam,
+                beta: sol.beta.clone(),
+                gap: sol.gap,
+                kkt_violation,
+                secs: sol.secs,
+                worker: wid,
+                warm_started: sol.warm_started,
+            });
+        }
+        if let (Some(req), Some(sol)) = (chunk.last(), path.points.last()) {
+            warm.insert((req.dataset_key, req.method), (req.lam, sol.beta.clone()));
+        }
     }
 }
 
@@ -375,9 +515,17 @@ mod tests {
                 problem: prob.clone(),
                 lam: lam_max * f,
                 method: Method::Saif,
-                eps: 1e-8,
+                spec: SolveSpec { eps: 1e-8, ..Default::default() },
             })
             .collect()
+    }
+
+    fn run(
+        reqs: Vec<SolveRequest>,
+        builder: CoordinatorBuilder,
+    ) -> (Vec<SolveResponse>, LatencyStats, f64) {
+        let b = builder.run_batch(reqs).expect("workers alive");
+        (b.responses, b.latency, b.wall_secs)
     }
 
     #[test]
@@ -386,7 +534,7 @@ mod tests {
         let p2 = Arc::new(synth::synth_linear(40, 150, 202).problem());
         let mut reqs = requests_for(p1.clone(), 1, &[0.5, 0.2, 0.1], 0);
         reqs.extend(requests_for(p2.clone(), 2, &[0.4, 0.15], 100));
-        let (responses, lat, _wall) = Coordinator::run_batch(reqs, 2, EngineKind::Native);
+        let (responses, lat, _wall) = run(reqs, Coordinator::builder().workers(2));
         assert_eq!(responses.len(), 5);
         assert_eq!(lat.count(), 5);
         for r in &responses {
@@ -412,11 +560,9 @@ mod tests {
         for (i, r) in reqs.iter_mut().enumerate() {
             r.method = if i == 0 { Method::Saif } else { Method::DynScreen };
         }
-        let (responses, _, _) = Coordinator::run_batch_with(
+        let (responses, _, _) = run(
             reqs,
-            2,
-            EngineKind::Native,
-            Parallelism::Fixed(2),
+            Coordinator::builder().workers(2).parallelism(Parallelism::Fixed(2)),
         );
         assert_eq!(responses.len(), 2);
         for r in &responses {
@@ -434,12 +580,12 @@ mod tests {
     fn sharded_epoch_policy_solves_and_certifies() {
         let prob = Arc::new(synth::synth_linear(40, 400, 206).problem());
         let reqs = requests_for(prob.clone(), 3, &[0.3, 0.1, 0.05], 0);
-        let (responses, _, _) = Coordinator::run_batch_with_policy(
+        let (responses, _, _) = run(
             reqs,
-            2,
-            EngineKind::Native,
-            Parallelism::Fixed(2),
-            EpochShards::Fixed(3),
+            Coordinator::builder()
+                .workers(2)
+                .parallelism(Parallelism::Fixed(2))
+                .epoch_shards(EpochShards::Fixed(3)),
         );
         assert_eq!(responses.len(), 3);
         for r in &responses {
@@ -454,12 +600,50 @@ mod tests {
     }
 
     #[test]
+    fn per_request_spec_overrides_worker_defaults() {
+        // a request pinning its own epoch-shard policy and ε solves
+        // and certifies on a serial-default coordinator
+        let prob = Arc::new(synth::synth_linear(40, 300, 208).problem());
+        let lam_max = prob.lambda_max();
+        let reqs = vec![
+            SolveRequest {
+                id: 0,
+                dataset_key: 1,
+                problem: prob.clone(),
+                lam: lam_max * 0.2,
+                method: Method::Saif,
+                spec: SolveSpec {
+                    eps: 1e-9,
+                    parallelism: Some(Parallelism::Fixed(2)),
+                    epoch_shards: Some(EpochShards::Fixed(2)),
+                    ..Default::default()
+                },
+            },
+            SolveRequest {
+                id: 1,
+                dataset_key: 1,
+                problem: prob.clone(),
+                lam: lam_max * 0.1,
+                method: Method::Saif,
+                spec: SolveSpec { eps: 1e-8, ..Default::default() },
+            },
+        ];
+        let (responses, _, _) = run(reqs, Coordinator::builder().workers(1));
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            let eps = if r.id == 0 { 1e-9 } else { 1e-8 };
+            assert!(r.gap <= eps, "req {}: gap {}", r.id, r.gap);
+            assert!(r.kkt_violation < 1e-3 * r.lam.max(1.0));
+        }
+    }
+
+    #[test]
     fn dataset_affinity_holds() {
         let p1 = Arc::new(synth::synth_linear(30, 100, 203).problem());
         let p2 = Arc::new(synth::synth_linear(30, 100, 204).problem());
         let mut reqs = requests_for(p1.clone(), 10, &[0.5, 0.3, 0.2, 0.1], 0);
         reqs.extend(requests_for(p2.clone(), 20, &[0.5, 0.3, 0.2, 0.1], 100));
-        let (responses, _, _) = Coordinator::run_batch(reqs, 3, EngineKind::Native);
+        let (responses, _, _) = run(reqs, Coordinator::builder().workers(3));
         let mut per_ds: HashMap<u64, std::collections::HashSet<usize>> = HashMap::new();
         for r in &responses {
             per_ds.entry(r.dataset_key).or_default().insert(r.worker);
@@ -473,8 +657,9 @@ mod tests {
     fn warm_start_used_on_descending_lambda() {
         let p1 = Arc::new(synth::synth_linear(30, 150, 205).problem());
         let reqs = requests_for(p1, 1, &[0.5, 0.25, 0.1], 0);
-        let (responses, _, _) = Coordinator::run_batch(reqs, 1, EngineKind::Native);
-        // submitted together ⇒ batched ⇒ all but the first warm-started
+        let (responses, _, _) = run(reqs, Coordinator::builder().workers(1));
+        // submitted together ⇒ one path session ⇒ all but the first
+        // warm-started
         let warm_count = responses.iter().filter(|r| r.warm_started).count();
         assert!(warm_count >= 2, "warm {warm_count}");
     }
@@ -492,10 +677,10 @@ mod tests {
                 problem: prob.clone(),
                 lam,
                 method: m,
-                eps: 1e-9,
+                spec: SolveSpec { eps: 1e-9, ..Default::default() },
             })
             .collect();
-        let (responses, _, _) = Coordinator::run_batch(reqs, 3, EngineKind::Native);
+        let (responses, _, _) = run(reqs, Coordinator::builder().workers(3));
         let mut supports: Vec<Vec<usize>> = responses
             .iter()
             .map(|r| {
@@ -507,5 +692,22 @@ mod tests {
             .collect();
         supports.dedup();
         assert_eq!(supports.len(), 1, "methods disagree: {supports:?}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_work() {
+        let prob = Arc::new(synth::synth_linear(30, 100, 209).problem());
+        let reqs = requests_for(prob, 1, &[0.3, 0.1], 0);
+        let (responses, lat, _) = Coordinator::run_batch(reqs, 2, EngineKind::Native);
+        assert_eq!(responses.len(), 2);
+        assert_eq!(lat.count(), 2);
+        let c = Coordinator::with_policy(
+            1,
+            EngineKind::Native,
+            Parallelism::Serial,
+            EpochShards::Fixed(1),
+        );
+        c.shutdown();
     }
 }

@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
+use crate::coordinator::{Coordinator, EngineKind, Method, SolveRequest, SolveSpec};
 use crate::data::Dataset;
 use crate::linalg::Design;
 use crate::model::{LossKind, Problem};
@@ -84,13 +84,17 @@ pub fn cross_validate(
                 problem: prob.clone(),
                 lam,
                 method: Method::Saif,
-                eps: 1e-6,
+                spec: SolveSpec { eps: 1e-6, ..Default::default() },
             });
             id += 1;
         }
     }
-    let (responses, _lat, wall) =
-        Coordinator::run_batch(reqs, workers, EngineKind::Native);
+    let batch = Coordinator::builder()
+        .workers(workers)
+        .engine(EngineKind::Native)
+        .run_batch(reqs)
+        .expect("cv: coordinator worker died");
+    let (responses, wall) = (batch.responses, batch.wall_secs);
 
     // held-out error per (fold, λ)
     let mut err = vec![vec![0.0f64; k_folds]; n_lams];

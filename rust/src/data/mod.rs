@@ -35,6 +35,50 @@ impl Dataset {
     }
 }
 
+/// Center and scale every column of a [`Design`] to unit L2 norm (in
+/// place), matching [`standardize`] on the dense backend WITHOUT
+/// densifying sparse storage: a sparse design's stored values are
+/// scaled per column and the centering rides as an implicit rank-1
+/// mean correction ([`Design::CenteredSparse`]) — the effective column
+/// is `(s_j − μ_j·1)/‖s_j − μ_j·1‖`, same as the dense preprocessing.
+/// Columns with zero variance are centered but unscaled (dense
+/// semantics). Returns the per-column (mean, centered norm) applied.
+/// Re-standardizing an already-centered design recomputes from its
+/// stored values (the old correction is subsumed by the new one).
+pub fn standardize_design(x: &mut Design) -> Vec<(f64, f64)> {
+    let old = std::mem::replace(x, Design::Dense(Mat::zeros(0, 0)));
+    match old {
+        Design::Dense(mut m) => {
+            let stats = standardize(&mut m);
+            *x = Design::Dense(m);
+            stats
+        }
+        Design::Sparse(m) | Design::CenteredSparse { mat: m, .. } => {
+            let mut mat = m;
+            let n = mat.n_rows() as f64;
+            assert!(n > 0.0, "cannot standardize an empty design");
+            let sums = mat.col_sums();
+            let base = mat.col_norms_sq();
+            let mut stats = Vec::with_capacity(mat.n_cols());
+            let mut means = Vec::with_capacity(mat.n_cols());
+            for j in 0..mat.n_cols() {
+                let mean = sums[j] / n;
+                // ‖s_j − μ_j·1‖² = ‖s_j‖² − n·μ_j²
+                let nrm = (base[j] - n * mean * mean).max(0.0).sqrt();
+                if nrm > 1e-12 {
+                    mat.scale_col(j, 1.0 / nrm);
+                    means.push(mean / nrm);
+                } else {
+                    means.push(mean);
+                }
+                stats.push((mean, nrm));
+            }
+            *x = Design::centered_sparse(mat, means);
+            stats
+        }
+    }
+}
+
 /// Center and scale every column to unit L2 norm (in place). Columns
 /// with zero variance are left centered but unscaled. Returns the
 /// per-column (mean, norm) applied.
@@ -91,6 +135,61 @@ mod tests {
             let nrm: f64 = col.iter().map(|v| v * v).sum::<f64>().sqrt();
             assert!(mean.abs() < 1e-12);
             assert!((nrm - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn standardize_design_sparse_matches_dense() {
+        use crate::linalg::CscMat;
+        // sparse matrix with nonzero column means (plus an all-zero
+        // column: zero variance ⇒ centered but unscaled)
+        let mut rng = crate::util::prng::Rng::new(17);
+        let (n, p) = (30, 12);
+        let mut cols: Vec<Vec<(usize, f64)>> = Vec::new();
+        for j in 0..p {
+            if j == 5 {
+                cols.push(Vec::new());
+                continue;
+            }
+            let nnz = 3 + rng.below(n - 3);
+            cols.push(
+                rng.sample_indices(n, nnz)
+                    .into_iter()
+                    .map(|i| (i, rng.normal() + 0.8))
+                    .collect(),
+            );
+        }
+        let sp = CscMat::from_cols(n, cols);
+        let mut dense = sp.to_dense();
+        let mut sparse = Design::Sparse(sp);
+
+        let dstats = standardize(&mut dense);
+        let sstats = standardize_design(&mut sparse);
+        assert!(sparse.is_centered(), "sparse standardization stays sparse");
+        for j in 0..p {
+            assert!((dstats[j].0 - sstats[j].0).abs() < 1e-12, "mean {j}");
+            assert!((dstats[j].1 - sstats[j].1).abs() < 1e-10, "norm {j}");
+        }
+        // effective matrices agree entry-wise and kernel-wise
+        let nrm = sparse.col_norms_sq();
+        for j in 0..p {
+            for i in 0..n {
+                assert!(
+                    (sparse.get(i, j) - dense.get(i, j)).abs() < 1e-10,
+                    "entry ({i},{j})"
+                );
+            }
+            if j != 5 {
+                assert!((nrm[j] - 1.0).abs() < 1e-9, "unit norm {j}: {}", nrm[j]);
+            }
+        }
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; p];
+        let mut b = vec![0.0; p];
+        sparse.mul_t_vec(&v, &mut a);
+        Design::Dense(dense).mul_t_vec(&v, &mut b);
+        for j in 0..p {
+            assert!((a[j] - b[j]).abs() < 1e-10, "scan {j}");
         }
     }
 

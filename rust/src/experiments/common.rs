@@ -2,10 +2,8 @@
 
 use crate::cm::{solve_subproblem, NativeEngine};
 use crate::model::Problem;
-use crate::saif::{Saif, SaifConfig};
-use crate::screening::dynamic::{DynScreen, DynScreenConfig};
+use crate::solver::{make, Method, SolveSpec};
 use crate::util::Stopwatch;
-use crate::workingset::{Blitz, BlitzConfig};
 
 /// Log-evenly spaced descending λ grid in [lo_frac·λmax, λmax].
 pub fn lambda_grid(lam_max: f64, lo_frac: f64, count: usize) -> Vec<f64> {
@@ -26,25 +24,26 @@ pub fn time_no_screening(prob: &Problem, lam: f64, eps: f64, max_epochs: usize) 
     (sw.secs(), eval.gap)
 }
 
-pub fn time_dynamic(prob: &Problem, lam: f64, eps: f64) -> (f64, f64) {
+/// One cold solve of `method` through the unified [`crate::solver`]
+/// API on a fresh native engine.
+pub fn time_method(method: Method, prob: &Problem, lam: f64, eps: f64) -> (f64, f64) {
     let mut eng = NativeEngine::new();
-    let mut d = DynScreen::new(&mut eng, DynScreenConfig { eps, ..Default::default() });
-    let r = d.solve(prob, lam);
-    (r.secs, r.gap)
+    let spec = SolveSpec { eps, ..Default::default() };
+    let mut s = make(method, &mut eng, &spec);
+    let sol = s.solve(prob, lam);
+    (sol.secs, sol.gap)
+}
+
+pub fn time_dynamic(prob: &Problem, lam: f64, eps: f64) -> (f64, f64) {
+    time_method(Method::DynScreen, prob, lam, eps)
 }
 
 pub fn time_blitz(prob: &Problem, lam: f64, eps: f64) -> (f64, f64) {
-    let mut eng = NativeEngine::new();
-    let mut b = Blitz::new(&mut eng, BlitzConfig { eps, ..Default::default() });
-    let r = b.solve(prob, lam);
-    (r.secs, r.gap)
+    time_method(Method::Blitz, prob, lam, eps)
 }
 
 pub fn time_saif(prob: &Problem, lam: f64, eps: f64) -> (f64, f64) {
-    let mut eng = NativeEngine::new();
-    let mut s = Saif::new(&mut eng, SaifConfig { eps, ..Default::default() });
-    let r = s.solve(prob, lam);
-    (r.secs, r.gap)
+    time_method(Method::Saif, prob, lam, eps)
 }
 
 /// Format seconds for tables.

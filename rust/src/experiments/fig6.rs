@@ -9,11 +9,10 @@
 
 use crate::cm::NativeEngine;
 use crate::data::synth;
-use crate::metrics::Table;
-use crate::saif::{Saif, SaifConfig};
-use crate::screening::dpp::DppPath;
 use crate::homotopy::{Homotopy, HomotopyConfig};
-use crate::util::Stopwatch;
+use crate::metrics::Table;
+use crate::screening::dpp::DppPath;
+use crate::solver::{make, Method, SolveSpec, Solver};
 
 use super::common;
 
@@ -47,16 +46,10 @@ pub fn run() -> Vec<Table> {
             let mut eng2 = NativeEngine::new();
             let mut h = Homotopy::new(&mut eng2, HomotopyConfig { eps, ..Default::default() });
             let (_hsteps, s_hom) = h.solve_path(&prob, &lams);
-            // SAIF with warm starts down the path
-            let sw = Stopwatch::start();
+            // SAIF path session (warm-chained behind `Solver::path`)
             let mut eng3 = NativeEngine::new();
-            let mut saif = Saif::new(&mut eng3, SaifConfig { eps, ..Default::default() });
-            let mut warm: Option<Vec<(usize, f64)>> = None;
-            for &lam in &lams {
-                let r = saif.solve_warm(&prob, lam, warm.as_deref());
-                warm = Some(r.beta);
-            }
-            let s_saif = sw.secs();
+            let spec = SolveSpec { eps, ..Default::default() };
+            let s_saif = make(Method::Saif, &mut eng3, &spec).path(&prob, &lams).secs;
             t.row(vec![
                 count.to_string(),
                 common::fsec(s_dpp),

@@ -19,7 +19,7 @@ pub mod solver;
 pub mod transform;
 
 pub use admm::{FusedAdmm, FusedAdmmConfig};
-pub use solver::{FusedSaif, FusedSaifConfig, FusedSaifResult};
+pub use solver::{FusedSaif, FusedSaifConfig, FusedSaifResult, FusedSolver};
 pub use transform::TreeTransform;
 
 use crate::linalg::Mat;
@@ -44,4 +44,52 @@ pub fn fused_objective(
         obj += lam * (beta[a] - beta[b]).abs();
     }
     obj
+}
+
+/// Worst KKT violation of a dense β on the tree fused-LASSO problem —
+/// the safety certificate for fused solutions (the analogue of
+/// [`crate::model::Problem::kkt_violation`]).
+///
+/// Checked in the Theorem-6 transformed space, where it is a plain
+/// LASSO condition: the transformed column of edge e (child c) is the
+/// subtree column sum, so x̃_eᵀf'(u) = Σ_{v ∈ subtree(c)} x_vᵀf'(u),
+/// computable for all edges with one Xᵀf' scan plus a leaves-up fold.
+/// Per edge: |S_e + λ·sign(β_c − β_parent)| when the edge difference
+/// is nonzero, (|S_e| − λ)₊ when it is zero; the unpenalized root
+/// level must have zero gradient: |Σ_v x_vᵀf'(u)|.
+pub fn fused_kkt_violation(
+    x: &Mat,
+    y: &[f64],
+    loss: LossKind,
+    edges: &[(usize, usize)],
+    beta: &[f64],
+    lam: f64,
+) -> Result<f64, String> {
+    let p = x.n_cols();
+    let n = x.n_rows();
+    assert_eq!(beta.len(), p);
+    let tt = TreeTransform::new(p, edges)?;
+    let mut u = vec![0.0; n];
+    x.mul_vec(beta, &mut u);
+    let fp: Vec<f64> = (0..n).map(|j| loss.deriv(u[j], y[j])).collect();
+    let mut g = vec![0.0; p];
+    x.mul_t_vec(&fp, &mut g);
+    // subtree sums: tt.edges is in BFS (parents-first) order, so the
+    // reverse walk folds every child's finished subtree into its parent
+    let mut sub = g;
+    for &(par, c) in tt.edges.iter().rev() {
+        sub[par] += sub[c];
+    }
+    let mut worst: f64 = sub[0].abs(); // root level b is unpenalized
+    for &(par, c) in &tt.edges {
+        let s_e = sub[c];
+        let diff = beta[c] - beta[par];
+        let viol = if diff != 0.0 {
+            (s_e + lam * diff.signum()).abs()
+        } else {
+            (s_e.abs() - lam).max(0.0)
+        };
+        worst = worst.max(viol);
+    }
+    Ok(worst)
 }

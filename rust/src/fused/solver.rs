@@ -36,6 +36,14 @@ impl Default for FusedSaifConfig {
     }
 }
 
+impl FusedSaifConfig {
+    /// Map the method-agnostic [`SolveSpec`](crate::solver::SolveSpec)
+    /// onto the fused-SAIF config (the inner SAIF inherits it).
+    pub fn from_spec(spec: &crate::solver::SolveSpec) -> FusedSaifConfig {
+        FusedSaifConfig { saif: SaifConfig::from_spec(spec), ..Default::default() }
+    }
+}
+
 /// Result of a fused solve.
 #[derive(Debug, Clone)]
 pub struct FusedSaifResult {
@@ -229,6 +237,132 @@ impl<'a> FusedSaif<'a> {
         let offset: Vec<f64> = xb.iter().map(|v| v * b).collect();
         let prob = Problem::new(x_edges, y.to_vec(), loss).with_offset(offset);
         Ok(prob.lambda_max())
+    }
+}
+
+/// [`crate::solver::Solver`] adapter: serve the tree fused-LASSO
+/// solver on a plain [`Problem`], so fused requests dispatch through
+/// the same coordinator/CLI surface as plain LASSO.
+///
+/// * `edges: None` uses the chain tree 0−1−⋯−(p−1) — the classic 1-D
+///   fused LASSO; pass an explicit feature tree for structured
+///   problems (the CLI wires a dataset's tree through here).
+/// * The solve runs on the dense design; a sparse problem is densified
+///   per solve (the Theorem-6 transform materializes subtree column
+///   sums, which are dense anyway).
+/// * Warm starts are ignored — the transform re-solves from its own
+///   internal seed (logistic alternation warm-chains internally).
+pub struct FusedSolver<'a> {
+    pub cfg: FusedSaifConfig,
+    pub engine: &'a mut dyn Engine,
+    pub edges: Option<Vec<(usize, usize)>>,
+    /// Densified-design cache for sparse problems, keyed by the
+    /// design's storage address (the `PjrtEngine` pack trick): a fused
+    /// λ-path session densifies once, not per point/certificate.
+    dense_cache: Option<(usize, Mat)>,
+}
+
+impl<'a> FusedSolver<'a> {
+    pub fn new(
+        engine: &'a mut dyn Engine,
+        cfg: FusedSaifConfig,
+        edges: Option<Vec<(usize, usize)>>,
+    ) -> FusedSolver<'a> {
+        FusedSolver { cfg, engine, edges, dense_cache: None }
+    }
+
+    fn edges_for(&self, p: usize) -> Vec<(usize, usize)> {
+        match &self.edges {
+            Some(e) => e.clone(),
+            None => (0..p.saturating_sub(1)).map(|i| (i, i + 1)).collect(),
+        }
+    }
+}
+
+/// Borrow the dense backend; a non-dense design is densified into
+/// `cache` at most once per distinct design (keyed by storage address).
+fn dense_view<'m>(
+    x: &'m crate::linalg::Design,
+    cache: &'m mut Option<(usize, Mat)>,
+) -> &'m Mat {
+    match x {
+        crate::linalg::Design::Dense(m) => m,
+        other => {
+            let key = other.data_ptr();
+            if cache.as_ref().map(|(k, _)| *k) != Some(key) {
+                *cache = Some((key, other.to_dense()));
+            }
+            &cache.as_ref().expect("cache just filled").1
+        }
+    }
+}
+
+impl crate::solver::Solver for FusedSolver<'_> {
+    fn name(&self) -> &'static str {
+        "fused"
+    }
+
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        _warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::Solution {
+        // the transform builds its own offset for the unpenalized b
+        // coordinate; a caller-supplied margin offset would be
+        // silently dropped by FusedSaif AND by the certificate below —
+        // refuse instead of mis-solving
+        assert!(
+            prob.offset.is_none(),
+            "fused adapter: problems with a margin offset are unsupported"
+        );
+        let edges = self.edges_for(prob.p());
+        // split borrows: the dense cache and the engine are disjoint
+        // fields, but method calls would borrow all of self
+        let FusedSolver { cfg, engine, dense_cache, .. } = self;
+        let x = dense_view(&prob.x, dense_cache);
+        let mut fs = FusedSaif::new(&mut **engine, cfg.clone());
+        let r = fs
+            .solve(x, &prob.y, prob.loss, &edges, lam)
+            .expect("fused solve: degenerate tree/design");
+        crate::solver::Solution {
+            beta: r
+                .beta
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b != 0.0)
+                .map(|(i, &b)| (i, b))
+                .collect(),
+            gap: r.gap,
+            epochs: 0,
+            secs: r.secs,
+            warm_started: false,
+            stats: vec![
+                ("objective", r.objective),
+                ("p_add_total", r.p_add_total as f64),
+                ("max_active", r.max_active as f64),
+            ],
+            trace: Vec::new(),
+        }
+    }
+
+    /// Fused certificate: KKT of the Theorem-6 transformed problem
+    /// (see [`crate::fused::fused_kkt_violation`]), NOT the plain
+    /// LASSO check — a fused solution is piecewise constant, not
+    /// sparse, in the original space.
+    fn kkt_violation(&mut self, prob: &Problem, beta: &[(usize, f64)], lam: f64) -> f64 {
+        assert!(
+            prob.offset.is_none(),
+            "fused adapter: problems with a margin offset are unsupported"
+        );
+        let edges = self.edges_for(prob.p());
+        let mut dense = vec![0.0; prob.p()];
+        for &(i, b) in beta {
+            dense[i] = b;
+        }
+        let x = dense_view(&prob.x, &mut self.dense_cache);
+        super::fused_kkt_violation(x, &prob.y, prob.loss, &edges, &dense, lam)
+            .expect("fused certificate: invalid tree")
     }
 }
 

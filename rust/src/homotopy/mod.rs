@@ -23,6 +23,8 @@ pub struct HomotopyStep {
     /// Size of the candidate (strong) set actually optimized over.
     pub candidate_size: usize,
     pub epochs: usize,
+    /// Wall-clock seconds spent on this path point.
+    pub secs: f64,
 }
 
 /// Homotopy path solver configuration.
@@ -43,6 +45,14 @@ impl Default for HomotopyConfig {
     }
 }
 
+impl HomotopyConfig {
+    /// Map the method-agnostic [`SolveSpec`](crate::solver::SolveSpec)
+    /// onto the homotopy config.
+    pub fn from_spec(spec: &crate::solver::SolveSpec) -> HomotopyConfig {
+        HomotopyConfig { eps: spec.eps, ..Default::default() }
+    }
+}
+
 /// Pathwise CD with strong-rule screening and warm starts.
 pub struct Homotopy<'a> {
     pub cfg: HomotopyConfig,
@@ -56,6 +66,19 @@ impl<'a> Homotopy<'a> {
 
     /// Solve a descending λ path. Returns per-λ steps and total time.
     pub fn solve_path(&mut self, prob: &Problem, lams: &[f64]) -> (Vec<HomotopyStep>, f64) {
+        self.solve_path_warm(prob, lams, None)
+    }
+
+    /// [`Homotopy::solve_path`], seeded with a warm solution from a
+    /// larger λ (a previous path session's last point): the seed
+    /// becomes the ever-active start and the strong rule screens
+    /// around its margins instead of around β = 0.
+    pub fn solve_path_warm(
+        &mut self,
+        prob: &Problem,
+        lams: &[f64],
+        warm: Option<&[(usize, f64)]>,
+    ) -> (Vec<HomotopyStep>, f64) {
         let sw = Stopwatch::start();
         let p = prob.p();
         let mut lam_prev = prob.lambda_max();
@@ -64,9 +87,16 @@ impl<'a> Homotopy<'a> {
             .clone()
             .unwrap_or_else(|| vec![0.0; prob.n()]);
         let mut beta_full = vec![0.0; p];
+        if let Some(ws) = warm {
+            for &(i, b) in ws {
+                beta_full[i] = b;
+            }
+            u_prev = prob.margins_sparse(ws);
+        }
         let mut steps = Vec::with_capacity(lams.len());
 
         for &lam in lams {
+            let sw_step = Stopwatch::start();
             // strong set ∪ previous support (warm start)
             let mut cand = strong_rule_keep(prob, &u_prev, lam, lam_prev);
             let mut in_cand = vec![false; p];
@@ -155,9 +185,73 @@ impl<'a> Homotopy<'a> {
                     .collect(),
                 candidate_size: cand.len(),
                 epochs,
+                secs: sw_step.secs(),
             });
         }
         (steps, sw.secs())
+    }
+}
+
+impl Homotopy<'_> {
+    fn step_to_solution(
+        &mut self,
+        prob: &Problem,
+        step: HomotopyStep,
+        warm_started: bool,
+    ) -> crate::solver::Solution {
+        // the strong rule certifies nothing globally: report the
+        // honest FULL-problem gap at the returned β (Table 1's unsafety
+        // shows up here as a gap that can exceed the requested ε)
+        let gap = crate::solver::global_gap(&mut *self.engine, prob, &step.beta, step.lam);
+        crate::solver::Solution {
+            beta: step.beta,
+            gap,
+            epochs: step.epochs,
+            secs: step.secs,
+            warm_started,
+            stats: vec![("candidate_size", step.candidate_size as f64)],
+            trace: Vec::new(),
+        }
+    }
+}
+
+impl crate::solver::Solver for Homotopy<'_> {
+    fn name(&self) -> &'static str {
+        "homotopy"
+    }
+
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::Solution {
+        let warm_started = warm.is_some();
+        let (steps, _) = self.solve_path_warm(prob, &[lam], warm);
+        let step = steps.into_iter().next().expect("one path point");
+        self.step_to_solution(prob, step, warm_started)
+    }
+
+    /// Override: the homotopy method's native unit of work IS the
+    /// path — one sequential strong-rule pass with carried margins
+    /// beats re-seeding per λ through the default warm chain.
+    fn path_warm(
+        &mut self,
+        prob: &Problem,
+        lams: &[f64],
+        warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::PathResult {
+        let sw = Stopwatch::start();
+        let (steps, _) = self.solve_path_warm(prob, lams, warm);
+        let points = steps
+            .into_iter()
+            .enumerate()
+            .map(|(k, step)| {
+                let warm_started = k > 0 || warm.is_some();
+                self.step_to_solution(prob, step, warm_started)
+            })
+            .collect();
+        crate::solver::PathResult { lams: lams.to_vec(), points, secs: sw.secs() }
     }
 }
 

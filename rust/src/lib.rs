@@ -7,8 +7,9 @@
 //! * **L3 (this crate)** — the paper's coordination contribution: the
 //!   SAIF outer loop ([`saif`]), ball regions ([`ball`]), the baseline
 //!   algorithms it is evaluated against ([`screening`], [`homotopy`],
-//!   [`workingset`]), the fused-LASSO tree transform ([`fused`]), and
-//!   a multi-tenant solve-request coordinator ([`coordinator`]).
+//!   [`workingset`]), the fused-LASSO tree transform ([`fused`]), a
+//!   unified solver API with first-class λ-path sessions ([`solver`]),
+//!   and a multi-tenant solve-request coordinator ([`coordinator`]).
 //! * **L2/L1 (python/compile, build time only)** — JAX graphs + Pallas
 //!   kernels for the numeric inner loop, AOT-lowered to HLO text.
 //! * **Runtime bridge** ([`runtime`]) — loads the AOT artifacts via the
@@ -35,5 +36,6 @@ pub mod model;
 pub mod runtime;
 pub mod saif;
 pub mod screening;
+pub mod solver;
 pub mod util;
 pub mod workingset;

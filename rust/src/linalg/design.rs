@@ -68,11 +68,24 @@ impl Parallelism {
     }
 }
 
-/// A design matrix: dense column-major or compressed sparse column.
+/// A design matrix: dense column-major, compressed sparse column, or
+/// CSC with implicit centering.
+///
+/// `CenteredSparse` represents the matrix whose column j is the stored
+/// column minus `means[j]·1` — the standardized form of a sparse
+/// design — WITHOUT densifying: centering explicitly would turn every
+/// stored zero into `−mean`, destroying the O(nnz) memory footprint.
+/// Every kernel applies the rank-1 mean correction analytically
+/// (`x_jᵀv = s_jᵀv − μ_j·Σv`, `‖x_j‖² = ‖s_j‖² − 2μ_jΣs_j + nμ_j²`,
+/// …), so standardized sparse problems match the dense preprocessing
+/// exactly while storage stays O(nnz). Compute cost of the corrected
+/// per-column ops is O(nnz_j + n)-ish (centering makes columns dense
+/// arithmetically — only the memory win survives, which is the point).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Design {
     Dense(Mat),
     Sparse(CscMat),
+    CenteredSparse { mat: CscMat, means: Vec<f64> },
 }
 
 impl From<Mat> for Design {
@@ -87,12 +100,22 @@ impl From<CscMat> for Design {
     }
 }
 
-/// Iterator over one column's stored entries as (row, value). For the
-/// dense backend this yields every row (including zeros); for the
-/// sparse backend only the stored nonzeros, in increasing row order.
+/// Iterator over one column's entries as (row, value). For the dense
+/// backend this yields every row (including zeros); for the sparse
+/// backend only the stored nonzeros, in increasing row order; for the
+/// centered backend every row (the mean correction makes the effective
+/// column dense), with the stored entries merged in.
 pub enum ColIter<'a> {
     Dense(std::iter::Enumerate<std::slice::Iter<'a, f64>>),
     Sparse(std::iter::Zip<std::slice::Iter<'a, usize>, std::slice::Iter<'a, f64>>),
+    Centered {
+        rows: &'a [usize],
+        vals: &'a [f64],
+        k: usize,
+        i: usize,
+        n: usize,
+        mean: f64,
+    },
 }
 
 impl<'a> Iterator for ColIter<'a> {
@@ -103,16 +126,47 @@ impl<'a> Iterator for ColIter<'a> {
         match self {
             ColIter::Dense(it) => it.next().map(|(i, &v)| (i, v)),
             ColIter::Sparse(it) => it.next().map(|(&i, &v)| (i, v)),
+            ColIter::Centered { rows, vals, k, i, n, mean } => {
+                if *i >= *n {
+                    return None;
+                }
+                let stored = if *k < rows.len() && rows[*k] == *i {
+                    let x = vals[*k];
+                    *k += 1;
+                    x
+                } else {
+                    0.0
+                };
+                let item = (*i, stored - *mean);
+                *i += 1;
+                Some(item)
+            }
         }
     }
 }
 
+/// Σv — the shared term of every rank-1 mean correction. One helper so
+/// serial and parallel scans reduce in the same order (bitwise-equal
+/// corrections).
+#[inline]
+fn vsum(v: &[f64]) -> f64 {
+    v.iter().sum()
+}
+
 impl Design {
+    /// Build an implicitly centered sparse design: column j is the
+    /// stored column minus `means[j]·1` (see the enum docs).
+    pub fn centered_sparse(mat: CscMat, means: Vec<f64>) -> Design {
+        assert_eq!(means.len(), mat.n_cols(), "one mean per column");
+        Design::CenteredSparse { mat, means }
+    }
+
     #[inline]
     pub fn n_rows(&self) -> usize {
         match self {
             Design::Dense(m) => m.n_rows(),
             Design::Sparse(m) => m.n_rows(),
+            Design::CenteredSparse { mat, .. } => mat.n_rows(),
         }
     }
 
@@ -121,26 +175,35 @@ impl Design {
         match self {
             Design::Dense(m) => m.n_cols(),
             Design::Sparse(m) => m.n_cols(),
+            Design::CenteredSparse { mat, .. } => mat.n_cols(),
         }
     }
 
+    /// Whether the backing storage is CSC (plain or centered).
     pub fn is_sparse(&self) -> bool {
-        matches!(self, Design::Sparse(_))
+        !matches!(self, Design::Dense(_))
     }
 
-    /// Stored entries (dense: n·p, sparse: nnz).
+    /// Whether an implicit (rank-1) mean correction is attached.
+    pub fn is_centered(&self) -> bool {
+        matches!(self, Design::CenteredSparse { .. })
+    }
+
+    /// Stored entries (dense: n·p, sparse/centered: nnz).
     pub fn nnz(&self) -> usize {
         match self {
             Design::Dense(m) => m.n_rows() * m.n_cols(),
             Design::Sparse(m) => m.nnz(),
+            Design::CenteredSparse { mat, .. } => mat.nnz(),
         }
     }
 
-    /// Short storage tag for logs ("dense" / "csc").
+    /// Short storage tag for logs ("dense" / "csc" / "csc+center").
     pub fn storage(&self) -> &'static str {
         match self {
             Design::Dense(_) => "dense",
             Design::Sparse(_) => "csc",
+            Design::CenteredSparse { .. } => "csc+center",
         }
     }
 
@@ -148,16 +211,30 @@ impl Design {
         match self {
             Design::Dense(m) => m.get(i, j),
             Design::Sparse(m) => m.get(i, j),
+            Design::CenteredSparse { mat, means } => mat.get(i, j) - means[j],
+        }
+    }
+
+    /// x_jᵀ v with a precomputed Σv (only the centered backend reads
+    /// it) — the one formula both the serial and the parallel scans
+    /// reduce through, so they stay bitwise identical.
+    #[inline]
+    fn col_dot_presum(&self, j: usize, v: &[f64], sv: f64) -> f64 {
+        match self {
+            Design::Dense(m) => super::ops::dot(m.col(j), v),
+            Design::Sparse(m) => m.col_dot(j, v),
+            Design::CenteredSparse { mat, means } => mat.col_dot(j, v) - means[j] * sv,
         }
     }
 
     /// x_jᵀ v.
     #[inline]
     pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
-        match self {
-            Design::Dense(m) => super::ops::dot(m.col(j), v),
-            Design::Sparse(m) => m.col_dot(j, v),
-        }
+        let sv = match self {
+            Design::CenteredSparse { .. } => vsum(v),
+            _ => 0.0,
+        };
+        self.col_dot_presum(j, v, sv)
     }
 
     /// out += alpha * x_j.
@@ -166,6 +243,16 @@ impl Design {
         match self {
             Design::Dense(m) => super::ops::axpy(alpha, m.col(j), out),
             Design::Sparse(m) => m.col_axpy(alpha, j, out),
+            Design::CenteredSparse { mat, means } => {
+                if alpha == 0.0 {
+                    return;
+                }
+                mat.col_axpy(alpha, j, out);
+                let c = alpha * means[j];
+                for o in out.iter_mut() {
+                    *o -= c;
+                }
+            }
         }
     }
 
@@ -182,6 +269,12 @@ impl Design {
                 }
             }
             Design::Sparse(m) => m.cols_dot(cols, v, out),
+            Design::CenteredSparse { .. } => {
+                let sv = vsum(v);
+                for (o, &j) in out.iter_mut().zip(cols) {
+                    *o = self.col_dot_presum(j, v, sv);
+                }
+            }
         }
     }
 
@@ -197,16 +290,35 @@ impl Design {
                 }
             }
             Design::Sparse(m) => m.cols_axpy(updates, out),
+            // the ordered-fold contract (strictly `updates` order,
+            // bitwise equal to sequential col_axpy) must hold for the
+            // sharded-epoch residual merge, so no fused correction
+            Design::CenteredSparse { .. } => {
+                for &(j, alpha) in updates {
+                    self.col_axpy(alpha, j, out);
+                }
+            }
         }
     }
 
-    /// Stored entries of column j as (row, value) pairs.
+    /// Entries of column j as (row, value) pairs (see [`ColIter`]).
     pub fn col_iter(&self, j: usize) -> ColIter<'_> {
         match self {
             Design::Dense(m) => ColIter::Dense(m.col(j).iter().enumerate()),
             Design::Sparse(m) => {
                 let (rows, vals) = m.col(j);
                 ColIter::Sparse(rows.iter().zip(vals.iter()))
+            }
+            Design::CenteredSparse { mat, means } => {
+                let (rows, vals) = mat.col(j);
+                ColIter::Centered {
+                    rows,
+                    vals,
+                    k: 0,
+                    i: 0,
+                    n: mat.n_rows(),
+                    mean: means[j],
+                }
             }
         }
     }
@@ -216,6 +328,13 @@ impl Design {
         match self {
             Design::Dense(m) => m.mul_vec(v, out),
             Design::Sparse(m) => m.mul_vec(v, out),
+            Design::CenteredSparse { mat, means } => {
+                mat.mul_vec(v, out);
+                let c = super::ops::dot(means, v);
+                for o in out.iter_mut() {
+                    *o -= c;
+                }
+            }
         }
     }
 
@@ -224,6 +343,14 @@ impl Design {
         match self {
             Design::Dense(m) => m.mul_t_vec(v, out),
             Design::Sparse(m) => m.mul_t_vec(v, out),
+            Design::CenteredSparse { .. } => {
+                assert_eq!(v.len(), self.n_rows());
+                assert_eq!(out.len(), self.n_cols());
+                let sv = vsum(v);
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = self.col_dot_presum(j, v, sv);
+                }
+            }
         }
     }
 
@@ -239,24 +366,39 @@ impl Design {
             self.mul_t_vec(v, out);
             return;
         }
+        let sv = match self {
+            Design::CenteredSparse { .. } => vsum(v),
+            _ => 0.0,
+        };
         let chunk = out.len().div_ceil(threads);
         std::thread::scope(|s| {
             for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {
                 let start = c * chunk;
                 s.spawn(move || {
                     for (k, o) in out_chunk.iter_mut().enumerate() {
-                        *o = self.col_dot(start + k, v);
+                        *o = self.col_dot_presum(start + k, v, sv);
                     }
                 });
             }
         });
     }
 
-    /// Squared norms of all columns.
+    /// Squared norms of all columns. The centered backend expands
+    /// ‖s_j − μ_j·1‖² = ‖s_j‖² − 2μ_jΣs_j + nμ_j² analytically.
     pub fn col_norms_sq(&self) -> Vec<f64> {
         match self {
             Design::Dense(m) => m.col_norms_sq(),
             Design::Sparse(m) => m.col_norms_sq(),
+            Design::CenteredSparse { mat, means } => {
+                let n = mat.n_rows() as f64;
+                let base = mat.col_norms_sq();
+                let sums = mat.col_sums();
+                base.iter()
+                    .zip(&sums)
+                    .zip(means)
+                    .map(|((&b, &s), &m)| b - 2.0 * m * s + n * m * m)
+                    .collect()
+            }
         }
     }
 
@@ -265,36 +407,55 @@ impl Design {
         match self {
             Design::Dense(m) => Design::Dense(m.select_cols(cols)),
             Design::Sparse(m) => Design::Sparse(m.select_cols(cols)),
+            Design::CenteredSparse { mat, means } => Design::CenteredSparse {
+                mat: mat.select_cols(cols),
+                means: cols.iter().map(|&j| means[j]).collect(),
+            },
         }
     }
 
     /// Gather a sub-matrix of the given rows, in `rows` order (CV fold
     /// splits; keeps the backend). Duplicate row indices repeat the
-    /// row on both backends.
+    /// row on every backend. A centered design keeps its column means:
+    /// the correction is constant down a column, so row selection
+    /// commutes with it.
     pub fn select_rows(&self, rows: &[usize]) -> Design {
         match self {
             Design::Dense(m) => Design::Dense(m.select_rows(rows)),
             Design::Sparse(m) => Design::Sparse(m.select_rows(rows)),
+            Design::CenteredSparse { mat, means } => Design::CenteredSparse {
+                mat: mat.select_rows(rows),
+                means: means.clone(),
+            },
         }
     }
 
     /// The dense backend, for consumers that require contiguous column
-    /// slices (the fused-LASSO tree transform). Panics on a sparse
-    /// design — densify explicitly with [`Design::to_dense`] first.
+    /// slices (the fused-LASSO tree transform). Panics on a sparse or
+    /// centered design — densify explicitly with [`Design::to_dense`]
+    /// first.
     pub fn as_dense(&self) -> &Mat {
         match self {
             Design::Dense(m) => m,
-            Design::Sparse(_) => {
-                panic!("dense design required; call to_dense() to densify explicitly")
-            }
+            _ => panic!("dense design required; call to_dense() to densify explicitly"),
         }
     }
 
-    /// Materialize a dense copy.
+    /// Materialize a dense copy (the centered backend materializes the
+    /// mean correction).
     pub fn to_dense(&self) -> Mat {
         match self {
             Design::Dense(m) => m.clone(),
             Design::Sparse(m) => m.to_dense(),
+            Design::CenteredSparse { mat, means } => {
+                let mut m = mat.to_dense();
+                for (j, &mu) in means.iter().enumerate() {
+                    for v in m.col_mut(j).iter_mut() {
+                        *v -= mu;
+                    }
+                }
+                m
+            }
         }
     }
 
@@ -304,6 +465,7 @@ impl Design {
         match self {
             Design::Dense(m) => m.data().as_ptr() as usize,
             Design::Sparse(m) => m.values().as_ptr() as usize,
+            Design::CenteredSparse { mat, .. } => mat.values().as_ptr() as usize,
         }
     }
 }
@@ -448,6 +610,140 @@ mod tests {
                 assert_eq!(rd.get(new, j), dn.get(old, j));
             }
         }
+    }
+
+    /// A centered design and its explicit dense counterpart.
+    fn centered_pair(rng: &mut Rng, n: usize, p: usize) -> (Design, Design) {
+        let (sp, _) = random_pair(rng, n, p);
+        let mat = match sp {
+            Design::Sparse(m) => m,
+            _ => unreachable!(),
+        };
+        let means: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let mut dense = mat.to_dense();
+        for j in 0..p {
+            for v in dense.col_mut(j).iter_mut() {
+                *v -= means[j];
+            }
+        }
+        (Design::centered_sparse(mat, means), Design::Dense(dense))
+    }
+
+    #[test]
+    fn centered_matches_explicit_dense_centering() {
+        let mut rng = Rng::new(91);
+        for _ in 0..8 {
+            let n = 5 + rng.below(15);
+            let p = 3 + rng.below(20);
+            let (ce, dn) = centered_pair(&mut rng, n, p);
+            assert!(ce.is_sparse() && ce.is_centered() && !dn.is_centered());
+            assert_eq!(ce.storage(), "csc+center");
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            for j in 0..p {
+                assert!((ce.col_dot(j, &v) - dn.col_dot(j, &v)).abs() < 1e-12, "col_dot {j}");
+                for i in 0..n {
+                    assert!((ce.get(i, j) - dn.get(i, j)).abs() < 1e-12);
+                }
+                let (mut a, mut b) = (vec![0.3; n], vec![0.3; n]);
+                ce.col_axpy(-1.7, j, &mut a);
+                dn.col_axpy(-1.7, j, &mut b);
+                for i in 0..n {
+                    assert!((a[i] - b[i]).abs() < 1e-12, "col_axpy {j}");
+                }
+                // col_iter reconstructs the effective (dense) column
+                let mut ca = vec![f64::NAN; n];
+                let mut count = 0;
+                for (i, val) in ce.col_iter(j) {
+                    ca[i] = val;
+                    count += 1;
+                }
+                assert_eq!(count, n, "centered iter yields every row");
+                for i in 0..n {
+                    assert!((ca[i] - dn.get(i, j)).abs() < 1e-12);
+                }
+            }
+            let (mut a, mut b) = (vec![0.0; p], vec![0.0; p]);
+            ce.mul_t_vec(&v, &mut a);
+            dn.mul_t_vec(&v, &mut b);
+            for j in 0..p {
+                assert!((a[j] - b[j]).abs() < 1e-12, "mul_t_vec {j}");
+            }
+            let (mut ya, mut yb) = (vec![0.0; n], vec![0.0; n]);
+            ce.mul_vec(&w, &mut ya);
+            dn.mul_vec(&w, &mut yb);
+            for i in 0..n {
+                assert!((ya[i] - yb[i]).abs() < 1e-11, "mul_vec {i}");
+            }
+            let (na, nb) = (ce.col_norms_sq(), dn.col_norms_sq());
+            for j in 0..p {
+                assert!((na[j] - nb[j]).abs() < 1e-10, "col_norms_sq {j}: {} {}", na[j], nb[j]);
+            }
+            // to_dense materializes the correction
+            let td = Design::Dense(ce.to_dense());
+            for j in 0..p {
+                for i in 0..n {
+                    assert!((td.get(i, j) - dn.get(i, j)).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn centered_parallel_scan_is_bitwise_serial() {
+        let mut rng = Rng::new(92);
+        let (n, p) = (25, 400);
+        let (ce, _) = centered_pair(&mut rng, n, p);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut serial = vec![0.0; p];
+        ce.mul_t_vec(&v, &mut serial);
+        for threads in [2, 3, 8] {
+            let mut par = vec![0.0; p];
+            ce.mul_t_vec_par(&v, &mut par, Parallelism::Fixed(threads));
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn centered_selects_and_ordered_fold() {
+        let mut rng = Rng::new(93);
+        let (n, p) = (12, 9);
+        let (ce, dn) = centered_pair(&mut rng, n, p);
+        // select_cols / select_rows keep the centered backend
+        let cols = [7usize, 0, 3];
+        let (cc, dc) = (ce.select_cols(&cols), dn.select_cols(&cols));
+        assert!(cc.is_centered());
+        for (new, &old) in cols.iter().enumerate() {
+            for i in 0..n {
+                assert!((cc.get(i, new) - dc.get(i, new)).abs() < 1e-12);
+                assert_eq!(cc.get(i, new), ce.get(i, old));
+            }
+        }
+        let rows = [5usize, 5, 1];
+        let (cr, dr) = (ce.select_rows(&rows), dn.select_rows(&rows));
+        assert!(cr.is_centered());
+        for j in 0..p {
+            for (new, _) in rows.iter().enumerate() {
+                assert!((cr.get(new, j) - dr.get(new, j)).abs() < 1e-12);
+            }
+        }
+        // cols_dot matches per-column col_dot; cols_axpy is the
+        // ordered fold, bitwise equal to sequential col_axpy
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let shard = [2usize, 8, 2, 0];
+        let mut batched = vec![0.0; shard.len()];
+        ce.cols_dot(&shard, &v, &mut batched);
+        for (k, &j) in shard.iter().enumerate() {
+            assert_eq!(batched[k], ce.col_dot(j, &v), "col {j}");
+        }
+        let updates = [(1usize, 0.5), (6, -1.25), (1, 0.75)];
+        let mut folded = v.clone();
+        ce.cols_axpy(&updates, &mut folded);
+        let mut manual = v.clone();
+        for &(j, a) in &updates {
+            ce.col_axpy(a, j, &mut manual);
+        }
+        assert_eq!(folded, manual);
     }
 
     #[test]

@@ -212,6 +212,17 @@ impl CscMat {
         }
     }
 
+    /// Sum of each column's stored entries (n·mean per column — the
+    /// input to implicit centering).
+    pub fn col_sums(&self) -> Vec<f64> {
+        (0..self.n_cols)
+            .map(|j| {
+                let (_, vals) = self.col(j);
+                vals.iter().sum()
+            })
+            .collect()
+    }
+
     /// Squared norms of all columns.
     pub fn col_norms_sq(&self) -> Vec<f64> {
         (0..self.n_cols)

@@ -81,6 +81,19 @@ impl Default for GroupSaifConfig {
     }
 }
 
+impl GroupSaifConfig {
+    /// Map the method-agnostic [`SolveSpec`](crate::solver::SolveSpec)
+    /// onto the group-SAIF config.
+    pub fn from_spec(spec: &crate::solver::SolveSpec) -> GroupSaifConfig {
+        let d = GroupSaifConfig::default();
+        GroupSaifConfig {
+            eps: spec.eps,
+            max_outer: spec.max_outer.unwrap_or(d.max_outer),
+            ..d
+        }
+    }
+}
+
 /// Result of a group-SAIF solve.
 #[derive(Debug, Clone)]
 pub struct GroupSaifResult {
@@ -341,6 +354,93 @@ impl GroupSaif {
     }
 }
 
+/// Worst group-KKT violation of a sparse β on the FULL group-LASSO
+/// problem: active groups must satisfy ‖X_gᵀ f'(u)‖ = λ w_g exactly,
+/// inactive ones ‖X_gᵀ f'(u)‖ ≤ λ w_g. This is the group analogue of
+/// [`Problem::kkt_violation`] — the safety certificate the coordinator
+/// verifies group responses with.
+pub fn group_kkt_violation(
+    prob: &Problem,
+    groups: &Groups,
+    beta: &[(usize, f64)],
+    lam: f64,
+) -> f64 {
+    let u = prob.margins_sparse(beta);
+    let fp: Vec<f64> = (0..prob.n())
+        .map(|j| prob.loss.deriv(u[j], prob.y[j]))
+        .collect();
+    let mut bmap = vec![0.0; prob.p()];
+    for &(i, b) in beta {
+        bmap[i] = b;
+    }
+    let mut worst: f64 = 0.0;
+    for (g, members) in groups.members.iter().enumerate() {
+        let gn = group_norm(prob, members, &fp);
+        let bnorm = group_beta_norm(members, &bmap);
+        if bnorm > 1e-10 {
+            // active group: X_gᵀ f' = −λ w_g β_g/‖β_g‖ ⇒ norm = λ w_g
+            worst = worst.max((gn - lam * groups.weights[g]).abs());
+        } else {
+            worst = worst.max((gn - lam * groups.weights[g]).max(0.0));
+        }
+    }
+    worst
+}
+
+/// [`crate::solver::Solver`] adapter: serve the group-LASSO solver
+/// over contiguous feature groups of a fixed size, so group problems
+/// dispatch through the same coordinator/CLI surface as plain LASSO.
+/// Least squares only (the base [`GroupSaif`] restriction); warm
+/// starts are ignored — group-SAIF re-screens from its init scores.
+pub struct GroupSolver {
+    pub cfg: GroupSaifConfig,
+    pub group_size: usize,
+}
+
+impl GroupSolver {
+    pub fn new(cfg: GroupSaifConfig, group_size: usize) -> GroupSolver {
+        GroupSolver { cfg, group_size: group_size.max(1) }
+    }
+
+    fn groups_for(&self, prob: &Problem) -> Groups {
+        Groups::contiguous(prob.p(), self.group_size)
+    }
+}
+
+impl crate::solver::Solver for GroupSolver {
+    fn name(&self) -> &'static str {
+        "group"
+    }
+
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        _warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::Solution {
+        let groups = self.groups_for(prob);
+        let mut gs = GroupSaif::new(self.cfg.clone());
+        let r = gs.solve(prob, &groups, lam);
+        crate::solver::Solution {
+            beta: r.beta,
+            gap: r.gap,
+            epochs: r.outer_iters * self.cfg.k_epochs,
+            secs: r.secs,
+            warm_started: false,
+            stats: vec![
+                ("outer_iters", r.outer_iters as f64),
+                ("max_active_groups", r.max_active_groups as f64),
+                ("active_groups", r.active_groups.len() as f64),
+            ],
+            trace: Vec::new(),
+        }
+    }
+
+    fn kkt_violation(&mut self, prob: &Problem, beta: &[(usize, f64)], lam: f64) -> f64 {
+        group_kkt_violation(prob, &self.groups_for(prob), beta, lam)
+    }
+}
+
 /// ‖X_gᵀ v‖₂ for the member columns.
 fn group_norm(prob: &Problem, members: &[usize], v: &[f64]) -> f64 {
     members
@@ -393,29 +493,6 @@ mod tests {
     use super::*;
     use crate::data::synth;
     use crate::util::prop;
-
-    fn group_kkt_violation(prob: &Problem, groups: &Groups, beta: &[(usize, f64)], lam: f64) -> f64 {
-        let u = prob.margins_sparse(beta);
-        let fp: Vec<f64> = (0..prob.n())
-            .map(|j| prob.loss.deriv(u[j], prob.y[j]))
-            .collect();
-        let mut bmap = vec![0.0; prob.p()];
-        for &(i, b) in beta {
-            bmap[i] = b;
-        }
-        let mut worst: f64 = 0.0;
-        for (g, members) in groups.members.iter().enumerate() {
-            let gn = group_norm(prob, members, &fp);
-            let bnorm = group_beta_norm(members, &bmap);
-            if bnorm > 1e-10 {
-                // active group: X_gᵀ f' = −λ w_g β_g/‖β_g‖ ⇒ norm = λ w_g
-                worst = worst.max((gn - lam * groups.weights[g]).abs());
-            } else {
-                worst = worst.max((gn - lam * groups.weights[g]).max(0.0));
-            }
-        }
-        worst
-    }
 
     #[test]
     fn lambda_max_zeroes_everything() {

@@ -29,7 +29,9 @@ pub mod multilevel;
 pub mod solver;
 pub mod trace;
 
-pub use group::{GroupSaif, GroupSaifConfig, GroupSaifResult, Groups};
+pub use group::{
+    group_kkt_violation, GroupSaif, GroupSaifConfig, GroupSaifResult, GroupSolver, Groups,
+};
 pub use multilevel::{MultiLevelSaif, MultiLevelConfig};
 pub use solver::{Saif, SaifConfig, SaifResult};
 pub use trace::{TraceEvent, TraceOp};

@@ -77,6 +77,23 @@ impl Default for SaifConfig {
     }
 }
 
+impl SaifConfig {
+    /// Map the method-agnostic [`SolveSpec`](crate::solver::SolveSpec)
+    /// onto SAIF's config (paper defaults for everything it doesn't
+    /// name).
+    pub fn from_spec(spec: &crate::solver::SolveSpec) -> SaifConfig {
+        let d = SaifConfig::default();
+        SaifConfig {
+            eps: spec.eps,
+            parallelism: spec.parallelism,
+            epoch_shards: spec.epoch_shards,
+            max_outer: spec.max_outer.unwrap_or(d.max_outer),
+            trace: spec.trace,
+            ..d
+        }
+    }
+}
+
 /// Solve outcome with the statistics Theorem 5 reasons about.
 #[derive(Debug, Clone)]
 pub struct SaifResult {
@@ -418,6 +435,35 @@ impl<'a> Saif<'a> {
             }
         }
         g
+    }
+}
+
+impl crate::solver::Solver for Saif<'_> {
+    fn name(&self) -> &'static str {
+        "saif"
+    }
+
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::Solution {
+        let r = Saif::solve_warm(self, prob, lam, warm);
+        crate::solver::Solution {
+            beta: r.beta,
+            gap: r.gap,
+            epochs: r.epochs,
+            secs: r.secs,
+            warm_started: warm.is_some(),
+            stats: vec![
+                ("outer_iters", r.outer_iters as f64),
+                ("p_add_total", r.p_add_total as f64),
+                ("max_active", r.max_active as f64),
+                ("final_active", r.final_active as f64),
+            ],
+            trace: r.trace,
+        }
     }
 }
 

@@ -36,6 +36,20 @@ impl Default for DynScreenConfig {
     }
 }
 
+impl DynScreenConfig {
+    /// Map the method-agnostic [`SolveSpec`](crate::solver::SolveSpec)
+    /// onto dynamic screening's config (`max_outer` caps total epochs).
+    pub fn from_spec(spec: &crate::solver::SolveSpec) -> DynScreenConfig {
+        let d = DynScreenConfig::default();
+        DynScreenConfig {
+            eps: spec.eps,
+            max_outer: spec.max_outer.unwrap_or(d.max_outer),
+            trace: spec.trace,
+            ..d
+        }
+    }
+}
+
 /// Result of a dynamic-screening solve.
 #[derive(Debug, Clone)]
 pub struct DynScreenResult {
@@ -164,6 +178,36 @@ impl<'a> DynScreen<'a> {
             sizes,
             secs: sw.secs(),
             trace,
+        }
+    }
+}
+
+impl crate::solver::Solver for DynScreen<'_> {
+    fn name(&self) -> &'static str {
+        "dynscreen"
+    }
+
+    /// Dynamic screening starts from the FULL feature set, so a warm
+    /// start cannot seed it — the seed is ignored and `path()` is
+    /// bitwise identical to independent per-λ solves.
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        _warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::Solution {
+        let r = self.solve(prob, lam);
+        crate::solver::Solution {
+            beta: r.beta,
+            gap: r.gap,
+            epochs: r.epochs,
+            secs: r.secs,
+            warm_started: false,
+            stats: vec![(
+                "final_feature_set",
+                r.sizes.last().copied().unwrap_or(0) as f64,
+            )],
+            trace: r.trace,
         }
     }
 }

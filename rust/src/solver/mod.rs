@@ -1,0 +1,379 @@
+//! The unified `Solver` API: one trait, one spec, first-class λ-path
+//! sessions.
+//!
+//! The paper's headline workload is path-wise — SAIF's warm-started λ
+//! sweeps (Figure 6, §5.3) are where its incremental active set beats
+//! dynamic screening, and the screening literature (Fercoq et al.,
+//! *Mind the duality gap*; Zeng et al., *Hybrid safe-strong rules*)
+//! likewise treats the λ-path, not a single solve, as the unit of
+//! work. This module makes that the API surface:
+//!
+//! * [`Solver`] — `solve` / `solve_warm` / `path`, implemented by every
+//!   solve method in the repo (SAIF, dynamic screening, BLITZ, the
+//!   homotopy baseline, and — via problem adapters — the tree-fused and
+//!   group-LASSO solvers);
+//! * [`SolveSpec`] — the single knob set (ε, scan parallelism, epoch
+//!   shards, outer cap, trace) that replaces the per-method config
+//!   duplication for callers that don't need method-specific tuning;
+//! * [`Method`] + [`make`] — the dispatch point the coordinator and CLI
+//!   build `Box<dyn Solver>`s from.
+//!
+//! `path()` is where screening state is reused across grid points: the
+//! default implementation warm-chains each solution into the next
+//! (smaller) λ's solve — for SAIF the previous support seeds the active
+//! set, so the ADD phase starts from the path predecessor instead of
+//! from scratch — and the homotopy solver overrides it with its native
+//! sequential strong-rule pass. Methods that cannot exploit a warm
+//! start (dynamic screening, BLITZ) simply ignore the seed, so for them
+//! `path()` is bitwise identical to independent per-λ solves.
+//!
+//! ```
+//! use saif::cm::NativeEngine;
+//! use saif::solver::{make, Method, SolveSpec, Solver};
+//!
+//! let prob = saif::data::synth::synth_linear(30, 80, 7).problem();
+//! let lam = prob.lambda_max() * 0.3;
+//! let mut eng = NativeEngine::new();
+//! let spec = SolveSpec { eps: 1e-8, ..Default::default() };
+//! let mut solver = make(Method::Saif, &mut eng, &spec);
+//! // single solve + safety certificate
+//! let sol = solver.solve(&prob, lam);
+//! assert!(sol.gap <= 1e-8);
+//! assert!(solver.kkt_violation(&prob, &sol.beta, lam) < 1e-3 * lam.max(1.0));
+//! // warm-chained λ-path session
+//! let path = solver.path(&prob, &[lam, lam * 0.5, lam * 0.25]);
+//! assert_eq!(path.points.len(), 3);
+//! assert!(path.points[1].warm_started);
+//! ```
+
+use crate::cm::{Engine, EpochShards};
+use crate::linalg::Parallelism;
+use crate::model::Problem;
+use crate::saif::TraceEvent;
+use crate::util::Stopwatch;
+
+/// Which solve method a caller (coordinator request, CLI flag) wants.
+///
+/// The feature-LASSO methods (`Saif`, `DynScreen`, `Blitz`, `Homotopy`)
+/// run on the request's problem as-is. The structured-penalty methods
+/// are served through problem adapters: `Fused` solves the tree fused
+/// LASSO over the chain tree 0−1−⋯−(p−1) (the classic 1-D fused LASSO;
+/// callers with a real feature tree construct
+/// [`crate::fused::FusedSolver`] directly), and `Group` solves the
+/// group LASSO over contiguous groups of the given size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Saif,
+    DynScreen,
+    Blitz,
+    Homotopy,
+    Fused,
+    Group { size: usize },
+}
+
+impl Method {
+    /// Parse a CLI value: `saif`, `dyn`/`dynscreen`, `blitz`,
+    /// `homotopy`/`hom`, `fused`, `group` (size 8) or `group:K`.
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "saif" => Some(Method::Saif),
+            "dyn" | "dynscreen" => Some(Method::DynScreen),
+            "blitz" => Some(Method::Blitz),
+            "homotopy" | "hom" => Some(Method::Homotopy),
+            "fused" => Some(Method::Fused),
+            "group" => Some(Method::Group { size: 8 }),
+            _ => s
+                .strip_prefix("group:")
+                .and_then(|k| k.parse::<usize>().ok())
+                .map(|size| Method::Group { size: size.max(1) }),
+        }
+    }
+
+    /// Short name for logs/tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Saif => "saif",
+            Method::DynScreen => "dynscreen",
+            Method::Blitz => "blitz",
+            Method::Homotopy => "homotopy",
+            Method::Fused => "fused",
+            Method::Group { .. } => "group",
+        }
+    }
+}
+
+/// The one knob set every method understands, replacing the per-method
+/// `eps`/`parallelism`/`epoch_shards`/`max_outer`/`trace` duplication
+/// across `SaifConfig`/`DynScreenConfig`/`BlitzConfig`/… Method
+/// implementations map it onto their own config via `from_spec`;
+/// method-specific tuning (ζ, ξ, ADD batch sizes, …) keeps living in
+/// those configs for callers that construct solvers directly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveSpec {
+    /// Stopping duality gap ε.
+    pub eps: f64,
+    /// Column parallelism for full-p scans. `None` inherits the
+    /// engine's setting (the coordinator configures engines per
+    /// worker); `Some` forces it.
+    pub parallelism: Option<Parallelism>,
+    /// Sharding policy for the active-block CM epochs. `None` inherits
+    /// the engine's setting; `Some` forces it.
+    pub epoch_shards: Option<EpochShards>,
+    /// Outer-iteration safety valve. `None` keeps each method's own
+    /// default (the cap means "outer iterations" for SAIF/BLITZ and
+    /// "total epochs" for dynamic screening).
+    pub max_outer: Option<usize>,
+    /// Record a solve trace (methods without one return it empty).
+    pub trace: bool,
+}
+
+impl Default for SolveSpec {
+    fn default() -> Self {
+        SolveSpec {
+            eps: 1e-6,
+            parallelism: None,
+            epoch_shards: None,
+            max_outer: None,
+            trace: false,
+        }
+    }
+}
+
+/// One solve's outcome, in the shape every method can produce.
+/// Method-specific diagnostics (SAIF's p_add, BLITZ's working-set
+/// high-water mark, …) ride in [`Solution::stats`].
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Sparse solution in the full index space.
+    pub beta: Vec<(usize, f64)>,
+    /// Certified duality gap. For the safe methods this is the gap the
+    /// solver stopped at; for the (unsafe) homotopy method it is the
+    /// FULL-problem gap evaluated at the returned β — the honest
+    /// number, which can exceed ε when the strong rule missed a
+    /// feature (Table 1).
+    pub gap: f64,
+    /// Total CM epochs executed (0 for methods that don't count them).
+    pub epochs: usize,
+    /// Wall-clock seconds.
+    pub secs: f64,
+    /// Whether a warm start was consumed.
+    pub warm_started: bool,
+    /// Method-specific diagnostics as (name, value) pairs.
+    pub stats: Vec<(&'static str, f64)>,
+    /// Trace events (empty unless the spec asked for a trace).
+    pub trace: Vec<TraceEvent>,
+}
+
+/// A λ-path session's outcome: one [`Solution`] per grid point, in
+/// grid order.
+#[derive(Debug, Clone)]
+pub struct PathResult {
+    /// The λ grid solved, in the order given.
+    pub lams: Vec<f64>,
+    /// One solution per λ, aligned with `lams`.
+    pub points: Vec<Solution>,
+    /// Wall-clock seconds for the whole path.
+    pub secs: f64,
+}
+
+/// The common solver interface. `solve`/`path` have default
+/// implementations in terms of `solve_warm`, so a method only has to
+/// say what one warm-started solve means; `path` is the first-class
+/// λ-path session that reuses screening state (warm-chained supports)
+/// down a descending grid.
+///
+/// ```
+/// use saif::cm::NativeEngine;
+/// use saif::saif::{Saif, SaifConfig};
+/// use saif::solver::{SolveSpec, Solver};
+///
+/// let prob = saif::data::synth::synth_linear(25, 60, 3).problem();
+/// let lam_max = prob.lambda_max();
+/// let mut eng = NativeEngine::new();
+/// // any solver is usable directly as a `Solver`…
+/// let mut s = Saif::new(&mut eng, SaifConfig::from_spec(&SolveSpec::default()));
+/// // …and `path` warm-chains a descending grid in one session
+/// let path = Solver::path(&mut s, &prob, &[lam_max * 0.4, lam_max * 0.2]);
+/// assert_eq!(path.points.len(), 2);
+/// assert!(path.points.iter().all(|sol| sol.gap <= 1e-6));
+/// ```
+pub trait Solver {
+    /// Method name for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Solve at penalty `lam`, optionally seeded with a warm solution
+    /// from a larger λ. Methods that cannot exploit a warm start
+    /// ignore the seed (and report `warm_started: false`).
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        warm: Option<&[(usize, f64)]>,
+    ) -> Solution;
+
+    /// Solve at penalty `lam` from scratch.
+    fn solve(&mut self, prob: &Problem, lam: f64) -> Solution {
+        self.solve_warm(prob, lam, None)
+    }
+
+    /// Solve a λ grid as one session, seeded with `warm`. The default
+    /// warm-chains: each grid point's solution seeds the next solve.
+    /// Callers pass the grid in DESCENDING order to get the Figure-6
+    /// path trick; the chain is applied in the order given either way.
+    fn path_warm(
+        &mut self,
+        prob: &Problem,
+        lams: &[f64],
+        warm: Option<&[(usize, f64)]>,
+    ) -> PathResult {
+        let sw = Stopwatch::start();
+        let mut points = Vec::with_capacity(lams.len());
+        let mut prev: Option<Vec<(usize, f64)>> = warm.map(|w| w.to_vec());
+        for &lam in lams {
+            let sol = self.solve_warm(prob, lam, prev.as_deref());
+            prev = Some(sol.beta.clone());
+            points.push(sol);
+        }
+        PathResult { lams: lams.to_vec(), points, secs: sw.secs() }
+    }
+
+    /// Solve a λ grid as one warm-chained session.
+    fn path(&mut self, prob: &Problem, lams: &[f64]) -> PathResult {
+        self.path_warm(prob, lams, None)
+    }
+
+    /// The safety certificate for a solution of THIS method's problem:
+    /// worst KKT/subgradient violation on the full problem. The
+    /// default is the plain-LASSO check; the structured-penalty
+    /// adapters (fused, group) override it with their own optimality
+    /// conditions — the coordinator certifies every response through
+    /// this, not through a hard-coded LASSO check. (`&mut self` so
+    /// adapters can reuse per-problem caches across a path's
+    /// certificates.)
+    fn kkt_violation(&mut self, prob: &Problem, beta: &[(usize, f64)], lam: f64) -> f64 {
+        prob.kkt_violation(beta, lam)
+    }
+}
+
+/// FULL-problem duality gap at a sparse β: margins → θ̂ → feasibility
+/// rescale over all p constraints → P(β) − D(θ). Used by methods whose
+/// inner loop does not certify globally (the homotopy baseline).
+pub fn global_gap(
+    engine: &mut dyn Engine,
+    prob: &Problem,
+    beta: &[(usize, f64)],
+    lam: f64,
+) -> f64 {
+    let u = prob.margins_sparse(beta);
+    let th_hat = prob.theta_hat(&u, lam);
+    let scores = engine.scores(prob, &th_hat);
+    let mx = scores.iter().cloned().fold(0.0, f64::max);
+    let dp = prob.project_dual(&th_hat, mx, lam);
+    let l1: f64 = beta.iter().map(|(_, b)| b.abs()).sum();
+    let primal = prob.primal_from_margins(&u, l1, lam);
+    (primal - dp.dual).max(0.0)
+}
+
+/// Build a boxed solver for `method` over `engine`, configured from
+/// `spec` — the dispatch point the coordinator workers and the CLI
+/// share. `Group` solvers run natively (no engine); `Fused` uses the
+/// chain tree (see [`Method`]) — pass a real feature tree through
+/// [`make_with_tree`].
+pub fn make<'e>(
+    method: Method,
+    engine: &'e mut dyn Engine,
+    spec: &SolveSpec,
+) -> Box<dyn Solver + 'e> {
+    make_with_tree(method, engine, spec, None)
+}
+
+/// [`make`], with a feature tree for `Method::Fused` (ignored by every
+/// other method; `None` keeps the chain-tree default).
+pub fn make_with_tree<'e>(
+    method: Method,
+    engine: &'e mut dyn Engine,
+    spec: &SolveSpec,
+    tree: Option<&[(usize, usize)]>,
+) -> Box<dyn Solver + 'e> {
+    match method {
+        Method::Saif => Box::new(crate::saif::Saif::new(
+            engine,
+            crate::saif::SaifConfig::from_spec(spec),
+        )),
+        Method::DynScreen => Box::new(crate::screening::dynamic::DynScreen::new(
+            engine,
+            crate::screening::dynamic::DynScreenConfig::from_spec(spec),
+        )),
+        Method::Blitz => Box::new(crate::workingset::Blitz::new(
+            engine,
+            crate::workingset::BlitzConfig::from_spec(spec),
+        )),
+        Method::Homotopy => Box::new(crate::homotopy::Homotopy::new(
+            engine,
+            crate::homotopy::HomotopyConfig::from_spec(spec),
+        )),
+        Method::Fused => Box::new(crate::fused::FusedSolver::new(
+            engine,
+            crate::fused::FusedSaifConfig::from_spec(spec),
+            tree.map(|e| e.to_vec()),
+        )),
+        Method::Group { size } => Box::new(crate::saif::group::GroupSolver::new(
+            crate::saif::GroupSaifConfig::from_spec(spec),
+            size,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("saif"), Some(Method::Saif));
+        assert_eq!(Method::parse("dyn"), Some(Method::DynScreen));
+        assert_eq!(Method::parse("dynscreen"), Some(Method::DynScreen));
+        assert_eq!(Method::parse("blitz"), Some(Method::Blitz));
+        assert_eq!(Method::parse("homotopy"), Some(Method::Homotopy));
+        assert_eq!(Method::parse("hom"), Some(Method::Homotopy));
+        assert_eq!(Method::parse("fused"), Some(Method::Fused));
+        assert_eq!(Method::parse("group"), Some(Method::Group { size: 8 }));
+        assert_eq!(Method::parse("group:3"), Some(Method::Group { size: 3 }));
+        assert_eq!(Method::parse("group:0"), Some(Method::Group { size: 1 }));
+        assert_eq!(Method::parse("nope"), None);
+        assert_eq!(Method::parse("group:x"), None);
+    }
+
+    #[test]
+    fn spec_default_matches_old_defaults() {
+        let s = SolveSpec::default();
+        assert_eq!(s.eps, 1e-6);
+        assert!(s.parallelism.is_none());
+        assert!(s.epoch_shards.is_none());
+        assert!(s.max_outer.is_none());
+        assert!(!s.trace);
+    }
+
+    #[test]
+    fn factory_builds_every_method() {
+        use crate::cm::NativeEngine;
+        let prob = crate::data::synth::synth_linear(20, 30, 3).problem();
+        let lam = prob.lambda_max() * 0.5;
+        let spec = SolveSpec::default();
+        for method in [
+            Method::Saif,
+            Method::DynScreen,
+            Method::Blitz,
+            Method::Homotopy,
+            Method::Fused,
+            Method::Group { size: 3 },
+        ] {
+            let mut eng = NativeEngine::new();
+            let mut s = make(method, &mut eng, &spec);
+            assert_eq!(s.name(), method.name());
+            let sol = s.solve(&prob, lam);
+            assert!(sol.secs >= 0.0);
+            assert!(sol.gap.is_finite(), "{}: gap {}", method.name(), sol.gap);
+        }
+    }
+}

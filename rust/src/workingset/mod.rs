@@ -38,6 +38,19 @@ impl Default for BlitzConfig {
     }
 }
 
+impl BlitzConfig {
+    /// Map the method-agnostic [`SolveSpec`](crate::solver::SolveSpec)
+    /// onto BLITZ's config.
+    pub fn from_spec(spec: &crate::solver::SolveSpec) -> BlitzConfig {
+        let d = BlitzConfig::default();
+        BlitzConfig {
+            eps: spec.eps,
+            max_outer: spec.max_outer.unwrap_or(d.max_outer),
+            ..d
+        }
+    }
+}
+
 /// Result of a BLITZ solve.
 #[derive(Debug, Clone)]
 pub struct BlitzResult {
@@ -174,6 +187,37 @@ impl<'a> Blitz<'a> {
                 };
             }
             budget = (budget * 2).min(p);
+        }
+    }
+}
+
+impl crate::solver::Solver for Blitz<'_> {
+    fn name(&self) -> &'static str {
+        "blitz"
+    }
+
+    /// BLITZ rebuilds its working set from the dual geometry each
+    /// outer pass, so a warm β seed has nothing to attach to — the
+    /// seed is ignored and `path()` is bitwise identical to
+    /// independent per-λ solves.
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        _warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::Solution {
+        let r = self.solve(prob, lam);
+        crate::solver::Solution {
+            beta: r.beta,
+            gap: r.gap,
+            epochs: r.epochs,
+            secs: r.secs,
+            warm_started: false,
+            stats: vec![
+                ("outer_iters", r.outer_iters as f64),
+                ("max_working", r.max_working as f64),
+            ],
+            trace: Vec::new(),
         }
     }
 }

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use saif::coordinator::{Coordinator, EngineKind, Method, SolveRequest};
+use saif::coordinator::{Coordinator, EngineKind, Method, SolveRequest, SolveSpec};
 use saif::data::synth;
 use saif::runtime::artifacts_available;
 
@@ -19,7 +19,7 @@ fn path_requests(seed: u64, key: u64, n_lams: usize, eps: f64) -> Vec<SolveReque
             problem: prob.clone(),
             lam: lam_max * (5e-2f64).powf(k as f64 / n_lams as f64),
             method: Method::Saif,
-            eps,
+            spec: SolveSpec { eps, ..Default::default() },
         })
         .collect()
 }
@@ -31,11 +31,15 @@ fn multi_tenant_batch_native() {
         reqs.extend(path_requests(100 + d, d, 4, 1e-8));
     }
     let total = reqs.len();
-    let (responses, lat, wall) = Coordinator::run_batch(reqs, 3, EngineKind::Native);
-    assert_eq!(responses.len(), total);
-    assert!(wall > 0.0);
-    assert_eq!(lat.count(), total);
-    for r in &responses {
+    let batch = Coordinator::builder()
+        .workers(3)
+        .engine(EngineKind::Native)
+        .run_batch(reqs)
+        .expect("workers alive");
+    assert_eq!(batch.responses.len(), total);
+    assert!(batch.wall_secs > 0.0);
+    assert_eq!(batch.latency.count(), total);
+    for r in &batch.responses {
         assert!(r.gap <= 1e-8, "req {}: gap {}", r.id, r.gap);
         assert!(
             r.kkt_violation < 1e-3 * r.lam.max(1.0),
@@ -58,9 +62,13 @@ fn full_stack_pjrt_end_to_end() {
         reqs.extend(path_requests(200 + d, d, 3, 1e-2));
     }
     let total = reqs.len();
-    let (responses, _lat, _wall) = Coordinator::run_batch(reqs, 2, EngineKind::Pjrt);
-    assert_eq!(responses.len(), total);
-    for r in &responses {
+    let batch = Coordinator::builder()
+        .workers(2)
+        .engine(EngineKind::Pjrt)
+        .run_batch(reqs)
+        .expect("workers alive");
+    assert_eq!(batch.responses.len(), total);
+    for r in &batch.responses {
         // coordinator certifies in f64 regardless of engine; f32 path
         // solutions are near-optimal: relative KKT violation small
         assert!(
@@ -77,7 +85,7 @@ fn full_stack_pjrt_end_to_end() {
 fn responses_preserve_request_ids() {
     let reqs = path_requests(300, 9, 5, 1e-6);
     let ids: std::collections::HashSet<u64> = reqs.iter().map(|r| r.id).collect();
-    let (responses, _, _) = Coordinator::run_batch(reqs, 2, EngineKind::Native);
-    let got: std::collections::HashSet<u64> = responses.iter().map(|r| r.id).collect();
+    let batch = Coordinator::builder().workers(2).run_batch(reqs).expect("workers alive");
+    let got: std::collections::HashSet<u64> = batch.responses.iter().map(|r| r.id).collect();
     assert_eq!(ids, got);
 }

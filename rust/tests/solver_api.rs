@@ -1,0 +1,302 @@
+//! Integration tests of the unified `Solver` API: λ-path parity with
+//! independent solves, bitwise equivalence of the coordinator's path
+//! batching with a manual SAIF warm chain, end-to-end serving of the
+//! homotopy/fused/group adapters, dead-worker error surfacing, and the
+//! standardized dense-vs-sparse (implicit centering) solve parity.
+
+mod common;
+
+use std::sync::Arc;
+
+use saif::cm::NativeEngine;
+use saif::coordinator::{Coordinator, CoordinatorError, SolveRequest};
+use saif::data::{standardize, standardize_design, synth, Dataset};
+use saif::linalg::CscMat;
+use saif::model::{LossKind, Problem};
+use saif::solver::{make, Method, SolveSpec, Solver};
+
+fn objective(prob: &Problem, beta: &[(usize, f64)], lam: f64) -> f64 {
+    let u = prob.margins_sparse(beta);
+    let l1: f64 = beta.iter().map(|(_, b)| b.abs()).sum();
+    prob.primal_from_margins(&u, l1, lam)
+}
+
+/// The dense/sparse × ls/logistic problem quartet.
+fn parity_problems() -> Vec<(&'static str, Problem)> {
+    let sparse_logistic = {
+        let ds = synth::gisette_like(40, 70, 11);
+        let sp = CscMat::from_dense(ds.x.as_dense());
+        Problem::new(sp, ds.y, ds.loss)
+    };
+    vec![
+        ("dense-ls", synth::synth_linear(40, 120, 21).problem()),
+        ("sparse-ls", synth::synth_sparse(40, 200, 0.08, 23).problem()),
+        ("dense-logistic", synth::gisette_like(40, 60, 25).problem()),
+        ("sparse-logistic", sparse_logistic),
+    ]
+}
+
+/// `path(&grid)` must match independent per-λ `solve` calls: identical
+/// support and primal objective within 1e-10 (+ the two solves'
+/// certified gaps — |P(β) − P(β')| ≤ gap + gap' always holds at a
+/// shared optimum, so the bound is tight, not slack). Dynamic
+/// screening and BLITZ ignore warm seeds, so for them the match is
+/// bitwise by construction; for SAIF it is the safe-screening
+/// guarantee (the warm-chained active set converges to the same
+/// optimum as the cold one).
+#[test]
+fn path_matches_independent_solves_for_safe_methods() {
+    // 1e-11: tight enough that the gap terms keep the objective bound
+    // at ~1e-10 scale, loose enough that BLITZ (no stall detector)
+    // cannot spin on an f64 gap floor
+    let eps = 1e-11;
+    for (name, prob) in parity_problems() {
+        let lam_max = prob.lambda_max();
+        let grid: Vec<f64> = [0.5, 0.25, 0.12, 0.06].iter().map(|f| lam_max * f).collect();
+        for method in [Method::Saif, Method::DynScreen, Method::Blitz] {
+            let spec = SolveSpec { eps, ..Default::default() };
+            let mut eng = NativeEngine::new();
+            let path = make(method, &mut eng, &spec).path(&prob, &grid);
+            assert_eq!(path.points.len(), grid.len());
+            for (k, &lam) in grid.iter().enumerate() {
+                let mut eng2 = NativeEngine::new();
+                let solo = make(method, &mut eng2, &spec).solve(&prob, lam);
+                let p_path = &path.points[k];
+                common::check_supports_match(
+                    &p_path.beta,
+                    &solo.beta,
+                    common::SUPPORT_TOL,
+                    &format!("{name}/{:?} λ#{k}", method),
+                )
+                .unwrap();
+                let (oa, ob) = (objective(&prob, &p_path.beta, lam), objective(&prob, &solo.beta, lam));
+                let tol = 1e-10 * oa.abs().max(1.0) + p_path.gap + solo.gap;
+                assert!(
+                    (oa - ob).abs() <= tol,
+                    "{name}/{:?} λ#{k}: path obj {oa} vs solo {ob} (tol {tol:e})",
+                    method
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance criterion: the coordinator's λ-descending batch for
+/// `Method::Saif` is BITWISE identical to a manual `Solver::path` on
+/// the same grid — the warm-start cache and path batching moved behind
+/// `path()` without changing a single bit of the trajectory.
+#[test]
+fn coordinator_saif_batch_is_bitwise_a_path_session() {
+    let ds = synth::synth_linear(60, 500, 31);
+    let prob = Arc::new(ds.problem());
+    let lam_max = prob.lambda_max();
+    let grid: Vec<f64> = (1..=6).map(|k| lam_max * (3e-2f64).powf(k as f64 / 6.0)).collect();
+    let spec = SolveSpec { eps: 1e-9, ..Default::default() };
+
+    let mut eng = NativeEngine::new();
+    let manual = make(Method::Saif, &mut eng, &spec).path(&prob, &grid);
+
+    let reqs: Vec<SolveRequest> = grid
+        .iter()
+        .enumerate()
+        .map(|(i, &lam)| SolveRequest {
+            id: i as u64,
+            dataset_key: 1,
+            problem: prob.clone(),
+            lam,
+            method: Method::Saif,
+            spec: spec.clone(),
+        })
+        .collect();
+    let batch = Coordinator::builder().workers(1).run_batch(reqs).expect("workers alive");
+    assert_eq!(batch.responses.len(), grid.len());
+    let mut responses = batch.responses;
+    responses.sort_by_key(|r| r.id);
+    for (k, r) in responses.iter().enumerate() {
+        assert_eq!(
+            r.beta, manual.points[k].beta,
+            "λ#{k}: coordinator β differs from path session"
+        );
+        assert_eq!(r.gap, manual.points[k].gap, "λ#{k}: gap differs");
+        assert_eq!(r.warm_started, manual.points[k].warm_started);
+    }
+}
+
+/// The homotopy adapter's `path()` runs the native sequential
+/// strong-rule pass and reports the HONEST full-problem gap.
+#[test]
+fn homotopy_path_serves_and_reports_global_gap() {
+    let ds = synth::synth_linear(50, 120, 33);
+    let prob = ds.problem();
+    let lam_max = prob.lambda_max();
+    let grid: Vec<f64> = (1..=8).map(|k| lam_max * (0.8f64).powi(k)).collect();
+    let spec = SolveSpec { eps: 1e-9, ..Default::default() };
+    let mut eng = NativeEngine::new();
+    let path = make(Method::Homotopy, &mut eng, &spec).path(&prob, &grid);
+    assert_eq!(path.points.len(), grid.len());
+    assert!(!path.points[0].warm_started);
+    for (k, sol) in path.points.iter().enumerate() {
+        assert!(sol.gap.is_finite() && sol.gap >= 0.0, "λ#{k}: gap {}", sol.gap);
+        if k > 0 {
+            assert!(sol.warm_started, "λ#{k} should chain the path state");
+        }
+    }
+    // the unsafe method has no support-equality guarantee (Table 1);
+    // assert the repo's recall precedent against the exact solve
+    let mut eng2 = NativeEngine::new();
+    let exact = make(Method::Saif, &mut eng2, &spec).solve(&prob, *grid.last().unwrap());
+    let truth: Vec<usize> = common::support_sparse(&exact.beta, common::SUPPORT_TOL);
+    let found: Vec<usize> =
+        common::support_sparse(&path.points.last().unwrap().beta, common::SUPPORT_TOL);
+    let (recall, _) = saif::homotopy::recall_precision(&found, &truth);
+    assert!(recall > 0.6, "homotopy recall {recall}");
+}
+
+/// All six methods are servable: homotopy, fused (chain tree) and
+/// group (contiguous blocks) requests flow through the coordinator and
+/// come back with their method's own safety certificate.
+#[test]
+fn coordinator_serves_homotopy_fused_and_group() {
+    let ds = synth::synth_linear(50, 80, 35);
+    let prob = Arc::new(ds.problem());
+    let lam_max = prob.lambda_max();
+    let methods = [
+        (Method::Homotopy, 1u64),
+        (Method::Fused, 2u64),
+        (Method::Group { size: 4 }, 3u64),
+    ];
+    let mut reqs = Vec::new();
+    let mut id = 0;
+    for &(method, key) in &methods {
+        for f in [0.5, 0.35] {
+            reqs.push(SolveRequest {
+                id,
+                dataset_key: key, // per-method keys: no cross-method warm reuse
+                problem: prob.clone(),
+                lam: lam_max * f,
+                method,
+                spec: SolveSpec { eps: 1e-9, ..Default::default() },
+            });
+            id += 1;
+        }
+    }
+    let batch = Coordinator::builder().workers(2).run_batch(reqs).expect("workers alive");
+    assert_eq!(batch.responses.len(), 6);
+    for r in &batch.responses {
+        assert!(r.gap.is_finite());
+        assert!(
+            r.kkt_violation < 1e-2 * r.lam.max(1.0),
+            "req {} (dataset {}): certificate {:.3e} at λ={:.3e}",
+            r.id,
+            r.dataset_key,
+            r.kkt_violation,
+            r.lam
+        );
+    }
+}
+
+/// A worker that dies (here: the group solver's LS-only assert tripped
+/// by a logistic problem) surfaces as `CoordinatorError::WorkerDead`
+/// with the worker's id — instead of the old `expect`-panic in the
+/// caller.
+#[test]
+fn dead_worker_is_an_error_not_a_hang() {
+    let ds = synth::gisette_like(30, 40, 37);
+    let prob = Arc::new(ds.problem());
+    let lam = prob.lambda_max() * 0.5;
+    let mut c = Coordinator::builder().workers(1).build();
+    c.submit(SolveRequest {
+        id: 0,
+        dataset_key: 0,
+        problem: prob.clone(),
+        lam,
+        method: Method::Group { size: 4 }, // LS-only: panics on logistic
+        spec: SolveSpec::default(),
+    })
+    .expect("first submit reaches the live worker");
+    let err = c.drain().expect_err("drain must report the dead worker");
+    assert_eq!(err, CoordinatorError::WorkerDead { worker: 0 });
+    // the dead worker also rejects further submissions
+    let err2 = c
+        .submit(SolveRequest {
+            id: 1,
+            dataset_key: 0,
+            problem: prob,
+            lam,
+            method: Method::Saif,
+            spec: SolveSpec::default(),
+        })
+        .expect_err("submit to a dead worker must fail");
+    assert_eq!(err2, CoordinatorError::WorkerDead { worker: 0 });
+    c.shutdown();
+}
+
+/// Implicit centering end-to-end: a standardized sparse problem
+/// (CSC + rank-1 mean correction) solves to the same support and
+/// coefficients as the densely standardized copy.
+#[test]
+fn standardized_sparse_solve_matches_dense() {
+    // sparse design with structurally nonzero column means
+    let base = synth::synth_sparse(60, 300, 0.06, 41);
+    let spm = match &base.x {
+        saif::linalg::Design::Sparse(m) => m.clone(),
+        _ => unreachable!("synth_sparse is CSC"),
+    };
+    let mut dense = spm.to_dense();
+    let dstats = standardize(&mut dense);
+    let mut sparse_design: saif::linalg::Design = spm.into();
+    let sstats = standardize_design(&mut sparse_design);
+    assert!(sparse_design.is_centered());
+    for (d, s) in dstats.iter().zip(&sstats) {
+        assert!((d.0 - s.0).abs() < 1e-12 && (d.1 - s.1).abs() < 1e-10);
+    }
+
+    let dense_ds = Dataset {
+        name: "std-dense".into(),
+        x: dense.into(),
+        y: base.y.clone(),
+        loss: LossKind::Squared,
+        tree: None,
+    };
+    let sparse_ds = Dataset {
+        name: "std-sparse".into(),
+        x: sparse_design,
+        y: base.y.clone(),
+        loss: LossKind::Squared,
+        tree: None,
+    };
+    let (dp, sp) = (dense_ds.problem(), sparse_ds.problem());
+    assert!((dp.lambda_max() - sp.lambda_max()).abs() < 1e-9);
+
+    let lam = dp.lambda_max() * 0.15;
+    let spec = SolveSpec { eps: 1e-10, ..Default::default() };
+    let mut e1 = NativeEngine::new();
+    let a = make(Method::Saif, &mut e1, &spec).solve(&dp, lam);
+    let mut e2 = NativeEngine::new();
+    let b = make(Method::Saif, &mut e2, &spec).solve(&sp, lam);
+    common::assert_certificate(&dp, &a.beta, lam, a.gap, 1e-10);
+    common::assert_certificate(&sp, &b.beta, lam, b.gap, 1e-10);
+    common::check_supports_match(&a.beta, &b.beta, common::SUPPORT_TOL, "std dense vs sparse")
+        .unwrap();
+    let mut bmap = vec![0.0; sp.p()];
+    for &(i, v) in &b.beta {
+        bmap[i] = v;
+    }
+    common::check_coeffs_match(&a.beta, &bmap, 1e-7, 1e-6).unwrap();
+}
+
+/// The per-request `SolveSpec` is honored through `path()`: a trace
+/// request returns trace events, a loose ε stops earlier than a tight
+/// one.
+#[test]
+fn spec_trace_and_eps_flow_through_path() {
+    let prob = synth::synth_linear(40, 200, 43).problem();
+    let lam = prob.lambda_max() * 0.2;
+    let spec = SolveSpec { eps: 1e-8, trace: true, ..Default::default() };
+    let mut eng = NativeEngine::new();
+    let path = make(Method::Saif, &mut eng, &spec).path(&prob, &[lam, lam * 0.5]);
+    for sol in &path.points {
+        assert!(sol.gap <= 1e-8);
+        assert!(!sol.trace.is_empty(), "trace requested but empty");
+    }
+}
