@@ -8,12 +8,15 @@ cd "$(dirname "$0")/rust"
 
 cargo build --release
 
-# The suite runs twice so the parallel epoch + scan paths are tier-1:
-# SAIF_TEST_THREADS drives tests/common::test_parallelism() (serial vs
-# 4 scan threads, which FollowParallelism turns into 4 epoch shards on
-# wide active blocks).
+# The suite runs three times so the parallel epoch + scan paths are
+# tier-1 on BOTH threading substrates: SAIF_TEST_THREADS drives
+# tests/common::test_parallelism() (serial vs 4 scan threads, which
+# FollowParallelism turns into 4 epoch shards on wide active blocks),
+# and SAIF_TEST_POOL selects the persistent worker pool vs the scoped
+# spawn-per-call fallback for the threaded runs.
 SAIF_TEST_THREADS=1 cargo test -q
-SAIF_TEST_THREADS=4 cargo test -q
+SAIF_TEST_THREADS=4 SAIF_TEST_POOL=persistent cargo test -q
+SAIF_TEST_THREADS=4 SAIF_TEST_POOL=scoped cargo test -q
 
 if [[ "${SKIP_LINT:-0}" != "1" ]]; then
     cargo fmt --check

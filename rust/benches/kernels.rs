@@ -2,12 +2,14 @@
 //!
 //! * native dot/axpy (the CM inner loop) at the experiment sizes;
 //! * a native CM epoch and screening scan;
-//! * the sparse (CSC) vs dense scores scan, serial vs parallel, at
-//!   p = 10⁴ — recorded to BENCH_kernels.json;
+//! * the sparse (CSC) vs dense scores scan, serial vs parallel, and
+//!   the sharded epoch — each parallel row measured on both threading
+//!   substrates (spawn-per-call scoped vs the persistent worker pool)
+//!   at p = 10⁴ — recorded to BENCH_kernels.json;
 //! * the same operations through the PJRT artifacts — call overhead +
 //!   the packed-buffer cache effect.
 
-use saif::cm::{Engine, EpochShards, NativeEngine};
+use saif::cm::{Engine, EpochShards, NativeEngine, PoolMode};
 use saif::data::synth;
 use saif::linalg::{axpy, dot, Parallelism};
 use saif::metrics::Table;
@@ -114,12 +116,16 @@ fn main() {
         ]);
         bench_rec.set(&format!("{label}_serial_us"), Json::Num(s * 1e6));
 
+        // spawn-per-call scoped threads (the pre-pool dispatch) vs the
+        // persistent worker pool: same bits, different thread source —
+        // the delta is pure spawn/park overhead
         let mut par = NativeEngine::with_parallelism(Parallelism::Fixed(hw));
+        par.set_pool_mode(PoolMode::Scoped);
         let sp = bench_secs(0.3, 2_000, || {
             std::hint::black_box(par.scores(prob, &theta_big));
         });
         t.row(vec![
-            format!("scores {label} parallel x{hw}"),
+            format!("scores {label} scoped x{hw}"),
             p_big.to_string(),
             format!("{:.2}us", sp * 1e6),
             format!("speedup {:.2}x over serial", s / sp),
@@ -127,6 +133,21 @@ fn main() {
         bench_rec
             .set(&format!("{label}_parallel_us"), Json::Num(sp * 1e6))
             .set(&format!("{label}_parallel_speedup"), Json::Num(s / sp));
+
+        let mut pooled = NativeEngine::with_parallelism(Parallelism::Fixed(hw));
+        pooled.set_pool_mode(PoolMode::Persistent);
+        let spp = bench_secs(0.3, 2_000, || {
+            std::hint::black_box(pooled.scores(prob, &theta_big));
+        });
+        t.row(vec![
+            format!("scores {label} pooled x{hw}"),
+            p_big.to_string(),
+            format!("{:.2}us", spp * 1e6),
+            format!("{:.2}x over scoped", sp / spp),
+        ]);
+        bench_rec
+            .set(&format!("{label}_pooled_us"), Json::Num(spp * 1e6))
+            .set(&format!("{label}_pooled_over_scoped"), Json::Num(sp / spp));
     }
     bench_rec.set(
         "sparse_over_dense_serial_speedup",
@@ -154,11 +175,12 @@ fn main() {
     let mut beta_sh = vec![0.0; wide_active.len()];
     let mut epoch_sharded = NativeEngine::new();
     epoch_sharded.set_epoch_shards(EpochShards::Fixed(hw));
+    epoch_sharded.set_pool_mode(PoolMode::Scoped);
     let s_sh = bench_secs(0.3, 2_000, || {
         epoch_sharded.cm_eval(&dense_prob, &wide_active, &mut beta_sh, lam_big, 1);
     });
     t.row(vec![
-        format!("cm epoch sharded x{hw} (|A|={}, n={n_big})", wide_active.len()),
+        format!("cm epoch sharded x{hw} scoped (|A|={}, n={n_big})", wide_active.len()),
         wide_active.len().to_string(),
         format!("{:.2}us", s_sh * 1e6),
         format!("speedup {:.2}x over serial", s_ser / s_sh),
@@ -167,6 +189,25 @@ fn main() {
         .set("epoch_sharded_us", Json::Num(s_sh * 1e6))
         .set("epoch_shards", Json::Num(hw as f64))
         .set("epoch_shard_speedup", Json::Num(s_ser / s_sh));
+    // the per-epoch thread-spawn tax the persistent pool removes: the
+    // sharded epoch is dispatched thousands of times per solve, so
+    // this row is the one the pooled runtime exists for
+    let mut beta_pl = vec![0.0; wide_active.len()];
+    let mut epoch_pooled = NativeEngine::new();
+    epoch_pooled.set_epoch_shards(EpochShards::Fixed(hw));
+    epoch_pooled.set_pool_mode(PoolMode::Persistent);
+    let s_pl = bench_secs(0.3, 2_000, || {
+        epoch_pooled.cm_eval(&dense_prob, &wide_active, &mut beta_pl, lam_big, 1);
+    });
+    t.row(vec![
+        format!("cm epoch sharded x{hw} pooled (|A|={}, n={n_big})", wide_active.len()),
+        wide_active.len().to_string(),
+        format!("{:.2}us", s_pl * 1e6),
+        format!("{:.2}x over scoped", s_sh / s_pl),
+    ]);
+    bench_rec
+        .set("epoch_pooled_us", Json::Num(s_pl * 1e6))
+        .set("epoch_pooled_over_scoped", Json::Num(s_sh / s_pl));
 
     // --- λ-path sweep: 64 points, independent solves vs one
     // warm-chained `Solver::path` session (the Figure-6 trick behind

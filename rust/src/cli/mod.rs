@@ -6,6 +6,7 @@
 //!                  [--engine native|pjrt] [--eps 1e-6] [--seed 42]
 //!                  [--libsvm path --logistic [--dense]]
 //!                  [--threads serial|auto|N] [--epoch-shards auto|N]
+//!                  [--pool persistent|scoped]
 //! repro path       --dataset sim --lambdas 0.9:0.01:16 [--method saif]
 //!                  [--engine native|pjrt] [--eps 1e-6] [...]
 //! repro experiment --id fig2-sim [--out out]   (or --all)
@@ -26,12 +27,15 @@
 //! comparisons. `--threads` parallelizes the full-p screening scans;
 //! `--epoch-shards` shards the active-block CM epochs (default: follow
 //! `--threads` once the block is wide enough; a fixed N makes the
-//! solve trajectory bitwise reproducible across machines).
+//! solve trajectory bitwise reproducible across machines). `--pool`
+//! selects the threading substrate: the persistent worker pool
+//! (default, no thread spawns on the hot path) or scoped
+//! spawn-per-call — bitwise-identical results either way.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::cm::{Engine, EpochShards};
+use crate::cm::{Engine, EpochShards, PoolMode};
 use crate::coordinator::{Coordinator, EngineKind, SolveRequest};
 use crate::data;
 use crate::linalg::Parallelism;
@@ -123,18 +127,19 @@ fn valid_flags(cmd: &str) -> Option<Vec<&'static str>> {
             v.extend_from_slice(DATASET_FLAGS);
             v.extend_from_slice(&[
                 "lambda", "lambda-frac", "method", "engine", "eps", "threads", "epoch-shards",
+                "pool",
             ]);
         }
         "path" => {
             v.extend_from_slice(DATASET_FLAGS);
             v.extend_from_slice(&[
-                "lambdas", "method", "engine", "eps", "threads", "epoch-shards",
+                "lambdas", "method", "engine", "eps", "threads", "epoch-shards", "pool",
             ]);
         }
         "experiment" => v.extend_from_slice(&["id", "all", "out"]),
         "serve" => v.extend_from_slice(&[
             "workers", "datasets", "lambdas", "method", "engine", "eps", "threads",
-            "epoch-shards",
+            "epoch-shards", "pool",
         ]),
         "cv" => {
             v.extend_from_slice(DATASET_FLAGS);
@@ -184,6 +189,7 @@ USAGE:
                    [--engine native|pjrt] [--eps 1e-6] [--seed 42]
                    [--libsvm <path> [--logistic] [--dense]]
                    [--threads serial|auto|N] [--epoch-shards auto|N]
+                   [--pool persistent|scoped]
   repro path       --dataset <name> --lambdas a:b:k   warm-chained λ-path
                    [--method ...] [--engine ...] [--eps 1e-6] [...]
                    (k log-spaced λ from a·λ_max down to b·λ_max)
@@ -192,7 +198,7 @@ USAGE:
   repro serve      [--workers N] [--datasets D] [--lambdas L]
                    [--method ...] [--engine native|pjrt]
                    [--threads serial|auto|N] [--epoch-shards auto|N]
-                                              coordinator demo workload
+                   [--pool persistent|scoped]  coordinator demo workload
   repro cv         --dataset <name> [--folds 5] [--lambdas 20]
                    [--workers 4]              k-fold CV λ selection
   repro list                                  datasets + experiment ids
@@ -209,6 +215,11 @@ USAGE:
   deterministic residual merge). Default 'auto' follows --threads once
   the active block is wide enough; a fixed N pins the shard count so
   the solve trajectory is bitwise reproducible across machines.
+  --pool selects where those threads come from: 'persistent' (default)
+  runs scans, epoch shards and coordinator workers on one long-lived
+  worker pool (zero thread spawns on the solve hot path); 'scoped'
+  spawns per call, the pre-pool behavior. Results are bitwise
+  identical under both.
 ";
 
 fn cmd_list() -> i32 {
@@ -245,6 +256,14 @@ fn epoch_shards_arg(args: &Args) -> Result<EpochShards, String> {
         Some(s) => {
             EpochShards::parse(s).ok_or_else(|| format!("bad --epoch-shards value '{s}'"))
         }
+    }
+}
+
+fn pool_arg(args: &Args) -> Result<PoolMode, String> {
+    match args.get("pool") {
+        None => Ok(PoolMode::default()),
+        Some(s) => PoolMode::parse(s)
+            .ok_or_else(|| format!("bad --pool value '{s}' (persistent|scoped)")),
     }
 }
 
@@ -318,6 +337,7 @@ fn with_solver<R>(
     };
     engine.set_parallelism(spec.parallelism.unwrap_or(Parallelism::Serial));
     engine.set_epoch_shards(spec.epoch_shards.unwrap_or(EpochShards::FollowParallelism));
+    engine.set_pool_mode(spec.pool.unwrap_or_default());
     let mut solver = crate::solver::make_with_tree(method, engine, spec, ds.tree.as_deref());
     Ok(f(&mut *solver))
 }
@@ -340,6 +360,7 @@ fn solve_spec(args: &Args) -> Result<SolveSpec, String> {
         eps: args.get_f64("eps", 1e-6),
         parallelism: Some(parallelism_arg(args)?),
         epoch_shards: Some(epoch_shards_arg(args)?),
+        pool: Some(pool_arg(args)?),
         ..Default::default()
     })
 }
@@ -535,10 +556,18 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    let pool = match pool_arg(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
 
     println!(
-        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={}, scan threads={par:?}, epoch shards={shards:?}",
-        method.name()
+        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={}, scan threads={par:?}, epoch shards={shards:?}, pool={}",
+        method.name(),
+        pool.name()
     );
     let mut reqs = Vec::new();
     let mut id = 0u64;
@@ -553,6 +582,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 problem: prob.clone(),
                 lam: lam_max * (1e-2f64).powf(k as f64 / n_lambdas as f64),
                 method,
+                tree: None,
                 spec: SolveSpec { eps, ..Default::default() },
             });
             id += 1;
@@ -564,6 +594,7 @@ fn cmd_serve(args: &Args) -> i32 {
         .engine(engine)
         .parallelism(par)
         .epoch_shards(shards)
+        .pool(pool)
         .run_batch(reqs)
     {
         Ok(b) => b,
@@ -685,6 +716,22 @@ mod tests {
         assert!(parse_lambda_grid("0.5:0.1:0", 1.0).is_err()); // k = 0
         assert!(parse_lambda_grid("0.5:0.1", 1.0).is_err());
         assert!(parse_lambda_grid("x:0.1:4", 1.0).is_err());
+    }
+
+    #[test]
+    fn pool_arg_parses_and_rejects() {
+        let a = Args::parse(&argv(&["solve", "--pool", "scoped"]));
+        assert_eq!(pool_arg(&a).unwrap(), PoolMode::Scoped);
+        let a = Args::parse(&argv(&["solve", "--pool", "persistent"]));
+        assert_eq!(pool_arg(&a).unwrap(), PoolMode::Persistent);
+        let a = Args::parse(&argv(&["solve"]));
+        assert_eq!(pool_arg(&a).unwrap(), PoolMode::default());
+        let a = Args::parse(&argv(&["solve", "--pool", "rayon"]));
+        assert!(pool_arg(&a).is_err());
+        // and the flag is in the allowlists that accept it
+        for cmd in ["solve", "path", "serve"] {
+            assert!(valid_flags(cmd).unwrap().contains(&"pool"), "{cmd}");
+        }
     }
 
     #[test]

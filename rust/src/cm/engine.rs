@@ -6,6 +6,7 @@
 
 use crate::linalg::Parallelism;
 use crate::model::Problem;
+pub use crate::runtime::pool::PoolMode;
 
 /// Sharding policy for the active-block CM epochs (the reduced-model
 /// solve — SAIF's hot path once |A| grows). The sharded epoch is
@@ -93,6 +94,18 @@ pub trait Engine {
     /// The engine's current epoch-sharding policy.
     fn epoch_shards(&self) -> EpochShards {
         EpochShards::Fixed(1)
+    }
+
+    /// Select the threading substrate (persistent pool vs scoped
+    /// spawn-per-call) for the engine's parallel scans and sharded
+    /// epochs. Default: a no-op — engines without native thread
+    /// dispatch ignore it.
+    fn set_pool_mode(&mut self, _mode: PoolMode) {}
+
+    /// The engine's current threading substrate, so solver-level full-p
+    /// scans can match the engine's setting (like [`Engine::parallelism`]).
+    fn pool_mode(&self) -> PoolMode {
+        PoolMode::default()
     }
 
     /// Backend name for logs/metrics.

@@ -8,7 +8,7 @@ pub mod engine;
 pub mod fista;
 pub mod native;
 
-pub use engine::{Engine, EpochShards, SubEval};
+pub use engine::{Engine, EpochShards, PoolMode, SubEval};
 pub use fista::FistaEngine;
 pub use native::NativeEngine;
 

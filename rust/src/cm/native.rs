@@ -11,19 +11,24 @@
 
 use crate::linalg::{ops::soft_threshold, Parallelism};
 use crate::model::{LossKind, Problem};
+use crate::runtime::pool::{self, PoolMode};
 
 use super::engine::{Engine, EpochShards, SubEval};
 
 /// Pure-rust engine. Stateless between calls apart from scratch
 /// buffers (margins/residual), which are reused to keep the outer loop
-/// allocation-free, plus the scan parallelism and epoch-sharding
-/// policies.
+/// allocation-free, plus the scan parallelism, epoch-sharding and
+/// pool-substrate policies.
 #[derive(Debug, Default)]
 pub struct NativeEngine {
     scratch_u: Vec<f64>,
     scratch_fp: Vec<f64>,
     par: Parallelism,
     epoch_shards: EpochShards,
+    /// Threading substrate for scans + sharded epochs: the persistent
+    /// worker pool by default (no per-epoch thread spawns on the solve
+    /// hot path), or scoped spawn-per-call as the fallback.
+    pool: PoolMode,
 }
 
 /// One coordinate move proposed by a shard: position `a` in the active
@@ -183,6 +188,7 @@ impl NativeEngine {
         fp: &mut [f64],
         lam: f64,
         shards: usize,
+        mode: PoolMode,
     ) {
         let serial = |beta: &mut [f64], state: &mut [f64], fp: &mut [f64]| match prob.loss {
             LossKind::Squared => Self::epoch_ls(prob, active, sweep, beta, state, lam),
@@ -194,7 +200,7 @@ impl NativeEngine {
             serial(beta, state, fp);
             return;
         }
-        let moves = Self::shard_moves(prob, active, sweep, beta, state, lam, shards);
+        let moves = Self::shard_moves(prob, active, sweep, beta, state, lam, shards, mode);
         if !Self::merge_moves(prob, active, &moves, beta, state, lam) {
             serial(beta, state, fp);
         }
@@ -204,6 +210,13 @@ impl NativeEngine {
     /// logistic margins) and collect each shard's proposed moves, in
     /// shard order. Every sweep position is visited by exactly one
     /// shard, so each position appears in at most one move.
+    ///
+    /// Dispatches on `runtime::pool` (per `mode`): shard s is task s,
+    /// and results come back in task order, so the merged state is the
+    /// same bits as the old spawn-per-epoch `std::thread::scope` path —
+    /// for any pool size. A shard panic propagates to the caller (as it
+    /// did under scoped join) but never takes a pool thread with it.
+    #[allow(clippy::too_many_arguments)]
     fn shard_moves(
         prob: &Problem,
         active: &[usize],
@@ -212,32 +225,24 @@ impl NativeEngine {
         state: &[f64],
         lam: f64,
         shards: usize,
+        mode: PoolMode,
     ) -> Vec<Vec<ShardMove>> {
         let chunk = sweep.len().div_ceil(shards);
-        std::thread::scope(|s| {
-            let handles: Vec<_> = sweep
-                .chunks(chunk)
-                .map(|shard_sweep| {
-                    s.spawn(move || match prob.loss {
-                        LossKind::Squared => {
-                            Self::shard_pass_ls(prob, active, shard_sweep, beta, state, lam)
-                        }
-                        LossKind::Logistic => Self::shard_pass_logistic(
-                            prob,
-                            active,
-                            shard_sweep,
-                            beta,
-                            state,
-                            lam,
-                        ),
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("epoch shard panicked"))
-                .collect()
+        let n_chunks = sweep.len().div_ceil(chunk);
+        pool::run_ordered_mode(mode, n_chunks, |s| {
+            let start = s * chunk;
+            let end = ((s + 1) * chunk).min(sweep.len());
+            let shard_sweep = &sweep[start..end];
+            match prob.loss {
+                LossKind::Squared => {
+                    Self::shard_pass_ls(prob, active, shard_sweep, beta, state, lam)
+                }
+                LossKind::Logistic => {
+                    Self::shard_pass_logistic(prob, active, shard_sweep, beta, state, lam)
+                }
+            }
         })
+        .unwrap_or_else(|e| panic!("epoch shard panicked: {e}"))
     }
 
     /// Gauss–Seidel pass of one LS shard on a private residual copy.
@@ -392,7 +397,9 @@ impl Engine for NativeEngine {
                     let mut r = std::mem::take(&mut self.scratch_u);
                     let mut fp = std::mem::take(&mut self.scratch_fp);
                     let sh = self.effective_epoch_shards(full.len());
-                    Self::epoch_dispatch(prob, active, &full, beta, &mut r, &mut fp, lam, sh);
+                    Self::epoch_dispatch(
+                        prob, active, &full, beta, &mut r, &mut fp, lam, sh, self.pool,
+                    );
                     done += 1;
                     let sup = support(beta);
                     if sup.len() < active.len() {
@@ -401,7 +408,7 @@ impl Engine for NativeEngine {
                         let sh = self.effective_epoch_shards(sup.len());
                         for _ in 0..3usize.min(k.saturating_sub(done)) {
                             Self::epoch_dispatch(
-                                prob, active, &sup, beta, &mut r, &mut fp, lam, sh,
+                                prob, active, &sup, beta, &mut r, &mut fp, lam, sh, self.pool,
                             );
                             done += 1;
                         }
@@ -421,14 +428,16 @@ impl Engine for NativeEngine {
                     let mut u = std::mem::take(&mut self.scratch_u);
                     let mut fp = std::mem::take(&mut self.scratch_fp);
                     let sh = self.effective_epoch_shards(full.len());
-                    Self::epoch_dispatch(prob, active, &full, beta, &mut u, &mut fp, lam, sh);
+                    Self::epoch_dispatch(
+                        prob, active, &full, beta, &mut u, &mut fp, lam, sh, self.pool,
+                    );
                     done += 1;
                     let sup = support(beta);
                     if sup.len() < active.len() {
                         let sh = self.effective_epoch_shards(sup.len());
                         for _ in 0..3usize.min(k.saturating_sub(done)) {
                             Self::epoch_dispatch(
-                                prob, active, &sup, beta, &mut u, &mut fp, lam, sh,
+                                prob, active, &sup, beta, &mut u, &mut fp, lam, sh, self.pool,
                             );
                             done += 1;
                         }
@@ -467,7 +476,7 @@ impl Engine for NativeEngine {
 
     fn scores(&mut self, prob: &Problem, theta: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; prob.p()];
-        prob.x.mul_t_vec_par(theta, &mut out, self.par);
+        prob.x.mul_t_vec_pool(theta, &mut out, self.par, self.pool);
         for v in out.iter_mut() {
             *v = v.abs();
         }
@@ -494,6 +503,14 @@ impl Engine for NativeEngine {
 
     fn epoch_shards(&self) -> EpochShards {
         self.epoch_shards
+    }
+
+    fn set_pool_mode(&mut self, mode: PoolMode) {
+        self.pool = mode;
+    }
+
+    fn pool_mode(&self) -> PoolMode {
+        self.pool
     }
 
     fn name(&self) -> &'static str {
@@ -633,6 +650,30 @@ mod tests {
                     ref_eval.primal
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pooled_epochs_are_bitwise_scoped_epochs() {
+        // the pool refactor must not change a single bit: for a fixed
+        // shard count, persistent-pool and scoped dispatch produce the
+        // same trajectory
+        for ds in [synth::synth_linear(30, 300, 27), synth::gisette_like(30, 300, 28)] {
+            let prob = ds.problem();
+            let lam = prob.lambda_max() * 0.1;
+            let active: Vec<usize> = (0..prob.p()).collect();
+            let run = |mode: PoolMode| {
+                let mut b = vec![0.0; prob.p()];
+                let mut eng = NativeEngine::new();
+                eng.set_epoch_shards(EpochShards::Fixed(3));
+                eng.set_pool_mode(mode);
+                let e = eng.cm_eval(&prob, &active, &mut b, lam, 15);
+                (b, e.primal)
+            };
+            let (b_pool, p_pool) = run(PoolMode::Persistent);
+            let (b_scope, p_scope) = run(PoolMode::Scoped);
+            assert_eq!(b_pool, b_scope, "pooled epoch diverged from scoped");
+            assert_eq!(p_pool.to_bits(), p_scope.to_bits());
         }
     }
 

@@ -5,7 +5,7 @@
 //! once (§5.3 of the paper is exactly this workload). The coordinator
 //! turns the solvers into a service:
 //!
-//! * a dispatcher routes requests over worker threads with
+//! * a dispatcher routes requests over **logical workers** with
 //!   **dataset affinity** — all requests touching a dataset land on
 //!   the same worker so its warm-start cache (last solution per
 //!   (dataset, method), valid for the next smaller λ) and its packed
@@ -21,27 +21,39 @@
 //!   group-norm or fused-transform conditions), checked by the
 //!   coordinator, not trusted from the solver's gap.
 //!
+//! Workers are NOT threads: each logical worker is a queue plus an
+//! engine/warm-cache slot, and draining a queue is a task on the
+//! shared persistent pool ([`crate::runtime::pool`]). The engines'
+//! parallel scans and sharded epochs fan out on the *same* pool (the
+//! caller-participation scheduling makes that nesting deadlock-free),
+//! so the whole serving stack runs on one fixed set of threads instead
+//! of one thread per worker plus fresh spawns per epoch. A panicking
+//! solve marks only its slot dead — surfaced by `submit`/`drain` as
+//! [`CoordinatorError::WorkerDead`] — and the pool threads survive.
+//!
 //! Construction goes through [`Coordinator::builder`]; method dispatch
 //! is a `Box<dyn Solver>` factory over [`Method`] (all six solve
 //! methods — saif, dynscreen, blitz, homotopy, fused, group — are
-//! servable), and per-request [`SolveSpec`]s can override the worker
-//! defaults. The pre-builder constructor/`run_batch` ladder survives
-//! as deprecated one-line shims.
+//! servable, and fused requests may carry their dataset's real feature
+//! tree in [`SolveRequest::tree`]), and per-request [`SolveSpec`]s can
+//! override the worker defaults.
 //!
-//! Implementation is std-thread + channels (no tokio in the vendored
-//! registry — DESIGN.md §4); workers own their engines.
+//! Implementation is std-sync + channels (no tokio in the vendored
+//! registry — DESIGN.md §4); workers own their engines behind slot
+//! mutexes.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::cm::{Engine, EpochShards, NativeEngine};
+use crate::cm::{Engine, EpochShards, NativeEngine, PoolMode};
 use crate::linalg::Parallelism;
 use crate::metrics::LatencyStats;
 use crate::model::Problem;
-use crate::runtime::PjrtEngine;
+use crate::runtime::{pool, PjrtEngine};
 pub use crate::solver::{Method, SolveSpec};
 use crate::util::Stopwatch;
 
@@ -53,8 +65,8 @@ pub enum EngineKind {
 }
 
 /// A solve request. `spec` carries the per-request solve knobs; its
-/// `parallelism`/`epoch_shards` (when `Some`) override the worker
-/// defaults configured at build time.
+/// `parallelism`/`epoch_shards`/`pool` (when `Some`) override the
+/// worker defaults configured at build time.
 #[derive(Debug, Clone)]
 pub struct SolveRequest {
     pub id: u64,
@@ -63,6 +75,11 @@ pub struct SolveRequest {
     pub problem: Arc<Problem>,
     pub lam: f64,
     pub method: Method,
+    /// Per-dataset feature tree for [`Method::Fused`] (edge list;
+    /// ignored by every other method). `None` serves the chain tree
+    /// 0−1−⋯−(p−1). The solve AND the response's safety certificate
+    /// both use this tree.
+    pub tree: Option<Arc<Vec<(usize, usize)>>>,
     pub spec: SolveSpec,
 }
 
@@ -85,8 +102,9 @@ pub struct SolveResponse {
 /// Why a coordinator call failed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CoordinatorError {
-    /// A worker thread died (e.g. a solver panicked on an invalid
-    /// request); its queued responses are lost.
+    /// A worker's solve task panicked (e.g. on an invalid request);
+    /// its queued requests are lost and its slot accepts no more work.
+    /// The pool threads themselves survive.
     WorkerDead { worker: usize },
 }
 
@@ -102,19 +120,14 @@ impl std::fmt::Display for CoordinatorError {
 
 impl std::error::Error for CoordinatorError {}
 
-enum Msg {
-    Work(SolveRequest),
-    Stop,
-}
-
-/// Builder for [`Coordinator`] — the one construction path (the old
-/// `new`/`with_parallelism`/`with_policy` ladder shims onto it).
+/// Builder for [`Coordinator`] — the one construction path.
 #[derive(Debug, Clone)]
 pub struct CoordinatorBuilder {
     n_workers: usize,
     engine: EngineKind,
     parallelism: Parallelism,
     epoch_shards: EpochShards,
+    pool: PoolMode,
 }
 
 impl Default for CoordinatorBuilder {
@@ -124,12 +137,15 @@ impl Default for CoordinatorBuilder {
             engine: EngineKind::Native,
             parallelism: Parallelism::Serial,
             epoch_shards: EpochShards::FollowParallelism,
+            pool: PoolMode::default(),
         }
     }
 }
 
 impl CoordinatorBuilder {
-    /// Worker thread count (default 4).
+    /// Logical worker count (default 4). The shared pool is grown to at
+    /// least this many threads so every worker's queue can drain
+    /// concurrently.
     pub fn workers(mut self, n: usize) -> Self {
         assert!(n >= 1, "coordinator needs at least one worker");
         self.n_workers = n;
@@ -159,26 +175,48 @@ impl CoordinatorBuilder {
         self
     }
 
-    /// Spawn the workers and return the running coordinator.
+    /// Default threading substrate for the engines' scans and sharded
+    /// epochs (default: the persistent pool). Per-request `SolveSpec`
+    /// overrides win. Worker queue-drain tasks always run on the
+    /// shared pool regardless — this only selects how solves fan out
+    /// *within* a worker.
+    pub fn pool(mut self, mode: PoolMode) -> Self {
+        self.pool = mode;
+        self
+    }
+
+    /// Set up the worker slots and return the running coordinator.
     pub fn build(self) -> Coordinator {
+        // one pool thread per logical worker, so queue-drain tasks
+        // never serialize behind each other
+        pool::shared().ensure_threads(self.n_workers);
         let (res_tx, res_rx) = channel::<SolveResponse>();
-        let mut senders = Vec::with_capacity(self.n_workers);
-        let mut handles = Vec::with_capacity(self.n_workers);
-        for w in 0..self.n_workers {
-            let (tx, rx) = channel::<Msg>();
-            let res_tx = res_tx.clone();
-            let (engine, par, shards) = (self.engine, self.parallelism, self.epoch_shards);
-            let handle = std::thread::Builder::new()
-                .name(format!("saif-worker-{w}"))
-                .spawn(move || worker_loop(w, engine, par, shards, rx, res_tx))
-                .expect("spawn worker");
-            senders.push(tx);
-            handles.push(handle);
-        }
+        let slots: Vec<Arc<WorkerSlot>> = (0..self.n_workers)
+            .map(|_| {
+                let mut native = NativeEngine::with_parallelism(self.parallelism);
+                native.set_epoch_shards(self.epoch_shards);
+                native.set_pool_mode(self.pool);
+                let pjrt = match self.engine {
+                    EngineKind::Pjrt => PjrtEngine::new().ok(),
+                    EngineKind::Native => None,
+                };
+                Arc::new(WorkerSlot {
+                    queue: Mutex::new(VecDeque::new()),
+                    scheduled: AtomicBool::new(false),
+                    dead: AtomicBool::new(false),
+                    state: Mutex::new(WorkerState {
+                        native,
+                        pjrt,
+                        warm: HashMap::new(),
+                        defaults: (self.parallelism, self.epoch_shards, self.pool),
+                    }),
+                })
+            })
+            .collect();
         Coordinator {
-            senders,
+            slots,
+            res_tx,
             results: res_rx,
-            handles,
             affinity: HashMap::new(),
             next_worker: 0,
             inflight: vec![0; self.n_workers],
@@ -211,11 +249,44 @@ pub struct BatchRun {
     pub wall_secs: f64,
 }
 
+/// One logical worker: its request queue, scheduling/liveness flags,
+/// and the solver state (engines + warm cache) that persists across
+/// pool tasks.
+struct WorkerSlot {
+    queue: Mutex<VecDeque<SolveRequest>>,
+    /// Whether a pool task is currently (or about to be) draining the
+    /// queue. At most one task runs per slot, so the engine state is
+    /// effectively single-threaded even though it lives on a pool.
+    scheduled: AtomicBool,
+    /// Set when a solve panicked; the slot accepts no further work.
+    dead: AtomicBool,
+    state: Mutex<WorkerState>,
+}
+
+struct WorkerState {
+    native: NativeEngine,
+    pjrt: Option<PjrtEngine>,
+    /// Warm-start cache: (dataset_key, method) → (λ of last solution,
+    /// solution). Keyed per method so a structured-penalty solution
+    /// (fused is piecewise-constant, not sparse) can never seed a
+    /// plain-LASSO session on the same dataset.
+    warm: HashMap<(u64, Method), (f64, Vec<(usize, f64)>)>,
+    /// Build-time (parallelism, epoch_shards, pool) defaults that
+    /// per-request `SolveSpec` overrides fall back to.
+    defaults: (Parallelism, EpochShards, PoolMode),
+}
+
+/// Forgiving lock: a poisoned mutex only ever belongs to a slot whose
+/// `dead` flag keeps it from being reused for solves.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// The coordinator.
 pub struct Coordinator {
-    senders: Vec<Sender<Msg>>,
+    slots: Vec<Arc<WorkerSlot>>,
+    res_tx: Sender<SolveResponse>,
     results: Receiver<SolveResponse>,
-    handles: Vec<JoinHandle<()>>,
     /// dataset_key → worker (sticky affinity)
     affinity: HashMap<u64, usize>,
     next_worker: usize,
@@ -229,19 +300,27 @@ impl Coordinator {
         CoordinatorBuilder::default()
     }
 
-    /// Submit a request (dataset-affine routing). Fails with the dead
-    /// worker's id if the affine worker's thread has died.
+    /// Submit a request (dataset-affine routing) and schedule a pool
+    /// task to drain the worker's queue if none is running. Fails with
+    /// the dead worker's id if the affine worker's slot has died.
     pub fn submit(&mut self, req: SolveRequest) -> Result<(), CoordinatorError> {
-        let n = self.senders.len();
+        let n = self.slots.len();
         let worker = *self.affinity.entry(req.dataset_key).or_insert_with(|| {
             let w = self.next_worker;
             self.next_worker = (self.next_worker + 1) % n;
             w
         });
-        self.senders[worker]
-            .send(Msg::Work(req))
-            .map_err(|_| CoordinatorError::WorkerDead { worker })?;
+        let slot = &self.slots[worker];
+        if slot.dead.load(Ordering::Acquire) {
+            return Err(CoordinatorError::WorkerDead { worker });
+        }
+        lock(&slot.queue).push_back(req);
         self.inflight[worker] += 1;
+        if !slot.scheduled.swap(true, Ordering::AcqRel) {
+            let slot = slot.clone();
+            let res_tx = self.res_tx.clone();
+            pool::shared().spawn(move || worker_task(worker, slot, res_tx));
+        }
         Ok(())
     }
 
@@ -259,10 +338,11 @@ impl Coordinator {
                     out.push(r);
                 }
                 Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                    // a worker still owing responses whose thread has
-                    // terminated can never answer: surface it
-                    let dead = (0..self.inflight.len())
-                        .find(|&w| self.inflight[w] > 0 && self.handles[w].is_finished());
+                    // a worker still owing responses whose task died
+                    // can never answer: surface it
+                    let dead = (0..self.inflight.len()).find(|&w| {
+                        self.inflight[w] > 0 && self.slots[w].dead.load(Ordering::Acquire)
+                    });
                     if let Some(worker) = dead {
                         self.inflight[worker] = 0;
                         return Err(CoordinatorError::WorkerDead { worker });
@@ -273,168 +353,64 @@ impl Coordinator {
         Ok(out)
     }
 
-    /// Stop workers and join.
-    pub fn shutdown(mut self) {
-        for tx in &self.senders {
-            let _ = tx.send(Msg::Stop);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-
-    // --- deprecated pre-builder constructor/batch ladder (shims) ---
-
-    /// Deprecated alias of `Coordinator::builder().workers(n).engine(e).build()`.
-    #[deprecated(note = "use Coordinator::builder()")]
-    pub fn new(n_workers: usize, engine: EngineKind) -> Coordinator {
-        Coordinator::builder().workers(n_workers).engine(engine).build()
-    }
-
-    /// Deprecated alias of the builder with `.parallelism(par)`.
-    #[deprecated(note = "use Coordinator::builder()")]
-    pub fn with_parallelism(
-        n_workers: usize,
-        engine: EngineKind,
-        par: Parallelism,
-    ) -> Coordinator {
-        Coordinator::builder().workers(n_workers).engine(engine).parallelism(par).build()
-    }
-
-    /// Deprecated alias of the builder with `.epoch_shards(shards)`.
-    #[deprecated(note = "use Coordinator::builder()")]
-    pub fn with_policy(
-        n_workers: usize,
-        engine: EngineKind,
-        par: Parallelism,
-        shards: EpochShards,
-    ) -> Coordinator {
-        Coordinator::builder()
-            .workers(n_workers)
-            .engine(engine)
-            .parallelism(par)
-            .epoch_shards(shards)
-            .build()
-    }
-
-    /// Deprecated alias of [`CoordinatorBuilder::run_batch`] (panics
-    /// if a worker dies, matching the old behavior).
-    #[deprecated(note = "use Coordinator::builder().run_batch(..)")]
-    pub fn run_batch(
-        requests: Vec<SolveRequest>,
-        n_workers: usize,
-        engine: EngineKind,
-    ) -> (Vec<SolveResponse>, LatencyStats, f64) {
-        let b = Coordinator::builder()
-            .workers(n_workers)
-            .engine(engine)
-            .run_batch(requests)
-            .expect("worker alive");
-        (b.responses, b.latency, b.wall_secs)
-    }
-
-    /// Deprecated alias of [`CoordinatorBuilder::run_batch`] with scan
-    /// parallelism.
-    #[deprecated(note = "use Coordinator::builder().run_batch(..)")]
-    pub fn run_batch_with(
-        requests: Vec<SolveRequest>,
-        n_workers: usize,
-        engine: EngineKind,
-        par: Parallelism,
-    ) -> (Vec<SolveResponse>, LatencyStats, f64) {
-        let b = Coordinator::builder()
-            .workers(n_workers)
-            .engine(engine)
-            .parallelism(par)
-            .run_batch(requests)
-            .expect("worker alive");
-        (b.responses, b.latency, b.wall_secs)
-    }
-
-    /// Deprecated alias of [`CoordinatorBuilder::run_batch`] with an
-    /// explicit epoch-sharding policy.
-    #[deprecated(note = "use Coordinator::builder().run_batch(..)")]
-    pub fn run_batch_with_policy(
-        requests: Vec<SolveRequest>,
-        n_workers: usize,
-        engine: EngineKind,
-        par: Parallelism,
-        shards: EpochShards,
-    ) -> (Vec<SolveResponse>, LatencyStats, f64) {
-        let b = Coordinator::builder()
-            .workers(n_workers)
-            .engine(engine)
-            .parallelism(par)
-            .epoch_shards(shards)
-            .run_batch(requests)
-            .expect("worker alive");
-        (b.responses, b.latency, b.wall_secs)
-    }
-}
-
-/// Worker: batches its queue, groups it into per-dataset λ-descending
-/// path sessions, and runs each through the unified solver API.
-fn worker_loop(
-    wid: usize,
-    engine_kind: EngineKind,
-    par: Parallelism,
-    shards: EpochShards,
-    rx: Receiver<Msg>,
-    res_tx: Sender<SolveResponse>,
-) {
-    let mut native = NativeEngine::with_parallelism(par);
-    native.set_epoch_shards(shards);
-    let mut pjrt: Option<PjrtEngine> = match engine_kind {
-        EngineKind::Pjrt => PjrtEngine::new().ok(),
-        EngineKind::Native => None,
-    };
-    // warm-start cache: (dataset_key, method) → (λ of last solution,
-    // solution). Keyed per method so a structured-penalty solution
-    // (fused is piecewise-constant, not sparse) can never seed a
-    // plain-LASSO session on the same dataset.
-    let mut warm: HashMap<(u64, Method), (f64, Vec<(usize, f64)>)> = HashMap::new();
-
-    loop {
-        // block for one message, then greedily drain the queue to batch
-        let first = match rx.recv() {
-            Ok(Msg::Work(r)) => r,
-            _ => return,
-        };
-        let mut batch = vec![first];
-        while let Ok(msg) = rx.try_recv() {
-            match msg {
-                Msg::Work(r) => batch.push(r),
-                Msg::Stop => {
-                    process_batch(
-                        wid, par, shards, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx,
-                    );
-                    return;
-                }
+    /// Wait for every live worker to go idle. There are no threads to
+    /// join — the pool outlives the coordinator — so this only ensures
+    /// no task still borrows the slots when they drop.
+    pub fn shutdown(self) {
+        for slot in &self.slots {
+            while !slot.dead.load(Ordering::Acquire)
+                && (slot.scheduled.load(Ordering::Acquire) || !lock(&slot.queue).is_empty())
+            {
+                std::thread::sleep(Duration::from_millis(1));
             }
         }
-        process_batch(wid, par, shards, &mut native, pjrt.as_mut(), &mut warm, batch, &res_tx);
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Pool task: drain one worker's queue, batch by batch, until it is
+/// empty. Exactly one task runs per slot (`scheduled` gates spawns);
+/// a panicking batch marks the slot dead and leaves `scheduled` set so
+/// nothing reuses the poisoned state.
+fn worker_task(wid: usize, slot: Arc<WorkerSlot>, res_tx: Sender<SolveResponse>) {
+    loop {
+        let batch: Vec<SolveRequest> = lock(&slot.queue).drain(..).collect();
+        if batch.is_empty() {
+            slot.scheduled.store(false, Ordering::Release);
+            // close the submit race: a request enqueued between the
+            // drain and the store above must not strand
+            if lock(&slot.queue).is_empty() || slot.scheduled.swap(true, Ordering::AcqRel) {
+                return;
+            }
+            continue;
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let mut state = lock(&slot.state);
+            process_batch(wid, &mut state, batch, &res_tx);
+        }));
+        if r.is_err() {
+            slot.dead.store(true, Ordering::Release);
+            return;
+        }
+    }
+}
+
+/// Batch its queue, group it into per-dataset λ-descending path
+/// sessions, and run each through the unified solver API.
 fn process_batch(
     wid: usize,
-    par: Parallelism,
-    shards: EpochShards,
-    native: &mut NativeEngine,
-    mut pjrt: Option<&mut PjrtEngine>,
-    warm: &mut HashMap<(u64, Method), (f64, Vec<(usize, f64)>)>,
+    state: &mut WorkerState,
     mut batch: Vec<SolveRequest>,
     res_tx: &Sender<SolveResponse>,
 ) {
+    let (par, shards, pool_mode) = state.defaults;
     // dataset-major, λ-descending order ⇒ warm starts chain down paths
     batch.sort_by(|a, b| {
         a.dataset_key
             .cmp(&b.dataset_key)
             .then(b.lam.total_cmp(&a.lam))
     });
-    // each maximal run with the same (dataset, problem, method, spec)
-    // is one λ-path session behind `Solver::path_warm`
+    // each maximal run with the same (dataset, problem, method, tree,
+    // spec) is one λ-path session behind `Solver::path_warm`
     let mut i = 0;
     while i < batch.len() {
         let mut j = i + 1;
@@ -442,6 +418,7 @@ fn process_batch(
             && batch[j].dataset_key == batch[i].dataset_key
             && Arc::ptr_eq(&batch[j].problem, &batch[i].problem)
             && batch[j].method == batch[i].method
+            && batch[j].tree == batch[i].tree
             && batch[j].spec == batch[i].spec
         {
             j += 1;
@@ -452,25 +429,28 @@ fn process_batch(
         let first = &chunk[0];
         let prob = &*first.problem;
         let spec = &first.spec;
-        let use_pjrt = match &pjrt {
+        let use_pjrt = match &state.pjrt {
             Some(e) => e.supports(prob, 1) && prob.offset.is_none(),
             None => false,
         };
         let engine: &mut dyn Engine = if use_pjrt {
-            *pjrt.as_mut().unwrap() as &mut dyn Engine
+            state.pjrt.as_mut().unwrap() as &mut dyn Engine
         } else {
-            native as &mut dyn Engine
+            &mut state.native as &mut dyn Engine
         };
         // per-request overrides over the worker defaults
         engine.set_parallelism(spec.parallelism.unwrap_or(par));
         engine.set_epoch_shards(spec.epoch_shards.unwrap_or(shards));
+        engine.set_pool_mode(spec.pool.unwrap_or(pool_mode));
 
         let lams: Vec<f64> = chunk.iter().map(|r| r.lam).collect();
-        let seed = warm
+        let seed = state
+            .warm
             .get(&(first.dataset_key, first.method))
             .filter(|(l, _)| *l >= first.lam)
             .map(|(_, b)| b.clone());
-        let mut solver = crate::solver::make(first.method, engine, spec);
+        let tree = first.tree.as_ref().map(|t| &t[..]);
+        let mut solver = crate::solver::make_with_tree(first.method, engine, spec, tree);
         let path = solver.path_warm(prob, &lams, seed.as_deref());
         for (req, sol) in chunk.iter().zip(&path.points) {
             // coordinator-side safety certificate, through the
@@ -488,8 +468,11 @@ fn process_batch(
                 warm_started: sol.warm_started,
             });
         }
+        drop(solver);
         if let (Some(req), Some(sol)) = (chunk.last(), path.points.last()) {
-            warm.insert((req.dataset_key, req.method), (req.lam, sol.beta.clone()));
+            state
+                .warm
+                .insert((req.dataset_key, req.method), (req.lam, sol.beta.clone()));
         }
     }
 }
@@ -515,6 +498,7 @@ mod tests {
                 problem: prob.clone(),
                 lam: lam_max * f,
                 method: Method::Saif,
+                tree: None,
                 spec: SolveSpec { eps: 1e-8, ..Default::default() },
             })
             .collect()
@@ -600,9 +584,36 @@ mod tests {
     }
 
     #[test]
+    fn scoped_pool_mode_matches_persistent_bitwise() {
+        // the builder's pool substrate must not change a bit of any
+        // response: same requests, both modes, identical solutions
+        let prob = Arc::new(synth::synth_linear(40, 400, 210).problem());
+        let solve = |mode: PoolMode| {
+            let reqs = requests_for(prob.clone(), 1, &[0.3, 0.15, 0.08], 0);
+            let (mut responses, _, _) = run(
+                reqs,
+                Coordinator::builder()
+                    .workers(1)
+                    .parallelism(Parallelism::Fixed(2))
+                    .epoch_shards(EpochShards::Fixed(2))
+                    .pool(mode),
+            );
+            responses.sort_by_key(|r| r.id);
+            responses
+        };
+        let (a, b) = (solve(PoolMode::Persistent), solve(PoolMode::Scoped));
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.beta, rb.beta, "req {}: pooled β ≠ scoped β", ra.id);
+            assert_eq!(ra.gap.to_bits(), rb.gap.to_bits());
+            assert_eq!(ra.kkt_violation.to_bits(), rb.kkt_violation.to_bits());
+        }
+    }
+
+    #[test]
     fn per_request_spec_overrides_worker_defaults() {
-        // a request pinning its own epoch-shard policy and ε solves
-        // and certifies on a serial-default coordinator
+        // a request pinning its own epoch-shard policy, pool substrate
+        // and ε solves and certifies on a serial-default coordinator
         let prob = Arc::new(synth::synth_linear(40, 300, 208).problem());
         let lam_max = prob.lambda_max();
         let reqs = vec![
@@ -612,10 +623,12 @@ mod tests {
                 problem: prob.clone(),
                 lam: lam_max * 0.2,
                 method: Method::Saif,
+                tree: None,
                 spec: SolveSpec {
                     eps: 1e-9,
                     parallelism: Some(Parallelism::Fixed(2)),
                     epoch_shards: Some(EpochShards::Fixed(2)),
+                    pool: Some(PoolMode::Scoped),
                     ..Default::default()
                 },
             },
@@ -625,6 +638,7 @@ mod tests {
                 problem: prob.clone(),
                 lam: lam_max * 0.1,
                 method: Method::Saif,
+                tree: None,
                 spec: SolveSpec { eps: 1e-8, ..Default::default() },
             },
         ];
@@ -658,8 +672,9 @@ mod tests {
         let p1 = Arc::new(synth::synth_linear(30, 150, 205).problem());
         let reqs = requests_for(p1, 1, &[0.5, 0.25, 0.1], 0);
         let (responses, _, _) = run(reqs, Coordinator::builder().workers(1));
-        // submitted together ⇒ one path session ⇒ all but the first
-        // warm-started
+        // whether the λs landed in one batch (one path session) or
+        // split across drain tasks (warm cache seeding), all but the
+        // first must warm-start
         let warm_count = responses.iter().filter(|r| r.warm_started).count();
         assert!(warm_count >= 2, "warm {warm_count}");
     }
@@ -677,6 +692,7 @@ mod tests {
                 problem: prob.clone(),
                 lam,
                 method: m,
+                tree: None,
                 spec: SolveSpec { eps: 1e-9, ..Default::default() },
             })
             .collect();
@@ -695,19 +711,21 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_work() {
+    fn submit_after_drain_reuses_the_idle_worker() {
+        // the schedule flag must re-arm once a queue drains: a second
+        // wave of requests on the same coordinator must still be served
         let prob = Arc::new(synth::synth_linear(30, 100, 209).problem());
-        let reqs = requests_for(prob, 1, &[0.3, 0.1], 0);
-        let (responses, lat, _) = Coordinator::run_batch(reqs, 2, EngineKind::Native);
-        assert_eq!(responses.len(), 2);
-        assert_eq!(lat.count(), 2);
-        let c = Coordinator::with_policy(
-            1,
-            EngineKind::Native,
-            Parallelism::Serial,
-            EpochShards::Fixed(1),
-        );
+        let mut c = Coordinator::builder().workers(2).build();
+        for r in requests_for(prob.clone(), 1, &[0.3, 0.1], 0) {
+            c.submit(r).unwrap();
+        }
+        assert_eq!(c.drain().unwrap().len(), 2);
+        for r in requests_for(prob, 1, &[0.05], 100) {
+            c.submit(r).unwrap();
+        }
+        let second = c.drain().unwrap();
+        assert_eq!(second.len(), 1);
+        assert!(second[0].warm_started, "second wave must hit the warm cache");
         c.shutdown();
     }
 }

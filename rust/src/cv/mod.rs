@@ -84,6 +84,7 @@ pub fn cross_validate(
                 problem: prob.clone(),
                 lam,
                 method: Method::Saif,
+                tree: None,
                 spec: SolveSpec { eps: 1e-6, ..Default::default() },
             });
             id += 1;

@@ -14,9 +14,11 @@
 //!   kernels for the numeric inner loop, AOT-lowered to HLO text.
 //! * **Runtime bridge** ([`runtime`]) — loads the AOT artifacts via the
 //!   PJRT CPU client (`xla` crate) so Python is never on the request
-//!   path. The native f64 engine ([`cm::NativeEngine`]) implements the
-//!   identical semantics for cross-checking and for sizes beyond the
-//!   artifact shape buckets.
+//!   path, and hosts [`runtime::pool`], the persistent deterministic
+//!   worker pool every parallel path (chunked scans, sharded epochs,
+//!   coordinator workers) dispatches through. The native f64 engine
+//!   ([`cm::NativeEngine`]) implements the identical semantics for
+//!   cross-checking and for sizes beyond the artifact shape buckets.
 //!
 //! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
 //! the paper-vs-measured reproduction record.

@@ -9,8 +9,13 @@
 //!
 //! The two O(n·p) (dense) / O(nnz) (sparse) hot paths — the full-p
 //! screening scan and `mul_t_vec` — are parallelizable over column
-//! chunks via [`Parallelism`] and `std::thread::scope` (the vendored
-//! registry has no rayon).
+//! chunks via [`Parallelism`] (the vendored registry has no rayon).
+//! Chunked scans dispatch through [`crate::runtime::pool`]: the
+//! persistent worker pool by default, or spawn-per-call
+//! `std::thread::scope` under [`PoolMode::Scoped`] — both bitwise
+//! identical to the serial scan.
+
+use crate::runtime::pool::{self, PoolMode};
 
 use super::mat::Mat;
 use super::sparse::CscMat;
@@ -354,11 +359,21 @@ impl Design {
         }
     }
 
-    /// out = Xᵀ v, chunked over columns across `par.threads()` scoped
-    /// threads. Each thread owns a disjoint slice of `out`, so results
-    /// are bitwise identical to the serial scan (per-column reduction
-    /// order is unchanged).
+    /// out = Xᵀ v, chunked over columns across `par.threads()` workers
+    /// of the spawn-per-call scoped substrate — kept as the
+    /// compatibility spelling of [`Design::mul_t_vec_pool`] with
+    /// [`PoolMode::Scoped`].
     pub fn mul_t_vec_par(&self, v: &[f64], out: &mut [f64], par: Parallelism) {
+        self.mul_t_vec_pool(v, out, par, PoolMode::Scoped)
+    }
+
+    /// out = Xᵀ v, chunked over columns into `par.threads()` tasks on
+    /// the substrate `mode` selects (the persistent pool, or scoped
+    /// spawn-per-call). Each task computes a disjoint column chunk with
+    /// the per-column reduction order unchanged, and chunks are folded
+    /// back in task order, so the result is bitwise identical to the
+    /// serial scan — under either mode, for any pool size.
+    pub fn mul_t_vec_pool(&self, v: &[f64], out: &mut [f64], par: Parallelism, mode: PoolMode) {
         assert_eq!(v.len(), self.n_rows());
         assert_eq!(out.len(), self.n_cols());
         let threads = par.threads(self.n_cols());
@@ -371,16 +386,21 @@ impl Design {
             _ => 0.0,
         };
         let chunk = out.len().div_ceil(threads);
-        std::thread::scope(|s| {
-            for (c, out_chunk) in out.chunks_mut(chunk).enumerate() {
-                let start = c * chunk;
-                s.spawn(move || {
-                    for (k, o) in out_chunk.iter_mut().enumerate() {
-                        *o = self.col_dot_presum(start + k, v, sv);
-                    }
-                });
+        // pre-split `out` into disjoint chunks; task c writes chunk c
+        // in place (zero-copy, like the pre-pool scoped code). The
+        // per-chunk Mutex is uncontended — run_ordered hands index c
+        // to exactly one task — it only carries the &mut across the
+        // dispatch boundary.
+        let chunks: Vec<std::sync::Mutex<&mut [f64]>> =
+            out.chunks_mut(chunk).map(std::sync::Mutex::new).collect();
+        pool::run_ordered_mode(mode, chunks.len(), |c| {
+            let mut part = chunks[c].lock().unwrap();
+            let start = c * chunk;
+            for (k, o) in part.iter_mut().enumerate() {
+                *o = self.col_dot_presum(start + k, v, sv);
             }
-        });
+        })
+        .unwrap_or_else(|e| panic!("parallel scan: {e}"));
     }
 
     /// Squared norms of all columns. The centered backend expands
@@ -685,6 +705,27 @@ mod tests {
                 for i in 0..n {
                     assert!((td.get(i, j) - dn.get(i, j)).abs() < 1e-12);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_scan_is_bitwise_serial_and_scoped() {
+        let mut rng = Rng::new(84);
+        let (n, p) = (30, 500);
+        let (sp, dn) = random_pair(&mut rng, n, p);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        for design in [&sp, &dn] {
+            let mut serial = vec![0.0; p];
+            design.mul_t_vec(&v, &mut serial);
+            for threads in [2, 3, 7, 64] {
+                let par = Parallelism::Fixed(threads);
+                let mut pooled = vec![0.0; p];
+                design.mul_t_vec_pool(&v, &mut pooled, par, PoolMode::Persistent);
+                assert_eq!(serial, pooled, "pooled threads={threads}");
+                let mut scoped = vec![0.0; p];
+                design.mul_t_vec_pool(&v, &mut scoped, par, PoolMode::Scoped);
+                assert_eq!(serial, scoped, "scoped threads={threads}");
             }
         }
     }

@@ -13,8 +13,9 @@
 //! are unreachable in f32); the PJRT engine is f32 and is cross-checked
 //! against this one at looser tolerance.
 //!
-//! Full-p scans (`Design::mul_t_vec_par`) can be chunked over columns
-//! across scoped threads via [`Parallelism`].
+//! Full-p scans (`Design::mul_t_vec_pool`) can be chunked over columns
+//! via [`Parallelism`], dispatched on the persistent worker pool
+//! (`runtime::pool`) or on spawn-per-call scoped threads.
 
 pub mod design;
 pub mod mat;

@@ -1,6 +1,7 @@
 //! The LASSO problem container and its primal/dual machinery.
 
 use crate::linalg::{dot, Design, Parallelism};
+use crate::runtime::pool::PoolMode;
 
 use super::loss::LossKind;
 
@@ -87,11 +88,19 @@ impl Problem {
     }
 
     /// Initial correlations via a parallel full-p scan (one |Xᵀ f'(0)|
-    /// pass — the first of SAIF's O(n·p) costs).
+    /// pass — the first of SAIF's O(n·p) costs), on the scoped
+    /// substrate.
     pub fn init_corrs_par(&self, par: Parallelism) -> Vec<f64> {
+        self.init_corrs_pool(par, PoolMode::Scoped)
+    }
+
+    /// [`Problem::init_corrs_par`] with an explicit threading substrate
+    /// (the solver hot path passes the engine's pool mode, so the scan
+    /// runs on the persistent pool by default).
+    pub fn init_corrs_pool(&self, par: Parallelism, mode: PoolMode) -> Vec<f64> {
         let d0 = self.neg_deriv_at_zero();
         let mut out = vec![0.0; self.p()];
-        self.x.mul_t_vec_par(&d0, &mut out, par);
+        self.x.mul_t_vec_pool(&d0, &mut out, par, mode);
         for v in out.iter_mut() {
             *v = v.abs();
         }

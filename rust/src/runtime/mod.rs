@@ -1,7 +1,9 @@
 //! Runtime bridge: load the AOT-compiled JAX/Pallas artifacts (HLO
 //! text, see python/compile/aot.py) through the PJRT CPU client and
 //! expose them as a [`crate::cm::Engine`]. Python never runs here —
-//! the artifacts are self-contained compiled programs.
+//! the artifacts are self-contained compiled programs. Also home of
+//! [`pool`], the persistent worker-pool subsystem every parallel path
+//! (scans, sharded epochs, coordinator workers) dispatches through.
 //!
 //! Shape buckets: each artifact is compiled for fixed (n_cap, p_cap);
 //! problems are packed by zero-padding rows (weights 0) and masking
@@ -25,9 +27,11 @@ pub mod pjrt;
 #[cfg(not(feature = "pjrt"))]
 #[path = "pjrt_stub.rs"]
 pub mod pjrt;
+pub mod pool;
 
 pub use manifest::{Artifact, ArtifactKind, Manifest};
 pub use pjrt::PjrtEngine;
+pub use pool::{PoolMode, WorkerPool};
 
 /// Default artifacts directory (overridden by SAIF_ARTIFACTS).
 pub fn artifacts_dir() -> String {

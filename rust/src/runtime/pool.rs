@@ -1,0 +1,552 @@
+//! Persistent, deterministic worker pool — the one threading substrate
+//! behind every parallel path in the repo.
+//!
+//! SAIF's edge over full-problem baselines is that the reduced model is
+//! tiny and iterated *often*, so per-epoch overhead is the tax paid
+//! most frequently. Before this module each parallel layer spawned
+//! fresh OS threads per call (`Design::mul_t_vec_par` scans, the
+//! sharded CM epochs, one thread per coordinator worker); a wide solve
+//! could spawn thousands of threads over its lifetime. [`WorkerPool`]
+//! keeps a fixed set of long-lived threads parked on a condvar and
+//! hands them work instead:
+//!
+//! * **[`WorkerPool::run_ordered`]** — fork-join over `count` indexed
+//!   tasks. Results are collected into per-index slots and returned in
+//!   task order, so callers that fold the results (the sharded epoch's
+//!   residual merge, the chunked scan) see exactly the sequence the
+//!   old spawn-per-call code produced: for a fixed task count the
+//!   output is **bitwise identical regardless of pool size** or which
+//!   worker ran which task. The *calling* thread participates (it
+//!   claims and runs tasks of its own submission while idle workers
+//!   help), which also makes nested `run_ordered` calls — a pool task
+//!   that itself fans out — deadlock-free by construction.
+//! * **[`WorkerPool::spawn`]** — fire-and-forget `'static` tasks (the
+//!   coordinator's logical workers). Panics are caught so a crashing
+//!   task never kills a pool thread; long-running spawned tasks may
+//!   fan out via `run_ordered` on the same pool.
+//! * **Panic isolation** — a panicking `run_ordered` task is caught on
+//!   the worker, recorded, and surfaced to the caller as
+//!   [`PoolError::TaskPanicked`] *after* every sibling task finished
+//!   (so borrowed data stays valid and nothing hangs). The pool remains
+//!   fully usable afterwards.
+//!
+//! [`PoolMode`] selects between the shared persistent pool
+//! ([`shared()`]) and [`scoped_run`], a spawn-per-call
+//! `std::thread::scope` fallback that preserves the pre-pool behavior
+//! exactly — `--pool scoped` on the CLI, and the baseline the parity
+//! tests and benches compare against.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Which execution substrate a parallel region runs on. Plumbed through
+/// `SolveSpec`/`SaifConfig`/engine state and the CLI `--pool` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PoolMode {
+    /// The process-wide persistent pool ([`shared()`]): no thread
+    /// spawns on the solve hot path. The default.
+    #[default]
+    Persistent,
+    /// Spawn-per-call `std::thread::scope` — the pre-pool behavior,
+    /// kept as a fallback and as the parity baseline.
+    Scoped,
+}
+
+impl PoolMode {
+    /// Parse a CLI/config value: "persistent"/"pool" or "scoped"/"spawn".
+    pub fn parse(s: &str) -> Option<PoolMode> {
+        match s {
+            "persistent" | "pool" => Some(PoolMode::Persistent),
+            "scoped" | "spawn" => Some(PoolMode::Scoped),
+            _ => None,
+        }
+    }
+
+    /// Short name for logs/tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolMode::Persistent => "persistent",
+            PoolMode::Scoped => "scoped",
+        }
+    }
+}
+
+/// Why a pool execution failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PoolError {
+    /// A task panicked. Every sibling task still ran to completion
+    /// before this was returned, and the pool itself stays usable.
+    TaskPanicked { task: usize, msg: String },
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::TaskPanicked { task, msg } => {
+                write!(f, "pool task {task} panicked: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Best-effort extraction of a panic payload message.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Lifetime-erased pointer to a `run_ordered` task body. A raw
+/// pointer (not a reference) on purpose: a worker may keep its
+/// `Arc<RunTask>` alive for a moment after the caller's frame — and
+/// the pointee — are gone, which is fine for a raw pointer as long as
+/// it is never dereferenced then (it isn't: every dereference happens
+/// before the caller's completion wait returns).
+struct ErasedFn(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is Sync (it's a `dyn Fn(usize) + Sync`), and the
+// run_ordered caller keeps it alive for the whole execution window.
+unsafe impl Send for ErasedFn {}
+unsafe impl Sync for ErasedFn {}
+
+/// One `run_ordered` submission: an erased task body plus the claim /
+/// completion machinery. Tasks are claimed by atomically incrementing
+/// `next`; whoever claims index i runs it, so each index executes
+/// exactly once and `completed` reaches `count` no matter how work is
+/// split between the caller and the pool workers.
+struct RunTask {
+    /// Type-erased task body, invoked with the task index.
+    ///
+    /// SAFETY: points into the `run_ordered` caller's stack frame. The
+    /// caller blocks until `completed == count`, so the closure (and
+    /// everything it borrows) outlives every invocation.
+    func: ErasedFn,
+    count: usize,
+    /// Next unclaimed task index (may run past `count`; claims ≥ count
+    /// are no-ops).
+    next: AtomicUsize,
+    done: Mutex<RunDone>,
+    done_cv: Condvar,
+}
+
+struct RunDone {
+    completed: usize,
+    panicked: Option<(usize, String)>,
+}
+
+impl RunTask {
+    /// Execute task `i`, catching panics; always counts completion.
+    ///
+    /// SAFETY (of the dereference): exec is only reachable for claimed
+    /// indices, and the caller's completion wait covers every claim.
+    fn exec(&self, i: usize) {
+        let f = unsafe { &*self.func.0 };
+        let r = catch_unwind(AssertUnwindSafe(|| f(i)));
+        let mut d = self.done.lock().unwrap_or_else(|e| e.into_inner());
+        if let Err(p) = r {
+            if d.panicked.is_none() {
+                d.panicked = Some((i, panic_msg(&*p)));
+            }
+        }
+        d.completed += 1;
+        if d.completed == self.count {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// Work available to pool threads: active fork-join runs (claimed
+/// task-by-task) and queued fire-and-forget tasks.
+struct Queues {
+    runs: Vec<Arc<RunTask>>,
+    fires: VecDeque<Box<dyn FnOnce() + Send>>,
+}
+
+struct Shared {
+    q: Mutex<Queues>,
+    /// Idle workers park here; `run_ordered`/`spawn` unpark them.
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+enum Job {
+    Chunk(Arc<RunTask>, usize),
+    Fire(Box<dyn FnOnce() + Send>),
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.q.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                // claim a task from the oldest live run; exhausted runs
+                // are dropped from the active list as they are found
+                let mut claimed = None;
+                while let Some(run) = q.runs.first().cloned() {
+                    let t = run.next.fetch_add(1, Ordering::Relaxed);
+                    if t < run.count {
+                        claimed = Some(Job::Chunk(run, t));
+                        break;
+                    }
+                    q.runs.swap_remove(0);
+                }
+                if let Some(j) = claimed {
+                    break j;
+                }
+                if let Some(f) = q.fires.pop_front() {
+                    break Job::Fire(f);
+                }
+                q = shared.work_cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        match job {
+            Job::Chunk(run, t) => run.exec(t),
+            // spawned tasks isolate their own panics too: a crashing
+            // coordinator batch must not take a pool thread with it
+            Job::Fire(f) => {
+                let _ = catch_unwind(AssertUnwindSafe(f));
+            }
+        }
+    }
+}
+
+/// A persistent pool of worker threads. See the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` long-lived workers. `threads == 0` is valid:
+    /// `run_ordered` still completes (the caller runs every task) —
+    /// only `spawn` requires at least one worker.
+    pub fn new(threads: usize) -> WorkerPool {
+        let pool = WorkerPool {
+            shared: Arc::new(Shared {
+                q: Mutex::new(Queues { runs: Vec::new(), fires: VecDeque::new() }),
+                work_cv: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+            }),
+            handles: Mutex::new(Vec::new()),
+        };
+        pool.ensure_threads(threads);
+        pool
+    }
+
+    /// Grow the pool to at least `n` workers (never shrinks — parked
+    /// workers cost one stack each and no CPU).
+    pub fn ensure_threads(&self, n: usize) {
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        while handles.len() < n {
+            let shared = self.shared.clone();
+            let id = handles.len();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("saif-pool-{id}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker"),
+            );
+        }
+    }
+
+    /// Current worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.handles.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Run `f(0), …, f(count-1)` across the pool and return the results
+    /// **in task order**. The caller participates, so this completes
+    /// (and stays deadlock-free under nesting) for any pool size,
+    /// including zero. Task panics surface as
+    /// [`PoolError::TaskPanicked`] after all sibling tasks finished.
+    ///
+    /// Determinism: the output depends only on `count` and `f`, never
+    /// on the pool size or scheduling — task i's result always lands in
+    /// slot i.
+    pub fn run_ordered<T, F>(&self, count: usize, f: F) -> Result<Vec<T>, PoolError>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if count == 0 {
+            return Ok(Vec::new());
+        }
+        // one slot per task: disjoint writes, ordered collection
+        let slots: Vec<Mutex<Option<T>>> = (0..count).map(|_| Mutex::new(None)).collect();
+        let body = |i: usize| {
+            let v = f(i);
+            *slots[i].lock().unwrap() = Some(v);
+        };
+        let obj: &(dyn Fn(usize) + Sync) = &body;
+        // SAFETY: lifetime erasure only. This frame blocks below until
+        // `completed == count`, so `body` (and the `slots`/`f` it
+        // borrows) outlives every invocation on the workers.
+        let func = ErasedFn(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(obj)
+        });
+        let run = Arc::new(RunTask {
+            func,
+            count,
+            next: AtomicUsize::new(0),
+            done: Mutex::new(RunDone { completed: 0, panicked: None }),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.q.lock().unwrap_or_else(|e| e.into_inner());
+            q.runs.push(run.clone());
+        }
+        self.shared.work_cv.notify_all();
+        // caller participation: claim and run our own tasks alongside
+        // whatever idle workers pick up
+        loop {
+            let t = run.next.fetch_add(1, Ordering::Relaxed);
+            if t >= count {
+                break;
+            }
+            run.exec(t);
+        }
+        // wait for tasks claimed by pool workers
+        let panicked = {
+            let mut d = run.done.lock().unwrap_or_else(|e| e.into_inner());
+            while d.completed < count {
+                d = run.done_cv.wait(d).unwrap_or_else(|e| e.into_inner());
+            }
+            d.panicked.take()
+        };
+        // the run may still sit on the active list if no worker ever
+        // scanned it; remove it before the borrowed closure dies
+        {
+            let mut q = self.shared.q.lock().unwrap_or_else(|e| e.into_inner());
+            q.runs.retain(|r| !Arc::ptr_eq(r, &run));
+        }
+        if let Some((task, msg)) = panicked {
+            return Err(PoolError::TaskPanicked { task, msg });
+        }
+        let mut out = Vec::with_capacity(count);
+        for s in &slots {
+            out.push(s.lock().unwrap().take().expect("every task completed"));
+        }
+        Ok(out)
+    }
+
+    /// Queue a fire-and-forget task. Panics inside `f` are caught (the
+    /// pool thread survives); callers that need to observe failure wrap
+    /// `f` themselves (see the coordinator's dead-worker flag). Tasks
+    /// still queued when the pool is dropped are discarded.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let mut q = self.shared.q.lock().unwrap_or_else(|e| e.into_inner());
+            q.fires.push_back(Box::new(f));
+        }
+        self.shared.work_cv.notify_one();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work_cv.notify_all();
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool, created on first use and sized by
+/// `available_parallelism` (growable via
+/// [`WorkerPool::ensure_threads`]). Serial workloads never touch it —
+/// every dispatch short-circuits below 2 threads/shards — so no
+/// threads are spawned unless something actually runs parallel.
+pub fn shared() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        WorkerPool::new(hw)
+    })
+}
+
+/// Spawn-per-call fallback: `count` scoped threads, joined in task
+/// order — exactly the pre-pool `std::thread::scope` dispatch, with
+/// the same [`PoolError`] surface as the pool path.
+pub fn scoped_run<T, F>(count: usize, f: F) -> Result<Vec<T>, PoolError>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = Vec::with_capacity(count);
+    let mut err: Option<(usize, String)> = None;
+    std::thread::scope(|s| {
+        let f = &f; // each spawned closure captures the (Copy) reference
+        let handles: Vec<_> = (0..count).map(|i| s.spawn(move || f(i))).collect();
+        // join ALL handles (an unjoined panicked thread would re-panic
+        // the scope), keeping the first failure
+        for (i, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(v) => out.push(v),
+                Err(p) => {
+                    if err.is_none() {
+                        err = Some((i, panic_msg(&*p)));
+                    }
+                }
+            }
+        }
+    });
+    match err {
+        Some((task, msg)) => Err(PoolError::TaskPanicked { task, msg }),
+        None => Ok(out),
+    }
+}
+
+/// Dispatch `count` ordered tasks on the substrate `mode` selects —
+/// the one entry point the scan/epoch layers call. Both modes produce
+/// identical (bitwise) results for identical `f`; only where the
+/// threads come from differs.
+pub fn run_ordered_mode<T, F>(mode: PoolMode, count: usize, f: F) -> Result<Vec<T>, PoolError>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    match mode {
+        PoolMode::Persistent => shared().run_ordered(count, f),
+        PoolMode::Scoped => scoped_run(count, f),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_ordered_returns_results_in_task_order() {
+        let pool = WorkerPool::new(3);
+        let out = pool.run_ordered(17, |i| i * i).unwrap();
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        // empty run is a no-op
+        assert_eq!(pool.run_ordered(0, |i| i).unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn zero_thread_pool_is_caller_driven() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 0);
+        let out = pool.run_ordered(8, |i| i + 1).unwrap();
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn results_identical_across_pool_sizes() {
+        let compute = |i: usize| ((i as f64) * 0.37).sin();
+        let reference: Vec<f64> = (0..50).map(compute).collect();
+        for threads in [0usize, 1, 2, 7] {
+            let pool = WorkerPool::new(threads);
+            let got = pool.run_ordered(50, compute).unwrap();
+            // bitwise: slot i always holds f(i)
+            for (a, b) in got.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn panic_surfaces_as_error_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let err = pool
+            .run_ordered(6, |i| {
+                if i == 3 {
+                    panic!("task three exploded");
+                }
+                i
+            })
+            .unwrap_err();
+        assert_eq!(
+            err,
+            PoolError::TaskPanicked { task: 3, msg: "task three exploded".into() }
+        );
+        // the pool is immediately usable again
+        let ok = pool.run_ordered(4, |i| i * 2).unwrap();
+        assert_eq!(ok, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn nested_run_ordered_does_not_deadlock() {
+        // every outer task fans out again on the SAME pool; caller
+        // participation keeps this live even with one worker
+        let pool = WorkerPool::new(1);
+        let out = pool
+            .run_ordered(4, |i| {
+                pool.run_ordered(3, |j| i * 10 + j).unwrap().iter().sum::<usize>()
+            })
+            .unwrap();
+        assert_eq!(out, vec![3, 33, 63, 93]);
+    }
+
+    #[test]
+    fn spawn_runs_and_isolates_panics() {
+        use std::sync::mpsc::channel;
+        let pool = WorkerPool::new(1);
+        let (tx, rx) = channel();
+        pool.spawn(|| panic!("fire-and-forget panic"));
+        pool.spawn(move || tx.send(41usize).unwrap());
+        // the panicking task did not kill the (only) worker
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(10)), Ok(41));
+    }
+
+    #[test]
+    fn ensure_threads_grows_never_shrinks() {
+        let pool = WorkerPool::new(1);
+        pool.ensure_threads(3);
+        assert_eq!(pool.threads(), 3);
+        pool.ensure_threads(2);
+        assert_eq!(pool.threads(), 3);
+    }
+
+    #[test]
+    fn scoped_run_matches_pool_and_reports_panics() {
+        let f = |i: usize| (i as f64).sqrt();
+        let a = scoped_run(9, f).unwrap();
+        let b = WorkerPool::new(2).run_ordered(9, f).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let err = scoped_run(3, |i| {
+            if i == 1 {
+                panic!("boom")
+            }
+            i
+        })
+        .unwrap_err();
+        assert_eq!(err, PoolError::TaskPanicked { task: 1, msg: "boom".into() });
+    }
+
+    #[test]
+    fn mode_parse_and_names() {
+        assert_eq!(PoolMode::parse("persistent"), Some(PoolMode::Persistent));
+        assert_eq!(PoolMode::parse("pool"), Some(PoolMode::Persistent));
+        assert_eq!(PoolMode::parse("scoped"), Some(PoolMode::Scoped));
+        assert_eq!(PoolMode::parse("spawn"), Some(PoolMode::Scoped));
+        assert_eq!(PoolMode::parse("nope"), None);
+        assert_eq!(PoolMode::default(), PoolMode::Persistent);
+        assert_eq!(PoolMode::Persistent.name(), "persistent");
+        assert_eq!(PoolMode::Scoped.name(), "scoped");
+    }
+
+    #[test]
+    fn shared_pool_is_usable() {
+        let out = run_ordered_mode(PoolMode::Persistent, 5, |i| i + 100).unwrap();
+        assert_eq!(out, vec![100, 101, 102, 103, 104]);
+        assert!(shared().threads() >= 1);
+    }
+}

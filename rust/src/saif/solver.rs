@@ -1,7 +1,7 @@
 //! The SAIF solver (Algorithm 1 + Algorithm 2).
 
 use crate::ball::{gap_ball, intersect, thm2_ball_ls, Ball};
-use crate::cm::{Engine, EpochShards, SubEval};
+use crate::cm::{Engine, EpochShards, PoolMode, SubEval};
 use crate::linalg::Parallelism;
 use crate::model::{LossKind, Problem};
 use crate::util::Stopwatch;
@@ -53,6 +53,10 @@ pub struct SaifConfig {
     /// [`EpochShards::FollowParallelism`] the epochs shard with the
     /// same thread budget as the scans; `Some(sh)` forces it.
     pub epoch_shards: Option<EpochShards>,
+    /// Threading substrate for the scans + sharded epochs (persistent
+    /// pool vs scoped spawn-per-call). `None` inherits the engine's
+    /// setting; `Some(mode)` forces it.
+    pub pool: Option<PoolMode>,
     /// Record a trace (Figures 3/4).
     pub trace: bool,
 }
@@ -72,6 +76,7 @@ impl Default for SaifConfig {
             adaptive_k: true,
             parallelism: None,
             epoch_shards: None,
+            pool: None,
             trace: false,
         }
     }
@@ -87,6 +92,7 @@ impl SaifConfig {
             eps: spec.eps,
             parallelism: spec.parallelism,
             epoch_shards: spec.epoch_shards,
+            pool: spec.pool,
             max_outer: spec.max_outer.unwrap_or(d.max_outer),
             trace: spec.trace,
             ..d
@@ -152,9 +158,13 @@ impl<'a> Saif<'a> {
         if let Some(sh) = self.cfg.epoch_shards {
             self.engine.set_epoch_shards(sh);
         }
-        // problem-level scans match the engine's setting, so `None`
+        if let Some(mode) = self.cfg.pool {
+            self.engine.set_pool_mode(mode);
+        }
+        // problem-level scans match the engine's settings, so `None`
         // genuinely inherits (coordinator workers configure the engine)
         let scan_par = self.cfg.parallelism.unwrap_or_else(|| self.engine.parallelism());
+        let scan_pool = self.cfg.pool.unwrap_or_else(|| self.engine.pool_mode());
         let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
         // |x_iᵀ y| cached once: the Theorem-2 ball needs λ_max(t) =
         // max over the ACTIVE set every outer iteration; recomputing
@@ -162,7 +172,7 @@ impl<'a> Saif<'a> {
         let corr_y: Option<Vec<f64>> =
             if self.cfg.use_thm2_ball && prob.loss == LossKind::Squared {
                 let mut v = vec![0.0; p];
-                prob.x.mul_t_vec_par(&prob.y, &mut v, scan_par);
+                prob.x.mul_t_vec_pool(&prob.y, &mut v, scan_par, scan_pool);
                 for x in v.iter_mut() {
                     *x = x.abs();
                 }
@@ -172,7 +182,7 @@ impl<'a> Saif<'a> {
             };
 
         // --- initial correlations, λ_max, ADD batch size h ---
-        let corrs = prob.init_corrs_par(scan_par);
+        let corrs = prob.init_corrs_pool(scan_par, scan_pool);
         let lam_max = corrs.iter().cloned().fold(0.0, f64::max);
         let mx = lam_max;
         let md = median(&corrs);

@@ -4,10 +4,17 @@
 //! DEL), never adds features back. Complexity analyzed in Theorem 4:
 //! the cost is dominated by the epochs needed on the full set before
 //! the gap is small enough to have screening power.
+//!
+//! λ-path sessions override the default warm-chaining with a DPP-style
+//! sequential ball (see [`crate::solver::Solver::path_warm`] on
+//! [`DynScreen`]): the previous λ's dual point pre-screens the next
+//! λ's feature set before its first epoch, attacking exactly that
+//! full-set cost.
 
 use crate::ball::gap_ball;
 use crate::cm::Engine;
-use crate::model::Problem;
+use crate::linalg::nrm2_sq;
+use crate::model::{LossKind, Problem};
 use crate::saif::{TraceEvent, TraceOp};
 use crate::util::Stopwatch;
 
@@ -60,6 +67,9 @@ pub struct DynScreenResult {
     pub epochs: usize,
     /// Feature-set size after each screening pass (p_t, Figure 4).
     pub sizes: Vec<usize>,
+    /// Final feasible dual point θ̂ (the sequential-ball `path()`
+    /// override centers the next λ's screening ball on it).
+    pub theta: Vec<f64>,
     pub secs: f64,
     pub trace: Vec<TraceEvent>,
 }
@@ -76,13 +86,25 @@ impl<'a> DynScreen<'a> {
     }
 
     pub fn solve(&mut self, prob: &Problem, lam: f64) -> DynScreenResult {
+        self.solve_from(prob, lam, (0..prob.p()).collect())
+    }
+
+    /// [`DynScreen::solve`] starting from an initial feature set that
+    /// is already certified to contain the support (the sequential-ball
+    /// `path()` pass pre-screens it); the gap-ball screening loop then
+    /// only ever shrinks it, exactly as from the full set.
+    pub fn solve_from(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        active0: Vec<usize>,
+    ) -> DynScreenResult {
         let sw = Stopwatch::start();
-        let p = prob.p();
         let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
-        let mut active: Vec<usize> = (0..p).collect();
-        let mut beta = vec![0.0; p];
+        let mut active = active0;
+        let mut beta = vec![0.0; active.len()];
         let mut epochs = 0usize;
-        let mut sizes = vec![p];
+        let mut sizes = vec![active.len()];
         let mut trace = Vec::new();
         let alpha = prob.loss.alpha();
         let mut best_gap = f64::INFINITY;
@@ -152,7 +174,6 @@ impl<'a> DynScreen<'a> {
                 break;
             }
         }
-        let _ = final_eval;
         if self.cfg.trace {
             trace.push(TraceEvent {
                 t_secs: sw.secs(),
@@ -176,8 +197,29 @@ impl<'a> DynScreen<'a> {
             dual,
             epochs,
             sizes,
+            theta: final_eval.theta,
             secs: sw.secs(),
             trace,
+        }
+    }
+}
+
+impl DynScreenResult {
+    fn into_solution(self, warm_started: bool, seq_screened: usize) -> crate::solver::Solution {
+        crate::solver::Solution {
+            beta: self.beta,
+            gap: self.gap,
+            epochs: self.epochs,
+            secs: self.secs,
+            warm_started,
+            stats: vec![
+                (
+                    "final_feature_set",
+                    self.sizes.last().copied().unwrap_or(0) as f64,
+                ),
+                ("seq_screened", seq_screened as f64),
+            ],
+            trace: self.trace,
         }
     }
 }
@@ -188,27 +230,90 @@ impl crate::solver::Solver for DynScreen<'_> {
     }
 
     /// Dynamic screening starts from the FULL feature set, so a warm
-    /// start cannot seed it — the seed is ignored and `path()` is
-    /// bitwise identical to independent per-λ solves.
+    /// β cannot seed it — the seed is ignored and a single `solve_warm`
+    /// is bitwise identical to `solve`.
     fn solve_warm(
         &mut self,
         prob: &Problem,
         lam: f64,
         _warm: Option<&[(usize, f64)]>,
     ) -> crate::solver::Solution {
-        let r = self.solve(prob, lam);
-        crate::solver::Solution {
-            beta: r.beta,
-            gap: r.gap,
-            epochs: r.epochs,
-            secs: r.secs,
-            warm_started: false,
-            stats: vec![(
-                "final_feature_set",
-                r.sizes.last().copied().unwrap_or(0) as f64,
-            )],
-            trace: r.trace,
+        self.solve(prob, lam).into_solution(false, 0)
+    }
+
+    /// DPP-style sequential-ball path session (Wang et al.'s dual
+    /// polytope projection, adapted to the duality-gap framework):
+    /// instead of the default warm-chaining — useless here, since β
+    /// seeds are ignored — each λ after the first reuses the PREVIOUS
+    /// λ's dual point to pre-screen the feature set before its solve
+    /// even starts.
+    ///
+    /// For least squares the dual optimum is the projection of y/λ onto
+    /// the feasible polytope {θ : ‖Xᵀθ‖∞ ≤ 1}, and projections are
+    /// nonexpansive, so
+    ///   ‖θ*(λ) − θ*(λ')‖ ≤ ‖y/λ − y/λ'‖ = ‖y‖·|1/λ − 1/λ'| .
+    /// Combining with the previous solve's gap ball
+    /// (‖θ*(λ') − θ̂'‖ ≤ √(2α·gap')/λ', θ̂' feasible) gives the safe
+    /// sequential ball
+    ///   θ*(λ) ∈ B(θ̂', ‖y‖·|1/λ − 1/λ'| + √(2α·gap')/λ') ,
+    /// and every feature with |x_iᵀθ̂'| + ‖x_i‖·r < 1 is provably
+    /// inactive at λ — screened before a single epoch runs, which is
+    /// exactly where dynamic screening pays its Theorem-4 tax. The
+    /// projection argument is LS-specific AND offset-free (with a
+    /// margin offset the dual center is (y − offset)/λ, not y/λ), so
+    /// logistic and offset problems keep the default behavior
+    /// (independent per-λ solves, bitwise).
+    fn path_warm(
+        &mut self,
+        prob: &Problem,
+        lams: &[f64],
+        _warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::PathResult {
+        let sw = Stopwatch::start();
+        let p = prob.p();
+        let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
+        let y_nrm = nrm2_sq(&prob.y).sqrt();
+        let alpha = prob.loss.alpha();
+        let mut points = Vec::with_capacity(lams.len());
+        // (λ', θ̂', gap') of the previous grid point
+        let mut prev: Option<(f64, Vec<f64>, f64)> = None;
+        for &lam in lams {
+            let active0: Vec<usize> = match &prev {
+                Some((lam_p, theta_p, gap_p))
+                    if prob.loss == LossKind::Squared
+                        && prob.offset.is_none()
+                        && lam > 0.0
+                        && *lam_p > 0.0 =>
+                {
+                    let r = y_nrm * (1.0 / lam - 1.0 / lam_p).abs()
+                        + (2.0 * alpha * gap_p.max(0.0)).sqrt() / lam_p;
+                    let scores = self.engine.scores(prob, theta_p);
+                    let kept: Vec<usize> = (0..p)
+                        .filter(|&i| {
+                            scores[i] + col_nrm[i] * r
+                                >= 1.0 - crate::saif::solver::DEL_MARGIN
+                        })
+                        .collect();
+                    if kept.is_empty() {
+                        // every feature certified inactive ⇒ β* = 0;
+                        // keep the best-scoring column so the loop
+                        // still certifies a duality gap
+                        let best = (0..p)
+                            .max_by(|&a, &b| scores[a].total_cmp(&scores[b]))
+                            .unwrap_or(0);
+                        vec![best]
+                    } else {
+                        kept
+                    }
+                }
+                _ => (0..p).collect(),
+            };
+            let seq_screened = p - active0.len();
+            let r = self.solve_from(prob, lam, active0);
+            prev = Some((lam, r.theta.clone(), r.gap));
+            points.push(r.into_solution(seq_screened > 0, seq_screened));
         }
+        crate::solver::PathResult { lams: lams.to_vec(), points, secs: sw.secs() }
     }
 }
 
@@ -258,6 +363,88 @@ mod tests {
         // sizes never grow (dynamic screening never re-adds)
         for w in res.sizes.windows(2) {
             assert!(w[1] <= w[0]);
+        }
+    }
+
+    #[test]
+    fn sequential_path_screens_before_solving_and_stays_safe() {
+        use crate::solver::Solver;
+        // y = x_0 exactly: the solution is 1-sparse and the DPP ball's
+        // screening cut 1 − ‖x_i‖·r ≈ 1 − (1/f_{k} − 1/f_{k-1}) sits
+        // well above the bulk of the |x_iᵀθ̂| distribution, so the
+        // sequential pass provably screens features at every step
+        let ds = synth::synth_linear(50, 500, 27);
+        let x = ds.x.as_dense().clone();
+        let y: Vec<f64> = x.col(0).to_vec();
+        let prob = Problem::new(x, y, crate::model::LossKind::Squared);
+        let lam_max = prob.lambda_max();
+        let grid: Vec<f64> = [0.5, 0.4, 0.3, 0.25].iter().map(|f| lam_max * f).collect();
+        let mut eng = NativeEngine::new();
+        let mut dsn = DynScreen::new(
+            &mut eng,
+            DynScreenConfig { eps: 1e-9, ..Default::default() },
+        );
+        let path = Solver::path(&mut dsn, &prob, &grid);
+        for (k, (&lam, sol)) in grid.iter().zip(&path.points).enumerate() {
+            assert!(sol.gap <= 1e-9, "λ#{k}: gap {}", sol.gap);
+            assert!(
+                prob.kkt_violation(&sol.beta, lam) < 1e-3 * lam.max(1.0),
+                "λ#{k}: sequential screening broke safety"
+            );
+            let screened = sol
+                .stats
+                .iter()
+                .find(|(name, _)| *name == "seq_screened")
+                .map(|(_, v)| *v)
+                .unwrap();
+            if k == 0 {
+                assert!(!sol.warm_started);
+                assert_eq!(screened, 0.0);
+            } else {
+                // the sequential ball must have real screening power on
+                // this well-conditioned design
+                assert!(sol.warm_started, "λ#{k} should be pre-screened");
+                assert!(screened > 0.0, "λ#{k}: nothing pre-screened");
+            }
+            // the answer matches an independent solve
+            let mut eng2 = NativeEngine::new();
+            let solo = DynScreen::new(
+                &mut eng2,
+                DynScreenConfig { eps: 1e-9, ..Default::default() },
+            )
+            .solve(&prob, lam);
+            let mut a: Vec<usize> = sol.beta.iter().map(|&(i, _)| i).collect();
+            let mut b: Vec<usize> = solo.beta.iter().map(|&(i, _)| i).collect();
+            a.sort();
+            b.sort();
+            assert_eq!(a, b, "λ#{k}: supports differ from independent solve");
+        }
+    }
+
+    #[test]
+    fn logistic_path_is_bitwise_independent_solves() {
+        use crate::solver::Solver;
+        // the DPP projection argument is LS-only: logistic paths keep
+        // the default behavior exactly
+        let ds = synth::gisette_like(40, 90, 29);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let grid: Vec<f64> = [0.5, 0.3].iter().map(|f| lam_max * f).collect();
+        let mut eng = NativeEngine::new();
+        let mut dsn = DynScreen::new(
+            &mut eng,
+            DynScreenConfig { eps: 1e-7, ..Default::default() },
+        );
+        let path = Solver::path(&mut dsn, &prob, &grid);
+        for (&lam, sol) in grid.iter().zip(&path.points) {
+            assert!(!sol.warm_started);
+            let mut eng2 = NativeEngine::new();
+            let solo = DynScreen::new(
+                &mut eng2,
+                DynScreenConfig { eps: 1e-7, ..Default::default() },
+            )
+            .solve(&prob, lam);
+            assert_eq!(sol.beta, solo.beta, "logistic path point diverged");
         }
     }
 

@@ -22,9 +22,11 @@
 //! default implementation warm-chains each solution into the next
 //! (smaller) λ's solve — for SAIF the previous support seeds the active
 //! set, so the ADD phase starts from the path predecessor instead of
-//! from scratch — and the homotopy solver overrides it with its native
-//! sequential strong-rule pass. Methods that cannot exploit a warm
-//! start (dynamic screening, BLITZ) simply ignore the seed, so for them
+//! from scratch — the homotopy solver overrides it with its native
+//! sequential strong-rule pass, and dynamic screening overrides it
+//! with a DPP-style sequential ball (the previous λ's dual point
+//! pre-screens the next feature set; least squares only). BLITZ
+//! cannot exploit a warm start and ignores the seed, so for it
 //! `path()` is bitwise identical to independent per-λ solves.
 //!
 //! ```
@@ -46,7 +48,7 @@
 //! assert!(path.points[1].warm_started);
 //! ```
 
-use crate::cm::{Engine, EpochShards};
+use crate::cm::{Engine, EpochShards, PoolMode};
 use crate::linalg::Parallelism;
 use crate::model::Problem;
 use crate::saif::TraceEvent;
@@ -119,6 +121,10 @@ pub struct SolveSpec {
     /// Sharding policy for the active-block CM epochs. `None` inherits
     /// the engine's setting; `Some` forces it.
     pub epoch_shards: Option<EpochShards>,
+    /// Threading substrate for scans + sharded epochs (persistent
+    /// worker pool vs scoped spawn-per-call). `None` inherits the
+    /// engine's setting; `Some` forces it.
+    pub pool: Option<PoolMode>,
     /// Outer-iteration safety valve. `None` keeps each method's own
     /// default (the cap means "outer iterations" for SAIF/BLITZ and
     /// "total epochs" for dynamic screening).
@@ -133,6 +139,7 @@ impl Default for SolveSpec {
             eps: 1e-6,
             parallelism: None,
             epoch_shards: None,
+            pool: None,
             max_outer: None,
             trace: false,
         }
@@ -350,6 +357,7 @@ mod tests {
         assert_eq!(s.eps, 1e-6);
         assert!(s.parallelism.is_none());
         assert!(s.epoch_shards.is_none());
+        assert!(s.pool.is_none());
         assert!(s.max_outer.is_none());
         assert!(!s.trace);
     }

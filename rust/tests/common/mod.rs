@@ -14,6 +14,7 @@
 //! module independently and uses a different subset of the oracle.
 #![allow(dead_code)]
 
+use saif::cm::PoolMode;
 use saif::linalg::Parallelism;
 use saif::model::Problem;
 use saif::util::prop;
@@ -134,5 +135,18 @@ pub fn test_parallelism() -> Parallelism {
         Ok(s) => Parallelism::parse(&s)
             .unwrap_or_else(|| panic!("bad SAIF_TEST_THREADS value '{s}'")),
         Err(_) => Parallelism::Serial,
+    }
+}
+
+/// Threading substrate for the test run, from `SAIF_TEST_POOL`
+/// ("persistent"/"scoped" — see `PoolMode::parse`; unset ⇒ the
+/// default, persistent). `ci.sh` runs the threaded suite once per
+/// mode so both substrates are exercised in tier-1.
+pub fn test_pool_mode() -> PoolMode {
+    match std::env::var("SAIF_TEST_POOL") {
+        Ok(s) => {
+            PoolMode::parse(&s).unwrap_or_else(|| panic!("bad SAIF_TEST_POOL value '{s}'"))
+        }
+        Err(_) => PoolMode::default(),
     }
 }

@@ -144,9 +144,11 @@ fn fixed_shard_count_reproduces_bitwise() {
 
 #[test]
 fn env_driven_parallelism_exercises_epoch_path() {
-    // ci.sh runs the suite with SAIF_TEST_THREADS ∈ {1, 4}: under 4
-    // the FollowParallelism engine shards this p=600 reduced solve,
-    // under 1 it stays serial — both must certify and agree
+    // ci.sh runs the suite with SAIF_TEST_THREADS ∈ {1, 4} and, for
+    // the threaded runs, SAIF_TEST_POOL ∈ {persistent, scoped}: under
+    // 4 threads the FollowParallelism engine shards this p=600 reduced
+    // solve on the selected substrate, under 1 it stays serial — all
+    // must certify and agree
     let par = common::test_parallelism();
     let prob = synth::synth_linear(50, 600, 88).problem();
     let lam = prob.lambda_max() * 0.1;
@@ -154,6 +156,7 @@ fn env_driven_parallelism_exercises_epoch_path() {
     let mut serial = NativeEngine::new();
     let (b_ser, ev_ser) = solve_with(&mut serial, &prob, lam, eps);
     let mut eng = NativeEngine::with_parallelism(par);
+    eng.set_pool_mode(common::test_pool_mode());
     assert_eq!(
         eng.effective_epoch_shards(prob.p()),
         par.threads(prob.p()),

@@ -1,0 +1,200 @@
+//! Pooled-vs-scoped parity: the persistent worker pool must be a pure
+//! substrate swap. For a fixed chunk/shard count the pooled scans and
+//! sharded epochs produce the SAME BITS as the spawn-per-call scoped
+//! dispatch (and as serial for shards=1), on dense and sparse designs,
+//! least-squares and logistic losses — plus the panic-isolation
+//! regression: a crashing task surfaces as an error, not a hang, and
+//! the pool stays usable.
+
+mod common;
+
+use saif::cm::{solve_subproblem, Engine, EpochShards, NativeEngine, PoolMode, SubEval};
+use saif::data::synth;
+use saif::linalg::Parallelism;
+use saif::model::{LossKind, Problem};
+use saif::runtime::pool::{self, PoolError, WorkerPool};
+use saif::util::prop;
+use saif::util::Rng;
+
+/// Random problem drawn over {dense, sparse} × {ls, logistic}, wide
+/// enough (p ≥ 64) that Fixed(4) genuinely runs 4 shards.
+fn random_problem(rng: &mut Rng) -> Problem {
+    let n = 20 + rng.below(40);
+    let p = 64 + rng.below(120);
+    let sparse = rng.uniform() > 0.5;
+    let logistic = rng.uniform() > 0.5;
+    let ds = if sparse {
+        synth::synth_sparse(n, p, 0.05 + 0.15 * rng.uniform(), rng.next_u64())
+    } else {
+        synth::synth_linear(n, p, rng.next_u64())
+    };
+    if logistic {
+        let y: Vec<f64> =
+            ds.y.iter().map(|v| if *v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        Problem::new(ds.x, y, LossKind::Logistic)
+    } else {
+        ds.problem()
+    }
+}
+
+fn solve_with(eng: &mut NativeEngine, prob: &Problem, lam: f64, eps: f64) -> (Vec<f64>, SubEval) {
+    let active: Vec<usize> = (0..prob.p()).collect();
+    let mut beta = vec![0.0; prob.p()];
+    let (eval, _) = solve_subproblem(eng, prob, &active, &mut beta, lam, eps, 10, 400_000);
+    (beta, eval)
+}
+
+fn sparse_beta(beta: &[f64]) -> Vec<(usize, f64)> {
+    beta.iter().enumerate().filter(|(_, b)| **b != 0.0).map(|(i, &b)| (i, b)).collect()
+}
+
+#[test]
+fn pooled_vs_scoped_parity_randomized() {
+    prop::check("pooled == scoped dispatch", 8, |rng| {
+        let prob = random_problem(rng);
+        let lam = prob.lambda_max() * (0.05 + 0.3 * rng.uniform());
+        let eps = 1e-11;
+
+        let mut serial = NativeEngine::new();
+        let (b_ser, ev_ser) = solve_with(&mut serial, &prob, lam, eps);
+
+        for shards in [1usize, 2, 4] {
+            let run = |mode: PoolMode| {
+                let mut eng = NativeEngine::new();
+                eng.set_epoch_shards(EpochShards::Fixed(shards));
+                eng.set_parallelism(Parallelism::Fixed(2));
+                eng.set_pool_mode(mode);
+                solve_with(&mut eng, &prob, lam, eps)
+            };
+            let (b_pool, ev_pool) = run(PoolMode::Persistent);
+            let (b_scope, ev_scope) = run(PoolMode::Scoped);
+            // the substrate swap changes NOTHING: bitwise for every
+            // fixed shard count, on either loss and either backend
+            if b_pool != b_scope {
+                return Err(format!("shards={shards}: pooled β ≠ scoped β bitwise"));
+            }
+            if ev_pool.primal.to_bits() != ev_scope.primal.to_bits() {
+                return Err(format!(
+                    "shards={shards}: primal bits differ: {} vs {}",
+                    ev_pool.primal, ev_scope.primal
+                ));
+            }
+            if shards == 1 && b_pool != b_ser {
+                return Err("shards=1 pooled β differs bitwise from serial".into());
+            }
+            // vs the serial reference: same objective + KKT oracle
+            prop::assert_close(
+                ev_pool.primal,
+                ev_ser.primal,
+                1e-10,
+                1e-10,
+                &format!("primal (shards={shards}, {:?})", prob.loss),
+            )?;
+            common::check_certificate(&prob, &sparse_beta(&b_pool), lam, ev_pool.gap, eps)
+                .map_err(|e| format!("shards={shards}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pooled_scores_scan_is_bitwise_scoped() {
+    let mut rng = Rng::new(61);
+    for prob in [
+        synth::synth_linear(40, 800, 62).problem(),
+        synth::synth_sparse(40, 1200, 0.05, 63).problem(),
+    ] {
+        let theta: Vec<f64> = (0..prob.n()).map(|_| rng.normal() * 1e-2).collect();
+        let mut serial = NativeEngine::new();
+        let base = serial.scores(&prob, &theta);
+        for threads in [2usize, 3, 8] {
+            let run = |mode: PoolMode| {
+                let mut eng = NativeEngine::with_parallelism(Parallelism::Fixed(threads));
+                eng.set_pool_mode(mode);
+                eng.scores(&prob, &theta)
+            };
+            let pooled = run(PoolMode::Persistent);
+            let scoped = run(PoolMode::Scoped);
+            assert_eq!(pooled, scoped, "threads={threads}");
+            assert_eq!(pooled, base, "threads={threads} vs serial");
+        }
+    }
+}
+
+#[test]
+fn env_driven_pool_mode_solves_and_certifies() {
+    // ci.sh runs the threaded suite under SAIF_TEST_POOL ∈
+    // {persistent, scoped}; whichever substrate is selected, a full
+    // sharded solve must certify and match the serial objective
+    let mode = common::test_pool_mode();
+    let par = common::test_parallelism();
+    let prob = synth::synth_linear(50, 700, 64).problem();
+    let lam = prob.lambda_max() * 0.1;
+    let eps = 1e-10;
+    let mut serial = NativeEngine::new();
+    let (_, ev_ser) = solve_with(&mut serial, &prob, lam, eps);
+    let mut eng = NativeEngine::with_parallelism(par);
+    eng.set_pool_mode(mode);
+    let (b, ev) = solve_with(&mut eng, &prob, lam, eps);
+    common::check_certificate(&prob, &sparse_beta(&b), lam, ev.gap, eps).unwrap();
+    let scale = ev_ser.primal.abs().max(1.0);
+    assert!(
+        (ev.primal - ev_ser.primal).abs() <= 2.0 * eps * scale,
+        "mode {mode:?}: primal {} vs serial {}",
+        ev.primal,
+        ev_ser.primal
+    );
+}
+
+#[test]
+fn pool_panic_isolation_regression() {
+    // a panicking shard task must surface as an error on the caller —
+    // never hang the run, never kill the pool's threads
+    let pool = WorkerPool::new(2);
+    let before = pool.threads();
+    let err = pool
+        .run_ordered(8, |i| {
+            if i == 5 {
+                panic!("shard {i} died");
+            }
+            i * 3
+        })
+        .unwrap_err();
+    assert!(matches!(err, PoolError::TaskPanicked { task: 5, .. }), "{err}");
+    assert_eq!(pool.threads(), before, "a panic must not cost a worker thread");
+    // immediately reusable, results still ordered
+    assert_eq!(pool.run_ordered(3, |i| i + 7).unwrap(), vec![7, 8, 9]);
+
+    // same contract through the shared pool + mode dispatcher
+    let err = pool::run_ordered_mode(PoolMode::Persistent, 4, |i| {
+        if i == 0 {
+            panic!("first task died");
+        }
+        i
+    })
+    .unwrap_err();
+    assert!(matches!(err, PoolError::TaskPanicked { task: 0, .. }));
+    let ok = pool::run_ordered_mode(PoolMode::Persistent, 4, |i| i).unwrap();
+    assert_eq!(ok, vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn engine_panic_during_pooled_epoch_propagates_cleanly() {
+    // a poisoned problem (NaN column norms are fine; an out-of-range
+    // active index is not) panics inside the shard pass; the engine
+    // must propagate it to the caller like the scoped path did, and
+    // the shared pool must stay usable afterwards
+    let prob = synth::synth_linear(20, 100, 65).problem();
+    let lam = prob.lambda_max() * 0.1;
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut eng = NativeEngine::new();
+        eng.set_epoch_shards(EpochShards::Fixed(2));
+        let bad_active: Vec<usize> = (64..164).collect(); // 100 cols: out of range
+        let mut beta = vec![0.0; bad_active.len()];
+        eng.cm_eval(&prob, &bad_active, &mut beta, lam, 1);
+    }));
+    assert!(result.is_err(), "out-of-range active set must panic");
+    // the pool survived the propagated panic
+    let ok = pool::shared().run_ordered(5, |i| i * i).unwrap();
+    assert_eq!(ok, vec![0, 1, 4, 9, 16]);
+}

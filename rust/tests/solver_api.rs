@@ -39,11 +39,11 @@ fn parity_problems() -> Vec<(&'static str, Problem)> {
 /// `path(&grid)` must match independent per-λ `solve` calls: identical
 /// support and primal objective within 1e-10 (+ the two solves'
 /// certified gaps — |P(β) − P(β')| ≤ gap + gap' always holds at a
-/// shared optimum, so the bound is tight, not slack). Dynamic
-/// screening and BLITZ ignore warm seeds, so for them the match is
-/// bitwise by construction; for SAIF it is the safe-screening
-/// guarantee (the warm-chained active set converges to the same
-/// optimum as the cold one).
+/// shared optimum, so the bound is tight, not slack). BLITZ ignores
+/// warm seeds, so for it the match is bitwise by construction; for
+/// SAIF (warm-chained active sets) and dynamic screening (DPP-style
+/// sequential-ball pre-screening on LS paths) it is the safe-screening
+/// guarantee — a different trajectory converging to the same optimum.
 #[test]
 fn path_matches_independent_solves_for_safe_methods() {
     // 1e-11: tight enough that the gap terms keep the objective bound
@@ -105,6 +105,7 @@ fn coordinator_saif_batch_is_bitwise_a_path_session() {
             problem: prob.clone(),
             lam,
             method: Method::Saif,
+            tree: None,
             spec: spec.clone(),
         })
         .collect();
@@ -175,6 +176,7 @@ fn coordinator_serves_homotopy_fused_and_group() {
                 problem: prob.clone(),
                 lam: lam_max * f,
                 method,
+                tree: None,
                 spec: SolveSpec { eps: 1e-9, ..Default::default() },
             });
             id += 1;
@@ -195,6 +197,65 @@ fn coordinator_serves_homotopy_fused_and_group() {
     }
 }
 
+/// Served fused problems are no longer chain-tree-only: a request
+/// carrying its dataset's real (non-chain) feature tree is solved over
+/// that tree, and the coordinator's safety certificate is computed
+/// against the SAME tree — cross-checked here with a direct
+/// `fused_kkt_violation` call on the response.
+#[test]
+fn coordinator_serves_fused_with_dataset_tree() {
+    use saif::fused::{fused_kkt_violation, FusedSaif};
+
+    let ds = synth::gene_expr(40, 30, 55);
+    let x = ds.x.as_dense().clone();
+    let edges = saif::data::tree::preferential_attachment(30, 3);
+    // not the chain 0−1−⋯−(p−1)
+    assert!(edges.iter().any(|&(u, v)| v != u + 1 && u != v + 1));
+    let lam_max =
+        FusedSaif::lambda_max(&x, &ds.y, LossKind::Squared, &edges).expect("valid tree");
+    let prob = Arc::new(ds.problem());
+    let tree = Arc::new(edges.clone());
+    let reqs: Vec<SolveRequest> = [0.5, 0.3]
+        .iter()
+        .enumerate()
+        .map(|(i, f)| SolveRequest {
+            id: i as u64,
+            dataset_key: 9,
+            problem: prob.clone(),
+            lam: lam_max * f,
+            method: Method::Fused,
+            tree: Some(tree.clone()),
+            spec: SolveSpec { eps: 1e-9, ..Default::default() },
+        })
+        .collect();
+    let batch = Coordinator::builder().workers(1).run_batch(reqs).expect("workers alive");
+    assert_eq!(batch.responses.len(), 2);
+    for r in &batch.responses {
+        assert!(
+            r.kkt_violation < 1e-2 * r.lam.max(1.0),
+            "req {}: certificate {:.3e} at λ={:.3e}",
+            r.id,
+            r.kkt_violation,
+            r.lam
+        );
+        // the response's certificate really is the non-chain tree's:
+        // recomputing it directly against `edges` agrees
+        let mut dense = vec![0.0; prob.p()];
+        for &(i, b) in &r.beta {
+            dense[i] = b;
+        }
+        let direct = fused_kkt_violation(&x, &ds.y, LossKind::Squared, &edges, &dense, r.lam)
+            .expect("valid tree");
+        assert!(
+            (direct - r.kkt_violation).abs() <= 1e-9 * direct.abs().max(1.0),
+            "req {}: coordinator certificate {} vs direct {}",
+            r.id,
+            r.kkt_violation,
+            direct
+        );
+    }
+}
+
 /// A worker that dies (here: the group solver's LS-only assert tripped
 /// by a logistic problem) surfaces as `CoordinatorError::WorkerDead`
 /// with the worker's id — instead of the old `expect`-panic in the
@@ -211,6 +272,7 @@ fn dead_worker_is_an_error_not_a_hang() {
         problem: prob.clone(),
         lam,
         method: Method::Group { size: 4 }, // LS-only: panics on logistic
+        tree: None,
         spec: SolveSpec::default(),
     })
     .expect("first submit reaches the live worker");
@@ -224,6 +286,7 @@ fn dead_worker_is_an_error_not_a_hang() {
             problem: prob,
             lam,
             method: Method::Saif,
+            tree: None,
             spec: SolveSpec::default(),
         })
         .expect_err("submit to a dead worker must fail");
