@@ -24,7 +24,22 @@ if [[ "${SKIP_LINT:-0}" != "1" ]]; then
 fi
 
 # Regenerate the kernel benchmark record (serial vs parallel scans,
-# serial vs sharded epochs) at the repo root.
+# serial vs sharded epochs, in-memory vs out-of-core) at the repo root,
+# then gate on the bench-regression guard: fresh numbers must stay
+# within BENCH_TOLERANCE (default 25%) of the COMMITTED record's
+# scan/epoch rows. A placeholder/null baseline passes trivially, so the
+# first toolchain-equipped run establishes the baseline.
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+    baseline="$(mktemp)"
+    # the committed record, not the working tree (a previous local
+    # bench run may already have overwritten the file)
+    git -C .. show HEAD:BENCH_kernels.json > "$baseline" 2>/dev/null \
+        || cp ../BENCH_kernels.json "$baseline" 2>/dev/null || true
     cargo bench --bench kernels
+    if command -v python3 >/dev/null 2>&1; then
+        python3 ../tools/bench_guard.py "$baseline" ../BENCH_kernels.json
+    else
+        echo "bench guard: python3 not found; skipping regression comparison" >&2
+    fi
+    rm -f "$baseline"
 fi

@@ -6,6 +6,8 @@
 //!   the sharded epoch — each parallel row measured on both threading
 //!   substrates (spawn-per-call scoped vs the persistent worker pool)
 //!   at p = 10⁴ — recorded to BENCH_kernels.json;
+//! * the same sparse scan served out-of-core from a `.saifbin` file
+//!   (serial + pooled streaming), quantifying the disk-streaming tax;
 //! * the same operations through the PJRT artifacts — call overhead +
 //!   the packed-buffer cache effect.
 
@@ -87,7 +89,8 @@ fn main() {
     // backend win (scan cost ∝ nnz) and the column-chunked thread win.
     let (n_big, p_big, density) = (256usize, 10_000usize, 0.01f64);
     let dense_prob = synth::synth_linear(n_big, p_big, 5).problem();
-    let sparse_prob = synth::synth_sparse(n_big, p_big, density, 5).problem();
+    let sparse_ds = synth::synth_sparse(n_big, p_big, density, 5);
+    let sparse_prob = sparse_ds.problem();
     let theta_big: Vec<f64> = (0..n_big).map(|j| (j as f64 * 0.13).sin() * 1e-3).collect();
     let hw = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     let mut bench_rec = Json::obj();
@@ -153,6 +156,44 @@ fn main() {
         "sparse_over_dense_serial_speedup",
         Json::Num(serial_us[0] / serial_us[1].max(1e-12)),
     );
+
+    // --- out-of-core streaming scan: the same sparse problem served
+    // from a .saifbin file (Design::OocCsc). The delta over the
+    // in-memory CSC rows is the pure disk-streaming tax (page cache
+    // warm after the first pass); results are bitwise identical.
+    let ooc_path = std::env::temp_dir().join(format!("saif_bench_{}.saifbin", std::process::id()));
+    let ooc_path = ooc_path.to_str().expect("utf-8 temp path");
+    saif::data::io::write_saifbin(&sparse_ds, ooc_path).expect("write bench saifbin");
+    let ooc_prob = saif::data::io::read_saifbin(ooc_path).expect("read bench saifbin").problem();
+    let mut ooc_serial = NativeEngine::new();
+    let s_ooc = bench_secs(0.3, 2_000, || {
+        std::hint::black_box(ooc_serial.scores(&ooc_prob, &theta_big));
+    });
+    t.row(vec![
+        format!("scores ooc-csc serial (p={p_big}, n={n_big})"),
+        p_big.to_string(),
+        format!("{:.2}us", s_ooc * 1e6),
+        format!("{:.2}x of in-memory csc", s_ooc * 1e6 / serial_us[1].max(1e-12)),
+    ]);
+    let mut ooc_pooled = NativeEngine::with_parallelism(Parallelism::Fixed(hw));
+    ooc_pooled.set_pool_mode(PoolMode::Persistent);
+    let s_ooc_p = bench_secs(0.3, 2_000, || {
+        std::hint::black_box(ooc_pooled.scores(&ooc_prob, &theta_big));
+    });
+    t.row(vec![
+        format!("scores ooc-csc pooled x{hw}"),
+        p_big.to_string(),
+        format!("{:.2}us", s_ooc_p * 1e6),
+        format!("speedup {:.2}x over ooc serial", s_ooc / s_ooc_p),
+    ]);
+    bench_rec
+        .set("ooc_serial_us", Json::Num(s_ooc * 1e6))
+        .set("ooc_pooled_us", Json::Num(s_ooc_p * 1e6))
+        .set(
+            "ooc_over_sparse_serial",
+            Json::Num(s_ooc * 1e6 / serial_us[1].max(1e-12)),
+        );
+    std::fs::remove_file(ooc_path).ok();
 
     // --- serial vs sharded active-block CM epoch, |A| = 2000 ---
     // The reduced-model epoch is SAIF's hot path once |A| grows; this

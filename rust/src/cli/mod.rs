@@ -5,13 +5,16 @@
 //! repro solve      --dataset sim --lambda-frac 0.1 [--method saif]
 //!                  [--engine native|pjrt] [--eps 1e-6] [--seed 42]
 //!                  [--libsvm path --logistic [--dense]]
+//!                  [--saifbin path.saifbin] [--design mem|ooc]
 //!                  [--threads serial|auto|N] [--epoch-shards auto|N]
 //!                  [--pool persistent|scoped]
 //! repro path       --dataset sim --lambdas 0.9:0.01:16 [--method saif]
 //!                  [--engine native|pjrt] [--eps 1e-6] [...]
+//! repro convert    --libsvm in.svm --out out.saifbin [--logistic]
 //! repro experiment --id fig2-sim [--out out]   (or --all)
 //! repro serve      [--workers 4] [--datasets 3] [--lambdas 8]
 //!                  [--engine native|pjrt] [--method saif]
+//!                  [--design mem|ooc]
 //! repro list
 //! ```
 //!
@@ -24,7 +27,14 @@
 //!
 //! `--libsvm` loads SPARSE (CSC, no n×p densification) so text-scale
 //! files fit in memory; `--dense` densifies explicitly for dense-path
-//! comparisons. `--threads` parallelizes the full-p screening scans;
+//! comparisons. `--saifbin` opens a `.saifbin` dataset OUT-OF-CORE
+//! (`Design::OocCsc`: the design streams from disk, p bounded by disk
+//! not RAM); `--design ooc` forces any loaded dataset out-of-core by
+//! spilling it to a temp `.saifbin` first, and `--design mem`
+//! materializes a `.saifbin` design back into memory — both
+//! bitwise-identical to solving in memory. `repro convert` turns a
+//! LibSVM file into a `.saifbin`. `--threads` parallelizes the full-p
+//! screening scans;
 //! `--epoch-shards` shards the active-block CM epochs (default: follow
 //! `--threads` once the block is wide enough; a fixed N makes the
 //! solve trajectory bitwise reproducible across machines). `--pool`
@@ -117,7 +127,8 @@ impl Args {
 }
 
 /// Dataset-selection flags shared by `solve`/`path`/`cv`.
-const DATASET_FLAGS: &[&str] = &["dataset", "seed", "libsvm", "logistic", "dense"];
+const DATASET_FLAGS: &[&str] =
+    &["dataset", "seed", "libsvm", "logistic", "dense", "saifbin", "design"];
 
 /// Valid flags per subcommand (`None` ⇒ unknown subcommand → help).
 fn valid_flags(cmd: &str) -> Option<Vec<&'static str>> {
@@ -136,10 +147,11 @@ fn valid_flags(cmd: &str) -> Option<Vec<&'static str>> {
                 "lambdas", "method", "engine", "eps", "threads", "epoch-shards", "pool",
             ]);
         }
+        "convert" => v.extend_from_slice(&["libsvm", "out", "logistic"]),
         "experiment" => v.extend_from_slice(&["id", "all", "out"]),
         "serve" => v.extend_from_slice(&[
             "workers", "datasets", "lambdas", "method", "engine", "eps", "threads",
-            "epoch-shards", "pool",
+            "epoch-shards", "pool", "design",
         ]),
         "cv" => {
             v.extend_from_slice(DATASET_FLAGS);
@@ -168,6 +180,7 @@ pub fn main() {
                 match args.cmd.as_str() {
                     "solve" => cmd_solve(&args),
                     "path" => cmd_path(&args),
+                    "convert" => cmd_convert(&args),
                     "experiment" => cmd_experiment(&args),
                     "serve" => cmd_serve(&args),
                     "cv" => cmd_cv(&args),
@@ -188,17 +201,21 @@ USAGE:
                    [--method saif|dyn|blitz|homotopy|fused|group[:K]]
                    [--engine native|pjrt] [--eps 1e-6] [--seed 42]
                    [--libsvm <path> [--logistic] [--dense]]
+                   [--saifbin <path>] [--design mem|ooc]
                    [--threads serial|auto|N] [--epoch-shards auto|N]
                    [--pool persistent|scoped]
   repro path       --dataset <name> --lambdas a:b:k   warm-chained λ-path
                    [--method ...] [--engine ...] [--eps 1e-6] [...]
                    (k log-spaced λ from a·λ_max down to b·λ_max)
+  repro convert    --libsvm <in.svm> --out <out.saifbin> [--logistic]
+                                              LibSVM → .saifbin converter
   repro experiment --id <id> [--out out]      run one paper experiment
   repro experiment --all [--out out]          run every experiment
   repro serve      [--workers N] [--datasets D] [--lambdas L]
                    [--method ...] [--engine native|pjrt]
                    [--threads serial|auto|N] [--epoch-shards auto|N]
-                   [--pool persistent|scoped]  coordinator demo workload
+                   [--pool persistent|scoped] [--design mem|ooc]
+                                              coordinator demo workload
   repro cv         --dataset <name> [--folds 5] [--lambdas 20]
                    [--workers 4]              k-fold CV λ selection
   repro list                                  datasets + experiment ids
@@ -210,6 +227,14 @@ USAGE:
   groups of K features, default 8; least squares only).
   --libsvm loads sparse (CSC; the file is never densified), so
   rcv1-scale text corpora fit in memory; add --dense to densify.
+  --saifbin opens a .saifbin dataset OUT-OF-CORE: only the labels and
+  the column-pointer index are resident, row indices and values stream
+  from disk — p is bounded by disk, not RAM. --design ooc forces any
+  loaded dataset out-of-core (spilled to a temp .saifbin first);
+  --design mem materializes a .saifbin back into memory. Solutions are
+  bitwise identical either way. On serve, --design ooc registers each
+  dataset by path on the coordinator (one read-only handle per worker
+  slot) and serves through the out-of-core path.
   --threads chunks the O(n·p) screening scans over worker threads.
   --epoch-shards shards the active-block CM epochs (Jacobi shards +
   deterministic residual merge). Default 'auto' follows --threads once
@@ -229,16 +254,66 @@ fn cmd_list() -> i32 {
 }
 
 fn load_dataset(args: &Args) -> Result<data::Dataset, String> {
-    if let Some(path) = args.get("libsvm") {
+    let mut ds = if let Some(path) = args.get("saifbin") {
+        // reject rather than silently ignore: a second dataset source
+        // would be dropped on the floor, and the loss comes from the
+        // file's header flag (set at `repro convert --logistic` time)
+        // while the design stays out-of-core
+        if args.has("libsvm") || args.has("dataset") || args.has("seed") {
+            return Err(
+                "--saifbin is a complete dataset source; it cannot be combined with \
+                 --libsvm/--dataset/--seed"
+                    .into(),
+            );
+        }
+        if args.has("logistic") || args.has("dense") {
+            return Err(
+                "--logistic/--dense do not apply to --saifbin: the loss is the file \
+                 header's flag (set it with `repro convert --logistic`) and the design \
+                 stays out-of-core (use --design mem to materialize)"
+                    .into(),
+            );
+        }
+        data::io::read_saifbin(path)?
+    } else if let Some(path) = args.get("libsvm") {
         let mut ds = data::io::read_libsvm(path, args.has("logistic"))?;
         if args.has("dense") {
             ds.x = ds.x.to_dense().into();
         }
-        return Ok(ds);
+        ds
+    } else {
+        let name = args.get("dataset").unwrap_or("sim-small");
+        let seed = args.get_usize("seed", 42) as u64;
+        data::by_name(name, seed).ok_or_else(|| format!("unknown dataset '{name}'"))?
+    };
+    match design_arg(args)? {
+        None => {}
+        Some(DesignChoice::Ooc) => ds = data::io::spill_to_ooc(ds)?,
+        Some(DesignChoice::Mem) => {
+            if let crate::linalg::Design::OocCsc(m) = &ds.x {
+                let mem = m.to_csc();
+                ds.x = mem.into();
+            }
+        }
     }
-    let name = args.get("dataset").unwrap_or("sim-small");
-    let seed = args.get_usize("seed", 42) as u64;
-    data::by_name(name, seed).ok_or_else(|| format!("unknown dataset '{name}'"))
+    Ok(ds)
+}
+
+/// `--design` choice: keep as loaded (None), force out-of-core, or
+/// materialize in memory.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum DesignChoice {
+    Mem,
+    Ooc,
+}
+
+fn design_arg(args: &Args) -> Result<Option<DesignChoice>, String> {
+    match args.get("design") {
+        None => Ok(None),
+        Some("mem") => Ok(Some(DesignChoice::Mem)),
+        Some("ooc") => Ok(Some(DesignChoice::Ooc)),
+        Some(other) => Err(format!("bad --design value '{other}' (mem|ooc)")),
+    }
 }
 
 fn parallelism_arg(args: &Args) -> Result<Parallelism, String> {
@@ -351,6 +426,17 @@ fn check_method_fits(method: Method, ds: &data::Dataset) -> Result<(), String> {
             "--method group supports least squares only, but dataset '{}' is {:?}",
             ds.name, ds.loss
         ));
+    }
+    // the fused tree transform needs contiguous dense columns, so it
+    // would silently materialize the whole n×p design in RAM —
+    // exactly what an out-of-core design exists to avoid
+    if matches!(method, Method::Fused) && ds.x.is_ooc() {
+        return Err(
+            "--method fused densifies the design (the tree transform needs contiguous \
+             columns), which defeats an out-of-core design; rerun with --design mem if \
+             the design fits in RAM"
+                .into(),
+        );
     }
     Ok(())
 }
@@ -500,6 +586,29 @@ fn cmd_path(args: &Args) -> i32 {
     })
 }
 
+fn cmd_convert(args: &Args) -> i32 {
+    let run = || -> Result<i32, String> {
+        let src = args
+            .get("libsvm")
+            .ok_or("need --libsvm <in.svm> (the LibSVM file to convert)")?;
+        let dst = args.get("out").ok_or("need --out <out.saifbin>")?;
+        let (n, p, nnz) =
+            data::io::convert_libsvm_to_saifbin(src, dst, args.has("logistic"))?;
+        let bytes = std::fs::metadata(dst).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "converted {src} -> {dst}: n={n} p={p} nnz={nnz} ({bytes} bytes; resident \
+             footprint when opened: {} bytes header+labels+colptr)",
+            40 + 8 * (n as u64 + p as u64 + 1),
+        );
+        println!("solve it out-of-core with: repro solve --saifbin {dst} --lambda-frac 0.1");
+        Ok(0)
+    };
+    run().unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        2
+    })
+}
+
 fn cmd_experiment(args: &Args) -> i32 {
     let out = args.get("out").unwrap_or("out");
     let ids: Vec<&str> = if args.has("all") {
@@ -563,46 +672,129 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    let design = match design_arg(args) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let ooc = design == Some(DesignChoice::Ooc);
+    if ooc && matches!(method, Method::Fused) {
+        eprintln!(
+            "error: --method fused densifies the design per worker slot, which defeats \
+             --design ooc; serve it with --design mem instead"
+        );
+        return 2;
+    }
 
     println!(
-        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={}, scan threads={par:?}, epoch shards={shards:?}, pool={}",
+        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={}, scan threads={par:?}, epoch shards={shards:?}, pool={}, design={}",
         method.name(),
-        pool.name()
+        pool.name(),
+        if ooc { "ooc" } else { "mem" },
     );
-    let mut reqs = Vec::new();
-    let mut id = 0u64;
-    for d in 0..n_datasets {
-        let ds = data::synth::synth_linear(100, 1000 + 200 * d, 1000 + d as u64);
-        let prob = Arc::new(ds.problem());
-        let lam_max = prob.lambda_max();
-        for k in 1..=n_lambdas {
-            reqs.push(SolveRequest {
-                id,
-                dataset_key: d as u64,
-                problem: prob.clone(),
-                lam: lam_max * (1e-2f64).powf(k as f64 / n_lambdas as f64),
-                method,
-                tree: None,
-                spec: SolveSpec { eps, ..Default::default() },
-            });
-            id += 1;
-        }
-    }
-    let total = reqs.len();
-    let batch = match Coordinator::builder()
+    let builder = Coordinator::builder()
         .workers(workers)
         .engine(engine)
         .parallelism(par)
         .epoch_shards(shards)
-        .pool(pool)
-        .run_batch(reqs)
-    {
-        Ok(b) => b,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 1;
+        .pool(pool);
+    let grid = |lam_max: f64| -> Vec<f64> {
+        (1..=n_lambdas)
+            .map(|k| lam_max * (1e-2f64).powf(k as f64 / n_lambdas as f64))
+            .collect()
+    };
+    let batch = if ooc {
+        // out-of-core serving: each dataset is spilled to a .saifbin
+        // and registered by path — the coordinator opens one read-only
+        // handle per worker slot and requests resolve to the affine
+        // slot's own handle
+        let run = |spill_paths: &mut Vec<String>| -> Result<crate::coordinator::BatchRun, String> {
+            // setup phase, outside the timed window (the mem branch
+            // builds its requests before run_batch starts its clock,
+            // so ooc-vs-mem wall/throughput numbers stay comparable):
+            // synthesize, spill, register, and read λ_max from the
+            // registered handle — one norms pass total, done by
+            // register_saifbin itself
+            let mut c = builder.clone().build();
+            let mut lam_maxes = Vec::with_capacity(n_datasets);
+            for d in 0..n_datasets {
+                let ds = data::synth::synth_linear(100, 1000 + 200 * d, 1000 + d as u64);
+                let path = std::env::temp_dir().join(format!(
+                    "saif_serve_{}_{d}.saifbin",
+                    std::process::id()
+                ));
+                let path = path.to_str().ok_or("non-UTF-8 temp path")?.to_string();
+                data::io::write_saifbin(&ds, &path)?;
+                spill_paths.push(path.clone());
+                let prob = c.register_saifbin(d as u64, &path)?;
+                lam_maxes.push(prob.lambda_max());
+            }
+            // timed window: submit + drain, like run_batch
+            let sw = crate::util::Stopwatch::start();
+            let mut id = 0u64;
+            for (d, &lam_max) in lam_maxes.iter().enumerate() {
+                for lam in grid(lam_max) {
+                    c.submit_registered(
+                        id,
+                        d as u64,
+                        lam,
+                        method,
+                        SolveSpec { eps, ..Default::default() },
+                    )
+                    .map_err(|e| e.to_string())?;
+                    id += 1;
+                }
+            }
+            let responses = c.drain().map_err(|e| e.to_string())?;
+            c.shutdown();
+            Ok(crate::coordinator::BatchRun::collect(responses, sw.secs()))
+        };
+        let mut spill_paths = Vec::new();
+        let result = run(&mut spill_paths);
+        // cleanup runs on success AND on every early-return error path
+        // (unlinking a file a straggling worker still has open is safe
+        // on unix — its descriptor stays valid)
+        for p in &spill_paths {
+            std::fs::remove_file(p).ok();
+        }
+        match result {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let mut reqs = Vec::new();
+        let mut id = 0u64;
+        for d in 0..n_datasets {
+            let ds = data::synth::synth_linear(100, 1000 + 200 * d, 1000 + d as u64);
+            let prob = Arc::new(ds.problem());
+            let lam_max = prob.lambda_max();
+            for lam in grid(lam_max) {
+                reqs.push(SolveRequest {
+                    id,
+                    dataset_key: d as u64,
+                    problem: prob.clone(),
+                    lam,
+                    method,
+                    tree: None,
+                    spec: SolveSpec { eps, ..Default::default() },
+                });
+                id += 1;
+            }
+        }
+        match builder.run_batch(reqs) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
         }
     };
+    let total = batch.responses.len();
     let (responses, lat, wall) = (batch.responses, batch.latency, batch.wall_secs);
     let worst_kkt = responses
         .iter()
@@ -696,10 +888,55 @@ mod tests {
 
     #[test]
     fn every_subcommand_has_a_flag_table() {
-        for cmd in ["solve", "path", "experiment", "serve", "cv", "list"] {
+        for cmd in ["solve", "path", "convert", "experiment", "serve", "cv", "list"] {
             assert!(valid_flags(cmd).is_some(), "{cmd}");
         }
         assert!(valid_flags("frobnicate").is_none());
+    }
+
+    #[test]
+    fn design_arg_parses_and_rejects() {
+        let a = Args::parse(&argv(&["solve", "--design", "ooc"]));
+        assert_eq!(design_arg(&a).unwrap(), Some(DesignChoice::Ooc));
+        let a = Args::parse(&argv(&["solve", "--design", "mem"]));
+        assert_eq!(design_arg(&a).unwrap(), Some(DesignChoice::Mem));
+        let a = Args::parse(&argv(&["solve"]));
+        assert_eq!(design_arg(&a).unwrap(), None);
+        let a = Args::parse(&argv(&["solve", "--design", "mmap"]));
+        assert!(design_arg(&a).is_err());
+        // the flags are in every allowlist that loads datasets + serve
+        for cmd in ["solve", "path", "cv", "serve"] {
+            assert!(valid_flags(cmd).unwrap().contains(&"design"), "{cmd}");
+        }
+        for cmd in ["solve", "path", "cv"] {
+            assert!(valid_flags(cmd).unwrap().contains(&"saifbin"), "{cmd}");
+        }
+        assert!(valid_flags("convert").unwrap().contains(&"libsvm"));
+        assert!(valid_flags("convert").unwrap().contains(&"out"));
+    }
+
+    #[test]
+    fn load_dataset_design_ooc_spills_and_mem_materializes() {
+        let a = Args::parse(&argv(&["solve", "--dataset", "sim-sparse-small", "--design", "ooc"]));
+        let ds = load_dataset(&a).unwrap();
+        assert!(ds.x.is_ooc(), "--design ooc must yield an out-of-core design");
+        // and --design mem on a .saifbin brings it back into memory
+        let path =
+            std::env::temp_dir().join(format!("saif_cli_design_{}.saifbin", std::process::id()));
+        let path = path.to_str().unwrap();
+        data::io::write_saifbin(&data::by_name("sim-sparse-small", 1).unwrap(), path).unwrap();
+        let a = Args::parse(&argv(&["solve", "--saifbin", path, "--design", "mem"]));
+        let ds = load_dataset(&a).unwrap();
+        assert!(!ds.x.is_ooc() && ds.x.is_sparse());
+        let a = Args::parse(&argv(&["solve", "--saifbin", path]));
+        assert!(load_dataset(&a).unwrap().x.is_ooc());
+        // conflicting dataset sources / inapplicable flags are
+        // rejected, not silently ignored
+        let a = Args::parse(&argv(&["solve", "--saifbin", path, "--libsvm", "x.svm"]));
+        assert!(load_dataset(&a).is_err());
+        let a = Args::parse(&argv(&["solve", "--saifbin", path, "--logistic"]));
+        assert!(load_dataset(&a).is_err());
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -106,6 +106,16 @@ pub enum CoordinatorError {
     /// its queued requests are lost and its slot accepts no more work.
     /// The pool threads themselves survive.
     WorkerDead { worker: usize },
+    /// `submit_registered` named a dataset key that was never
+    /// registered via [`Coordinator::register_saifbin`].
+    UnknownDataset { key: u64 },
+    /// `submit_registered` was asked to serve [`Method::Fused`]
+    /// against an out-of-core dataset: the fused tree transform
+    /// densifies the design (the full n×p in RAM, once per worker
+    /// slot), which defeats registering by path. Submit fused
+    /// problems inline via [`Coordinator::submit`] with an in-memory
+    /// design (and a real [`SolveRequest::tree`]).
+    FusedOnOutOfCore { key: u64 },
 }
 
 impl std::fmt::Display for CoordinatorError {
@@ -113,6 +123,17 @@ impl std::fmt::Display for CoordinatorError {
         match self {
             CoordinatorError::WorkerDead { worker } => {
                 write!(f, "coordinator worker {worker} died")
+            }
+            CoordinatorError::UnknownDataset { key } => {
+                write!(f, "dataset key {key} is not registered")
+            }
+            CoordinatorError::FusedOnOutOfCore { key } => {
+                write!(
+                    f,
+                    "fused requests against registered (out-of-core) dataset {key} would \
+                     densify the design per worker slot; submit them inline with an \
+                     in-memory design"
+                )
             }
         }
     }
@@ -220,6 +241,7 @@ impl CoordinatorBuilder {
             affinity: HashMap::new(),
             next_worker: 0,
             inflight: vec![0; self.n_workers],
+            registered: HashMap::new(),
         }
     }
 
@@ -232,12 +254,7 @@ impl CoordinatorBuilder {
         }
         let responses = c.drain()?;
         c.shutdown();
-        let wall_secs = sw.secs();
-        let mut latency = LatencyStats::new();
-        for r in &responses {
-            latency.record_secs(r.secs);
-        }
-        Ok(BatchRun { responses, latency, wall_secs })
+        Ok(BatchRun::collect(responses, sw.secs()))
     }
 }
 
@@ -247,6 +264,21 @@ pub struct BatchRun {
     pub responses: Vec<SolveResponse>,
     pub latency: LatencyStats,
     pub wall_secs: f64,
+}
+
+impl BatchRun {
+    /// Assemble a batch outcome from drained responses + wall time
+    /// (folds the per-response latency) — the one place this summary
+    /// is computed, shared by [`CoordinatorBuilder::run_batch`] and
+    /// callers that drive `submit`/`drain` themselves (e.g. serving
+    /// path-registered datasets).
+    pub fn collect(responses: Vec<SolveResponse>, wall_secs: f64) -> BatchRun {
+        let mut latency = LatencyStats::new();
+        for r in &responses {
+            latency.record_secs(r.secs);
+        }
+        BatchRun { responses, latency, wall_secs }
+    }
 }
 
 /// One logical worker: its request queue, scheduling/liveness flags,
@@ -292,6 +324,11 @@ pub struct Coordinator {
     next_worker: usize,
     /// Outstanding requests per worker.
     inflight: Vec<usize>,
+    /// Path-registered datasets: key → one [`Problem`] per worker
+    /// slot, each holding its own read-only file handle + column cache
+    /// ([`Coordinator::register_saifbin`]). Workers never contend on
+    /// one handle's cache.
+    registered: HashMap<u64, Vec<Arc<Problem>>>,
 }
 
 impl Coordinator {
@@ -300,16 +337,21 @@ impl Coordinator {
         CoordinatorBuilder::default()
     }
 
-    /// Submit a request (dataset-affine routing) and schedule a pool
-    /// task to drain the worker's queue if none is running. Fails with
-    /// the dead worker's id if the affine worker's slot has died.
-    pub fn submit(&mut self, req: SolveRequest) -> Result<(), CoordinatorError> {
+    /// Sticky dataset-affine routing: the first request for a key
+    /// picks the next worker round-robin; every later request for the
+    /// same key lands on the same worker.
+    fn route(&mut self, dataset_key: u64) -> usize {
         let n = self.slots.len();
-        let worker = *self.affinity.entry(req.dataset_key).or_insert_with(|| {
+        *self.affinity.entry(dataset_key).or_insert_with(|| {
             let w = self.next_worker;
             self.next_worker = (self.next_worker + 1) % n;
             w
-        });
+        })
+    }
+
+    /// Queue a routed request on its worker and schedule a pool task
+    /// to drain the queue if none is running.
+    fn enqueue(&mut self, worker: usize, req: SolveRequest) -> Result<(), CoordinatorError> {
         let slot = &self.slots[worker];
         if slot.dead.load(Ordering::Acquire) {
             return Err(CoordinatorError::WorkerDead { worker });
@@ -322,6 +364,79 @@ impl Coordinator {
             pool::shared().spawn(move || worker_task(worker, slot, res_tx));
         }
         Ok(())
+    }
+
+    /// Submit a request (dataset-affine routing) and schedule a pool
+    /// task to drain the worker's queue if none is running. Fails with
+    /// the dead worker's id if the affine worker's slot has died.
+    pub fn submit(&mut self, req: SolveRequest) -> Result<(), CoordinatorError> {
+        let worker = self.route(req.dataset_key);
+        self.enqueue(worker, req)
+    }
+
+    /// Register a `.saifbin` dataset under `key` for out-of-core
+    /// serving: the file is opened once per worker slot, so each
+    /// worker streams through its OWN read-only handle and hot-column
+    /// cache (no cross-worker cache contention, no shared cursor). The
+    /// column norms are computed once — one streaming pass — and
+    /// shared across the slots' problems. Returns the registered
+    /// problem (slot 0's handle) so callers can read n/p/λ_max without
+    /// opening the file again.
+    pub fn register_saifbin(&mut self, key: u64, path: &str) -> Result<Arc<Problem>, String> {
+        let ds = crate::data::io::read_saifbin(path)?;
+        let prob0 = Arc::new(ds.problem());
+        let mat = match &prob0.x {
+            crate::linalg::Design::OocCsc(m) => m.clone(),
+            _ => unreachable!("read_saifbin always yields an out-of-core design"),
+        };
+        let mut probs = Vec::with_capacity(self.slots.len());
+        probs.push(prob0.clone());
+        for _ in 1..self.slots.len() {
+            let mut p = (*prob0).clone();
+            p.x = crate::linalg::Design::OocCsc(
+                mat.reopen().map_err(|e| format!("reopen {path}: {e}"))?,
+            );
+            probs.push(Arc::new(p));
+        }
+        self.registered.insert(key, probs);
+        Ok(prob0)
+    }
+
+    /// Submit a solve against a dataset registered by path
+    /// ([`Coordinator::register_saifbin`]): the request is routed by
+    /// affinity, then built around the affine worker slot's own
+    /// problem handle. All requests for one key share that slot's
+    /// `Arc`, so the worker batches them into λ-path sessions exactly
+    /// like inline submissions.
+    ///
+    /// [`Method::Fused`] is rejected here
+    /// ([`CoordinatorError::FusedOnOutOfCore`]): its tree transform
+    /// densifies the design, which an out-of-core registration exists
+    /// to avoid — submit fused problems inline via
+    /// [`Coordinator::submit`] with an in-memory design and
+    /// [`SolveRequest::tree`] set.
+    pub fn submit_registered(
+        &mut self,
+        id: u64,
+        key: u64,
+        lam: f64,
+        method: Method,
+        spec: SolveSpec,
+    ) -> Result<(), CoordinatorError> {
+        // validate BEFORE routing: a failed probe must not burn a
+        // round-robin slot or leave a phantom affinity entry
+        if matches!(method, Method::Fused) {
+            return Err(CoordinatorError::FusedOnOutOfCore { key });
+        }
+        if !self.registered.contains_key(&key) {
+            return Err(CoordinatorError::UnknownDataset { key });
+        }
+        let worker = self.route(key);
+        let problem = self.registered[&key][worker].clone();
+        self.enqueue(
+            worker,
+            SolveRequest { id, dataset_key: key, problem, lam, method, tree: None, spec },
+        )
     }
 
     /// Wait for all in-flight responses. Fails with the dead worker's
@@ -708,6 +823,46 @@ mod tests {
             .collect();
         supports.dedup();
         assert_eq!(supports.len(), 1, "methods disagree: {supports:?}");
+    }
+
+    #[test]
+    fn registered_saifbin_dataset_serves_with_certificates() {
+        let ds = synth::synth_sparse(40, 300, 0.05, 401);
+        let path =
+            std::env::temp_dir().join(format!("saif_coord_reg_{}.saifbin", std::process::id()));
+        let path = path.to_str().unwrap();
+        crate::data::io::write_saifbin(&ds, path).unwrap();
+        let prob_mem = ds.problem();
+        let lam_max = prob_mem.lambda_max();
+
+        let mut c = Coordinator::builder().workers(2).build();
+        // unknown key fails cleanly before anything is queued
+        assert_eq!(
+            c.submit_registered(0, 9, lam_max, Method::Saif, SolveSpec::default()),
+            Err(CoordinatorError::UnknownDataset { key: 9 })
+        );
+        c.register_saifbin(9, path).unwrap();
+        for (i, f) in [0.3f64, 0.1].iter().enumerate() {
+            c.submit_registered(
+                i as u64,
+                9,
+                lam_max * f,
+                Method::Saif,
+                SolveSpec { eps: 1e-8, ..Default::default() },
+            )
+            .unwrap();
+        }
+        let responses = c.drain().unwrap();
+        c.shutdown();
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert!(r.gap <= 1e-8, "gap {}", r.gap);
+            // certify against the IN-MEMORY problem: the out-of-core
+            // solve must be optimal for the same data
+            let viol = prob_mem.kkt_violation(&r.beta, r.lam);
+            assert!(viol < 1e-3 * r.lam.max(1.0), "req {}: kkt {viol}", r.id);
+        }
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -15,11 +15,22 @@
 //! `write_libsvm` therefore emits a `# saif-libsvm n=.. p=..` header
 //! comment which `read_libsvm` honours, and `read_libsvm_with_dim`
 //! accepts an explicit expected dimension (e.g. from a model
-//! checkpoint) that overrides both.
+//! checkpoint) that overrides both. An index beyond the declared
+//! dimension is a clean per-line error, never a downstream
+//! out-of-bounds panic.
+//!
+//! This module also owns the `.saifbin` dataset IO — the on-disk
+//! format behind the out-of-core design backend
+//! ([`crate::linalg::OocCsc`], format spec in [`crate::linalg::ooc`]):
+//! [`write_saifbin`] serializes any dataset, [`read_saifbin`] opens
+//! one *without* loading the design into RAM, and
+//! [`convert_libsvm_to_saifbin`] is the text → binary converter behind
+//! `repro convert`.
 
 use std::io::{BufRead, BufWriter, Write};
 
-use crate::linalg::CscMat;
+use crate::linalg::ooc::{FLAG_LOGISTIC, MAGIC};
+use crate::linalg::{CscMat, Design, OocCsc};
 use crate::model::LossKind;
 
 use super::Dataset;
@@ -77,6 +88,18 @@ pub fn read_libsvm_with_dim(
                 .map_err(|e| format!("{path}:{}: bad value: {e}", lineno + 1))?;
             if i == 0 {
                 return Err(format!("{path}:{}: libsvm indices are 1-based", lineno + 1));
+            }
+            // validate against the declared dimension as soon as one is
+            // known, so a row whose index exceeds the header's p fails
+            // HERE with the offending line — not later (or not at all)
+            // in CscMat construction
+            if let Some(dp) = expected_p.or(header_p) {
+                if i > dp {
+                    return Err(format!(
+                        "{path}:{}: feature index {i} exceeds declared dimension {dp}",
+                        lineno + 1
+                    ));
+                }
             }
             max_idx = max_idx.max(i);
             feats.push((i - 1, v));
@@ -172,6 +195,118 @@ pub fn write_libsvm(ds: &Dataset, path: &str) -> Result<(), String> {
         w.write_all(line.as_bytes()).map_err(werr)?;
     }
     Ok(())
+}
+
+/// Write a dataset as a `.saifbin` file (the out-of-core design
+/// format — spec in [`crate::linalg::ooc`]). Labels roundtrip
+/// bit-exactly; stored entries are the design's effective nonzeros in
+/// column order, so reopening the file as [`OocCsc`] is bitwise
+/// equivalent to the in-memory sparse design over the same entries.
+/// Streams column by column — memory stays O(one column) beyond the
+/// source design itself. (A centered design writes its *effective*
+/// columns, which the mean correction makes dense — convert before
+/// standardizing, not after.)
+pub fn write_saifbin(ds: &Dataset, path: &str) -> Result<(), String> {
+    let (n, p) = (ds.n(), ds.p());
+    let werr = |e: std::io::Error| format!("write {path}: {e}");
+    // pass 1: per-column nonzero counts → the column-pointer index
+    let mut counts = vec![0u64; p];
+    for (j, c) in counts.iter_mut().enumerate() {
+        *c = ds.x.col_iter(j).filter(|&(_, v)| v != 0.0).count() as u64;
+    }
+    let nnz: u64 = counts.iter().sum();
+    let file = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC).map_err(werr)?;
+    let flags = match ds.loss {
+        LossKind::Logistic => FLAG_LOGISTIC,
+        LossKind::Squared => 0,
+    };
+    for v in [n as u64, p as u64, nnz, flags] {
+        w.write_all(&v.to_le_bytes()).map_err(werr)?;
+    }
+    for &yi in &ds.y {
+        w.write_all(&yi.to_bits().to_le_bytes()).map_err(werr)?;
+    }
+    let mut run = 0u64;
+    w.write_all(&run.to_le_bytes()).map_err(werr)?;
+    for &c in &counts {
+        run += c;
+        w.write_all(&run.to_le_bytes()).map_err(werr)?;
+    }
+    // pass 2: row indices, pass 3: values — two contiguous regions, so
+    // any consecutive-column range maps to two contiguous byte ranges
+    for j in 0..p {
+        for (i, v) in ds.x.col_iter(j) {
+            if v != 0.0 {
+                w.write_all(&(i as u64).to_le_bytes()).map_err(werr)?;
+            }
+        }
+    }
+    for j in 0..p {
+        for (_, v) in ds.x.col_iter(j) {
+            if v != 0.0 {
+                w.write_all(&v.to_bits().to_le_bytes()).map_err(werr)?;
+            }
+        }
+    }
+    w.flush().map_err(werr)
+}
+
+/// Open a `.saifbin` dataset WITHOUT loading the design into RAM: the
+/// labels and column-pointer index become resident, the design streams
+/// from disk as [`Design::OocCsc`]. The loss comes from the header's
+/// logistic flag.
+pub fn read_saifbin(path: &str) -> Result<Dataset, String> {
+    let m = OocCsc::open(path).map_err(|e| format!("open {path}: {e}"))?;
+    let y = m.labels().to_vec();
+    let loss = if m.logistic() { LossKind::Logistic } else { LossKind::Squared };
+    Ok(Dataset {
+        name: format!("saifbin({path})"),
+        x: Design::OocCsc(m),
+        y,
+        loss,
+        tree: None,
+    })
+}
+
+/// LibSVM → `.saifbin` converter (the `repro convert` subcommand).
+/// Returns (n, p, nnz). Conversion itself holds the CSC transpose in
+/// memory — comparable to the input text file's size — but everything
+/// *downstream* of the produced file runs out-of-core.
+pub fn convert_libsvm_to_saifbin(
+    src: &str,
+    dst: &str,
+    logistic: bool,
+) -> Result<(usize, usize, usize), String> {
+    let ds = read_libsvm(src, logistic)?;
+    write_saifbin(&ds, dst)?;
+    Ok((ds.n(), ds.p(), ds.x.nnz()))
+}
+
+/// Force a dataset out-of-core: spill its design to a `.saifbin` file
+/// under the temp dir (unless it already is out-of-core) and reopen it
+/// as [`Design::OocCsc`]. Used by the CLI's `--design ooc`; the spill
+/// file is left behind for the OS temp cleaner.
+pub fn spill_to_ooc(ds: Dataset) -> Result<Dataset, String> {
+    if ds.x.is_ooc() {
+        return Ok(ds);
+    }
+    // process-unique AND call-unique: a heap address can be reused by a
+    // later dataset, and truncating a path an earlier OocCsc still has
+    // open would corrupt its reads mid-solve
+    static SPILL_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SPILL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let path = std::env::temp_dir().join(format!(
+        "saif_spill_{}_{seq}.saifbin",
+        std::process::id(),
+    ));
+    let path = path.to_str().ok_or("non-UTF-8 temp path")?.to_string();
+    write_saifbin(&ds, &path)?;
+    let mut out = read_saifbin(&path)?;
+    out.name = format!("{}+ooc", ds.name);
+    out.tree = ds.tree;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -285,5 +420,104 @@ mod tests {
         let err = read_libsvm(path.to_str().unwrap(), false).unwrap_err();
         assert!(err.contains("duplicate feature index 2"), "{err}");
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn index_beyond_header_dimension_errors_with_line() {
+        // the header's p must not be trusted blindly: a row with an
+        // index ≥ p is a clean error naming the offending line, not a
+        // later out-of-bounds panic in CscMat construction
+        let path = std::env::temp_dir().join("saif_io_overflow.svm");
+        std::fs::write(&path, "# saif-libsvm n=2 p=2\n1 1:1.0\n-1 3:2.0\n").unwrap();
+        let err = read_libsvm(path.to_str().unwrap(), false).unwrap_err();
+        assert!(err.contains(":3:"), "error should name line 3: {err}");
+        assert!(err.contains("exceeds declared dimension 2"), "{err}");
+        std::fs::remove_file(&path).ok();
+        // an explicit expected dimension is enforced the same way
+        let path = std::env::temp_dir().join("saif_io_overflow2.svm");
+        std::fs::write(&path, "1 5:1.0\n").unwrap();
+        let err = read_libsvm_with_dim(path.to_str().unwrap(), false, Some(4)).unwrap_err();
+        assert!(err.contains(":1:") && err.contains("exceeds"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn saifbin_roundtrip_is_bit_exact() {
+        let ds = synth::synth_sparse(25, 60, 0.1, 11);
+        let path = std::env::temp_dir().join(format!("saif_io_rt_{}.saifbin", std::process::id()));
+        let path = path.to_str().unwrap();
+        write_saifbin(&ds, path).unwrap();
+        let back = read_saifbin(path).unwrap();
+        assert!(back.x.is_ooc());
+        assert_eq!(back.x.storage(), "ooc-csc");
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.p(), ds.p());
+        assert_eq!(back.x.nnz(), ds.x.nnz());
+        assert_eq!(back.loss, ds.loss);
+        for (a, b) in back.y.iter().zip(&ds.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for j in 0..ds.p() {
+            for i in 0..ds.n() {
+                assert_eq!(back.x.get(i, j).to_bits(), ds.x.get(i, j).to_bits());
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn saifbin_preserves_logistic_flag_and_dense_designs() {
+        let mut ds = synth::gisette_like(10, 8, 3);
+        ds.x = ds.x.to_dense().into(); // exact zeros are dropped on write
+        let path = std::env::temp_dir().join(format!("saif_io_log_{}.saifbin", std::process::id()));
+        let path = path.to_str().unwrap();
+        write_saifbin(&ds, path).unwrap();
+        let back = read_saifbin(path).unwrap();
+        assert_eq!(back.loss, crate::model::LossKind::Logistic);
+        for j in 0..ds.p() {
+            for i in 0..ds.n() {
+                assert_eq!(back.x.get(i, j).to_bits(), ds.x.get(i, j).to_bits());
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn converter_matches_direct_libsvm_load() {
+        let ds = synth::synth_sparse(15, 30, 0.15, 9);
+        let svm = std::env::temp_dir().join(format!("saif_io_conv_{}.svm", std::process::id()));
+        let bin = std::env::temp_dir().join(format!("saif_io_conv_{}.saifbin", std::process::id()));
+        let (svm, bin) = (svm.to_str().unwrap(), bin.to_str().unwrap());
+        write_libsvm(&ds, svm).unwrap();
+        let (n, p, nnz) = convert_libsvm_to_saifbin(svm, bin, false).unwrap();
+        let direct = read_libsvm(svm, false).unwrap();
+        assert_eq!((n, p, nnz), (direct.n(), direct.p(), direct.x.nnz()));
+        let ooc = read_saifbin(bin).unwrap();
+        assert_eq!(ooc.n(), direct.n());
+        assert_eq!(ooc.p(), direct.p());
+        for j in 0..direct.p() {
+            for i in 0..direct.n() {
+                assert_eq!(ooc.x.get(i, j).to_bits(), direct.x.get(i, j).to_bits());
+            }
+        }
+        std::fs::remove_file(svm).ok();
+        std::fs::remove_file(bin).ok();
+    }
+
+    #[test]
+    fn spill_to_ooc_keeps_everything_but_storage() {
+        let mut ds = synth::synth_sparse(12, 25, 0.2, 21);
+        ds.tree = Some(vec![(0, 1), (1, 2)]);
+        let y0 = ds.y.clone();
+        let spilled = spill_to_ooc(ds.clone()).unwrap();
+        assert!(spilled.x.is_ooc());
+        assert_eq!(spilled.loss, ds.loss);
+        assert_eq!(spilled.tree, ds.tree);
+        for (a, b) in spilled.y.iter().zip(&y0) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // already-ooc datasets pass through untouched
+        let again = spill_to_ooc(spilled.clone()).unwrap();
+        assert_eq!(again.name, spilled.name);
     }
 }

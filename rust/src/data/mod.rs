@@ -53,6 +53,17 @@ pub fn standardize_design(x: &mut Design) -> Vec<(f64, f64)> {
             *x = Design::Dense(m);
             stats
         }
+        // standardization rescales the stored values, and the ooc file
+        // is read-only — so the design is materialized first (RAM-bound
+        // like any other mutation of it). An out-of-core standardized
+        // wrapper (a per-column scale vector riding on the ooc backend)
+        // is a ROADMAP follow-up.
+        Design::OocCsc(m) => {
+            let mut sp = Design::Sparse(m.to_csc());
+            let stats = standardize_design(&mut sp);
+            *x = sp;
+            stats
+        }
         Design::Sparse(m) | Design::CenteredSparse { mat: m, .. } => {
             let mut mat = m;
             let n = mat.n_rows() as f64;

@@ -18,6 +18,7 @@
 use crate::runtime::pool::{self, PoolMode};
 
 use super::mat::Mat;
+use super::ooc::{OocCol, OocCsc};
 use super::sparse::CscMat;
 
 /// Column-parallelism policy for full-p scans. `Serial` is the default
@@ -73,8 +74,9 @@ impl Parallelism {
     }
 }
 
-/// A design matrix: dense column-major, compressed sparse column, or
-/// CSC with implicit centering.
+/// A design matrix: dense column-major, compressed sparse column, CSC
+/// with implicit centering, or out-of-core CSC streamed from a
+/// `.saifbin` file.
 ///
 /// `CenteredSparse` represents the matrix whose column j is the stored
 /// column minus `means[j]·1` — the standardized form of a sparse
@@ -86,11 +88,20 @@ impl Parallelism {
 /// exactly while storage stays O(nnz). Compute cost of the corrected
 /// per-column ops is O(nnz_j + n)-ish (centering makes columns dense
 /// arithmetically — only the memory win survives, which is the point).
+///
+/// `OocCsc` keeps only O(n + p) resident (labels + column-pointer
+/// index) and streams the O(nnz) row-index/value arrays from disk, so
+/// p is bounded by disk instead of RAM (see [`super::ooc`]). Every
+/// kernel is bitwise identical to the in-memory `Sparse` backend over
+/// the same entries; full-p scans stream contiguous column byte-ranges
+/// (serially or as pooled tasks), and the active block's per-column
+/// kernels go through a hot-column LRU cache.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Design {
     Dense(Mat),
     Sparse(CscMat),
     CenteredSparse { mat: CscMat, means: Vec<f64> },
+    OocCsc(OocCsc),
 }
 
 impl From<Mat> for Design {
@@ -105,11 +116,19 @@ impl From<CscMat> for Design {
     }
 }
 
+impl From<OocCsc> for Design {
+    fn from(m: OocCsc) -> Design {
+        Design::OocCsc(m)
+    }
+}
+
 /// Iterator over one column's entries as (row, value). For the dense
 /// backend this yields every row (including zeros); for the sparse
 /// backend only the stored nonzeros, in increasing row order; for the
 /// centered backend every row (the mean correction makes the effective
-/// column dense), with the stored entries merged in.
+/// column dense), with the stored entries merged in; for the
+/// out-of-core backend the stored nonzeros of the cached column (an
+/// owned handle, so the iterator does not borrow the design).
 pub enum ColIter<'a> {
     Dense(std::iter::Enumerate<std::slice::Iter<'a, f64>>),
     Sparse(std::iter::Zip<std::slice::Iter<'a, usize>, std::slice::Iter<'a, f64>>),
@@ -120,6 +139,10 @@ pub enum ColIter<'a> {
         i: usize,
         n: usize,
         mean: f64,
+    },
+    Ooc {
+        col: std::sync::Arc<OocCol>,
+        k: usize,
     },
 }
 
@@ -144,6 +167,14 @@ impl<'a> Iterator for ColIter<'a> {
                 };
                 let item = (*i, stored - *mean);
                 *i += 1;
+                Some(item)
+            }
+            ColIter::Ooc { col, k } => {
+                if *k >= col.rows.len() {
+                    return None;
+                }
+                let item = (col.rows[*k], col.vals[*k]);
+                *k += 1;
                 Some(item)
             }
         }
@@ -172,6 +203,7 @@ impl Design {
             Design::Dense(m) => m.n_rows(),
             Design::Sparse(m) => m.n_rows(),
             Design::CenteredSparse { mat, .. } => mat.n_rows(),
+            Design::OocCsc(m) => m.n_rows(),
         }
     }
 
@@ -181,12 +213,20 @@ impl Design {
             Design::Dense(m) => m.n_cols(),
             Design::Sparse(m) => m.n_cols(),
             Design::CenteredSparse { mat, .. } => mat.n_cols(),
+            Design::OocCsc(m) => m.n_cols(),
         }
     }
 
-    /// Whether the backing storage is CSC (plain or centered).
+    /// Whether the backing storage is CSC (plain, centered, or
+    /// out-of-core).
     pub fn is_sparse(&self) -> bool {
         !matches!(self, Design::Dense(_))
+    }
+
+    /// Whether the backing storage is out-of-core (streamed from a
+    /// `.saifbin` file).
+    pub fn is_ooc(&self) -> bool {
+        matches!(self, Design::OocCsc(_))
     }
 
     /// Whether an implicit (rank-1) mean correction is attached.
@@ -200,15 +240,18 @@ impl Design {
             Design::Dense(m) => m.n_rows() * m.n_cols(),
             Design::Sparse(m) => m.nnz(),
             Design::CenteredSparse { mat, .. } => mat.nnz(),
+            Design::OocCsc(m) => m.nnz(),
         }
     }
 
-    /// Short storage tag for logs ("dense" / "csc" / "csc+center").
+    /// Short storage tag for logs ("dense" / "csc" / "csc+center" /
+    /// "ooc-csc").
     pub fn storage(&self) -> &'static str {
         match self {
             Design::Dense(_) => "dense",
             Design::Sparse(_) => "csc",
             Design::CenteredSparse { .. } => "csc+center",
+            Design::OocCsc(_) => "ooc-csc",
         }
     }
 
@@ -217,6 +260,7 @@ impl Design {
             Design::Dense(m) => m.get(i, j),
             Design::Sparse(m) => m.get(i, j),
             Design::CenteredSparse { mat, means } => mat.get(i, j) - means[j],
+            Design::OocCsc(m) => m.get(i, j),
         }
     }
 
@@ -229,6 +273,7 @@ impl Design {
             Design::Dense(m) => super::ops::dot(m.col(j), v),
             Design::Sparse(m) => m.col_dot(j, v),
             Design::CenteredSparse { mat, means } => mat.col_dot(j, v) - means[j] * sv,
+            Design::OocCsc(m) => m.col_dot(j, v),
         }
     }
 
@@ -248,6 +293,7 @@ impl Design {
         match self {
             Design::Dense(m) => super::ops::axpy(alpha, m.col(j), out),
             Design::Sparse(m) => m.col_axpy(alpha, j, out),
+            Design::OocCsc(m) => m.col_axpy(alpha, j, out),
             Design::CenteredSparse { mat, means } => {
                 if alpha == 0.0 {
                     return;
@@ -274,6 +320,7 @@ impl Design {
                 }
             }
             Design::Sparse(m) => m.cols_dot(cols, v, out),
+            Design::OocCsc(m) => m.cols_dot(cols, v, out),
             Design::CenteredSparse { .. } => {
                 let sv = vsum(v);
                 for (o, &j) in out.iter_mut().zip(cols) {
@@ -295,6 +342,7 @@ impl Design {
                 }
             }
             Design::Sparse(m) => m.cols_axpy(updates, out),
+            Design::OocCsc(m) => m.cols_axpy(updates, out),
             // the ordered-fold contract (strictly `updates` order,
             // bitwise equal to sequential col_axpy) must hold for the
             // sharded-epoch residual merge, so no fused correction
@@ -325,6 +373,7 @@ impl Design {
                     mean: means[j],
                 }
             }
+            Design::OocCsc(m) => ColIter::Ooc { col: m.col(j), k: 0 },
         }
     }
 
@@ -333,6 +382,7 @@ impl Design {
         match self {
             Design::Dense(m) => m.mul_vec(v, out),
             Design::Sparse(m) => m.mul_vec(v, out),
+            Design::OocCsc(m) => m.mul_vec(v, out),
             Design::CenteredSparse { mat, means } => {
                 mat.mul_vec(v, out);
                 let c = super::ops::dot(means, v);
@@ -348,6 +398,7 @@ impl Design {
         match self {
             Design::Dense(m) => m.mul_t_vec(v, out),
             Design::Sparse(m) => m.mul_t_vec(v, out),
+            Design::OocCsc(m) => m.mul_t_vec(v, out),
             Design::CenteredSparse { .. } => {
                 assert_eq!(v.len(), self.n_rows());
                 assert_eq!(out.len(), self.n_cols());
@@ -373,6 +424,12 @@ impl Design {
     /// the per-column reduction order unchanged, and chunks are folded
     /// back in task order, so the result is bitwise identical to the
     /// serial scan — under either mode, for any pool size.
+    ///
+    /// On the out-of-core backend each task STREAMS its contiguous
+    /// column byte-range from disk through its own bounded chunk
+    /// buffers ([`OocCsc::mul_t_vec_range`]) instead of going through
+    /// the per-column cache — the scan reads the file once, in column
+    /// order, with memory bounded by `threads × chunk budget`.
     pub fn mul_t_vec_pool(&self, v: &[f64], out: &mut [f64], par: Parallelism, mode: PoolMode) {
         assert_eq!(v.len(), self.n_rows());
         assert_eq!(out.len(), self.n_cols());
@@ -396,8 +453,15 @@ impl Design {
         pool::run_ordered_mode(mode, chunks.len(), |c| {
             let mut part = chunks[c].lock().unwrap();
             let start = c * chunk;
-            for (k, o) in part.iter_mut().enumerate() {
-                *o = self.col_dot_presum(start + k, v, sv);
+            match self {
+                Design::OocCsc(m) => {
+                    m.mul_t_vec_range(start, start + part.len(), v, &mut **part);
+                }
+                _ => {
+                    for (k, o) in part.iter_mut().enumerate() {
+                        *o = self.col_dot_presum(start + k, v, sv);
+                    }
+                }
             }
         })
         .unwrap_or_else(|e| panic!("parallel scan: {e}"));
@@ -409,6 +473,7 @@ impl Design {
         match self {
             Design::Dense(m) => m.col_norms_sq(),
             Design::Sparse(m) => m.col_norms_sq(),
+            Design::OocCsc(m) => m.col_norms_sq(),
             Design::CenteredSparse { mat, means } => {
                 let n = mat.n_rows() as f64;
                 let base = mat.col_norms_sq();
@@ -422,7 +487,9 @@ impl Design {
         }
     }
 
-    /// Gather a sub-matrix of the given columns (keeps the backend).
+    /// Gather a sub-matrix of the given columns (keeps the backend,
+    /// except out-of-core: a gathered active block is RAM-sized by
+    /// construction, so it lands in an in-memory `Sparse`).
     pub fn select_cols(&self, cols: &[usize]) -> Design {
         match self {
             Design::Dense(m) => Design::Dense(m.select_cols(cols)),
@@ -431,6 +498,7 @@ impl Design {
                 mat: mat.select_cols(cols),
                 means: cols.iter().map(|&j| means[j]).collect(),
             },
+            Design::OocCsc(m) => Design::Sparse(m.select_cols(cols)),
         }
     }
 
@@ -447,6 +515,7 @@ impl Design {
                 mat: mat.select_rows(rows),
                 means: means.clone(),
             },
+            Design::OocCsc(m) => Design::Sparse(m.select_rows(rows)),
         }
     }
 
@@ -467,6 +536,7 @@ impl Design {
         match self {
             Design::Dense(m) => m.clone(),
             Design::Sparse(m) => m.to_dense(),
+            Design::OocCsc(m) => m.to_csc().to_dense(),
             Design::CenteredSparse { mat, means } => {
                 let mut m = mat.to_dense();
                 for (j, &mu) in means.iter().enumerate() {
@@ -486,6 +556,7 @@ impl Design {
             Design::Dense(m) => m.data().as_ptr() as usize,
             Design::Sparse(m) => m.values().as_ptr() as usize,
             Design::CenteredSparse { mat, .. } => mat.values().as_ptr() as usize,
+            Design::OocCsc(m) => m.identity(),
         }
     }
 }

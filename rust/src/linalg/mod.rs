@@ -16,13 +16,21 @@
 //! Full-p scans (`Design::mul_t_vec_pool`) can be chunked over columns
 //! via [`Parallelism`], dispatched on the persistent worker pool
 //! (`runtime::pool`) or on spawn-per-call scoped threads.
+//!
+//! The out-of-core backend ([`OocCsc`], `Design::OocCsc`) streams the
+//! CSC arrays from a `.saifbin` file instead of holding them in RAM:
+//! only the labels and the column-pointer index are resident, so p is
+//! bounded by disk. Kernels are bitwise identical to the in-memory
+//! sparse backend over the same stored entries.
 
 pub mod design;
 pub mod mat;
+pub mod ooc;
 pub mod ops;
 pub mod sparse;
 
 pub use design::{ColIter, Design, Parallelism};
 pub use mat::Mat;
+pub use ooc::OocCsc;
 pub use ops::{axpy, dot, nrm2_sq, scale, sub};
 pub use sparse::CscMat;

@@ -1,0 +1,809 @@
+//! Out-of-core CSC design backend over the on-disk `.saifbin` format —
+//! the storage that lets p be bounded by disk instead of RAM.
+//!
+//! SAIF's whole pitch is scaling LASSO to extremely high dimensional
+//! designs by never touching the full model; the in-memory backends
+//! still cap p at what fits in RAM. [`OocCsc`] keeps only the small
+//! resident parts in memory — the header, the labels and the
+//! column-pointer index, O(n + p) — while the two O(nnz) arrays (row
+//! indices, values) stay on disk and are streamed through reusable
+//! chunk buffers on demand. A full-p screening scan reads the file
+//! once, sequentially, in bounded memory; per-column kernels on the
+//! active block go through a small hot-column LRU cache so CM epochs
+//! don't re-read the same columns every sweep.
+//!
+//! Everything is std-only (the vendored registry is empty): positional
+//! reads use `std::os::unix::fs::FileExt::read_exact_at` (a fresh
+//! handle per call on non-unix), and decoding is explicit little-endian
+//! `from_le_bytes` over 8-byte lanes — alignment-free and
+//! byte-order-portable.
+//!
+//! # `.saifbin` format (version 1, little-endian)
+//!
+//! ```text
+//! offset  size          field
+//! 0       8             magic "SAIFBIN1"
+//! 8       8             n_rows  (u64)
+//! 16      8             n_cols  (u64)
+//! 24      8             nnz     (u64)
+//! 32      8             flags   (u64; bit 0 = logistic labels)
+//! 40      8·n           y       (f64 bits)           } resident
+//! …       8·(p+1)       col_ptr (u64, monotone)      } resident
+//! …       8·nnz         row_idx (u64, strictly increasing per column)
+//! …       8·nnz         vals    (f64 bits)
+//! ```
+//!
+//! Row indices and values are two separate contiguous regions, so any
+//! range of consecutive columns maps to exactly two contiguous byte
+//! ranges — one positional read each per streamed chunk.
+//!
+//! # Determinism
+//!
+//! Every kernel walks a column's (row, value) pairs in the same stored
+//! order as [`CscMat`] and reduces through the same expressions, so an
+//! `OocCsc` opened from a file written out of a `CscMat` produces
+//! **bitwise identical** results to that in-memory matrix — per
+//! column, per scan (serial, pooled or scoped), and therefore per
+//! solve. `rust/tests/ooc.rs` property-tests this end to end.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::File;
+use std::io::{self, Read};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::sparse::CscMat;
+
+/// Magic bytes identifying a `.saifbin` file (format version 1).
+pub const MAGIC: &[u8; 8] = b"SAIFBIN1";
+
+/// Header flag bit 0: labels are ±1 logistic classes.
+pub const FLAG_LOGISTIC: u64 = 1;
+
+/// Fixed-size header length: magic + n/p/nnz/flags.
+pub const HEADER_BYTES: u64 = 40;
+
+/// On-disk bytes per stored entry (8 row-index + 8 value).
+pub const ENTRY_BYTES: u64 = 16;
+
+/// Default hot-column cache budget (bytes of decoded column data).
+pub const DEFAULT_CACHE_BYTES: usize = 64 << 20;
+
+/// Default streaming-chunk budget per scan task (bytes read per
+/// positional read pair). Bounds scan memory at
+/// `threads × 2 × DEFAULT_CHUNK_BYTES` regardless of p.
+pub const DEFAULT_CHUNK_BYTES: usize = 4 << 20;
+
+/// One decoded column: parallel (row, value) arrays, shared out of the
+/// hot-column cache.
+#[derive(Debug)]
+pub struct OocCol {
+    pub rows: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl OocCol {
+    fn bytes(&self) -> usize {
+        self.rows.len() * ENTRY_BYTES as usize
+    }
+}
+
+/// Hot-column LRU: j → (last-use tick, decoded column), with a
+/// tick-ordered mirror index so eviction pops the least-recently-used
+/// entry in O(log n) instead of scanning the map (the cache can hold
+/// tens of thousands of small columns under the default budget).
+/// Evicts once the decoded bytes exceed the budget; a single column
+/// larger than the whole budget is served uncached instead of
+/// evicting everything else.
+struct ColCache {
+    budget: usize,
+    used: usize,
+    /// Monotone counter; every entry holds a unique tick.
+    tick: u64,
+    map: HashMap<usize, (u64, Arc<OocCol>)>,
+    /// tick → column, mirror of `map` (same entries, keyed by tick).
+    order: BTreeMap<u64, usize>,
+}
+
+impl ColCache {
+    fn new(budget: usize) -> ColCache {
+        ColCache { budget, used: 0, tick: 0, map: HashMap::new(), order: BTreeMap::new() }
+    }
+
+    fn get(&mut self, j: usize) -> Option<Arc<OocCol>> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(&j) {
+            Some((t, col)) => {
+                self.order.remove(t);
+                self.order.insert(tick, j);
+                *t = tick;
+                Some(col.clone())
+            }
+            None => None,
+        }
+    }
+
+    fn insert(&mut self, j: usize, col: Arc<OocCol>) {
+        let sz = col.bytes();
+        if sz > self.budget {
+            return;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((old_tick, old_col)) = self.map.insert(j, (tick, col)) {
+            self.order.remove(&old_tick);
+            self.used -= old_col.bytes();
+        }
+        self.order.insert(tick, j);
+        self.used += sz;
+        // the newest tick sorts last, so eviction can never pop the
+        // entry just inserted while older ones remain
+        while self.used > self.budget {
+            let (_, evictee) = self.order.pop_first().expect("used > 0 implies entries");
+            if let Some((_, evicted)) = self.map.remove(&evictee) {
+                self.used -= evicted.bytes();
+            }
+        }
+    }
+}
+
+struct Inner {
+    path: PathBuf,
+    file: File,
+    n_rows: usize,
+    n_cols: usize,
+    nnz: usize,
+    flags: u64,
+    /// Labels, resident (n is RAM-bounded by assumption; p is not).
+    y: Vec<f64>,
+    /// Column pointers, resident — the index that maps columns to
+    /// on-disk byte ranges.
+    col_ptr: Vec<u64>,
+    /// Byte offset of the row-index region.
+    idx_off: u64,
+    /// Byte offset of the value region.
+    val_off: u64,
+    cache_budget: usize,
+    cache: Mutex<ColCache>,
+}
+
+impl Inner {
+    /// Positional read: never touches a shared cursor, so concurrent
+    /// scan tasks can read disjoint ranges of one handle in parallel.
+    fn read_at(&self, buf: &mut [u8], off: u64) -> io::Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(buf, off)
+        }
+        #[cfg(not(unix))]
+        {
+            // fallback: a fresh handle per call (its cursor is private,
+            // so this stays race-free, just slower)
+            use std::io::{Seek, SeekFrom};
+            let mut f = File::open(&self.path)?;
+            f.seek(SeekFrom::Start(off))?;
+            f.read_exact(buf)
+        }
+    }
+
+    /// Read + decode the stored entry range [s, e) into the scratch
+    /// vectors (two positional reads, explicit little-endian decode).
+    fn read_entries(
+        &self,
+        s: u64,
+        e: u64,
+        byte_buf: &mut Vec<u8>,
+        rows: &mut Vec<usize>,
+        vals: &mut Vec<f64>,
+    ) -> io::Result<()> {
+        let k = (e - s) as usize;
+        byte_buf.resize(k * 8, 0);
+        self.read_at(byte_buf, self.idx_off + 8 * s)?;
+        rows.clear();
+        rows.reserve(k);
+        for c in byte_buf.chunks_exact(8) {
+            let r = u64::from_le_bytes(c.try_into().expect("8-byte lane")) as usize;
+            assert!(
+                r < self.n_rows,
+                "corrupt saifbin {}: row index {r} ≥ n_rows {}",
+                self.path.display(),
+                self.n_rows
+            );
+            rows.push(r);
+        }
+        self.read_at(byte_buf, self.val_off + 8 * s)?;
+        vals.clear();
+        vals.reserve(k);
+        for c in byte_buf.chunks_exact(8) {
+            vals.push(f64::from_bits(u64::from_le_bytes(c.try_into().expect("8-byte lane"))));
+        }
+        Ok(())
+    }
+
+    fn io_panic(&self, e: io::Error) -> ! {
+        panic!("saifbin read {}: {e}", self.path.display())
+    }
+}
+
+/// Out-of-core CSC design matrix over a read-only `.saifbin` file.
+/// Cloning shares the handle and the hot-column cache (it is an `Arc`);
+/// [`OocCsc::reopen`] makes an independent handle + cache — the
+/// coordinator opens one per worker slot.
+#[derive(Clone)]
+pub struct OocCsc {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for OocCsc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OocCsc")
+            .field("path", &self.inner.path)
+            .field("n_rows", &self.inner.n_rows)
+            .field("n_cols", &self.inner.n_cols)
+            .field("nnz", &self.inner.nnz)
+            .finish()
+    }
+}
+
+/// Same backing store: same handle (a clone) or same file + shape. Two
+/// independent opens of one path compare equal, like the value
+/// equality of the in-memory backends.
+impl PartialEq for OocCsc {
+    fn eq(&self, other: &OocCsc) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+            || (self.inner.path == other.inner.path
+                && self.inner.n_rows == other.inner.n_rows
+                && self.inner.n_cols == other.inner.n_cols
+                && self.inner.nnz == other.inner.nnz)
+    }
+}
+
+fn bad_data(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+impl OocCsc {
+    /// Open a `.saifbin` file with the default hot-column cache budget.
+    /// The header, labels and column-pointer index become resident;
+    /// row indices and values stay on disk.
+    pub fn open(path: impl AsRef<Path>) -> io::Result<OocCsc> {
+        OocCsc::open_with_cache(path, DEFAULT_CACHE_BYTES)
+    }
+
+    /// [`OocCsc::open`] with an explicit cache budget in bytes (0
+    /// disables column caching entirely — every per-column kernel
+    /// re-reads from disk).
+    pub fn open_with_cache(path: impl AsRef<Path>, cache_budget: usize) -> io::Result<OocCsc> {
+        let path = path.as_ref().to_path_buf();
+        let file = File::open(&path)?;
+        let mut r = io::BufReader::new(&file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(bad_data(format!(
+                "{}: not a saifbin file (bad magic)",
+                path.display()
+            )));
+        }
+        let n_rows = read_u64(&mut r)? as usize;
+        let n_cols = read_u64(&mut r)? as usize;
+        let nnz = read_u64(&mut r)? as usize;
+        let flags = read_u64(&mut r)?;
+        // validate the untrusted header against the file length BEFORE
+        // allocating anything sized by it: a corrupt n/p/nnz must be a
+        // clean InvalidData error, not a capacity-overflow abort
+        let resident = (n_cols as u64)
+            .checked_add(1)
+            .and_then(|c| c.checked_add(n_rows as u64))
+            .and_then(|w| w.checked_mul(8))
+            .and_then(|b| b.checked_add(HEADER_BYTES));
+        let expect = resident.and_then(|b| {
+            (nnz as u64).checked_mul(16).and_then(|e| b.checked_add(e))
+        });
+        let actual = file.metadata()?.len();
+        if expect != Some(actual) {
+            return Err(bad_data(format!(
+                "{}: truncated or oversized ({actual} bytes, header claims n={n_rows} \
+                 p={n_cols} nnz={nnz}{})",
+                path.display(),
+                expect.map_or(" (overflow)".into(), |e| format!(", expected {e}")),
+            )));
+        }
+        let mut y = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            y.push(f64::from_bits(read_u64(&mut r)?));
+        }
+        let mut col_ptr = Vec::with_capacity(n_cols + 1);
+        for _ in 0..=n_cols {
+            col_ptr.push(read_u64(&mut r)?);
+        }
+        if col_ptr[0] != 0 || col_ptr[n_cols] != nnz as u64 {
+            return Err(bad_data(format!(
+                "{}: column pointers do not span nnz={nnz}",
+                path.display()
+            )));
+        }
+        if col_ptr.windows(2).any(|w| w[1] < w[0]) {
+            return Err(bad_data(format!(
+                "{}: column pointers not monotone",
+                path.display()
+            )));
+        }
+        let idx_off = HEADER_BYTES + 8 * (n_rows as u64 + n_cols as u64 + 1);
+        let val_off = idx_off + 8 * nnz as u64;
+        Ok(OocCsc {
+            inner: Arc::new(Inner {
+                path,
+                file,
+                n_rows,
+                n_cols,
+                nnz,
+                flags,
+                y,
+                col_ptr,
+                idx_off,
+                val_off,
+                cache_budget,
+                cache: Mutex::new(ColCache::new(cache_budget)),
+            }),
+        })
+    }
+
+    /// Fresh read-only handle + fresh (empty) column cache on the same
+    /// file. Nothing is shared with `self` — this is how the
+    /// coordinator gives each worker slot its own handle.
+    pub fn reopen(&self) -> io::Result<OocCsc> {
+        OocCsc::open_with_cache(&self.inner.path, self.inner.cache_budget)
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.inner.n_rows
+    }
+
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.inner.n_cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.inner.nnz
+    }
+
+    /// The labels stored alongside the design (resident).
+    pub fn labels(&self) -> &[f64] {
+        &self.inner.y
+    }
+
+    /// Header flag bit 0: the labels are logistic ±1 classes.
+    pub fn logistic(&self) -> bool {
+        self.inner.flags & FLAG_LOGISTIC != 0
+    }
+
+    /// The backing file.
+    pub fn path(&self) -> &Path {
+        &self.inner.path
+    }
+
+    /// Stable identity key of the backing handle (for packed-buffer
+    /// caches, mirroring `Design::data_ptr`). Clones share it; a
+    /// [`OocCsc::reopen`] gets a new one.
+    pub fn identity(&self) -> usize {
+        Arc::as_ptr(&self.inner) as usize
+    }
+
+    /// Column j through the hot-column cache: decoded once, then
+    /// shared until evicted. The read happens outside the cache lock
+    /// so concurrent misses on different columns overlap their IO.
+    pub fn col(&self, j: usize) -> Arc<OocCol> {
+        assert!(j < self.inner.n_cols, "column {j} out of bounds");
+        if let Some(c) = self.inner.cache.lock().unwrap_or_else(|e| e.into_inner()).get(j) {
+            return c;
+        }
+        let (s, e) = (self.inner.col_ptr[j], self.inner.col_ptr[j + 1]);
+        let (mut bytes, mut rows, mut vals) = (Vec::new(), Vec::new(), Vec::new());
+        self.inner
+            .read_entries(s, e, &mut bytes, &mut rows, &mut vals)
+            .unwrap_or_else(|e| self.inner.io_panic(e));
+        let col = Arc::new(OocCol { rows, vals });
+        self.inner
+            .cache
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(j, col.clone());
+        col
+    }
+
+    /// Stream columns [j0, j1) through reusable chunk buffers, calling
+    /// `f(j, rows, vals)` per column in order. Each chunk is one pair
+    /// of positional reads over a contiguous byte range of at most
+    /// `chunk_bytes` (always at least one column); memory stays
+    /// bounded by the chunk budget no matter how many columns stream.
+    /// Bypasses the hot-column cache (scans must not evict the active
+    /// block).
+    pub fn stream_cols<F: FnMut(usize, &[usize], &[f64])>(
+        &self,
+        j0: usize,
+        j1: usize,
+        chunk_bytes: usize,
+        mut f: F,
+    ) {
+        assert!(j0 <= j1 && j1 <= self.inner.n_cols);
+        let cp = &self.inner.col_ptr;
+        let max_entries = (chunk_bytes as u64 / ENTRY_BYTES).max(1);
+        let (mut bytes, mut rows, mut vals) = (Vec::new(), Vec::new(), Vec::new());
+        let mut a = j0;
+        while a < j1 {
+            let mut b = a + 1;
+            while b < j1 && cp[b + 1] - cp[a] <= max_entries {
+                b += 1;
+            }
+            let (s, e) = (cp[a], cp[b]);
+            self.inner
+                .read_entries(s, e, &mut bytes, &mut rows, &mut vals)
+                .unwrap_or_else(|err| self.inner.io_panic(err));
+            for j in a..b {
+                let (lo, hi) = ((cp[j] - s) as usize, (cp[j + 1] - s) as usize);
+                f(j, &rows[lo..hi], &vals[lo..hi]);
+            }
+            a = b;
+        }
+    }
+
+    /// x_jᵀ v — same reduction order as [`CscMat::col_dot`], so the
+    /// result is bitwise identical to the in-memory backend.
+    #[inline]
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), self.inner.n_rows);
+        let c = self.col(j);
+        let mut s = 0.0;
+        for (&i, &x) in c.rows.iter().zip(&c.vals) {
+            s += x * v[i];
+        }
+        s
+    }
+
+    /// out += alpha * x_j.
+    #[inline]
+    pub fn col_axpy(&self, alpha: f64, j: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.inner.n_rows);
+        if alpha == 0.0 {
+            return;
+        }
+        let c = self.col(j);
+        for (&i, &x) in c.rows.iter().zip(&c.vals) {
+            out[i] += alpha * x;
+        }
+    }
+
+    /// Batched column dots (per-column [`OocCsc::col_dot`]).
+    pub fn cols_dot(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), out.len());
+        for (o, &j) in out.iter_mut().zip(cols) {
+            *o = self.col_dot(j, v);
+        }
+    }
+
+    /// Ordered fold out += Σ_k alpha_k·x_{j_k}, strictly in `updates`
+    /// order (the sharded-epoch residual-merge contract).
+    pub fn cols_axpy(&self, updates: &[(usize, f64)], out: &mut [f64]) {
+        for &(j, alpha) in updates {
+            self.col_axpy(alpha, j, out);
+        }
+    }
+
+    /// y = X v — one sequential streaming pass over the file.
+    pub fn mul_vec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.inner.n_cols);
+        assert_eq!(out.len(), self.inner.n_rows);
+        out.fill(0.0);
+        self.stream_cols(0, self.inner.n_cols, DEFAULT_CHUNK_BYTES, |j, rows, vals| {
+            let vj = v[j];
+            // matches CscMat::mul_vec (col_axpy skips alpha == 0)
+            if vj != 0.0 {
+                for (&i, &x) in rows.iter().zip(vals) {
+                    out[i] += vj * x;
+                }
+            }
+        });
+    }
+
+    /// out = Xᵀ v (the screening scan) — one sequential streaming pass,
+    /// bounded memory, bitwise identical to [`CscMat::mul_t_vec`].
+    pub fn mul_t_vec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.inner.n_rows);
+        assert_eq!(out.len(), self.inner.n_cols);
+        self.mul_t_vec_range(0, self.inner.n_cols, v, out);
+    }
+
+    /// out[j − j0] = x_jᵀ v for j in [j0, j1) — the per-task body of the
+    /// pooled streaming scan. Each task streams its own contiguous
+    /// column byte-range through its own chunk buffers.
+    pub fn mul_t_vec_range(&self, j0: usize, j1: usize, v: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), j1 - j0);
+        self.stream_cols(j0, j1, DEFAULT_CHUNK_BYTES, |j, rows, vals| {
+            let mut s = 0.0;
+            for (&i, &x) in rows.iter().zip(vals) {
+                s += x * v[i];
+            }
+            out[j - j0] = s;
+        });
+    }
+
+    /// Squared norms of all columns — one streaming pass.
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.inner.n_cols];
+        self.stream_cols(0, self.inner.n_cols, DEFAULT_CHUNK_BYTES, |j, _, vals| {
+            out[j] = vals.iter().map(|&v| v * v).sum();
+        });
+        out
+    }
+
+    /// Sum of each column's stored entries — one streaming pass.
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.inner.n_cols];
+        self.stream_cols(0, self.inner.n_cols, DEFAULT_CHUNK_BYTES, |j, _, vals| {
+            out[j] = vals.iter().sum();
+        });
+        out
+    }
+
+    /// Entry (i, j) — binary search over the (cached) column.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let c = self.col(j);
+        match c.rows.binary_search(&i) {
+            Ok(k) => c.vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Gather the given columns into an IN-MEMORY [`CscMat`] (SAIF's
+    /// active blocks are RAM-sized by construction; gathering them once
+    /// beats re-reading per epoch).
+    pub fn select_cols(&self, cols: &[usize]) -> CscMat {
+        let gathered: Vec<Vec<(usize, f64)>> = cols
+            .iter()
+            .map(|&j| {
+                let c = self.col(j);
+                c.rows.iter().cloned().zip(c.vals.iter().cloned()).collect()
+            })
+            .collect();
+        CscMat::from_cols(self.inner.n_rows, gathered)
+    }
+
+    /// Gather the given rows (in `rows` order, duplicates repeated)
+    /// into an IN-MEMORY [`CscMat`] — one streaming pass over the file.
+    /// The result holds O(nnz of the selected rows); CV fold splits are
+    /// RAM-sized by construction.
+    pub fn select_rows(&self, rows: &[usize]) -> CscMat {
+        let mut pos: Vec<Vec<usize>> = vec![Vec::new(); self.inner.n_rows];
+        for (new, &old) in rows.iter().enumerate() {
+            assert!(old < self.inner.n_rows, "row {old} out of bounds");
+            pos[old].push(new);
+        }
+        let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.inner.n_cols];
+        self.stream_cols(0, self.inner.n_cols, DEFAULT_CHUNK_BYTES, |j, r, v| {
+            for (&i, &x) in r.iter().zip(v) {
+                for &new in &pos[i] {
+                    cols[j].push((new, x));
+                }
+            }
+        });
+        CscMat::from_cols(rows.len(), cols)
+    }
+
+    /// Materialize the whole matrix in memory (one streaming pass).
+    /// Bounded by RAM, obviously — the escape hatch for consumers that
+    /// need an in-memory design (e.g. `--design mem` comparisons).
+    pub fn to_csc(&self) -> CscMat {
+        let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.inner.n_cols];
+        self.stream_cols(0, self.inner.n_cols, DEFAULT_CHUNK_BYTES, |j, r, v| {
+            cols[j] = r.iter().cloned().zip(v.iter().cloned()).collect();
+        });
+        CscMat::from_cols(self.inner.n_rows, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use std::io::Write;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("saif_ooc_unit_{}_{tag}.saifbin", std::process::id()))
+    }
+
+    /// Minimal writer used by the unit tests (the real writer lives in
+    /// `data::io`, which depends on `Dataset`; these tests stay inside
+    /// the linalg layer).
+    fn write_mat(mat: &CscMat, y: &[f64], flags: u64, path: &Path) {
+        let mut w = io::BufWriter::new(File::create(path).unwrap());
+        w.write_all(MAGIC).unwrap();
+        for v in [mat.n_rows() as u64, mat.n_cols() as u64, mat.nnz() as u64, flags] {
+            w.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for &v in y {
+            w.write_all(&v.to_bits().to_le_bytes()).unwrap();
+        }
+        let mut run = 0u64;
+        w.write_all(&run.to_le_bytes()).unwrap();
+        for j in 0..mat.n_cols() {
+            run += mat.col(j).0.len() as u64;
+            w.write_all(&run.to_le_bytes()).unwrap();
+        }
+        for j in 0..mat.n_cols() {
+            for &i in mat.col(j).0 {
+                w.write_all(&(i as u64).to_le_bytes()).unwrap();
+            }
+        }
+        for j in 0..mat.n_cols() {
+            for &v in mat.col(j).1 {
+                w.write_all(&v.to_bits().to_le_bytes()).unwrap();
+            }
+        }
+        w.flush().unwrap();
+    }
+
+    fn random_csc(rng: &mut Rng, n: usize, p: usize) -> CscMat {
+        let mut cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let nnz = rng.below(n.min(8) + 1);
+            cols.push(
+                rng.sample_indices(n, nnz)
+                    .into_iter()
+                    .map(|i| (i, rng.normal()))
+                    .collect(),
+            );
+        }
+        CscMat::from_cols(n, cols)
+    }
+
+    #[test]
+    fn open_matches_in_memory_bitwise() {
+        let mut rng = Rng::new(401);
+        let (n, p) = (17, 43);
+        let mat = random_csc(&mut rng, n, p);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let path = tmp_path("bitwise");
+        write_mat(&mat, &y, FLAG_LOGISTIC, &path);
+        let ooc = OocCsc::open(&path).unwrap();
+        assert_eq!(ooc.n_rows(), n);
+        assert_eq!(ooc.n_cols(), p);
+        assert_eq!(ooc.nnz(), mat.nnz());
+        assert!(ooc.logistic());
+        for (a, b) in ooc.labels().iter().zip(&y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        for j in 0..p {
+            assert_eq!(ooc.col_dot(j, &v).to_bits(), mat.col_dot(j, &v).to_bits(), "col {j}");
+            for i in 0..n {
+                assert_eq!(ooc.get(i, j).to_bits(), mat.get(i, j).to_bits());
+            }
+        }
+        let (mut a, mut b) = (vec![0.0; p], vec![0.0; p]);
+        ooc.mul_t_vec(&v, &mut a);
+        mat.mul_t_vec(&v, &mut b);
+        assert_eq!(a, b);
+        let w: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let (mut ya, mut yb) = (vec![0.0; n], vec![0.0; n]);
+        ooc.mul_vec(&w, &mut ya);
+        mat.mul_vec(&w, &mut yb);
+        assert_eq!(ya, yb);
+        assert_eq!(ooc.col_norms_sq(), mat.col_norms_sq());
+        assert_eq!(ooc.col_sums(), mat.col_sums());
+        assert_eq!(ooc.to_csc(), mat);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tiny_chunks_and_tiny_cache_stay_correct() {
+        let mut rng = Rng::new(402);
+        let (n, p) = (12, 30);
+        let mat = random_csc(&mut rng, n, p);
+        let y = vec![0.0; n];
+        let path = tmp_path("tiny");
+        write_mat(&mat, &y, 0, &path);
+        // chunk budget below one entry: the streamer still advances one
+        // column at a time
+        let ooc = OocCsc::open_with_cache(&path, 64).unwrap();
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (mut a, mut b) = (vec![0.0; p], vec![0.0; p]);
+        let mut seen = Vec::new();
+        ooc.stream_cols(0, p, 1, |j, rows, vals| {
+            seen.push(j);
+            let mut s = 0.0;
+            for (&i, &x) in rows.iter().zip(vals) {
+                s += x * v[i];
+            }
+            a[j] = s;
+        });
+        assert_eq!(seen, (0..p).collect::<Vec<_>>());
+        mat.mul_t_vec(&v, &mut b);
+        assert_eq!(a, b);
+        // a 64-byte cache evicts constantly; per-column kernels stay
+        // correct through the misses
+        for j in (0..p).rev() {
+            assert_eq!(ooc.col_dot(j, &v).to_bits(), mat.col_dot(j, &v).to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn select_rows_cols_match_in_memory() {
+        let mut rng = Rng::new(403);
+        let (n, p) = (14, 20);
+        let mat = random_csc(&mut rng, n, p);
+        let path = tmp_path("select");
+        let y = vec![0.0; n];
+        write_mat(&mat, &y, 0, &path);
+        let ooc = OocCsc::open(&path).unwrap();
+        let cols = [7usize, 0, 13, 7];
+        assert_eq!(ooc.select_cols(&cols), mat.select_cols(&cols));
+        let rows = [5usize, 5, 1, 9];
+        assert_eq!(ooc.select_rows(&rows), mat.select_rows(&rows));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reopen_is_independent_but_equal() {
+        let mut rng = Rng::new(404);
+        let mat = random_csc(&mut rng, 9, 11);
+        let path = tmp_path("reopen");
+        write_mat(&mat, &[0.0; 9], 0, &path);
+        let a = OocCsc::open(&path).unwrap();
+        let b = a.reopen().unwrap();
+        assert_eq!(a, b, "same file compares equal");
+        assert_ne!(a.identity(), b.identity(), "but the handles are distinct");
+        let c = a.clone();
+        assert_eq!(a.identity(), c.identity(), "clones share the handle");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_and_truncation() {
+        let path = tmp_path("badmagic");
+        std::fs::write(&path, b"NOTSAIF!rest").unwrap();
+        assert!(OocCsc::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+
+        let mut rng = Rng::new(405);
+        let mat = random_csc(&mut rng, 6, 7);
+        let path = tmp_path("trunc");
+        write_mat(&mat, &[0.0; 6], 0, &path);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        let err = OocCsc::open(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_budget() {
+        let mut cache = ColCache::new(ENTRY_BYTES as usize * 4);
+        let col = |k: usize| {
+            Arc::new(OocCol { rows: vec![0; k], vals: vec![1.0; k] })
+        };
+        cache.insert(0, col(2));
+        cache.insert(1, col(2)); // full: 4 entries
+        assert!(cache.get(0).is_some()); // 0 is now most-recent
+        cache.insert(2, col(2)); // evicts 1 (oldest)
+        assert!(cache.get(1).is_none());
+        assert!(cache.get(0).is_some());
+        assert!(cache.get(2).is_some());
+        // an over-budget column is served uncached, evicting nothing
+        cache.insert(3, col(64));
+        assert!(cache.get(3).is_none());
+        assert!(cache.get(0).is_some());
+    }
+}

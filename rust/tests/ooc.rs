@@ -1,0 +1,341 @@
+//! Out-of-core parity: a design streamed from a `.saifbin` file must
+//! be a pure storage swap. Every kernel, every scan substrate and
+//! every solve produces the SAME BITS as the equivalent in-memory
+//! `Sparse` design — dense and sparse seeds, least-squares and
+//! logistic losses, persistent and scoped pool modes — and the
+//! coordinator serves a path-registered `.saifbin` dataset end to end
+//! with certified responses identical to in-memory serving.
+
+mod common;
+
+use saif::cm::{EpochShards, PoolMode};
+use saif::coordinator::{Coordinator, CoordinatorError, Method, SolveSpec};
+use saif::data::io::{read_saifbin, write_saifbin};
+use saif::data::{synth, Dataset};
+use saif::linalg::{CscMat, Design, OocCsc, Parallelism};
+use saif::model::{LossKind, Problem};
+use saif::solver::{make, Solver};
+use saif::util::prop;
+use saif::util::Rng;
+
+/// Unique temp path per (test, tag) so parallel test binaries and
+/// repeated runs never collide.
+fn tmp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("saif_ooc_it_{}_{tag}.saifbin", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Random dataset over {dense, sparse} seeds × {ls, logistic}. The
+/// in-memory reference design is CSC either way (the acceptance
+/// criterion is parity with the in-memory `Sparse` backend; a dense
+/// seed just produces a CSC with ~no implicit zeros).
+fn random_dataset(rng: &mut Rng, dense_seed: bool, logistic: bool) -> Dataset {
+    let n = 20 + rng.below(30);
+    let p = 80 + rng.below(120);
+    let mut ds = if dense_seed {
+        let mut d = synth::synth_linear(n, p, rng.next_u64());
+        d.x = Design::Sparse(CscMat::from_dense(&d.x.to_dense()));
+        d
+    } else {
+        synth::synth_sparse(n, p, 0.05 + 0.15 * rng.uniform(), rng.next_u64())
+    };
+    if logistic {
+        ds.y = ds.y.iter().map(|v| if *v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        ds.loss = LossKind::Logistic;
+    }
+    ds
+}
+
+/// Write `ds` to a fresh `.saifbin` and reopen it out-of-core.
+fn spill(ds: &Dataset, tag: &str) -> (Dataset, String) {
+    let path = tmp(tag);
+    write_saifbin(ds, &path).expect("write saifbin");
+    let ooc = read_saifbin(&path).expect("read saifbin");
+    (ooc, path)
+}
+
+#[test]
+fn kernels_bitwise_match_in_memory_sparse() {
+    prop::check("ooc kernels == in-memory CSC bitwise", 6, |rng| {
+        let dense_seed = rng.uniform() > 0.5;
+        let ds = random_dataset(rng, dense_seed, false);
+        let (n, p) = (ds.n(), ds.p());
+        let tag = format!("kern{}", rng.below(1 << 30));
+        let (ooc_ds, path) = spill(&ds, &tag);
+        let (mem, ooc) = (&ds.x, &ooc_ds.x);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let w: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+
+        if ooc.nnz() != mem.nnz() {
+            return Err(format!("nnz {} vs {}", ooc.nnz(), mem.nnz()));
+        }
+        for j in 0..p {
+            let (a, b) = (ooc.col_dot(j, &v), mem.col_dot(j, &v));
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("col_dot {j}: {a} vs {b}"));
+            }
+            let (mut xa, mut xb) = (v.clone(), v.clone());
+            ooc.col_axpy(-1.7, j, &mut xa);
+            mem.col_axpy(-1.7, j, &mut xb);
+            if xa != xb {
+                return Err(format!("col_axpy {j}"));
+            }
+            // col_iter yields the same stored entries
+            let ia: Vec<(usize, f64)> = ooc.col_iter(j).collect();
+            let ib: Vec<(usize, f64)> = mem.col_iter(j).collect();
+            if ia != ib {
+                return Err(format!("col_iter {j}"));
+            }
+        }
+        // serial scan
+        let (mut sa, mut sb) = (vec![0.0; p], vec![0.0; p]);
+        ooc.mul_t_vec(&v, &mut sa);
+        mem.mul_t_vec(&v, &mut sb);
+        if sa != sb {
+            return Err("mul_t_vec".into());
+        }
+        // pooled/scoped streaming scans, several widths
+        for threads in [2usize, 3, 7] {
+            for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+                let mut pa = vec![0.0; p];
+                ooc.mul_t_vec_pool(&v, &mut pa, Parallelism::Fixed(threads), mode);
+                if pa != sb {
+                    return Err(format!("pooled scan threads={threads} mode={mode:?}"));
+                }
+            }
+        }
+        // forward product, norms, batched ops, gathers
+        let (mut ya, mut yb) = (vec![0.0; n], vec![0.0; n]);
+        ooc.mul_vec(&w, &mut ya);
+        mem.mul_vec(&w, &mut yb);
+        if ya != yb {
+            return Err("mul_vec".into());
+        }
+        if ooc.col_norms_sq() != mem.col_norms_sq() {
+            return Err("col_norms_sq".into());
+        }
+        let cols: Vec<usize> = (0..6).map(|_| rng.below(p)).collect();
+        let (mut ba, mut bb) = (vec![0.0; cols.len()], vec![0.0; cols.len()]);
+        ooc.cols_dot(&cols, &v, &mut ba);
+        mem.cols_dot(&cols, &v, &mut bb);
+        if ba != bb {
+            return Err("cols_dot".into());
+        }
+        let updates = [(cols[0], 0.5), (cols[1], -1.25), (cols[0], 0.75)];
+        let (mut fa, mut fb) = (v.clone(), v.clone());
+        ooc.cols_axpy(&updates, &mut fa);
+        mem.cols_axpy(&updates, &mut fb);
+        if fa != fb {
+            return Err("cols_axpy".into());
+        }
+        let sel = ooc.select_cols(&cols);
+        for (k, &j) in cols.iter().enumerate() {
+            for i in 0..n {
+                if sel.get(i, k).to_bits() != mem.get(i, j).to_bits() {
+                    return Err(format!("select_cols ({i},{j})"));
+                }
+            }
+        }
+        let rows: Vec<usize> = (0..n / 2).map(|_| rng.below(n)).collect();
+        let (ra, rb) = (ooc.select_rows(&rows), mem.select_rows(&rows));
+        for j in 0..p {
+            for (new, _) in rows.iter().enumerate() {
+                if ra.get(new, j).to_bits() != rb.get(new, j).to_bits() {
+                    return Err(format!("select_rows ({new},{j})"));
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+        Ok(())
+    });
+}
+
+/// The acceptance criterion: solves on a `.saifbin` design are
+/// bitwise identical to the same solves on the in-memory sparse
+/// design — dense + sparse seeds × ls/logistic × both pool modes,
+/// with the KKT oracle certifying both sides.
+#[test]
+fn solves_bitwise_match_in_memory_sparse() {
+    let par = common::test_parallelism();
+    let mut case = 0;
+    for dense_seed in [false, true] {
+        for logistic in [false, true] {
+            let mut rng = Rng::new(7000 + case);
+            case += 1;
+            let ds = random_dataset(&mut rng, dense_seed, logistic);
+            let (ooc_ds, path) = spill(&ds, &format!("solve{case}"));
+            let prob_mem = ds.problem();
+            let prob_ooc = ooc_ds.problem();
+            // cached column norms must match bitwise before anything
+            // else (they seed every screening bound)
+            assert_eq!(
+                prob_mem.col_nrm2, prob_ooc.col_nrm2,
+                "col_nrm2 differs (dense_seed={dense_seed})"
+            );
+            let lam = prob_mem.lambda_max() * 0.15;
+            let eps = 1e-9;
+            for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+                let solve = |prob: &Problem| {
+                    let mut eng = saif::cm::NativeEngine::new();
+                    let spec = SolveSpec {
+                        eps,
+                        parallelism: Some(par),
+                        epoch_shards: Some(EpochShards::Fixed(2)),
+                        pool: Some(mode),
+                        ..Default::default()
+                    };
+                    let mut s = make(Method::Saif, &mut eng, &spec);
+                    let sol = s.solve(prob, lam);
+                    (sol.beta, sol.gap)
+                };
+                let (beta_mem, gap_mem) = solve(&prob_mem);
+                let (beta_ooc, gap_ooc) = solve(&prob_ooc);
+                assert_eq!(
+                    beta_mem, beta_ooc,
+                    "β differs (dense_seed={dense_seed}, logistic={logistic}, mode={mode:?})"
+                );
+                assert_eq!(gap_mem.to_bits(), gap_ooc.to_bits(), "gap bits differ");
+                // both certify on the FULL problem via the shared oracle
+                common::assert_certificate(&prob_mem, &beta_mem, lam, gap_mem, eps);
+                common::assert_certificate(&prob_ooc, &beta_ooc, lam, gap_ooc, eps);
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+/// λ-path sessions stream the same bits too (warm chaining reuses the
+/// out-of-core design across the whole descending grid).
+#[test]
+fn paths_bitwise_match_in_memory_sparse() {
+    let mut rng = Rng::new(7100);
+    let ds = random_dataset(&mut rng, false, false);
+    let (ooc_ds, path_file) = spill(&ds, "path");
+    let prob_mem = ds.problem();
+    let prob_ooc = ooc_ds.problem();
+    let lam_max = prob_mem.lambda_max();
+    let grid: Vec<f64> = (1..=6).map(|k| lam_max * 0.6f64.powi(k)).collect();
+    for method in [Method::Saif, Method::DynScreen] {
+        let run = |prob: &Problem| {
+            let mut eng = saif::cm::NativeEngine::new();
+            let spec = SolveSpec { eps: 1e-9, ..Default::default() };
+            let mut s = make(method, &mut eng, &spec);
+            s.path(prob, &grid)
+        };
+        let (pm, po) = (run(&prob_mem), run(&prob_ooc));
+        for (k, (a, b)) in pm.points.iter().zip(&po.points).enumerate() {
+            assert_eq!(a.beta, b.beta, "{method:?} path point {k} differs");
+            common::assert_kkt(&prob_mem, &b.beta, grid[k]);
+        }
+        let warm = po.points.iter().filter(|s| s.warm_started).count();
+        assert!(warm >= grid.len() - 1, "{method:?}: warm {warm}");
+    }
+    std::fs::remove_file(&path_file).ok();
+}
+
+/// Coordinator e2e on a `.saifbin` dataset registered by path: every
+/// response is certified, and the served betas are bitwise identical
+/// to serving the same requests from the in-memory design.
+#[test]
+fn coordinator_serves_saifbin_bitwise_like_in_memory() {
+    let mut rng = Rng::new(7200);
+    let ds = random_dataset(&mut rng, false, false);
+    let (_, path) = spill(&ds, "coord");
+    let prob_mem = std::sync::Arc::new(ds.problem());
+    let lam_max = prob_mem.lambda_max();
+    let fracs = [0.4f64, 0.2, 0.1];
+    let spec = || SolveSpec {
+        eps: 1e-9,
+        pool: Some(common::test_pool_mode()),
+        ..Default::default()
+    };
+
+    // out-of-core: registered by path, one handle per worker slot
+    let mut c = Coordinator::builder().workers(2).build();
+    c.register_saifbin(5, &path).unwrap();
+    for (i, f) in fracs.iter().enumerate() {
+        c.submit_registered(i as u64, 5, lam_max * f, Method::Saif, spec()).unwrap();
+    }
+    let mut ooc_responses = c.drain().unwrap();
+    c.shutdown();
+    ooc_responses.sort_by_key(|r| r.id);
+
+    // in-memory reference: same requests, inline problems
+    let mut c = Coordinator::builder().workers(2).build();
+    for (i, f) in fracs.iter().enumerate() {
+        c.submit(saif::coordinator::SolveRequest {
+            id: i as u64,
+            dataset_key: 5,
+            problem: prob_mem.clone(),
+            lam: lam_max * f,
+            method: Method::Saif,
+            tree: None,
+            spec: spec(),
+        })
+        .unwrap();
+    }
+    let mut mem_responses = c.drain().unwrap();
+    c.shutdown();
+    mem_responses.sort_by_key(|r| r.id);
+
+    assert_eq!(ooc_responses.len(), fracs.len());
+    for (a, b) in ooc_responses.iter().zip(&mem_responses) {
+        assert_eq!(a.beta, b.beta, "req {}: ooc β ≠ mem β", a.id);
+        assert_eq!(a.kkt_violation.to_bits(), b.kkt_violation.to_bits());
+        common::assert_kkt(&prob_mem, &a.beta, a.lam);
+        assert!(a.gap <= 1e-9, "req {}: gap {}", a.id, a.gap);
+    }
+    let warm = ooc_responses.iter().filter(|r| r.warm_started).count();
+    assert!(warm >= 2, "descending λ batch must warm-chain: {warm}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Unknown keys and fused-on-out-of-core fail cleanly before anything
+/// is queued; the coordinator stays usable afterwards.
+#[test]
+fn submit_registered_rejections_are_clean_errors() {
+    let mut c = Coordinator::builder().workers(1).build();
+    let err = c
+        .submit_registered(0, 99, 0.5, Method::Saif, SolveSpec::default())
+        .unwrap_err();
+    assert_eq!(err, CoordinatorError::UnknownDataset { key: 99 });
+    // fused would densify the design per worker slot — rejected even
+    // for a registered key, so check it against one that exists
+    let mut rng = Rng::new(7400);
+    let ds = random_dataset(&mut rng, false, false);
+    let (_, path) = spill(&ds, "reject");
+    c.register_saifbin(3, &path).unwrap();
+    let err = c
+        .submit_registered(1, 3, 0.5, Method::Fused, SolveSpec::default())
+        .unwrap_err();
+    assert_eq!(err, CoordinatorError::FusedOnOutOfCore { key: 3 });
+    assert!(c.drain().unwrap().is_empty(), "nothing was queued");
+    c.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// A tiny column cache (constant eviction) and a zero cache must not
+/// change a single bit of a solve.
+#[test]
+fn cache_pressure_does_not_change_solve_bits() {
+    let mut rng = Rng::new(7300);
+    let ds = random_dataset(&mut rng, false, false);
+    let (ooc_ds, path) = spill(&ds, "cache");
+    let lam = ds.problem().lambda_max() * 0.2;
+    let solve = |x: Design| {
+        let prob = Problem::new(x, ds.y.clone(), ds.loss);
+        let mut eng = saif::cm::NativeEngine::new();
+        let spec = SolveSpec { eps: 1e-9, ..Default::default() };
+        make(Method::Saif, &mut eng, &spec).solve(&prob, lam).beta
+    };
+    let full = solve(ooc_ds.x.clone());
+    for budget in [0usize, 256] {
+        let starved = OocCsc::open_with_cache(&path, budget).unwrap();
+        assert_eq!(solve(Design::OocCsc(starved)), full, "budget={budget}");
+    }
+    assert_eq!(solve(ds.x.clone()), full, "ooc ≠ mem");
+    std::fs::remove_file(&path).ok();
+}

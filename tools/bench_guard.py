@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Bench-regression guard for BENCH_kernels.json (std-lib only).
+
+Usage: bench_guard.py <baseline.json> <fresh.json>
+
+Compares the freshly regenerated kernel-bench record against the
+committed baseline and exits non-zero when any guarded scan/epoch
+timing regressed by more than the tolerance (default 25%; override
+with BENCH_TOLERANCE, e.g. BENCH_TOLERANCE=0.5 for noisy machines).
+
+Null baselines (the pre-toolchain placeholder) and missing fields are
+skipped with a note — the guard only ever compares real numbers to
+real numbers, so the first CI run that lands real numbers establishes
+the baseline instead of failing against the placeholder.
+"""
+
+import json
+import os
+import sys
+
+# Guarded rows: the scan + epoch hot-path timings (microseconds, lower
+# is better). The ooc rows are excluded on purpose — disk timings on
+# shared CI runners are too noisy to gate on.
+GUARDED_US_FIELDS = [
+    "dense_serial_us",
+    "dense_parallel_us",
+    "dense_pooled_us",
+    "sparse1pct_serial_us",
+    "sparse1pct_parallel_us",
+    "sparse1pct_pooled_us",
+    "epoch_serial_us",
+    "epoch_sharded_us",
+    "epoch_pooled_us",
+]
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench guard: cannot read {path}: {e}", file=sys.stderr)
+        return None
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+    try:
+        tol = float(os.environ.get("BENCH_TOLERANCE", "0.25"))
+    except ValueError:
+        print("bench guard: bad BENCH_TOLERANCE", file=sys.stderr)
+        return 2
+
+    baseline = load(baseline_path)
+    fresh = load(fresh_path)
+    if baseline is None:
+        print("bench guard: no readable baseline; skipping (first run?)")
+        return 0
+    if fresh is None:
+        print("bench guard: fresh record unreadable — did the bench run?", file=sys.stderr)
+        return 1
+
+    regressions, compared, skipped = [], 0, []
+    for field in GUARDED_US_FIELDS:
+        base, new = baseline.get(field), fresh.get(field)
+        if not isinstance(base, (int, float)) or not isinstance(new, (int, float)):
+            skipped.append(field)
+            continue
+        if base <= 0:
+            skipped.append(field)
+            continue
+        compared += 1
+        ratio = new / base
+        marker = ""
+        if ratio > 1.0 + tol:
+            regressions.append((field, base, new, ratio))
+            marker = "  <-- REGRESSION"
+        print(f"  {field:28s} {base:12.2f} -> {new:12.2f}  ({ratio:5.2f}x){marker}")
+
+    if skipped:
+        print(f"bench guard: skipped (no numeric baseline): {', '.join(skipped)}")
+    if compared == 0:
+        print("bench guard: nothing to compare (placeholder baseline); passing")
+        return 0
+    if regressions:
+        print(
+            f"bench guard: {len(regressions)} guarded row(s) regressed more than "
+            f"{tol:.0%} (override with BENCH_TOLERANCE):",
+            file=sys.stderr,
+        )
+        for field, base, new, ratio in regressions:
+            print(f"  {field}: {base:.2f}us -> {new:.2f}us ({ratio:.2f}x)", file=sys.stderr)
+        return 1
+    print(f"bench guard: {compared} guarded rows within {tol:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
