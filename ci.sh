@@ -6,6 +6,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
+# Invariant linter first (tools/vet, zero-dependency): deny-by-default
+# lints for raw thread spawns, undocumented unsafe, unordered maps in
+# result-producing modules, NaN-lossy comparisons, bare casts in the
+# .saifbin decoders, and library panics — fix the site or add a
+# `// vet: allow(<lint>): <reason>` waiver (docs/INVARIANTS.md).
+cargo run --release --quiet --manifest-path ../tools/vet/Cargo.toml -- src
+
 cargo build --release
 
 # The suite runs three times so the parallel epoch + scan paths are
@@ -36,8 +43,15 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     git -C .. show HEAD:BENCH_kernels.json > "$baseline" 2>/dev/null \
         || cp ../BENCH_kernels.json "$baseline" 2>/dev/null || true
     cargo bench --bench kernels
+    # BENCH_REQUIRE_REAL=1 (the weekly scheduled CI leg) turns the
+    # placeholder-baseline pass into a failure.
+    guard_flags=""
+    if [[ "${BENCH_REQUIRE_REAL:-0}" == "1" ]]; then
+        guard_flags="--require-real-baseline"
+    fi
     if command -v python3 >/dev/null 2>&1; then
-        python3 ../tools/bench_guard.py "$baseline" ../BENCH_kernels.json
+        # shellcheck disable=SC2086  # intentional word-split of flags
+        python3 ../tools/bench_guard.py $guard_flags "$baseline" ../BENCH_kernels.json
     else
         echo "bench guard: python3 not found; skipping regression comparison" >&2
     fi

@@ -51,6 +51,7 @@ use crate::data;
 use crate::linalg::Parallelism;
 use crate::runtime::PjrtEngine;
 use crate::solver::{Method, SolveSpec, Solver};
+use crate::util::tmax;
 use crate::util::json::Json;
 
 /// Parsed `--key value` flags.
@@ -546,7 +547,7 @@ fn cmd_path(args: &Args) -> i32 {
                 .iter()
                 .zip(&path.points)
                 .map(|(&lam, sol)| solver.kkt_violation(&prob, &sol.beta, lam) / lam.max(1.0))
-                .fold(0.0f64, f64::max);
+                .fold(0.0f64, tmax);
             (path, worst)
         })?;
 
@@ -799,7 +800,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let worst_kkt = responses
         .iter()
         .map(|r| r.kkt_violation / r.lam.max(1.0))
-        .fold(0.0, f64::max);
+        .fold(0.0, tmax);
     let warm = responses.iter().filter(|r| r.warm_started).count();
     println!("completed {total} requests in {wall:.3}s ({:.1} req/s)", total as f64 / wall);
     println!("latency: {}", lat.summary());
@@ -837,7 +838,13 @@ fn cmd_cv(args: &Args) -> i32 {
         ds.n(),
         ds.p()
     );
-    let res = crate::cv::cross_validate(&ds, folds, n_lams, 1e-3, workers, 42);
+    let res = match crate::cv::cross_validate(&ds, folds, n_lams, 1e-3, workers, 42) {
+        Ok(res) => res,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
     println!("{:>12} {:>12} {:>10}", "lambda", "cv_error", "std");
     for i in 0..res.lams.len() {
         let mark = if (res.lams[i] - res.best_lam).abs() < 1e-12 { "  <-- best" } else { "" };

@@ -242,6 +242,9 @@ impl NativeEngine {
                 }
             }
         })
+        // vet: allow(lib-panic): re-raises a panic that already crossed the
+        // pool boundary; the payload carries the real failure, and eating
+        // it here would silently corrupt the epoch's residual merge
         .unwrap_or_else(|e| panic!("epoch shard panicked: {e}"))
     }
 

@@ -42,7 +42,7 @@
 //! registry — DESIGN.md §4); workers own their engines behind slot
 //! mutexes.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -228,7 +228,7 @@ impl CoordinatorBuilder {
                     state: Mutex::new(WorkerState {
                         native,
                         pjrt,
-                        warm: HashMap::new(),
+                        warm: BTreeMap::new(),
                         defaults: (self.parallelism, self.epoch_shards, self.pool),
                     }),
                 })
@@ -238,10 +238,10 @@ impl CoordinatorBuilder {
             slots,
             res_tx,
             results: res_rx,
-            affinity: HashMap::new(),
+            affinity: BTreeMap::new(),
             next_worker: 0,
             inflight: vec![0; self.n_workers],
-            registered: HashMap::new(),
+            registered: BTreeMap::new(),
         }
     }
 
@@ -302,7 +302,7 @@ struct WorkerState {
     /// solution). Keyed per method so a structured-penalty solution
     /// (fused is piecewise-constant, not sparse) can never seed a
     /// plain-LASSO session on the same dataset.
-    warm: HashMap<(u64, Method), (f64, Vec<(usize, f64)>)>,
+    warm: BTreeMap<(u64, Method), (f64, Vec<(usize, f64)>)>,
     /// Build-time (parallelism, epoch_shards, pool) defaults that
     /// per-request `SolveSpec` overrides fall back to.
     defaults: (Parallelism, EpochShards, PoolMode),
@@ -320,7 +320,7 @@ pub struct Coordinator {
     res_tx: Sender<SolveResponse>,
     results: Receiver<SolveResponse>,
     /// dataset_key → worker (sticky affinity)
-    affinity: HashMap<u64, usize>,
+    affinity: BTreeMap<u64, usize>,
     next_worker: usize,
     /// Outstanding requests per worker.
     inflight: Vec<usize>,
@@ -328,7 +328,7 @@ pub struct Coordinator {
     /// slot, each holding its own read-only file handle + column cache
     /// ([`Coordinator::register_saifbin`]). Workers never contend on
     /// one handle's cache.
-    registered: HashMap<u64, Vec<Arc<Problem>>>,
+    registered: BTreeMap<u64, Vec<Arc<Problem>>>,
 }
 
 impl Coordinator {
@@ -548,10 +548,9 @@ fn process_batch(
             Some(e) => e.supports(prob, 1) && prob.offset.is_none(),
             None => false,
         };
-        let engine: &mut dyn Engine = if use_pjrt {
-            state.pjrt.as_mut().unwrap() as &mut dyn Engine
-        } else {
-            &mut state.native as &mut dyn Engine
+        let engine: &mut dyn Engine = match (use_pjrt, state.pjrt.as_mut()) {
+            (true, Some(e)) => e as &mut dyn Engine,
+            _ => &mut state.native as &mut dyn Engine,
         };
         // per-request overrides over the worker defaults
         engine.set_parallelism(spec.parallelism.unwrap_or(par));
@@ -773,7 +772,8 @@ mod tests {
         let mut reqs = requests_for(p1.clone(), 10, &[0.5, 0.3, 0.2, 0.1], 0);
         reqs.extend(requests_for(p2.clone(), 20, &[0.5, 0.3, 0.2, 0.1], 100));
         let (responses, _, _) = run(reqs, Coordinator::builder().workers(3));
-        let mut per_ds: HashMap<u64, std::collections::HashSet<usize>> = HashMap::new();
+        let mut per_ds: std::collections::HashMap<u64, std::collections::HashSet<usize>> =
+            Default::default();
         for r in &responses {
             per_ds.entry(r.dataset_key).or_default().insert(r.worker);
         }

@@ -27,6 +27,9 @@ pub struct CvResult {
 }
 
 /// K-fold CV over a log-spaced λ grid.
+///
+/// Returns `Err` when the λ grid is empty or when the coordinator loses a
+/// worker mid-batch (the fold solves on that worker are unrecoverable).
 pub fn cross_validate(
     ds: &Dataset,
     k_folds: usize,
@@ -34,7 +37,7 @@ pub fn cross_validate(
     lo_frac: f64,
     workers: usize,
     seed: u64,
-) -> CvResult {
+) -> Result<CvResult, String> {
     assert!(k_folds >= 2);
     let n = ds.n();
     let mut rng = Rng::new(seed);
@@ -94,7 +97,7 @@ pub fn cross_validate(
         .workers(workers)
         .engine(EngineKind::Native)
         .run_batch(reqs)
-        .expect("cv: coordinator worker died");
+        .map_err(|e| format!("cv: {e}"))?;
     let (responses, wall) = (batch.responses, batch.wall_secs);
 
     // held-out error per (fold, λ)
@@ -104,7 +107,7 @@ pub fn cross_validate(
         let li = lams
             .iter()
             .position(|&l| (l - r.lam).abs() < 1e-12 * l.max(1.0))
-            .expect("λ in grid");
+            .ok_or_else(|| format!("cv: response λ {} not on the grid", r.lam))?;
         let (xt, yt) = &fold_test[f];
         let mut u = vec![0.0; yt.len()];
         for &(i, b) in &r.beta {
@@ -138,10 +141,10 @@ pub fn cross_validate(
         cv_std.push(v.sqrt());
     }
     let best = (0..n_lams)
-        .min_by(|&a, &b| cv_error[a].partial_cmp(&cv_error[b]).unwrap())
-        .unwrap();
+        .min_by(|&a, &b| cv_error[a].total_cmp(&cv_error[b]))
+        .ok_or_else(|| "cv: empty λ grid (n_lams = 0)".to_string())?;
     let best_lam = lams[best];
-    CvResult { lams, cv_error, cv_std, best_lam, wall_secs: wall }
+    Ok(CvResult { lams, cv_error, cv_std, best_lam, wall_secs: wall })
 }
 
 #[cfg(test)]
@@ -152,7 +155,7 @@ mod tests {
     #[test]
     fn cv_picks_reasonable_lambda_ls() {
         let ds = synth::synth_linear(80, 200, 601);
-        let res = cross_validate(&ds, 4, 8, 1e-3, 2, 1);
+        let res = cross_validate(&ds, 4, 8, 1e-3, 2, 1).unwrap();
         assert_eq!(res.cv_error.len(), 8);
         // best λ is neither the largest (underfit: β=0-ish) nor does
         // the error curve stay flat
@@ -165,7 +168,7 @@ mod tests {
     #[test]
     fn cv_stays_sparse_end_to_end() {
         let ds = synth::synth_sparse(60, 400, 0.05, 605);
-        let res = cross_validate(&ds, 3, 4, 1e-2, 2, 3);
+        let res = cross_validate(&ds, 3, 4, 1e-2, 2, 3).unwrap();
         assert_eq!(res.cv_error.len(), 4);
         assert!(res.cv_error.iter().all(|e| e.is_finite()));
         assert!(res.best_lam > 0.0);
@@ -174,7 +177,7 @@ mod tests {
     #[test]
     fn cv_logistic_error_rate_bounded() {
         let ds = synth::gisette_like(120, 80, 603);
-        let res = cross_validate(&ds, 3, 5, 1e-2, 2, 2);
+        let res = cross_validate(&ds, 3, 5, 1e-2, 2, 2).unwrap();
         for &e in &res.cv_error {
             assert!((0.0..=1.0).contains(&e));
         }

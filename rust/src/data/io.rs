@@ -29,7 +29,7 @@
 
 use std::io::{BufRead, BufWriter, Write};
 
-use crate::linalg::ooc::{FLAG_LOGISTIC, MAGIC};
+use crate::linalg::ooc::{u64_of, FLAG_LOGISTIC, MAGIC};
 use crate::linalg::{CscMat, Design, OocCsc};
 use crate::model::LossKind;
 
@@ -207,50 +207,70 @@ pub fn write_libsvm(ds: &Dataset, path: &str) -> Result<(), String> {
 /// columns, which the mean correction makes dense — convert before
 /// standardizing, not after.)
 pub fn write_saifbin(ds: &Dataset, path: &str) -> Result<(), String> {
+    let file = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+    let mut w = BufWriter::new(file);
+    write_saifbin_to(ds, &mut w).map_err(|e| format!("write {path}: {e}"))
+}
+
+/// The exact `.saifbin` byte image [`write_saifbin`] puts on disk,
+/// materialized in memory. Pairs with [`OocCsc::from_bytes`] for
+/// filesystem-free fixtures — the Miri CI leg runs the out-of-core
+/// suite against these buffers because the interpreter has no
+/// positional file reads.
+pub fn saifbin_bytes(ds: &Dataset) -> Vec<u8> {
+    let mut buf = Vec::new();
+    if let Err(e) = write_saifbin_to(ds, &mut buf) {
+        unreachable!("write to Vec<u8> cannot fail: {e}")
+    }
+    buf
+}
+
+/// Serialize `ds` in `.saifbin` format to any byte sink. All size and
+/// index widenings go through `u64_of` (the `unchecked-cast`
+/// invariant: this file and `linalg/ooc.rs` decode/encode untrusted
+/// on-disk values, so bare `as` casts are banned here).
+fn write_saifbin_to<W: Write>(ds: &Dataset, w: &mut W) -> std::io::Result<()> {
     let (n, p) = (ds.n(), ds.p());
-    let werr = |e: std::io::Error| format!("write {path}: {e}");
     // pass 1: per-column nonzero counts → the column-pointer index
     let mut counts = vec![0u64; p];
     for (j, c) in counts.iter_mut().enumerate() {
-        *c = ds.x.col_iter(j).filter(|&(_, v)| v != 0.0).count() as u64;
+        *c = u64_of(ds.x.col_iter(j).filter(|&(_, v)| v != 0.0).count());
     }
     let nnz: u64 = counts.iter().sum();
-    let file = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
-    let mut w = BufWriter::new(file);
-    w.write_all(MAGIC).map_err(werr)?;
+    w.write_all(MAGIC)?;
     let flags = match ds.loss {
         LossKind::Logistic => FLAG_LOGISTIC,
         LossKind::Squared => 0,
     };
-    for v in [n as u64, p as u64, nnz, flags] {
-        w.write_all(&v.to_le_bytes()).map_err(werr)?;
+    for v in [u64_of(n), u64_of(p), nnz, flags] {
+        w.write_all(&v.to_le_bytes())?;
     }
     for &yi in &ds.y {
-        w.write_all(&yi.to_bits().to_le_bytes()).map_err(werr)?;
+        w.write_all(&yi.to_bits().to_le_bytes())?;
     }
     let mut run = 0u64;
-    w.write_all(&run.to_le_bytes()).map_err(werr)?;
+    w.write_all(&run.to_le_bytes())?;
     for &c in &counts {
         run += c;
-        w.write_all(&run.to_le_bytes()).map_err(werr)?;
+        w.write_all(&run.to_le_bytes())?;
     }
     // pass 2: row indices, pass 3: values — two contiguous regions, so
     // any consecutive-column range maps to two contiguous byte ranges
     for j in 0..p {
         for (i, v) in ds.x.col_iter(j) {
             if v != 0.0 {
-                w.write_all(&(i as u64).to_le_bytes()).map_err(werr)?;
+                w.write_all(&u64_of(i).to_le_bytes())?;
             }
         }
     }
     for j in 0..p {
         for (_, v) in ds.x.col_iter(j) {
             if v != 0.0 {
-                w.write_all(&v.to_bits().to_le_bytes()).map_err(werr)?;
+                w.write_all(&v.to_bits().to_le_bytes())?;
             }
         }
     }
-    w.flush().map_err(werr)
+    w.flush()
 }
 
 /// Open a `.saifbin` dataset WITHOUT loading the design into RAM: the
@@ -263,6 +283,22 @@ pub fn read_saifbin(path: &str) -> Result<Dataset, String> {
     let loss = if m.logistic() { LossKind::Logistic } else { LossKind::Squared };
     Ok(Dataset {
         name: format!("saifbin({path})"),
+        x: Design::OocCsc(m),
+        y,
+        loss,
+        tree: None,
+    })
+}
+
+/// [`read_saifbin`] over an in-memory byte image (the output of
+/// [`saifbin_bytes`]): same header validation, same streaming kernels,
+/// no filesystem. This is the fixture path the Miri leg exercises.
+pub fn read_saifbin_bytes(bytes: Vec<u8>) -> Result<Dataset, String> {
+    let m = OocCsc::from_bytes(bytes).map_err(|e| format!("parse saifbin bytes: {e}"))?;
+    let y = m.labels().to_vec();
+    let loss = if m.logistic() { LossKind::Logistic } else { LossKind::Squared };
+    Ok(Dataset {
+        name: "saifbin(<memory>)".to_string(),
         x: Design::OocCsc(m),
         y,
         loss,
@@ -463,6 +499,31 @@ mod tests {
             }
         }
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn saifbin_bytes_match_file_image_and_reload() {
+        let ds = synth::synth_sparse(18, 40, 0.12, 17);
+        let bytes = saifbin_bytes(&ds);
+        // the in-memory image IS the on-disk image
+        #[cfg(not(miri))]
+        {
+            let path =
+                std::env::temp_dir().join(format!("saif_io_img_{}.saifbin", std::process::id()));
+            let path = path.to_str().unwrap();
+            write_saifbin(&ds, path).unwrap();
+            assert_eq!(std::fs::read(path).unwrap(), bytes);
+            std::fs::remove_file(path).ok();
+        }
+        let back = read_saifbin_bytes(bytes).unwrap();
+        assert!(back.x.is_ooc());
+        assert_eq!((back.n(), back.p()), (ds.n(), ds.p()));
+        assert_eq!(back.loss, ds.loss);
+        for j in 0..ds.p() {
+            for i in 0..ds.n() {
+                assert_eq!(back.x.get(i, j).to_bits(), ds.x.get(i, j).to_bits());
+            }
+        }
     }
 
     #[test]

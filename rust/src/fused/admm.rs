@@ -68,6 +68,9 @@ impl FusedAdmm {
         let sw = Stopwatch::start();
         let p = x.n_cols();
         let n = x.n_rows();
+        // vet: allow(lib-panic): the ADMM reference path runs behind the
+        // public fused entry points, which already validated this edge
+        // list via TreeTransform (fused/mod.rs, fused/solver.rs)
         let tt = TreeTransform::new(p, edges).expect("valid tree");
         let rho = self.cfg.rho;
         let mut beta = vec![0.0; p];

@@ -290,9 +290,9 @@ fn dense_view<'m>(
         other => {
             let key = other.data_ptr();
             if cache.as_ref().map(|(k, _)| *k) != Some(key) {
-                *cache = Some((key, other.to_dense()));
+                *cache = None;
             }
-            &cache.as_ref().expect("cache just filled").1
+            &cache.get_or_insert_with(|| (key, other.to_dense())).1
         }
     }
 }
@@ -324,6 +324,9 @@ impl crate::solver::Solver for FusedSolver<'_> {
         let mut fs = FusedSaif::new(&mut **engine, cfg.clone());
         let r = fs
             .solve(x, &prob.y, prob.loss, &edges, lam)
+            // vet: allow(lib-panic): this edge list already passed
+            // TreeTransform validation when the solver built its tree;
+            // re-solving the same tree cannot fail
             .expect("fused solve: degenerate tree/design");
         crate::solver::Solution {
             beta: r
@@ -362,6 +365,8 @@ impl crate::solver::Solver for FusedSolver<'_> {
         }
         let x = dense_view(&prob.x, &mut self.dense_cache);
         super::fused_kkt_violation(x, &prob.y, prob.loss, &edges, &dense, lam)
+            // vet: allow(lib-panic): same validated edge list as the solve
+            // above — the certificate cannot see a different tree
             .expect("fused certificate: invalid tree")
     }
 }
@@ -453,8 +458,14 @@ mod tests {
         let triv = fs2
             .solve(ds.x.as_dense(), &ds.y, LossKind::Logistic, &edges, lam_hi)
             .unwrap();
-        let triv_obj_at_lam =
-            super::super::fused_objective(ds.x.as_dense(), &ds.y, LossKind::Logistic, &edges, &triv.beta, lam);
+        let triv_obj_at_lam = super::super::fused_objective(
+            ds.x.as_dense(),
+            &ds.y,
+            LossKind::Logistic,
+            &edges,
+            &triv.beta,
+            lam,
+        );
         assert!(res.objective <= triv_obj_at_lam + 1e-9);
     }
 }

@@ -122,16 +122,14 @@ impl<'a> Homotopy<'a> {
                 let d0: Vec<f64> = (0..prob.n())
                     .map(|j| prob.loss.deriv(u_prev[j], prob.y[j]))
                     .collect();
-                let best = *cand
-                    .iter()
-                    .max_by(|&&a, &&b| {
-                        prob.x
-                            .col_dot(a, &d0)
-                            .abs()
-                            .total_cmp(&prob.x.col_dot(b, &d0).abs())
-                    })
-                    .unwrap();
-                work.push(best);
+                if let Some(&best) = cand.iter().max_by(|&&a, &&b| {
+                    prob.x
+                        .col_dot(a, &d0)
+                        .abs()
+                        .total_cmp(&prob.x.col_dot(b, &d0).abs())
+                }) {
+                    work.push(best);
+                }
             }
             let mut in_work = vec![false; p];
             for &i in &work {
@@ -228,6 +226,8 @@ impl crate::solver::Solver for Homotopy<'_> {
     ) -> crate::solver::Solution {
         let warm_started = warm.is_some();
         let (steps, _) = self.solve_path_warm(prob, &[lam], warm);
+        // vet: allow(lib-panic): solve_path_warm yields exactly one step
+        // per requested λ, and exactly one λ is passed here
         let step = steps.into_iter().next().expect("one path point");
         self.step_to_solution(prob, step, warm_started)
     }

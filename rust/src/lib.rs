@@ -23,6 +23,14 @@
 //! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
 //! the paper-vs-measured reproduction record.
 
+// Every `unsafe` in this crate (all of it lives in `runtime::pool`'s
+// lifetime-erasure plumbing) must carry its own `// SAFETY:` argument,
+// and unsafe fns get no blanket license for unsafe ops in their bodies.
+// `tools/vet` enforces the same contract toolchain-independently; see
+// docs/INVARIANTS.md.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod ball;
 pub mod cli;
 pub mod cm;

@@ -451,7 +451,7 @@ impl Design {
         let chunks: Vec<std::sync::Mutex<&mut [f64]>> =
             out.chunks_mut(chunk).map(std::sync::Mutex::new).collect();
         pool::run_ordered_mode(mode, chunks.len(), |c| {
-            let mut part = chunks[c].lock().unwrap();
+            let mut part = chunks[c].lock().unwrap_or_else(|e| e.into_inner());
             let start = c * chunk;
             match self {
                 Design::OocCsc(m) => {
@@ -464,6 +464,8 @@ impl Design {
                 }
             }
         })
+        // vet: allow(lib-panic): re-raises a panic from a pool scan task;
+        // returning a partial scan would poison every screening bound
         .unwrap_or_else(|e| panic!("parallel scan: {e}"));
     }
 
@@ -526,6 +528,9 @@ impl Design {
     pub fn as_dense(&self) -> &Mat {
         match self {
             Design::Dense(m) => m,
+            // vet: allow(lib-panic): documented contract of as_dense (see
+            // doc comment): calling it on a non-dense design is a caller
+            // bug, not runtime data — misuse must fail fast and loudly
             _ => panic!("dense design required; call to_dense() to densify explicitly"),
         }
     }

@@ -12,11 +12,21 @@
 //! active block go through a small hot-column LRU cache so CM epochs
 //! don't re-read the same columns every sweep.
 //!
+//! The byte source is abstracted behind a private `Backing`: the real
+//! backend is a read-only file (positional reads), and
+//! [`OocCsc::from_bytes`] serves the identical format out of a shared
+//! in-memory buffer — that is what the Miri CI job runs against
+//! (`read_exact_at` does not exist under the interpreter) and what
+//! tests use to exercise the format without a filesystem.
+//!
 //! Everything is std-only (the vendored registry is empty): positional
 //! reads use `std::os::unix::fs::FileExt::read_exact_at` (a fresh
 //! handle per call on non-unix), and decoding is explicit little-endian
 //! `from_le_bytes` over 8-byte lanes — alignment-free and
-//! byte-order-portable.
+//! byte-order-portable. Every size and offset decoded out of the
+//! untrusted header goes through `try_from`/checked arithmetic (the
+//! `unchecked-cast` invariant, `docs/INVARIANTS.md`): a corrupt header
+//! is a clean `InvalidData` error, never a mis-sized allocation.
 //!
 //! # `.saifbin` format (version 1, little-endian)
 //!
@@ -46,7 +56,7 @@
 //! column, per scan (serial, pooled or scoped), and therefore per
 //! solve. `rust/tests/ooc.rs` property-tests this end to end.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::{self, Read};
 use std::path::{Path, PathBuf};
@@ -66,6 +76,9 @@ pub const HEADER_BYTES: u64 = 40;
 /// On-disk bytes per stored entry (8 row-index + 8 value).
 pub const ENTRY_BYTES: u64 = 16;
 
+/// Same value as [`ENTRY_BYTES`], usize-typed for in-memory accounting.
+const ENTRY_BYTES_US: usize = 16;
+
 /// Default hot-column cache budget (bytes of decoded column data).
 pub const DEFAULT_CACHE_BYTES: usize = 64 << 20;
 
@@ -73,6 +86,17 @@ pub const DEFAULT_CACHE_BYTES: usize = 64 << 20;
 /// positional read pair). Bounds scan memory at
 /// `threads × 2 × DEFAULT_CHUNK_BYTES` regardless of p.
 pub const DEFAULT_CHUNK_BYTES: usize = 4 << 20;
+
+/// Lossless widening of an in-memory size to the on-disk offset domain
+/// (shared with `data::io`, the other `.saifbin` codec).
+pub(crate) fn u64_of(v: usize) -> u64 {
+    v as u64 // vet: allow(unchecked-cast): widening usize→u64, lossless
+}
+
+/// Checked narrowing of an untrusted on-disk value to a usize.
+fn usize_of(v: u64) -> io::Result<usize> {
+    usize::try_from(v).map_err(|_| bad_data(format!("on-disk value {v} overflows usize")))
+}
 
 /// One decoded column: parallel (row, value) arrays, shared out of the
 /// hot-column cache.
@@ -84,7 +108,7 @@ pub struct OocCol {
 
 impl OocCol {
     fn bytes(&self) -> usize {
-        self.rows.len() * ENTRY_BYTES as usize
+        self.rows.len() * ENTRY_BYTES_US
     }
 }
 
@@ -94,20 +118,21 @@ impl OocCol {
 /// tens of thousands of small columns under the default budget).
 /// Evicts once the decoded bytes exceed the budget; a single column
 /// larger than the whole budget is served uncached instead of
-/// evicting everything else.
+/// evicting everything else. Both maps are ordered (`unordered-map`
+/// invariant): nothing here may iterate in hash order.
 struct ColCache {
     budget: usize,
     used: usize,
     /// Monotone counter; every entry holds a unique tick.
     tick: u64,
-    map: HashMap<usize, (u64, Arc<OocCol>)>,
+    map: BTreeMap<usize, (u64, Arc<OocCol>)>,
     /// tick → column, mirror of `map` (same entries, keyed by tick).
     order: BTreeMap<u64, usize>,
 }
 
 impl ColCache {
     fn new(budget: usize) -> ColCache {
-        ColCache { budget, used: 0, tick: 0, map: HashMap::new(), order: BTreeMap::new() }
+        ColCache { budget, used: 0, tick: 0, map: BTreeMap::new(), order: BTreeMap::new() }
     }
 
     fn get(&mut self, j: usize) -> Option<Arc<OocCol>> {
@@ -140,7 +165,9 @@ impl ColCache {
         // the newest tick sorts last, so eviction can never pop the
         // entry just inserted while older ones remain
         while self.used > self.budget {
-            let (_, evictee) = self.order.pop_first().expect("used > 0 implies entries");
+            let Some((_, evictee)) = self.order.pop_first() else {
+                break; // unreachable: used > 0 implies entries
+            };
             if let Some((_, evicted)) = self.map.remove(&evictee) {
                 self.used -= evicted.bytes();
             }
@@ -148,9 +175,22 @@ impl ColCache {
     }
 }
 
+/// Where the `.saifbin` bytes live.
+enum Backing {
+    /// A read-only file on disk — the real out-of-core backend.
+    File { path: PathBuf, file: File },
+    /// A shared immutable in-memory buffer holding the identical byte
+    /// format. Used by the Miri CI job (no positional file reads under
+    /// the interpreter) and by tests that exercise the format without
+    /// touching a filesystem. "Out-of-core" in name only, on purpose.
+    Mem(Arc<Vec<u8>>),
+}
+
 struct Inner {
-    path: PathBuf,
-    file: File,
+    backing: Backing,
+    /// Human-readable source name for error messages (the path, or
+    /// `<memory>` for byte-backed instances).
+    label: String,
     n_rows: usize,
     n_cols: usize,
     nnz: usize,
@@ -172,19 +212,39 @@ impl Inner {
     /// Positional read: never touches a shared cursor, so concurrent
     /// scan tasks can read disjoint ranges of one handle in parallel.
     fn read_at(&self, buf: &mut [u8], off: u64) -> io::Result<()> {
-        #[cfg(unix)]
-        {
-            use std::os::unix::fs::FileExt;
-            self.file.read_exact_at(buf, off)
-        }
-        #[cfg(not(unix))]
-        {
-            // fallback: a fresh handle per call (its cursor is private,
-            // so this stays race-free, just slower)
-            use std::io::{Seek, SeekFrom};
-            let mut f = File::open(&self.path)?;
-            f.seek(SeekFrom::Start(off))?;
-            f.read_exact(buf)
+        match &self.backing {
+            Backing::File { path, file } => {
+                #[cfg(unix)]
+                {
+                    use std::os::unix::fs::FileExt;
+                    let _ = path;
+                    file.read_exact_at(buf, off)
+                }
+                #[cfg(not(unix))]
+                {
+                    // fallback: a fresh handle per call (its cursor is
+                    // private, so this stays race-free, just slower)
+                    use std::io::{Seek, SeekFrom};
+                    let _ = file;
+                    let mut f = File::open(path)?;
+                    f.seek(SeekFrom::Start(off))?;
+                    f.read_exact(buf)
+                }
+            }
+            Backing::Mem(bytes) => {
+                let start = usize_of(off)?;
+                let end = start
+                    .checked_add(buf.len())
+                    .filter(|&e| e <= bytes.len())
+                    .ok_or_else(|| {
+                        io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            "read past end of in-memory saifbin",
+                        )
+                    })?;
+                buf.copy_from_slice(&bytes[start..end]);
+                Ok(())
+            }
         }
     }
 
@@ -198,36 +258,45 @@ impl Inner {
         rows: &mut Vec<usize>,
         vals: &mut Vec<f64>,
     ) -> io::Result<()> {
-        let k = (e - s) as usize;
+        let k = usize_of(e - s)?;
         byte_buf.resize(k * 8, 0);
         self.read_at(byte_buf, self.idx_off + 8 * s)?;
         rows.clear();
         rows.reserve(k);
+        let n_rows_64 = u64_of(self.n_rows);
         for c in byte_buf.chunks_exact(8) {
-            let r = u64::from_le_bytes(c.try_into().expect("8-byte lane")) as usize;
-            assert!(
-                r < self.n_rows,
-                "corrupt saifbin {}: row index {r} ≥ n_rows {}",
-                self.path.display(),
-                self.n_rows
-            );
-            rows.push(r);
+            let mut lane = [0u8; 8];
+            lane.copy_from_slice(c);
+            let r = u64::from_le_bytes(lane);
+            if r >= n_rows_64 {
+                return Err(bad_data(format!(
+                    "corrupt saifbin {}: row index {r} ≥ n_rows {}",
+                    self.label, self.n_rows
+                )));
+            }
+            // in-range per the check above, so this can never truncate
+            rows.push(usize_of(r)?);
         }
         self.read_at(byte_buf, self.val_off + 8 * s)?;
         vals.clear();
         vals.reserve(k);
         for c in byte_buf.chunks_exact(8) {
-            vals.push(f64::from_bits(u64::from_le_bytes(c.try_into().expect("8-byte lane"))));
+            let mut lane = [0u8; 8];
+            lane.copy_from_slice(c);
+            vals.push(f64::from_bits(u64::from_le_bytes(lane)));
         }
         Ok(())
     }
 
     fn io_panic(&self, e: io::Error) -> ! {
-        panic!("saifbin read {}: {e}", self.path.display())
+        // vet: allow(lib-panic): the Design kernel surface has no Result
+        // channel; an IO failure mid-solve is unrecoverable state loss
+        // and must abort the solve loudly rather than return garbage
+        panic!("saifbin read {}: {e}", self.label)
     }
 }
 
-/// Out-of-core CSC design matrix over a read-only `.saifbin` file.
+/// Out-of-core CSC design matrix over a read-only `.saifbin` source.
 /// Cloning shares the handle and the hot-column cache (it is an `Arc`);
 /// [`OocCsc::reopen`] makes an independent handle + cache — the
 /// coordinator opens one per worker slot.
@@ -239,7 +308,7 @@ pub struct OocCsc {
 impl std::fmt::Debug for OocCsc {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("OocCsc")
-            .field("path", &self.inner.path)
+            .field("source", &self.inner.label)
             .field("n_rows", &self.inner.n_rows)
             .field("n_cols", &self.inner.n_cols)
             .field("nnz", &self.inner.nnz)
@@ -247,16 +316,24 @@ impl std::fmt::Debug for OocCsc {
     }
 }
 
-/// Same backing store: same handle (a clone) or same file + shape. Two
-/// independent opens of one path compare equal, like the value
-/// equality of the in-memory backends.
+/// Same backing store: same handle (a clone), same file + shape, or the
+/// same shared byte buffer. Two independent opens of one path compare
+/// equal, like the value equality of the in-memory backends.
 impl PartialEq for OocCsc {
     fn eq(&self, other: &OocCsc) -> bool {
-        Arc::ptr_eq(&self.inner, &other.inner)
-            || (self.inner.path == other.inner.path
-                && self.inner.n_rows == other.inner.n_rows
-                && self.inner.n_cols == other.inner.n_cols
-                && self.inner.nnz == other.inner.nnz)
+        if Arc::ptr_eq(&self.inner, &other.inner) {
+            return true;
+        }
+        let same_shape = self.inner.n_rows == other.inner.n_rows
+            && self.inner.n_cols == other.inner.n_cols
+            && self.inner.nnz == other.inner.nnz;
+        match (&self.inner.backing, &other.inner.backing) {
+            (Backing::File { path: a, .. }, Backing::File { path: b, .. }) => {
+                same_shape && a == b
+            }
+            (Backing::Mem(a), Backing::Mem(b)) => same_shape && Arc::ptr_eq(a, b),
+            _ => false,
+        }
     }
 }
 
@@ -268,6 +345,72 @@ fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+/// Everything `parse_header` materializes out of the resident prefix.
+struct Header {
+    n_rows: usize,
+    n_cols: usize,
+    nnz: usize,
+    flags: u64,
+    y: Vec<f64>,
+    col_ptr: Vec<u64>,
+    idx_off: u64,
+    val_off: u64,
+}
+
+/// Decode and validate the resident prefix (magic, shape, labels,
+/// column pointers) from any byte source. `total_len` is the full
+/// source length; the untrusted shape is checked against it with
+/// overflow-safe arithmetic BEFORE anything is allocated from it.
+fn parse_header<R: Read>(r: &mut R, label: &str, total_len: u64) -> io::Result<Header> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad_data(format!("{label}: not a saifbin file (bad magic)")));
+    }
+    let n64 = read_u64(r)?;
+    let p64 = read_u64(r)?;
+    let nnz64 = read_u64(r)?;
+    let flags = read_u64(r)?;
+    // validate the untrusted header against the source length BEFORE
+    // allocating anything sized by it: a corrupt n/p/nnz must be a
+    // clean InvalidData error, not a capacity-overflow abort
+    let resident = p64
+        .checked_add(1)
+        .and_then(|c| c.checked_add(n64))
+        .and_then(|w| w.checked_mul(8))
+        .and_then(|b| b.checked_add(HEADER_BYTES));
+    let expect =
+        resident.and_then(|b| nnz64.checked_mul(ENTRY_BYTES).and_then(|e| b.checked_add(e)));
+    if expect != Some(total_len) {
+        return Err(bad_data(format!(
+            "{label}: truncated or oversized ({total_len} bytes, header claims n={n64} \
+             p={p64} nnz={nnz64}{})",
+            expect.map_or(" (overflow)".into(), |e| format!(", expected {e}")),
+        )));
+    }
+    let n_rows = usize_of(n64)?;
+    let n_cols = usize_of(p64)?;
+    let nnz = usize_of(nnz64)?;
+    let mut y = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        y.push(f64::from_bits(read_u64(r)?));
+    }
+    let mut col_ptr = Vec::with_capacity(n_cols + 1);
+    for _ in 0..=n_cols {
+        col_ptr.push(read_u64(r)?);
+    }
+    if col_ptr[0] != 0 || col_ptr[n_cols] != nnz64 {
+        return Err(bad_data(format!("{label}: column pointers do not span nnz={nnz}")));
+    }
+    if col_ptr.windows(2).any(|w| w[1] < w[0]) {
+        return Err(bad_data(format!("{label}: column pointers not monotone")));
+    }
+    // no overflow: both offsets are < total_len, which fit in u64 above
+    let idx_off = HEADER_BYTES + 8 * (n64 + p64 + 1);
+    let val_off = idx_off + 8 * nnz64;
+    Ok(Header { n_rows, n_cols, nnz, flags, y, col_ptr, idx_off, val_off })
 }
 
 impl OocCsc {
@@ -283,85 +426,66 @@ impl OocCsc {
     /// re-reads from disk).
     pub fn open_with_cache(path: impl AsRef<Path>, cache_budget: usize) -> io::Result<OocCsc> {
         let path = path.as_ref().to_path_buf();
+        let label = path.display().to_string();
         let file = File::open(&path)?;
+        let total_len = file.metadata()?.len();
         let mut r = io::BufReader::new(&file);
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            return Err(bad_data(format!(
-                "{}: not a saifbin file (bad magic)",
-                path.display()
-            )));
-        }
-        let n_rows = read_u64(&mut r)? as usize;
-        let n_cols = read_u64(&mut r)? as usize;
-        let nnz = read_u64(&mut r)? as usize;
-        let flags = read_u64(&mut r)?;
-        // validate the untrusted header against the file length BEFORE
-        // allocating anything sized by it: a corrupt n/p/nnz must be a
-        // clean InvalidData error, not a capacity-overflow abort
-        let resident = (n_cols as u64)
-            .checked_add(1)
-            .and_then(|c| c.checked_add(n_rows as u64))
-            .and_then(|w| w.checked_mul(8))
-            .and_then(|b| b.checked_add(HEADER_BYTES));
-        let expect = resident.and_then(|b| {
-            (nnz as u64).checked_mul(16).and_then(|e| b.checked_add(e))
-        });
-        let actual = file.metadata()?.len();
-        if expect != Some(actual) {
-            return Err(bad_data(format!(
-                "{}: truncated or oversized ({actual} bytes, header claims n={n_rows} \
-                 p={n_cols} nnz={nnz}{})",
-                path.display(),
-                expect.map_or(" (overflow)".into(), |e| format!(", expected {e}")),
-            )));
-        }
-        let mut y = Vec::with_capacity(n_rows);
-        for _ in 0..n_rows {
-            y.push(f64::from_bits(read_u64(&mut r)?));
-        }
-        let mut col_ptr = Vec::with_capacity(n_cols + 1);
-        for _ in 0..=n_cols {
-            col_ptr.push(read_u64(&mut r)?);
-        }
-        if col_ptr[0] != 0 || col_ptr[n_cols] != nnz as u64 {
-            return Err(bad_data(format!(
-                "{}: column pointers do not span nnz={nnz}",
-                path.display()
-            )));
-        }
-        if col_ptr.windows(2).any(|w| w[1] < w[0]) {
-            return Err(bad_data(format!(
-                "{}: column pointers not monotone",
-                path.display()
-            )));
-        }
-        let idx_off = HEADER_BYTES + 8 * (n_rows as u64 + n_cols as u64 + 1);
-        let val_off = idx_off + 8 * nnz as u64;
-        Ok(OocCsc {
+        let h = parse_header(&mut r, &label, total_len)?;
+        Ok(OocCsc::assemble(Backing::File { path, file }, label, h, cache_budget))
+    }
+
+    /// Serve the `.saifbin` byte format out of an in-memory buffer with
+    /// the default cache budget. Same validation, same kernels, same
+    /// bitwise results as [`OocCsc::open`] on a file holding `bytes`.
+    pub fn from_bytes(bytes: Vec<u8>) -> io::Result<OocCsc> {
+        OocCsc::from_bytes_with_cache(bytes, DEFAULT_CACHE_BYTES)
+    }
+
+    /// [`OocCsc::from_bytes`] with an explicit cache budget in bytes.
+    pub fn from_bytes_with_cache(bytes: Vec<u8>, cache_budget: usize) -> io::Result<OocCsc> {
+        OocCsc::from_arc_bytes(Arc::new(bytes), cache_budget)
+    }
+
+    fn from_arc_bytes(bytes: Arc<Vec<u8>>, cache_budget: usize) -> io::Result<OocCsc> {
+        let label = "<memory>".to_string();
+        let total_len = u64_of(bytes.len());
+        let mut r: &[u8] = &bytes;
+        let h = parse_header(&mut r, &label, total_len)?;
+        Ok(OocCsc::assemble(Backing::Mem(bytes), label, h, cache_budget))
+    }
+
+    fn assemble(backing: Backing, label: String, h: Header, cache_budget: usize) -> OocCsc {
+        OocCsc {
             inner: Arc::new(Inner {
-                path,
-                file,
-                n_rows,
-                n_cols,
-                nnz,
-                flags,
-                y,
-                col_ptr,
-                idx_off,
-                val_off,
+                backing,
+                label,
+                n_rows: h.n_rows,
+                n_cols: h.n_cols,
+                nnz: h.nnz,
+                flags: h.flags,
+                y: h.y,
+                col_ptr: h.col_ptr,
+                idx_off: h.idx_off,
+                val_off: h.val_off,
                 cache_budget,
                 cache: Mutex::new(ColCache::new(cache_budget)),
             }),
-        })
+        }
     }
 
-    /// Fresh read-only handle + fresh (empty) column cache on the same
-    /// file. Nothing is shared with `self` — this is how the
+    /// Fresh independent handle + fresh (empty) column cache on the
+    /// same source. Nothing is shared with `self` except (for byte
+    /// backing) the immutable buffer itself — this is how the
     /// coordinator gives each worker slot its own handle.
     pub fn reopen(&self) -> io::Result<OocCsc> {
-        OocCsc::open_with_cache(&self.inner.path, self.inner.cache_budget)
+        match &self.inner.backing {
+            Backing::File { path, .. } => {
+                OocCsc::open_with_cache(path, self.inner.cache_budget)
+            }
+            Backing::Mem(bytes) => {
+                OocCsc::from_arc_bytes(bytes.clone(), self.inner.cache_budget)
+            }
+        }
     }
 
     #[inline]
@@ -389,15 +513,20 @@ impl OocCsc {
         self.inner.flags & FLAG_LOGISTIC != 0
     }
 
-    /// The backing file.
-    pub fn path(&self) -> &Path {
-        &self.inner.path
+    /// The backing file, or `None` for a byte-backed instance.
+    pub fn path(&self) -> Option<&Path> {
+        match &self.inner.backing {
+            Backing::File { path, .. } => Some(path),
+            Backing::Mem(_) => None,
+        }
     }
 
     /// Stable identity key of the backing handle (for packed-buffer
     /// caches, mirroring `Design::data_ptr`). Clones share it; a
     /// [`OocCsc::reopen`] gets a new one.
     pub fn identity(&self) -> usize {
+        // vet: allow(unchecked-cast): pointer→integer identity key, not
+        // on-disk data decoding; provenance is irrelevant for a map key
         Arc::as_ptr(&self.inner) as usize
     }
 
@@ -439,7 +568,7 @@ impl OocCsc {
     ) {
         assert!(j0 <= j1 && j1 <= self.inner.n_cols);
         let cp = &self.inner.col_ptr;
-        let max_entries = (chunk_bytes as u64 / ENTRY_BYTES).max(1);
+        let max_entries = (u64_of(chunk_bytes) / ENTRY_BYTES).max(1);
         let (mut bytes, mut rows, mut vals) = (Vec::new(), Vec::new(), Vec::new());
         let mut a = j0;
         while a < j1 {
@@ -452,6 +581,8 @@ impl OocCsc {
                 .read_entries(s, e, &mut bytes, &mut rows, &mut vals)
                 .unwrap_or_else(|err| self.inner.io_panic(err));
             for j in a..b {
+                // vet: allow(unchecked-cast): both offsets are ≤ e − s,
+                // which read_entries just materialized as a usize buffer
                 let (lo, hi) = ((cp[j] - s) as usize, (cp[j + 1] - s) as usize);
                 f(j, &rows[lo..hi], &vals[lo..hi]);
             }
@@ -619,15 +750,12 @@ mod tests {
     use crate::util::prng::Rng;
     use std::io::Write;
 
-    fn tmp_path(tag: &str) -> PathBuf {
-        std::env::temp_dir().join(format!("saif_ooc_unit_{}_{tag}.saifbin", std::process::id()))
-    }
-
-    /// Minimal writer used by the unit tests (the real writer lives in
-    /// `data::io`, which depends on `Dataset`; these tests stay inside
-    /// the linalg layer).
-    fn write_mat(mat: &CscMat, y: &[f64], flags: u64, path: &Path) {
-        let mut w = io::BufWriter::new(File::create(path).unwrap());
+    /// Minimal in-memory `.saifbin` writer used by the unit tests (the
+    /// real writer lives in `data::io`, which depends on `Dataset`;
+    /// these tests stay inside the linalg layer). Byte-identical to
+    /// what `write_saifbin` puts on disk for the same matrix.
+    fn mat_bytes(mat: &CscMat, y: &[f64], flags: u64) -> Vec<u8> {
+        let mut w: Vec<u8> = Vec::new();
         w.write_all(MAGIC).unwrap();
         for v in [mat.n_rows() as u64, mat.n_cols() as u64, mat.nnz() as u64, flags] {
             w.write_all(&v.to_le_bytes()).unwrap();
@@ -651,7 +779,7 @@ mod tests {
                 w.write_all(&v.to_bits().to_le_bytes()).unwrap();
             }
         }
-        w.flush().unwrap();
+        w
     }
 
     fn random_csc(rng: &mut Rng, n: usize, p: usize) -> CscMat {
@@ -669,18 +797,17 @@ mod tests {
     }
 
     #[test]
-    fn open_matches_in_memory_bitwise() {
+    fn from_bytes_matches_in_memory_bitwise() {
         let mut rng = Rng::new(401);
         let (n, p) = (17, 43);
         let mat = random_csc(&mut rng, n, p);
         let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        let path = tmp_path("bitwise");
-        write_mat(&mat, &y, FLAG_LOGISTIC, &path);
-        let ooc = OocCsc::open(&path).unwrap();
+        let ooc = OocCsc::from_bytes(mat_bytes(&mat, &y, FLAG_LOGISTIC)).unwrap();
         assert_eq!(ooc.n_rows(), n);
         assert_eq!(ooc.n_cols(), p);
         assert_eq!(ooc.nnz(), mat.nnz());
         assert!(ooc.logistic());
+        assert!(ooc.path().is_none());
         for (a, b) in ooc.labels().iter().zip(&y) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
@@ -703,6 +830,34 @@ mod tests {
         assert_eq!(ooc.col_norms_sq(), mat.col_norms_sq());
         assert_eq!(ooc.col_sums(), mat.col_sums());
         assert_eq!(ooc.to_csc(), mat);
+    }
+
+    #[cfg(not(miri))] // file-backed: Miri has no read_exact_at
+    #[test]
+    fn file_open_matches_from_bytes() {
+        let mut rng = Rng::new(406);
+        let (n, p) = (11, 19);
+        let mat = random_csc(&mut rng, n, p);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let bytes = mat_bytes(&mat, &y, 0);
+        let path = std::env::temp_dir()
+            .join(format!("saif_ooc_unit_{}_filemem.saifbin", std::process::id()));
+        std::fs::write(&path, &bytes).unwrap();
+        let from_file = OocCsc::open(&path).unwrap();
+        let from_mem = OocCsc::from_bytes(bytes).unwrap();
+        assert_eq!(from_file.path(), Some(path.as_path()));
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (mut a, mut b) = (vec![0.0; p], vec![0.0; p]);
+        from_file.mul_t_vec(&v, &mut a);
+        from_mem.mul_t_vec(&v, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(from_file.to_csc(), from_mem.to_csc());
+        // file reopen: independent handle, equal by path + shape
+        let re = from_file.reopen().unwrap();
+        assert_eq!(re, from_file);
+        assert_ne!(re.identity(), from_file.identity());
+        // file vs mem never compare equal, even with identical bytes
+        assert_ne!(from_file, from_mem);
         std::fs::remove_file(&path).ok();
     }
 
@@ -711,12 +866,9 @@ mod tests {
         let mut rng = Rng::new(402);
         let (n, p) = (12, 30);
         let mat = random_csc(&mut rng, n, p);
-        let y = vec![0.0; n];
-        let path = tmp_path("tiny");
-        write_mat(&mat, &y, 0, &path);
         // chunk budget below one entry: the streamer still advances one
         // column at a time
-        let ooc = OocCsc::open_with_cache(&path, 64).unwrap();
+        let ooc = OocCsc::from_bytes_with_cache(mat_bytes(&mat, &vec![0.0; n], 0), 64).unwrap();
         let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let (mut a, mut b) = (vec![0.0; p], vec![0.0; p]);
         let mut seen = Vec::new();
@@ -736,7 +888,6 @@ mod tests {
         for j in (0..p).rev() {
             assert_eq!(ooc.col_dot(j, &v).to_bits(), mat.col_dot(j, &v).to_bits());
         }
-        std::fs::remove_file(&path).ok();
     }
 
     #[test]
@@ -744,53 +895,60 @@ mod tests {
         let mut rng = Rng::new(403);
         let (n, p) = (14, 20);
         let mat = random_csc(&mut rng, n, p);
-        let path = tmp_path("select");
-        let y = vec![0.0; n];
-        write_mat(&mat, &y, 0, &path);
-        let ooc = OocCsc::open(&path).unwrap();
+        let ooc = OocCsc::from_bytes(mat_bytes(&mat, &vec![0.0; n], 0)).unwrap();
         let cols = [7usize, 0, 13, 7];
         assert_eq!(ooc.select_cols(&cols), mat.select_cols(&cols));
         let rows = [5usize, 5, 1, 9];
         assert_eq!(ooc.select_rows(&rows), mat.select_rows(&rows));
-        std::fs::remove_file(&path).ok();
     }
 
     #[test]
-    fn reopen_is_independent_but_equal() {
+    fn mem_reopen_shares_bytes_not_identity() {
         let mut rng = Rng::new(404);
         let mat = random_csc(&mut rng, 9, 11);
-        let path = tmp_path("reopen");
-        write_mat(&mat, &[0.0; 9], 0, &path);
-        let a = OocCsc::open(&path).unwrap();
+        let a = OocCsc::from_bytes(mat_bytes(&mat, &[0.0; 9], 0)).unwrap();
         let b = a.reopen().unwrap();
-        assert_eq!(a, b, "same file compares equal");
+        assert_eq!(a, b, "same shared buffer compares equal");
         assert_ne!(a.identity(), b.identity(), "but the handles are distinct");
         let c = a.clone();
         assert_eq!(a.identity(), c.identity(), "clones share the handle");
-        std::fs::remove_file(&path).ok();
+        // two separate from_bytes of equal content are distinct buffers
+        let d = OocCsc::from_bytes(mat_bytes(&mat, &[0.0; 9], 0)).unwrap();
+        assert_ne!(a, d);
     }
 
     #[test]
-    fn open_rejects_bad_magic_and_truncation() {
-        let path = tmp_path("badmagic");
-        std::fs::write(&path, b"NOTSAIF!rest").unwrap();
-        assert!(OocCsc::open(&path).is_err());
-        std::fs::remove_file(&path).ok();
+    fn rejects_bad_magic_truncation_and_corrupt_pointers() {
+        assert!(OocCsc::from_bytes(b"NOTSAIF!rest".to_vec()).is_err());
 
         let mut rng = Rng::new(405);
         let mat = random_csc(&mut rng, 6, 7);
-        let path = tmp_path("trunc");
-        write_mat(&mat, &[0.0; 6], 0, &path);
-        let full = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
-        let err = OocCsc::open(&path).unwrap_err();
+        let full = mat_bytes(&mat, &[0.0; 6], 0);
+        let err = OocCsc::from_bytes(full[..full.len() - 8].to_vec()).unwrap_err();
         assert!(err.to_string().contains("truncated"), "{err}");
-        std::fs::remove_file(&path).ok();
+
+        // non-monotone column pointers (clobber one col_ptr entry)
+        let mut bad = full.clone();
+        let cp0 = 40 + 8 * 6; // first col_ptr slot
+        bad[cp0 + 8..cp0 + 16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(OocCsc::from_bytes(bad).is_err());
+
+        // a row index ≥ n_rows surfaces as a kernel panic via io_panic
+        if mat.nnz() > 0 {
+            let mut bad = full.clone();
+            let idx0 = 40 + 8 * 6 + 8 * 8; // row-index region start
+            bad[idx0..idx0 + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+            let ooc = OocCsc::from_bytes(bad).unwrap();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                ooc.to_csc();
+            }));
+            assert!(r.is_err(), "corrupt row index must not decode silently");
+        }
     }
 
     #[test]
     fn lru_evicts_oldest_within_budget() {
-        let mut cache = ColCache::new(ENTRY_BYTES as usize * 4);
+        let mut cache = ColCache::new(ENTRY_BYTES_US * 4);
         let col = |k: usize| {
             Arc::new(OocCol { rows: vec![0; k], vals: vec![1.0; k] })
         };

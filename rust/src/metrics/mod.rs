@@ -35,7 +35,7 @@ impl LatencyStats {
             return 0.0;
         }
         let mut v = self.samples_us.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
         v[idx]
     }

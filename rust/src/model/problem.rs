@@ -2,6 +2,7 @@
 
 use crate::linalg::{dot, Design, Parallelism};
 use crate::runtime::pool::PoolMode;
+use crate::util::tmax;
 
 use super::loss::LossKind;
 
@@ -79,7 +80,7 @@ impl Problem {
     pub fn lambda_max_par(&self, par: Parallelism) -> f64 {
         self.init_corrs_par(par)
             .into_iter()
-            .fold(0.0, f64::max)
+            .fold(0.0, tmax)
     }
 
     /// Initial screening correlations |x_iᵀ f'(0)| for all columns.

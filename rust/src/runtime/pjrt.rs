@@ -1,6 +1,11 @@
 //! The PJRT-backed `Engine`: packs problems into shape buckets and
 //! executes the AOT artifacts on the CPU PJRT client.
 
+// vet: allow-file(lib-panic): experimental XLA bridge compiled only
+// under the off-by-default `pjrt` feature; buffer-transfer errors here
+// have no recovery path short of abandoning the device, and the native
+// engine remains the production substrate
+
 use std::collections::HashMap;
 
 use anyhow::Result;

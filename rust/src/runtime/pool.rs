@@ -113,9 +113,12 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 /// before the caller's completion wait returns).
 struct ErasedFn(*const (dyn Fn(usize) + Sync));
 
-// SAFETY: the pointee is Sync (it's a `dyn Fn(usize) + Sync`), and the
-// run_ordered caller keeps it alive for the whole execution window.
+// SAFETY: sending the raw pointer between threads is sound — the
+// pointee is Sync, and the run_ordered caller keeps it alive for the
+// whole execution window.
 unsafe impl Send for ErasedFn {}
+// SAFETY: shared access is sound for the same reason — the pointee is
+// `dyn Fn(usize) + Sync`, so concurrent invocation is allowed.
 unsafe impl Sync for ErasedFn {}
 
 /// One `run_ordered` submission: an erased task body plus the claim /
@@ -145,10 +148,10 @@ struct RunDone {
 
 impl RunTask {
     /// Execute task `i`, catching panics; always counts completion.
-    ///
-    /// SAFETY (of the dereference): exec is only reachable for claimed
-    /// indices, and the caller's completion wait covers every claim.
     fn exec(&self, i: usize) {
+        // SAFETY: exec is only reachable for claimed indices, and the
+        // caller's completion wait covers every claim — the pointee is
+        // still alive at every dereference.
         let f = unsafe { &*self.func.0 };
         let r = catch_unwind(AssertUnwindSafe(|| f(i)));
         let mut d = self.done.lock().unwrap_or_else(|e| e.into_inner());
@@ -256,6 +259,9 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("saif-pool-{id}"))
                     .spawn(move || worker_loop(shared))
+                    // vet: allow(lib-panic): spawn failure here means the
+                    // OS refused a thread — nothing above this layer can
+                    // proceed, and the pool cannot report errors lazily
                     .expect("spawn pool worker"),
             );
         }
@@ -287,7 +293,7 @@ impl WorkerPool {
         let slots: Vec<Mutex<Option<T>>> = (0..count).map(|_| Mutex::new(None)).collect();
         let body = |i: usize| {
             let v = f(i);
-            *slots[i].lock().unwrap() = Some(v);
+            *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
         };
         let obj: &(dyn Fn(usize) + Sync) = &body;
         // SAFETY: lifetime erasure only. This frame blocks below until
@@ -336,7 +342,10 @@ impl WorkerPool {
         }
         let mut out = Vec::with_capacity(count);
         for s in &slots {
-            out.push(s.lock().unwrap().take().expect("every task completed"));
+            let slot = s.lock().unwrap_or_else(|e| e.into_inner()).take();
+            // vet: allow(lib-panic): `completed == count` was observed
+            // above, and claims are unique — every slot is Some here
+            out.push(slot.expect("every task completed"));
         }
         Ok(out)
     }

@@ -17,7 +17,7 @@
 use crate::ball::gap_ball;
 use crate::linalg::dot;
 use crate::model::{LossKind, Problem};
-use crate::util::Stopwatch;
+use crate::util::{tmax, Stopwatch};
 
 /// A group structure: contiguous index lists partitioning 0..p.
 #[derive(Debug, Clone)]
@@ -124,7 +124,7 @@ impl GroupSaif {
         let d0 = prob.neg_deriv_at_zero();
         (0..groups.n_groups())
             .map(|g| group_norm(prob, &groups.members[g], &d0) / groups.weights[g])
-            .fold(0.0, f64::max)
+            .fold(0.0, tmax)
     }
 
     /// Baseline: block CM over ALL groups, no screening (the "No Scr."
@@ -191,7 +191,7 @@ impl GroupSaif {
         // δ radius-inflation schedule (same role as in feature-SAIF):
         // shrink the ADD radius early so a loose ball cannot flood the
         // active set with every group; driven to 1 before certifying.
-        let lam_max_est = init_scores.iter().cloned().fold(0.0, f64::max).max(1e-12);
+        let lam_max_est = tmax(init_scores.iter().cloned().fold(0.0, tmax), 1e-12);
         let mut delta = (lam / lam_max_est).clamp(1e-6, 1.0);
         let mut outer = 0;
         let mut max_active_groups = active.len();

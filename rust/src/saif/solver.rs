@@ -4,7 +4,7 @@ use crate::ball::{gap_ball, intersect, thm2_ball_ls, Ball};
 use crate::cm::{Engine, EpochShards, PoolMode, SubEval};
 use crate::linalg::Parallelism;
 use crate::model::{LossKind, Problem};
-use crate::util::Stopwatch;
+use crate::util::{tmax, Stopwatch};
 
 use super::trace::{TraceEvent, TraceOp};
 
@@ -183,7 +183,7 @@ impl<'a> Saif<'a> {
 
         // --- initial correlations, λ_max, ADD batch size h ---
         let corrs = prob.init_corrs_pool(scan_par, scan_pool);
-        let lam_max = corrs.iter().cloned().fold(0.0, f64::max);
+        let lam_max = corrs.iter().cloned().fold(0.0, tmax);
         let mx = lam_max;
         let md = median(&corrs);
         let h = add_batch_size(self.cfg.c, md, mx, lam, p);
@@ -439,7 +439,7 @@ impl<'a> Saif<'a> {
         let g = gap_ball(&eval.theta, eval.gap, lam, prob.loss.alpha());
         if let Some(cy) = corr_y {
             // λ_max(t) over the ACTIVE set (Theorem 2 with λ₀ = λ_max(t))
-            let lam0 = active.iter().map(|&i| cy[i]).fold(0.0, f64::max);
+            let lam0 = active.iter().map(|&i| cy[i]).fold(0.0, tmax);
             if let Some(t2) = thm2_ball_ls(&prob.y, lam, lam0) {
                 return intersect(&g, &t2);
             }

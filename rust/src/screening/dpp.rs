@@ -15,7 +15,7 @@
 use crate::cm::{solve_subproblem, Engine};
 use crate::linalg::nrm2_sq;
 use crate::model::{LossKind, Problem};
-use crate::util::Stopwatch;
+use crate::util::{tmax, Stopwatch};
 
 /// Per-λ outcome on the path.
 #[derive(Debug, Clone)]
@@ -92,7 +92,7 @@ impl<'a> DppPath<'a> {
             let theta_hat = prob.theta_hat(&u, lam);
             let mx = (0..p)
                 .map(|i| prob.x.col_dot(i, &theta_hat).abs())
-                .fold(0.0, f64::max);
+                .fold(0.0, tmax);
             let dp = prob.project_dual(&theta_hat, mx, lam);
             theta_prev = dp.theta;
             lam_prev = lam;

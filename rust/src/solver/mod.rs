@@ -52,7 +52,7 @@ use crate::cm::{Engine, EpochShards, PoolMode};
 use crate::linalg::Parallelism;
 use crate::model::Problem;
 use crate::saif::TraceEvent;
-use crate::util::Stopwatch;
+use crate::util::{tmax, Stopwatch};
 
 /// Which solve method a caller (coordinator request, CLI flag) wants.
 ///
@@ -63,7 +63,7 @@ use crate::util::Stopwatch;
 /// callers with a real feature tree construct
 /// [`crate::fused::FusedSolver`] directly), and `Group` solves the
 /// group LASSO over contiguous groups of the given size.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Method {
     Saif,
     DynScreen,
@@ -274,7 +274,7 @@ pub fn global_gap(
     let u = prob.margins_sparse(beta);
     let th_hat = prob.theta_hat(&u, lam);
     let scores = engine.scores(prob, &th_hat);
-    let mx = scores.iter().cloned().fold(0.0, f64::max);
+    let mx = scores.iter().cloned().fold(0.0, tmax);
     let dp = prob.project_dual(&th_hat, mx, lam);
     let l1: f64 = beta.iter().map(|(_, b)| b.abs()).sum();
     let primal = prob.primal_from_margins(&u, l1, lam);

@@ -226,7 +226,9 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
                 // copy a full utf-8 sequence
                 let rest = std::str::from_utf8(&b[*pos..])
                     .map_err(|_| "invalid utf8".to_string())?;
-                let c = rest.chars().next().unwrap();
+                let Some(c) = rest.chars().next() else {
+                    return Err("unexpected end of string".to_string());
+                };
                 s.push(c);
                 *pos += c.len_utf8();
             }

@@ -5,11 +5,13 @@
 pub mod config;
 pub mod json;
 pub mod logger;
+pub mod order;
 pub mod prng;
 pub mod prop;
 pub mod timer;
 
 pub use config::Config;
 pub use json::Json;
+pub use order::{tmax, tmin};
 pub use prng::Rng;
 pub use timer::{bench_secs, timed, Stopwatch};

@@ -1,0 +1,65 @@
+//! NaN-safe total orderings for `f64` reductions.
+//!
+//! The crate-wide `non-total-order` invariant (see `docs/INVARIANTS.md`,
+//! enforced by `tools/vet`) bans `partial_cmp`-based sorts and
+//! `f64::max` / `f64::min` folds: `partial_cmp` silently returns `None`
+//! on NaN (and `.unwrap()` on it panics), while `f64::max(NaN, x) == x`
+//! quietly *drops* the NaN — a screening bound computed over a poisoned
+//! correlation vector would then look finite and safe. These helpers
+//! fold with `total_cmp`, so a NaN produced anywhere upstream propagates
+//! to the reduction result (NaN is the maximum in the IEEE total order)
+//! and trips the caller's finiteness checks instead of vanishing.
+
+/// Two-value maximum under the IEEE 754 `totalOrder` predicate.
+///
+/// Drop-in replacement for `f64::max` in `fold`/`reduce` positions:
+/// `iter.fold(0.0, tmax)`. Unlike `f64::max`, NaN wins (it sorts above
+/// +inf in the total order), so poisoned inputs stay visible.
+#[inline]
+pub fn tmax(a: f64, b: f64) -> f64 {
+    if b.total_cmp(&a).is_gt() {
+        b
+    } else {
+        a
+    }
+}
+
+/// Two-value minimum under the IEEE 754 `totalOrder` predicate.
+///
+/// Mirror of [`tmax`]; note that in the total order NaN with the sign
+/// bit set sorts *below* -inf, so negative NaN wins here.
+#[inline]
+pub fn tmin(a: f64, b: f64) -> f64 {
+    if b.total_cmp(&a).is_lt() {
+        b
+    } else {
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_values() {
+        assert_eq!(tmax(1.0, 2.0), 2.0);
+        assert_eq!(tmax(2.0, 1.0), 2.0);
+        assert_eq!(tmin(1.0, 2.0), 1.0);
+        assert_eq!(tmin(-0.0, 0.0), -0.0);
+    }
+
+    #[test]
+    fn nan_propagates_through_tmax() {
+        assert!(tmax(f64::NAN, 1.0).is_nan());
+        assert!(tmax(1.0, f64::NAN).is_nan());
+        assert!([0.5, f64::NAN, 3.0].iter().copied().fold(0.0, tmax).is_nan());
+    }
+
+    #[test]
+    fn infinities_ordered() {
+        assert_eq!(tmax(f64::NEG_INFINITY, 0.0), 0.0);
+        assert_eq!(tmax(f64::INFINITY, 0.0), f64::INFINITY);
+        assert_eq!(tmin(f64::NEG_INFINITY, 0.0), f64::NEG_INFINITY);
+    }
+}

@@ -33,6 +33,9 @@ pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<
         }
         let mut rng = Rng::new(base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
         if let Err(msg) = prop(&mut rng) {
+            // vet: allow(lib-panic): the property runner's failure channel
+            // IS the test panic — it only ever runs inside #[test] fns,
+            // and the message carries the replay seed for the case
             panic!(
                 "property '{name}' failed at case {case}: {msg}\n\
                  replay: SAIF_PROP_SEED={base_seed} SAIF_PROP_CASE={case}"

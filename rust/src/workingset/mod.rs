@@ -16,7 +16,7 @@
 
 use crate::cm::{solve_subproblem, Engine};
 use crate::model::Problem;
-use crate::util::Stopwatch;
+use crate::util::{tmax, Stopwatch};
 
 /// BLITZ configuration.
 #[derive(Debug, Clone)]
@@ -85,7 +85,7 @@ impl<'a> Blitz<'a> {
             .unwrap_or_else(|| vec![0.0; prob.n()]);
         let th_hat = prob.theta_hat(&u0, lam);
         let mut scores = self.engine.scores(prob, &th_hat);
-        let mx0 = scores.iter().cloned().fold(0.0, f64::max);
+        let mx0 = scores.iter().cloned().fold(0.0, tmax);
         let mut theta_feas = prob.project_dual(&th_hat, mx0, lam).theta;
 
         let mut budget = self.cfg.init_budget.min(p);

@@ -1,0 +1,38 @@
+//! Meta-test: the source tree this crate ships must pass its own
+//! invariant linter (`tools/vet`) with zero findings — every waiver in
+//! the tree is therefore known-used and carries a reason, and a change
+//! that introduces a raw spawn / undocumented unsafe / unordered map /
+//! NaN-lossy comparison / bare cast / library panic fails `cargo test`
+//! locally, not just the separate CI job.
+
+/// Shelling out to `cargo run` is host-only: Miri interprets the test
+/// body and cannot exec the build toolchain.
+#[cfg(not(miri))]
+#[test]
+fn source_tree_passes_vet() {
+    let manifest_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let repo_root = manifest_dir.parent().expect("crate lives one level under the repo root");
+    let vet_manifest = repo_root.join("tools").join("vet").join("Cargo.toml");
+    assert!(
+        vet_manifest.is_file(),
+        "vet crate missing at {}",
+        vet_manifest.display()
+    );
+    let cargo = std::env::var("CARGO").unwrap_or_else(|_| "cargo".to_string());
+    let out = std::process::Command::new(cargo)
+        .arg("run")
+        .arg("--quiet")
+        .arg("--manifest-path")
+        .arg(&vet_manifest)
+        .arg("--")
+        .arg(manifest_dir.join("src"))
+        .output()
+        .expect("build and run the vet binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "vet found invariant violations in rust/src \
+         (fix them or add a `// vet: allow(<lint>): <reason>` waiver):\n{stdout}\n{stderr}"
+    );
+}

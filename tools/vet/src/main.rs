@@ -1,0 +1,676 @@
+//! `vet` — the saif in-tree invariant linter.
+//!
+//! Lexes every `.rs` file under a root directory with a comment/string-aware
+//! line scanner (no `syn`, no regex crate, no dependencies at all) and
+//! enforces the crate's written invariants as deny-by-default lints:
+//!
+//! - `thread-spawn` (L1): `thread::spawn` / `thread::scope` / `thread::Builder`
+//!   are forbidden outside `runtime/` — all parallelism goes through
+//!   `runtime::pool::WorkerPool` so ordering stays deterministic.
+//! - `undocumented-unsafe` (L2): every `unsafe` keyword (blocks *and*
+//!   `unsafe impl`) must carry a `SAFETY:` comment within the 5 lines above.
+//! - `unordered-map` (L3): no `HashMap` / `HashSet` in result-producing
+//!   modules (`solver`, `cm`, `saif`, `screening`, `coordinator`, `linalg`) —
+//!   unordered iteration is how determinism dies silently.
+//! - `non-total-order` (L4): no `partial_cmp` and no `f64::max` / `f64::min`
+//!   folds on possibly-NaN data — use `total_cmp` (see `util::order`).
+//! - `unchecked-cast` (L5): no bare `as usize` / `as u64` casts in the
+//!   `.saifbin` header/offset decoders (`data/io.rs`, `linalg/ooc.rs`) —
+//!   use `try_from` or checked arithmetic on untrusted on-disk values.
+//! - `lib-panic` (L6): no `.unwrap()` / `.expect(` / `panic!` in library
+//!   code outside `#[cfg(test)]` regions (the poison-recovery idiom
+//!   `unwrap_or_else(|e| e.into_inner())` contains no banned token and
+//!   passes by construction).
+//!
+//! Waivers are per-site comments with a mandatory reason:
+//!
+//! ```text
+//! // vet: allow(lib-panic): re-raises a worker panic; no Result channel here
+//! // vet: allow-file(lib-panic): feature-gated experimental bridge
+//! ```
+//!
+//! `allow(..)` covers findings on its own line (trailing comment) or, when it
+//! sits on a comment-only line, the next line that carries code.
+//! `allow-file(..)` covers the whole file for the named lints. A waiver with
+//! an unknown lint name or an empty reason is itself a finding
+//! (`bad-waiver`), and a waiver that matches nothing is `unused-waiver`, so
+//! stale annotations cannot accumulate.
+//!
+//! Usage: `vet [--json] [ROOT]` (ROOT defaults to `rust/src`).
+//! Exit codes: 0 = clean, 1 = findings, 2 = usage or I/O error.
+
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const LINTS: [&str; 6] = [
+    "thread-spawn",
+    "undocumented-unsafe",
+    "unordered-map",
+    "non-total-order",
+    "unchecked-cast",
+    "lib-panic",
+];
+
+/// Modules whose output feeds solver results; L3 applies only here.
+const RESULT_MODULES: [&str; 6] = ["solver", "cm", "saif", "screening", "coordinator", "linalg"];
+
+/// Files doing untrusted header/offset decoding; L5 applies only here.
+const CAST_FILES: [&str; 2] = ["data/io.rs", "linalg/ooc.rs"];
+
+/// Binary-facing top-level modules where process-exiting panics are the
+/// error channel; L6 does not apply (nor to `main.rs`).
+const PANIC_EXEMPT_TOP: [&str; 2] = ["cli", "experiments"];
+
+/// How many lines above an `unsafe` keyword a `SAFETY:` comment may sit.
+const SAFETY_WINDOW: usize = 5;
+
+#[derive(Debug)]
+struct Finding {
+    file: String,
+    line: usize,
+    lint: String,
+    msg: String,
+}
+
+struct Waiver {
+    line: usize,
+    lints: Vec<String>,
+    reason_ok: bool,
+    names_ok: bool,
+    file_scope: bool,
+    used: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: split source into per-line (code, comment) pairs.  `code` has
+// comments removed and string/char contents blanked to spaces (delimiters
+// kept), so token matching never fires inside literals or comments.
+// ---------------------------------------------------------------------------
+
+enum LexState {
+    Code,
+    Block,
+    Str,
+    RawStr,
+    CharLit,
+}
+
+fn split_lines(src: &str) -> Vec<(String, String)> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = LexState::Code;
+    let mut depth = 0usize;
+    let mut hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        let nxt = if i + 1 < n { cs[i + 1] } else { '\0' };
+        if c == '\n' {
+            out.push((std::mem::take(&mut code), std::mem::take(&mut comment)));
+            i += 1;
+            continue;
+        }
+        match state {
+            LexState::Code => {
+                if c == '/' && nxt == '/' {
+                    while i < n && cs[i] != '\n' {
+                        comment.push(cs[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && nxt == '*' {
+                    state = LexState::Block;
+                    depth = 1;
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = LexState::Str;
+                    i += 1;
+                } else if c == 'r' && (nxt == '"' || nxt == '#') {
+                    // raw string r"..." or r#"..."# (or a raw identifier r#x)
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while j < n && cs[j] == '#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if j < n && cs[j] == '"' {
+                        code.push('r');
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        code.push('"');
+                        hashes = h;
+                        state = LexState::RawStr;
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == 'b' && nxt == '"' {
+                    code.push_str("b\"");
+                    state = LexState::Str;
+                    i += 2;
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    if nxt == '\\' {
+                        code.push('\'');
+                        state = LexState::CharLit;
+                        i += 1;
+                    } else if i + 2 < n && cs[i + 2] == '\'' && nxt != '\'' {
+                        code.push_str("' '");
+                        i += 3;
+                    } else {
+                        code.push('\''); // lifetime
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            LexState::Block => {
+                if c == '/' && nxt == '*' {
+                    depth += 1;
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && nxt == '/' {
+                    depth -= 1;
+                    comment.push_str("*/");
+                    i += 2;
+                    if depth == 0 {
+                        state = LexState::Code;
+                    }
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if c == '\\' && nxt != '\n' {
+                    code.push(' ');
+                    i += 2;
+                } else if c == '\\' {
+                    // escaped-newline continuation: keep the newline visible
+                    // to the line splitter so line numbers stay aligned
+                    code.push(' ');
+                    i += 1;
+                } else if c == '"' {
+                    code.push('"');
+                    state = LexState::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::RawStr => {
+                let closes = c == '"'
+                    && i + hashes < n
+                    && cs[i + 1..i + 1 + hashes].iter().all(|&h| h == '#');
+                if closes {
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    i += 1 + hashes;
+                    state = LexState::Code;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::CharLit => {
+                if c == '\\' && nxt != '\n' {
+                    code.push(' ');
+                    i += 2;
+                } else if c == '\'' {
+                    code.push('\'');
+                    state = LexState::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.push((code, comment));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Token matchers (word-boundary aware, on blanked code text).
+// ---------------------------------------------------------------------------
+
+fn is_word(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn boundary_before(code: &str, at: usize) -> bool {
+    code[..at].chars().next_back().map_or(true, |c| !is_word(c))
+}
+
+fn boundary_after(code: &str, end: usize) -> bool {
+    code[end..].chars().next().map_or(true, |c| !is_word(c))
+}
+
+/// Whole-identifier occurrence of `word` in `code`.
+fn find_word(code: &str, word: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(word) {
+        let abs = start + pos;
+        if boundary_before(code, abs) && boundary_after(code, abs + word.len()) {
+            return true;
+        }
+        start = abs + word.len();
+    }
+    false
+}
+
+/// L1: `thread::spawn` / `thread::scope` / `thread::Builder`.
+fn hit_thread(code: &str) -> bool {
+    const PREFIX: &str = "thread::";
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(PREFIX) {
+        let abs = start + pos;
+        if boundary_before(code, abs) {
+            let rest = &code[abs + PREFIX.len()..];
+            for w in ["spawn", "scope", "Builder"] {
+                if rest.starts_with(w) && boundary_after(rest, w.len()) {
+                    return true;
+                }
+            }
+        }
+        start = abs + PREFIX.len();
+    }
+    false
+}
+
+/// L4: `partial_cmp`, or `f64::max` / `f64::min` (the fold functions; the
+/// constants `f64::MAX` / `f64::MIN` differ in case and never match).
+fn hit_order(code: &str) -> bool {
+    if find_word(code, "partial_cmp") {
+        return true;
+    }
+    for pat in ["f64::max", "f64::min"] {
+        let mut start = 0usize;
+        while let Some(pos) = code[start..].find(pat) {
+            let abs = start + pos;
+            if boundary_after(code, abs + pat.len()) {
+                return true;
+            }
+            start = abs + pat.len();
+        }
+    }
+    false
+}
+
+/// L5: bare `as usize` / `as u64`.
+fn hit_cast(code: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find("as") {
+        let abs = start + pos;
+        start = abs + 2;
+        if !boundary_before(code, abs) {
+            continue;
+        }
+        let rest = &code[abs + 2..];
+        let trimmed = rest.trim_start();
+        if trimmed.len() == rest.len() {
+            continue; // no whitespace after `as` => part of another token
+        }
+        for w in ["usize", "u64"] {
+            if trimmed.starts_with(w) && boundary_after(trimmed, w.len()) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// L6: `.unwrap()` / `.expect(` / `panic!(`.
+fn hit_panic(code: &str) -> bool {
+    if code.contains(".unwrap()") || code.contains(".expect(") {
+        return true;
+    }
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find("panic!") {
+        let abs = start + pos;
+        start = abs + 6;
+        if boundary_before(code, abs) && code[abs + 6..].trim_start().starts_with('(') {
+            return true;
+        }
+    }
+    false
+}
+
+fn is_test_attr(code: &str) -> bool {
+    let squashed: String = code.chars().filter(|c| !c.is_whitespace()).collect();
+    squashed.contains("#[cfg(test)]") || squashed.contains("#[test]")
+}
+
+fn has_safety(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+/// Parse `vet: allow(<lints>): <reason>` or `vet: allow-file(...)` out of a
+/// comment. Returns (lint names, reason, file_scope).
+fn parse_waiver(comment: &str) -> Option<(Vec<String>, String, bool)> {
+    let pos = comment.find("vet:")?;
+    let rest = comment[pos + 4..].trim_start();
+    let (file_scope, rest) = if let Some(r) = rest.strip_prefix("allow-file(") {
+        (true, r)
+    } else if let Some(r) = rest.strip_prefix("allow(") {
+        (false, r)
+    } else {
+        return None;
+    };
+    let close = rest.find(')')?;
+    let names: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix(':')?.trim().to_string();
+    Some((names, reason, file_scope))
+}
+
+// ---------------------------------------------------------------------------
+// Per-file scan.
+// ---------------------------------------------------------------------------
+
+fn scan_file(relpath: &str, src: &str, findings: &mut Vec<Finding>) {
+    let lines = split_lines(src);
+    let top = relpath.split('/').next().unwrap_or(relpath);
+    let l1_on = top != "runtime";
+    let l3_on = RESULT_MODULES.contains(&top);
+    let l5_on = CAST_FILES.contains(&relpath);
+    let l6_on = !PANIC_EXEMPT_TOP.contains(&top) && relpath != "main.rs";
+
+    // Collect waivers (and waiver-syntax findings) first.
+    let mut waivers: Vec<Waiver> = Vec::new();
+    for (idx, (_, comment)) in lines.iter().enumerate() {
+        let Some((names, reason, file_scope)) = parse_waiver(comment) else {
+            continue;
+        };
+        let mut names_ok = true;
+        for nm in &names {
+            if !LINTS.contains(&nm.as_str()) {
+                names_ok = false;
+                findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: idx + 1,
+                    lint: "bad-waiver".to_string(),
+                    msg: format!("unknown lint '{nm}' in waiver"),
+                });
+            }
+        }
+        if reason.is_empty() {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: idx + 1,
+                lint: "bad-waiver".to_string(),
+                msg: "waiver without a reason".to_string(),
+            });
+        }
+        waivers.push(Waiver {
+            line: idx,
+            lints: names,
+            reason_ok: !reason.is_empty(),
+            names_ok,
+            file_scope,
+            used: false,
+        });
+    }
+
+    // A line waiver targets its own line if that line carries code, else the
+    // next line that does.
+    let code_lines: Vec<usize> = lines
+        .iter()
+        .enumerate()
+        .filter(|(_, (code, _))| !code.trim().is_empty())
+        .map(|(idx, _)| idx)
+        .collect();
+    let mut target_of: Vec<Option<usize>> = Vec::with_capacity(waivers.len());
+    for w in &waivers {
+        if w.file_scope {
+            target_of.push(None);
+        } else if !lines[w.line].0.trim().is_empty() {
+            target_of.push(Some(w.line));
+        } else {
+            target_of.push(code_lines.iter().copied().find(|&l| l > w.line));
+        }
+    }
+
+    let mut report = |waivers: &mut Vec<Waiver>, idx: usize, lint: &str, msg: &str| {
+        for (w, tgt) in waivers.iter_mut().zip(&target_of) {
+            let applies = if w.file_scope { true } else { *tgt == Some(idx) };
+            if applies && w.reason_ok && w.lints.iter().any(|l| l == lint) {
+                w.used = true;
+                return;
+            }
+        }
+        findings.push(Finding {
+            file: relpath.to_string(),
+            line: idx + 1,
+            lint: lint.to_string(),
+            msg: msg.to_string(),
+        });
+    };
+
+    let mut brace_depth: i64 = 0;
+    let mut pending_test = false;
+    let mut test_entry: Option<i64> = None;
+    for (idx, (code, _)) in lines.iter().enumerate() {
+        if is_test_attr(code) {
+            pending_test = true;
+        }
+        if pending_test && test_entry.is_none() && code.contains('{') {
+            test_entry = Some(brace_depth);
+            pending_test = false;
+        }
+        let in_test = test_entry.is_some();
+
+        if l1_on && !in_test && hit_thread(code) {
+            report(
+                &mut waivers,
+                idx,
+                "thread-spawn",
+                "thread spawn/scope outside runtime/ (use runtime::pool)",
+            );
+        }
+        if find_word(code, "unsafe") {
+            let lo = idx.saturating_sub(SAFETY_WINDOW);
+            if !(lo..=idx).any(|k| has_safety(&lines[k].1)) {
+                report(
+                    &mut waivers,
+                    idx,
+                    "undocumented-unsafe",
+                    "unsafe without a SAFETY: comment within 5 lines above",
+                );
+            }
+        }
+        if l3_on && !in_test && (find_word(code, "HashMap") || find_word(code, "HashSet")) {
+            report(
+                &mut waivers,
+                idx,
+                "unordered-map",
+                "HashMap/HashSet in a result-producing module (use BTreeMap/BTreeSet or a sorted Vec)",
+            );
+        }
+        if !in_test && hit_order(code) {
+            report(
+                &mut waivers,
+                idx,
+                "non-total-order",
+                "partial_cmp / f64::max / f64::min on possibly-NaN data (use total_cmp)",
+            );
+        }
+        if l5_on && !in_test && hit_cast(code) {
+            report(
+                &mut waivers,
+                idx,
+                "unchecked-cast",
+                "bare narrowing cast in header/offset decoding (use try_from or checked arithmetic)",
+            );
+        }
+        if l6_on && !in_test && hit_panic(code) {
+            report(
+                &mut waivers,
+                idx,
+                "lib-panic",
+                "unwrap/expect/panic! in library code (return an error)",
+            );
+        }
+
+        brace_depth += code.matches('{').count() as i64;
+        brace_depth -= code.matches('}').count() as i64;
+        if let Some(entry) = test_entry {
+            if brace_depth <= entry {
+                test_entry = None;
+            }
+        }
+    }
+
+    for w in &waivers {
+        if !w.used && w.names_ok && w.reason_ok {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: w.line + 1,
+                lint: "unused-waiver".to_string(),
+                msg: "waiver matched no finding".to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver.
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map_or(false, |x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "-h" | "--help" => {
+                eprintln!("usage: vet [--json] [ROOT]   (ROOT defaults to rust/src)");
+                return ExitCode::from(0);
+            }
+            a if a.starts_with('-') => {
+                eprintln!("vet: unknown flag '{a}'");
+                return ExitCode::from(2);
+            }
+            a => {
+                if root.is_some() {
+                    eprintln!("vet: more than one ROOT given");
+                    return ExitCode::from(2);
+                }
+                root = Some(PathBuf::from(a));
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| PathBuf::from("rust/src"));
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    if root.is_file() {
+        files.push(root.clone());
+    } else if let Err(e) = collect_rs(&root, &mut files) {
+        eprintln!("vet: cannot scan {}: {e}", root.display());
+        return ExitCode::from(2);
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut scanned = 0usize;
+    for path in &files {
+        let rel = if root.is_file() {
+            path.file_name().map(PathBuf::from).unwrap_or_else(|| path.clone())
+        } else {
+            path.strip_prefix(&root).map(PathBuf::from).unwrap_or_else(|_| path.clone())
+        };
+        let rel: String = rel
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let mut src = String::new();
+        match fs::File::open(path).and_then(|mut f| f.read_to_string(&mut src)) {
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!("vet: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        }
+        scanned += 1;
+        scan_file(&rel, &src, &mut findings);
+    }
+
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.lint, &a.msg).cmp(&(&b.file, b.line, &b.lint, &b.msg))
+    });
+
+    if json {
+        let mut out = String::from("{\"findings\":[");
+        for (i, f) in findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"file\":\"{}\",\"line\":{},\"lint\":\"{}\",\"message\":\"{}\"}}",
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.lint),
+                json_escape(&f.msg)
+            ));
+        }
+        out.push_str(&format!("],\"files_scanned\":{scanned}}}"));
+        println!("{out}");
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.lint, f.msg);
+        }
+        eprintln!("-- {} findings over {} files", findings.len(), scanned);
+    }
+    if findings.is_empty() {
+        ExitCode::from(0)
+    } else {
+        ExitCode::from(1)
+    }
+}

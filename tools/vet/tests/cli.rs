@@ -1,0 +1,123 @@
+//! End-to-end checks of the `vet` binary over the fixture corpora in
+//! `tests/fixtures/`: the `bad/` tree must produce exactly the
+//! expected findings (one per seeded violation, nothing else), the
+//! `good/` tree must be clean, and the JSON/exit-code surface must
+//! hold — that is the contract CI scripts depend on.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn fixture(name: &str) -> String {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join(name)
+        .to_str()
+        .expect("utf-8 fixture path")
+        .to_string()
+}
+
+fn vet(args: &[&str]) -> (i32, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_vet"))
+        .args(args)
+        .output()
+        .expect("run vet binary");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// (file, line, lint) for every violation seeded into `bad/`. Keeping
+/// the list exhaustive cuts both ways: a lint that stops firing fails
+/// the test, and so does a matcher that starts over-firing.
+const EXPECTED_BAD: &[(&str, u32, &str)] = &[
+    ("badwaiver.rs", 4, "bad-waiver"),
+    ("badwaiver.rs", 7, "bad-waiver"),
+    ("badwaiver.rs", 10, "unused-waiver"),
+    ("data/io.rs", 5, "unchecked-cast"),
+    ("data/io.rs", 9, "unchecked-cast"),
+    ("nodoc.rs", 5, "undocumented-unsafe"),
+    ("nodoc.rs", 16, "undocumented-unsafe"),
+    ("ordering.rs", 4, "non-total-order"),
+    ("ordering.rs", 8, "non-total-order"),
+    ("ordering.rs", 12, "non-total-order"),
+    ("panics.rs", 4, "lib-panic"),
+    ("panics.rs", 8, "lib-panic"),
+    ("panics.rs", 13, "lib-panic"),
+    ("solver/mod.rs", 4, "unordered-map"),
+    ("solver/mod.rs", 5, "unordered-map"),
+    ("solver/mod.rs", 8, "unordered-map"),
+    ("solver/mod.rs", 12, "unordered-map"),
+    ("spawny.rs", 4, "thread-spawn"),
+    ("spawny.rs", 9, "thread-spawn"),
+    ("spawny.rs", 17, "thread-spawn"),
+];
+
+#[test]
+fn bad_tree_yields_exactly_the_seeded_findings() {
+    let (code, stdout, _) = vet(&[&fixture("bad")]);
+    assert_eq!(code, 1, "findings must exit 1:\n{stdout}");
+    let lines: Vec<&str> = stdout.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(
+        lines.len(),
+        EXPECTED_BAD.len(),
+        "finding count drifted:\n{stdout}"
+    );
+    for &(file, line, lint) in EXPECTED_BAD {
+        let needle = format!("{file}:{line}: [{lint}]");
+        assert!(
+            stdout.contains(&needle),
+            "missing expected finding '{needle}':\n{stdout}"
+        );
+    }
+}
+
+#[test]
+fn good_tree_is_clean() {
+    let (code, stdout, stderr) = vet(&[&fixture("good")]);
+    assert_eq!(code, 0, "clean tree must exit 0:\n{stdout}\n{stderr}");
+    assert!(stdout.trim().is_empty(), "no findings expected:\n{stdout}");
+    assert!(stderr.contains("0 findings"), "summary on stderr:\n{stderr}");
+}
+
+#[test]
+fn json_output_is_machine_readable() {
+    let (code, stdout, _) = vet(&["--json", &fixture("bad")]);
+    assert_eq!(code, 1);
+    assert!(stdout.starts_with("{\"findings\":["), "{stdout}");
+    assert!(stdout.contains("\"files_scanned\":7"), "{stdout}");
+    assert!(
+        stdout.contains("\"lint\":\"thread-spawn\""),
+        "lint field present: {stdout}"
+    );
+    // clean tree: well-formed empty array, still exit 0
+    let (code, stdout, _) = vet(&["--json", &fixture("good")]);
+    assert_eq!(code, 0);
+    assert!(stdout.starts_with("{\"findings\":[]"), "{stdout}");
+}
+
+#[test]
+fn single_file_root_is_supported() {
+    let (code, stdout, _) = vet(&[&fixture("bad/panics.rs")]);
+    assert_eq!(code, 1);
+    // relpath of a file root is its file name
+    assert!(stdout.contains("panics.rs:4: [lib-panic]"), "{stdout}");
+    assert_eq!(stdout.lines().filter(|l| !l.is_empty()).count(), 3, "{stdout}");
+}
+
+#[test]
+fn missing_root_is_a_usage_error() {
+    let (code, _, stderr) = vet(&[&fixture("does-not-exist")]);
+    assert_eq!(code, 2, "IO/usage errors exit 2: {stderr}");
+    assert!(!stderr.is_empty());
+}
+
+#[test]
+fn scope_exemptions_hold_only_in_their_modules() {
+    // the same spawn that passes under good/runtime/ fails at top level
+    let (code, stdout, _) = vet(&[&fixture("good/runtime")]);
+    assert_eq!(code, 1, "runtime/ exemption is per-tree-root:\n{stdout}");
+    assert!(stdout.contains("[thread-spawn]"), "{stdout}");
+}

@@ -1,0 +1,13 @@
+//! Waiver-machinery fixture: unknown lint names, empty reasons, and
+//! waivers that match nothing are themselves findings.
+
+// vet: allow(made-up-lint): the lint name does not exist
+pub fn a() {}
+
+// vet: allow(lib-panic):
+pub fn empty_reason() {}
+
+// vet: allow(lib-panic): nothing on the next code line panics
+pub fn unused() -> u64 {
+    42
+}

@@ -1,0 +1,10 @@
+//! L5 fixture: bare `as` casts in an untrusted-input decode path
+//! (`data/io.rs` is one of the two files the lint covers).
+
+pub fn decode(len_field: u64) -> usize {
+    len_field as usize
+}
+
+pub fn encode(n: usize) -> u64 {
+    n as u64
+}

@@ -1,0 +1,19 @@
+//! L2 fixture: `unsafe` with no SAFETY comment in reach.
+
+pub fn peek(p: *const u64) -> u64 {
+    // this comment is not a safety argument
+    unsafe { *p }
+}
+
+// A SAFETY comment that is too far away (> 5 lines) does not count.
+// SAFETY: stale, distant, and wrong.
+//
+//
+//
+//
+//
+pub fn poke(p: *mut u64) {
+    unsafe {
+        *p = 7;
+    }
+}

@@ -1,0 +1,15 @@
+//! L6 fixture: panic channels in library (non-test, non-CLI) code.
+
+pub fn first(xs: &[u64]) -> u64 {
+    *xs.first().unwrap()
+}
+
+pub fn parse(s: &str) -> u64 {
+    s.parse().expect("a number")
+}
+
+pub fn forbid(flag: bool) {
+    if flag {
+        panic!("flag must be false");
+    }
+}

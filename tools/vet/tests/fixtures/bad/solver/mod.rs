@@ -1,0 +1,17 @@
+//! L3 fixture: iteration-order-sensitive maps inside a result-bearing
+//! module (`solver/`).
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+pub fn tally(xs: &[u64]) -> usize {
+    let mut seen = HashSet::new();
+    for &x in xs {
+        seen.insert(x);
+    }
+    let mut counts: HashMap<u64, usize> = HashMap::new();
+    for &x in xs {
+        *counts.entry(x).or_insert(0) += 1;
+    }
+    seen.len() + counts.len()
+}

@@ -1,0 +1,18 @@
+//! L1 fixture: raw thread spawns outside `runtime/`.
+
+pub fn fan_out() {
+    let h = std::thread::spawn(|| 1 + 1);
+    let _ = h.join();
+}
+
+pub fn scoped_fan_out(xs: &mut [u64]) {
+    std::thread::scope(|s| {
+        for x in xs.iter_mut() {
+            s.spawn(move || *x += 1);
+        }
+    });
+}
+
+pub fn named() {
+    let _ = std::thread::Builder::new().name("rogue".into());
+}

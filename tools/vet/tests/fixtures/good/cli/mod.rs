@@ -1,0 +1,6 @@
+//! CLI fixture: `cli/` is panic-exempt (a process boundary owns its
+//! own exit), so unwrap/expect pass here without waivers.
+
+pub fn run(args: &[String]) -> u64 {
+    args.first().unwrap().parse().expect("numeric argument")
+}

@@ -1,0 +1,12 @@
+//! Checked-cast fixture: `data/io.rs` decodes untrusted bytes, so
+//! narrowing goes through `try_from` and widening through a checked
+//! helper — no bare `as` casts.
+
+pub fn decode(len_field: u64) -> Result<usize, std::num::TryFromIntError> {
+    usize::try_from(len_field)
+}
+
+pub fn stringy() -> &'static str {
+    // banned tokens inside strings and comments are not code: as usize
+    "cast me as usize and unwrap() f64::max thread::spawn HashMap"
+}

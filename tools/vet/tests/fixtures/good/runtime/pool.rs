@@ -1,0 +1,12 @@
+//! Exemptions fixture: `runtime/` is the one module allowed to spawn
+//! threads, and documented `unsafe` passes everywhere.
+
+pub fn spawn_worker() -> std::thread::JoinHandle<()> {
+    std::thread::spawn(|| {})
+}
+
+pub fn read(p: *const u64) -> u64 {
+    // SAFETY: the caller guarantees `p` is valid for reads and the
+    // pointee outlives this call.
+    unsafe { *p }
+}

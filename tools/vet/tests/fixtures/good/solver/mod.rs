@@ -1,0 +1,23 @@
+//! Result-bearing-module fixture: deterministic containers pass, and a
+//! justified waiver silences a deliberate exception.
+
+use std::collections::BTreeMap;
+
+pub fn tally(xs: &[u64]) -> usize {
+    let mut counts: BTreeMap<u64, usize> = BTreeMap::new();
+    for &x in xs {
+        *counts.entry(x).or_insert(0) += 1;
+    }
+    counts.len()
+}
+
+pub fn interned() -> usize {
+    // vet: allow(unordered-map): capacity probe only — the map is
+    // dropped before anything order-sensitive reads it
+    let m: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+    m.capacity()
+}
+
+pub fn largest(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(0.0, |a, b| if b.total_cmp(&a).is_gt() { b } else { a })
+}

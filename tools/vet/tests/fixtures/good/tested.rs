@@ -1,0 +1,25 @@
+//! Test-code fixture: panic channels inside `#[cfg(test)]` are the
+//! assertion mechanism, not a lint violation.
+
+pub fn double(x: u64) -> u64 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubles() {
+        let parsed: u64 = "21".parse().unwrap();
+        assert_eq!(double(parsed), 42);
+        let v: Vec<u64> = Vec::new();
+        assert!(v.first().is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn can_panic_here() {
+        panic!("tests may panic");
+    }
+}
