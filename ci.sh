@@ -2,7 +2,7 @@
 # Tier-1 gate (see ROADMAP.md): build, tests, formatting, lints.
 # Run from the repo root: ./ci.sh      (SKIP_LINT=1 ./ci.sh to gate on
 # build+tests only, e.g. while triaging fmt/clippy drift; SKIP_BENCH=1
-# to skip the BENCH_kernels.json regeneration.)
+# to skip the BENCH_kernels.json / BENCH_methods.json regeneration.)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -52,6 +52,23 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     if command -v python3 >/dev/null 2>&1; then
         # shellcheck disable=SC2086  # intentional word-split of flags
         python3 ../tools/bench_guard.py $guard_flags "$baseline" ../BENCH_kernels.json
+    else
+        echo "bench guard: python3 not found; skipping regression comparison" >&2
+    fi
+    rm -f "$baseline"
+
+    # Method shootout (every solver on the shared λ-grid; --quick keeps
+    # the CI leg small — the full grid is for quiet benchmark machines).
+    # Same guard discipline as the kernel rows: compare against the
+    # COMMITTED BENCH_methods.json, placeholder baselines pass with a
+    # loud note, BENCH_REQUIRE_REAL=1 turns that into a failure.
+    baseline="$(mktemp)"
+    git -C .. show HEAD:BENCH_methods.json > "$baseline" 2>/dev/null \
+        || cp ../BENCH_methods.json "$baseline" 2>/dev/null || true
+    cargo bench --bench methods -- --quick
+    if command -v python3 >/dev/null 2>&1; then
+        # shellcheck disable=SC2086  # intentional word-split of flags
+        python3 ../tools/bench_guard.py $guard_flags "$baseline" ../BENCH_methods.json
     else
         echo "bench guard: python3 not found; skipping regression comparison" >&2
     fi

@@ -1,0 +1,28 @@
+//! Benchopt-style method shootout (see `saif::shootout`): every
+//! feature-LASSO method over the shared {ls, logit} × {dense, sparse,
+//! ooc} λ-path grid, recording wall time + honest certificates +
+//! time-to-gap curves to BENCH_methods.json at the repo root, where
+//! `tools/bench_guard.py` gates the `_secs` rows like the kernel rows.
+//!
+//! Run the full grid with `cargo bench --bench methods`; pass
+//! `--quick` for the smoke-scale grid.
+
+use saif::shootout;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    match shootout::run(quick) {
+        Ok(res) => {
+            println!("{}", res.table.render());
+            res.table.save_csv("out", "methods_shootout").ok();
+            match shootout::write_record(&res.record) {
+                Ok(path) => println!("wrote {path}"),
+                Err(e) => eprintln!("could not write bench record: {e}"),
+            }
+        }
+        Err(e) => {
+            eprintln!("method shootout failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

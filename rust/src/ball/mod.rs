@@ -9,6 +9,10 @@
 //!   uses to tighten the gap ball early on.
 //! * `intersect`  — eq. (12): the circumscribed ball of the
 //!   intersection of two balls (Heron's formula for the lens radius).
+//! * `vi_ball_ls` — the variational-inequality ball of Liu et al.
+//!   (2014): for least squares the dual optimum is the projection of
+//!   y/λ onto the feasible set, so it lies in the ball whose diameter
+//!   is the segment from any feasible θ₀ to y/λ.
 
 use crate::linalg::nrm2_sq;
 
@@ -53,6 +57,31 @@ pub fn thm2_ball_ls(y: &[f64], lam: f64, lam0: f64) -> Option<Ball> {
         center: y.iter().map(|v| v / lam).collect(),
         radius: r,
     })
+}
+
+/// Variational-inequality ball for least squares (Liu et al. 2014,
+/// "Safe Screening with Variational Inequalities"): the LS dual
+/// optimum is the Euclidean projection of y/λ onto the feasible set
+/// F = {θ : ‖Xᵀθ‖∞ ≤ 1}, so for ANY feasible θ₀ ∈ F the obtuse-angle
+/// criterion ⟨y/λ − θ*, θ₀ − θ*⟩ ≤ 0 holds — geometrically, θ* lies
+/// in the ball whose *diameter* is the segment [θ₀, y/λ]: center
+/// (θ₀ + y/λ)/2, radius ‖y/λ − θ₀‖/2. An alternative radius to the
+/// duality-gap ball, with which it can be intersected (eq. 12).
+///
+/// LS-specific AND offset-free: with a margin offset the projected
+/// point is (y − offset)/λ, not y/λ. Callers gate on
+/// `loss == Squared && offset.is_none()` (as the sequential DPP ball
+/// already does) and must pass a GLOBALLY feasible θ₀.
+pub fn vi_ball_ls(y: &[f64], lam: f64, theta0: &[f64]) -> Ball {
+    let mut center = Vec::with_capacity(y.len());
+    let mut d2 = 0.0;
+    for (yi, t0) in y.iter().zip(theta0) {
+        let yl = yi / lam;
+        center.push(0.5 * (yl + t0));
+        let d = yl - t0;
+        d2 += d * d;
+    }
+    Ball { center, radius: 0.5 * d2.sqrt() }
 }
 
 /// Circumscribed ball of the intersection of b1 and b2 (eq. 12).
@@ -157,6 +186,50 @@ mod tests {
         let b1 = Ball { center: vec![1.0, 1.0], radius: 2.0 };
         let b2 = Ball { center: vec![1.0, 1.0], radius: 1.0 };
         assert_eq!(intersect(&b1, &b2).radius, 1.0);
+    }
+
+    #[test]
+    fn vi_ball_formula() {
+        // θ₀ = 0, y/λ = (2, 0): diameter segment [0, (2,0)] ⇒ center
+        // (1, 0), radius 1
+        let b = vi_ball_ls(&[2.0, 0.0], 1.0, &[0.0, 0.0]);
+        assert!((b.center[0] - 1.0).abs() < 1e-12);
+        assert!(b.center[1].abs() < 1e-12);
+        assert!((b.radius - 1.0).abs() < 1e-12);
+        // θ₀ = y/λ (solver converged at λ_max): degenerate zero ball
+        let b = vi_ball_ls(&[1.0, -2.0], 0.5, &[2.0, -4.0]);
+        assert_eq!(b.radius, 0.0);
+    }
+
+    #[test]
+    fn vi_ball_contains_projection_property() {
+        // the lemma is pure convex geometry: for ANY convex set F, any
+        // θ₀ ∈ F, and θ* = P_F(y/λ), the VI ball contains θ*. Use
+        // F = {‖θ‖ ≤ c} where the projection is explicit.
+        prop::check("vi ball covers projection", 60, |rng: &mut Rng| {
+            let dim = 2 + rng.below(5);
+            let lam = 0.2 + rng.uniform() * 2.0;
+            let y: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let c = 0.1 + rng.uniform();
+            // θ* = projection of y/λ onto the ball of radius c
+            let z: Vec<f64> = y.iter().map(|v| v / lam).collect();
+            let z_nrm = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let scale = if z_nrm > c { c / z_nrm } else { 1.0 };
+            let star: Vec<f64> = z.iter().map(|v| v * scale).collect();
+            // a random feasible θ₀ (uniform direction, radius ≤ c)
+            let dir: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let d_nrm = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+            let r0 = c * rng.uniform();
+            let theta0: Vec<f64> = dir.iter().map(|v| v * r0 / d_nrm).collect();
+            let ball = vi_ball_ls(&y, lam, &theta0);
+            if !ball.contains(&star, 1e-9) {
+                return Err(format!(
+                    "projection escaped VI ball: r={} c={c}",
+                    ball.radius
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

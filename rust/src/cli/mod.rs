@@ -15,13 +15,16 @@
 //! repro serve      [--workers 4] [--datasets 3] [--lambdas 8]
 //!                  [--engine native|pjrt] [--method saif]
 //!                  [--design mem|ooc]
+//! repro bench-methods [--quick]
 //! repro list
 //! ```
 //!
 //! All solve subcommands dispatch through the unified
 //! [`crate::solver::Solver`] API, so every method (saif, dynscreen,
-//! blitz, homotopy, fused, group[:K]) is available everywhere a
-//! `--method` flag is accepted. Unknown `--flags` are rejected with
+//! gapsafe[:sphere|:static|:static-sphere], hybrid, blitz, homotopy,
+//! fused, group[:K]) is available everywhere a `--method` flag is
+//! accepted. `bench-methods` runs the [`crate::shootout`] harness over
+//! the shared scenario grid and rewrites `BENCH_methods.json`. Unknown `--flags` are rejected with
 //! the valid set for the subcommand (a typo like `--epoch-shard` is an
 //! error, not silently ignored).
 //!
@@ -158,6 +161,7 @@ fn valid_flags(cmd: &str) -> Option<Vec<&'static str>> {
             v.extend_from_slice(DATASET_FLAGS);
             v.extend_from_slice(&["folds", "lambdas", "workers"]);
         }
+        "bench-methods" => v.extend_from_slice(&["quick"]),
         "list" => {}
         _ => return None,
     }
@@ -185,6 +189,7 @@ pub fn main() {
                     "experiment" => cmd_experiment(&args),
                     "serve" => cmd_serve(&args),
                     "cv" => cmd_cv(&args),
+                    "bench-methods" => cmd_bench_methods(&args),
                     "list" => cmd_list(),
                     _ => unreachable!("valid_flags covers the dispatch set"),
                 }
@@ -219,13 +224,19 @@ USAGE:
                                               coordinator demo workload
   repro cv         --dataset <name> [--folds 5] [--lambdas 20]
                    [--workers 4]              k-fold CV λ selection
+  repro bench-methods [--quick]               method shootout over the
+                                              shared scenario grid →
+                                              BENCH_methods.json
   repro list                                  datasets + experiment ids
 
   Unknown --flags are rejected with the valid set for the subcommand.
-  --method accepts all six solvers behind the unified Solver API:
-  saif, dyn (dynscreen), blitz, homotopy, fused (chain-tree fused
-  LASSO, or the dataset's tree when it has one), group[:K] (contiguous
-  groups of K features, default 8; least squares only).
+  --method accepts every solver behind the unified Solver API:
+  saif, dyn (dynscreen), gapsafe (GAP-safe dynamic dome; variants
+  gapsafe:sphere, gapsafe:static, gapsafe:static-sphere), hybrid
+  (safe-strong rule: strong proposal + KKT post-check), blitz,
+  homotopy, fused (chain-tree fused LASSO, or the dataset's tree when
+  it has one), group[:K] (contiguous groups of K features, default 8;
+  least squares only).
   --libsvm loads sparse (CSC; the file is never densified), so
   rcv1-scale text corpora fit in memory; add --dense to densify.
   --saifbin opens a .saifbin dataset OUT-OF-CORE: only the labels and
@@ -355,7 +366,8 @@ fn method_arg(args: &Args) -> Result<Method, String> {
     let s = args.get("method").unwrap_or("saif");
     Method::parse(s).ok_or_else(|| {
         format!(
-            "bad --method value '{s}'; valid: saif, dyn, dynscreen, blitz, homotopy, hom, \
+            "bad --method value '{s}'; valid: saif, dyn, dynscreen, \
+             gapsafe[:sphere|:static|:static-sphere], hybrid, blitz, homotopy, hom, \
              fused, group, group:K"
         )
     })
@@ -821,6 +833,28 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
+fn cmd_bench_methods(args: &Args) -> i32 {
+    match crate::shootout::run(args.has("quick")) {
+        Ok(res) => {
+            println!("{}", res.table.render());
+            match crate::shootout::write_record(&res.record) {
+                Ok(path) => {
+                    println!("wrote {path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
 fn cmd_cv(args: &Args) -> i32 {
     let ds = match load_dataset(args) {
         Ok(d) => d,
@@ -895,9 +929,12 @@ mod tests {
 
     #[test]
     fn every_subcommand_has_a_flag_table() {
-        for cmd in ["solve", "path", "convert", "experiment", "serve", "cv", "list"] {
+        for cmd in
+            ["solve", "path", "convert", "experiment", "serve", "cv", "bench-methods", "list"]
+        {
             assert!(valid_flags(cmd).is_some(), "{cmd}");
         }
+        assert!(valid_flags("bench-methods").unwrap().contains(&"quick"));
         assert!(valid_flags("frobnicate").is_none());
     }
 
@@ -992,6 +1029,11 @@ mod tests {
         for (s, m) in [
             ("saif", Method::Saif),
             ("dyn", Method::DynScreen),
+            ("gapsafe", Method::GapSafe { dome: true, dynamic: true }),
+            ("gapsafe:sphere", Method::GapSafe { dome: false, dynamic: true }),
+            ("gapsafe:static", Method::GapSafe { dome: true, dynamic: false }),
+            ("gapsafe:static-sphere", Method::GapSafe { dome: false, dynamic: false }),
+            ("hybrid", Method::Hybrid),
             ("blitz", Method::Blitz),
             ("homotopy", Method::Homotopy),
             ("fused", Method::Fused),

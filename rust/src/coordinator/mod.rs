@@ -32,8 +32,9 @@
 //! [`CoordinatorError::WorkerDead`] — and the pool threads survive.
 //!
 //! Construction goes through [`Coordinator::builder`]; method dispatch
-//! is a `Box<dyn Solver>` factory over [`Method`] (all six solve
-//! methods — saif, dynscreen, blitz, homotopy, fused, group — are
+//! is a `Box<dyn Solver>` factory over [`Method`] (every solve
+//! method — saif, dynscreen, gapsafe, hybrid, blitz, homotopy, fused,
+//! group — is
 //! servable, and fused requests may carry their dataset's real feature
 //! tree in [`SolveRequest::tree`]), and per-request [`SolveSpec`]s can
 //! override the worker defaults.

@@ -151,6 +151,7 @@ pub fn cross_validate(
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::util::{tmax, tmin};
 
     #[test]
     fn cv_picks_reasonable_lambda_ls() {
@@ -159,8 +160,8 @@ mod tests {
         assert_eq!(res.cv_error.len(), 8);
         // best λ is neither the largest (underfit: β=0-ish) nor does
         // the error curve stay flat
-        let worst = res.cv_error.iter().cloned().fold(f64::MIN, f64::max);
-        let best = res.cv_error.iter().cloned().fold(f64::MAX, f64::min);
+        let worst = res.cv_error.iter().cloned().fold(f64::MIN, tmax);
+        let best = res.cv_error.iter().cloned().fold(f64::MAX, tmin);
         assert!(best < worst * 0.9, "flat CV curve: {best} vs {worst}");
         assert!(res.best_lam < res.lams[0]);
     }
@@ -182,7 +183,7 @@ mod tests {
             assert!((0.0..=1.0).contains(&e));
         }
         // learned model beats chance at the best λ
-        let best = res.cv_error.iter().cloned().fold(f64::MAX, f64::min);
+        let best = res.cv_error.iter().cloned().fold(f64::MAX, tmin);
         assert!(best < 0.45, "best CV error {best}");
     }
 }

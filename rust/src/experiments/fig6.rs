@@ -41,7 +41,9 @@ pub fn run() -> Vec<Table> {
             let lams = common::lambda_grid(lam_max, 1e-3, count);
             // DPP
             let mut eng = NativeEngine::new();
-            let (_steps, s_dpp) = DppPath::new(&mut eng, eps).solve_path(&prob, &lams);
+            let (_steps, s_dpp) = DppPath::new(&mut eng, eps)
+                .solve_path(&prob, &lams)
+                .expect("λ grid within λ_max");
             // homotopy
             let mut eng2 = NativeEngine::new();
             let mut h = Homotopy::new(&mut eng2, HomotopyConfig { eps, ..Default::default() });

@@ -9,7 +9,8 @@
 //!   algorithms it is evaluated against ([`screening`], [`homotopy`],
 //!   [`workingset`]), the fused-LASSO tree transform ([`fused`]), a
 //!   unified solver API with first-class λ-path sessions ([`solver`]),
-//!   and a multi-tenant solve-request coordinator ([`coordinator`]).
+//!   a benchopt-style method shootout ([`shootout`]), and a
+//!   multi-tenant solve-request coordinator ([`coordinator`]).
 //! * **L2/L1 (python/compile, build time only)** — JAX graphs + Pallas
 //!   kernels for the numeric inner loop, AOT-lowered to HLO text.
 //! * **Runtime bridge** ([`runtime`]) — loads the AOT artifacts via the
@@ -46,6 +47,7 @@ pub mod model;
 pub mod runtime;
 pub mod saif;
 pub mod screening;
+pub mod shootout;
 pub mod solver;
 pub mod util;
 pub mod workingset;

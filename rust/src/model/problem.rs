@@ -236,6 +236,7 @@ mod tests {
     use super::*;
     use crate::linalg::Mat;
     use crate::util::prng::Rng;
+    use crate::util::tmax;
 
     fn random_problem(seed: u64, n: usize, p: usize, loss: LossKind) -> Problem {
         let mut rng = Rng::new(seed);
@@ -271,7 +272,7 @@ mod tests {
             let th = prob.theta_hat(&u, lam);
             let mx = (0..prob.p())
                 .map(|i| prob.x.col_dot(i, &th).abs())
-                .fold(0.0, f64::max);
+                .fold(0.0, tmax);
             let dp = prob.project_dual(&th, mx, lam);
             let primal = prob.primal_from_margins(&u, 0.0, lam);
             assert!(
@@ -305,7 +306,7 @@ mod tests {
         let th = prob.theta_hat(&u, lam);
         let mx = (0..prob.p())
             .map(|i| prob.x.col_dot(i, &th).abs())
-            .fold(0.0, f64::max);
+            .fold(0.0, tmax);
         let dp = prob.project_dual(&th, mx, lam);
         // max of dual = n log 2 (entropy bound)
         assert!(dp.dual <= prob.n() as f64 * std::f64::consts::LN_2 + 1e-9);

@@ -10,19 +10,31 @@
 //! This is the baseline of Figure 6: efficient when the λ grid is
 //! dense (balls are tight), expensive when it is sparse — and it
 //! inherits solver error in θ*(λ₀), the safety caveat the paper
-//! (§1.1) raises about all sequential rules.
+//! (§1.1) raises about all sequential rules. That caveat is why
+//! [`DppStep::gap`] is the FULL-problem gap recomputed at the returned
+//! β (the reduced-problem gap rides in [`DppStep::reduced_gap`]): a
+//! ball loosened by solver error in θ*(λ₀) can silently drop an active
+//! feature, and only the full gap exposes it — see the
+//! `loosened_ball_is_exposed_by_full_gap` regression test, which
+//! injects exactly that fault through [`DppPath::radius_scale`].
 
 use crate::cm::{solve_subproblem, Engine};
 use crate::linalg::nrm2_sq;
 use crate::model::{LossKind, Problem};
-use crate::util::{tmax, Stopwatch};
+use crate::util::Stopwatch;
 
 /// Per-λ outcome on the path.
 #[derive(Debug, Clone)]
 pub struct DppStep {
     pub lam: f64,
     pub beta: Vec<(usize, f64)>,
+    /// FULL-problem duality gap at `beta` (honest certificate — it
+    /// exposes a screening miss instead of inheriting the reduced
+    /// problem's optimism).
     pub gap: f64,
+    /// Duality gap of the reduced (screened) problem the solver
+    /// actually stopped on.
+    pub reduced_gap: f64,
     /// Features surviving the screen (the reduced problem size).
     pub kept: usize,
     pub epochs: usize,
@@ -34,22 +46,42 @@ pub struct DppPath<'a> {
     pub engine: &'a mut dyn Engine,
     pub eps: f64,
     pub k_epochs: usize,
+    /// Fault-injection knob for the safety regression tests: the
+    /// screening radius is multiplied by this factor (default 1.0).
+    /// A value < 1 deliberately loosens the safe ball the way an
+    /// inexact θ*(λ₀) would — production callers leave it alone.
+    pub radius_scale: f64,
 }
 
 impl<'a> DppPath<'a> {
     pub fn new(engine: &'a mut dyn Engine, eps: f64) -> Self {
-        DppPath { engine, eps, k_epochs: 10 }
+        DppPath { engine, eps, k_epochs: 10, radius_scale: 1.0 }
     }
 
     /// Solve the path at the given descending λ values. Returns the
-    /// per-λ results and total seconds.
-    pub fn solve_path(&mut self, prob: &Problem, lams: &[f64]) -> (Vec<DppStep>, f64) {
+    /// per-λ results and total seconds, or an error naming the first
+    /// grid value above λ_max — silently clamping would record results
+    /// under a λ the caller never asked for, breaking any join of the
+    /// steps back onto the caller's grid.
+    pub fn solve_path(
+        &mut self,
+        prob: &Problem,
+        lams: &[f64],
+    ) -> Result<(Vec<DppStep>, f64), String> {
         assert_eq!(prob.loss, LossKind::Squared, "DPP bound is LS-specific");
         let sw = Stopwatch::start();
         let p = prob.p();
         let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
         let y_nrm = nrm2_sq(&prob.y).sqrt();
         let lam_max = prob.lambda_max();
+        // tiny relative slack: λ_max itself arrives through float noise
+        let lam_ceiling = lam_max * (1.0 + 1e-12);
+        if let Some(&bad) = lams.iter().find(|&&l| l > lam_ceiling) {
+            return Err(format!(
+                "DPP grid value λ = {bad} exceeds λ_max = {lam_max}; \
+                 solutions above λ_max are identically zero — trim the grid"
+            ));
+        }
 
         // θ*(λ_max) = y / λ_max exactly
         let mut theta_prev: Vec<f64> = prob.y.iter().map(|v| v / lam_max).collect();
@@ -60,7 +92,7 @@ impl<'a> DppPath<'a> {
         for &lam in lams {
             let lam = lam.min(lam_max);
             // --- screen with the DPP ball around θ*(λ_prev) ---
-            let r = y_nrm * (1.0 / lam - 1.0 / lam_prev).abs();
+            let r = y_nrm * (1.0 / lam - 1.0 / lam_prev).abs() * self.radius_scale;
             let mut kept: Vec<usize> = Vec::new();
             for i in 0..p {
                 let c = prob.x.col_dot(i, &theta_prev).abs();
@@ -85,31 +117,28 @@ impl<'a> DppPath<'a> {
             for (a, &i) in kept.iter().enumerate() {
                 beta_full[i] = beta[a];
             }
-            // exact-ish dual at λ: θ = (y − Xβ)/λ, rescaled feasible
-            let u = prob.margins_sparse(
-                &kept.iter().zip(beta.iter()).map(|(&i, &b)| (i, b)).collect::<Vec<_>>(),
-            );
-            let theta_hat = prob.theta_hat(&u, lam);
-            let mx = (0..p)
-                .map(|i| prob.x.col_dot(i, &theta_hat).abs())
-                .fold(0.0, tmax);
-            let dp = prob.project_dual(&theta_hat, mx, lam);
+            let beta_sparse: Vec<(usize, f64)> = kept
+                .iter()
+                .zip(beta.iter())
+                .filter(|(_, &b)| b != 0.0)
+                .map(|(&i, &b)| (i, b))
+                .collect();
+            // honest certificate: FULL-problem gap and feasible dual
+            // point at the returned β (also the next ball's center)
+            let (gap, dp) =
+                crate::solver::global_gap_dual(self.engine, prob, &beta_sparse, lam);
             theta_prev = dp.theta;
             lam_prev = lam;
             steps.push(DppStep {
                 lam,
-                beta: kept
-                    .iter()
-                    .zip(beta.iter())
-                    .filter(|(_, &b)| b != 0.0)
-                    .map(|(&i, &b)| (i, b))
-                    .collect(),
-                gap: eval.gap,
+                beta: beta_sparse,
+                gap,
+                reduced_gap: eval.gap,
                 kept: kept.len(),
                 epochs,
             });
         }
-        (steps, sw.secs())
+        Ok((steps, sw.secs()))
     }
 }
 
@@ -127,16 +156,72 @@ mod tests {
         let lams: Vec<f64> = (1..=5).map(|k| lam_max * (0.8f64).powi(k)).collect();
         let mut eng = NativeEngine::new();
         let mut dpp = DppPath::new(&mut eng, 1e-9);
-        let (steps, _secs) = dpp.solve_path(&prob, &lams);
+        let (steps, _secs) = dpp.solve_path(&prob, &lams).unwrap();
         assert_eq!(steps.len(), 5);
         for s in &steps {
-            assert!(s.gap <= 1e-9);
+            // the FULL gap certifies each step (the reduced gap alone
+            // would also pass here — no screening miss on this data —
+            // but the assertion is on the honest number)
+            assert!(s.gap <= 1e-8, "λ={}: full gap {}", s.lam, s.gap);
+            assert!(s.reduced_gap <= 1e-9);
             assert!(
                 prob.kkt_violation(&s.beta, s.lam) < 1e-3 * s.lam.max(1.0),
                 "λ={}",
                 s.lam
             );
         }
+    }
+
+    #[test]
+    fn rejects_lambda_above_lambda_max() {
+        let ds = synth::synth_linear(30, 100, 35);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let mut eng = NativeEngine::new();
+        let err = DppPath::new(&mut eng, 1e-6)
+            .solve_path(&prob, &[lam_max * 1.5, lam_max * 0.5])
+            .unwrap_err();
+        assert!(err.contains("exceeds λ_max"), "unexpected error: {err}");
+        // λ_max itself (and tiny float noise above it) still passes
+        let mut eng2 = NativeEngine::new();
+        assert!(DppPath::new(&mut eng2, 1e-6)
+            .solve_path(&prob, &[lam_max, lam_max * 0.5])
+            .is_ok());
+    }
+
+    #[test]
+    fn loosened_ball_is_exposed_by_full_gap() {
+        // fault injection: radius_scale = 1e-3 shrinks the sequential
+        // ball to a sliver, so across the 0.9→0.1 λ_max jump the screen
+        // keeps only features already tight at θ*(λ_prev) — provably
+        // dropping most of the target support (a sliver still keeps the
+        // argmax feature, so the reduced solves stay well-posed). The
+        // REDUCED gap converges anyway (the solver is perfectly happy
+        // on the crippled feature set); only the FULL gap exposes the
+        // miss.
+        let ds = synth::synth_linear(40, 300, 37);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let lams = [lam_max * 0.9, lam_max * 0.1];
+        let mut eng = NativeEngine::new();
+        let mut dpp = DppPath::new(&mut eng, 1e-9);
+        dpp.radius_scale = 1e-3;
+        let (steps, _) = dpp.solve_path(&prob, &lams).unwrap();
+        let last = steps.last().unwrap();
+        assert!(last.reduced_gap <= 1e-9, "reduced solve must converge");
+        assert!(
+            last.gap > 1e-3,
+            "full gap {} failed to expose the screening miss",
+            last.gap
+        );
+        assert!(
+            prob.kkt_violation(&last.beta, last.lam) > 1e-3 * last.lam,
+            "expected a real KKT violation from the loosened ball"
+        );
+        // sanity: the honest ball (radius_scale = 1) has no such gap
+        let mut eng2 = NativeEngine::new();
+        let (ok_steps, _) = DppPath::new(&mut eng2, 1e-9).solve_path(&prob, &lams).unwrap();
+        assert!(ok_steps.last().unwrap().gap <= 1e-8);
     }
 
     #[test]
@@ -147,13 +232,17 @@ mod tests {
         let target = lam_max * 0.05;
         // sparse grid: jump straight to the target
         let mut eng = NativeEngine::new();
-        let (sparse_steps, _) = DppPath::new(&mut eng, 1e-6).solve_path(&prob, &[target]);
+        let (sparse_steps, _) = DppPath::new(&mut eng, 1e-6)
+            .solve_path(&prob, &[target])
+            .unwrap();
         // dense grid: geometric path down to the target
         let lams: Vec<f64> = (1..=20)
             .map(|k| lam_max * (target / lam_max).powf(k as f64 / 20.0))
             .collect();
         let mut eng2 = NativeEngine::new();
-        let (dense_steps, _) = DppPath::new(&mut eng2, 1e-6).solve_path(&prob, &lams);
+        let (dense_steps, _) = DppPath::new(&mut eng2, 1e-6)
+            .solve_path(&prob, &lams)
+            .unwrap();
         // at the shared target λ the dense path solved a smaller problem
         let sparse_kept = sparse_steps.last().unwrap().kept;
         let dense_kept = dense_steps.last().unwrap().kept;

@@ -1,0 +1,704 @@
+//! GAP-safe sphere and dome screening (Fercoq, Gramfort & Salmon,
+//! *Mind the duality gap: safer rules for the Lasso*, 2015).
+//!
+//! Two safe regions, both certified by the duality gap at a feasible
+//! dual point θ:
+//!
+//! * **sphere** — the gap ball B(θ, √(2α·gap)/λ) (eq. 11 here);
+//! * **dome**   — the sphere cut by the half-space {θ' : gᵀθ' ≤ b}
+//!   induced by the most-correlated feature j* (|x_{j*}ᵀθ*| ≤ 1 is a
+//!   valid dual constraint for *any* column, so the cut is safe for
+//!   any loss). The support bound over the cut sphere is strictly no
+//!   weaker than the sphere's.
+//!
+//! Two schedules:
+//!
+//! * **static**  — screen once, from the gap at the initial (warm or
+//!   zero) point, then solve the reduced problem;
+//! * **dynamic** — re-screen every K epochs as the gap shrinks
+//!   (discard-only, like [`super::dynamic::DynScreen`], but with the
+//!   dome bound available).
+//!
+//! For least squares without a margin offset the static screen also
+//! intersects the gap ball with the variational-inequality ball of
+//! Liu et al. ([`crate::ball::vi_ball_ls`]) — the VI lemma needs a
+//! *globally* feasible θ₀, which the static screen has (it scans all
+//! p columns anyway); the dynamic loop's reduced dual point is only
+//! feasible for the kept set, so the inner rounds use the gap ball.
+//!
+//! **Honest certificates:** the reported [`GapSafeResult::gap`] is
+//! recomputed on the FULL problem ([`crate::solver::global_gap_dual`])
+//! after the reduced solve — the reduced-problem gap is kept as
+//! [`GapSafeResult::reduced_gap`] for diagnostics. A screening bug
+//! can therefore not hide behind a small reduced gap: the full gap
+//! would stay large and the solve keeps tightening (bounded retries)
+//! instead of claiming convergence.
+
+use crate::ball::{gap_ball, intersect, vi_ball_ls};
+use crate::cm::{solve_subproblem, Engine, EpochShards, PoolMode};
+use crate::linalg::Parallelism;
+use crate::model::{LossKind, Problem};
+use crate::saif::solver::DEL_MARGIN;
+use crate::saif::{TraceEvent, TraceOp};
+use crate::util::{tmax, Stopwatch};
+
+/// GAP-safe configuration.
+#[derive(Debug, Clone)]
+pub struct GapSafeConfig {
+    /// CM epochs between screenings (dynamic) / per convergence check
+    /// (static).
+    pub k_epochs: usize,
+    /// Stopping duality gap ε — enforced on the FULL problem.
+    pub eps: f64,
+    /// Use the dome test (sphere ∩ feature-j* half-space) instead of
+    /// the plain sphere.
+    pub dome: bool,
+    /// Re-screen every K epochs instead of once up front.
+    pub dynamic: bool,
+    /// Tighten the static screen with the VI ball (LS, offset-free).
+    pub use_vi_ball: bool,
+    /// Total-epoch safety valve.
+    pub max_outer: usize,
+    /// Stall detector (see SaifConfig::stall_outer).
+    pub stall_outer: usize,
+    /// Scan parallelism / epoch sharding / pool overrides (None
+    /// inherits the engine's settings, as in SaifConfig).
+    pub parallelism: Option<Parallelism>,
+    pub epoch_shards: Option<EpochShards>,
+    pub pool: Option<PoolMode>,
+    /// Record a trace.
+    pub trace: bool,
+}
+
+impl Default for GapSafeConfig {
+    fn default() -> Self {
+        GapSafeConfig {
+            k_epochs: 10,
+            eps: 1e-6,
+            dome: true,
+            dynamic: true,
+            use_vi_ball: true,
+            max_outer: 200_000,
+            stall_outer: 200,
+            parallelism: None,
+            epoch_shards: None,
+            pool: None,
+            trace: false,
+        }
+    }
+}
+
+impl GapSafeConfig {
+    /// Map the method-agnostic [`SolveSpec`](crate::solver::SolveSpec)
+    /// onto GAP-safe's config; `dome`/`dynamic` come from the
+    /// [`Method::GapSafe`](crate::solver::Method) variant fields.
+    pub fn from_spec(spec: &crate::solver::SolveSpec, dome: bool, dynamic: bool) -> GapSafeConfig {
+        let d = GapSafeConfig::default();
+        GapSafeConfig {
+            eps: spec.eps,
+            dome,
+            dynamic,
+            parallelism: spec.parallelism,
+            epoch_shards: spec.epoch_shards,
+            pool: spec.pool,
+            max_outer: spec.max_outer.unwrap_or(d.max_outer),
+            trace: spec.trace,
+            ..d
+        }
+    }
+}
+
+/// Solve outcome.
+#[derive(Debug, Clone)]
+pub struct GapSafeResult {
+    /// Sparse solution in the full index space.
+    pub beta: Vec<(usize, f64)>,
+    /// FULL-problem duality gap (honest certificate).
+    pub gap: f64,
+    /// Last reduced-problem gap (diagnostic; equals `gap` up to the
+    /// dual-rescaling difference when no screening miss occurred).
+    pub reduced_gap: f64,
+    /// Total CM epochs executed.
+    pub epochs: usize,
+    /// Screening passes run (1 for static).
+    pub screen_rounds: usize,
+    /// Features screened by the initial (static) pass.
+    pub screened_initial: usize,
+    /// Final kept-set size.
+    pub kept_final: usize,
+    /// Globally feasible dual point from the final full-gap recompute.
+    pub theta: Vec<f64>,
+    pub secs: f64,
+    pub trace: Vec<TraceEvent>,
+}
+
+/// The GAP-safe solver, generic over the numeric engine.
+pub struct GapSafe<'a> {
+    pub cfg: GapSafeConfig,
+    pub engine: &'a mut dyn Engine,
+}
+
+impl<'a> GapSafe<'a> {
+    pub fn new(engine: &'a mut dyn Engine, cfg: GapSafeConfig) -> Self {
+        GapSafe { cfg, engine }
+    }
+
+    pub fn solve(&mut self, prob: &Problem, lam: f64) -> GapSafeResult {
+        self.solve_warm(prob, lam, None)
+    }
+
+    pub fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        warm: Option<&[(usize, f64)]>,
+    ) -> GapSafeResult {
+        let sw = Stopwatch::start();
+        let p = prob.p();
+        if let Some(par) = self.cfg.parallelism {
+            self.engine.set_parallelism(par);
+        }
+        if let Some(sh) = self.cfg.epoch_shards {
+            self.engine.set_epoch_shards(sh);
+        }
+        if let Some(mode) = self.cfg.pool {
+            self.engine.set_pool_mode(mode);
+        }
+        let scan_par = self.cfg.parallelism.unwrap_or_else(|| self.engine.parallelism());
+        let scan_pool = self.cfg.pool.unwrap_or_else(|| self.engine.pool_mode());
+        let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
+        let alpha = prob.loss.alpha();
+        let vi_ok = self.cfg.use_vi_ball
+            && prob.loss == LossKind::Squared
+            && prob.offset.is_none();
+        let mut trace: Vec<TraceEvent> = Vec::new();
+
+        // --- static screen from the warm (or zero) point ---
+        let warm_sparse: Vec<(usize, f64)> = warm
+            .unwrap_or(&[])
+            .iter()
+            .filter(|(_, b)| *b != 0.0)
+            .copied()
+            .collect();
+        let u0 = prob.margins_sparse(&warm_sparse);
+        let th_hat = prob.theta_hat(&u0, lam);
+        let mut corrs = vec![0.0; p];
+        prob.x.mul_t_vec_pool(&th_hat, &mut corrs, scan_par, scan_pool);
+        let mx = corrs.iter().map(|v| v.abs()).fold(0.0, tmax);
+        let dp = prob.project_dual(&th_hat, mx, lam);
+        let l1: f64 = warm_sparse.iter().map(|(_, b)| b.abs()).sum();
+        let primal0 = prob.primal_from_margins(&u0, l1, lam);
+        let gap0 = (primal0 - dp.dual).max(0.0);
+        // feasible signed correlations: x_iᵀ(τθ̂) = τ·(x_iᵀθ̂)
+        for v in corrs.iter_mut() {
+            *v *= dp.tau;
+        }
+        let mut ball = gap_ball(&dp.theta, gap0, lam, alpha);
+        if vi_ok {
+            let tight = intersect(&ball, &vi_ball_ls(&prob.y, lam, &dp.theta));
+            if tight.radius < ball.radius {
+                // the lens center is not a scalar multiple of θ₀, so
+                // its correlations need a fresh scan
+                prob.x
+                    .mul_t_vec_pool(&tight.center, &mut corrs, scan_par, scan_pool);
+                ball = tight;
+            }
+        }
+        let all: Vec<usize> = (0..p).collect();
+        let survivors =
+            screen_region(prob, &all, &corrs, &col_nrm, ball.radius, self.cfg.dome);
+        let mut in_active = vec![false; p];
+        for &k in &survivors {
+            in_active[k] = true;
+        }
+        // force-keep the warm support: a warm coefficient the screen
+        // would zero is still part of the iterate we are refining
+        for &(i, _) in &warm_sparse {
+            in_active[i] = true;
+        }
+        let mut active: Vec<usize> = (0..p).filter(|&i| in_active[i]).collect();
+        if active.is_empty() {
+            // every feature certified inactive ⇒ β* = 0; keep the
+            // best-scoring column so the loop still certifies a gap
+            let best = (0..p)
+                .map(|i| (i, corrs[i].abs()))
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            active = vec![best];
+        }
+        let screened_initial = p - active.len();
+        let mut warm_full = vec![0.0; p];
+        for &(i, b) in &warm_sparse {
+            warm_full[i] = b;
+        }
+        let mut beta: Vec<f64> = active.iter().map(|&i| warm_full[i]).collect();
+        if self.cfg.trace {
+            trace.push(TraceEvent {
+                t_secs: sw.secs(),
+                op: TraceOp::Del,
+                delta: screened_initial,
+                active: active.len(),
+                dual: dp.dual,
+                gap: gap0,
+            });
+        }
+
+        let mut epochs = 0usize;
+        let mut screen_rounds = 1usize;
+        let mut reduced_gap;
+        let mut eps_inner = self.cfg.eps;
+        let (gap_full, theta_full);
+
+        if !self.cfg.dynamic {
+            // --- static: fixed kept set, honest-gap retry loop ---
+            let mut tries = 0usize;
+            loop {
+                let budget = self.cfg.max_outer.saturating_sub(epochs).max(1);
+                let (eval, e) = solve_subproblem(
+                    self.engine,
+                    prob,
+                    &active,
+                    &mut beta,
+                    lam,
+                    eps_inner,
+                    self.cfg.k_epochs,
+                    budget,
+                );
+                epochs += e;
+                reduced_gap = eval.gap;
+                let sparse = pack(&active, &beta);
+                let (gf, dpf) =
+                    crate::solver::global_gap_dual(self.engine, prob, &sparse, lam);
+                tries += 1;
+                if gf <= self.cfg.eps || tries >= 8 || epochs >= self.cfg.max_outer {
+                    gap_full = gf;
+                    theta_full = dpf.theta;
+                    break;
+                }
+                // the reduced solve converged but the full certificate
+                // has not: tighten the inner tolerance and continue
+                eps_inner *= 0.25;
+            }
+        } else {
+            // --- dynamic: interleave K epochs with re-screening ---
+            let mut best_gap = f64::INFINITY;
+            let mut stall = 0usize;
+            let mut signed: Vec<f64> = Vec::new();
+            loop {
+                let eval =
+                    self.engine
+                        .cm_eval(prob, &active, &mut beta, lam, self.cfg.k_epochs);
+                epochs += self.cfg.k_epochs;
+                if self.cfg.trace {
+                    trace.push(TraceEvent {
+                        t_secs: sw.secs(),
+                        op: TraceOp::Eval,
+                        delta: 0,
+                        active: active.len(),
+                        dual: eval.dual,
+                        gap: eval.gap,
+                    });
+                }
+                if eval.gap < best_gap * 0.999 {
+                    best_gap = eval.gap;
+                    stall = 0;
+                } else {
+                    stall += 1;
+                }
+                let out_of_budget =
+                    epochs >= self.cfg.max_outer || stall >= self.cfg.stall_outer;
+                if eval.gap <= eps_inner || out_of_budget {
+                    // candidate convergence: certify on the FULL problem
+                    let sparse = pack(&active, &beta);
+                    let (gf, dpf) =
+                        crate::solver::global_gap_dual(self.engine, prob, &sparse, lam);
+                    if gf <= self.cfg.eps || out_of_budget {
+                        reduced_gap = eval.gap;
+                        gap_full = gf;
+                        theta_full = dpf.theta;
+                        break;
+                    }
+                    eps_inner *= 0.25;
+                }
+                // gap-ball screening of the kept set (the reduced gap
+                // at a reduced-feasible point still bounds ‖θ* − θ̂‖:
+                // the reduced problem shares the full problem's dual
+                // optimum as long as the kept set contains the support,
+                // which holds inductively from the full initial set)
+                let r = gap_ball(&eval.theta, eval.gap, lam, alpha).radius;
+                let c: &[f64] = if self.cfg.dome {
+                    signed.resize(active.len(), 0.0);
+                    prob.x.cols_dot(&active, &eval.theta, &mut signed);
+                    &signed
+                } else {
+                    // sphere test only needs magnitudes
+                    &eval.active_scores
+                };
+                let keep = screen_region(prob, &active, c, &col_nrm, r, self.cfg.dome);
+                screen_rounds += 1;
+                if keep.len() < active.len() {
+                    let deleted = active.len() - keep.len();
+                    let mut kept_idx = Vec::with_capacity(keep.len());
+                    let mut kept_beta = Vec::with_capacity(keep.len());
+                    for &k in &keep {
+                        kept_idx.push(active[k]);
+                        kept_beta.push(beta[k]);
+                    }
+                    active = kept_idx;
+                    beta = kept_beta;
+                    if active.is_empty() {
+                        // β* = 0; keep one column to certify the gap
+                        active = vec![0];
+                        beta = vec![0.0];
+                    }
+                    if self.cfg.trace {
+                        trace.push(TraceEvent {
+                            t_secs: sw.secs(),
+                            op: TraceOp::Del,
+                            delta: deleted,
+                            active: active.len(),
+                            dual: eval.dual,
+                            gap: eval.gap,
+                        });
+                    }
+                }
+            }
+        }
+
+        if self.cfg.trace {
+            trace.push(TraceEvent {
+                t_secs: sw.secs(),
+                op: TraceOp::Done,
+                delta: 0,
+                active: active.len(),
+                dual: 0.0,
+                gap: gap_full,
+            });
+        }
+        GapSafeResult {
+            beta: pack(&active, &beta),
+            gap: gap_full,
+            reduced_gap,
+            epochs,
+            screen_rounds,
+            screened_initial,
+            kept_final: active.len(),
+            theta: theta_full,
+            secs: sw.secs(),
+            trace,
+        }
+    }
+}
+
+/// Sparse (index, value) view of an active-set iterate.
+fn pack(active: &[usize], beta: &[f64]) -> Vec<(usize, f64)> {
+    active
+        .iter()
+        .zip(beta.iter())
+        .filter(|(_, &b)| b != 0.0)
+        .map(|(&i, &b)| (i, b))
+        .collect()
+}
+
+/// Multiplier on the sphere term of the support bound over the dome
+/// B(c, r) ∩ {θ : gᵀθ ≤ b} for a unit direction x̂ (‖g‖ = 1):
+/// max_{θ ∈ dome} x̂ᵀθ = x̂ᵀc + r·dome_factor(t, d) with t = x̂ᵀg and
+/// d = (b − gᵀc)/r.
+///
+/// * d ≥ 1 — the plane does not cut the sphere: plain sphere bound;
+/// * d ≤ −1 — the cut is (numerically) empty; fall back to the sphere
+///   bound, which is always safe;
+/// * t ≤ d — the sphere maximizer c + r·x̂ already satisfies the cut;
+/// * else — the maximizer sits on the rim circle:
+///   factor = t·d + √((1−t²)(1−d²)) ≤ 1 (it is cos(∠(x̂,g) − ∠cut)).
+///
+/// NaN in either argument falls through every comparison and yields a
+/// NaN bound, which the caller's `!(upper < 1−margin)` keep-test turns
+/// into "keep" — poisoned scores can only ever weaken screening.
+pub(crate) fn dome_factor(t: f64, d: f64) -> f64 {
+    if !(d < 1.0) || !(d > -1.0) || t <= d {
+        return 1.0;
+    }
+    let t = t.clamp(-1.0, 1.0);
+    t * d + ((1.0 - t * t) * (1.0 - d * d)).sqrt()
+}
+
+/// Screen `cands` against the safe region B(center, r), optionally cut
+/// by the dome half-space of the most-correlated candidate. `corrs[k]`
+/// is x_{cands[k]}ᵀ·center — SIGNED when `dome` (the dome bound is
+/// direction-dependent); magnitudes suffice for the sphere.
+/// Returns the positions (into `cands`) that SURVIVE.
+fn screen_region(
+    prob: &Problem,
+    cands: &[usize],
+    corrs: &[f64],
+    col_nrm: &[f64],
+    r: f64,
+    dome: bool,
+) -> Vec<usize> {
+    let margin = 1.0 - DEL_MARGIN;
+    if cands.is_empty() || !(r >= 0.0) {
+        // NaN/negative radius: no certificate, screen nothing
+        return (0..cands.len()).collect();
+    }
+    let sphere = |k: usize| {
+        // `!(… < margin)` keeps NaN scores (safe direction)
+        !(corrs[k].abs() + col_nrm[cands[k]] * r < margin)
+    };
+    if !dome || r < 1e-300 {
+        return (0..cands.len()).filter(|&k| sphere(k)).collect();
+    }
+    // dome cut from the most-correlated candidate j*:
+    // g = σ·x_{j*}/‖x_{j*}‖, b = 1/‖x_{j*}‖, σ = sign(x_{j*}ᵀc),
+    // so d = (b − gᵀc)/r = (1 − |x_{j*}ᵀc|)/(‖x_{j*}‖·r)
+    let jstar = (0..cands.len())
+        .map(|k| (k, corrs[k].abs()))
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(k, _)| k)
+        .unwrap_or(0);
+    let w_star = col_nrm[cands[jstar]];
+    if w_star < 1e-300 {
+        return (0..cands.len()).filter(|&k| sphere(k)).collect();
+    }
+    let d = (1.0 - corrs[jstar].abs()) / (w_star * r);
+    if !(d < 1.0) {
+        // plane does not cut the ball (or d is NaN): sphere test
+        return (0..cands.len()).filter(|&k| sphere(k)).collect();
+    }
+    let sigma = if corrs[jstar] < 0.0 { -1.0 } else { 1.0 };
+    // s_k = x_kᵀg via one densified column of X
+    let mut xj = vec![0.0; prob.n()];
+    prob.x.col_axpy(1.0, cands[jstar], &mut xj);
+    let mut s = vec![0.0; cands.len()];
+    prob.x.cols_dot(cands, &xj, &mut s);
+    let g_scale = sigma / w_star;
+    (0..cands.len())
+        .filter(|&k| {
+            let w = col_nrm[cands[k]];
+            if w < 1e-300 {
+                // all-zero column: x_kᵀθ ≡ 0 < 1 — provably inactive
+                // unless its correlation is poisoned
+                return !(corrs[k].abs() < margin);
+            }
+            let t = (s[k] * g_scale / w).clamp(-1.0, 1.0);
+            let up_pos = corrs[k] + w * r * dome_factor(t, d);
+            let up_neg = -corrs[k] + w * r * dome_factor(-t, d);
+            !(up_pos < margin && up_neg < margin)
+        })
+        .collect()
+}
+
+impl GapSafeResult {
+    fn into_solution(self, warm_started: bool) -> crate::solver::Solution {
+        crate::solver::Solution {
+            beta: self.beta,
+            gap: self.gap,
+            epochs: self.epochs,
+            secs: self.secs,
+            warm_started,
+            stats: vec![
+                ("screened_initial", self.screened_initial as f64),
+                ("final_feature_set", self.kept_final as f64),
+                ("screen_rounds", self.screen_rounds as f64),
+                ("reduced_gap", self.reduced_gap),
+            ],
+            trace: self.trace,
+        }
+    }
+}
+
+impl crate::solver::Solver for GapSafe<'_> {
+    fn name(&self) -> &'static str {
+        "gapsafe"
+    }
+
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::Solution {
+        let r = GapSafe::solve_warm(self, prob, lam, warm);
+        r.into_solution(warm.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cm::NativeEngine;
+    use crate::data::synth;
+    use crate::solver::Solver;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn solve_no_screen(prob: &Problem, lam: f64, eps: f64) -> Vec<f64> {
+        let all: Vec<usize> = (0..prob.p()).collect();
+        let mut beta = vec![0.0; prob.p()];
+        let mut eng = NativeEngine::new();
+        let _ = solve_subproblem(&mut eng, prob, &all, &mut beta, lam, eps, 10, 400_000);
+        beta
+    }
+
+    fn variants() -> [(bool, bool); 4] {
+        // (dome, dynamic)
+        [(true, true), (false, true), (true, false), (false, false)]
+    }
+
+    #[test]
+    fn dome_factor_bounds_the_cut_sphere() {
+        // sampled certificate: for random ball/plane/direction, no
+        // point of B(c,r) ∩ {gᵀθ ≤ b} has x̂ᵀθ above the dome bound
+        prop::check("dome bound", 60, |rng: &mut Rng| {
+            let dim = 2 + rng.below(3);
+            let c: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let r = 0.2 + rng.uniform();
+            let unit = |rng: &mut Rng| -> Vec<f64> {
+                let v: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+                let n = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+                v.into_iter().map(|x| x / n).collect()
+            };
+            let g = unit(rng);
+            let xhat = unit(rng);
+            let gc: f64 = g.iter().zip(&c).map(|(a, b)| a * b).sum();
+            // plane placed so d spans cutting and non-cutting cases
+            let d_target = -1.5 + 3.0 * rng.uniform();
+            let b = gc + d_target * r;
+            let t: f64 = xhat.iter().zip(&g).map(|(a, b)| a * b).sum();
+            let xc: f64 = xhat.iter().zip(&c).map(|(a, b)| a * b).sum();
+            let bound = xc + r * dome_factor(t, (b - gc) / r);
+            for _ in 0..300 {
+                let pt: Vec<f64> = c
+                    .iter()
+                    .map(|ci| ci + (rng.uniform() * 2.0 - 1.0) * r)
+                    .collect();
+                let in_ball = pt
+                    .iter()
+                    .zip(&c)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt()
+                    <= r;
+                let in_half = g.iter().zip(&pt).map(|(a, b)| a * b).sum::<f64>() <= b;
+                if in_ball && in_half {
+                    let v: f64 = xhat.iter().zip(&pt).map(|(a, b)| a * b).sum();
+                    if v > bound + 1e-9 {
+                        return Err(format!("point beats dome bound: {v} > {bound}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dome_survivors_subset_of_sphere_survivors() {
+        let ds = synth::synth_linear(40, 300, 91);
+        let prob = ds.problem();
+        let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
+        // a plausible feasible-ish center: y/(2λ_max) scaled corrs
+        let lam = prob.lambda_max() * 2.0;
+        let center: Vec<f64> = prob.y.iter().map(|v| v / lam).collect();
+        let mut corrs = vec![0.0; prob.p()];
+        prob.x.mul_t_vec(&center, &mut corrs);
+        let all: Vec<usize> = (0..prob.p()).collect();
+        for r in [0.05, 0.2, 0.5] {
+            let sphere = screen_region(&prob, &all, &corrs, &col_nrm, r, false);
+            let dome = screen_region(&prob, &all, &corrs, &col_nrm, r, true);
+            assert!(dome.len() <= sphere.len(), "dome weaker than sphere at r={r}");
+            for k in &dome {
+                assert!(sphere.contains(k), "dome kept {k} that sphere screened");
+            }
+        }
+    }
+
+    #[test]
+    fn all_variants_match_no_screening_ls() {
+        let ds = synth::synth_linear(50, 300, 93);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.1;
+        let full = solve_no_screen(&prob, lam, 1e-9);
+        for (dome, dynamic) in variants() {
+            let mut eng = NativeEngine::new();
+            let cfg = GapSafeConfig { eps: 1e-9, dome, dynamic, ..Default::default() };
+            let res = GapSafe::new(&mut eng, cfg).solve(&prob, lam);
+            assert!(res.gap <= 1e-9, "dome={dome} dyn={dynamic}: gap {}", res.gap);
+            let viol = prob.kkt_violation(&res.beta, lam);
+            assert!(viol < 1e-3 * lam.max(1.0), "dome={dome} dyn={dynamic}: kkt {viol}");
+            for (i, b) in res.beta.iter() {
+                assert!(
+                    (full[*i] - b).abs() < 1e-4 * b.abs().max(1.0),
+                    "dome={dome} dyn={dynamic} β[{i}]: {b} vs {}",
+                    full[*i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_converges_and_certifies() {
+        let ds = synth::gisette_like(50, 150, 95);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.2;
+        for (dome, dynamic) in variants() {
+            let mut eng = NativeEngine::new();
+            let cfg = GapSafeConfig { eps: 1e-7, dome, dynamic, ..Default::default() };
+            let res = GapSafe::new(&mut eng, cfg).solve(&prob, lam);
+            assert!(res.gap <= 1e-7, "dome={dome} dyn={dynamic}: gap {}", res.gap);
+            let viol = prob.kkt_violation(&res.beta, lam);
+            assert!(viol < 1e-2 * lam.max(1.0), "kkt {viol}");
+        }
+    }
+
+    #[test]
+    fn dynamic_screens_most_features() {
+        let ds = synth::synth_linear(40, 600, 97);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.3;
+        let mut eng = NativeEngine::new();
+        let res = GapSafe::new(&mut eng, GapSafeConfig::default()).solve(&prob, lam);
+        assert!(res.gap <= 1e-6);
+        assert!(res.kept_final < prob.p() / 4, "kept {}", res.kept_final);
+    }
+
+    #[test]
+    fn warm_path_gives_static_screen_power() {
+        // from cold the static ball is huge (gap at β=0), but a warm
+        // path point tightens it enough to screen before solving
+        let ds = synth::synth_linear(50, 500, 99);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let grid = [lam_max * 0.3, lam_max * 0.25];
+        let mut eng = NativeEngine::new();
+        let cfg = GapSafeConfig { eps: 1e-9, dynamic: false, ..Default::default() };
+        let mut gs = GapSafe::new(&mut eng, cfg);
+        let path = Solver::path(&mut gs, &prob, &grid);
+        let second = &path.points[1];
+        assert!(second.warm_started);
+        let screened = second
+            .stats
+            .iter()
+            .find(|(n, _)| *n == "screened_initial")
+            .map(|(_, v)| *v)
+            .unwrap();
+        assert!(screened > 0.0, "warm static screen had no power");
+        for (lam, sol) in grid.iter().zip(&path.points) {
+            assert!(sol.gap <= 1e-9);
+            assert!(prob.kkt_violation(&sol.beta, *lam) < 1e-3 * lam.max(1.0));
+        }
+    }
+
+    #[test]
+    fn lambda_at_or_above_lambda_max_returns_zero() {
+        let ds = synth::synth_linear(30, 100, 101);
+        let prob = ds.problem();
+        for f in [1.0, 1.2] {
+            let lam = prob.lambda_max() * f;
+            let mut eng = NativeEngine::new();
+            let res = GapSafe::new(&mut eng, GapSafeConfig::default()).solve(&prob, lam);
+            assert!(res.beta.is_empty(), "β must be empty at λ ≥ λ_max");
+            assert!(res.gap <= 1e-6, "gap {}", res.gap);
+        }
+    }
+}

@@ -1,0 +1,495 @@
+//! Hybrid safe-strong rule (Zeng, Yang & Breheny, *Hybrid safe-strong
+//! rules for efficient optimization in lasso-type problems*).
+//!
+//! The sequential strong rule ([`super::strong`]) proposes a small
+//! working set but is HEURISTIC — it can discard active features
+//! (Table 1). The hybrid rule keeps the strong rule's aggressiveness
+//! and restores safety with a KKT post-check:
+//!
+//! 1. propose: work = strong-rule survivors ∪ warm support;
+//! 2. solve the reduced problem on `work`;
+//! 3. post-check: scan ALL p features at the reduced solution's dual
+//!    point θ̂ — any feature outside `work` with |x_iᵀθ̂| > 1 violates
+//!    the KKT conditions the strong rule promised away; add the
+//!    violators to `work` and re-solve;
+//! 4. alongside the post-check, the duality-gap safe ball certifies
+//!    features as permanently inactive (`safe_out`), so they are never
+//!    re-checked — the safe rule prunes the heuristic rule's checking
+//!    cost, which is the "hybrid" of the title.
+//!
+//! The loop terminates with an **honest certificate**: the reported
+//! [`HybridResult::gap`] is the FULL-problem duality gap at the
+//! returned β (not the reduced-problem gap), so a missed feature can
+//! not hide — with no violators and a small full gap, the solution is
+//! certified optimal on the original problem.
+
+use crate::ball::gap_ball;
+use crate::cm::{solve_subproblem, Engine, EpochShards, PoolMode};
+use crate::linalg::Parallelism;
+use crate::model::Problem;
+use crate::saif::solver::DEL_MARGIN;
+use crate::saif::{TraceEvent, TraceOp};
+use crate::util::{tmax, Stopwatch};
+
+/// Hybrid safe-strong configuration.
+#[derive(Debug, Clone)]
+pub struct HybridConfig {
+    /// Stopping duality gap ε — enforced on the FULL problem.
+    pub eps: f64,
+    /// CM epochs per convergence check in the reduced solves.
+    pub k_epochs: usize,
+    /// KKT post-check slack: feature i is a violator when
+    /// |x_iᵀθ̂| > 1 + kkt_tol (θ̂ = −f'(u)/λ at the reduced solution).
+    pub kkt_tol: f64,
+    /// Total-epoch safety valve.
+    pub max_outer: usize,
+    /// Outer-round safety valve (each round is a reduced solve + full
+    /// KKT scan).
+    pub max_rounds: usize,
+    /// Stall detector on the full gap (engine precision floor).
+    pub stall_rounds: usize,
+    /// Scan parallelism / epoch sharding / pool overrides (None
+    /// inherits the engine's settings, as in SaifConfig).
+    pub parallelism: Option<Parallelism>,
+    pub epoch_shards: Option<EpochShards>,
+    pub pool: Option<PoolMode>,
+    /// Record a trace.
+    pub trace: bool,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        HybridConfig {
+            eps: 1e-6,
+            k_epochs: 10,
+            kkt_tol: 1e-6,
+            max_outer: 200_000,
+            max_rounds: 200,
+            stall_rounds: 50,
+            parallelism: None,
+            epoch_shards: None,
+            pool: None,
+            trace: false,
+        }
+    }
+}
+
+impl HybridConfig {
+    /// Map the method-agnostic [`SolveSpec`](crate::solver::SolveSpec)
+    /// onto the hybrid rule's config.
+    pub fn from_spec(spec: &crate::solver::SolveSpec) -> HybridConfig {
+        let d = HybridConfig::default();
+        HybridConfig {
+            eps: spec.eps,
+            parallelism: spec.parallelism,
+            epoch_shards: spec.epoch_shards,
+            pool: spec.pool,
+            max_outer: spec.max_outer.unwrap_or(d.max_outer),
+            trace: spec.trace,
+            ..d
+        }
+    }
+}
+
+/// Solve outcome.
+#[derive(Debug, Clone)]
+pub struct HybridResult {
+    /// Sparse solution in the full index space.
+    pub beta: Vec<(usize, f64)>,
+    /// FULL-problem duality gap (honest certificate).
+    pub gap: f64,
+    /// Last reduced-problem gap (diagnostic).
+    pub reduced_gap: f64,
+    /// Total CM epochs executed.
+    pub epochs: usize,
+    /// Outer rounds (reduced solve + full KKT scan).
+    pub rounds: usize,
+    /// Size of the initial strong-rule proposal set (∪ warm support).
+    pub strong_size: usize,
+    /// KKT violators added across all rounds — each one is a feature
+    /// the strong rule wrongly excluded.
+    pub violations: usize,
+    /// Features certified permanently inactive by the gap safe ball.
+    pub safe_screened: usize,
+    /// Final working-set size.
+    pub kept_final: usize,
+    /// Globally feasible dual point of the final certificate.
+    pub theta: Vec<f64>,
+    pub secs: f64,
+    pub trace: Vec<TraceEvent>,
+}
+
+/// The hybrid safe-strong solver. Holds the λ-path session state the
+/// strong rule needs: the previous solve's λ (its margins come back
+/// through the warm β), fingerprinted by problem shape so a session
+/// reused across datasets falls back to the safe λ_max threshold.
+pub struct Hybrid<'a> {
+    pub cfg: HybridConfig,
+    pub engine: &'a mut dyn Engine,
+    /// (n, p, λ) of the previous solve in this session.
+    session: Option<(usize, usize, f64)>,
+}
+
+impl<'a> Hybrid<'a> {
+    pub fn new(engine: &'a mut dyn Engine, cfg: HybridConfig) -> Self {
+        Hybrid { cfg, engine, session: None }
+    }
+
+    pub fn solve(&mut self, prob: &Problem, lam: f64) -> HybridResult {
+        self.solve_warm(prob, lam, None)
+    }
+
+    pub fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        warm: Option<&[(usize, f64)]>,
+    ) -> HybridResult {
+        let sw = Stopwatch::start();
+        let p = prob.p();
+        if let Some(par) = self.cfg.parallelism {
+            self.engine.set_parallelism(par);
+        }
+        if let Some(sh) = self.cfg.epoch_shards {
+            self.engine.set_epoch_shards(sh);
+        }
+        if let Some(mode) = self.cfg.pool {
+            self.engine.set_pool_mode(mode);
+        }
+        let scan_par = self.cfg.parallelism.unwrap_or_else(|| self.engine.parallelism());
+        let scan_pool = self.cfg.pool.unwrap_or_else(|| self.engine.pool_mode());
+        let col_nrm: Vec<f64> = prob.col_nrm2.iter().map(|v| v.sqrt()).collect();
+        let alpha = prob.loss.alpha();
+        let warm_sparse: Vec<(usize, f64)> = warm
+            .unwrap_or(&[])
+            .iter()
+            .filter(|(_, b)| *b != 0.0)
+            .copied()
+            .collect();
+
+        // strong-rule reference point: (u(λ_prev), λ_prev) from this
+        // session's previous solve on the SAME problem shape at a
+        // λ_prev ≥ λ; otherwise (u = margins(0), λ_max) — β = 0 is the
+        // exact solution there, so the pair is always valid
+        let session_prev = match self.session {
+            Some((n0, p0, lam0)) if (n0, p0) == (prob.n(), p) && lam0 >= lam => {
+                Some(lam0)
+            }
+            _ => None,
+        };
+        let (u_prev, lam_prev) = match session_prev {
+            Some(lam0) if warm.is_some() => (prob.margins_sparse(&warm_sparse), lam0),
+            _ => (prob.margins_sparse(&[]), prob.lambda_max_par(scan_par)),
+        };
+        self.session = Some((prob.n(), p, lam));
+
+        let mut in_work = vec![false; p];
+        for i in super::strong::strong_rule_keep(prob, &u_prev, lam, lam_prev) {
+            in_work[i] = true;
+        }
+        for &(i, _) in &warm_sparse {
+            in_work[i] = true;
+        }
+        let mut work: Vec<usize> = (0..p).filter(|&i| in_work[i]).collect();
+        if work.is_empty() {
+            // the strong threshold excluded everything (λ far below
+            // λ_prev can't do this, λ near λ_prev on a dead grid can):
+            // seed with the best-correlated column so the loop starts
+            let th0 = prob.theta_hat(&u_prev, lam);
+            let scores = self.engine.scores(prob, &th0);
+            let best = (0..p)
+                .max_by(|&a, &b| scores[a].total_cmp(&scores[b]))
+                .unwrap_or(0);
+            in_work[best] = true;
+            work = vec![best];
+        }
+        let strong_size = work.len();
+        let mut warm_full = vec![0.0; p];
+        for &(i, b) in &warm_sparse {
+            warm_full[i] = b;
+        }
+        let mut beta: Vec<f64> = work.iter().map(|&i| warm_full[i]).collect();
+
+        let mut safe_out = vec![false; p];
+        let mut corrs = vec![0.0; p];
+        let mut trace: Vec<TraceEvent> = Vec::new();
+        let mut eps_inner = self.cfg.eps;
+        let mut epochs = 0usize;
+        let mut rounds = 0usize;
+        let mut violations = 0usize;
+        let mut best_full = f64::INFINITY;
+        let mut stall = 0usize;
+        let (gap_full, reduced_gap, theta_full);
+        loop {
+            rounds += 1;
+            let budget = self.cfg.max_outer.saturating_sub(epochs).max(1);
+            let (eval, e) = solve_subproblem(
+                self.engine,
+                prob,
+                &work,
+                &mut beta,
+                lam,
+                eps_inner,
+                self.cfg.k_epochs,
+                budget,
+            );
+            epochs += e;
+            // full-problem certificate at the reduced solution
+            let sparse = pack(&work, &beta);
+            let u = prob.margins_sparse(&sparse);
+            let th_hat = prob.theta_hat(&u, lam);
+            prob.x.mul_t_vec_pool(&th_hat, &mut corrs, scan_par, scan_pool);
+            let mx = corrs.iter().map(|v| v.abs()).fold(0.0, tmax);
+            let dp = prob.project_dual(&th_hat, mx, lam);
+            let l1: f64 = sparse.iter().map(|(_, b)| b.abs()).sum();
+            let primal = prob.primal_from_margins(&u, l1, lam);
+            let gf = (primal - dp.dual).max(0.0);
+            if gf < best_full * 0.999 {
+                best_full = gf;
+                stall = 0;
+            } else {
+                stall += 1;
+            }
+            if self.cfg.trace {
+                trace.push(TraceEvent {
+                    t_secs: sw.secs(),
+                    op: TraceOp::Eval,
+                    delta: 0,
+                    active: work.len(),
+                    dual: dp.dual,
+                    gap: gf,
+                });
+            }
+            // KKT post-check over every feature the safe ball has not
+            // already retired
+            let violators: Vec<usize> = (0..p)
+                .filter(|&i| {
+                    !in_work[i] && !safe_out[i] && corrs[i].abs() > 1.0 + self.cfg.kkt_tol
+                })
+                .collect();
+            // gap-ball safe discard (x_iᵀθ = τ·corrs[i] at the feasible
+            // point): certified-inactive features can never become
+            // violators, so future post-checks skip them
+            let r = gap_ball(&dp.theta, gf, lam, alpha).radius;
+            for i in 0..p {
+                if !in_work[i]
+                    && !safe_out[i]
+                    && corrs[i].abs() * dp.tau + col_nrm[i] * r < 1.0 - DEL_MARGIN
+                {
+                    safe_out[i] = true;
+                }
+            }
+            let out_of_budget = epochs >= self.cfg.max_outer
+                || rounds >= self.cfg.max_rounds
+                || stall >= self.cfg.stall_rounds;
+            if (violators.is_empty() && gf <= self.cfg.eps) || out_of_budget {
+                gap_full = gf;
+                reduced_gap = eval.gap;
+                theta_full = dp.theta;
+                break;
+            }
+            if violators.is_empty() {
+                // converged on the reduced problem but the full
+                // certificate is not there yet: tighten and continue
+                eps_inner *= 0.25;
+                continue;
+            }
+            violations += violators.len();
+            if self.cfg.trace {
+                trace.push(TraceEvent {
+                    t_secs: sw.secs(),
+                    op: TraceOp::Add,
+                    delta: violators.len(),
+                    active: work.len() + violators.len(),
+                    dual: dp.dual,
+                    gap: gf,
+                });
+            }
+            // sorted merge keeps the CM sweep order deterministic
+            let mut new_work = Vec::with_capacity(work.len() + violators.len());
+            let mut new_beta = Vec::with_capacity(new_work.capacity());
+            let (mut a, mut b) = (0usize, 0usize);
+            while a < work.len() || b < violators.len() {
+                if b >= violators.len() || (a < work.len() && work[a] < violators[b]) {
+                    new_work.push(work[a]);
+                    new_beta.push(beta[a]);
+                    a += 1;
+                } else {
+                    new_work.push(violators[b]);
+                    new_beta.push(0.0);
+                    b += 1;
+                }
+            }
+            for &i in &violators {
+                in_work[i] = true;
+            }
+            work = new_work;
+            beta = new_beta;
+        }
+        if self.cfg.trace {
+            trace.push(TraceEvent {
+                t_secs: sw.secs(),
+                op: TraceOp::Done,
+                delta: 0,
+                active: work.len(),
+                dual: 0.0,
+                gap: gap_full,
+            });
+        }
+        HybridResult {
+            beta: pack(&work, &beta),
+            gap: gap_full,
+            reduced_gap,
+            epochs,
+            rounds,
+            strong_size,
+            violations,
+            safe_screened: safe_out.iter().filter(|&&s| s).count(),
+            kept_final: work.len(),
+            theta: theta_full,
+            secs: sw.secs(),
+            trace,
+        }
+    }
+}
+
+/// Sparse (index, value) view of a working-set iterate.
+fn pack(work: &[usize], beta: &[f64]) -> Vec<(usize, f64)> {
+    work.iter()
+        .zip(beta.iter())
+        .filter(|(_, &b)| b != 0.0)
+        .map(|(&i, &b)| (i, b))
+        .collect()
+}
+
+impl HybridResult {
+    fn into_solution(self, warm_started: bool) -> crate::solver::Solution {
+        crate::solver::Solution {
+            beta: self.beta,
+            gap: self.gap,
+            epochs: self.epochs,
+            secs: self.secs,
+            warm_started,
+            stats: vec![
+                ("strong_set", self.strong_size as f64),
+                ("final_feature_set", self.kept_final as f64),
+                ("rounds", self.rounds as f64),
+                ("violations", self.violations as f64),
+                ("safe_screened", self.safe_screened as f64),
+                ("reduced_gap", self.reduced_gap),
+            ],
+            trace: self.trace,
+        }
+    }
+}
+
+impl crate::solver::Solver for Hybrid<'_> {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        warm: Option<&[(usize, f64)]>,
+    ) -> crate::solver::Solution {
+        let r = Hybrid::solve_warm(self, prob, lam, warm);
+        r.into_solution(warm.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cm::NativeEngine;
+    use crate::data::synth;
+    use crate::solver::Solver;
+
+    #[test]
+    fn matches_saif_solution_ls() {
+        let ds = synth::synth_linear(40, 250, 61);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.1;
+        let mut eng = NativeEngine::new();
+        let cfg = HybridConfig { eps: 1e-9, ..Default::default() };
+        let res = Hybrid::new(&mut eng, cfg).solve(&prob, lam);
+        assert!(res.gap <= 1e-9, "gap {}", res.gap);
+        assert!(prob.kkt_violation(&res.beta, lam) < 1e-3 * lam.max(1.0));
+        let mut eng2 = NativeEngine::new();
+        let mut saif = crate::saif::Saif::new(
+            &mut eng2,
+            crate::saif::SaifConfig { eps: 1e-9, ..Default::default() },
+        );
+        let sres = saif.solve(&prob, lam);
+        let mut a: Vec<usize> = res.beta.iter().map(|&(i, _)| i).collect();
+        let mut b: Vec<usize> = sres.beta.iter().map(|&(i, _)| i).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "supports differ");
+    }
+
+    #[test]
+    fn logistic_converges_with_full_certificate() {
+        let ds = synth::gisette_like(50, 150, 63);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.2;
+        let mut eng = NativeEngine::new();
+        let cfg = HybridConfig { eps: 1e-7, ..Default::default() };
+        let res = Hybrid::new(&mut eng, cfg).solve(&prob, lam);
+        assert!(res.gap <= 1e-7, "gap {}", res.gap);
+        assert!(prob.kkt_violation(&res.beta, lam) < 1e-2 * lam.max(1.0));
+    }
+
+    #[test]
+    fn strong_proposal_is_small_near_lambda_max() {
+        let ds = synth::synth_linear(30, 400, 65);
+        let prob = ds.problem();
+        let lam = prob.lambda_max() * 0.9;
+        let mut eng = NativeEngine::new();
+        let res = Hybrid::new(&mut eng, HybridConfig::default()).solve(&prob, lam);
+        assert!(res.gap <= 1e-6);
+        // cold solve: threshold 2λ − λ_max = 0.8·λ_max keeps few
+        assert!(res.strong_size < prob.p() / 2, "strong {}", res.strong_size);
+        assert!(prob.kkt_violation(&res.beta, lam) < 1e-3 * lam.max(1.0));
+    }
+
+    #[test]
+    fn warm_path_certifies_every_point() {
+        let ds = synth::synth_linear(40, 300, 67);
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let grid: Vec<f64> = [0.5, 0.3, 0.15].iter().map(|f| lam_max * f).collect();
+        let mut eng = NativeEngine::new();
+        let cfg = HybridConfig { eps: 1e-9, ..Default::default() };
+        let mut h = Hybrid::new(&mut eng, cfg);
+        let path = Solver::path(&mut h, &prob, &grid);
+        for (k, (&lam, sol)) in grid.iter().zip(&path.points).enumerate() {
+            assert!(sol.gap <= 1e-9, "λ#{k}: gap {}", sol.gap);
+            assert!(
+                prob.kkt_violation(&sol.beta, lam) < 1e-3 * lam.max(1.0),
+                "λ#{k}: KKT violated"
+            );
+            if k > 0 {
+                assert!(sol.warm_started);
+            }
+        }
+    }
+
+    #[test]
+    fn session_fingerprint_resets_across_problems() {
+        // a solver reused on a DIFFERENT problem must not apply the old
+        // session's λ_prev to the new data
+        let p1 = synth::synth_linear(30, 80, 69).problem();
+        let p2 = synth::synth_linear(25, 60, 71).problem();
+        let mut eng = NativeEngine::new();
+        let mut h = Hybrid::new(&mut eng, HybridConfig { eps: 1e-9, ..Default::default() });
+        let _ = h.solve(&p1, p1.lambda_max() * 0.5);
+        // warm β from p1 makes no sense for p2; the shape fingerprint
+        // forces the λ_max fallback and the KKT loop stays correct
+        let lam2 = p2.lambda_max() * 0.3;
+        let sol = Hybrid::solve_warm(&mut h, &p2, lam2, None);
+        assert!(sol.gap <= 1e-9);
+        assert!(p2.kkt_violation(&sol.beta, lam2) < 1e-3 * lam2.max(1.0));
+    }
+}

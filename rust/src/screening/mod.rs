@@ -3,15 +3,25 @@
 //! * [`dynamic`] — gap-safe dynamic screening (Ndiaye et al. 2015,
 //!   Fercoq et al. 2015): starts from the FULL feature set, screens
 //!   with the duality-gap ball during optimization.
+//! * [`gapsafe`] — the GAP-safe sphere and dome tests (Fercoq et al.,
+//!   *Mind the duality gap*), static and dynamic variants, with the
+//!   Liu et al. variational-inequality ball tightening the static
+//!   least-squares screen.
 //! * [`dpp`] — sequential (DPP-style) screening for λ-paths: screens
 //!   each λ with a ball around the previous λ's exact dual solution.
 //! * [`strong`] — the (unsafe) sequential strong rule of Tibshirani
 //!   et al. 2012, used inside the homotopy baseline.
+//! * [`hybrid`] — the safe-strong rule of Zeng et al.: strong-rule
+//!   proposal, full KKT post-check, gap-ball pruning of the checks.
 
 pub mod dpp;
 pub mod dynamic;
+pub mod gapsafe;
+pub mod hybrid;
 pub mod strong;
 
 pub use dpp::DppPath;
 pub use dynamic::{DynScreen, DynScreenResult};
+pub use gapsafe::{GapSafe, GapSafeConfig, GapSafeResult};
+pub use hybrid::{Hybrid, HybridConfig, HybridResult};
 pub use strong::strong_rule_keep;

@@ -54,7 +54,7 @@ mod tests {
         // the feature achieving λ_max survives any λ < λ_max screen
         let corrs = prob.init_corrs();
         let argmax = (0..prob.p())
-            .max_by(|&a, &b| corrs[a].partial_cmp(&corrs[b]).unwrap())
+            .max_by(|&a, &b| corrs[a].total_cmp(&corrs[b]))
             .unwrap();
         assert!(kept.contains(&argmax));
     }

@@ -1,0 +1,279 @@
+//! Benchopt-style method shootout: every feature-LASSO method on one
+//! shared scenario grid — {ls, logistic} × {dense, sparse, out-of-core}
+//! designs, each solved over the same descending λ-path — recording
+//! wall time and the HONEST (full-problem) certificate per grid point.
+//!
+//! The output is a flat JSON record (`BENCH_methods.json` at the repo
+//! root, marker `"bench":"methods"`) in the same shape as the kernel
+//! micro-bench record, so `tools/bench_guard.py` gates the `_secs`
+//! rows against the committed baseline exactly like the kernel rows
+//! (ooc rows excluded — disk timings are too noisy to gate on).
+//! Time-to-gap curves ride along as `_curve_secs`/`_curve_gap` arrays,
+//! unguarded.
+//!
+//! The structured-penalty methods (`fused`, `group`) are excluded on
+//! purpose: they solve different objectives, so their timings are not
+//! comparable on this grid.
+//!
+//! Entry points: `repro bench-methods [--quick]` and
+//! `cargo bench --bench methods`.
+
+use crate::cm::NativeEngine;
+use crate::data::{synth, Dataset};
+use crate::metrics::Table;
+use crate::model::LossKind;
+use crate::solver::{make, Method, SolveSpec, Solver};
+use crate::util::json::Json;
+use crate::util::{tmax, Stopwatch};
+
+/// The comparable (feature-LASSO) method set, in table order.
+pub const METHODS: &[Method] = &[
+    Method::Saif,
+    Method::DynScreen,
+    Method::Blitz,
+    Method::Homotopy,
+    Method::GapSafe { dome: true, dynamic: true },
+    Method::GapSafe { dome: false, dynamic: true },
+    Method::GapSafe { dome: true, dynamic: false },
+    Method::GapSafe { dome: false, dynamic: false },
+    Method::Hybrid,
+];
+
+/// Stopping gap shared by every run (recorded in the JSON).
+pub const EPS: f64 = 1e-6;
+
+/// Where the record lands: the repo root, independent of the
+/// invocation CWD (same convention as `BENCH_kernels.json`).
+pub const RECORD_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_methods.json");
+
+/// A finished shootout: the human-facing table and the machine record.
+pub struct ShootoutResult {
+    pub table: Table,
+    pub record: Json,
+}
+
+/// JSON-key-safe method label: `Method::label` with `:` (a shell/JSON
+/// annoyance in flat keys) mapped to `-`, e.g. `gapsafe:static` →
+/// `gapsafe-static`.
+pub fn key_label(method: Method) -> String {
+    method.label().replace(':', "-")
+}
+
+/// Sparse logistic scenario: the sparse LS design with labels
+/// thresholded to ±1 (there is no native sparse logistic generator).
+fn sparse_logit(n: usize, p: usize, density: f64, seed: u64) -> Dataset {
+    let mut ds = synth::synth_sparse(n, p, density, seed);
+    for v in ds.y.iter_mut() {
+        *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+    }
+    ds.loss = LossKind::Logistic;
+    ds.name = format!("{}-logit", ds.name);
+    ds
+}
+
+/// Spill a dataset to a temp `.saifbin` and reopen it out-of-core; the
+/// temp path is pushed onto `temp_paths` for the caller to unlink.
+fn spill_ooc(ds: &Dataset, tag: &str, temp_paths: &mut Vec<String>) -> Result<Dataset, String> {
+    let path = std::env::temp_dir().join(format!(
+        "saif_shootout_{}_{tag}.saifbin",
+        std::process::id()
+    ));
+    let path = path.to_str().ok_or("non-UTF-8 temp path")?.to_string();
+    crate::data::io::write_saifbin(ds, &path)?;
+    let ooc = crate::data::io::read_saifbin(&path)?;
+    temp_paths.push(path);
+    Ok(ooc)
+}
+
+/// The shared scenario grid. `quick` shrinks the sizes and the λ grid
+/// for smoke tests; full scale is what CI records.
+fn scenarios(quick: bool, temp_paths: &mut Vec<String>) -> Result<Vec<(&'static str, Dataset)>, String> {
+    let (n_d, p_d, n_s, p_s, dens) = if quick {
+        (60, 150, 80, 600, 0.02)
+    } else {
+        (100, 2000, 256, 10_000, 0.01)
+    };
+    let ls_sparse = synth::synth_sparse(n_s, p_s, dens, 13);
+    let logit_sparse = sparse_logit(n_s, p_s, dens, 14);
+    let ls_ooc = spill_ooc(&ls_sparse, "ls", temp_paths)?;
+    let logit_ooc = spill_ooc(&logit_sparse, "logit", temp_paths)?;
+    Ok(vec![
+        ("ls_dense", synth::synth_linear(n_d, p_d, 11)),
+        ("logit_dense", synth::gisette_like(n_d, p_d, 12)),
+        ("ls_sparse", ls_sparse),
+        ("logit_sparse", logit_sparse),
+        ("ls_ooc", ls_ooc),
+        ("logit_ooc", logit_ooc),
+    ])
+}
+
+/// Run the full shootout. Every method solves every scenario's λ-path
+/// (0.5·λ_max down to 0.05·λ_max, log-spaced) on a fresh engine; per
+/// (scenario, method) the record gets
+///
+/// * `<scenario>_<label>_secs` — path wall seconds (guarded by the
+///   bench guard, ooc scenarios excluded),
+/// * `<scenario>_<label>_gap` — worst per-point certificate on the
+///   path (honest: for the unsafe homotopy baseline this can exceed
+///   ε — that being visible is the point),
+/// * `<scenario>_<label>_curve_secs` / `_curve_gap` — the time-to-gap
+///   curve: cumulative seconds and certified gap at each grid point.
+pub fn run(quick: bool) -> Result<ShootoutResult, String> {
+    let n_lams = if quick { 3 } else { 8 };
+    let mut temp_paths = Vec::new();
+    let result = run_inner(quick, n_lams, &mut temp_paths);
+    // cleanup on success AND on every early-return error path
+    for p in &temp_paths {
+        std::fs::remove_file(p).ok();
+    }
+    result
+}
+
+fn run_inner(
+    quick: bool,
+    n_lams: usize,
+    temp_paths: &mut Vec<String>,
+) -> Result<ShootoutResult, String> {
+    let scens = scenarios(quick, temp_paths)?;
+    let mut rec = Json::obj();
+    rec.set("bench", Json::Str("methods".into()))
+        .set("n_lambdas", Json::Num(n_lams as f64))
+        .set("eps", Json::Num(EPS))
+        .set("quick", Json::Bool(quick));
+    let mut table = Table::new(
+        "method shootout: λ-path wall time + honest certificates",
+        &["scenario", "method", "secs", "worst_gap", "final_nnz"],
+    );
+    for (key, ds) in &scens {
+        let prob = ds.problem();
+        let lam_max = prob.lambda_max();
+        let denom = (n_lams - 1).max(1) as f64;
+        let grid: Vec<f64> = (0..n_lams)
+            .map(|k| lam_max * 0.5 * (0.1f64).powf(k as f64 / denom))
+            .collect();
+        for &method in METHODS {
+            let label = key_label(method);
+            let spec = SolveSpec { eps: EPS, ..Default::default() };
+            let mut eng = NativeEngine::new();
+            let sw = Stopwatch::start();
+            let path = make(method, &mut eng, &spec).path(&prob, &grid);
+            let secs = sw.secs();
+            let worst_gap = path.points.iter().map(|s| s.gap).fold(0.0, tmax);
+            let mut cum = 0.0;
+            let curve_secs: Vec<Json> = path
+                .points
+                .iter()
+                .map(|s| {
+                    cum += s.secs;
+                    Json::Num(cum)
+                })
+                .collect();
+            let curve_gap: Vec<Json> =
+                path.points.iter().map(|s| Json::Num(s.gap)).collect();
+            rec.set(&format!("{key}_{label}_secs"), Json::Num(secs))
+                .set(&format!("{key}_{label}_gap"), Json::Num(worst_gap))
+                .set(&format!("{key}_{label}_curve_secs"), Json::Arr(curve_secs))
+                .set(&format!("{key}_{label}_curve_gap"), Json::Arr(curve_gap));
+            let final_nnz = path.points.last().map(|s| s.beta.len()).unwrap_or(0);
+            table.row(vec![
+                key.to_string(),
+                method.label(),
+                format!("{secs:.4}"),
+                format!("{worst_gap:.2e}"),
+                final_nnz.to_string(),
+            ]);
+        }
+    }
+    Ok(ShootoutResult { table, record: rec })
+}
+
+/// Write the record to [`RECORD_PATH`]; returns the path written.
+pub fn write_record(record: &Json) -> Result<&'static str, String> {
+    std::fs::write(RECORD_PATH, record.to_string() + "\n")
+        .map(|_| RECORD_PATH)
+        .map_err(|e| format!("write {RECORD_PATH}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_labels_are_json_flat_key_safe_and_unique() {
+        let mut labels: Vec<String> = METHODS.iter().map(|&m| key_label(m)).collect();
+        for l in &labels {
+            assert!(!l.contains(':'), "{l}");
+            assert!(!l.is_empty());
+        }
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), METHODS.len(), "duplicate method labels");
+    }
+
+    #[test]
+    fn quick_shootout_covers_the_full_grid_with_finite_numbers() {
+        let res = run(true).expect("quick shootout");
+        assert_eq!(res.record.get("bench").and_then(|v| v.as_str()), Some("methods"));
+        let scen_keys = [
+            "ls_dense",
+            "logit_dense",
+            "ls_sparse",
+            "logit_sparse",
+            "ls_ooc",
+            "logit_ooc",
+        ];
+        for scen in scen_keys {
+            for &m in METHODS {
+                let label = key_label(m);
+                let secs = res
+                    .record
+                    .get(&format!("{scen}_{label}_secs"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or_else(|| panic!("missing {scen}_{label}_secs"));
+                assert!(secs.is_finite() && secs >= 0.0, "{scen}/{label}: {secs}");
+                let gap = res
+                    .record
+                    .get(&format!("{scen}_{label}_gap"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or_else(|| panic!("missing {scen}_{label}_gap"));
+                assert!(gap.is_finite(), "{scen}/{label}: gap {gap}");
+                let curve = res
+                    .record
+                    .get(&format!("{scen}_{label}_curve_gap"))
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or_else(|| panic!("missing {scen}_{label}_curve_gap"));
+                assert_eq!(curve.len(), 3, "{scen}/{label}");
+            }
+        }
+        // the record round-trips through the parser the guard's json
+        // module mirrors
+        let back = Json::parse(&res.record.to_string()).expect("record parses");
+        assert_eq!(back, res.record);
+        // 6 scenarios × all methods in the table
+        // (header is not a row; Table::row count is rows only)
+        assert!(res.table.rows.len() == scen_keys.len() * METHODS.len());
+    }
+
+    #[test]
+    fn safe_methods_certify_on_the_quick_grid() {
+        // every SAFE method's worst path gap stays ≤ ε on the quick
+        // grid; homotopy (unsafe) is exempt — its honest gap may
+        // legitimately exceed ε, which is exactly what the record is
+        // for.
+        let res = run(true).expect("quick shootout");
+        for scen in ["ls_dense", "logit_dense", "ls_sparse"] {
+            for &m in METHODS {
+                if m == Method::Homotopy {
+                    continue;
+                }
+                let label = key_label(m);
+                let gap = res
+                    .record
+                    .get(&format!("{scen}_{label}_gap"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(f64::NAN);
+                assert!(gap <= EPS * 1.01, "{scen}/{label}: worst gap {gap}");
+            }
+        }
+    }
+}

@@ -9,8 +9,9 @@
 //! work. This module makes that the API surface:
 //!
 //! * [`Solver`] — `solve` / `solve_warm` / `path`, implemented by every
-//!   solve method in the repo (SAIF, dynamic screening, BLITZ, the
-//!   homotopy baseline, and — via problem adapters — the tree-fused and
+//!   solve method in the repo (SAIF, dynamic screening, GAP-safe
+//!   sphere/dome, the hybrid safe-strong rule, BLITZ, the homotopy
+//!   baseline, and — via problem adapters — the tree-fused and
 //!   group-LASSO solvers);
 //! * [`SolveSpec`] — the single knob set (ε, scan parallelism, epoch
 //!   shards, outer cap, trace) that replaces the per-method config
@@ -56,7 +57,8 @@ use crate::util::{tmax, Stopwatch};
 
 /// Which solve method a caller (coordinator request, CLI flag) wants.
 ///
-/// The feature-LASSO methods (`Saif`, `DynScreen`, `Blitz`, `Homotopy`)
+/// The feature-LASSO methods (`Saif`, `DynScreen`, `GapSafe`, `Hybrid`,
+/// `Blitz`, `Homotopy`)
 /// run on the request's problem as-is. The structured-penalty methods
 /// are served through problem adapters: `Fused` solves the tree fused
 /// LASSO over the chain tree 0−1−⋯−(p−1) (the classic 1-D fused LASSO;
@@ -67,6 +69,13 @@ use crate::util::{tmax, Stopwatch};
 pub enum Method {
     Saif,
     DynScreen,
+    /// GAP-safe sphere/dome screening (Fercoq et al.). `dome` selects
+    /// the dome test over the plain sphere; `dynamic` re-screens every
+    /// K epochs instead of once up front.
+    GapSafe { dome: bool, dynamic: bool },
+    /// Hybrid safe-strong rule (Zeng et al.): strong-rule proposal set,
+    /// full KKT post-check, violation-triggered re-solve.
+    Hybrid,
     Blitz,
     Homotopy,
     Fused,
@@ -74,12 +83,23 @@ pub enum Method {
 }
 
 impl Method {
-    /// Parse a CLI value: `saif`, `dyn`/`dynscreen`, `blitz`,
-    /// `homotopy`/`hom`, `fused`, `group` (size 8) or `group:K`.
+    /// Parse a CLI value: `saif`, `dyn`/`dynscreen`,
+    /// `gapsafe[:dome|:sphere|:static|:static-sphere]`, `hybrid`,
+    /// `blitz`, `homotopy`/`hom`, `fused`, `group` (size 8) or
+    /// `group:K`.
     pub fn parse(s: &str) -> Option<Method> {
         match s {
             "saif" => Some(Method::Saif),
             "dyn" | "dynscreen" => Some(Method::DynScreen),
+            "gapsafe" | "gapsafe:dome" => {
+                Some(Method::GapSafe { dome: true, dynamic: true })
+            }
+            "gapsafe:sphere" => Some(Method::GapSafe { dome: false, dynamic: true }),
+            "gapsafe:static" => Some(Method::GapSafe { dome: true, dynamic: false }),
+            "gapsafe:static-sphere" => {
+                Some(Method::GapSafe { dome: false, dynamic: false })
+            }
+            "hybrid" => Some(Method::Hybrid),
             "blitz" => Some(Method::Blitz),
             "homotopy" | "hom" => Some(Method::Homotopy),
             "fused" => Some(Method::Fused),
@@ -96,10 +116,35 @@ impl Method {
         match self {
             Method::Saif => "saif",
             Method::DynScreen => "dynscreen",
+            Method::GapSafe { .. } => "gapsafe",
+            Method::Hybrid => "hybrid",
             Method::Blitz => "blitz",
             Method::Homotopy => "homotopy",
             Method::Fused => "fused",
             Method::Group { .. } => "group",
+        }
+    }
+
+    /// Variant-qualified label for bench rows and tables — unlike
+    /// [`Method::name`] it distinguishes `gapsafe-static-sphere` from
+    /// `gapsafe` and carries the group size. Round-trips through
+    /// [`Method::parse`] for every variant except `Group`'s default.
+    pub fn label(&self) -> String {
+        match self {
+            Method::GapSafe { dome, dynamic } => {
+                let mut s = String::from("gapsafe");
+                if !*dynamic {
+                    s.push_str(":static");
+                    if !*dome {
+                        s.push_str("-sphere");
+                    }
+                } else if !*dome {
+                    s.push_str(":sphere");
+                }
+                s
+            }
+            Method::Group { size } => format!("group:{size}"),
+            m => m.name().to_string(),
         }
     }
 }
@@ -264,13 +309,27 @@ pub trait Solver {
 
 /// FULL-problem duality gap at a sparse β: margins → θ̂ → feasibility
 /// rescale over all p constraints → P(β) − D(θ). Used by methods whose
-/// inner loop does not certify globally (the homotopy baseline).
+/// inner loop does not certify globally (the homotopy baseline, the
+/// honest final certificates of DPP/GAP-safe/hybrid).
 pub fn global_gap(
     engine: &mut dyn Engine,
     prob: &Problem,
     beta: &[(usize, f64)],
     lam: f64,
 ) -> f64 {
+    global_gap_dual(engine, prob, beta, lam).0
+}
+
+/// [`global_gap`], also returning the globally feasible dual point the
+/// gap was certified at — callers that chain screening balls (DPP's
+/// sequential ball, GAP-safe's warm path) need the point, not just the
+/// number.
+pub fn global_gap_dual(
+    engine: &mut dyn Engine,
+    prob: &Problem,
+    beta: &[(usize, f64)],
+    lam: f64,
+) -> (f64, crate::model::DualPoint) {
     let u = prob.margins_sparse(beta);
     let th_hat = prob.theta_hat(&u, lam);
     let scores = engine.scores(prob, &th_hat);
@@ -278,7 +337,7 @@ pub fn global_gap(
     let dp = prob.project_dual(&th_hat, mx, lam);
     let l1: f64 = beta.iter().map(|(_, b)| b.abs()).sum();
     let primal = prob.primal_from_margins(&u, l1, lam);
-    (primal - dp.dual).max(0.0)
+    ((primal - dp.dual).max(0.0), dp)
 }
 
 /// Build a boxed solver for `method` over `engine`, configured from
@@ -311,6 +370,16 @@ pub fn make_with_tree<'e>(
             engine,
             crate::screening::dynamic::DynScreenConfig::from_spec(spec),
         )),
+        Method::GapSafe { dome, dynamic } => {
+            Box::new(crate::screening::gapsafe::GapSafe::new(
+                engine,
+                crate::screening::gapsafe::GapSafeConfig::from_spec(spec, dome, dynamic),
+            ))
+        }
+        Method::Hybrid => Box::new(crate::screening::hybrid::Hybrid::new(
+            engine,
+            crate::screening::hybrid::HybridConfig::from_spec(spec),
+        )),
         Method::Blitz => Box::new(crate::workingset::Blitz::new(
             engine,
             crate::workingset::BlitzConfig::from_spec(spec),
@@ -340,6 +409,24 @@ mod tests {
         assert_eq!(Method::parse("saif"), Some(Method::Saif));
         assert_eq!(Method::parse("dyn"), Some(Method::DynScreen));
         assert_eq!(Method::parse("dynscreen"), Some(Method::DynScreen));
+        assert_eq!(
+            Method::parse("gapsafe"),
+            Some(Method::GapSafe { dome: true, dynamic: true })
+        );
+        assert_eq!(Method::parse("gapsafe:dome"), Method::parse("gapsafe"));
+        assert_eq!(
+            Method::parse("gapsafe:sphere"),
+            Some(Method::GapSafe { dome: false, dynamic: true })
+        );
+        assert_eq!(
+            Method::parse("gapsafe:static"),
+            Some(Method::GapSafe { dome: true, dynamic: false })
+        );
+        assert_eq!(
+            Method::parse("gapsafe:static-sphere"),
+            Some(Method::GapSafe { dome: false, dynamic: false })
+        );
+        assert_eq!(Method::parse("hybrid"), Some(Method::Hybrid));
         assert_eq!(Method::parse("blitz"), Some(Method::Blitz));
         assert_eq!(Method::parse("homotopy"), Some(Method::Homotopy));
         assert_eq!(Method::parse("hom"), Some(Method::Homotopy));
@@ -349,6 +436,26 @@ mod tests {
         assert_eq!(Method::parse("group:0"), Some(Method::Group { size: 1 }));
         assert_eq!(Method::parse("nope"), None);
         assert_eq!(Method::parse("group:x"), None);
+    }
+
+    #[test]
+    fn label_roundtrips_through_parse() {
+        for method in [
+            Method::Saif,
+            Method::DynScreen,
+            Method::GapSafe { dome: true, dynamic: true },
+            Method::GapSafe { dome: false, dynamic: true },
+            Method::GapSafe { dome: true, dynamic: false },
+            Method::GapSafe { dome: false, dynamic: false },
+            Method::Hybrid,
+            Method::Blitz,
+            Method::Homotopy,
+            Method::Fused,
+            Method::Group { size: 5 },
+        ] {
+            assert_eq!(Method::parse(&method.label()), Some(method));
+            assert!(method.label().starts_with(method.name()));
+        }
     }
 
     #[test]
@@ -371,6 +478,11 @@ mod tests {
         for method in [
             Method::Saif,
             Method::DynScreen,
+            Method::GapSafe { dome: true, dynamic: true },
+            Method::GapSafe { dome: false, dynamic: true },
+            Method::GapSafe { dome: true, dynamic: false },
+            Method::GapSafe { dome: false, dynamic: false },
+            Method::Hybrid,
             Method::Blitz,
             Method::Homotopy,
             Method::Fused,

@@ -35,7 +35,7 @@ fn all_safe_methods_agree_ls() {
     let blitz_res =
         Blitz::new(&mut e3, BlitzConfig { eps, ..Default::default() }).solve(&prob, lam);
     let mut e4 = NativeEngine::new();
-    let (dpp_steps, _) = DppPath::new(&mut e4, eps).solve_path(&prob, &[lam]);
+    let (dpp_steps, _) = DppPath::new(&mut e4, eps).solve_path(&prob, &[lam]).unwrap();
 
     let s = support(&saif_res.beta);
     assert_eq!(s, support(&dyn_res.beta), "saif vs dynamic");

@@ -1,0 +1,230 @@
+//! Cross-method guarantees for the screening family behind the
+//! shootout harness:
+//!
+//! * the SAFETY property every safe rule shares — no safe method ever
+//!   discards a feature that is active at the optimum, so all of them
+//!   (SAIF, dynamic screening, DPP, GAP-safe sphere/dome ×
+//!   static/dynamic, hybrid safe-strong) land on the no-screening
+//!   reference support, across dense/sparse designs and both losses;
+//! * objective parity: GAP-safe and hybrid match SAIF's primal
+//!   objective to 1e-8 under the shared KKT oracle;
+//! * the worked counterexample where the plain (unsafe) strong rule —
+//!   and the homotopy baseline built on it — misses an active feature
+//!   that the hybrid rule's KKT post-check catches, with the honest
+//!   full-problem gap exposing the homotopy miss.
+
+mod common;
+
+use saif::cm::{solve_subproblem, NativeEngine};
+use saif::data::synth;
+use saif::linalg::Mat;
+use saif::model::{LossKind, Problem};
+use saif::screening::dpp::DppPath;
+use saif::screening::strong::strong_rule_keep;
+use saif::solver::{make, Method, SolveSpec, Solver};
+use saif::util::prop;
+
+/// Primal objective of a sparse β — the shared yardstick for parity
+/// checks (two optima of the same problem must agree in objective even
+/// when near-threshold supports wobble).
+fn objective(prob: &Problem, beta: &[(usize, f64)], lam: f64) -> f64 {
+    let u = prob.margins_sparse(beta);
+    let l1: f64 = beta.iter().map(|(_, b)| b.abs()).sum();
+    prob.primal_from_margins(&u, l1, lam)
+}
+
+/// No-screening reference: solve on the full feature set.
+fn reference_support(prob: &Problem, lam: f64, eps: f64) -> Vec<usize> {
+    let all: Vec<usize> = (0..prob.p()).collect();
+    let mut beta = vec![0.0; prob.p()];
+    let mut eng = NativeEngine::new();
+    solve_subproblem(&mut eng, prob, &all, &mut beta, lam, eps, 10, 500_000);
+    common::support_dense(&beta, common::SUPPORT_TOL)
+}
+
+/// Every safe rule in the factory, exercised through the same
+/// `Solver` entry point the coordinator and CLI use.
+const SAFE_METHODS: &[Method] = &[
+    Method::Saif,
+    Method::DynScreen,
+    Method::GapSafe { dome: true, dynamic: true },
+    Method::GapSafe { dome: false, dynamic: true },
+    Method::GapSafe { dome: true, dynamic: false },
+    Method::GapSafe { dome: false, dynamic: false },
+    Method::Hybrid,
+];
+
+#[test]
+fn every_safe_rule_keeps_the_reference_support() {
+    prop::check("safe rules share the exact support", 8, |rng| {
+        let n = 30 + rng.below(40);
+        let p = 80 + rng.below(160);
+        let sparse = rng.uniform() > 0.5;
+        let logistic = rng.uniform() > 0.5;
+        let prob = match (sparse, logistic) {
+            (false, false) => synth::synth_linear(n, p, rng.next_u64()).problem(),
+            (false, true) => synth::gisette_like(n, p, rng.next_u64()).problem(),
+            (true, false) => synth::synth_sparse(n, p, 0.05, rng.next_u64()).problem(),
+            (true, true) => {
+                let mut ds = synth::synth_sparse(n, p, 0.05, rng.next_u64());
+                for v in ds.y.iter_mut() {
+                    *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+                }
+                ds.loss = LossKind::Logistic;
+                ds.problem()
+            }
+        };
+        let lam = prob.lambda_max() * (0.05 + 0.3 * rng.uniform());
+        let eps = 1e-9;
+        let reference = reference_support(&prob, lam, eps);
+        for &method in SAFE_METHODS {
+            let spec = SolveSpec { eps, ..Default::default() };
+            let mut eng = NativeEngine::new();
+            let sol = make(method, &mut eng, &spec).solve(&prob, lam);
+            let sup = common::support_sparse(&sol.beta, common::SUPPORT_TOL);
+            if sup != reference {
+                return Err(format!(
+                    "{}: support {sup:?} differs from reference {reference:?} \
+                     (λ={lam:.3e}, {}{})",
+                    method.label(),
+                    if sparse { "sparse/" } else { "dense/" },
+                    if logistic { "logistic" } else { "ls" },
+                ));
+            }
+            common::check_gap(sol.gap, eps)?;
+            common::check_kkt(&prob, &sol.beta, lam, common::KKT_REL_TOL)
+                .map_err(|e| format!("{}: {e}", method.label()))?;
+        }
+        // DPP rides the path API and its ball is LS-specific
+        if prob.loss == LossKind::Squared {
+            let mut eng = NativeEngine::new();
+            let (steps, _) = DppPath::new(&mut eng, eps)
+                .solve_path(&prob, &[lam])
+                .map_err(|e| format!("dpp: {e}"))?;
+            let sup = common::support_sparse(&steps[0].beta, common::SUPPORT_TOL);
+            if sup != reference {
+                return Err(format!(
+                    "dpp: support {sup:?} differs from reference {reference:?}"
+                ));
+            }
+            common::check_kkt(&prob, &steps[0].beta, lam, common::KKT_REL_TOL)
+                .map_err(|e| format!("dpp: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gapsafe_and_hybrid_match_saif_objective_to_1e_8() {
+    let problems = [
+        ("ls", synth::synth_linear(50, 300, 71).problem()),
+        ("logistic", synth::gisette_like(60, 150, 72).problem()),
+    ];
+    for (name, prob) in &problems {
+        let lam = prob.lambda_max() * 0.1;
+        let eps = 1e-10;
+        let spec = SolveSpec { eps, ..Default::default() };
+        let mut eng = NativeEngine::new();
+        let saif_sol = make(Method::Saif, &mut eng, &spec).solve(prob, lam);
+        common::assert_certificate(prob, &saif_sol.beta, lam, saif_sol.gap, eps);
+        let obj_ref = objective(prob, &saif_sol.beta, lam);
+        for method in [
+            Method::GapSafe { dome: true, dynamic: true },
+            Method::GapSafe { dome: false, dynamic: true },
+            Method::GapSafe { dome: true, dynamic: false },
+            Method::GapSafe { dome: false, dynamic: false },
+            Method::Hybrid,
+        ] {
+            let mut eng2 = NativeEngine::new();
+            let sol = make(method, &mut eng2, &spec).solve(prob, lam);
+            common::assert_certificate(prob, &sol.beta, lam, sol.gap, eps);
+            let obj = objective(prob, &sol.beta, lam);
+            assert!(
+                (obj - obj_ref).abs() <= 1e-8 * obj_ref.abs().max(1.0),
+                "{name}/{}: objective {obj} vs saif {obj_ref}",
+                method.label()
+            );
+        }
+    }
+}
+
+/// The engineered miss: a 3×3 least-squares problem where at λ = 0.7
+/// feature 2 is active (|x₂ᵀθ̂(0.7)| ≈ 1.157 > 1) but the sequential
+/// strong rule stepping 1.0 → 0.7 excludes it (threshold 2λ − λ_prev =
+/// 0.4 against |x₂ᵀ(y − u*(1.0))| = 0.05). Construction: x₀, x₁ at
+/// angle cos⁻¹(0.9); y mostly along x₀+x₁ so both hit λ_max = 1.2
+/// together; x₂ built orthogonal-ish so its correlation is tiny at
+/// λ = 1.0 but blows past 1 at λ = 0.7.
+fn strong_rule_counterexample() -> Problem {
+    let a = 0.9_f64;
+    let s19 = (1.0 - a * a).sqrt();
+    let sum_nrm = (2.0 * (1.0 - a)).sqrt();
+    let m = [(1.0 - a) / sum_nrm, s19 / sum_nrm, 0.0];
+    let x2 = [-(a * m[0]), -(a * m[1]), -s19];
+    let slope = a * sum_nrm / (1.0 - a);
+    let u3 = -(slope * 1.0 - 0.05) / s19;
+    let y = vec![12.0 * (1.0 - a), 12.0 * s19, u3];
+    let cols = [[1.0, 0.0, 0.0], [-a, s19, 0.0], x2];
+    Problem::new(Mat::from_fn(3, 3, |i, j| cols[j][i]), y, LossKind::Squared)
+}
+
+#[test]
+fn strong_rule_misses_an_active_feature_that_hybrid_catches() {
+    let prob = strong_rule_counterexample();
+    let lam_max = prob.lambda_max();
+    assert!((lam_max - 1.2).abs() < 1e-9, "λ_max = {lam_max}");
+    let (lam_prev, lam) = (1.0, 0.7);
+    let eps = 1e-9;
+
+    // 1. feature 2 IS active at λ = 0.7 (the reference solve says so)
+    let reference = reference_support(&prob, lam, 1e-12);
+    assert!(reference.contains(&2), "reference support {reference:?}");
+
+    // 2. the strong rule stepping λ_prev = 1.0 → λ = 0.7 excludes it
+    let spec = SolveSpec { eps, ..Default::default() };
+    let mut eng = NativeEngine::new();
+    let at_prev = make(Method::Saif, &mut eng, &spec).solve(&prob, lam_prev);
+    let u_prev = prob.margins_sparse(&at_prev.beta);
+    let keep = strong_rule_keep(&prob, &u_prev, lam, lam_prev);
+    assert!(keep.contains(&0), "strong keep {keep:?}");
+    assert!(!keep.contains(&2), "strong rule should miss feature 2: {keep:?}");
+
+    // 3. the homotopy baseline (strong rule, no safe post-check) walks
+    //    the same path and misses — its honest FULL-problem gap exposes
+    //    the miss instead of certifying the crippled solution
+    let mut eng2 = NativeEngine::new();
+    let hom = make(Method::Homotopy, &mut eng2, &spec).path(&prob, &[lam_prev, lam]);
+    let hom_sup = common::support_sparse(&hom.points[1].beta, common::SUPPORT_TOL);
+    assert!(
+        !hom_sup.contains(&2),
+        "homotopy unexpectedly found feature 2: {hom_sup:?}"
+    );
+    assert!(
+        hom.points[1].gap > 1e-3,
+        "honest gap must expose the miss, got {}",
+        hom.points[1].gap
+    );
+
+    // 4. the hybrid rule takes the same strong proposal but KKT-checks
+    //    it against the full problem: the violation on feature 2
+    //    (|x₂ᵀθ̂| ≈ 1.65 > 1) triggers a re-solve that recovers it —
+    //    through the warm path session, so the strong reference pair is
+    //    really (u*(1.0), 1.0), not the trivial λ_max fallback
+    let mut eng3 = NativeEngine::new();
+    let hyb = make(Method::Hybrid, &mut eng3, &spec).path(&prob, &[lam_prev, lam]);
+    let sol = &hyb.points[1];
+    assert!(sol.warm_started, "second path point must be warm");
+    let hyb_sup = common::support_sparse(&sol.beta, common::SUPPORT_TOL);
+    assert!(hyb_sup.contains(&2), "hybrid must recover feature 2: {hyb_sup:?}");
+    common::assert_certificate(&prob, &sol.beta, lam, sol.gap, eps);
+    let violations = sol
+        .stats
+        .iter()
+        .find(|(k, _)| *k == "violations")
+        .map(|&(_, v)| v)
+        .unwrap_or(0.0);
+    assert!(
+        violations >= 1.0,
+        "the catch must be visible in the stats: violations = {violations}"
+    );
+}

@@ -1,12 +1,18 @@
 #!/usr/bin/env python3
-"""Bench-regression guard for BENCH_kernels.json (std-lib only).
+"""Bench-regression guard for BENCH_kernels.json / BENCH_methods.json
+(std-lib only).
 
 Usage: bench_guard.py [--require-real-baseline] <baseline.json> <fresh.json>
 
-Compares the freshly regenerated kernel-bench record against the
-committed baseline and exits non-zero when any guarded scan/epoch
-timing regressed by more than the tolerance (default 25%; override
-with BENCH_TOLERANCE, e.g. BENCH_TOLERANCE=0.5 for noisy machines).
+Compares a freshly regenerated bench record against the committed
+baseline and exits non-zero when any guarded timing regressed by more
+than the tolerance (default 25%; override with BENCH_TOLERANCE, e.g.
+BENCH_TOLERANCE=0.5 for noisy machines). Kernel records guard the
+fixed scan/epoch field list below; method-shootout records (marker
+"bench":"methods") guard every numeric `*_secs` row except the ooc
+scenarios and the `*_curve_secs` arrays — the schema is derived from
+the records themselves, so new scenario/method rows are guarded the
+moment the baseline carries real numbers for them.
 
 Null baselines (the pre-toolchain placeholder) and missing fields are
 skipped with a LOUD note — the guard only ever compares real numbers
@@ -36,6 +42,32 @@ GUARDED_US_FIELDS = [
     "epoch_sharded_us",
     "epoch_pooled_us",
 ]
+
+
+def is_methods_record(rec):
+    return isinstance(rec, dict) and rec.get("bench") == "methods"
+
+
+def methods_fields(baseline, fresh):
+    """Guarded field list for a method-shootout record: every numeric
+    `*_secs` key present in either record, minus the ooc scenarios
+    (disk timings on shared runners are too noisy to gate on) and the
+    `*_curve_secs` time-to-gap arrays (shape data, not a scalar to
+    gate)."""
+    keys = set()
+    for rec in (baseline, fresh):
+        if not isinstance(rec, dict):
+            continue
+        keys.update(
+            k
+            for k, v in rec.items()
+            if k.endswith("_secs")
+            and "ooc" not in k
+            and not k.endswith("_curve_secs")
+            and isinstance(v, (int, float))
+            and not isinstance(v, bool)
+        )
+    return sorted(keys)
 
 
 def load(path):
@@ -92,8 +124,18 @@ def main():
         print("bench guard: fresh record unreadable — did the bench run?", file=sys.stderr)
         return 1
 
+    if is_methods_record(baseline) or is_methods_record(fresh):
+        fields = methods_fields(baseline, fresh)
+        if not fields:
+            return placeholder_warning(
+                "methods record carries no numeric *_secs rows (placeholder baseline)",
+                require_real,
+            )
+    else:
+        fields = GUARDED_US_FIELDS
+
     regressions, compared, skipped = [], 0, []
-    for field in GUARDED_US_FIELDS:
+    for field in fields:
         base, new = baseline.get(field), fresh.get(field)
         if not isinstance(base, (int, float)) or not isinstance(new, (int, float)):
             skipped.append(field)

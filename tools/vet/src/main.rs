@@ -14,6 +14,10 @@
 //!   unordered iteration is how determinism dies silently.
 //! - `non-total-order` (L4): no `partial_cmp` and no `f64::max` / `f64::min`
 //!   folds on possibly-NaN data — use `total_cmp` (see `util::order`).
+//!   Unlike the other conditional lints this one applies in `#[cfg(test)]`
+//!   regions too: a NaN-lossy comparison in a test silently weakens the
+//!   assertion it feeds (sites where the lossy fold is intended carry a
+//!   reasoned waiver).
 //! - `unchecked-cast` (L5): no bare `as usize` / `as u64` casts in the
 //!   `.saifbin` header/offset decoders (`data/io.rs`, `linalg/ooc.rs`) —
 //!   use `try_from` or checked arithmetic on untrusted on-disk values.
@@ -504,7 +508,9 @@ fn scan_file(relpath: &str, src: &str, findings: &mut Vec<Finding>) {
                 "HashMap/HashSet in a result-producing module (use BTreeMap/BTreeSet or a sorted Vec)",
             );
         }
-        if !in_test && hit_order(code) {
+        // deliberately NOT gated on `in_test`: a NaN-lossy comparison in
+        // a test weakens the assertion it feeds just as silently
+        if hit_order(code) {
             report(
                 &mut waivers,
                 idx,

@@ -43,6 +43,8 @@ const EXPECTED_BAD: &[(&str, u32, &str)] = &[
     ("ordering.rs", 4, "non-total-order"),
     ("ordering.rs", 8, "non-total-order"),
     ("ordering.rs", 12, "non-total-order"),
+    // inside #[cfg(test)] — L4 is the one lint with no test exemption
+    ("ordering.rs", 21, "non-total-order"),
     ("panics.rs", 4, "lib-panic"),
     ("panics.rs", 8, "lib-panic"),
     ("panics.rs", 13, "lib-panic"),

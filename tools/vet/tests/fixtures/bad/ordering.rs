@@ -12,3 +12,12 @@ pub fn sorted(mut xs: Vec<f64>) -> Vec<f64> {
     xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
     xs
 }
+
+#[cfg(test)]
+mod tests {
+    // L4 is NOT test-exempt: a lossy fold here silently weakens the
+    // assertion it feeds.
+    pub fn worst_in_test(xs: &[f64]) -> f64 {
+        xs.iter().cloned().fold(0.0, f64::max)
+    }
+}
