@@ -2,7 +2,8 @@
 # Tier-1 gate (see ROADMAP.md): build, tests, formatting, lints.
 # Run from the repo root: ./ci.sh      (SKIP_LINT=1 ./ci.sh to gate on
 # build+tests only, e.g. while triaging fmt/clippy drift; SKIP_BENCH=1
-# to skip the BENCH_kernels.json / BENCH_methods.json regeneration.)
+# to skip the BENCH_kernels.json / BENCH_methods.json / BENCH_serve.json
+# regeneration; SKIP_SOAK=1 to skip the 30s serving soak.)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -24,6 +25,15 @@ cargo build --release
 SAIF_TEST_THREADS=1 cargo test -q
 SAIF_TEST_THREADS=4 SAIF_TEST_POOL=persistent cargo test -q
 SAIF_TEST_THREADS=4 SAIF_TEST_POOL=scoped cargo test -q
+
+# Serving soak: the loopback e2e suite (tests/serve.rs) already ran in
+# all three legs above; this leg additionally hammers the TCP server
+# with repeated bench cycles for ~30s to shake out slow leaks, pool
+# starvation, and shutdown races that a single pass cannot.
+if [[ "${SKIP_SOAK:-0}" != "1" ]]; then
+    SAIF_SOAK_SECS="${SAIF_SOAK_SECS:-30}" SAIF_TEST_THREADS=4 \
+        cargo test -q --release --test serve soak_runs_until_deadline -- --nocapture
+fi
 
 if [[ "${SKIP_LINT:-0}" != "1" ]]; then
     cargo fmt --check
@@ -69,6 +79,22 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     if command -v python3 >/dev/null 2>&1; then
         # shellcheck disable=SC2086  # intentional word-split of flags
         python3 ../tools/bench_guard.py $guard_flags "$baseline" ../BENCH_methods.json
+    else
+        echo "bench guard: python3 not found; skipping regression comparison" >&2
+    fi
+    rm -f "$baseline"
+
+    # Serving load benchmark (concurrent loopback clients → throughput,
+    # latency percentiles, cache counters). Guarded like the others:
+    # latency `*_us` rows must not rise, throughput `*_rps` rows must
+    # not fall, past BENCH_TOLERANCE of the COMMITTED BENCH_serve.json.
+    baseline="$(mktemp)"
+    git -C .. show HEAD:BENCH_serve.json > "$baseline" 2>/dev/null \
+        || cp ../BENCH_serve.json "$baseline" 2>/dev/null || true
+    cargo bench --bench serve -- --quick
+    if command -v python3 >/dev/null 2>&1; then
+        # shellcheck disable=SC2086  # intentional word-split of flags
+        python3 ../tools/bench_guard.py $guard_flags "$baseline" ../BENCH_serve.json
     else
         echo "bench guard: python3 not found; skipping regression comparison" >&2
     fi

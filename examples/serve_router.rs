@@ -49,6 +49,7 @@ fn main() {
                 lam: lam_max * (2e-2f64).powf(k as f64 / n_lambdas as f64),
                 method: Method::Saif,
                 tree: None,
+                warm: None,
                 spec: SolveSpec {
                     // f32 artifacts: gap floor ~1e-4 relative here
                     eps: if engine == EngineKind::Pjrt { 1e-2 } else { 1e-6 },

@@ -24,6 +24,7 @@ fn workload(scatter_keys: bool) -> Vec<SolveRequest> {
                 lam: lam_max * (1e-2f64).powf(k as f64 / 6.0),
                 method: Method::Saif,
                 tree: None,
+                warm: None,
                 spec: SolveSpec { eps: 1e-6, ..Default::default() },
             });
             id += 1;

@@ -1,0 +1,46 @@
+//! Loopback load benchmark for the TCP serving front-end (see
+//! `saif::serve::bench`): concurrent clients over real sockets drawing
+//! λ from a shared grid, so the cache, coalescing, and admission paths
+//! all get exercised. Records throughput (`*_rps`), latency
+//! percentiles (`*_us`), and the cache counters to BENCH_serve.json at
+//! the repo root, where `tools/bench_guard.py` gates them.
+//!
+//! Run with `cargo bench --bench serve`; pass `--quick` for the
+//! CI-sized run.
+
+use saif::serve::bench;
+
+fn main() {
+    let cfg = if std::env::args().any(|a| a == "--quick") {
+        bench::BenchServeConfig::quick()
+    } else {
+        bench::BenchServeConfig::default()
+    };
+    match bench::run(&cfg) {
+        Ok(res) => {
+            println!(
+                "served {} requests in {:.3}s ({:.1} req/s); ok={} busy={} errors={}",
+                res.requests, res.wall_secs, res.throughput_rps, res.ok, res.busy, res.errors
+            );
+            println!(
+                "latency p50={:.1}us p99={:.1}us; cache: exact={} certified={} near={} \
+                 miss={} coalesced={}",
+                res.p50_us,
+                res.p99_us,
+                res.exact_hits,
+                res.certified_hits,
+                res.near_refreshes,
+                res.misses,
+                res.coalesced
+            );
+            match bench::write_record(&bench::record(&res)) {
+                Ok(path) => println!("wrote {path}"),
+                Err(e) => eprintln!("could not write bench record: {e}"),
+            }
+        }
+        Err(e) => {
+            eprintln!("serve bench failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

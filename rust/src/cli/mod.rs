@@ -155,8 +155,10 @@ fn valid_flags(cmd: &str) -> Option<Vec<&'static str>> {
         "experiment" => v.extend_from_slice(&["id", "all", "out"]),
         "serve" => v.extend_from_slice(&[
             "workers", "datasets", "lambdas", "method", "engine", "eps", "threads",
-            "epoch-shards", "pool", "design",
+            "epoch-shards", "pool", "design", "listen", "max-conns", "high-watermark",
+            "retry-after-ms", "cache-capacity",
         ]),
+        "bench-serve" => v.extend_from_slice(&["quick"]),
         "cv" => {
             v.extend_from_slice(DATASET_FLAGS);
             v.extend_from_slice(&["folds", "lambdas", "workers"]);
@@ -190,6 +192,7 @@ pub fn main() {
                     "serve" => cmd_serve(&args),
                     "cv" => cmd_cv(&args),
                     "bench-methods" => cmd_bench_methods(&args),
+                    "bench-serve" => cmd_bench_serve(&args),
                     "list" => cmd_list(),
                     _ => unreachable!("valid_flags covers the dispatch set"),
                 }
@@ -222,6 +225,20 @@ USAGE:
                    [--threads serial|auto|N] [--epoch-shards auto|N]
                    [--pool persistent|scoped] [--design mem|ooc]
                                               coordinator demo workload
+  repro serve      --listen HOST:PORT [--workers N] [--datasets D]
+                   [--max-conns 32] [--high-watermark 64]
+                   [--retry-after-ms 50] [--cache-capacity 256]
+                   [--engine ...] [--threads ...] [--epoch-shards ...]
+                   [--pool ...]               TCP serving front-end:
+                                              binary protocol, λ-grid
+                                              result cache, request
+                                              coalescing, admission
+                                              control; runs until
+                                              stdin closes, then dumps
+                                              per-dataset stats
+  repro bench-serve [--quick]                 loopback serving load
+                                              generator →
+                                              BENCH_serve.json
   repro cv         --dataset <name> [--folds 5] [--lambdas 20]
                    [--workers 4]              k-fold CV λ selection
   repro bench-methods [--quick]               method shootout over the
@@ -646,6 +663,9 @@ fn cmd_experiment(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    if args.has("listen") {
+        return cmd_serve_listen(args);
+    }
     let workers = args.get_usize("workers", 4);
     let n_datasets = args.get_usize("datasets", 3);
     let n_lambdas = args.get_usize("lambdas", 8);
@@ -741,7 +761,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 let path = path.to_str().ok_or("non-UTF-8 temp path")?.to_string();
                 data::io::write_saifbin(&ds, &path)?;
                 spill_paths.push(path.clone());
-                let prob = c.register_saifbin(d as u64, &path)?;
+                let prob = c.register_saifbin(d as u64, &path).map_err(|e| e.to_string())?;
                 lam_maxes.push(prob.lambda_max());
             }
             // timed window: submit + drain, like run_batch
@@ -794,6 +814,7 @@ fn cmd_serve(args: &Args) -> i32 {
                     lam,
                     method,
                     tree: None,
+                    warm: None,
                     spec: SolveSpec { eps, ..Default::default() },
                 });
                 id += 1;
@@ -831,6 +852,138 @@ fn cmd_serve(args: &Args) -> i32 {
         return 1;
     }
     0
+}
+
+/// `serve --listen`: the TCP serving front-end. Preloads `--datasets`
+/// synthetic datasets under keys `0..D` (clients `register` more by
+/// path at runtime), serves until stdin closes, then drains in-flight
+/// work and dumps the per-dataset counters.
+fn cmd_serve_listen(args: &Args) -> i32 {
+    use crate::serve::{ServeConfig, ServeDataset, Server};
+
+    let addr = match args.get("listen") {
+        // bare `--listen` (no value) gets the conventional local port
+        Some("true") | None => "127.0.0.1:7878",
+        Some(a) => a,
+    };
+    let engine = match engine_arg(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let par = match parallelism_arg(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let shards = match epoch_shards_arg(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let pool = match pool_arg(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let cfg = ServeConfig {
+        workers: args.get_usize("workers", 2),
+        max_conns: args.get_usize("max-conns", 32),
+        high_watermark: args.get_usize("high-watermark", 64),
+        retry_after_ms: args.get_usize("retry-after-ms", 50) as u32,
+        cache_capacity: args.get_usize("cache-capacity", 256),
+        engine,
+        parallelism: par,
+        epoch_shards: shards,
+        pool_mode: pool,
+        ..ServeConfig::default()
+    };
+    let n_datasets = args.get_usize("datasets", 3);
+    let mut datasets = Vec::with_capacity(n_datasets);
+    for d in 0..n_datasets {
+        let ds = data::synth::synth_linear(100, 1000 + 200 * d, 1000 + d as u64);
+        let prob = Arc::new(ds.problem());
+        println!(
+            "dataset {d}: n={} p={} lambda_max={:.6e}",
+            prob.n(),
+            prob.p(),
+            prob.lambda_max()
+        );
+        datasets.push(ServeDataset {
+            key: d as u64,
+            name: format!("synth-{d}"),
+            problem: prob,
+            tree: None,
+        });
+    }
+    let server = match Server::start(cfg, datasets, addr) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("serving on {} ({n_datasets} datasets); close stdin to stop", server.local_addr());
+    // block until stdin EOF — the conventional "run under a supervisor,
+    // stop on pipe close" contract
+    let mut sink = String::new();
+    while std::io::stdin().read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+        sink.clear();
+    }
+    let stats = server.shutdown();
+    print!("{}", stats.render());
+    0
+}
+
+fn cmd_bench_serve(args: &Args) -> i32 {
+    use crate::serve::bench;
+
+    let cfg = if args.has("quick") {
+        bench::BenchServeConfig::quick()
+    } else {
+        bench::BenchServeConfig::default()
+    };
+    match bench::run(&cfg) {
+        Ok(res) => {
+            println!(
+                "served {} requests in {:.3}s ({:.1} req/s); ok={} busy={} errors={}",
+                res.requests, res.wall_secs, res.throughput_rps, res.ok, res.busy, res.errors
+            );
+            println!(
+                "latency p50={:.1}us p99={:.1}us; cache: exact={} certified={} near={} \
+                 miss={} coalesced={}",
+                res.p50_us,
+                res.p99_us,
+                res.exact_hits,
+                res.certified_hits,
+                res.near_refreshes,
+                res.misses,
+                res.coalesced
+            );
+            match bench::write_record(&bench::record(&res)) {
+                Ok(path) => {
+                    println!("wrote {path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_bench_methods(args: &Args) -> i32 {
@@ -929,12 +1082,24 @@ mod tests {
 
     #[test]
     fn every_subcommand_has_a_flag_table() {
-        for cmd in
-            ["solve", "path", "convert", "experiment", "serve", "cv", "bench-methods", "list"]
-        {
+        for cmd in [
+            "solve",
+            "path",
+            "convert",
+            "experiment",
+            "serve",
+            "cv",
+            "bench-methods",
+            "bench-serve",
+            "list",
+        ] {
             assert!(valid_flags(cmd).is_some(), "{cmd}");
         }
         assert!(valid_flags("bench-methods").unwrap().contains(&"quick"));
+        assert!(valid_flags("bench-serve").unwrap().contains(&"quick"));
+        for f in ["listen", "max-conns", "high-watermark", "retry-after-ms", "cache-capacity"] {
+            assert!(valid_flags("serve").unwrap().contains(&f), "{f}");
+        }
         assert!(valid_flags("frobnicate").is_none());
     }
 

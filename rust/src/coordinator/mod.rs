@@ -81,6 +81,13 @@ pub struct SolveRequest {
     /// 0−1−⋯−(p−1). The solve AND the response's safety certificate
     /// both use this tree.
     pub tree: Option<Arc<Vec<(usize, usize)>>>,
+    /// Explicit warm-start seed for this request (a sparse β from a
+    /// nearby — ideally larger — λ). `Some` overrides the worker's own
+    /// warm cache for the session this request starts; the serving
+    /// layer's λ-grid cache uses this to warm near-miss re-solves from
+    /// the nearest cached solution. `None` (every pre-serving caller)
+    /// keeps the worker-cache behavior exactly.
+    pub warm: Option<Arc<Vec<(usize, f64)>>>,
     pub spec: SolveSpec,
 }
 
@@ -117,6 +124,10 @@ pub enum CoordinatorError {
     /// problems inline via [`Coordinator::submit`] with an in-memory
     /// design (and a real [`SolveRequest::tree`]).
     FusedOnOutOfCore { key: u64 },
+    /// [`Coordinator::register_saifbin`] could not open/decode the
+    /// dataset file (IO error, bad magic, truncated header, …). The
+    /// coordinator is unchanged: nothing was registered under `key`.
+    RegisterFailed { key: u64, msg: String },
 }
 
 impl std::fmt::Display for CoordinatorError {
@@ -135,6 +146,9 @@ impl std::fmt::Display for CoordinatorError {
                      densify the design per worker slot; submit them inline with an \
                      in-memory design"
                 )
+            }
+            CoordinatorError::RegisterFailed { key, msg } => {
+                write!(f, "registering dataset {key} failed: {msg}")
             }
         }
     }
@@ -207,42 +221,48 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// A fresh, cold worker slot with this builder's engine defaults —
+    /// used for every slot at [`CoordinatorBuilder::build`] time and
+    /// again by [`Coordinator::recover_worker`] when a dead slot is
+    /// respawned in place.
+    fn new_slot(&self) -> Arc<WorkerSlot> {
+        let mut native = NativeEngine::with_parallelism(self.parallelism);
+        native.set_epoch_shards(self.epoch_shards);
+        native.set_pool_mode(self.pool);
+        let pjrt = match self.engine {
+            EngineKind::Pjrt => PjrtEngine::new().ok(),
+            EngineKind::Native => None,
+        };
+        Arc::new(WorkerSlot {
+            queue: Mutex::new(VecDeque::new()),
+            scheduled: AtomicBool::new(false),
+            dead: AtomicBool::new(false),
+            state: Mutex::new(WorkerState {
+                native,
+                pjrt,
+                warm: BTreeMap::new(),
+                defaults: (self.parallelism, self.epoch_shards, self.pool),
+            }),
+        })
+    }
+
     /// Set up the worker slots and return the running coordinator.
     pub fn build(self) -> Coordinator {
         // one pool thread per logical worker, so queue-drain tasks
         // never serialize behind each other
         pool::shared().ensure_threads(self.n_workers);
         let (res_tx, res_rx) = channel::<SolveResponse>();
-        let slots: Vec<Arc<WorkerSlot>> = (0..self.n_workers)
-            .map(|_| {
-                let mut native = NativeEngine::with_parallelism(self.parallelism);
-                native.set_epoch_shards(self.epoch_shards);
-                native.set_pool_mode(self.pool);
-                let pjrt = match self.engine {
-                    EngineKind::Pjrt => PjrtEngine::new().ok(),
-                    EngineKind::Native => None,
-                };
-                Arc::new(WorkerSlot {
-                    queue: Mutex::new(VecDeque::new()),
-                    scheduled: AtomicBool::new(false),
-                    dead: AtomicBool::new(false),
-                    state: Mutex::new(WorkerState {
-                        native,
-                        pjrt,
-                        warm: BTreeMap::new(),
-                        defaults: (self.parallelism, self.epoch_shards, self.pool),
-                    }),
-                })
-            })
-            .collect();
+        let slots: Vec<Arc<WorkerSlot>> = (0..self.n_workers).map(|_| self.new_slot()).collect();
+        let n_workers = self.n_workers;
         Coordinator {
             slots,
             res_tx,
             results: res_rx,
             affinity: BTreeMap::new(),
             next_worker: 0,
-            inflight: vec![0; self.n_workers],
+            inflight: vec![0; n_workers],
             registered: BTreeMap::new(),
+            config: self,
         }
     }
 
@@ -315,6 +335,18 @@ fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Seed equality for batching: two requests chain into one path session
+/// only when they carry the SAME seed allocation (or both none) —
+/// value comparison would let distinct-but-equal seeds merge, which is
+/// fine for the math but makes session grouping depend on β contents.
+fn same_warm(a: &Option<Arc<Vec<(usize, f64)>>>, b: &Option<Arc<Vec<(usize, f64)>>>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => Arc::ptr_eq(x, y),
+        _ => false,
+    }
+}
+
 /// The coordinator.
 pub struct Coordinator {
     slots: Vec<Arc<WorkerSlot>>,
@@ -330,6 +362,10 @@ pub struct Coordinator {
     /// ([`Coordinator::register_saifbin`]). Workers never contend on
     /// one handle's cache.
     registered: BTreeMap<u64, Vec<Arc<Problem>>>,
+    /// The builder this coordinator was built from — kept so
+    /// [`Coordinator::recover_worker`] can respawn a dead slot with the
+    /// same engine defaults.
+    config: CoordinatorBuilder,
 }
 
 impl Coordinator {
@@ -382,9 +418,16 @@ impl Coordinator {
     /// column norms are computed once — one streaming pass — and
     /// shared across the slots' problems. Returns the registered
     /// problem (slot 0's handle) so callers can read n/p/λ_max without
-    /// opening the file again.
-    pub fn register_saifbin(&mut self, key: u64, path: &str) -> Result<Arc<Problem>, String> {
-        let ds = crate::data::io::read_saifbin(path)?;
+    /// opening the file again. Failures surface as the typed
+    /// [`CoordinatorError::RegisterFailed`] — the same error enum
+    /// `submit`/`drain` use — and leave the coordinator unchanged.
+    pub fn register_saifbin(
+        &mut self,
+        key: u64,
+        path: &str,
+    ) -> Result<Arc<Problem>, CoordinatorError> {
+        let fail = |msg: String| CoordinatorError::RegisterFailed { key, msg };
+        let ds = crate::data::io::read_saifbin(path).map_err(&fail)?;
         let prob0 = Arc::new(ds.problem());
         let mat = match &prob0.x {
             crate::linalg::Design::OocCsc(m) => m.clone(),
@@ -395,12 +438,27 @@ impl Coordinator {
         for _ in 1..self.slots.len() {
             let mut p = (*prob0).clone();
             p.x = crate::linalg::Design::OocCsc(
-                mat.reopen().map_err(|e| format!("reopen {path}: {e}"))?,
+                mat.reopen().map_err(|e| fail(format!("reopen {path}: {e}")))?,
             );
             probs.push(Arc::new(p));
         }
         self.registered.insert(key, probs);
         Ok(prob0)
+    }
+
+    /// The affine worker slot's own problem handle for a dataset
+    /// registered via [`Coordinator::register_saifbin`], routing the
+    /// key (which claims its round-robin slot on first use). Callers
+    /// that build [`SolveRequest`]s themselves — the serving layer,
+    /// which needs per-request warm seeds `submit_registered` does not
+    /// carry — submit against this handle so every request for the key
+    /// shares one `Arc` and keeps the per-slot out-of-core isolation.
+    pub fn registered_problem(&mut self, key: u64) -> Option<Arc<Problem>> {
+        if !self.registered.contains_key(&key) {
+            return None;
+        }
+        let worker = self.route(key);
+        Some(self.registered[&key][worker].clone())
     }
 
     /// Submit a solve against a dataset registered by path
@@ -436,7 +494,16 @@ impl Coordinator {
         let problem = self.registered[&key][worker].clone();
         self.enqueue(
             worker,
-            SolveRequest { id, dataset_key: key, problem, lam, method, tree: None, spec },
+            SolveRequest {
+                id,
+                dataset_key: key,
+                problem,
+                lam,
+                method,
+                tree: None,
+                warm: None,
+                spec,
+            },
         )
     }
 
@@ -448,25 +515,91 @@ impl Coordinator {
         let total: usize = self.inflight.iter().sum();
         let mut out = Vec::with_capacity(total);
         while self.inflight.iter().sum::<usize>() > 0 {
-            match self.results.recv_timeout(Duration::from_millis(25)) {
-                Ok(r) => {
-                    self.inflight[r.worker] -= 1;
-                    out.push(r);
+            match self.recv_one(Duration::from_millis(25)) {
+                Ok(Some(r)) => out.push(r),
+                Ok(None) => {}
+                Err(CoordinatorError::WorkerDead { worker }) => {
+                    // drain's contract: the dead worker's owed work is
+                    // written off (recover_worker offers the
+                    // keep-serving alternative)
+                    self.inflight[worker] = 0;
+                    return Err(CoordinatorError::WorkerDead { worker });
                 }
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                    // a worker still owing responses whose task died
-                    // can never answer: surface it
-                    let dead = (0..self.inflight.len()).find(|&w| {
-                        self.inflight[w] > 0 && self.slots[w].dead.load(Ordering::Acquire)
-                    });
-                    if let Some(worker) = dead {
-                        self.inflight[worker] = 0;
-                        return Err(CoordinatorError::WorkerDead { worker });
-                    }
-                }
+                Err(e) => return Err(e),
             }
         }
         Ok(out)
+    }
+
+    /// Receive ONE completed response, waiting up to `timeout` — the
+    /// per-response pump the serving layer drives instead of the
+    /// all-or-nothing [`Coordinator::drain`]. `Ok(None)` means the wait
+    /// timed out with every worker healthy; a dead worker that still
+    /// owes responses surfaces as [`CoordinatorError::WorkerDead`]
+    /// *without* writing off its in-flight count, so the caller can
+    /// [`Coordinator::recover_worker`] and resubmit.
+    pub fn recv_one(&mut self, timeout: Duration) -> Result<Option<SolveResponse>, CoordinatorError> {
+        match self.results.recv_timeout(timeout) {
+            Ok(r) => {
+                // saturating: a recovered slot had its count reset, but
+                // responses its predecessor sent before dying may still
+                // arrive afterwards
+                self.inflight[r.worker] = self.inflight[r.worker].saturating_sub(1);
+                Ok(Some(r))
+            }
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                // a worker still owing responses whose task died can
+                // never answer: surface it
+                let dead = (0..self.inflight.len()).find(|&w| {
+                    self.inflight[w] > 0 && self.slots[w].dead.load(Ordering::Acquire)
+                });
+                match dead {
+                    Some(worker) => Err(CoordinatorError::WorkerDead { worker }),
+                    None => Ok(None),
+                }
+            }
+        }
+    }
+
+    /// The worker a dataset's requests are (or would be) routed to, if
+    /// an affinity exists. Read-only: unlike `route` this never claims
+    /// a round-robin slot.
+    pub fn worker_of(&self, dataset_key: u64) -> Option<usize> {
+        self.affinity.get(&dataset_key).copied()
+    }
+
+    /// Workers whose slot has died (a solve panicked) since the last
+    /// recovery. Candidates for [`Coordinator::recover_worker`].
+    pub fn dead_workers(&self) -> Vec<usize> {
+        (0..self.slots.len())
+            .filter(|&w| self.slots[w].dead.load(Ordering::Acquire))
+            .collect()
+    }
+
+    /// Respawn a dead (or live — it is simply replaced) worker slot in
+    /// place: fresh engines, cold warm cache, empty queue, same index —
+    /// so dataset affinities and registered per-slot problem handles
+    /// stay valid. Returns the requests that were still queued on the
+    /// old slot (accepted but never started); requests from the batch
+    /// that panicked are NOT among them — callers that must not drop
+    /// accepted work (the serving layer) track their own pending set
+    /// and resubmit from it. The in-flight count for the slot is reset.
+    pub fn recover_worker(&mut self, worker: usize) -> Vec<SolveRequest> {
+        let orphaned: Vec<SolveRequest> = lock(&self.slots[worker].queue).drain(..).collect();
+        self.slots[worker] = self.config.new_slot();
+        self.inflight[worker] = 0;
+        orphaned
+    }
+
+    /// Replace the response channel: every response from here on is
+    /// delivered to `tx` instead of the internal channel
+    /// [`Coordinator::drain`]/[`Coordinator::recv_one`] read. The
+    /// serving layer uses this to pump responses without holding its
+    /// coordinator lock across a blocking receive; after redirection,
+    /// `drain`/`recv_one` only ever time out — the caller owns delivery
+    /// AND the in-flight accounting that comes with it.
+    pub fn redirect_responses(&mut self, tx: Sender<SolveResponse>) {
+        self.res_tx = tx;
     }
 
     /// Wait for every live worker to go idle. There are no threads to
@@ -526,7 +659,7 @@ fn process_batch(
             .then(b.lam.total_cmp(&a.lam))
     });
     // each maximal run with the same (dataset, problem, method, tree,
-    // spec) is one λ-path session behind `Solver::path_warm`
+    // warm seed, spec) is one λ-path session behind `Solver::path_warm`
     let mut i = 0;
     while i < batch.len() {
         let mut j = i + 1;
@@ -535,6 +668,7 @@ fn process_batch(
             && Arc::ptr_eq(&batch[j].problem, &batch[i].problem)
             && batch[j].method == batch[i].method
             && batch[j].tree == batch[i].tree
+            && same_warm(&batch[j].warm, &batch[i].warm)
             && batch[j].spec == batch[i].spec
         {
             j += 1;
@@ -559,11 +693,16 @@ fn process_batch(
         engine.set_pool_mode(spec.pool.unwrap_or(pool_mode));
 
         let lams: Vec<f64> = chunk.iter().map(|r| r.lam).collect();
-        let seed = state
-            .warm
-            .get(&(first.dataset_key, first.method))
-            .filter(|(l, _)| *l >= first.lam)
-            .map(|(_, b)| b.clone());
+        // an explicit per-request seed (the serving cache's nearest
+        // cached β) wins over the worker's own warm cache
+        let seed = match &first.warm {
+            Some(w) => Some(w.to_vec()),
+            None => state
+                .warm
+                .get(&(first.dataset_key, first.method))
+                .filter(|(l, _)| *l >= first.lam)
+                .map(|(_, b)| b.clone()),
+        };
         let tree = first.tree.as_ref().map(|t| &t[..]);
         let mut solver = crate::solver::make_with_tree(first.method, engine, spec, tree);
         let path = solver.path_warm(prob, &lams, seed.as_deref());
@@ -614,6 +753,7 @@ mod tests {
                 lam: lam_max * f,
                 method: Method::Saif,
                 tree: None,
+                warm: None,
                 spec: SolveSpec { eps: 1e-8, ..Default::default() },
             })
             .collect()
@@ -739,6 +879,7 @@ mod tests {
                 lam: lam_max * 0.2,
                 method: Method::Saif,
                 tree: None,
+                warm: None,
                 spec: SolveSpec {
                     eps: 1e-9,
                     parallelism: Some(Parallelism::Fixed(2)),
@@ -754,6 +895,7 @@ mod tests {
                 lam: lam_max * 0.1,
                 method: Method::Saif,
                 tree: None,
+                warm: None,
                 spec: SolveSpec { eps: 1e-8, ..Default::default() },
             },
         ];
@@ -809,6 +951,7 @@ mod tests {
                 lam,
                 method: m,
                 tree: None,
+                warm: None,
                 spec: SolveSpec { eps: 1e-9, ..Default::default() },
             })
             .collect();
@@ -864,6 +1007,108 @@ mod tests {
             assert!(viol < 1e-3 * r.lam.max(1.0), "req {}: kkt {viol}", r.id);
         }
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn register_failure_is_a_typed_error() {
+        let mut c = Coordinator::builder().workers(2).build();
+        let err = c.register_saifbin(4, "/nonexistent/dir/nope.saifbin").unwrap_err();
+        match err {
+            CoordinatorError::RegisterFailed { key, msg } => {
+                assert_eq!(key, 4);
+                assert!(!msg.is_empty());
+            }
+            other => panic!("expected RegisterFailed, got {other:?}"),
+        }
+        // nothing was registered: submits against the key still fail
+        assert_eq!(
+            c.submit_registered(0, 4, 0.5, Method::Saif, SolveSpec::default()),
+            Err(CoordinatorError::UnknownDataset { key: 4 })
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn explicit_warm_seed_is_consumed() {
+        // a request carrying its own seed must warm-start even on a
+        // coordinator whose worker cache has never seen the dataset
+        let prob = Arc::new(synth::synth_linear(30, 120, 211).problem());
+        let lam_max = prob.lambda_max();
+        let mut c = Coordinator::builder().workers(1).build();
+        c.submit(SolveRequest {
+            id: 0,
+            dataset_key: 1,
+            problem: prob.clone(),
+            lam: lam_max * 0.2,
+            method: Method::Saif,
+            tree: None,
+            warm: None,
+            spec: SolveSpec { eps: 1e-8, ..Default::default() },
+        })
+        .unwrap();
+        let cold = c.drain().unwrap().pop().unwrap();
+        assert!(!cold.warm_started);
+        c.submit(SolveRequest {
+            id: 1,
+            dataset_key: 2, // fresh key: the worker cache has no seed
+            problem: prob.clone(),
+            lam: lam_max * 0.18,
+            method: Method::Saif,
+            tree: None,
+            warm: Some(Arc::new(cold.beta.clone())),
+            spec: SolveSpec { eps: 1e-8, ..Default::default() },
+        })
+        .unwrap();
+        let warmed = c.drain().unwrap().pop().unwrap();
+        assert!(warmed.warm_started, "explicit seed must be consumed");
+        assert!(warmed.gap <= 1e-8);
+        assert!(warmed.kkt_violation < 1e-3 * warmed.lam.max(1.0));
+        c.shutdown();
+    }
+
+    #[test]
+    fn dead_worker_recovers_in_place() {
+        // poison the only worker (group method asserts LS-only, the
+        // logistic problem panics it), then recover the slot and serve
+        // again on the SAME coordinator
+        let bad = Arc::new(synth::gisette_like(30, 40, 38).problem());
+        let good = Arc::new(synth::synth_linear(30, 100, 212).problem());
+        let lam_bad = bad.lambda_max() * 0.5;
+        let lam_good = good.lambda_max() * 0.2;
+        let mut c = Coordinator::builder().workers(1).build();
+        c.submit(SolveRequest {
+            id: 0,
+            dataset_key: 0,
+            problem: bad,
+            lam: lam_bad,
+            method: Method::Group { size: 4 }, // LS-only: panics on logistic
+            tree: None,
+            warm: None,
+            spec: SolveSpec::default(),
+        })
+        .unwrap();
+        assert_eq!(c.drain(), Err(CoordinatorError::WorkerDead { worker: 0 }));
+        assert_eq!(c.dead_workers(), vec![0]);
+        let orphaned = c.recover_worker(0);
+        assert!(orphaned.is_empty(), "nothing was left queued");
+        assert!(c.dead_workers().is_empty());
+        // the respawned slot serves; affinity still routes key 0 to it
+        assert_eq!(c.worker_of(0), Some(0));
+        c.submit(SolveRequest {
+            id: 1,
+            dataset_key: 0,
+            problem: good,
+            lam: lam_good,
+            method: Method::Saif,
+            tree: None,
+            warm: None,
+            spec: SolveSpec { eps: 1e-8, ..Default::default() },
+        })
+        .unwrap();
+        let r = c.drain().unwrap().pop().unwrap();
+        assert_eq!(r.id, 1);
+        assert!(r.gap <= 1e-8);
+        c.shutdown();
     }
 
     #[test]

@@ -88,6 +88,7 @@ pub fn cross_validate(
                 lam,
                 method: Method::Saif,
                 tree: None,
+                warm: None,
                 spec: SolveSpec { eps: 1e-6, ..Default::default() },
             });
             id += 1;

@@ -10,7 +10,8 @@
 //!   [`workingset`]), the fused-LASSO tree transform ([`fused`]), a
 //!   unified solver API with first-class λ-path sessions ([`solver`]),
 //!   a benchopt-style method shootout ([`shootout`]), and a
-//!   multi-tenant solve-request coordinator ([`coordinator`]).
+//!   multi-tenant solve-request coordinator ([`coordinator`]) with a
+//!   TCP serving front-end over it ([`serve`]).
 //! * **L2/L1 (python/compile, build time only)** — JAX graphs + Pallas
 //!   kernels for the numeric inner loop, AOT-lowered to HLO text.
 //! * **Runtime bridge** ([`runtime`]) — loads the AOT artifacts via the
@@ -47,6 +48,7 @@ pub mod model;
 pub mod runtime;
 pub mod saif;
 pub mod screening;
+pub mod serve;
 pub mod shootout;
 pub mod solver;
 pub mod util;

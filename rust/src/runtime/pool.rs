@@ -361,6 +361,78 @@ impl WorkerPool {
         }
         self.shared.work_cv.notify_one();
     }
+
+    /// [`WorkerPool::spawn`], returning a [`SpawnHandle`] the caller can
+    /// join on. The serving layer uses this for its accept loop and
+    /// response pump: fire-and-forget like `spawn` (panics stay
+    /// isolated), but shutdown can wait for the task to actually finish
+    /// and observe whether it panicked instead of racing a detached
+    /// thread.
+    pub fn spawn_guarded<F: FnOnce() + Send + 'static>(&self, f: F) -> SpawnHandle {
+        let inner = Arc::new(SpawnInner {
+            state: Mutex::new(SpawnState::Pending),
+            cv: Condvar::new(),
+        });
+        let guard = inner.clone();
+        self.spawn(move || {
+            // catch here (not just in worker_loop) so the outcome is
+            // recorded before waiters are woken
+            let r = catch_unwind(AssertUnwindSafe(f));
+            let mut st = guard.state.lock().unwrap_or_else(|e| e.into_inner());
+            *st = match r {
+                Ok(()) => SpawnState::Done,
+                Err(p) => SpawnState::Panicked(panic_msg(&*p)),
+            };
+            guard.cv.notify_all();
+        });
+        SpawnHandle { inner }
+    }
+}
+
+/// Completion state of a [`WorkerPool::spawn_guarded`] task.
+enum SpawnState {
+    Pending,
+    Done,
+    Panicked(String),
+}
+
+struct SpawnInner {
+    state: Mutex<SpawnState>,
+    cv: Condvar,
+}
+
+/// Join handle for a [`WorkerPool::spawn_guarded`] task. Dropping it
+/// detaches the task (exactly `spawn` semantics); joining blocks until
+/// the task ran and reports a panic as [`PoolError::TaskPanicked`].
+pub struct SpawnHandle {
+    inner: Arc<SpawnInner>,
+}
+
+impl SpawnHandle {
+    /// Whether the task has finished (successfully or by panic).
+    pub fn is_finished(&self) -> bool {
+        !matches!(
+            *self.inner.state.lock().unwrap_or_else(|e| e.into_inner()),
+            SpawnState::Pending
+        )
+    }
+
+    /// Block until the task finishes. A panicking task surfaces as
+    /// [`PoolError::TaskPanicked`] (task index 0 — guarded spawns are
+    /// single tasks).
+    pub fn join(&self) -> Result<(), PoolError> {
+        let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            match &*st {
+                SpawnState::Pending => {}
+                SpawnState::Done => return Ok(()),
+                SpawnState::Panicked(msg) => {
+                    return Err(PoolError::TaskPanicked { task: 0, msg: msg.clone() })
+                }
+            }
+            st = self.inner.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
 }
 
 impl Drop for WorkerPool {
@@ -511,6 +583,24 @@ mod tests {
         pool.spawn(move || tx.send(41usize).unwrap());
         // the panicking task did not kill the (only) worker
         assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(10)), Ok(41));
+    }
+
+    #[test]
+    fn spawn_guarded_joins_and_reports_panics() {
+        let pool = WorkerPool::new(2);
+        let h = pool.spawn_guarded(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        h.join().unwrap();
+        assert!(h.is_finished());
+        // joining again is idempotent
+        h.join().unwrap();
+        let bad = pool.spawn_guarded(|| panic!("guarded boom"));
+        assert_eq!(
+            bad.join().unwrap_err(),
+            PoolError::TaskPanicked { task: 0, msg: "guarded boom".into() }
+        );
+        // the worker that ran the panicking task is still alive
+        let ok = pool.spawn_guarded(|| ());
+        ok.join().unwrap();
     }
 
     #[test]

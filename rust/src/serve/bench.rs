@@ -1,0 +1,247 @@
+//! Loopback load generator for the serving front-end — the engine
+//! behind `repro bench-serve` and `cargo bench --bench serve`.
+//!
+//! Spawns a real [`super::Server`] on an ephemeral loopback port, then
+//! hammers it from `clients` concurrent TCP connections drawing λ from
+//! a shared log grid (repeats are the point: they exercise the cache
+//! and coalescing paths, not just cold solves). The record written to
+//! `BENCH_serve.json` carries throughput (`*_rps`, higher is better)
+//! and latency percentiles (`*_us`, lower is better) for
+//! `tools/bench_guard.py`'s serve mode, plus the cache/coalesce
+//! counters so a regression in hit rate is visible even when latency
+//! still passes.
+
+use std::sync::Arc;
+
+use crate::data::synth;
+use crate::runtime::pool;
+use crate::solver::Method;
+use crate::util::{Json, Rng, Stopwatch};
+
+use super::client::Client;
+use super::protocol::Response;
+use super::{ServeConfig, ServeDataset, Server};
+
+pub const RECORD_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+
+/// Load-generator knobs.
+#[derive(Debug, Clone)]
+pub struct BenchServeConfig {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// Datasets preloaded under keys `0..datasets`.
+    pub datasets: usize,
+    /// λ-grid points per dataset the clients draw from.
+    pub grid: usize,
+    pub workers: usize,
+    pub eps: f64,
+    pub seed: u64,
+}
+
+impl Default for BenchServeConfig {
+    fn default() -> BenchServeConfig {
+        BenchServeConfig {
+            clients: 8,
+            requests_per_client: 40,
+            datasets: 2,
+            grid: 16,
+            workers: 2,
+            eps: 1e-6,
+            seed: 42,
+        }
+    }
+}
+
+impl BenchServeConfig {
+    /// CI-sized run (the `--quick` bench flag).
+    pub fn quick() -> BenchServeConfig {
+        BenchServeConfig {
+            clients: 4,
+            requests_per_client: 12,
+            datasets: 2,
+            grid: 8,
+            ..BenchServeConfig::default()
+        }
+    }
+}
+
+/// Aggregated outcome of one load run.
+#[derive(Debug, Clone)]
+pub struct BenchServeResult {
+    pub requests: u64,
+    pub ok: u64,
+    pub busy: u64,
+    pub errors: u64,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub exact_hits: u64,
+    pub certified_hits: u64,
+    pub near_refreshes: u64,
+    pub misses: u64,
+    pub coalesced: u64,
+}
+
+/// Run the load generator. Clients run on scoped threads (NOT the
+/// shared pool — they must not starve the server's handlers).
+pub fn run(cfg: &BenchServeConfig) -> Result<BenchServeResult, String> {
+    let datasets: Vec<ServeDataset> = (0..cfg.datasets)
+        .map(|d| {
+            let ds = synth::synth_linear(80, 400 + 100 * d, cfg.seed + d as u64);
+            ServeDataset {
+                key: d as u64,
+                name: format!("synth-{d}"),
+                problem: Arc::new(ds.problem()),
+                tree: None,
+            }
+        })
+        .collect();
+
+    let serve_cfg = ServeConfig {
+        workers: cfg.workers,
+        max_conns: cfg.clients + 4,
+        // size admission so the bench measures throughput, not Busy
+        high_watermark: (cfg.clients * 2).max(8),
+        ..ServeConfig::default()
+    };
+    let server = Server::start(serve_cfg, datasets, "127.0.0.1:0")?;
+    let addr = server.local_addr();
+
+    // shared log grid: λ_max/10 down ~1.5 decades; repeats across
+    // clients are what exercises the cache + coalescing
+    let grids: Vec<Vec<f64>> = (0..cfg.datasets)
+        .map(|d| {
+            let ds = synth::synth_linear(80, 400 + 100 * d, cfg.seed + d as u64);
+            let lam_max = ds.problem().lambda_max();
+            (0..cfg.grid)
+                .map(|i| {
+                    let frac = i as f64 / (cfg.grid.max(2) - 1) as f64;
+                    0.1 * lam_max * 10f64.powf(-1.5 * frac)
+                })
+                .collect()
+        })
+        .collect();
+
+    let wall = Stopwatch::start();
+    let per_client = pool::scoped_run(cfg.clients, |ci| -> Result<ClientTally, String> {
+        let mut client = Client::connect(addr).map_err(|e| format!("client {ci}: {e}"))?;
+        let mut rng = Rng::new(cfg.seed ^ (0x9e37_79b9_7f4a_7c15u64.wrapping_mul(ci as u64 + 1)));
+        let mut tally = ClientTally::default();
+        for _ in 0..cfg.requests_per_client {
+            let d = rng.below(cfg.datasets);
+            let lam = grids[d][rng.below(cfg.grid)];
+            let sw = Stopwatch::start();
+            let rsp = client
+                .solve(d as u64, lam, cfg.eps, Method::Saif)
+                .map_err(|e| format!("client {ci}: {e}"))?;
+            tally.lat_secs.push(sw.secs());
+            match rsp {
+                Response::Solved(_) => tally.ok += 1,
+                Response::Busy { .. } => tally.busy += 1,
+                _ => tally.errors += 1,
+            }
+        }
+        Ok(tally)
+    })
+    .map_err(|e| format!("client threads: {e:?}"))?;
+    let wall_secs = wall.secs();
+
+    let stats = server.shutdown();
+
+    let mut lat = crate::metrics::LatencyStats::new();
+    let (mut ok, mut busy, mut errors) = (0u64, 0u64, 0u64);
+    for t in per_client {
+        let t = t?;
+        ok += t.ok;
+        busy += t.busy;
+        errors += t.errors;
+        for s in t.lat_secs {
+            lat.record_secs(s);
+        }
+    }
+    let requests = (cfg.clients * cfg.requests_per_client) as u64;
+    Ok(BenchServeResult {
+        requests,
+        ok,
+        busy,
+        errors,
+        wall_secs,
+        throughput_rps: if wall_secs > 0.0 { requests as f64 / wall_secs } else { 0.0 },
+        p50_us: lat.percentile_us(0.5),
+        p99_us: lat.percentile_us(0.99),
+        exact_hits: stats.total(|d| d.exact_hits),
+        certified_hits: stats.total(|d| d.certified_hits),
+        near_refreshes: stats.total(|d| d.near_refreshes),
+        misses: stats.total(|d| d.misses),
+        coalesced: stats.total(|d| d.coalesced),
+    })
+}
+
+#[derive(Debug, Default)]
+struct ClientTally {
+    lat_secs: Vec<f64>,
+    ok: u64,
+    busy: u64,
+    errors: u64,
+}
+
+/// The machine record `tools/bench_guard.py` diffs: `"bench":"serve"`
+/// is the mode marker; `*_rps` fields guard higher-is-better, `*_us`
+/// lower-is-better.
+pub fn record(res: &BenchServeResult) -> Json {
+    let mut obj = Json::obj();
+    obj.set("bench", Json::Str("serve".into()))
+        .set("requests", Json::Num(res.requests as f64))
+        .set("ok", Json::Num(res.ok as f64))
+        .set("busy", Json::Num(res.busy as f64))
+        .set("errors", Json::Num(res.errors as f64))
+        .set("wall_secs", Json::Num(res.wall_secs))
+        .set("throughput_rps", Json::Num(res.throughput_rps))
+        .set("p50_us", Json::Num(res.p50_us))
+        .set("p99_us", Json::Num(res.p99_us))
+        .set("exact_hits", Json::Num(res.exact_hits as f64))
+        .set("certified_hits", Json::Num(res.certified_hits as f64))
+        .set("near_refreshes", Json::Num(res.near_refreshes as f64))
+        .set("misses", Json::Num(res.misses as f64))
+        .set("coalesced", Json::Num(res.coalesced as f64));
+    obj
+}
+
+/// Write the record to [`RECORD_PATH`]; returns the path written.
+pub fn write_record(record: &Json) -> Result<&'static str, String> {
+    std::fs::write(RECORD_PATH, record.to_string() + "\n")
+        .map(|_| RECORD_PATH)
+        .map_err(|e| format!("write {RECORD_PATH}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_carries_the_serve_marker_and_guarded_fields() {
+        let res = BenchServeResult {
+            requests: 10,
+            ok: 9,
+            busy: 1,
+            errors: 0,
+            wall_secs: 0.5,
+            throughput_rps: 20.0,
+            p50_us: 800.0,
+            p99_us: 4000.0,
+            exact_hits: 3,
+            certified_hits: 1,
+            near_refreshes: 2,
+            misses: 3,
+            coalesced: 0,
+        };
+        let j = record(&res);
+        assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("serve"));
+        assert_eq!(j.get("throughput_rps").and_then(|v| v.as_f64()), Some(20.0));
+        assert_eq!(j.get("p99_us").and_then(|v| v.as_f64()), Some(4000.0));
+        // round-trips through the JSON parser (what bench_guard reads)
+        let parsed = Json::parse(&j.to_string()).expect("valid JSON");
+        assert_eq!(parsed.get("p50_us").and_then(|v| v.as_f64()), Some(800.0));
+    }
+}

@@ -1,0 +1,89 @@
+//! Blocking client for the serve protocol: one frame out, one frame
+//! back. Used by `repro bench-serve`, the e2e tests, and as the
+//! reference implementation for external clients.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::solver::Method;
+
+use super::protocol::{
+    self, decode_response, encode_request, Request, Response, HEADER_LEN,
+};
+
+/// A connected client. Requests are strictly serial per connection
+/// (the protocol has no frame ids); open more connections for
+/// concurrency — that is what the server's pool expects.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect: {e}"))?;
+        drop(stream.set_nodelay(true));
+        Ok(Client { stream })
+    }
+
+    /// Bound every read so a wedged server fails the client instead of
+    /// hanging it.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<(), String> {
+        self.stream.set_read_timeout(timeout).map_err(|e| format!("set_read_timeout: {e}"))
+    }
+
+    /// Send one request frame and read the reply.
+    pub fn request(&mut self, req: &Request) -> Result<Response, String> {
+        let (kind, payload) = encode_request(req);
+        let header = protocol::header(kind, payload.len()).map_err(|e| e.to_string())?;
+        self.stream.write_all(&header).map_err(|e| format!("write header: {e}"))?;
+        self.stream.write_all(&payload).map_err(|e| format!("write payload: {e}"))?;
+        self.stream.flush().map_err(|e| format!("flush: {e}"))?;
+        self.recv()
+    }
+
+    /// Write raw bytes with no framing — the fuzz tests use this to
+    /// hand the server malformed input.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.stream.write_all(bytes).map_err(|e| format!("write raw: {e}"))?;
+        self.stream.flush().map_err(|e| format!("flush: {e}"))
+    }
+
+    /// Read one response frame.
+    pub fn recv(&mut self) -> Result<Response, String> {
+        let mut hdr = [0u8; HEADER_LEN];
+        self.stream.read_exact(&mut hdr).map_err(|e| format!("read header: {e}"))?;
+        let (kind, len) = protocol::parse_header(&hdr).map_err(|e| e.to_string())?;
+        let mut payload = vec![0u8; len];
+        self.stream.read_exact(&mut payload).map_err(|e| format!("read payload: {e}"))?;
+        decode_response(kind, &payload).map_err(|e| e.to_string())
+    }
+
+    pub fn solve(
+        &mut self,
+        dataset: u64,
+        lam: f64,
+        eps: f64,
+        method: Method,
+    ) -> Result<Response, String> {
+        self.request(&Request::Solve { dataset, lam, eps, method })
+    }
+
+    pub fn path(
+        &mut self,
+        dataset: u64,
+        eps: f64,
+        method: Method,
+        lams: Vec<f64>,
+    ) -> Result<Response, String> {
+        self.request(&Request::Path { dataset, eps, method, lams })
+    }
+
+    pub fn register(&mut self, dataset: u64, path: &str) -> Result<Response, String> {
+        self.request(&Request::Register { dataset, path: path.to_string() })
+    }
+
+    pub fn stats(&mut self) -> Result<Response, String> {
+        self.request(&Request::Stats)
+    }
+}

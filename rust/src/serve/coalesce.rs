@@ -1,0 +1,237 @@
+//! Request coalescing: identical in-flight solves share one worker
+//! session.
+//!
+//! Identity is the full request tuple — (dataset, λ bits, method, spec
+//! fingerprint) — so two clients asking for byte-identical work attach
+//! to the same pending solve and both receive its (identical) result,
+//! while requests that differ in ANY knob never share. The
+//! [`Inflight`] table is the serving layer's source of truth for
+//! accepted-but-unanswered work: worker recovery resubmits from it, so
+//! an accepted request is never silently dropped.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::model::Problem;
+use crate::solver::Method;
+
+use super::protocol::CacheTag;
+
+/// Coalescing identity: (dataset, λ bits, method, spec fingerprint).
+pub type Key = (u64, u64, Method, u64);
+
+/// A one-shot completion slot a connection handler blocks on.
+#[derive(Debug, Default)]
+pub struct Waiter<T> {
+    slot: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+/// Poison-recovery lock (a panicking waiter thread must not wedge the
+/// server): the data is a plain Option, valid under any interleaving.
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl<T: Clone> Waiter<T> {
+    pub fn new() -> Arc<Waiter<T>> {
+        Arc::new(Waiter { slot: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    /// Deliver the result and wake every waiter. Idempotent — a late
+    /// duplicate delivery (post-recovery stale response) is ignored.
+    pub fn complete(&self, value: T) {
+        let mut slot = lock(&self.slot);
+        if slot.is_none() {
+            *slot = Some(value);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until completed or `timeout` elapses.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut slot = lock(&self.slot);
+        loop {
+            if let Some(v) = slot.as_ref() {
+                return Some(v.clone());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (s, _) = self
+                .cv
+                .wait_timeout(slot, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            slot = s;
+        }
+    }
+}
+
+/// One accepted, not-yet-answered solve and everyone waiting on it.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub key: Key,
+    pub dataset: u64,
+    pub lam: f64,
+    pub eps: f64,
+    pub method: Method,
+    /// The problem handle the request was submitted against (needed to
+    /// resubmit after worker recovery).
+    pub problem: Arc<Problem>,
+    pub tree: Option<Arc<Vec<(usize, usize)>>>,
+    /// Warm seed in flight (None after a cold fallback).
+    pub warm: Option<Arc<Vec<(usize, f64)>>>,
+    /// What cache outcome a successful reply will be tagged with.
+    pub cache_tag: CacheTag,
+    /// A near-miss whose warm re-solve came back uncertified has been
+    /// resubmitted cold (at most once).
+    pub cold_retried: bool,
+    /// Resubmitted after a worker death (at most once).
+    pub dead_retried: bool,
+    pub waiters: Vec<Arc<Waiter<T>>>,
+}
+
+/// The in-flight table: id → pending, plus the coalescing index.
+#[derive(Debug)]
+pub struct Inflight<T> {
+    next_id: u64,
+    by_key: BTreeMap<Key, u64>,
+    pending: BTreeMap<u64, Pending<T>>,
+}
+
+impl<T: Clone> Default for Inflight<T> {
+    fn default() -> Self {
+        Inflight::new()
+    }
+}
+
+impl<T: Clone> Inflight<T> {
+    pub fn new() -> Inflight<T> {
+        Inflight { next_id: 0, by_key: BTreeMap::new(), pending: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Attach to an identical in-flight solve, if one exists
+    /// (coalesced — no new work is submitted).
+    pub fn attach(&mut self, key: &Key) -> Option<Arc<Waiter<T>>> {
+        let id = *self.by_key.get(key)?;
+        let p = self.pending.get_mut(&id)?;
+        let w = Waiter::new();
+        p.waiters.push(w.clone());
+        Some(w)
+    }
+
+    /// Register a new pending solve; returns its id and the primary
+    /// waiter. The caller submits the actual work.
+    pub fn begin(&mut self, mut pending: Pending<T>) -> (u64, Arc<Waiter<T>>) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let w = Waiter::new();
+        pending.waiters.push(w.clone());
+        self.by_key.insert(pending.key, id);
+        self.pending.insert(id, pending);
+        (id, w)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Pending<T>> {
+        self.pending.get_mut(&id)
+    }
+
+    /// Remove a completed (or failed) pending entry. The caller
+    /// completes its waiters.
+    pub fn finish(&mut self, id: u64) -> Option<Pending<T>> {
+        let p = self.pending.remove(&id)?;
+        // only unlink the coalescing key if it still points at us (a
+        // fresh solve for the same key may have begun after a failure)
+        if self.by_key.get(&p.key) == Some(&id) {
+            self.by_key.remove(&p.key);
+        }
+        Some(p)
+    }
+
+    /// Ids of every pending solve, in insertion (id) order.
+    pub fn ids(&self) -> Vec<u64> {
+        self.pending.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn pending(key: Key) -> Pending<u32> {
+        let prob = Arc::new(synth::synth_linear(5, 4, 1).problem());
+        Pending {
+            key,
+            dataset: key.0,
+            lam: f64::from_bits(key.1),
+            eps: 1e-6,
+            method: key.2,
+            problem: prob,
+            tree: None,
+            warm: None,
+            cache_tag: CacheTag::Miss,
+            cold_retried: false,
+            dead_retried: false,
+            waiters: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn coalescing_shares_one_pending() {
+        let mut inf: Inflight<u32> = Inflight::new();
+        let key: Key = (1, 0.5f64.to_bits(), Method::Saif, 99);
+        assert!(inf.attach(&key).is_none());
+        let (id, w1) = inf.begin(pending(key));
+        let w2 = inf.attach(&key).expect("identical request coalesces");
+        // a different λ does NOT coalesce
+        let other: Key = (1, 0.25f64.to_bits(), Method::Saif, 99);
+        assert!(inf.attach(&other).is_none());
+        assert_eq!(inf.len(), 1);
+
+        let p = inf.finish(id).unwrap();
+        assert_eq!(p.waiters.len(), 2);
+        for w in &p.waiters {
+            w.complete(7);
+        }
+        assert_eq!(w1.wait_timeout(Duration::from_secs(1)), Some(7));
+        assert_eq!(w2.wait_timeout(Duration::from_secs(1)), Some(7));
+        assert!(inf.is_empty());
+        assert!(inf.attach(&key).is_none());
+    }
+
+    #[test]
+    fn waiter_timeout_and_idempotent_complete() {
+        let w: Arc<Waiter<u32>> = Waiter::new();
+        assert_eq!(w.wait_timeout(Duration::from_millis(10)), None);
+        w.complete(1);
+        w.complete(2); // late duplicate is ignored
+        assert_eq!(w.wait_timeout(Duration::from_millis(10)), Some(1));
+    }
+
+    #[test]
+    fn finish_unlinks_only_its_own_key() {
+        let mut inf: Inflight<u32> = Inflight::new();
+        let key: Key = (2, 1.0f64.to_bits(), Method::Blitz, 0);
+        let (id1, _w1) = inf.begin(pending(key));
+        // same key begins again (e.g. after the first failed and was
+        // re-begun while id1's finish raced): by_key points at id2
+        let (id2, _w2) = inf.begin(pending(key));
+        assert!(inf.finish(id1).is_some());
+        // id2's coalescing link survives id1's finish
+        assert!(inf.attach(&key).is_some());
+        assert!(inf.finish(id2).is_some());
+        assert!(inf.attach(&key).is_none());
+    }
+}

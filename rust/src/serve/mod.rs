@@ -1,0 +1,853 @@
+//! `repro serve --listen` — a std-only TCP serving front-end over the
+//! multi-tenant [`crate::coordinator`].
+//!
+//! Layers (one module each):
+//!
+//! * [`protocol`] — length-prefixed binary frames with checked decodes
+//!   (the peer is untrusted; a malformed frame gets a typed error
+//!   reply, never a panic).
+//! * [`cache`] — the per-dataset λ-grid result cache. Exact hits are
+//!   bitwise replays of a stored solve; near-misses warm-start a fresh
+//!   solve that is re-certified on the FULL problem before the reply.
+//!   **The server never serves an uncertified solution** (see
+//!   docs/INVARIANTS.md).
+//! * [`coalesce`] — identical in-flight requests (same dataset, λ
+//!   bits, method, spec fingerprint) share one worker solve; the
+//!   in-flight table is also the source of truth for
+//!   accepted-but-unanswered work.
+//! * [`stats`] — per-dataset counters + latency percentiles, served by
+//!   the `stats` request and dumped at graceful shutdown.
+//! * [`client`] / [`bench`] — a blocking client and the loopback load
+//!   generator behind `repro bench-serve`.
+//!
+//! Concurrency model: the accept loop, the response pump, and every
+//! connection handler run as [`crate::runtime::pool`] tasks — no bare
+//! `thread::spawn` anywhere (vet L1). Admission control is a bounded
+//! per-dataset pending queue: past the high-watermark a request is
+//! answered `Busy{retry_after_ms}` instead of queued, so a hot dataset
+//! cannot wedge the server. A worker slot that dies mid-serve (a
+//! panicking solve) is recovered in place by the pump: its orphaned
+//! queue is discarded, every pending request routed to it is
+//! resubmitted exactly once from the in-flight table (then failed with
+//! a typed error, never silently dropped), and the slot respawns cold.
+//!
+//! Lock order: `route` → `coord` → `stats` (each may also be taken
+//! alone). The pump owns the response `Receiver` (via
+//! [`Coordinator::redirect_responses`]), so blocking receives never
+//! hold any lock.
+
+pub mod bench;
+pub mod cache;
+pub mod client;
+pub mod coalesce;
+pub mod protocol;
+pub mod stats;
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::cm::{EpochShards, PoolMode};
+use crate::coordinator::{Coordinator, EngineKind, SolveRequest, SolveResponse};
+use crate::linalg::Parallelism;
+use crate::model::Problem;
+use crate::runtime::pool::{self, SpawnHandle};
+use crate::solver::{Method, SolveSpec};
+use crate::util::Stopwatch;
+
+use cache::{LambdaCache, Lookup};
+use coalesce::{Inflight, Key, Pending, Waiter};
+use protocol::{code, CacheTag, ProtoError, Request, Response, SolvedPoint, HEADER_LEN};
+use stats::ServeStats;
+
+/// How long a connection may stall mid-frame before it is dropped.
+const FRAME_STALL_SECS: f64 = 10.0;
+/// Read-poll granularity (how often idle handlers check shutdown).
+const READ_POLL: Duration = Duration::from_millis(50);
+/// Response-pump receive timeout (dead-worker check cadence).
+const PUMP_TICK: Duration = Duration::from_millis(25);
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Coordinator worker slots.
+    pub workers: usize,
+    /// Accept-time connection cap; further connections get one `Busy`
+    /// frame and are closed.
+    pub max_conns: usize,
+    /// Per-dataset pending-solve bound: at this depth new solves are
+    /// answered `Busy` instead of queued.
+    pub high_watermark: usize,
+    /// Suggested client backoff carried in `Busy` replies.
+    pub retry_after_ms: u32,
+    /// λ-grid cache entries per dataset.
+    pub cache_capacity: usize,
+    /// Cache quantization (cells per e-fold of λ).
+    pub cache_cells_per_efold: f64,
+    /// How far (in cells) a near-miss may reach for a warm seed.
+    pub cache_near_radius: i64,
+    /// Server-side bound on one solve (a waiter past this gets a
+    /// `Timeout` error; the solve itself is not cancelled).
+    pub solve_timeout: Duration,
+    pub engine: EngineKind,
+    pub parallelism: Parallelism,
+    pub epoch_shards: EpochShards,
+    pub pool_mode: PoolMode,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: 2,
+            max_conns: 32,
+            high_watermark: 64,
+            retry_after_ms: 50,
+            cache_capacity: 256,
+            cache_cells_per_efold: 256.0,
+            cache_near_radius: 64,
+            solve_timeout: Duration::from_secs(120),
+            engine: EngineKind::Native,
+            parallelism: Parallelism::Serial,
+            epoch_shards: EpochShards::FollowParallelism,
+            pool_mode: PoolMode::Persistent,
+        }
+    }
+}
+
+/// A dataset preloaded at server start (`register` adds more at
+/// runtime, out-of-core).
+#[derive(Debug, Clone)]
+pub struct ServeDataset {
+    pub key: u64,
+    pub name: String,
+    pub problem: Arc<Problem>,
+    /// Feature tree for [`Method::Fused`] requests.
+    pub tree: Option<Arc<Vec<(usize, usize)>>>,
+}
+
+/// A served, certified solution (what waiters receive).
+#[derive(Debug, Clone)]
+pub struct Served {
+    pub lam: f64,
+    pub gap: f64,
+    pub kkt: f64,
+    pub secs: f64,
+    pub warm_started: bool,
+    pub cache: CacheTag,
+    pub beta: Arc<Vec<(usize, f64)>>,
+}
+
+/// Result delivered through a [`Waiter`]: a certified solution or a
+/// protocol error (code, message).
+type ServeResult = Result<Served, (u16, String)>;
+
+#[derive(Debug, Clone)]
+struct DatasetEntry {
+    problem: Arc<Problem>,
+    tree: Option<Arc<Vec<(usize, usize)>>>,
+    /// Out-of-core designs reject [`Method::Fused`] (its tree
+    /// transform would densify the full design in RAM).
+    ooc: bool,
+}
+
+/// Routing state: datasets, the in-flight table, caches, admission
+/// depths. One lock, never held across a blocking receive or a solve.
+struct Route {
+    datasets: BTreeMap<u64, DatasetEntry>,
+    inflight: Inflight<ServeResult>,
+    caches: BTreeMap<u64, LambdaCache>,
+    /// Per-dataset count of pending (non-coalesced) solves.
+    depth: BTreeMap<u64, usize>,
+}
+
+struct Inner {
+    cfg: ServeConfig,
+    shutdown: AtomicBool,
+    pump_stop: AtomicBool,
+    active_conns: AtomicUsize,
+    coord: Mutex<Coordinator>,
+    route: Mutex<Route>,
+    stats: Mutex<ServeStats>,
+}
+
+/// Poison-recovery lock: serving state stays valid under any
+/// interleaving, and a panicking handler must not wedge the server.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The serving front-end. Bind with [`Server::start`]; stop with
+/// [`Server::shutdown`], which drains in-flight work and returns the
+/// final counters.
+pub struct Server {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    accept: SpawnHandle,
+    pump: SpawnHandle,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `datasets`.
+    pub fn start(
+        cfg: ServeConfig,
+        datasets: Vec<ServeDataset>,
+        addr: &str,
+    ) -> Result<Server, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+
+        let mut coord = Coordinator::builder()
+            .workers(cfg.workers)
+            .engine(cfg.engine)
+            .parallelism(cfg.parallelism)
+            .epoch_shards(cfg.epoch_shards)
+            .pool(cfg.pool_mode)
+            .build();
+        let (tx, rx) = channel::<SolveResponse>();
+        coord.redirect_responses(tx);
+
+        let mut entries = BTreeMap::new();
+        for d in datasets {
+            let ooc = d.problem.x.is_ooc();
+            entries.insert(d.key, DatasetEntry { problem: d.problem, tree: d.tree, ooc });
+        }
+
+        // every connection handler may block on a waiter while the
+        // accept loop, the pump, and the worker tasks all need their
+        // own pool thread — size the shared pool so solves can always
+        // make progress even with every connection slot occupied
+        pool::shared().ensure_threads(cfg.workers + cfg.max_conns + 4);
+
+        let inner = Arc::new(Inner {
+            cfg,
+            shutdown: AtomicBool::new(false),
+            pump_stop: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            coord: Mutex::new(coord),
+            route: Mutex::new(Route {
+                datasets: entries,
+                inflight: Inflight::new(),
+                caches: BTreeMap::new(),
+                depth: BTreeMap::new(),
+            }),
+            stats: Mutex::new(ServeStats::new()),
+        });
+
+        let accept = {
+            let inner = inner.clone();
+            pool::shared().spawn_guarded(move || accept_loop(&inner, listener))
+        };
+        let pump = {
+            let inner = inner.clone();
+            pool::shared().spawn_guarded(move || pump_loop(&inner, rx))
+        };
+        Ok(Server { inner, addr, accept, pump })
+    }
+
+    /// The bound address (real port for `"…:0"` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop accepting, let in-flight requests
+    /// complete, stop the pump, return the final counters.
+    pub fn shutdown(self) -> ServeStats {
+        self.inner.shutdown.store(true, Ordering::Release);
+        // wake the blocking accept loop with a throwaway connection
+        drop(TcpStream::connect(self.addr));
+        drop(self.accept.join());
+
+        let deadline = std::time::Instant::now()
+            + self.inner.cfg.solve_timeout
+            + Duration::from_secs(5);
+        while self.inner.active_conns.load(Ordering::Acquire) > 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        while !lock(&self.inner.route).inflight.is_empty()
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.inner.pump_stop.store(true, Ordering::Release);
+        drop(self.pump.join());
+        lock(&self.inner.stats).clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept loop + connection handling
+// ---------------------------------------------------------------------------
+
+/// Decrements the connection gauge even if a handler panics (the pool
+/// isolates the panic; the gauge must not leak).
+struct ConnGuard<'a>(&'a Inner);
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.0.active_conns.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn accept_loop(inner: &Arc<Inner>, listener: TcpListener) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(x) => x,
+            Err(_) => {
+                if inner.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if inner.shutdown.load(Ordering::Acquire) {
+            let mut s = stream;
+            drop(write_response(
+                &mut s,
+                &Response::Error { code: code::SHUTTING_DOWN, msg: "server shutting down".into() },
+            ));
+            return;
+        }
+        if inner.active_conns.load(Ordering::Acquire) >= inner.cfg.max_conns {
+            lock(&inner.stats).conns_rejected += 1;
+            let mut s = stream;
+            drop(write_response(
+                &mut s,
+                &Response::Busy { retry_after_ms: inner.cfg.retry_after_ms },
+            ));
+            continue;
+        }
+        inner.active_conns.fetch_add(1, Ordering::AcqRel);
+        lock(&inner.stats).connections += 1;
+        let inner2 = inner.clone();
+        pool::shared().spawn(move || {
+            let _guard = ConnGuard(&inner2);
+            connection(&inner2, stream);
+        });
+    }
+}
+
+enum ReadOutcome {
+    Full,
+    /// Clean EOF at a frame boundary.
+    CleanEof,
+    /// Server is shutting down and the connection is idle.
+    Shutdown,
+    /// Truncated frame, mid-frame stall, or I/O error.
+    Failed,
+}
+
+/// Fill `buf` from the stream, polling every [`READ_POLL`] so idle
+/// connections notice shutdown. `idle_ok` marks a frame boundary:
+/// there, EOF is clean and waiting is unbounded; mid-frame, a stall
+/// longer than [`FRAME_STALL_SECS`] fails the connection.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], inner: &Inner, idle_ok: bool) -> ReadOutcome {
+    let mut got = 0usize;
+    let mut stall = Stopwatch::start();
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 && idle_ok { ReadOutcome::CleanEof } else { ReadOutcome::Failed }
+            }
+            Ok(n) => {
+                got += n;
+                stall.restart();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if got == 0 && idle_ok {
+                    if inner.shutdown.load(Ordering::Acquire) {
+                        return ReadOutcome::Shutdown;
+                    }
+                    stall.restart(); // idle at a boundary is not a stall
+                } else if stall.secs() > FRAME_STALL_SECS {
+                    return ReadOutcome::Failed;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Failed,
+        }
+    }
+    ReadOutcome::Full
+}
+
+/// Serialize and send one response frame.
+fn write_response(stream: &mut TcpStream, rsp: &Response) -> std::io::Result<()> {
+    let (kind, payload) = protocol::encode_response(rsp);
+    let header = protocol::header(kind, payload.len())
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.msg))?;
+    stream.write_all(&header)?;
+    stream.write_all(&payload)?;
+    stream.flush()
+}
+
+/// Per-connection loop: read a frame, dispatch, reply. Malformed
+/// payloads get an error reply on an intact connection (the frame was
+/// fully consumed); header-level corruption closes it (framing is no
+/// longer trustworthy).
+fn connection(inner: &Inner, mut stream: TcpStream) {
+    drop(stream.set_nodelay(true));
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    loop {
+        let mut hdr = [0u8; HEADER_LEN];
+        match read_full(&mut stream, &mut hdr, inner, true) {
+            ReadOutcome::Full => {}
+            ReadOutcome::CleanEof | ReadOutcome::Shutdown => return,
+            ReadOutcome::Failed => {
+                lock(&inner.stats).protocol_errors += 1;
+                return;
+            }
+        }
+        let (kind, len) = match protocol::parse_header(&hdr) {
+            Ok(x) => x,
+            Err(e) => {
+                lock(&inner.stats).protocol_errors += 1;
+                drop(write_response(&mut stream, &proto_error(e)));
+                return;
+            }
+        };
+        let mut payload = vec![0u8; len];
+        match read_full(&mut stream, &mut payload, inner, false) {
+            ReadOutcome::Full => {}
+            _ => {
+                lock(&inner.stats).protocol_errors += 1;
+                return;
+            }
+        }
+        lock(&inner.stats).frames += 1;
+        let reply = match protocol::decode_request(kind, &payload) {
+            Ok(req) => handle_request(inner, req),
+            Err(e) => {
+                lock(&inner.stats).protocol_errors += 1;
+                proto_error(e)
+            }
+        };
+        if write_response(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+fn proto_error(e: ProtoError) -> Response {
+    Response::Error { code: e.code, msg: e.msg }
+}
+
+// ---------------------------------------------------------------------------
+// Request handling
+// ---------------------------------------------------------------------------
+
+/// What one solve attempt resolved to (before stats/encoding).
+enum SolveOutcome {
+    Served(Served),
+    Busy,
+    Failed(u16, String),
+}
+
+fn handle_request(inner: &Inner, req: Request) -> Response {
+    match req {
+        Request::Solve { dataset, lam, eps, method } => {
+            match solve_one(inner, dataset, lam, eps, method) {
+                SolveOutcome::Served(s) => Response::Solved(to_point(&s)),
+                SolveOutcome::Busy => {
+                    Response::Busy { retry_after_ms: inner.cfg.retry_after_ms }
+                }
+                SolveOutcome::Failed(c, m) => Response::Error { code: c, msg: m },
+            }
+        }
+        Request::Path { dataset, eps, method, lams } => {
+            let mut pts = Vec::with_capacity(lams.len());
+            for lam in lams {
+                match solve_one(inner, dataset, lam, eps, method) {
+                    SolveOutcome::Served(s) => pts.push(to_point(&s)),
+                    SolveOutcome::Busy => {
+                        return Response::Busy { retry_after_ms: inner.cfg.retry_after_ms }
+                    }
+                    SolveOutcome::Failed(c, m) => return Response::Error { code: c, msg: m },
+                }
+            }
+            Response::Path(pts)
+        }
+        Request::Register { dataset, path } => handle_register(inner, dataset, &path),
+        Request::Stats => Response::Stats(lock(&inner.stats).to_json().to_string()),
+    }
+}
+
+fn to_point(s: &Served) -> SolvedPoint {
+    SolvedPoint {
+        lam: s.lam,
+        gap: s.gap,
+        kkt: s.kkt,
+        secs: s.secs,
+        warm_started: s.warm_started,
+        cache: s.cache,
+        beta: s.beta.to_vec(),
+    }
+}
+
+/// Register a `.saifbin` file (server-local path) under a key, making
+/// it servable out-of-core. Lock discipline: `coord` alone first (the
+/// registration + affine handle), then `route` alone — never nested
+/// the wrong way around.
+fn handle_register(inner: &Inner, dataset: u64, path: &str) -> Response {
+    let prob = {
+        let mut coord = lock(&inner.coord);
+        if let Err(e) = coord.register_saifbin(dataset, path) {
+            return Response::Error { code: code::BAD_REQUEST, msg: e.to_string() };
+        }
+        match coord.registered_problem(dataset) {
+            Some(p) => p,
+            None => {
+                return Response::Error {
+                    code: code::BAD_REQUEST,
+                    msg: "registration vanished".into(),
+                }
+            }
+        }
+    };
+    let lam_max = prob.lambda_max();
+    let (n, p) = (prob.n(), prob.p());
+    lock(&inner.route)
+        .datasets
+        .insert(dataset, DatasetEntry { problem: prob, tree: None, ooc: true });
+    Response::Registered {
+        n: n.try_into().unwrap_or(u64::MAX),
+        p: p.try_into().unwrap_or(u64::MAX),
+        lam_max,
+    }
+}
+
+/// One solve: coalesce → cache → admission → submit → wait. All stats
+/// for the request (including Busy rejections) are recorded here.
+fn solve_one(inner: &Inner, dataset: u64, lam: f64, eps: f64, method: Method) -> SolveOutcome {
+    let sw = Stopwatch::start();
+    let spec = SolveSpec { eps, ..Default::default() };
+    let key: Key = (dataset, lam.to_bits(), method, spec.fingerprint());
+
+    enum Plan {
+        Hit(Served),
+        Busy,
+        Fail(u16, String),
+        Wait { waiter: Arc<Waiter<ServeResult>>, coalesced: bool, submit: Option<SolveRequest> },
+    }
+
+    let plan = {
+        let mut guard = lock(&inner.route);
+        let route = &mut *guard;
+        match route.datasets.get(&dataset) {
+            None => Plan::Fail(code::UNKNOWN_DATASET, format!("dataset {dataset} not loaded")),
+            Some(entry) if matches!(method, Method::Fused) && entry.ooc => Plan::Fail(
+                code::BAD_REQUEST,
+                "fused on an out-of-core dataset would densify the design; serve it \
+                 from memory"
+                    .into(),
+            ),
+            Some(entry) => {
+                if let Some(waiter) = route.inflight.attach(&key) {
+                    Plan::Wait { waiter, coalesced: true, submit: None }
+                } else {
+                    let cfg = &inner.cfg;
+                    let cache = route.caches.entry(dataset).or_insert_with(|| {
+                        LambdaCache::new(
+                            cfg.cache_cells_per_efold,
+                            cfg.cache_capacity,
+                            cfg.cache_near_radius,
+                        )
+                    });
+                    let looked = match cache.lookup(method, lam, eps) {
+                        Lookup::Exact(e) => Err((CacheTag::Exact, e)),
+                        Lookup::Certified(e) => Err((CacheTag::Certified, e)),
+                        Lookup::Near { seed, .. } => Ok((CacheTag::Near, Some(seed))),
+                        Lookup::Miss => Ok((CacheTag::Miss, None)),
+                    };
+                    match looked {
+                        Err((tag, e)) => Plan::Hit(Served {
+                            lam: e.lam,
+                            gap: e.gap,
+                            kkt: e.kkt,
+                            secs: 0.0,
+                            warm_started: false,
+                            cache: tag,
+                            beta: e.beta,
+                        }),
+                        Ok((cache_tag, warm)) => {
+                            // admission: the pending depth per dataset is
+                            // bounded; past the high-watermark reply Busy
+                            let depth = route.depth.entry(dataset).or_insert(0);
+                            if *depth >= inner.cfg.high_watermark {
+                                Plan::Busy
+                                    } else {
+                                *depth += 1;
+                                let (id, waiter) = route.inflight.begin(Pending {
+                                    key,
+                                    dataset,
+                                    lam,
+                                    eps,
+                                    method,
+                                    problem: entry.problem.clone(),
+                                    tree: entry.tree.clone(),
+                                    warm: warm.clone(),
+                                    cache_tag,
+                                    cold_retried: false,
+                                    dead_retried: false,
+                                    waiters: Vec::new(),
+                                });
+                                let submit = SolveRequest {
+                                    id,
+                                    dataset_key: dataset,
+                                    problem: entry.problem.clone(),
+                                    lam,
+                                    method,
+                                    tree: entry.tree.clone(),
+                                    warm,
+                                    spec,
+                                };
+                                Plan::Wait {
+                                    waiter,
+                                    coalesced: false,
+                                    submit: Some(submit),
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    };
+
+    match plan {
+        Plan::Hit(s) => finish_stats(inner, dataset, sw.secs(), false, SolveOutcome::Served(s)),
+        Plan::Busy => finish_stats(inner, dataset, sw.secs(), false, SolveOutcome::Busy),
+        Plan::Fail(c, m) => {
+            finish_stats(inner, dataset, sw.secs(), false, SolveOutcome::Failed(c, m))
+        }
+        Plan::Wait { waiter, coalesced, submit } => {
+            if let Some(req) = submit {
+                // a WorkerDead error here means the affine slot died
+                // under someone else's batch — leave the request
+                // pending; the pump's dead-worker sweep recovers the
+                // slot and resubmits from the in-flight table
+                drop(lock(&inner.coord).submit(req));
+            }
+            let outcome = match waiter.wait_timeout(inner.cfg.solve_timeout) {
+                Some(Ok(served)) => SolveOutcome::Served(served),
+                Some(Err((c, m))) => SolveOutcome::Failed(c, m),
+                None => SolveOutcome::Failed(
+                    code::TIMEOUT,
+                    format!("solve exceeded {:?}", inner.cfg.solve_timeout),
+                ),
+            };
+            finish_stats(inner, dataset, sw.secs(), coalesced, outcome)
+        }
+    }
+}
+
+/// Record the request's counters + latency, pass the outcome through.
+fn finish_stats(
+    inner: &Inner,
+    dataset: u64,
+    secs: f64,
+    coalesced: bool,
+    outcome: SolveOutcome,
+) -> SolveOutcome {
+    let mut stats = lock(&inner.stats);
+    let d = stats.dataset(dataset);
+    match &outcome {
+        SolveOutcome::Busy => d.rejected += 1,
+        SolveOutcome::Served(s) => {
+            d.requests += 1;
+            d.latency.record_secs(secs);
+            if coalesced {
+                d.coalesced += 1;
+            } else {
+                match s.cache {
+                    CacheTag::Exact => d.exact_hits += 1,
+                    CacheTag::Certified => d.certified_hits += 1,
+                    CacheTag::Near => d.near_refreshes += 1,
+                    CacheTag::Miss => d.misses += 1,
+                }
+            }
+        }
+        SolveOutcome::Failed(..) => {
+            d.requests += 1;
+            d.errors += 1;
+            d.latency.record_secs(secs);
+        }
+    }
+    outcome
+}
+
+// ---------------------------------------------------------------------------
+// Response pump + worker recovery
+// ---------------------------------------------------------------------------
+
+fn pump_loop(inner: &Inner, rx: Receiver<SolveResponse>) {
+    while !inner.pump_stop.load(Ordering::Acquire) {
+        match rx.recv_timeout(PUMP_TICK) {
+            Ok(r) => handle_response(inner, r),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                check_dead_workers(inner)
+            }
+        }
+    }
+}
+
+/// Deliver one worker response: re-certify against the REQUESTED ε,
+/// cache on success, give an uncertified near-miss one cold retry,
+/// complete every waiter.
+fn handle_response(inner: &Inner, r: SolveResponse) {
+    let mut resubmit: Option<SolveRequest> = None;
+    {
+        let mut guard = lock(&inner.route);
+        let route = &mut *guard;
+        let certified = {
+            let Some(p) = route.inflight.get_mut(r.id) else {
+                // stale: a duplicate from pre-recovery double-submit, or
+                // a request already failed over — drop it
+                return;
+            };
+            // THE cache/serving invariant: the reply's certificate is
+            // the FULL-problem gap at the REQUESTED ε. A warm-started
+            // near-miss whose honest gap misses ε is not interpolation
+            // error to paper over — re-solve cold, once.
+            let certified = r.gap <= p.eps;
+            if !certified && matches!(p.cache_tag, CacheTag::Near) && !p.cold_retried {
+                p.cold_retried = true;
+                p.cache_tag = CacheTag::Miss;
+                p.warm = None;
+                resubmit = Some(SolveRequest {
+                    id: r.id,
+                    dataset_key: p.dataset,
+                    problem: p.problem.clone(),
+                    lam: p.lam,
+                    method: p.method,
+                    tree: p.tree.clone(),
+                    warm: None,
+                    spec: SolveSpec { eps: p.eps, ..Default::default() },
+                });
+                None
+            } else {
+                Some(certified)
+            }
+        };
+        if let Some(certified) = certified {
+            let Some(p) = route.inflight.finish(r.id) else { return };
+            if let Some(d) = route.depth.get_mut(&p.dataset) {
+                *d = d.saturating_sub(1);
+            }
+            let result: ServeResult = if certified {
+                let beta = Arc::new(r.beta);
+                let cfg = &inner.cfg;
+                route
+                    .caches
+                    .entry(p.dataset)
+                    .or_insert_with(|| {
+                        LambdaCache::new(
+                            cfg.cache_cells_per_efold,
+                            cfg.cache_capacity,
+                            cfg.cache_near_radius,
+                        )
+                    })
+                    .insert(p.method, r.lam, p.eps, r.gap, r.kkt_violation, beta.clone());
+                Ok(Served {
+                    lam: r.lam,
+                    gap: r.gap,
+                    kkt: r.kkt_violation,
+                    secs: r.secs,
+                    warm_started: r.warm_started,
+                    cache: p.cache_tag,
+                    beta,
+                })
+            } else {
+                Err((
+                    code::SOLVE_FAILED,
+                    format!(
+                        "gap {:.3e} misses requested eps {:.3e} even after a cold re-solve",
+                        r.gap, p.eps
+                    ),
+                ))
+            };
+            for w in &p.waiters {
+                w.complete(result.clone());
+            }
+        }
+    }
+    if let Some(req) = resubmit {
+        drop(lock(&inner.coord).submit(req));
+    }
+}
+
+/// Recover dead worker slots and fail over their pending requests:
+/// each is resubmitted exactly once; a second death fails it with a
+/// typed error. Holds `route` → `coord` (the one place both nest).
+fn check_dead_workers(inner: &Inner) {
+    let mut guard = lock(&inner.route);
+    let route = &mut *guard;
+    let mut coord = lock(&inner.coord);
+    let dead = coord.dead_workers();
+    if dead.is_empty() {
+        return;
+    }
+    for &w in &dead {
+        // orphaned queue entries are still in our in-flight table;
+        // they are resubmitted below from there
+        drop(coord.recover_worker(w));
+    }
+    let mut failed: Vec<u64> = Vec::new();
+    let mut retried: Vec<u64> = Vec::new();
+    for id in route.inflight.ids() {
+        let Some(p) = route.inflight.get_mut(id) else { continue };
+        let Some(w) = coord.worker_of(p.dataset) else { continue };
+        if !dead.contains(&w) {
+            continue;
+        }
+        if p.dead_retried {
+            failed.push(id);
+            continue;
+        }
+        p.dead_retried = true;
+        let req = SolveRequest {
+            id,
+            dataset_key: p.dataset,
+            problem: p.problem.clone(),
+            lam: p.lam,
+            method: p.method,
+            tree: p.tree.clone(),
+            warm: p.warm.clone(),
+            spec: SolveSpec { eps: p.eps, ..Default::default() },
+        };
+        if coord.submit(req).is_err() {
+            failed.push(id);
+        } else {
+            retried.push(p.dataset);
+        }
+    }
+    for id in failed {
+        let Some(p) = route.inflight.finish(id) else { continue };
+        if let Some(d) = route.depth.get_mut(&p.dataset) {
+            *d = d.saturating_sub(1);
+        }
+        let err: ServeResult = Err((
+            code::SOLVE_FAILED,
+            format!("worker died twice solving λ={:.6e} for dataset {}", p.lam, p.dataset),
+        ));
+        for w in &p.waiters {
+            w.complete(err.clone());
+        }
+    }
+    drop(coord);
+    drop(guard);
+    let mut stats = lock(&inner.stats);
+    for k in retried {
+        stats.dataset(k).retried += 1;
+    }
+}

@@ -1,0 +1,687 @@
+//! Wire protocol for `repro serve --listen` — a length-prefixed binary
+//! framing over TCP, hand-rolled on std (the vendored registry has no
+//! serde).
+//!
+//! Every frame is a 12-byte header followed by `payload_len` bytes:
+//!
+//! ```text
+//! magic    u32  0x53414946 ("SAIF")
+//! version  u16  1
+//! kind     u16  request/response discriminant (see [`kind`])
+//! len      u32  payload length, ≤ MAX_PAYLOAD
+//! payload  len bytes, little-endian fields
+//! ```
+//!
+//! Decoding treats the peer as untrusted: every length is bounded
+//! before allocation, every `u64 → usize` goes through `try_from`
+//! (this file is on the vet `unchecked-cast` list, like the `.saifbin`
+//! decoders), trailing payload bytes are an error, and a bad frame
+//! yields a typed [`ProtoError`] the server answers with
+//! [`Response::Error`] — it never panics and never kills the process.
+
+use crate::solver::Method;
+
+/// Frame magic: "SAIF" read as a little-endian u32 of b"FIAS" — the
+/// bytes on the wire are `46 49 41 53`.
+pub const MAGIC: u32 = 0x5341_4946;
+/// Protocol version; a mismatch is a hard [`ProtoError`] so old
+/// clients fail loudly instead of misdecoding.
+pub const VERSION: u16 = 1;
+/// Frame header size in bytes (magic + version + kind + len).
+pub const HEADER_LEN: usize = 12;
+/// Upper bound on a single frame's payload (64 MiB — a dense β at
+/// p = 4M still fits; anything larger is a protocol error, not an
+/// allocation).
+pub const MAX_PAYLOAD: u32 = 1 << 26;
+/// Upper bound on λ values in one path request.
+pub const MAX_PATH_LAMS: u32 = 4096;
+
+/// Frame discriminants. Requests are < 64, responses ≥ 64.
+pub mod kind {
+    pub const SOLVE: u16 = 1;
+    pub const PATH: u16 = 2;
+    pub const REGISTER: u16 = 3;
+    pub const STATS: u16 = 4;
+    pub const SOLVED: u16 = 65;
+    pub const PATH_SOLVED: u16 = 66;
+    pub const REGISTERED: u16 = 67;
+    pub const STATS_JSON: u16 = 68;
+    pub const BUSY: u16 = 69;
+    pub const ERROR: u16 = 70;
+}
+
+/// Error codes carried by [`Response::Error`].
+pub mod code {
+    pub const BAD_FRAME: u16 = 1;
+    pub const BAD_METHOD: u16 = 2;
+    pub const BAD_REQUEST: u16 = 3;
+    pub const UNKNOWN_DATASET: u16 = 4;
+    pub const SOLVE_FAILED: u16 = 5;
+    pub const SHUTTING_DOWN: u16 = 6;
+    pub const TIMEOUT: u16 = 7;
+}
+
+/// A decode failure: the error code to answer with and a message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    pub code: u16,
+    pub msg: String,
+}
+
+impl ProtoError {
+    fn bad(msg: impl Into<String>) -> ProtoError {
+        ProtoError { code: code::BAD_FRAME, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "protocol error {}: {}", self.code, self.msg)
+    }
+}
+
+/// How a served solution was produced relative to the λ-grid cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheTag {
+    /// Cold solve (no usable cache entry).
+    Miss,
+    /// Bitwise replay of a stored solve at the same (λ, ε).
+    Exact,
+    /// Stored solve at the same λ whose gap already certifies the
+    /// requested ε.
+    Certified,
+    /// Warm-started from a nearby cached β and re-certified on the
+    /// full problem before serving.
+    Near,
+}
+
+impl CacheTag {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            CacheTag::Miss => 0,
+            CacheTag::Exact => 1,
+            CacheTag::Certified => 2,
+            CacheTag::Near => 3,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<CacheTag> {
+        match v {
+            0 => Some(CacheTag::Miss),
+            1 => Some(CacheTag::Exact),
+            2 => Some(CacheTag::Certified),
+            3 => Some(CacheTag::Near),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheTag::Miss => "miss",
+            CacheTag::Exact => "exact",
+            CacheTag::Certified => "certified",
+            CacheTag::Near => "near",
+        }
+    }
+}
+
+/// A client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// One solve at λ with gap tolerance ε.
+    Solve { dataset: u64, lam: f64, eps: f64, method: Method },
+    /// A descending λ-path (convenience loop over [`Request::Solve`]).
+    Path { dataset: u64, eps: f64, method: Method, lams: Vec<f64> },
+    /// Register a `.saifbin` file (server-local path) under a key.
+    Register { dataset: u64, path: String },
+    /// Snapshot the serving counters as JSON.
+    Stats,
+}
+
+/// One certified solution point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolvedPoint {
+    pub lam: f64,
+    /// FULL-problem duality gap of the served β (≤ the requested ε —
+    /// the server never replies with an uncertified solution).
+    pub gap: f64,
+    /// FULL-problem KKT violation.
+    pub kkt: f64,
+    pub secs: f64,
+    pub warm_started: bool,
+    pub cache: CacheTag,
+    pub beta: Vec<(usize, f64)>,
+}
+
+/// A server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Solved(SolvedPoint),
+    Path(Vec<SolvedPoint>),
+    Registered { n: u64, p: u64, lam_max: f64 },
+    /// Serving counters as a JSON object (see `serve::stats`).
+    Stats(String),
+    /// Admission control: the per-dataset queue is past its
+    /// high-watermark (or the connection cap is hit); retry later.
+    Busy { retry_after_ms: u32 },
+    Error { code: u16, msg: String },
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+/// Widen `usize → u64` (lossless on every supported target; usize is
+/// at most 64 bits).
+fn u64_of(v: usize) -> u64 {
+    v as u64 // vet: allow(unchecked-cast): widening usize→u64, lossless
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// String with a u16 length prefix. Longer strings are truncated at a
+/// char boundary — only method labels and error messages travel this
+/// way, and a clipped error message beats a failed reply.
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let mut end = s.len().min(u16::MAX.into());
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    let bytes = &s.as_bytes()[..end];
+    put_u16(out, bytes.len().try_into().unwrap_or(u16::MAX));
+    out.extend_from_slice(bytes);
+}
+
+fn put_beta(out: &mut Vec<u8>, beta: &[(usize, f64)]) {
+    put_u32(out, beta.len().try_into().unwrap_or(u32::MAX));
+    for &(i, v) in beta {
+        put_u64(out, u64_of(i));
+        put_f64(out, v);
+    }
+}
+
+fn put_point(out: &mut Vec<u8>, pt: &SolvedPoint) {
+    put_f64(out, pt.lam);
+    put_f64(out, pt.gap);
+    put_f64(out, pt.kkt);
+    put_f64(out, pt.secs);
+    out.push(if pt.warm_started { 1 } else { 0 });
+    out.push(pt.cache.to_u8());
+    put_beta(out, &pt.beta);
+}
+
+/// Encode a request as (kind, payload).
+pub fn encode_request(req: &Request) -> (u16, Vec<u8>) {
+    let mut out = Vec::new();
+    match req {
+        Request::Solve { dataset, lam, eps, method } => {
+            put_u64(&mut out, *dataset);
+            put_f64(&mut out, *lam);
+            put_f64(&mut out, *eps);
+            put_str(&mut out, method.label().as_str());
+            (kind::SOLVE, out)
+        }
+        Request::Path { dataset, eps, method, lams } => {
+            put_u64(&mut out, *dataset);
+            put_f64(&mut out, *eps);
+            put_str(&mut out, method.label().as_str());
+            put_u32(&mut out, lams.len().try_into().unwrap_or(u32::MAX));
+            for &l in lams {
+                put_f64(&mut out, l);
+            }
+            (kind::PATH, out)
+        }
+        Request::Register { dataset, path } => {
+            put_u64(&mut out, *dataset);
+            put_str(&mut out, path);
+            (kind::REGISTER, out)
+        }
+        Request::Stats => (kind::STATS, out),
+    }
+}
+
+/// Encode a response as (kind, payload).
+pub fn encode_response(rsp: &Response) -> (u16, Vec<u8>) {
+    let mut out = Vec::new();
+    match rsp {
+        Response::Solved(pt) => {
+            put_point(&mut out, pt);
+            (kind::SOLVED, out)
+        }
+        Response::Path(pts) => {
+            put_u32(&mut out, pts.len().try_into().unwrap_or(u32::MAX));
+            for pt in pts {
+                put_point(&mut out, pt);
+            }
+            (kind::PATH_SOLVED, out)
+        }
+        Response::Registered { n, p, lam_max } => {
+            put_u64(&mut out, *n);
+            put_u64(&mut out, *p);
+            put_f64(&mut out, *lam_max);
+            (kind::REGISTERED, out)
+        }
+        Response::Stats(json) => {
+            out.extend_from_slice(json.as_bytes());
+            (kind::STATS_JSON, out)
+        }
+        Response::Busy { retry_after_ms } => {
+            put_u32(&mut out, *retry_after_ms);
+            (kind::BUSY, out)
+        }
+        Response::Error { code, msg } => {
+            put_u16(&mut out, *code);
+            put_str(&mut out, msg);
+            (kind::ERROR, out)
+        }
+    }
+}
+
+/// Build the 12-byte header for a (kind, payload) frame.
+pub fn header(kind: u16, payload_len: usize) -> Result<[u8; HEADER_LEN], ProtoError> {
+    let len: u32 = payload_len
+        .try_into()
+        .ok()
+        .filter(|&l| l <= MAX_PAYLOAD)
+        .ok_or_else(|| ProtoError::bad(format!("payload {payload_len} exceeds MAX_PAYLOAD")))?;
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    h[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    h[6..8].copy_from_slice(&kind.to_le_bytes());
+    h[8..12].copy_from_slice(&len.to_le_bytes());
+    Ok(h)
+}
+
+/// Validate a received header; returns (kind, payload_len).
+pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u16, usize), ProtoError> {
+    let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+    if magic != MAGIC {
+        return Err(ProtoError::bad(format!("bad magic {magic:#010x}")));
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != VERSION {
+        return Err(ProtoError::bad(format!("unsupported protocol version {version}")));
+    }
+    let kind = u16::from_le_bytes([h[6], h[7]]);
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    if len > MAX_PAYLOAD {
+        return Err(ProtoError::bad(format!("payload length {len} exceeds MAX_PAYLOAD")));
+    }
+    let len = usize::try_from(len).map_err(|_| ProtoError::bad("payload length overflow"))?;
+    Ok((kind, len))
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| ProtoError::bad("truncated payload"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// u16-length-prefixed UTF-8 string.
+    fn str16(&mut self) -> Result<String, ProtoError> {
+        let len = usize::from(self.u16()?);
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| ProtoError::bad("non-UTF-8 string"))
+    }
+
+    /// Every payload byte must be consumed — trailing garbage is a
+    /// framing bug on the peer, not something to silently accept.
+    fn done(&self) -> Result<(), ProtoError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(ProtoError::bad(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+
+    fn beta(&mut self) -> Result<Vec<(usize, f64)>, ProtoError> {
+        let nnz = self.u32()?;
+        // bound the allocation by what the payload can actually hold
+        // (16 bytes per entry) before trusting the count
+        let remaining = self.buf.len() - self.pos;
+        if usize::try_from(nnz).map_err(|_| ProtoError::bad("nnz overflow"))? > remaining / 16 {
+            return Err(ProtoError::bad(format!("nnz {nnz} exceeds payload")));
+        }
+        let mut beta = Vec::with_capacity(
+            usize::try_from(nnz).map_err(|_| ProtoError::bad("nnz overflow"))?,
+        );
+        for _ in 0..nnz {
+            let i = usize::try_from(self.u64()?)
+                .map_err(|_| ProtoError::bad("beta index overflow"))?;
+            let v = self.f64()?;
+            beta.push((i, v));
+        }
+        Ok(beta)
+    }
+
+    fn point(&mut self) -> Result<SolvedPoint, ProtoError> {
+        let lam = self.f64()?;
+        let gap = self.f64()?;
+        let kkt = self.f64()?;
+        let secs = self.f64()?;
+        let warm_started = self.u8()? != 0;
+        let cache = CacheTag::from_u8(self.u8()?)
+            .ok_or_else(|| ProtoError::bad("bad cache tag"))?;
+        let beta = self.beta()?;
+        Ok(SolvedPoint { lam, gap, kkt, secs, warm_started, cache, beta })
+    }
+}
+
+fn parse_method(s: &str) -> Result<Method, ProtoError> {
+    Method::parse(s)
+        .ok_or_else(|| ProtoError { code: code::BAD_METHOD, msg: format!("unknown method '{s}'") })
+}
+
+fn check_lam(lam: f64) -> Result<f64, ProtoError> {
+    if lam.is_finite() && lam > 0.0 {
+        Ok(lam)
+    } else {
+        Err(ProtoError { code: code::BAD_REQUEST, msg: format!("bad λ {lam}") })
+    }
+}
+
+fn check_eps(eps: f64) -> Result<f64, ProtoError> {
+    if eps.is_finite() && eps > 0.0 {
+        Ok(eps)
+    } else {
+        Err(ProtoError { code: code::BAD_REQUEST, msg: format!("bad eps {eps}") })
+    }
+}
+
+/// Decode a request frame.
+pub fn decode_request(kind_: u16, payload: &[u8]) -> Result<Request, ProtoError> {
+    let mut c = Cursor::new(payload);
+    let req = match kind_ {
+        kind::SOLVE => {
+            let dataset = c.u64()?;
+            let lam = check_lam(c.f64()?)?;
+            let eps = check_eps(c.f64()?)?;
+            let method = parse_method(&c.str16()?)?;
+            Request::Solve { dataset, lam, eps, method }
+        }
+        kind::PATH => {
+            let dataset = c.u64()?;
+            let eps = check_eps(c.f64()?)?;
+            let method = parse_method(&c.str16()?)?;
+            let k = c.u32()?;
+            if k == 0 || k > MAX_PATH_LAMS {
+                return Err(ProtoError {
+                    code: code::BAD_REQUEST,
+                    msg: format!("path length {k} outside 1..={MAX_PATH_LAMS}"),
+                });
+            }
+            let mut lams = Vec::with_capacity(usize::try_from(k).unwrap_or(0));
+            for _ in 0..k {
+                lams.push(check_lam(c.f64()?)?);
+            }
+            Request::Path { dataset, eps, method, lams }
+        }
+        kind::REGISTER => {
+            let dataset = c.u64()?;
+            let path = c.str16()?;
+            Request::Register { dataset, path }
+        }
+        kind::STATS => Request::Stats,
+        other => return Err(ProtoError::bad(format!("unknown request kind {other}"))),
+    };
+    c.done()?;
+    Ok(req)
+}
+
+/// Decode a response frame.
+pub fn decode_response(kind_: u16, payload: &[u8]) -> Result<Response, ProtoError> {
+    let mut c = Cursor::new(payload);
+    let rsp = match kind_ {
+        kind::SOLVED => Response::Solved(c.point()?),
+        kind::PATH_SOLVED => {
+            let k = c.u32()?;
+            let mut pts = Vec::new();
+            for _ in 0..k {
+                pts.push(c.point()?);
+            }
+            Response::Path(pts)
+        }
+        kind::REGISTERED => {
+            let n = c.u64()?;
+            let p = c.u64()?;
+            let lam_max = c.f64()?;
+            Response::Registered { n, p, lam_max }
+        }
+        kind::STATS_JSON => {
+            let bytes = c.take(payload.len())?;
+            Response::Stats(
+                String::from_utf8(bytes.to_vec())
+                    .map_err(|_| ProtoError::bad("non-UTF-8 stats"))?,
+            )
+        }
+        kind::BUSY => Response::Busy { retry_after_ms: c.u32()? },
+        kind::ERROR => {
+            let code = c.u16()?;
+            let msg = c.str16()?;
+            Response::Error { code, msg }
+        }
+        other => return Err(ProtoError::bad(format!("unknown response kind {other}"))),
+    };
+    c.done()?;
+    Ok(rsp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let (k, payload) = encode_request(&req);
+        let h = header(k, payload.len()).unwrap();
+        let (k2, len) = parse_header(&h).unwrap();
+        assert_eq!(k, k2);
+        assert_eq!(len, payload.len());
+        assert_eq!(decode_request(k, &payload).unwrap(), req);
+    }
+
+    fn roundtrip_rsp(rsp: Response) {
+        let (k, payload) = encode_response(&rsp);
+        assert_eq!(decode_response(k, &payload).unwrap(), rsp);
+    }
+
+    fn point() -> SolvedPoint {
+        SolvedPoint {
+            lam: 0.25,
+            gap: 1e-9,
+            kkt: 3e-7,
+            secs: 0.01,
+            warm_started: true,
+            cache: CacheTag::Near,
+            beta: vec![(0, 1.5), (17, -2.25), (usize::MAX / 2, 1e-300)],
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Request::Solve {
+            dataset: 7,
+            lam: 0.125,
+            eps: 1e-6,
+            method: Method::Saif,
+        });
+        roundtrip_req(Request::Solve {
+            dataset: u64::MAX,
+            lam: 1e-8,
+            eps: 1e-2,
+            method: Method::Group { size: 4 },
+        });
+        roundtrip_req(Request::Path {
+            dataset: 0,
+            eps: 1e-6,
+            method: Method::Homotopy,
+            lams: vec![1.0, 0.5, 0.25],
+        });
+        roundtrip_req(Request::Register { dataset: 3, path: "/tmp/x.saifbin".into() });
+        roundtrip_req(Request::Stats);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        roundtrip_rsp(Response::Solved(point()));
+        roundtrip_rsp(Response::Path(vec![point(), point()]));
+        roundtrip_rsp(Response::Registered { n: 100, p: 900, lam_max: 2.5 });
+        roundtrip_rsp(Response::Stats("{\"connections\":1}".into()));
+        roundtrip_rsp(Response::Busy { retry_after_ms: 50 });
+        roundtrip_rsp(Response::Error { code: code::BAD_METHOD, msg: "nope".into() });
+    }
+
+    #[test]
+    fn every_method_label_roundtrips() {
+        for m in [
+            Method::Saif,
+            Method::DynScreen,
+            Method::GapSafe { dome: true, dynamic: true },
+            Method::GapSafe { dome: false, dynamic: false },
+            Method::Hybrid,
+            Method::Blitz,
+            Method::Homotopy,
+            Method::Fused,
+            Method::Group { size: 12 },
+        ] {
+            roundtrip_req(Request::Solve { dataset: 1, lam: 0.5, eps: 1e-6, method: m });
+        }
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_version_and_oversize() {
+        let h = header(kind::SOLVE, 16).unwrap();
+        let mut bad = h;
+        bad[0] ^= 0xff;
+        assert!(parse_header(&bad).is_err());
+        let mut bad = h;
+        bad[4] = 99;
+        assert!(parse_header(&bad).is_err());
+        let mut bad = h;
+        bad[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(parse_header(&bad).is_err());
+        assert!(header(kind::SOLVE, usize::try_from(MAX_PAYLOAD).unwrap() + 1).is_err());
+    }
+
+    #[test]
+    fn truncation_anywhere_is_an_error_not_a_panic() {
+        let (k, payload) = encode_request(&Request::Solve {
+            dataset: 7,
+            lam: 0.125,
+            eps: 1e-6,
+            method: Method::Saif,
+        });
+        for cut in 0..payload.len() {
+            assert!(decode_request(k, &payload[..cut]).is_err(), "cut at {cut}");
+        }
+        let (k, payload) = encode_response(&Response::Solved(point()));
+        for cut in 0..payload.len() {
+            assert!(decode_response(k, &payload[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_and_bad_values_are_rejected() {
+        let (k, mut payload) = encode_request(&Request::Stats);
+        payload.push(0);
+        assert!(decode_request(k, &payload).is_err());
+
+        // non-finite / non-positive λ and ε
+        for (lam, eps) in [(f64::NAN, 1e-6), (-1.0, 1e-6), (0.5, 0.0), (0.5, f64::INFINITY)] {
+            let (k, payload) = encode_request(&Request::Solve {
+                dataset: 1,
+                lam,
+                eps,
+                method: Method::Saif,
+            });
+            assert!(decode_request(k, &payload).is_err(), "λ={lam} ε={eps}");
+        }
+
+        // unknown method label
+        let mut payload = Vec::new();
+        super::put_u64(&mut payload, 1);
+        super::put_f64(&mut payload, 0.5);
+        super::put_f64(&mut payload, 1e-6);
+        super::put_str(&mut payload, "frobnicate");
+        let err = decode_request(kind::SOLVE, &payload).unwrap_err();
+        assert_eq!(err.code, code::BAD_METHOD);
+
+        // unknown kinds
+        assert!(decode_request(63, &[]).is_err());
+        assert!(decode_response(200, &[]).is_err());
+    }
+
+    #[test]
+    fn nnz_count_is_bounded_by_payload_before_allocation() {
+        // a frame CLAIMING 100M entries but carrying none must fail on
+        // the bound check, not attempt the allocation
+        let mut payload = Vec::new();
+        super::put_f64(&mut payload, 0.5); // lam
+        super::put_f64(&mut payload, 1e-9); // gap
+        super::put_f64(&mut payload, 1e-7); // kkt
+        super::put_f64(&mut payload, 0.1); // secs
+        payload.push(0); // warm
+        payload.push(0); // cache tag
+        super::put_u32(&mut payload, 100_000_000); // nnz lie
+        assert!(decode_response(kind::SOLVED, &payload).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Serving counters: per-dataset request/cache/coalesce/reject counts
+//! and latency percentiles, snapshotted by the `stats` request and
+//! dumped at graceful shutdown.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::LatencyStats;
+use crate::util::json::Json;
+
+/// Counters for one dataset key.
+#[derive(Debug, Clone, Default)]
+pub struct DatasetStats {
+    /// Solve requests accepted for a reply (hit, solve, or error —
+    /// everything except Busy rejections).
+    pub requests: u64,
+    /// Bitwise replays of a stored (λ, ε) solve.
+    pub exact_hits: u64,
+    /// Stored solves whose certificate covered a different ε.
+    pub certified_hits: u64,
+    /// Near-misses served via a warm-started, re-certified solve.
+    pub near_refreshes: u64,
+    /// Cold solves.
+    pub misses: u64,
+    /// Requests that attached to an identical in-flight solve.
+    pub coalesced: u64,
+    /// Busy rejections (admission control).
+    pub rejected: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Resubmissions after a worker death.
+    pub retried: u64,
+    pub latency: LatencyStats,
+}
+
+/// Whole-server counters.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub connections: u64,
+    /// Connections turned away at the accept-time cap.
+    pub conns_rejected: u64,
+    pub frames: u64,
+    pub protocol_errors: u64,
+    per_dataset: BTreeMap<u64, DatasetStats>,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    pub fn dataset(&mut self, key: u64) -> &mut DatasetStats {
+        self.per_dataset.entry(key).or_default()
+    }
+
+    pub fn datasets(&self) -> impl Iterator<Item = (&u64, &DatasetStats)> {
+        self.per_dataset.iter()
+    }
+
+    /// Sum of a per-dataset counter over all datasets.
+    pub fn total(&self, f: impl Fn(&DatasetStats) -> u64) -> u64 {
+        self.per_dataset.values().map(f).sum()
+    }
+
+    /// JSON snapshot (the `stats` request's payload).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("connections", Json::Num(self.connections as f64))
+            .set("conns_rejected", Json::Num(self.conns_rejected as f64))
+            .set("frames", Json::Num(self.frames as f64))
+            .set("protocol_errors", Json::Num(self.protocol_errors as f64));
+        let mut datasets = Json::obj();
+        for (key, d) in &self.per_dataset {
+            let mut o = Json::obj();
+            o.set("requests", Json::Num(d.requests as f64))
+                .set("exact_hits", Json::Num(d.exact_hits as f64))
+                .set("certified_hits", Json::Num(d.certified_hits as f64))
+                .set("near_refreshes", Json::Num(d.near_refreshes as f64))
+                .set("misses", Json::Num(d.misses as f64))
+                .set("coalesced", Json::Num(d.coalesced as f64))
+                .set("rejected", Json::Num(d.rejected as f64))
+                .set("errors", Json::Num(d.errors as f64))
+                .set("retried", Json::Num(d.retried as f64))
+                .set("p50_us", Json::Num(d.latency.percentile_us(0.5)))
+                .set("p99_us", Json::Num(d.latency.percentile_us(0.99)));
+            datasets.set(&key.to_string(), o);
+        }
+        obj.set("datasets", datasets);
+        obj
+    }
+
+    /// Human-readable dump for the graceful-shutdown report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "connections={} rejected_conns={} frames={} protocol_errors={}\n",
+            self.connections, self.conns_rejected, self.frames, self.protocol_errors
+        );
+        out.push_str(&format!(
+            "{:>8} {:>8} {:>6} {:>9} {:>5} {:>6} {:>9} {:>8} {:>7} {:>10} {:>10}\n",
+            "dataset", "requests", "exact", "certified", "near", "miss", "coalesced",
+            "rejected", "errors", "p50_us", "p99_us"
+        ));
+        for (key, d) in &self.per_dataset {
+            out.push_str(&format!(
+                "{key:>8} {:>8} {:>6} {:>9} {:>5} {:>6} {:>9} {:>8} {:>7} {:>10.1} {:>10.1}\n",
+                d.requests,
+                d.exact_hits,
+                d.certified_hits,
+                d.near_refreshes,
+                d.misses,
+                d.coalesced,
+                d.rejected,
+                d.errors,
+                d.latency.percentile_us(0.5),
+                d.latency.percentile_us(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_snapshot_carries_every_counter() {
+        let mut s = ServeStats::new();
+        s.connections = 2;
+        s.frames = 10;
+        {
+            let d = s.dataset(3);
+            d.requests = 5;
+            d.exact_hits = 2;
+            d.misses = 3;
+            d.latency.record_secs(0.001);
+            d.latency.record_secs(0.002);
+        }
+        let j = s.to_json();
+        assert_eq!(j.get("connections").and_then(|v| v.as_f64()), Some(2.0));
+        let ds = j.get("datasets").and_then(|d| d.get("3")).expect("dataset 3 present");
+        assert_eq!(ds.get("requests").and_then(|v| v.as_f64()), Some(5.0));
+        assert_eq!(ds.get("exact_hits").and_then(|v| v.as_f64()), Some(2.0));
+        assert!(ds.get("p50_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // and the snapshot survives a JSON round-trip
+        let parsed = Json::parse(&j.to_string()).expect("valid JSON");
+        assert_eq!(
+            parsed
+                .get("datasets")
+                .and_then(|d| d.get("3"))
+                .and_then(|d| d.get("misses"))
+                .and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+        assert_eq!(s.total(|d| d.requests), 5);
+        assert!(s.render().contains("dataset"));
+    }
+}

@@ -191,6 +191,49 @@ impl Default for SolveSpec {
     }
 }
 
+impl SolveSpec {
+    /// Stable 64-bit fingerprint over every solve-affecting knob
+    /// (FNV-1a over a canonical field encoding). Two specs with equal
+    /// fingerprints request the same computation, so the serving layer
+    /// uses this as the spec half of its cache / request-coalescing
+    /// keys. ε is hashed by bit pattern: specs differing only in the
+    /// requested gap tolerance fingerprint differently.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        mix(self.eps.to_bits());
+        mix(match self.parallelism {
+            None => 0,
+            Some(Parallelism::Serial) => 1,
+            Some(Parallelism::Auto) => 2,
+            Some(Parallelism::Fixed(k)) => 3u64.wrapping_add((k as u64) << 2),
+        });
+        mix(match self.epoch_shards {
+            None => 0,
+            Some(EpochShards::FollowParallelism) => 1,
+            Some(EpochShards::Fixed(k)) => 2u64.wrapping_add((k as u64) << 2),
+        });
+        mix(match self.pool {
+            None => 0,
+            Some(PoolMode::Persistent) => 1,
+            Some(PoolMode::Scoped) => 2,
+        });
+        mix(match self.max_outer {
+            None => u64::MAX,
+            Some(k) => k as u64,
+        });
+        mix(u64::from(self.trace));
+        h
+    }
+}
+
 /// One solve's outcome, in the shape every method can produce.
 /// Method-specific diagnostics (SAIF's p_add, BLITZ's working-set
 /// high-water mark, …) ride in [`Solution::stats`].
@@ -467,6 +510,29 @@ mod tests {
         assert!(s.pool.is_none());
         assert!(s.max_outer.is_none());
         assert!(!s.trace);
+    }
+
+    #[test]
+    fn fingerprint_separates_specs_and_is_stable() {
+        let base = SolveSpec::default();
+        assert_eq!(base.fingerprint(), SolveSpec::default().fingerprint());
+        let variants = [
+            SolveSpec { eps: 1e-4, ..Default::default() },
+            SolveSpec { eps: 1e-8, ..Default::default() },
+            SolveSpec { parallelism: Some(Parallelism::Serial), ..Default::default() },
+            SolveSpec { parallelism: Some(Parallelism::Fixed(4)), ..Default::default() },
+            SolveSpec { epoch_shards: Some(EpochShards::Fixed(2)), ..Default::default() },
+            SolveSpec { pool: Some(PoolMode::Scoped), ..Default::default() },
+            SolveSpec { max_outer: Some(10), ..Default::default() },
+            SolveSpec { trace: true, ..Default::default() },
+        ];
+        let mut fps: Vec<u64> = variants.iter().map(|s| s.fingerprint()).collect();
+        fps.push(base.fingerprint());
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(fps[i], fps[j], "specs {i} and {j} collide");
+            }
+        }
     }
 
     #[test]

@@ -20,6 +20,7 @@ fn path_requests(seed: u64, key: u64, n_lams: usize, eps: f64) -> Vec<SolveReque
             lam: lam_max * (5e-2f64).powf(k as f64 / n_lams as f64),
             method: Method::Saif,
             tree: None,
+            warm: None,
             spec: SolveSpec { eps, ..Default::default() },
         })
         .collect()

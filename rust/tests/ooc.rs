@@ -326,6 +326,7 @@ fn coordinator_serves_saifbin_bitwise_like_in_memory() {
             lam: lam_max * f,
             method: Method::Saif,
             tree: None,
+            warm: None,
             spec: spec(),
         })
         .unwrap();

@@ -1,0 +1,362 @@
+//! End-to-end tests for the TCP serving front-end (`saif::serve`):
+//! real loopback sockets, real worker solves, and the invariants the
+//! subsystem exists for —
+//!
+//! * every served β certifies on the FULL problem at the requested ε
+//!   (including cache near-misses, which are warm-started and
+//!   re-certified, never interpolated);
+//! * exact cache hits are bitwise-identical to the solve that produced
+//!   them, and a sequential served λ-grid is bitwise-identical to a
+//!   direct [`Solver::path`] session;
+//! * past the admission high-watermark requests get `Busy`, not a
+//!   wedged connection;
+//! * malformed frames draw typed errors and never take the server
+//!   down;
+//! * a worker slot poisoned mid-serve recovers without silently
+//!   dropping accepted requests.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use saif::cm::{Engine, EpochShards, NativeEngine};
+use saif::data::synth;
+use saif::serve::client::Client;
+use saif::serve::protocol::{code, CacheTag, Request, Response};
+use saif::serve::{ServeConfig, ServeDataset, Server};
+use saif::solver::{self, Method, SolveSpec, Solver};
+use saif::util::json::Json;
+
+const EPS: f64 = 1e-8;
+
+/// Test-scoped serving config: engine knobs follow the CI matrix env
+/// (SAIF_TEST_THREADS / SAIF_TEST_POOL), admission generous unless a
+/// test overrides it.
+fn test_config() -> ServeConfig {
+    ServeConfig {
+        workers: 1,
+        max_conns: 8,
+        high_watermark: 32,
+        solve_timeout: Duration::from_secs(60),
+        parallelism: common::test_parallelism(),
+        epoch_shards: EpochShards::FollowParallelism,
+        pool_mode: common::test_pool_mode(),
+        ..ServeConfig::default()
+    }
+}
+
+fn linear_dataset(key: u64, seed: u64) -> (ServeDataset, Arc<saif::model::Problem>) {
+    let prob = Arc::new(synth::synth_linear(60, 300, seed).problem());
+    (
+        ServeDataset {
+            key,
+            name: format!("lin-{seed}"),
+            problem: prob.clone(),
+            tree: None,
+        },
+        prob,
+    )
+}
+
+fn start(cfg: ServeConfig, datasets: Vec<ServeDataset>) -> Server {
+    // several servers run concurrently in this binary, and every
+    // accept loop / pump / blocked connection handler occupies a
+    // shared-pool thread — grow the pool past the whole binary's
+    // concurrent demand so no test can starve another's workers
+    saif::runtime::pool::shared().ensure_threads(64);
+    Server::start(cfg, datasets, "127.0.0.1:0").expect("bind loopback")
+}
+
+fn connect(server: &Server) -> Client {
+    let mut c = Client::connect(server.local_addr()).expect("connect");
+    c.set_read_timeout(Some(Duration::from_secs(120))).expect("read timeout");
+    c
+}
+
+fn descending_grid(prob: &saif::model::Problem, k: usize) -> Vec<f64> {
+    let lam_max = prob.lambda_max();
+    (1..=k).map(|i| lam_max * (5e-2f64).powf(i as f64 / k as f64)).collect()
+}
+
+fn solved(rsp: Response) -> saif::serve::protocol::SolvedPoint {
+    match rsp {
+        Response::Solved(pt) => pt,
+        other => panic!("expected Solved, got {other:?}"),
+    }
+}
+
+fn beta_bits(beta: &[(usize, f64)]) -> Vec<(usize, u64)> {
+    beta.iter().map(|&(i, b)| (i, b.to_bits())).collect()
+}
+
+#[test]
+fn served_grid_is_bitwise_identical_to_direct_path_and_certified() {
+    let (ds, prob) = linear_dataset(0, 7);
+    let server = start(test_config(), vec![ds]);
+    let lams = descending_grid(&prob, 5);
+
+    // direct reference: ONE warm-chained path session on an engine
+    // configured exactly like the server's worker
+    let spec = SolveSpec { eps: EPS, ..Default::default() };
+    let mut engine = NativeEngine::new();
+    engine.set_parallelism(common::test_parallelism());
+    engine.set_epoch_shards(EpochShards::FollowParallelism);
+    engine.set_pool_mode(common::test_pool_mode());
+    let direct = solver::make(Method::Saif, &mut engine, &spec).path(&prob, &lams);
+
+    // served: a sequential client walking the same grid cold
+    let mut client = connect(&server);
+    let mut served = Vec::new();
+    for &lam in &lams {
+        let pt = solved(client.solve(0, lam, EPS, Method::Saif).expect("solve rpc"));
+        // the serving invariant: FULL-problem certificate at the
+        // requested ε, on every reply
+        common::assert_certificate(&prob, &pt.beta, lam, pt.gap, EPS);
+        served.push(pt);
+    }
+    for (pt, sol) in served.iter().zip(&direct.points) {
+        assert_eq!(
+            beta_bits(&pt.beta),
+            beta_bits(&sol.beta),
+            "served β must be bitwise-identical to the direct path session at λ={}",
+            pt.lam
+        );
+        assert_eq!(pt.gap.to_bits(), sol.gap.to_bits(), "gap must match bitwise");
+    }
+
+    // exact cache hit: same (λ, ε) again is a bitwise replay
+    let again = solved(client.solve(0, lams[2], EPS, Method::Saif).expect("repeat rpc"));
+    assert_eq!(again.cache, CacheTag::Exact, "repeat of a served λ must hit the cache");
+    assert_eq!(beta_bits(&again.beta), beta_bits(&served[2].beta));
+    assert_eq!(again.gap.to_bits(), served[2].gap.to_bits());
+
+    // near-miss: a λ between grid points is warm-started from the
+    // nearest cached β and re-certified — never served uncertified
+    let near_lam = lams[2] * 1.02;
+    let near = solved(client.solve(0, near_lam, EPS, Method::Saif).expect("near rpc"));
+    common::assert_certificate(&prob, &near.beta, near_lam, near.gap, EPS);
+
+    // stats surface: the counters saw all of this
+    let stats_json = match client.stats().expect("stats rpc") {
+        Response::Stats(s) => s,
+        other => panic!("expected Stats, got {other:?}"),
+    };
+    let j = Json::parse(&stats_json).expect("stats is valid JSON");
+    let d0 = j.get("datasets").and_then(|d| d.get("0")).expect("dataset 0 in stats");
+    let requests = d0.get("requests").and_then(|v| v.as_f64()).expect("requests counter");
+    assert!(requests >= (lams.len() + 2) as f64, "requests={requests}");
+    let exact = d0.get("exact_hits").and_then(|v| v.as_f64()).expect("exact_hits counter");
+    assert!(exact >= 1.0, "exact_hits={exact}");
+    drop(client);
+
+    let final_stats = server.shutdown();
+    assert!(final_stats.total(|d| d.exact_hits) >= 1);
+    assert!(final_stats.connections >= 1);
+}
+
+#[test]
+fn watermark_zero_makes_every_cold_solve_busy() {
+    let (ds, prob) = linear_dataset(0, 11);
+    let cfg = ServeConfig { high_watermark: 0, retry_after_ms: 77, ..test_config() };
+    let server = start(cfg, vec![ds]);
+    let lam = prob.lambda_max() * 0.3;
+
+    let mut client = connect(&server);
+    match client.solve(0, lam, EPS, Method::Saif).expect("rpc") {
+        Response::Busy { retry_after_ms } => assert_eq!(retry_after_ms, 77),
+        other => panic!("expected Busy past the watermark, got {other:?}"),
+    }
+    // the connection is NOT wedged: the stats surface still answers
+    match client.stats().expect("stats rpc") {
+        Response::Stats(_) => {}
+        other => panic!("expected Stats, got {other:?}"),
+    }
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.total(|d| d.rejected), 1, "the Busy must be counted as rejected");
+}
+
+#[test]
+fn concurrent_hammer_terminates_with_busy_or_certified_answers() {
+    let (ds, prob) = linear_dataset(0, 13);
+    // tight watermark + concurrent clients: some get Busy, everyone
+    // gets SOME answer (no deadlock, no dropped connection)
+    let cfg = ServeConfig { high_watermark: 2, max_conns: 8, ..test_config() };
+    let server = start(cfg, vec![ds]);
+    let addr = server.local_addr();
+    let lams = descending_grid(&prob, 4);
+
+    let outcomes = saif::runtime::pool::scoped_run(6, |ci| {
+        let mut client = Client::connect(addr).expect("connect");
+        client.set_read_timeout(Some(Duration::from_secs(120))).expect("timeout");
+        let (mut ok, mut busy) = (0usize, 0usize);
+        for r in 0..4 {
+            let lam = lams[(ci + r) % lams.len()];
+            match client.solve(0, lam, EPS, Method::Saif).expect("rpc") {
+                Response::Solved(pt) => {
+                    common::assert_certificate(&prob, &pt.beta, lam, pt.gap, EPS);
+                    ok += 1;
+                }
+                Response::Busy { .. } => busy += 1,
+                other => panic!("client {ci}: unexpected {other:?}"),
+            }
+        }
+        (ok, busy)
+    })
+    .expect("clients terminate");
+
+    let total_ok: usize = outcomes.iter().map(|(ok, _)| ok).sum();
+    assert!(total_ok >= 1, "at least some requests must be served under pressure");
+    server.shutdown();
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_never_kill_the_server() {
+    let (ds, prob) = linear_dataset(0, 17);
+    let server = start(test_config(), vec![ds]);
+    let lam = prob.lambda_max() * 0.3;
+
+    // 1) garbage magic: typed BAD_FRAME error, connection closed
+    let mut c = connect(&server);
+    c.send_raw(&[0xde, 0xad, 0xbe, 0xef, 1, 0, 1, 0, 0, 0, 0, 0]).expect("send");
+    match c.recv().expect("error reply") {
+        Response::Error { code: ec, .. } => assert_eq!(ec, code::BAD_FRAME),
+        other => panic!("expected Error, got {other:?}"),
+    }
+
+    // 2) truncated header then hangup: the server just drops the conn
+    let mut c = connect(&server);
+    c.send_raw(&[0x46, 0x49]).expect("send");
+    drop(c);
+
+    // 3) valid header, garbage payload: typed error on an INTACT
+    //    connection — the same socket then serves a real solve
+    let mut c = connect(&server);
+    let hdr = saif::serve::protocol::header(saif::serve::protocol::kind::SOLVE, 4)
+        .expect("header");
+    let mut frame = hdr.to_vec();
+    frame.extend_from_slice(&[9, 9, 9, 9]);
+    c.send_raw(&frame).expect("send");
+    match c.recv().expect("error reply") {
+        Response::Error { .. } => {}
+        other => panic!("expected Error for garbage payload, got {other:?}"),
+    }
+    let pt = solved(c.solve(0, lam, EPS, Method::Saif).expect("solve after bad frame"));
+    common::assert_certificate(&prob, &pt.beta, lam, pt.gap, EPS);
+
+    // 4) unknown dataset and invalid λ draw typed errors, not hangs
+    match c.solve(99, lam, EPS, Method::Saif).expect("rpc") {
+        Response::Error { code: ec, .. } => assert_eq!(ec, code::UNKNOWN_DATASET),
+        other => panic!("expected UNKNOWN_DATASET, got {other:?}"),
+    }
+    match c.request(&Request::Solve { dataset: 0, lam: -1.0, eps: EPS, method: Method::Saif }) {
+        Ok(Response::Error { code: ec, .. }) => assert_eq!(ec, code::BAD_REQUEST),
+        other => panic!("expected BAD_REQUEST, got {other:?}"),
+    }
+    drop(c);
+
+    let stats = server.shutdown();
+    assert!(stats.protocol_errors >= 2, "protocol errors must be counted");
+}
+
+#[test]
+fn poisoned_worker_recovers_without_dropping_accepted_requests() {
+    // dataset 0: linear (Saif fine); dataset 1: logistic — Group is
+    // LS-only and panics the worker's solve task, poisoning the slot
+    let (ds0, prob0) = linear_dataset(0, 19);
+    let prob1 = Arc::new(synth::gisette_like(30, 40, 23).problem());
+    let ds1 = ServeDataset {
+        key: 1,
+        name: "logit".into(),
+        problem: prob1.clone(),
+        tree: None,
+    };
+    let server = start(test_config(), vec![ds0, ds1]); // workers=1: one slot for both
+    let addr = server.local_addr();
+    let lam0 = prob0.lambda_max() * 0.3;
+    let lam1 = prob1.lambda_max() * 0.5;
+
+    // two clients race: one poisons the slot, one submits good work
+    // that must survive the death (resubmitted from the in-flight
+    // table after recovery — never silently dropped)
+    let outcomes = saif::runtime::pool::scoped_run(2, |ci| {
+        let mut client = Client::connect(addr).expect("connect");
+        client.set_read_timeout(Some(Duration::from_secs(120))).expect("timeout");
+        if ci == 0 {
+            client.solve(1, lam1, EPS, Method::Group { size: 4 }).expect("poison rpc")
+        } else {
+            client.solve(0, lam0, EPS, Method::Saif).expect("good rpc")
+        }
+    })
+    .expect("clients terminate");
+
+    // the poison request gets a typed failure (died twice ⇒ gave up)
+    match &outcomes[0] {
+        Response::Error { code: ec, .. } => assert_eq!(*ec, code::SOLVE_FAILED),
+        other => panic!("poison request: expected SOLVE_FAILED, got {other:?}"),
+    }
+    // the good request completes with a certificate, whatever the
+    // interleaving (before the death, orphaned by it, or after)
+    match &outcomes[1] {
+        Response::Solved(pt) => {
+            common::assert_certificate(&prob0, &pt.beta, lam0, pt.gap, EPS)
+        }
+        other => panic!("good request: expected Solved, got {other:?}"),
+    }
+
+    // the slot respawned cold: the same server keeps serving both
+    // datasets after the poison
+    let mut client = connect(&server);
+    let pt = solved(client.solve(0, lam0 * 0.9, EPS, Method::Saif).expect("post-recovery"));
+    common::assert_certificate(&prob0, &pt.beta, lam0 * 0.9, pt.gap, EPS);
+    let pt = solved(client.solve(1, lam1, EPS, Method::Saif).expect("poisoned dataset again"));
+    common::assert_certificate(&prob1, &pt.beta, lam1, pt.gap, EPS);
+    drop(client);
+
+    let stats = server.shutdown();
+    assert!(
+        stats.total(|d| d.retried) + stats.total(|d| d.errors) >= 1,
+        "the death must be visible in the counters"
+    );
+}
+
+#[test]
+fn connection_cap_rejects_with_busy_at_accept() {
+    let (ds, _prob) = linear_dataset(0, 29);
+    let cfg = ServeConfig { max_conns: 0, ..test_config() };
+    let server = start(cfg, vec![ds]);
+    let mut c = Client::connect(server.local_addr()).expect("tcp connect still accepts");
+    c.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    match c.recv().expect("busy frame") {
+        Response::Busy { .. } => {}
+        other => panic!("expected Busy at the connection cap, got {other:?}"),
+    }
+    drop(c);
+    let stats = server.shutdown();
+    assert!(stats.conns_rejected >= 1);
+}
+
+/// Soak: sustained load through repeated start/serve/shutdown cycles.
+/// Gated on SAIF_SOAK_SECS (unset ⇒ trivially passes) so CI can run a
+/// bounded soak without slowing the default suite.
+#[test]
+fn soak_runs_until_deadline_when_enabled() {
+    let secs: u64 = match std::env::var("SAIF_SOAK_SECS") {
+        Ok(s) => s.parse().unwrap_or(0),
+        Err(_) => 0,
+    };
+    if secs == 0 {
+        return;
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(secs);
+    let mut cycles = 0u64;
+    while std::time::Instant::now() < deadline {
+        let cfg = saif::serve::bench::BenchServeConfig::quick();
+        let res = saif::serve::bench::run(&cfg).expect("soak cycle");
+        assert_eq!(res.errors, 0, "soak cycle {cycles} saw request errors");
+        cycles += 1;
+    }
+    assert!(cycles >= 1, "at least one soak cycle must complete");
+    println!("soak: {cycles} cycles in {secs}s");
+}

@@ -106,6 +106,7 @@ fn coordinator_saif_batch_is_bitwise_a_path_session() {
             lam,
             method: Method::Saif,
             tree: None,
+            warm: None,
             spec: spec.clone(),
         })
         .collect();
@@ -177,6 +178,7 @@ fn coordinator_serves_homotopy_fused_and_group() {
                 lam: lam_max * f,
                 method,
                 tree: None,
+                warm: None,
                 spec: SolveSpec { eps: 1e-9, ..Default::default() },
             });
             id += 1;
@@ -225,6 +227,7 @@ fn coordinator_serves_fused_with_dataset_tree() {
             lam: lam_max * f,
             method: Method::Fused,
             tree: Some(tree.clone()),
+            warm: None,
             spec: SolveSpec { eps: 1e-9, ..Default::default() },
         })
         .collect();
@@ -273,6 +276,7 @@ fn dead_worker_is_an_error_not_a_hang() {
         lam,
         method: Method::Group { size: 4 }, // LS-only: panics on logistic
         tree: None,
+        warm: None,
         spec: SolveSpec::default(),
     })
     .expect("first submit reaches the live worker");
@@ -287,6 +291,7 @@ fn dead_worker_is_an_error_not_a_hang() {
             lam,
             method: Method::Saif,
             tree: None,
+            warm: None,
             spec: SolveSpec::default(),
         })
         .expect_err("submit to a dead worker must fail");

@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
-"""Bench-regression guard for BENCH_kernels.json / BENCH_methods.json
-(std-lib only).
+"""Bench-regression guard for BENCH_kernels.json / BENCH_methods.json /
+BENCH_serve.json (std-lib only).
 
 Usage: bench_guard.py [--require-real-baseline] <baseline.json> <fresh.json>
 
@@ -12,7 +12,11 @@ fixed scan/epoch field list below; method-shootout records (marker
 "bench":"methods") guard every numeric `*_secs` row except the ooc
 scenarios and the `*_curve_secs` arrays — the schema is derived from
 the records themselves, so new scenario/method rows are guarded the
-moment the baseline carries real numbers for them.
+moment the baseline carries real numbers for them. Serving records
+(marker "bench":"serve") guard every numeric `*_us` field
+(lower-better latency percentiles) and every `*_rps` field
+(higher-better throughput — a regression is the fresh value dropping
+below baseline by more than the tolerance).
 
 Null baselines (the pre-toolchain placeholder) and missing fields are
 skipped with a LOUD note — the guard only ever compares real numbers
@@ -46,6 +50,29 @@ GUARDED_US_FIELDS = [
 
 def is_methods_record(rec):
     return isinstance(rec, dict) and rec.get("bench") == "methods"
+
+
+def is_serve_record(rec):
+    return isinstance(rec, dict) and rec.get("bench") == "serve"
+
+
+def serve_fields(baseline, fresh):
+    """Guarded (field, direction) list for a serving record: every
+    numeric `*_us` key is lower-better latency, every `*_rps` key is
+    higher-better throughput. Schema-derived like the methods mode, so
+    new fields are guarded once the baseline carries real numbers."""
+    lower, higher = set(), set()
+    for rec in (baseline, fresh):
+        if not isinstance(rec, dict):
+            continue
+        for k, v in rec.items():
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                continue
+            if k.endswith("_us"):
+                lower.add(k)
+            elif k.endswith("_rps"):
+                higher.add(k)
+    return [(k, "lower") for k in sorted(lower)] + [(k, "higher") for k in sorted(higher)]
 
 
 def methods_fields(baseline, fresh):
@@ -124,18 +151,25 @@ def main():
         print("bench guard: fresh record unreadable — did the bench run?", file=sys.stderr)
         return 1
 
-    if is_methods_record(baseline) or is_methods_record(fresh):
-        fields = methods_fields(baseline, fresh)
+    if is_serve_record(baseline) or is_serve_record(fresh):
+        fields = serve_fields(baseline, fresh)
+        if not fields:
+            return placeholder_warning(
+                "serve record carries no numeric *_us/*_rps rows (placeholder baseline)",
+                require_real,
+            )
+    elif is_methods_record(baseline) or is_methods_record(fresh):
+        fields = [(f, "lower") for f in methods_fields(baseline, fresh)]
         if not fields:
             return placeholder_warning(
                 "methods record carries no numeric *_secs rows (placeholder baseline)",
                 require_real,
             )
     else:
-        fields = GUARDED_US_FIELDS
+        fields = [(f, "lower") for f in GUARDED_US_FIELDS]
 
     regressions, compared, skipped = [], 0, []
-    for field in fields:
+    for field, direction in fields:
         base, new = baseline.get(field), fresh.get(field)
         if not isinstance(base, (int, float)) or not isinstance(new, (int, float)):
             skipped.append(field)
@@ -146,7 +180,8 @@ def main():
         compared += 1
         ratio = new / base
         marker = ""
-        if ratio > 1.0 + tol:
+        regressed = ratio > 1.0 + tol if direction == "lower" else ratio < 1.0 - tol
+        if regressed:
             regressions.append((field, base, new, ratio))
             marker = "  <-- REGRESSION"
         print(f"  {field:28s} {base:12.2f} -> {new:12.2f}  ({ratio:5.2f}x){marker}")
@@ -164,7 +199,7 @@ def main():
             file=sys.stderr,
         )
         for field, base, new, ratio in regressions:
-            print(f"  {field}: {base:.2f}us -> {new:.2f}us ({ratio:.2f}x)", file=sys.stderr)
+            print(f"  {field}: {base:.2f} -> {new:.2f} ({ratio:.2f}x)", file=sys.stderr)
         return 1
     print(f"bench guard: {compared} guarded rows within {tol:.0%} of baseline")
     return 0

@@ -10,8 +10,8 @@
 //! - `undocumented-unsafe` (L2): every `unsafe` keyword (blocks *and*
 //!   `unsafe impl`) must carry a `SAFETY:` comment within the 5 lines above.
 //! - `unordered-map` (L3): no `HashMap` / `HashSet` in result-producing
-//!   modules (`solver`, `cm`, `saif`, `screening`, `coordinator`, `linalg`) —
-//!   unordered iteration is how determinism dies silently.
+//!   modules (`solver`, `cm`, `saif`, `screening`, `coordinator`, `linalg`,
+//!   `serve`) — unordered iteration is how determinism dies silently.
 //! - `non-total-order` (L4): no `partial_cmp` and no `f64::max` / `f64::min`
 //!   folds on possibly-NaN data — use `total_cmp` (see `util::order`).
 //!   Unlike the other conditional lints this one applies in `#[cfg(test)]`
@@ -19,8 +19,9 @@
 //!   assertion it feeds (sites where the lossy fold is intended carry a
 //!   reasoned waiver).
 //! - `unchecked-cast` (L5): no bare `as usize` / `as u64` casts in the
-//!   `.saifbin` header/offset decoders (`data/io.rs`, `linalg/ooc.rs`) —
-//!   use `try_from` or checked arithmetic on untrusted on-disk values.
+//!   untrusted-input decoders — the `.saifbin` header/offset readers
+//!   (`data/io.rs`, `linalg/ooc.rs`) and the serving wire-protocol codec
+//!   (`serve/protocol.rs`) — use `try_from` or checked arithmetic there.
 //! - `lib-panic` (L6): no `.unwrap()` / `.expect(` / `panic!` in library
 //!   code outside `#[cfg(test)]` regions (the poison-recovery idiom
 //!   `unwrap_or_else(|e| e.into_inner())` contains no banned token and
@@ -58,10 +59,13 @@ const LINTS: [&str; 6] = [
 ];
 
 /// Modules whose output feeds solver results; L3 applies only here.
-const RESULT_MODULES: [&str; 6] = ["solver", "cm", "saif", "screening", "coordinator", "linalg"];
+/// `serve` qualifies because its λ-grid cache and in-flight table decide
+/// which β bytes clients receive.
+const RESULT_MODULES: [&str; 7] =
+    ["solver", "cm", "saif", "screening", "coordinator", "linalg", "serve"];
 
 /// Files doing untrusted header/offset decoding; L5 applies only here.
-const CAST_FILES: [&str; 2] = ["data/io.rs", "linalg/ooc.rs"];
+const CAST_FILES: [&str; 3] = ["data/io.rs", "linalg/ooc.rs", "serve/protocol.rs"];
 
 /// Binary-facing top-level modules where process-exiting panics are the
 /// error channel; L6 does not apply (nor to `main.rs`).
