@@ -10,7 +10,8 @@ cd "$(dirname "$0")/rust"
 # Invariant linter first (tools/vet, zero-dependency): deny-by-default
 # lints for raw thread spawns, undocumented unsafe, unordered maps in
 # result-producing modules, NaN-lossy comparisons, bare casts in the
-# .saifbin decoders, and library panics — fix the site or add a
+# .saifbin decoders, library panics, and stray f32 in the solver stack
+# outside linalg/mixed.rs — fix the site or add a
 # `// vet: allow(<lint>): <reason>` waiver (docs/INVARIANTS.md).
 cargo run --release --quiet --manifest-path ../tools/vet/Cargo.toml -- src
 
@@ -25,6 +26,14 @@ cargo build --release
 SAIF_TEST_THREADS=1 cargo test -q
 SAIF_TEST_THREADS=4 SAIF_TEST_POOL=persistent cargo test -q
 SAIF_TEST_THREADS=4 SAIF_TEST_POOL=scoped cargo test -q
+
+# The mixed-precision (f32-scan) safety suite and the kernel-contract
+# suite, explicitly by name on both threading substrates: a screen that
+# discards a feature the f64 screen keeps, or a blocked kernel that
+# drifts bitwise, must fail with the suite's name in the log even when
+# someone later trims the full-matrix legs above.
+SAIF_TEST_THREADS=4 SAIF_TEST_POOL=persistent cargo test -q --test mixed --test kernels
+SAIF_TEST_THREADS=4 SAIF_TEST_POOL=scoped cargo test -q --test mixed --test kernels
 
 # Serving soak: the loopback e2e suite (tests/serve.rs) already ran in
 # all three legs above; this leg additionally hammers the TCP server
@@ -79,6 +88,10 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     if command -v python3 >/dev/null 2>&1; then
         # shellcheck disable=SC2086  # intentional word-split of flags
         python3 ../tools/bench_guard.py $guard_flags "$baseline" ../BENCH_methods.json
+        # Advisory artifact: per-scenario time-to-ε SVGs from the fresh
+        # shootout record (stdlib-only; a placeholder record no-ops).
+        # Never gates — `|| true` keeps plot bugs out of the tier-1 lane.
+        python3 ../tools/plot_curves.py ../BENCH_methods.json ../out/curves || true
     else
         echo "bench guard: python3 not found; skipping regression comparison" >&2
     fi

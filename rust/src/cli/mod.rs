@@ -7,7 +7,7 @@
 //!                  [--libsvm path --logistic [--dense]]
 //!                  [--saifbin path.saifbin] [--design mem|ooc]
 //!                  [--threads serial|auto|N] [--epoch-shards auto|N]
-//!                  [--pool persistent|scoped]
+//!                  [--pool persistent|scoped] [--precision f64|mixed-f32]
 //! repro path       --dataset sim --lambdas 0.9:0.01:16 [--method saif]
 //!                  [--engine native|pjrt] [--eps 1e-6] [...]
 //! repro convert    --libsvm in.svm --out out.saifbin [--logistic]
@@ -43,7 +43,10 @@
 //! solve trajectory bitwise reproducible across machines). `--pool`
 //! selects the threading substrate: the persistent worker pool
 //! (default, no thread spawns on the hot path) or scoped
-//! spawn-per-call — bitwise-identical results either way.
+//! spawn-per-call — bitwise-identical results either way. `--precision
+//! mixed-f32` runs SAIF's full-p screening scans through the f32
+//! shadow design with a certified rounding margin (`linalg::mixed`);
+//! solves, KKT checks and coefficients stay f64.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -51,7 +54,7 @@ use std::sync::Arc;
 use crate::cm::{Engine, EpochShards, PoolMode};
 use crate::coordinator::{Coordinator, EngineKind, SolveRequest};
 use crate::data;
-use crate::linalg::Parallelism;
+use crate::linalg::{Parallelism, Precision};
 use crate::runtime::PjrtEngine;
 use crate::solver::{Method, SolveSpec, Solver};
 use crate::util::tmax;
@@ -142,21 +145,22 @@ fn valid_flags(cmd: &str) -> Option<Vec<&'static str>> {
             v.extend_from_slice(DATASET_FLAGS);
             v.extend_from_slice(&[
                 "lambda", "lambda-frac", "method", "engine", "eps", "threads", "epoch-shards",
-                "pool",
+                "pool", "precision",
             ]);
         }
         "path" => {
             v.extend_from_slice(DATASET_FLAGS);
             v.extend_from_slice(&[
                 "lambdas", "method", "engine", "eps", "threads", "epoch-shards", "pool",
+                "precision",
             ]);
         }
         "convert" => v.extend_from_slice(&["libsvm", "out", "logistic"]),
         "experiment" => v.extend_from_slice(&["id", "all", "out"]),
         "serve" => v.extend_from_slice(&[
             "workers", "datasets", "lambdas", "method", "engine", "eps", "threads",
-            "epoch-shards", "pool", "design", "listen", "max-conns", "high-watermark",
-            "retry-after-ms", "cache-capacity",
+            "epoch-shards", "pool", "precision", "design", "listen", "max-conns",
+            "high-watermark", "retry-after-ms", "cache-capacity",
         ]),
         "bench-serve" => v.extend_from_slice(&["quick"]),
         "cv" => {
@@ -212,7 +216,7 @@ USAGE:
                    [--libsvm <path> [--logistic] [--dense]]
                    [--saifbin <path>] [--design mem|ooc]
                    [--threads serial|auto|N] [--epoch-shards auto|N]
-                   [--pool persistent|scoped]
+                   [--pool persistent|scoped] [--precision f64|mixed-f32]
   repro path       --dataset <name> --lambdas a:b:k   warm-chained λ-path
                    [--method ...] [--engine ...] [--eps 1e-6] [...]
                    (k log-spaced λ from a·λ_max down to b·λ_max)
@@ -274,6 +278,11 @@ USAGE:
   worker pool (zero thread spawns on the solve hot path); 'scoped'
   spawns per call, the pre-pool behavior. Results are bitwise
   identical under both.
+  --precision mixed-f32 routes SAIF's full-p screening scans through a
+  packed f32 shadow of the design; every f32 score is inflated by a
+  provable rounding bound before the ball test, so no feature the f64
+  scan would keep is ever discarded. Solves, duality gaps and KKT
+  certificates stay f64 (see docs/KERNELS.md). Default: f64.
 ";
 
 fn cmd_list() -> i32 {
@@ -368,6 +377,14 @@ fn pool_arg(args: &Args) -> Result<PoolMode, String> {
         None => Ok(PoolMode::default()),
         Some(s) => PoolMode::parse(s)
             .ok_or_else(|| format!("bad --pool value '{s}' (persistent|scoped)")),
+    }
+}
+
+fn precision_arg(args: &Args) -> Result<Precision, String> {
+    match args.get("precision") {
+        None => Ok(Precision::default()),
+        Some(s) => Precision::parse(s)
+            .ok_or_else(|| format!("bad --precision value '{s}' (f64|mixed-f32)")),
     }
 }
 
@@ -477,6 +494,7 @@ fn solve_spec(args: &Args) -> Result<SolveSpec, String> {
         parallelism: Some(parallelism_arg(args)?),
         epoch_shards: Some(epoch_shards_arg(args)?),
         pool: Some(pool_arg(args)?),
+        precision: Some(precision_arg(args)?),
         ..Default::default()
     })
 }
@@ -705,6 +723,13 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    let precision = match precision_arg(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let design = match design_arg(args) {
         Ok(d) => d,
         Err(e) => {
@@ -722,9 +747,10 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 
     println!(
-        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={}, scan threads={par:?}, epoch shards={shards:?}, pool={}, design={}",
+        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={}, scan threads={par:?}, epoch shards={shards:?}, pool={}, precision={}, design={}",
         method.name(),
         pool.name(),
+        precision.as_str(),
         if ooc { "ooc" } else { "mem" },
     );
     let builder = Coordinator::builder()
@@ -732,7 +758,8 @@ fn cmd_serve(args: &Args) -> i32 {
         .engine(engine)
         .parallelism(par)
         .epoch_shards(shards)
-        .pool(pool);
+        .pool(pool)
+        .precision(precision);
     let grid = |lam_max: f64| -> Vec<f64> {
         (1..=n_lambdas)
             .map(|k| lam_max * (1e-2f64).powf(k as f64 / n_lambdas as f64))
@@ -894,6 +921,13 @@ fn cmd_serve_listen(args: &Args) -> i32 {
             return 2;
         }
     };
+    let precision = match precision_arg(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let cfg = ServeConfig {
         workers: args.get_usize("workers", 2),
         max_conns: args.get_usize("max-conns", 32),
@@ -904,6 +938,7 @@ fn cmd_serve_listen(args: &Args) -> i32 {
         parallelism: par,
         epoch_shards: shards,
         pool_mode: pool,
+        precision,
         ..ServeConfig::default()
     };
     let n_datasets = args.get_usize("datasets", 3);

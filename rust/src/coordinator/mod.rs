@@ -51,7 +51,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::cm::{Engine, EpochShards, NativeEngine, PoolMode};
-use crate::linalg::Parallelism;
+use crate::linalg::{Parallelism, Precision};
 use crate::metrics::LatencyStats;
 use crate::model::Problem;
 use crate::runtime::{pool, PjrtEngine};
@@ -164,6 +164,7 @@ pub struct CoordinatorBuilder {
     parallelism: Parallelism,
     epoch_shards: EpochShards,
     pool: PoolMode,
+    precision: Precision,
 }
 
 impl Default for CoordinatorBuilder {
@@ -174,6 +175,7 @@ impl Default for CoordinatorBuilder {
             parallelism: Parallelism::Serial,
             epoch_shards: EpochShards::FollowParallelism,
             pool: PoolMode::default(),
+            precision: Precision::default(),
         }
     }
 }
@@ -221,6 +223,15 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Default numeric policy for the workers' screening scans
+    /// (default f64; see [`crate::linalg::mixed`] for what `MixedF32`
+    /// changes — and what it provably does not). Per-request
+    /// `SolveSpec` overrides win.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// A fresh, cold worker slot with this builder's engine defaults —
     /// used for every slot at [`CoordinatorBuilder::build`] time and
     /// again by [`Coordinator::recover_worker`] when a dead slot is
@@ -241,7 +252,7 @@ impl CoordinatorBuilder {
                 native,
                 pjrt,
                 warm: BTreeMap::new(),
-                defaults: (self.parallelism, self.epoch_shards, self.pool),
+                defaults: (self.parallelism, self.epoch_shards, self.pool, self.precision),
             }),
         })
     }
@@ -324,9 +335,9 @@ struct WorkerState {
     /// (fused is piecewise-constant, not sparse) can never seed a
     /// plain-LASSO session on the same dataset.
     warm: BTreeMap<(u64, Method), (f64, Vec<(usize, f64)>)>,
-    /// Build-time (parallelism, epoch_shards, pool) defaults that
-    /// per-request `SolveSpec` overrides fall back to.
-    defaults: (Parallelism, EpochShards, PoolMode),
+    /// Build-time (parallelism, epoch_shards, pool, precision)
+    /// defaults that per-request `SolveSpec` overrides fall back to.
+    defaults: (Parallelism, EpochShards, PoolMode, Precision),
 }
 
 /// Forgiving lock: a poisoned mutex only ever belongs to a slot whose
@@ -651,7 +662,7 @@ fn process_batch(
     mut batch: Vec<SolveRequest>,
     res_tx: &Sender<SolveResponse>,
 ) {
-    let (par, shards, pool_mode) = state.defaults;
+    let (par, shards, pool_mode, precision) = state.defaults;
     // dataset-major, λ-descending order ⇒ warm starts chain down paths
     batch.sort_by(|a, b| {
         a.dataset_key
@@ -678,7 +689,13 @@ fn process_batch(
 
         let first = &chunk[0];
         let prob = &*first.problem;
-        let spec = &first.spec;
+        // precision is a solver knob, not an engine knob: fold the
+        // worker default into the spec the solver factory sees
+        let mut spec = first.spec.clone();
+        if spec.precision.is_none() {
+            spec.precision = Some(precision);
+        }
+        let spec = &spec;
         let use_pjrt = match &state.pjrt {
             Some(e) => e.supports(prob, 1) && prob.offset.is_none(),
             None => false,

@@ -337,8 +337,18 @@ impl Design {
     pub fn cols_axpy(&self, updates: &[(usize, f64)], out: &mut [f64]) {
         match self {
             Design::Dense(m) => {
-                for &(j, alpha) in updates {
-                    super::ops::axpy(alpha, m.col(j), out);
+                // row-blocked: each block of `out` stays cache-resident
+                // while every update touches it. The per-ELEMENT update
+                // order is exactly the sequential fold's (updates
+                // order), so the result is bitwise identical — axpy has
+                // no reduction, only independent `b += α·a` per element.
+                let n = m.n_rows();
+                for r0 in (0..n).step_by(super::mat::ROW_BLOCK) {
+                    let r1 = (r0 + super::mat::ROW_BLOCK).min(n);
+                    let ob = &mut out[r0..r1];
+                    for &(j, alpha) in updates {
+                        super::ops::axpy(alpha, &m.col(j)[r0..r1], ob);
+                    }
                 }
             }
             Design::Sparse(m) => m.cols_axpy(updates, out),
@@ -410,14 +420,6 @@ impl Design {
         }
     }
 
-    /// out = Xᵀ v, chunked over columns across `par.threads()` workers
-    /// of the spawn-per-call scoped substrate — kept as the
-    /// compatibility spelling of [`Design::mul_t_vec_pool`] with
-    /// [`PoolMode::Scoped`].
-    pub fn mul_t_vec_par(&self, v: &[f64], out: &mut [f64], par: Parallelism) {
-        self.mul_t_vec_pool(v, out, par, PoolMode::Scoped)
-    }
-
     /// out = Xᵀ v, chunked over columns into `par.threads()` tasks on
     /// the substrate `mode` selects (the persistent pool, or scoped
     /// spawn-per-call). Each task computes a disjoint column chunk with
@@ -455,6 +457,12 @@ impl Design {
             let start = c * chunk;
             match self {
                 Design::OocCsc(m) => {
+                    m.mul_t_vec_range(start, start + part.len(), v, &mut **part);
+                }
+                Design::Dense(m) => {
+                    // the same blocked kernel as the serial scan, over
+                    // this task's column range — bitwise identical per
+                    // column by the lane contract
                     m.mul_t_vec_range(start, start + part.len(), v, &mut **part);
                 }
                 _ => {
@@ -629,11 +637,11 @@ mod tests {
             design.mul_t_vec(&v, &mut serial);
             for threads in [2, 3, 7, 64] {
                 let mut par = vec![0.0; p];
-                design.mul_t_vec_par(&v, &mut par, Parallelism::Fixed(threads));
+                design.mul_t_vec_pool(&v, &mut par, Parallelism::Fixed(threads), PoolMode::Scoped);
                 assert_eq!(serial, par, "threads={threads}");
             }
             let mut auto = vec![0.0; p];
-            design.mul_t_vec_par(&v, &mut auto, Parallelism::Auto);
+            design.mul_t_vec_pool(&v, &mut auto, Parallelism::Auto, PoolMode::Scoped);
             assert_eq!(serial, auto);
         }
     }
@@ -816,7 +824,7 @@ mod tests {
         ce.mul_t_vec(&v, &mut serial);
         for threads in [2, 3, 8] {
             let mut par = vec![0.0; p];
-            ce.mul_t_vec_par(&v, &mut par, Parallelism::Fixed(threads));
+            ce.mul_t_vec_pool(&v, &mut par, Parallelism::Fixed(threads), PoolMode::Scoped);
             assert_eq!(serial, par, "threads={threads}");
         }
     }

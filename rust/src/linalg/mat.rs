@@ -1,6 +1,23 @@
 //! Column-major dense matrix.
 
-use super::ops::{axpy, dot};
+use super::ops::{axpy, dot, reduce_lanes, UNROLL};
+
+/// Column-strip width of the blocked dense scan: [`Mat::mul_t_vec`]
+/// walks `COL_STRIP` contiguous columns per row block, so one block of
+/// `v` is reused across the whole strip while it is still in L1.
+/// Affects traversal order over *columns* only — per-column sums are
+/// independent, so this has no numerical effect at all.
+pub const COL_STRIP: usize = 32;
+
+/// Row-block height of the blocked dense scan, in rows. Must be a
+/// multiple of [`UNROLL`]: the per-column lane accumulators stay live
+/// across row blocks, and blocks that are whole numbers of unroll
+/// groups keep lane `l` on elements ≡ l (mod UNROLL) in increasing row
+/// order — which makes the blocked result **bitwise identical** to the
+/// unblocked [`dot`] for ANY such block size (property-tested in
+/// `tests/kernels.rs`). 1024 rows × 8 B = 8 KiB of `v` per block,
+/// comfortably L1-resident alongside a strip of column data.
+pub const ROW_BLOCK: usize = 1024;
 
 /// Column-major dense matrix of f64. Columns are contiguous: the
 /// layout every solver in this repo walks.
@@ -84,11 +101,73 @@ impl Mat {
     }
 
     /// out = X^T v  (v has n_rows entries) — the screening scan.
+    /// Cache-blocked ([`COL_STRIP`] columns × [`ROW_BLOCK`] rows) with
+    /// [`UNROLL`]-wide lane accumulators per column; bitwise identical
+    /// to `dot(col, v)` per column by the lane contract in `ops.rs`.
     pub fn mul_t_vec(&self, v: &[f64], out: &mut [f64]) {
-        assert_eq!(v.len(), self.n_rows);
         assert_eq!(out.len(), self.n_cols);
-        for j in 0..self.n_cols {
-            out[j] = dot(self.col(j), v);
+        self.mul_t_vec_range_blocked(0, self.n_cols, v, out, ROW_BLOCK)
+    }
+
+    /// out[j − j0] = x_jᵀ v for j in [j0, j1) — the per-task body of
+    /// the pooled chunked scan, same blocked kernel as the full scan.
+    pub fn mul_t_vec_range(&self, j0: usize, j1: usize, v: &[f64], out: &mut [f64]) {
+        self.mul_t_vec_range_blocked(j0, j1, v, out, ROW_BLOCK)
+    }
+
+    /// [`Mat::mul_t_vec`] with an explicit row-block height — exposed
+    /// so the block-size invariance property tests can sweep it.
+    /// `row_block` must be a positive multiple of [`UNROLL`].
+    #[doc(hidden)]
+    pub fn mul_t_vec_blocked(&self, v: &[f64], out: &mut [f64], row_block: usize) {
+        assert_eq!(out.len(), self.n_cols);
+        self.mul_t_vec_range_blocked(0, self.n_cols, v, out, row_block)
+    }
+
+    fn mul_t_vec_range_blocked(
+        &self,
+        j0: usize,
+        j1: usize,
+        v: &[f64],
+        out: &mut [f64],
+        row_block: usize,
+    ) {
+        assert_eq!(v.len(), self.n_rows);
+        assert!(j0 <= j1 && j1 <= self.n_cols);
+        assert_eq!(out.len(), j1 - j0);
+        assert!(
+            row_block >= UNROLL && row_block % UNROLL == 0,
+            "row_block must be a positive multiple of UNROLL"
+        );
+        let n = self.n_rows;
+        let full = n - n % UNROLL;
+        let (vc, vr) = v.split_at(full);
+        for s0 in (j0..j1).step_by(COL_STRIP) {
+            let s1 = (s0 + COL_STRIP).min(j1);
+            let mut lanes = [[0.0f64; UNROLL]; COL_STRIP];
+            // lane accumulators stay live across row blocks: lane l of
+            // column j sees exactly the elements ≡ l (mod UNROLL), in
+            // increasing row order, for every block size — the blocked
+            // sum is bitwise-equal to the unblocked UNROLL-wide dot
+            for r0 in (0..full).step_by(row_block) {
+                let r1 = (r0 + row_block).min(full);
+                let vb = &vc[r0..r1];
+                for (j, lane) in (s0..s1).zip(lanes.iter_mut()) {
+                    let cb = &self.col(j)[r0..r1];
+                    for (a, b) in cb.chunks_exact(UNROLL).zip(vb.chunks_exact(UNROLL)) {
+                        for l in 0..UNROLL {
+                            lane[l] += a[l] * b[l];
+                        }
+                    }
+                }
+            }
+            for (j, lane) in (s0..s1).zip(lanes.iter()) {
+                let mut s = reduce_lanes(lane);
+                for (a, b) in self.col(j)[full..].iter().zip(vr.iter()) {
+                    s += a * b;
+                }
+                out[j - j0] = s;
+            }
         }
     }
 
@@ -211,5 +290,22 @@ mod tests {
         let m = small();
         let n2 = m.col_norms_sq();
         assert_eq!(n2, vec![5.0, 25.0]);
+    }
+
+    #[test]
+    fn blocked_scan_is_bitwise_per_column_dot() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(5);
+        let (n, p) = (37, COL_STRIP + 3); // odd rows + a partial strip
+        let m = Mat::from_fn(n, p, |_, _| rng.normal());
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let want: Vec<f64> = (0..p).map(|j| dot(m.col(j), &v)).collect();
+        for rb in [8, 16, 40, 1024] {
+            let mut got = vec![0.0; p];
+            m.mul_t_vec_blocked(&v, &mut got, rb);
+            for j in 0..p {
+                assert_eq!(got[j].to_bits(), want[j].to_bits(), "rb={rb} j={j}");
+            }
+        }
     }
 }

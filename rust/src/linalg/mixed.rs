@@ -1,0 +1,423 @@
+//! Mixed-precision (f32) screening scan with a provable safety margin.
+//!
+//! **This is the ONLY module in the solver stack allowed to touch
+//! `f32`** (enforced by the `mixed-precision-confined` vet lint, L7).
+//! The idea, following the GAP-safe observation that screening
+//! thresholds tolerate any rigorously bounded slack: run the O(n·p)
+//! recruitment scan over a packed f32 shadow of the design, then add a
+//! per-column rounding bound to each |score| so the reported value is a
+//! certified UPPER bound on the true f64 score. A feature is only
+//! screened out when even its inflated score fails the ball test, so
+//! the mixed screen can never discard a feature the f64 screen keeps.
+//! Active-block solves, duality gaps, KKT certificates and every served
+//! beta stay f64 — precision only ever affects *which columns get
+//! scanned into the active set*, never the numbers that leave a solve.
+//!
+//! # Rounding bound
+//!
+//! For a dot product of length m evaluated in f32 (any summation
+//! order), Higham's standard forward bound gives
+//! `|fl(xᵀv) − xᵀv| ≤ γ_m·‖x‖₂·‖v‖₂` with `γ_m = m·u/(1−m·u)` and
+//! u = 2⁻²⁴ the f32 unit roundoff. Converting the inputs to f32 adds
+//! one relative-u perturbation per operand. We charge
+//!
+//! ```text
+//! err_j = γ(nnz_j + C)·‖s_j‖₂·‖v‖₂  +  γ(n + C)·|μ_j|·√n·‖v‖₂
+//! ```
+//!
+//! with C = 8 covering both input conversions, the final product and
+//! (for the centered backend) the subtraction — the second term bounds
+//! the `μ_j·Σv` mean-correction path (Σv is an n-term f32 sum and
+//! `|Σv| ≤ √n·‖v‖₂`). Norms are f64, precomputed at pack time; `‖v‖₂`
+//! is f64, computed once per scan. See `docs/KERNELS.md` for the full
+//! derivation.
+
+use super::design::Design;
+use super::ops;
+
+/// Numeric policy for the screening scan (and ONLY the scan).
+/// `MixedF32` runs recruitment over the packed [`MixedShadow`] with the
+/// certified error bound folded into each score; everything downstream
+/// of screening is f64 under either setting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Everything in f64 (default).
+    #[default]
+    F64,
+    /// f32 screening scan + rounding bound; solves/certificates f64.
+    MixedF32,
+}
+
+impl Precision {
+    /// Parse a CLI/config value: "f64" or "mixed-f32".
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "mixed-f32" => Some(Precision::MixedF32),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::MixedF32 => "mixed-f32",
+        }
+    }
+}
+
+/// f32 unit roundoff (round-to-nearest), 2⁻²⁴.
+const U32: f64 = 5.960_464_477_539_063e-8;
+
+/// Slack ops charged per column on top of its summation length: two
+/// input conversions, the lane reduction, the final product/subtract.
+const C_OPS: usize = 8;
+
+/// Higham's γ for an (m + [`C_OPS`])-op f32 computation.
+fn gamma32(m: usize) -> f64 {
+    let t = (m + C_OPS) as f64 * U32;
+    assert!(t < 0.5, "column too long for the f32 error bound (m = {m})");
+    t / (1.0 - t)
+}
+
+/// Packed-f32 storage of the shadow. Both layouts are contiguous and
+/// minimal: the dense scan walks one flat col-major array, the sparse
+/// scan walks (u32 row, f32 val) pairs — the same shape a sparse-PJRT
+/// shape-bucketed transfer would consume, by design.
+enum Layout {
+    /// Col-major `n_rows × n_cols` f32.
+    Dense(Vec<f32>),
+    /// CSC with u32 row indices; `means` present for the centered
+    /// backend (the rank-1 correction is applied in f32 and bounded by
+    /// the second error term).
+    Sparse { col_ptr: Vec<usize>, rows: Vec<u32>, vals: Vec<f32>, means: Option<Vec<f32>> },
+}
+
+/// A packed f32 shadow of a [`Design`], used ONLY inside the screening
+/// ball test. [`MixedShadow::scores_upper`] returns certified upper
+/// bounds on |x_jᵀv|; see the module docs for the safety argument.
+pub struct MixedShadow {
+    n_rows: usize,
+    n_cols: usize,
+    layout: Layout,
+    /// Stored entries per column (the f32 summation length).
+    nnz: Vec<usize>,
+    /// f64 L2 norm of each STORED column (excludes the mean
+    /// correction, which gets its own bound term).
+    col_nrm: Vec<f64>,
+    /// `|μ_j|·√n` for the centered backend, 0 elsewhere.
+    mean_term: Vec<f64>,
+    /// Multiplier on the rounding bound. 1.0 in production; the
+    /// fault-injection tests shrink it to prove a too-small bound is
+    /// caught by the f64 KKT oracle rather than certified.
+    bound_scale: f64,
+}
+
+/// Chunk budget for the one-pass out-of-core packing read.
+const OOC_PACK_CHUNK_BYTES: usize = 4 << 20;
+
+impl MixedShadow {
+    /// Pack an f32 shadow of `x` (one full read of the design; the
+    /// out-of-core backend streams it in column order, once).
+    pub fn build(x: &Design) -> MixedShadow {
+        let (n, p) = (x.n_rows(), x.n_cols());
+        assert!(n <= u32::MAX as usize, "row index must fit u32");
+        let mut nnz = Vec::with_capacity(p);
+        let mut col_nrm = Vec::with_capacity(p);
+        let mut mean_term = vec![0.0; p];
+        let layout = match x {
+            Design::Dense(m) => {
+                let mut data = Vec::with_capacity(n * p);
+                for j in 0..p {
+                    let c = m.col(j);
+                    data.extend(c.iter().map(|&v| v as f32));
+                    nnz.push(n);
+                    col_nrm.push(ops::nrm2_sq(c).sqrt());
+                }
+                Layout::Dense(data)
+            }
+            Design::Sparse(m) => {
+                let (col_ptr, rows, vals) = Self::pack_csc(m, &mut nnz, &mut col_nrm);
+                Layout::Sparse { col_ptr, rows, vals, means: None }
+            }
+            Design::CenteredSparse { mat, means } => {
+                let (col_ptr, rows, vals) = Self::pack_csc(mat, &mut nnz, &mut col_nrm);
+                let sqrt_n = (n as f64).sqrt();
+                for (t, &mu) in mean_term.iter_mut().zip(means.iter()) {
+                    *t = mu.abs() * sqrt_n;
+                }
+                let m32: Vec<f32> = means.iter().map(|&mu| mu as f32).collect();
+                Layout::Sparse { col_ptr, rows, vals, means: Some(m32) }
+            }
+            Design::OocCsc(m) => {
+                let total = m.nnz();
+                let mut col_ptr = Vec::with_capacity(p + 1);
+                let mut rows = Vec::with_capacity(total);
+                let mut vals = Vec::with_capacity(total);
+                col_ptr.push(0);
+                m.stream_cols(0, p, OOC_PACK_CHUNK_BYTES, |_, r, v| {
+                    rows.extend(r.iter().map(|&i| i as u32));
+                    vals.extend(v.iter().map(|&x| x as f32));
+                    col_ptr.push(rows.len());
+                    nnz.push(r.len());
+                    col_nrm.push(ops::nrm2_sq(v).sqrt());
+                });
+                Layout::Sparse { col_ptr, rows, vals, means: None }
+            }
+        };
+        MixedShadow {
+            n_rows: n,
+            n_cols: p,
+            layout,
+            nnz,
+            col_nrm,
+            mean_term,
+            bound_scale: 1.0,
+        }
+    }
+
+    fn pack_csc(
+        m: &super::sparse::CscMat,
+        nnz: &mut Vec<usize>,
+        col_nrm: &mut Vec<f64>,
+    ) -> (Vec<usize>, Vec<u32>, Vec<f32>) {
+        let p = m.n_cols();
+        let mut col_ptr = Vec::with_capacity(p + 1);
+        let mut rows = Vec::with_capacity(m.nnz());
+        let mut vals = Vec::with_capacity(m.nnz());
+        col_ptr.push(0);
+        for j in 0..p {
+            let (r, v) = m.col(j);
+            rows.extend(r.iter().map(|&i| i as u32));
+            vals.extend(v.iter().map(|&x| x as f32));
+            col_ptr.push(rows.len());
+            nnz.push(r.len());
+            col_nrm.push(ops::nrm2_sq(v).sqrt());
+        }
+        (col_ptr, rows, vals)
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Scale the rounding bound — fault-injection hook for the safety
+    /// tests (a scale < 1 deliberately under-bounds the error so the
+    /// suite can prove the f64 KKT oracle catches the resulting unsafe
+    /// screen). Production code never calls this.
+    #[doc(hidden)]
+    pub fn set_bound_scale(&mut self, scale: f64) {
+        self.bound_scale = scale;
+    }
+
+    /// Certified upper bounds on the screening scores:
+    /// `out[j] ≥ |x_jᵀv|` for every column, computed as the f32 scan
+    /// result plus the per-column rounding bound (module docs). The
+    /// caller runs the ball test against these exactly as it would
+    /// against f64 scores — inflation only makes the test more
+    /// conservative, never unsafe.
+    pub fn scores_upper(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n_rows);
+        let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        let vnrm = ops::nrm2_sq(v).sqrt();
+        let mut out = vec![0.0; self.n_cols];
+        match &self.layout {
+            Layout::Dense(data) => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    let col = &data[j * self.n_rows..(j + 1) * self.n_rows];
+                    *o = dot_f32(col, &v32) as f64;
+                }
+            }
+            Layout::Sparse { col_ptr, rows, vals, means } => {
+                let sv: f32 = match means {
+                    Some(_) => v32.iter().sum(),
+                    None => 0.0,
+                };
+                for (j, o) in out.iter_mut().enumerate() {
+                    let (a, b) = (col_ptr[j], col_ptr[j + 1]);
+                    let mut s = gather_dot_f32(&rows[a..b], &vals[a..b], &v32);
+                    if let Some(m) = means {
+                        s -= m[j] * sv;
+                    }
+                    *o = s as f64;
+                }
+            }
+        }
+        for (j, o) in out.iter_mut().enumerate() {
+            let err = gamma32(self.nnz[j]) * self.col_nrm[j]
+                + gamma32(self.n_rows) * self.mean_term[j];
+            *o = o.abs() + self.bound_scale * err * vnrm;
+        }
+        out
+    }
+}
+
+/// 8-lane f32 dot (the f32 twin of `ops::dot`; order is irrelevant
+/// here — the γ bound holds for any summation order).
+#[inline]
+fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len();
+    let full = n - n % 8;
+    let mut lanes = [0.0f32; 8];
+    let (xc, xr) = x.split_at(full);
+    let (yc, yr) = y.split_at(full);
+    for (a, b) in xc.chunks_exact(8).zip(yc.chunks_exact(8)) {
+        for l in 0..8 {
+            lanes[l] += a[l] * b[l];
+        }
+    }
+    let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    for (a, b) in xr.iter().zip(yr.iter()) {
+        s += a * b;
+    }
+    s
+}
+
+/// 4-lane f32 gathered dot (the f32 twin of `ops::gather_dot`).
+#[inline]
+fn gather_dot_f32(rows: &[u32], vals: &[f32], v: &[f32]) -> f32 {
+    let n = rows.len();
+    let full = n - n % 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (rc, rr) = rows.split_at(full);
+    let (vc, vr) = vals.split_at(full);
+    for (r, a) in rc.chunks_exact(4).zip(vc.chunks_exact(4)) {
+        s0 += a[0] * v[r[0] as usize];
+        s1 += a[1] * v[r[1] as usize];
+        s2 += a[2] * v[r[2] as usize];
+        s3 += a[3] * v[r[3] as usize];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (r, a) in rr.iter().zip(vr.iter()) {
+        s += a * v[*r as usize];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CscMat, Mat};
+    use crate::util::prng::Rng;
+
+    fn dense_and_sparse(rng: &mut Rng, n: usize, p: usize) -> (Design, Design) {
+        let mut cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let nnz = 1 + rng.below(n.min(12));
+            cols.push(
+                rng.sample_indices(n, nnz)
+                    .into_iter()
+                    .map(|i| (i, rng.normal()))
+                    .collect(),
+            );
+        }
+        let sp = CscMat::from_cols(n, cols);
+        let dn = sp.to_dense();
+        (Design::Sparse(sp), Design::Dense(dn))
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [Precision::F64, Precision::MixedF32] {
+            assert_eq!(Precision::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Precision::parse("f32"), None);
+        assert_eq!(Precision::parse(""), None);
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    /// The soundness property the whole design rests on: the returned
+    /// score is ≥ the true f64 score, and not absurdly inflated.
+    #[test]
+    fn scores_are_certified_upper_bounds() {
+        let mut rng = Rng::new(11);
+        for trial in 0..10 {
+            let n = 10 + rng.below(60);
+            let p = 5 + rng.below(40);
+            let (sp, dn) = dense_and_sparse(&mut rng, n, p);
+            let means: Vec<f64> = (0..p).map(|_| 0.1 * rng.normal()).collect();
+            let ce = match &sp {
+                Design::Sparse(m) => Design::centered_sparse(m.clone(), means),
+                _ => unreachable!(),
+            };
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            for x in [&dn, &sp, &ce] {
+                let shadow = MixedShadow::build(x);
+                let upper = shadow.scores_upper(&v);
+                let mut truth = vec![0.0; p];
+                x.mul_t_vec(&v, &mut truth);
+                for j in 0..p {
+                    let t = truth[j].abs();
+                    assert!(
+                        upper[j] >= t,
+                        "trial {trial} {} col {j}: upper {} < true {}",
+                        x.storage(),
+                        upper[j],
+                        t
+                    );
+                    // sanity: the bound is slack, not garbage — within
+                    // a generous absolute+relative envelope of truth
+                    assert!(
+                        upper[j] <= t + 1e-3 * (1.0 + t),
+                        "trial {trial} {} col {j}: upper {} ≫ true {}",
+                        x.storage(),
+                        upper[j],
+                        t
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ooc_shadow_matches_sparse_shadow() {
+        let mut rng = Rng::new(13);
+        let (n, p) = (25, 30);
+        let (sp, _) = dense_and_sparse(&mut rng, n, p);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let ds = crate::data::Dataset {
+            name: "mixed-ooc-test".to_string(),
+            x: sp.clone(),
+            y,
+            loss: crate::model::LossKind::Squared,
+            tree: None,
+        };
+        let bytes = crate::data::io::saifbin_bytes(&ds);
+        let ooc = Design::OocCsc(crate::linalg::OocCsc::from_bytes(bytes).unwrap());
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let a = MixedShadow::build(&sp).scores_upper(&v);
+        let b = MixedShadow::build(&ooc).scores_upper(&v);
+        for j in 0..p {
+            assert_eq!(a[j].to_bits(), b[j].to_bits(), "col {j}");
+        }
+    }
+
+    #[test]
+    fn bound_scale_zero_drops_the_margin() {
+        let mut rng = Rng::new(17);
+        let (_, dn) = dense_and_sparse(&mut rng, 20, 10);
+        let v: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let mut shadow = MixedShadow::build(&dn);
+        let with = shadow.scores_upper(&v);
+        shadow.set_bound_scale(0.0);
+        let without = shadow.scores_upper(&v);
+        for j in 0..10 {
+            assert!(without[j] <= with[j]);
+        }
+    }
+
+    #[test]
+    fn gamma_grows_with_length() {
+        assert!(gamma32(0) > 0.0);
+        assert!(gamma32(100) > gamma32(10));
+        assert!(gamma32(1000) < 1e-3);
+    }
+}

@@ -7,11 +7,15 @@
 //! repo (coordinate minimization, screening scans) walks *columns* of
 //! the design matrix, so each column is contiguous — a slice for the
 //! dense backend, an (indices, values) pair for the sparse one. The
-//! dense hot kernels (`dot`, `axpy`) are manually unrolled 4-wide —
-//! this is the native engine's inner loop (see EXPERIMENTS.md §Perf).
+//! hot kernels (`dot`, `gather_dot`, `axpy`) are manually unrolled
+//! with fixed reduction trees, and the dense scan is cache-blocked
+//! (`mat::COL_STRIP` × `mat::ROW_BLOCK`) — this is the native engine's
+//! inner loop (see EXPERIMENTS.md §Perf and docs/KERNELS.md).
 //! The native engine computes in f64 (the paper's 1e-9 duality gaps
 //! are unreachable in f32); the PJRT engine is f32 and is cross-checked
-//! against this one at looser tolerance.
+//! against this one at looser tolerance. The one sanctioned low-
+//! precision path in the solver stack is [`mixed`]: an f32 screening
+//! scan whose rounding error is provably absorbed into the ball test.
 //!
 //! Full-p scans (`Design::mul_t_vec_pool`) can be chunked over columns
 //! via [`Parallelism`], dispatched on the persistent worker pool
@@ -25,12 +29,14 @@
 
 pub mod design;
 pub mod mat;
+pub mod mixed;
 pub mod ooc;
 pub mod ops;
 pub mod sparse;
 
 pub use design::{ColIter, Design, Parallelism};
 pub use mat::Mat;
+pub use mixed::{MixedShadow, Precision};
 pub use ooc::OocCsc;
-pub use ops::{axpy, dot, nrm2_sq, scale, sub};
+pub use ops::{axpy, dot, gather_dot, nrm2_sq, scale, sub};
 pub use sparse::CscMat;

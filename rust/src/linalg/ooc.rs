@@ -590,17 +590,14 @@ impl OocCsc {
         }
     }
 
-    /// x_jᵀ v — same reduction order as [`CscMat::col_dot`], so the
-    /// result is bitwise identical to the in-memory backend.
+    /// x_jᵀ v — the SAME [`super::ops::gather_dot`] kernel as
+    /// [`CscMat::col_dot`], so the result is bitwise identical to the
+    /// in-memory backend by construction.
     #[inline]
     pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
         debug_assert_eq!(v.len(), self.inner.n_rows);
         let c = self.col(j);
-        let mut s = 0.0;
-        for (&i, &x) in c.rows.iter().zip(&c.vals) {
-            s += x * v[i];
-        }
-        s
+        super::ops::gather_dot(&c.rows, &c.vals, v)
     }
 
     /// out += alpha * x_j.
@@ -662,11 +659,9 @@ impl OocCsc {
     pub fn mul_t_vec_range(&self, j0: usize, j1: usize, v: &[f64], out: &mut [f64]) {
         assert_eq!(out.len(), j1 - j0);
         self.stream_cols(j0, j1, DEFAULT_CHUNK_BYTES, |j, rows, vals| {
-            let mut s = 0.0;
-            for (&i, &x) in rows.iter().zip(vals) {
-                s += x * v[i];
-            }
-            out[j - j0] = s;
+            // the shared gather kernel keeps this bitwise identical to
+            // CscMat::col_dot on the same stored entries
+            out[j - j0] = super::ops::gather_dot(rows, vals, v);
         });
     }
 

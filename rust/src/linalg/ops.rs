@@ -1,25 +1,81 @@
 //! BLAS-1 kernels, manually unrolled. These are the native engine's
 //! hot path: a CM epoch is one `dot` + one `axpy` per coordinate.
+//!
+//! **Reduction-tree contract.** Every kernel in this module fixes its
+//! floating-point summation order as part of its API: `dot` is the
+//! [`UNROLL`]-wide lane scheme below, `gather_dot` is 4-wide, and both
+//! reduce their lane accumulators through a fixed binary tree. The
+//! blocked matrix kernels in `mat.rs`/`sparse.rs`/`ooc.rs` are built so
+//! their results are **bitwise identical** to these serial kernels for
+//! any block size (see `docs/KERNELS.md`): lane `l` of a blocked dot
+//! accumulates exactly the elements with index ≡ l (mod [`UNROLL`]), in
+//! increasing index order, no matter how the rows are chunked. Changing
+//! the unroll width or the tree here is a deliberate, documented
+//! numerical break (last-ulp level) — the one-time 4→8-wide move is
+//! recorded in `docs/KERNELS.md`.
 
-/// Dot product <x, y>. 4-wide unrolled with independent accumulators
-/// so the CPU can overlap the FMA chains.
+/// Unroll width of [`dot`] (and the lane count of the blocked dense
+/// kernels that must match it bitwise). 8 gives the CPU enough
+/// independent FMA chains to hide the ~4-cycle FMA latency at 2
+/// FMAs/cycle; it is also the AVX-512 f64 vector width, so the lane
+/// loop autovectorizes to whole vectors on every x86-64 tier.
+pub const UNROLL: usize = 8;
+
+/// Dot product <x, y>. [`UNROLL`]-wide unrolled with independent
+/// accumulators so the CPU can overlap the FMA chains. Reduction order
+/// (part of the bitwise contract): lanes combine as
+/// `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`, then the `n % UNROLL`
+/// remainder elements are added serially, in order.
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
     let n = x.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    let (xc, xr) = x.split_at(chunks * 4);
-    let (yc, yr) = y.split_at(chunks * 4);
-    for (a, b) in xc.chunks_exact(4).zip(yc.chunks_exact(4)) {
-        s0 += a[0] * b[0];
-        s1 += a[1] * b[1];
-        s2 += a[2] * b[2];
-        s3 += a[3] * b[3];
+    let full = n - n % UNROLL;
+    let mut lanes = [0.0f64; UNROLL];
+    let (xc, xr) = x.split_at(full);
+    let (yc, yr) = y.split_at(full);
+    for (a, b) in xc.chunks_exact(UNROLL).zip(yc.chunks_exact(UNROLL)) {
+        for l in 0..UNROLL {
+            lanes[l] += a[l] * b[l];
+        }
     }
-    let mut s = (s0 + s1) + (s2 + s3);
+    let mut s = reduce_lanes(&lanes);
     for (a, b) in xr.iter().zip(yr.iter()) {
         s += a * b;
+    }
+    s
+}
+
+/// The fixed lane-reduction tree shared by [`dot`] and the blocked
+/// dense kernels: `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`.
+#[inline]
+pub fn reduce_lanes(lanes: &[f64; UNROLL]) -> f64 {
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+}
+
+/// Gathered sparse dot: Σ vals[k] * v[rows[k]]. 4-wide unrolled with a
+/// fixed `(s0+s1)+(s2+s3)` tree + in-order serial remainder. This is
+/// THE sparse column reduction: `CscMat::col_dot` and `OocCsc::col_dot`
+/// both call it, which is what keeps the in-memory and out-of-core
+/// backends bitwise identical by construction.
+#[inline]
+pub fn gather_dot(rows: &[usize], vals: &[f64], v: &[f64]) -> f64 {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let full = n - n % 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let (rc, rr) = rows.split_at(full);
+    let (vc, vr) = vals.split_at(full);
+    for (r, a) in rc.chunks_exact(4).zip(vc.chunks_exact(4)) {
+        s0 += a[0] * v[r[0]];
+        s1 += a[1] * v[r[1]];
+        s2 += a[2] * v[r[2]];
+        s3 += a[3] * v[r[3]];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (r, a) in rr.iter().zip(vr.iter()) {
+        s += a * v[*r];
     }
     s
 }
@@ -32,9 +88,9 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
         return;
     }
     let n = x.len();
-    let chunks = n / 4;
-    let (xc, xr) = x.split_at(chunks * 4);
-    let (yc, yr) = y.split_at_mut(chunks * 4);
+    let full = n - n % 4;
+    let (xc, xr) = x.split_at(full);
+    let (yc, yr) = y.split_at_mut(full);
     for (a, b) in xc.chunks_exact(4).zip(yc.chunks_exact_mut(4)) {
         b[0] += alpha * a[0];
         b[1] += alpha * a[1];
@@ -100,6 +156,53 @@ mod tests {
             let d = dot(&x, &y);
             let nd = naive_dot(&x, &y);
             assert!((d - nd).abs() < 1e-10 * (1.0 + nd.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_reduction_order_is_the_documented_tree() {
+        // pin the bitwise contract: lanes mod UNROLL in index order,
+        // fixed tree, serial remainder — a reference reimplementation
+        // must match bit for bit on every length
+        let mut rng = Rng::new(7);
+        for n in 0..70 {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut lanes = [0.0f64; UNROLL];
+            let full = n - n % UNROLL;
+            for i in 0..full {
+                lanes[i % UNROLL] += x[i] * y[i];
+            }
+            let mut want = reduce_lanes(&lanes);
+            for i in full..n {
+                want += x[i] * y[i];
+            }
+            assert_eq!(dot(&x, &y).to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn gather_dot_matches_dense_gather() {
+        let mut rng = Rng::new(3);
+        for nnz in 0..30 {
+            let n = 50;
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let rows: Vec<usize> = (0..nnz).map(|_| rng.below(n)).collect();
+            let vals: Vec<f64> = (0..nnz).map(|_| rng.normal()).collect();
+            let got = gather_dot(&rows, &vals, &v);
+            let naive: f64 = rows.iter().zip(&vals).map(|(&r, a)| a * v[r]).sum();
+            assert!((got - naive).abs() < 1e-10 * (1.0 + naive.abs()), "nnz={nnz}");
+            // bitwise contract: 4 lanes, fixed tree, serial remainder
+            let full = nnz - nnz % 4;
+            let mut s = [0.0f64; 4];
+            for k in 0..full {
+                s[k % 4] += vals[k] * v[rows[k]];
+            }
+            let mut want = (s[0] + s[1]) + (s[2] + s[3]);
+            for k in full..nnz {
+                want += vals[k] * v[rows[k]];
+            }
+            assert_eq!(got.to_bits(), want.to_bits(), "nnz={nnz}");
         }
     }
 

@@ -149,16 +149,15 @@ impl CscMat {
         }
     }
 
-    /// x_jᵀ v over the stored entries — O(nnz(j)).
+    /// x_jᵀ v over the stored entries — O(nnz(j)). Routed through the
+    /// shared 4-wide [`super::ops::gather_dot`] reduction, which is
+    /// what keeps this backend bitwise identical to `OocCsc::col_dot`
+    /// (both call the same kernel on the same stored entries).
     #[inline]
     pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
         debug_assert_eq!(v.len(), self.n_rows);
         let (rows, vals) = self.col(j);
-        let mut s = 0.0;
-        for (&i, &x) in rows.iter().zip(vals) {
-            s += x * v[i];
-        }
-        s
+        super::ops::gather_dot(rows, vals, v)
     }
 
     /// out += alpha * x_j — O(nnz(j)).

@@ -4,7 +4,7 @@
 //! SAIF's edge over full-problem baselines is that the reduced model is
 //! tiny and iterated *often*, so per-epoch overhead is the tax paid
 //! most frequently. Before this module each parallel layer spawned
-//! fresh OS threads per call (`Design::mul_t_vec_par` scans, the
+//! fresh OS threads per call (scoped `Design` scans, the
 //! sharded CM epochs, one thread per coordinator worker); a wide solve
 //! could spawn thousands of threads over its lifetime. [`WorkerPool`]
 //! keeps a fixed set of long-lived threads parked on a condvar and

@@ -2,7 +2,8 @@
 
 use crate::ball::{gap_ball, intersect, thm2_ball_ls, Ball};
 use crate::cm::{Engine, EpochShards, PoolMode, SubEval};
-use crate::linalg::Parallelism;
+use crate::linalg::mixed::MixedShadow;
+use crate::linalg::{Parallelism, Precision};
 use crate::model::{LossKind, Problem};
 use crate::util::{tmax, Stopwatch};
 
@@ -57,6 +58,20 @@ pub struct SaifConfig {
     /// pool vs scoped spawn-per-call). `None` inherits the engine's
     /// setting; `Some(mode)` forces it.
     pub pool: Option<PoolMode>,
+    /// Numeric policy for the ADD recruitment scan. `MixedF32` runs it
+    /// over a packed f32 shadow of the design
+    /// ([`crate::linalg::mixed`]) whose scores carry a certified
+    /// rounding bound, so the ball test stays conservative: the mixed
+    /// screen can only recruit MORE, never discard a feature the f64
+    /// screen keeps. Everything else — CM epochs, gaps, DEL,
+    /// certificates — is f64 under either setting.
+    pub precision: Precision,
+    /// Multiplier on the mixed-scan rounding bound. 1.0 (the certified
+    /// bound) in production — fault-injection tests shrink it to prove
+    /// a too-small bound surfaces as a KKT-oracle failure, not a false
+    /// certificate.
+    #[doc(hidden)]
+    pub mixed_bound_scale: f64,
     /// Record a trace (Figures 3/4).
     pub trace: bool,
 }
@@ -77,6 +92,8 @@ impl Default for SaifConfig {
             parallelism: None,
             epoch_shards: None,
             pool: None,
+            precision: Precision::F64,
+            mixed_bound_scale: 1.0,
             trace: false,
         }
     }
@@ -94,6 +111,7 @@ impl SaifConfig {
             epoch_shards: spec.epoch_shards,
             pool: spec.pool,
             max_outer: spec.max_outer.unwrap_or(d.max_outer),
+            precision: spec.precision.unwrap_or_default(),
             trace: spec.trace,
             ..d
         }
@@ -226,6 +244,10 @@ impl<'a> Saif<'a> {
         let mut stall = 0usize;
         let mut gap_at_scan = f64::INFINITY;
         let mut since_scan = 0usize;
+        // f32 shadow of the design, packed lazily at the first ADD scan
+        // of this solve (λ ≥ λ_max and pure accuracy-pursuit solves
+        // never pay for it) and dropped with the solve.
+        let mut shadow: Option<MixedShadow> = None;
 
         let result_eval: SubEval;
         loop {
@@ -318,7 +340,21 @@ impl<'a> Saif<'a> {
             }
             gap_at_scan = eval.gap;
             since_scan = 0;
-            let all_scores = self.engine.scores(prob, &ball.center);
+            // the ONE place precision matters: recruitment scores. The
+            // mixed path returns certified upper bounds on |x_jᵀθ|, so
+            // both the stop-ADD certificate below (inflated upper < 1
+            // ⇒ true upper < 1: Theorem 1-c still holds) and ADD's
+            // ranking stay safe — inflation can only over-recruit.
+            let all_scores = match self.cfg.precision {
+                Precision::F64 => self.engine.scores(prob, &ball.center),
+                Precision::MixedF32 => shadow
+                    .get_or_insert_with(|| {
+                        let mut s = MixedShadow::build(&prob.x);
+                        s.set_bound_scale(self.cfg.mixed_bound_scale);
+                        s
+                    })
+                    .scores_upper(&ball.center),
+            };
             let mut stop_add = true;
             for i in 0..p {
                 if !in_active[i] && all_scores[i] + col_nrm[i] * r_add >= 1.0 {

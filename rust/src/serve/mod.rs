@@ -53,7 +53,7 @@ use std::time::Duration;
 
 use crate::cm::{EpochShards, PoolMode};
 use crate::coordinator::{Coordinator, EngineKind, SolveRequest, SolveResponse};
-use crate::linalg::Parallelism;
+use crate::linalg::{Parallelism, Precision};
 use crate::model::Problem;
 use crate::runtime::pool::{self, SpawnHandle};
 use crate::solver::{Method, SolveSpec};
@@ -97,6 +97,10 @@ pub struct ServeConfig {
     pub parallelism: Parallelism,
     pub epoch_shards: EpochShards,
     pub pool_mode: PoolMode,
+    /// Screening-scan precision for every served solve. Folded into
+    /// each request's [`SolveSpec`], so the fingerprint-keyed cache and
+    /// coalescing table never mix results across precisions.
+    pub precision: Precision,
 }
 
 impl Default for ServeConfig {
@@ -114,6 +118,7 @@ impl Default for ServeConfig {
             parallelism: Parallelism::Serial,
             epoch_shards: EpochShards::FollowParallelism,
             pool_mode: PoolMode::Persistent,
+            precision: Precision::F64,
         }
     }
 }
@@ -207,6 +212,7 @@ impl Server {
             .parallelism(cfg.parallelism)
             .epoch_shards(cfg.epoch_shards)
             .pool(cfg.pool_mode)
+            .precision(cfg.precision)
             .build();
         let (tx, rx) = channel::<SolveResponse>();
         coord.redirect_responses(tx);
@@ -530,7 +536,8 @@ fn handle_register(inner: &Inner, dataset: u64, path: &str) -> Response {
 /// for the request (including Busy rejections) are recorded here.
 fn solve_one(inner: &Inner, dataset: u64, lam: f64, eps: f64, method: Method) -> SolveOutcome {
     let sw = Stopwatch::start();
-    let spec = SolveSpec { eps, ..Default::default() };
+    let spec =
+        SolveSpec { eps, precision: Some(inner.cfg.precision), ..Default::default() };
     let key: Key = (dataset, lam.to_bits(), method, spec.fingerprint());
 
     enum Plan {
@@ -732,7 +739,11 @@ fn handle_response(inner: &Inner, r: SolveResponse) {
                     method: p.method,
                     tree: p.tree.clone(),
                     warm: None,
-                    spec: SolveSpec { eps: p.eps, ..Default::default() },
+                    spec: SolveSpec {
+                        eps: p.eps,
+                        precision: Some(inner.cfg.precision),
+                        ..Default::default()
+                    },
                 });
                 None
             } else {
@@ -823,7 +834,11 @@ fn check_dead_workers(inner: &Inner) {
             method: p.method,
             tree: p.tree.clone(),
             warm: p.warm.clone(),
-            spec: SolveSpec { eps: p.eps, ..Default::default() },
+            spec: SolveSpec {
+                eps: p.eps,
+                precision: Some(inner.cfg.precision),
+                ..Default::default()
+            },
         };
         if coord.submit(req).is_err() {
             failed.push(id);

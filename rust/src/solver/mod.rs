@@ -50,7 +50,7 @@
 //! ```
 
 use crate::cm::{Engine, EpochShards, PoolMode};
-use crate::linalg::Parallelism;
+use crate::linalg::{Parallelism, Precision};
 use crate::model::Problem;
 use crate::saif::TraceEvent;
 use crate::util::{tmax, Stopwatch};
@@ -174,6 +174,12 @@ pub struct SolveSpec {
     /// default (the cap means "outer iterations" for SAIF/BLITZ and
     /// "total epochs" for dynamic screening).
     pub max_outer: Option<usize>,
+    /// Numeric policy for the screening scan
+    /// ([`crate::linalg::mixed`]): `MixedF32` runs SAIF's recruitment
+    /// scan over a packed f32 shadow with a certified rounding bound
+    /// folded into each score; solves, gaps and KKT certificates stay
+    /// f64 either way. `None` keeps each method's default (f64).
+    pub precision: Option<Precision>,
     /// Record a solve trace (methods without one return it empty).
     pub trace: bool,
 }
@@ -186,6 +192,7 @@ impl Default for SolveSpec {
             epoch_shards: None,
             pool: None,
             max_outer: None,
+            precision: None,
             trace: false,
         }
     }
@@ -228,6 +235,11 @@ impl SolveSpec {
         mix(match self.max_outer {
             None => u64::MAX,
             Some(k) => k as u64,
+        });
+        mix(match self.precision {
+            None => 0,
+            Some(Precision::F64) => 1,
+            Some(Precision::MixedF32) => 2,
         });
         mix(u64::from(self.trace));
         h
@@ -509,6 +521,7 @@ mod tests {
         assert!(s.epoch_shards.is_none());
         assert!(s.pool.is_none());
         assert!(s.max_outer.is_none());
+        assert!(s.precision.is_none());
         assert!(!s.trace);
     }
 
@@ -524,6 +537,8 @@ mod tests {
             SolveSpec { epoch_shards: Some(EpochShards::Fixed(2)), ..Default::default() },
             SolveSpec { pool: Some(PoolMode::Scoped), ..Default::default() },
             SolveSpec { max_outer: Some(10), ..Default::default() },
+            SolveSpec { precision: Some(Precision::F64), ..Default::default() },
+            SolveSpec { precision: Some(Precision::MixedF32), ..Default::default() },
             SolveSpec { trace: true, ..Default::default() },
         ];
         let mut fps: Vec<u64> = variants.iter().map(|s| s.fingerprint()).collect();

@@ -1,0 +1,162 @@
+//! Kernel-contract suite for the unrolled/cache-blocked scan kernels
+//! (docs/KERNELS.md): the blocked dense scan must be **bitwise
+//! invariant** in the row-block height, the blocked `cols_axpy` fold
+//! must be bitwise equal to the sequential fold it replaced, the
+//! in-memory and out-of-core sparse backends must agree bit for bit
+//! (they share `ops::gather_dot`), and the 8-wide `dot` must sit
+//! within the analytic reordering bound of the plain sequential sum.
+//! Problem sizes here deliberately exceed `ROW_BLOCK`/`COL_STRIP` so
+//! multiple blocks and a partial strip are actually exercised.
+
+mod common;
+
+use saif::data::{synth, Dataset};
+use saif::linalg::mat::{COL_STRIP, ROW_BLOCK};
+use saif::linalg::ops::{self, UNROLL};
+use saif::linalg::{Design, Mat, OocCsc};
+use saif::util::Rng;
+
+/// The pre-blocking scalar kernel: one left-to-right fold.
+fn sequential_dot(x: &[f64], y: &[f64]) -> f64 {
+    x.iter().zip(y).fold(0.0, |s, (a, b)| s + a * b)
+}
+
+#[test]
+fn blocked_dense_scan_is_bitwise_invariant_in_block_size() {
+    let mut rng = Rng::new(101);
+    // > 2 row blocks at the smallest height below, plus a ragged tail;
+    // > 1 column strip, plus a partial strip
+    let (n, p) = (2 * ROW_BLOCK + 37, COL_STRIP + 5);
+    let m = Mat::from_fn(n, p, |_, _| rng.normal());
+    let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let want: Vec<f64> = (0..p).map(|j| ops::dot(m.col(j), &v)).collect();
+    let mut default = vec![0.0; p];
+    m.mul_t_vec(&v, &mut default);
+    for j in 0..p {
+        assert_eq!(default[j].to_bits(), want[j].to_bits(), "default rb, col {j}");
+    }
+    for rb in [UNROLL, 2 * UNROLL, 5 * UNROLL, ROW_BLOCK, 4 * ROW_BLOCK] {
+        let mut got = vec![0.0; p];
+        m.mul_t_vec_blocked(&v, &mut got, rb);
+        for j in 0..p {
+            assert_eq!(got[j].to_bits(), want[j].to_bits(), "rb={rb}, col {j}");
+        }
+    }
+}
+
+#[test]
+fn pooled_blocked_scan_is_bitwise_serial_under_test_substrate() {
+    // the CI matrix sets SAIF_TEST_THREADS / SAIF_TEST_POOL, so this
+    // one assertion runs serial, pooled and scoped across the legs
+    let mut rng = Rng::new(102);
+    let (n, p) = (ROW_BLOCK + 11, 3 * COL_STRIP + 9);
+    let m = Mat::from_fn(n, p, |_, _| rng.normal());
+    let design = Design::Dense(m);
+    let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut serial = vec![0.0; p];
+    design.mul_t_vec(&v, &mut serial);
+    let mut pooled = vec![0.0; p];
+    design.mul_t_vec_pool(&v, &mut pooled, common::test_parallelism(), common::test_pool_mode());
+    assert_eq!(serial, pooled);
+}
+
+#[test]
+fn unrolled_dot_stays_within_the_reordering_bound_of_sequential() {
+    // the 8-wide kernel reorders the same n products, so the two
+    // results differ by at most the sum of both summation error
+    // bounds: 2·γ_n·Σ|x_i·y_i| with γ_n ≈ n·u (Higham eq. 3.5); and
+    // below one full unroll group the lane accumulators are all zero,
+    // so the kernel degenerates to the sequential fold, bitwise
+    let mut rng = Rng::new(103);
+    for n in (0..40).chain([63, 64, 65, 1000, 4097]) {
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let got = ops::dot(&x, &y);
+        let seq = sequential_dot(&x, &y);
+        if n < UNROLL {
+            assert_eq!(got.to_bits(), seq.to_bits(), "n={n} below one unroll group");
+            continue;
+        }
+        let scale: f64 = x.iter().zip(&y).map(|(a, b)| (a * b).abs()).sum();
+        let bound = 2.0 * (n as f64 + 8.0) * f64::EPSILON * scale;
+        assert!(
+            (got - seq).abs() <= bound,
+            "n={n}: |{got} - {seq}| = {} > {bound}",
+            (got - seq).abs()
+        );
+    }
+}
+
+#[test]
+fn blocked_cols_axpy_is_bitwise_the_sequential_fold() {
+    let mut rng = Rng::new(104);
+    let (n, p) = (2 * ROW_BLOCK + 513, 24);
+    let m = Mat::from_fn(n, p, |_, _| rng.normal());
+    let design = Design::Dense(m);
+    // repeats included: the ordered-fold contract says update k sees
+    // the residual state left by updates 0..k, per element
+    let updates: Vec<(usize, f64)> = (0..40).map(|_| (rng.below(p), rng.normal())).collect();
+    let base: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut folded = base.clone();
+    design.cols_axpy(&updates, &mut folded);
+    let mut manual = base.clone();
+    for &(j, a) in &updates {
+        design.col_axpy(a, j, &mut manual);
+    }
+    for i in 0..n {
+        assert_eq!(folded[i].to_bits(), manual[i].to_bits(), "row {i}");
+    }
+}
+
+/// In-memory CSC and the out-of-core stream of the same `.saifbin`
+/// bytes must agree **bitwise** on every kernel — both reduce through
+/// `ops::gather_dot`, so this is equality by construction, pinned.
+#[test]
+fn ooc_backend_is_bitwise_identical_to_in_memory_csc() {
+    let mut rng = Rng::new(105);
+    let ds: Dataset = synth::synth_sparse(60, 400, 0.07, 9001);
+    let bytes = saif::data::io::saifbin_bytes(&ds);
+    let ooc = Design::OocCsc(OocCsc::from_bytes(bytes).expect("parse saifbin bytes"));
+    let (n, p) = (ds.x.n_rows(), ds.x.n_cols());
+    let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    for j in 0..p {
+        assert_eq!(
+            ds.x.col_dot(j, &v).to_bits(),
+            ooc.col_dot(j, &v).to_bits(),
+            "col_dot {j}"
+        );
+    }
+    let (mut a, mut b) = (vec![0.0; p], vec![0.0; p]);
+    ds.x.mul_t_vec(&v, &mut a);
+    ooc.mul_t_vec(&v, &mut b);
+    for j in 0..p {
+        assert_eq!(a[j].to_bits(), b[j].to_bits(), "mul_t_vec {j}");
+    }
+    let norms_mem = ds.x.col_norms_sq();
+    let norms_ooc = ooc.col_norms_sq();
+    for j in 0..p {
+        assert_eq!(norms_mem[j].to_bits(), norms_ooc[j].to_bits(), "col_norms_sq {j}");
+    }
+    let updates: Vec<(usize, f64)> = (0..16).map(|_| (rng.below(p), rng.normal())).collect();
+    let (mut ra, mut rb) = (v.clone(), v.clone());
+    ds.x.cols_axpy(&updates, &mut ra);
+    ooc.cols_axpy(&updates, &mut rb);
+    for i in 0..n {
+        assert_eq!(ra[i].to_bits(), rb[i].to_bits(), "cols_axpy row {i}");
+    }
+}
+
+#[test]
+fn gather_dot_is_the_shared_sparse_reduction() {
+    // gather_dot against an explicit densified column: same value to
+    // within one reordering bound, and exact when products are exact
+    let v: Vec<f64> = (0..32).map(|i| (i as f64) - 15.5).collect();
+    let rows = [1usize, 4, 9, 16, 25, 31];
+    let vals = [2.0, -1.0, 0.5, 4.0, -8.0, 1.0];
+    let mut dense = vec![0.0; 32];
+    for (&r, &a) in rows.iter().zip(&vals) {
+        dense[r] = a;
+    }
+    // powers of two throughout: every product and partial sum is exact
+    assert_eq!(ops::gather_dot(&rows, &vals, &v), sequential_dot(&dense, &v));
+}

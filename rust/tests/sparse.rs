@@ -9,6 +9,7 @@ mod common;
 use saif::cm::NativeEngine;
 use saif::data::{io, synth};
 use saif::linalg::{CscMat, Design, Parallelism};
+use saif::runtime::pool::PoolMode;
 use saif::model::Problem;
 use saif::saif::{Saif, SaifConfig};
 use saif::screening::dynamic::{DynScreen, DynScreenConfig};
@@ -44,7 +45,7 @@ fn sparse_dense_kernel_parity() {
         dn.mul_t_vec(&v, &mut b);
         prop::assert_slice_close(&a, &b, 1e-12, 1e-12, "mul_t_vec")?;
         let mut c = vec![0.0; p];
-        sp.mul_t_vec_par(&v, &mut c, Parallelism::Fixed(4));
+        sp.mul_t_vec_pool(&v, &mut c, Parallelism::Fixed(4), PoolMode::Scoped);
         if a != c {
             return Err("parallel scan differs from serial".into());
         }

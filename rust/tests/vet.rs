@@ -2,8 +2,9 @@
 //! invariant linter (`tools/vet`) with zero findings — every waiver in
 //! the tree is therefore known-used and carries a reason, and a change
 //! that introduces a raw spawn / undocumented unsafe / unordered map /
-//! NaN-lossy comparison / bare cast / library panic fails `cargo test`
-//! locally, not just the separate CI job.
+//! NaN-lossy comparison / bare cast / library panic / stray f32 in the
+//! solver stack fails `cargo test` locally, not just the separate CI
+//! job.
 
 /// Shelling out to `cargo run` is host-only: Miri interprets the test
 /// body and cannot exec the build toolchain.

@@ -7,8 +7,11 @@ Usage: bench_guard.py [--require-real-baseline] <baseline.json> <fresh.json>
 Compares a freshly regenerated bench record against the committed
 baseline and exits non-zero when any guarded timing regressed by more
 than the tolerance (default 25%; override with BENCH_TOLERANCE, e.g.
-BENCH_TOLERANCE=0.5 for noisy machines). Kernel records guard the
-fixed scan/epoch field list below; method-shootout records (marker
+BENCH_TOLERANCE=0.5 for noisy machines). Kernel records guard every
+numeric `*_us` field except the ooc rows — schema-derived, so the
+blocked-kernel and f32-scan rows (`*_blocked_us`, `*_f32_scan_us`)
+are guarded the moment the baseline carries real numbers, and a new
+kernel row never needs a guard-side edit; method-shootout records (marker
 "bench":"methods") guard every numeric `*_secs` row except the ooc
 scenarios and the `*_curve_secs` arrays — the schema is derived from
 the records themselves, so new scenario/method rows are guarded the
@@ -32,20 +35,26 @@ import json
 import os
 import sys
 
-# Guarded rows: the scan + epoch hot-path timings (microseconds, lower
-# is better). The ooc rows are excluded on purpose — disk timings on
-# shared CI runners are too noisy to gate on.
-GUARDED_US_FIELDS = [
-    "dense_serial_us",
-    "dense_parallel_us",
-    "dense_pooled_us",
-    "sparse1pct_serial_us",
-    "sparse1pct_parallel_us",
-    "sparse1pct_pooled_us",
-    "epoch_serial_us",
-    "epoch_sharded_us",
-    "epoch_pooled_us",
-]
+def kernel_fields(baseline, fresh):
+    """Guarded field list for a kernel record: every numeric `*_us` key
+    present in either record (scan/epoch/blocked/f32-scan hot-path
+    timings, microseconds, lower is better), minus the ooc rows — disk
+    timings on shared CI runners are too noisy to gate on. Schema-
+    derived like the methods/serve modes, so the blocked-kernel and
+    f32-scan rows are guarded without a field list to keep in sync."""
+    keys = set()
+    for rec in (baseline, fresh):
+        if not isinstance(rec, dict):
+            continue
+        keys.update(
+            k
+            for k, v in rec.items()
+            if k.endswith("_us")
+            and "ooc" not in k
+            and isinstance(v, (int, float))
+            and not isinstance(v, bool)
+        )
+    return sorted(keys)
 
 
 def is_methods_record(rec):
@@ -166,7 +175,12 @@ def main():
                 require_real,
             )
     else:
-        fields = [(f, "lower") for f in GUARDED_US_FIELDS]
+        fields = [(f, "lower") for f in kernel_fields(baseline, fresh)]
+        if not fields:
+            return placeholder_warning(
+                "kernel record carries no numeric *_us rows (placeholder baseline)",
+                require_real,
+            )
 
     regressions, compared, skipped = [], 0, []
     for field, direction in fields:

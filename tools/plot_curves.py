@@ -1,0 +1,180 @@
+#!/usr/bin/env python3
+"""Render per-scenario time-to-ε SVG plots from BENCH_methods.json
+(std-lib only — no matplotlib in the CI image, and none needed).
+
+Usage: plot_curves.py [<BENCH_methods.json> [<output-dir>]]
+       (defaults: ./BENCH_methods.json, ./out/curves)
+
+The method shootout records a time-to-gap curve per (scenario, method):
+`<scenario>_<method>_curve_secs` is the cumulative wall time at each
+λ-grid point and `<scenario>_<method>_curve_gap` the certified duality
+gap reached there. This tool groups the curves by scenario and writes
+one `<scenario>.svg` per scenario with a log-log polyline per method —
+the shape that makes "safe screening pays for itself by the time the
+gap certifies" visible at a glance.
+
+This is an *advisory* artifact: a placeholder record (the committed
+pre-toolchain baseline carries no curves) exits 0 with a loud note, so
+CI can run it unconditionally and upload whatever came out.
+"""
+
+import json
+import math
+import os
+import sys
+
+# The shootout names scenarios `<loss>_<backend>` (ls_dense,
+# logit_sparse, ...) — two underscore-separated tokens, always, so a
+# record key splits unambiguously even when method labels themselves
+# contain underscores.
+SCENARIO_TOKENS = 2
+
+WIDTH, HEIGHT = 640, 420
+MARGIN_L, MARGIN_R, MARGIN_T, MARGIN_B = 64, 160, 36, 48
+COLORS = [
+    "#1f77b4", "#d62728", "#2ca02c", "#9467bd",
+    "#ff7f0e", "#8c564b", "#17becf", "#7f7f7f",
+]
+
+
+def curves_by_scenario(rec):
+    """{scenario: [(method, [secs...], [gap...])]} from a shootout
+    record; curves with non-numeric or mismatched arrays are dropped."""
+    out = {}
+    for key, secs in rec.items():
+        if not key.endswith("_curve_secs") or not isinstance(secs, list):
+            continue
+        stem = key[: -len("_curve_secs")]
+        gaps = rec.get(stem + "_curve_gap")
+        if not isinstance(gaps, list) or len(gaps) != len(secs) or not secs:
+            continue
+        try:
+            pts = [(float(s), float(g)) for s, g in zip(secs, gaps)]
+        except (TypeError, ValueError):
+            continue
+        parts = stem.split("_")
+        if len(parts) <= SCENARIO_TOKENS:
+            continue
+        scenario = "_".join(parts[:SCENARIO_TOKENS])
+        method = "_".join(parts[SCENARIO_TOKENS:])
+        out.setdefault(scenario, []).append((method, pts))
+    return out
+
+
+def log_span(values, floor):
+    """(lo, hi) log10 bounds with a little headroom; degenerate spans
+    are widened so the projection below never divides by zero."""
+    vals = [max(v, floor) for v in values]
+    lo, hi = math.log10(min(vals)), math.log10(max(vals))
+    if hi - lo < 1e-9:
+        lo, hi = lo - 0.5, hi + 0.5
+    pad = 0.05 * (hi - lo)
+    return lo - pad, hi + pad
+
+
+def svg_for(scenario, methods, eps):
+    xs = [s for _, pts in methods for s, _ in pts]
+    ys = [g for _, pts in methods for _, g in pts]
+    x_lo, x_hi = log_span(xs, 1e-6)
+    y_lo, y_hi = log_span(ys + ([eps] if eps else []), 1e-14)
+    plot_w = WIDTH - MARGIN_L - MARGIN_R
+    plot_h = HEIGHT - MARGIN_T - MARGIN_B
+
+    def px(secs):
+        return MARGIN_L + plot_w * (math.log10(max(secs, 1e-6)) - x_lo) / (x_hi - x_lo)
+
+    def py(gap):
+        return MARGIN_T + plot_h * (y_hi - math.log10(max(gap, 1e-14))) / (y_hi - y_lo)
+
+    parts = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{WIDTH}" height="{HEIGHT}" '
+        f'viewBox="0 0 {WIDTH} {HEIGHT}" font-family="monospace" font-size="11">',
+        f'<rect width="{WIDTH}" height="{HEIGHT}" fill="white"/>',
+        f'<rect x="{MARGIN_L}" y="{MARGIN_T}" width="{plot_w}" height="{plot_h}" '
+        'fill="none" stroke="#cccccc"/>',
+        f'<text x="{MARGIN_L}" y="{MARGIN_T - 12}" font-size="13">'
+        f"{scenario}: certified gap vs cumulative seconds (log-log)</text>",
+        f'<text x="{MARGIN_L + plot_w / 2:.0f}" y="{HEIGHT - 12}" '
+        'text-anchor="middle">cumulative seconds</text>',
+    ]
+    # decade gridlines + tick labels on both axes
+    for d in range(math.ceil(x_lo), math.floor(x_hi) + 1):
+        x = px(10.0 ** d)
+        parts.append(
+            f'<line x1="{x:.1f}" y1="{MARGIN_T}" x2="{x:.1f}" '
+            f'y2="{MARGIN_T + plot_h}" stroke="#eeeeee"/>'
+            f'<text x="{x:.1f}" y="{MARGIN_T + plot_h + 16}" '
+            f'text-anchor="middle">1e{d}</text>'
+        )
+    for d in range(math.ceil(y_lo), math.floor(y_hi) + 1):
+        y = py(10.0 ** d)
+        parts.append(
+            f'<line x1="{MARGIN_L}" y1="{y:.1f}" x2="{MARGIN_L + plot_w}" '
+            f'y2="{y:.1f}" stroke="#eeeeee"/>'
+            f'<text x="{MARGIN_L - 6}" y="{y + 4:.1f}" text-anchor="end">1e{d}</text>'
+        )
+    if eps:
+        y = py(eps)
+        parts.append(
+            f'<line x1="{MARGIN_L}" y1="{y:.1f}" x2="{MARGIN_L + plot_w}" y2="{y:.1f}" '
+            'stroke="#999999" stroke-dasharray="6,4"/>'
+            f'<text x="{MARGIN_L + plot_w + 6}" y="{y + 4:.1f}" fill="#666666">ε</text>'
+        )
+    for i, (method, pts) in enumerate(sorted(methods)):
+        color = COLORS[i % len(COLORS)]
+        path = " ".join(f"{px(s):.1f},{py(g):.1f}" for s, g in pts)
+        parts.append(
+            f'<polyline points="{path}" fill="none" stroke="{color}" stroke-width="1.6"/>'
+        )
+        for s, g in pts:
+            parts.append(
+                f'<circle cx="{px(s):.1f}" cy="{py(g):.1f}" r="2.4" fill="{color}"/>'
+            )
+        ly = MARGIN_T + 14 + 16 * i
+        parts.append(
+            f'<line x1="{MARGIN_L + plot_w + 8}" y1="{ly - 4}" '
+            f'x2="{MARGIN_L + plot_w + 28}" y2="{ly - 4}" stroke="{color}" stroke-width="2"/>'
+            f'<text x="{MARGIN_L + plot_w + 34}" y="{ly}">{method}</text>'
+        )
+    parts.append("</svg>")
+    return "\n".join(parts) + "\n"
+
+
+def main():
+    argv = sys.argv[1:]
+    if len(argv) > 2 or "-h" in argv or "--help" in argv:
+        print(__doc__, file=sys.stderr)
+        return 2
+    rec_path = argv[0] if argv else "BENCH_methods.json"
+    out_dir = argv[1] if len(argv) > 1 else os.path.join("out", "curves")
+    try:
+        with open(rec_path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"plot curves: cannot read {rec_path}: {e}", file=sys.stderr)
+        return 1
+    if not isinstance(rec, dict) or rec.get("bench") != "methods":
+        print(f"plot curves: {rec_path} is not a method-shootout record", file=sys.stderr)
+        return 1
+    scenarios = curves_by_scenario(rec)
+    if not scenarios:
+        print(
+            "plot curves: NOTE: record carries no time-to-gap curves "
+            "(placeholder baseline — regenerate with `cargo bench --bench "
+            "methods`); nothing to plot, exiting 0",
+            file=sys.stderr,
+        )
+        return 0
+    eps = rec.get("eps")
+    eps = float(eps) if isinstance(eps, (int, float)) and not isinstance(eps, bool) else None
+    os.makedirs(out_dir, exist_ok=True)
+    for scenario, methods in sorted(scenarios.items()):
+        path = os.path.join(out_dir, f"{scenario}.svg")
+        with open(path, "w") as f:
+            f.write(svg_for(scenario, methods, eps))
+        print(f"plot curves: wrote {path} ({len(methods)} methods)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,15 @@
 //!   code outside `#[cfg(test)]` regions (the poison-recovery idiom
 //!   `unwrap_or_else(|e| e.into_inner())` contains no banned token and
 //!   passes by construction).
+//! - `mixed-precision-confined` (L7): no `f32` tokens (the type, casts,
+//!   or literal suffixes like `1.0f32`) in the result-producing modules
+//!   outside `linalg/mixed.rs` — the one sanctioned low-precision path
+//!   is the f32 screening shadow, whose rounding error is provably
+//!   absorbed into the ball-test margin (docs/KERNELS.md). An `f32`
+//!   anywhere else in the solver stack would corrupt f64 certificates
+//!   silently. `Precision::MixedF32` and the `"mixed-f32"` CLI string
+//!   never match: the token search is case-sensitive, word-boundary
+//!   aware, and blind inside strings and comments.
 //!
 //! Waivers are per-site comments with a mandatory reason:
 //!
@@ -49,13 +58,14 @@ use std::io::Read;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-const LINTS: [&str; 6] = [
+const LINTS: [&str; 7] = [
     "thread-spawn",
     "undocumented-unsafe",
     "unordered-map",
     "non-total-order",
     "unchecked-cast",
     "lib-panic",
+    "mixed-precision-confined",
 ];
 
 /// Modules whose output feeds solver results; L3 applies only here.
@@ -66,6 +76,10 @@ const RESULT_MODULES: [&str; 7] =
 
 /// Files doing untrusted header/offset decoding; L5 applies only here.
 const CAST_FILES: [&str; 3] = ["data/io.rs", "linalg/ooc.rs", "serve/protocol.rs"];
+
+/// The one file where `f32` is sanctioned (L7): the screening shadow,
+/// whose rounding error is certified into the ball-test margin.
+const F32_SANCTUARY: &str = "linalg/mixed.rs";
 
 /// Binary-facing top-level modules where process-exiting panics are the
 /// error channel; L6 does not apply (nor to `main.rs`).
@@ -341,6 +355,30 @@ fn hit_cast(code: &str) -> bool {
     false
 }
 
+/// L7: any `f32` token — as a whole identifier (`f32::`, `as f32`,
+/// `Vec<f32>`) or as a numeric-literal suffix (`1.0f32`, `7f32`, where
+/// the preceding digit/dot defeats the word boundary). `MixedF32` and
+/// string/comment occurrences never reach here (case-sensitive search
+/// on blanked code text).
+fn hit_f32(code: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find("f32") {
+        let abs = start + pos;
+        start = abs + 3;
+        if !boundary_after(code, abs + 3) {
+            continue;
+        }
+        if boundary_before(code, abs) {
+            return true;
+        }
+        let prev = code[..abs].chars().next_back();
+        if prev.map_or(false, |c| c.is_ascii_digit() || c == '.') {
+            return true; // literal suffix: 1.0f32 / 7f32
+        }
+    }
+    false
+}
+
 /// L6: `.unwrap()` / `.expect(` / `panic!(`.
 fn hit_panic(code: &str) -> bool {
     if code.contains(".unwrap()") || code.contains(".expect(") {
@@ -400,6 +438,7 @@ fn scan_file(relpath: &str, src: &str, findings: &mut Vec<Finding>) {
     let l3_on = RESULT_MODULES.contains(&top);
     let l5_on = CAST_FILES.contains(&relpath);
     let l6_on = !PANIC_EXEMPT_TOP.contains(&top) && relpath != "main.rs";
+    let l7_on = RESULT_MODULES.contains(&top) && relpath != F32_SANCTUARY;
 
     // Collect waivers (and waiver-syntax findings) first.
     let mut waivers: Vec<Waiver> = Vec::new();
@@ -536,6 +575,14 @@ fn scan_file(relpath: &str, src: &str, findings: &mut Vec<Finding>) {
                 idx,
                 "lib-panic",
                 "unwrap/expect/panic! in library code (return an error)",
+            );
+        }
+        if l7_on && !in_test && hit_f32(code) {
+            report(
+                &mut waivers,
+                idx,
+                "mixed-precision-confined",
+                "f32 in the solver stack outside linalg/mixed.rs (the certified screening shadow is the one sanctioned low-precision path)",
             );
         }
 

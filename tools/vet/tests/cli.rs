@@ -48,6 +48,9 @@ const EXPECTED_BAD: &[(&str, u32, &str)] = &[
     ("panics.rs", 4, "lib-panic"),
     ("panics.rs", 8, "lib-panic"),
     ("panics.rs", 13, "lib-panic"),
+    // f32 as a type ascription + cast, and as a literal suffix
+    ("saif/scan.rs", 4, "mixed-precision-confined"),
+    ("saif/scan.rs", 9, "mixed-precision-confined"),
     ("solver/mod.rs", 4, "unordered-map"),
     ("solver/mod.rs", 5, "unordered-map"),
     ("solver/mod.rs", 8, "unordered-map"),
@@ -89,7 +92,7 @@ fn json_output_is_machine_readable() {
     let (code, stdout, _) = vet(&["--json", &fixture("bad")]);
     assert_eq!(code, 1);
     assert!(stdout.starts_with("{\"findings\":["), "{stdout}");
-    assert!(stdout.contains("\"files_scanned\":7"), "{stdout}");
+    assert!(stdout.contains("\"files_scanned\":8"), "{stdout}");
     assert!(
         stdout.contains("\"lint\":\"thread-spawn\""),
         "lint field present: {stdout}"

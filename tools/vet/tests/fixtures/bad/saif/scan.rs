@@ -1,0 +1,10 @@
+//! L7 fixture: f32 leaking into the solver stack (`saif/`).
+
+pub fn score(x: &[f64]) -> f64 {
+    let s: f32 = x.iter().map(|&v| v as f32).sum();
+    s as f64
+}
+
+pub fn half() -> f64 {
+    (0.5f32) as f64
+}

@@ -1,0 +1,10 @@
+//! Sanctuary fixture: `linalg/mixed.rs` is the one file in the solver
+//! stack where `f32` is sanctioned (the certified screening shadow).
+
+pub fn shadow_dot(x: &[f32], y: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (a, b) in x.iter().zip(y) {
+        s += a * b;
+    }
+    s
+}

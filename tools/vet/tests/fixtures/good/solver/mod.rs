@@ -21,3 +21,22 @@ pub fn interned() -> usize {
 pub fn largest(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(0.0, |a, b| if b.total_cmp(&a).is_gt() { b } else { a })
 }
+
+/// `MixedF32` (an identifier) and `"mixed-f32"` (a string) must never
+/// trip the case-sensitive, literal-blind `f32` token search.
+pub enum Fixture {
+    MixedF32,
+}
+
+pub fn label() -> &'static str {
+    "mixed-f32"
+}
+
+#[cfg(test)]
+mod tests {
+    // L7 is test-exempt: a precision probe in a test cannot corrupt a
+    // result certificate
+    pub fn as_single(x: f64) -> f32 {
+        x as f32
+    }
+}
