@@ -35,6 +35,38 @@ SAIF_TEST_THREADS=4 SAIF_TEST_POOL=scoped cargo test -q
 SAIF_TEST_THREADS=4 SAIF_TEST_POOL=persistent cargo test -q --test mixed --test kernels
 SAIF_TEST_THREADS=4 SAIF_TEST_POOL=scoped cargo test -q --test mixed --test kernels
 
+# The loss × penalty surface suite, explicitly by name on both pool
+# substrates (same rationale): the elastic-net adapter must match the
+# hand-built [X; √l2·I] reduction, every safe rule must keep the
+# no-screening reference support on the sqhinge/huber/enet rows, and
+# the serve layer must isolate cache entries per surface.
+SAIF_TEST_THREADS=4 SAIF_TEST_POOL=persistent cargo test -q --test methods --test serve \
+    elastic_net_matches_the_explicit_augmented_construction \
+    new_loss_penalty_surfaces_keep_the_reference_support \
+    loss_and_penalty_surfaces_are_served_and_isolated
+SAIF_TEST_THREADS=4 SAIF_TEST_POOL=scoped cargo test -q --test methods --test serve \
+    elastic_net_matches_the_explicit_augmented_construction \
+    new_loss_penalty_surfaces_keep_the_reference_support \
+    loss_and_penalty_surfaces_are_served_and_isolated
+
+# Bench-guard smoke test (stdlib python3): the schema-derived methods
+# mode must guard the new enet/huber scenario rows with no guard-side
+# edit — identical records pass, a planted 10x regression fails.
+if command -v python3 >/dev/null 2>&1; then
+    smoke_base="$(mktemp)"; smoke_fresh="$(mktemp)"
+    printf '{"bench":"methods","enet_ls_dense_saif_secs":1.0,"huber_dense_saif_secs":1.0}\n' > "$smoke_base"
+    printf '{"bench":"methods","enet_ls_dense_saif_secs":1.0,"huber_dense_saif_secs":1.0}\n' > "$smoke_fresh"
+    python3 ../tools/bench_guard.py "$smoke_base" "$smoke_fresh" >/dev/null
+    printf '{"bench":"methods","enet_ls_dense_saif_secs":10.0,"huber_dense_saif_secs":1.0}\n' > "$smoke_fresh"
+    if python3 ../tools/bench_guard.py "$smoke_base" "$smoke_fresh" >/dev/null 2>&1; then
+        echo "bench guard smoke test: planted regression was NOT caught" >&2
+        exit 1
+    fi
+    rm -f "$smoke_base" "$smoke_fresh"
+else
+    echo "bench guard smoke test: python3 not found; skipping" >&2
+fi
+
 # Serving soak: the loopback e2e suite (tests/serve.rs) already ran in
 # all three legs above; this leg additionally hammers the TCP server
 # with repeated bench cycles for ~30s to shake out slow leaks, pool

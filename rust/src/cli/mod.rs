@@ -3,12 +3,14 @@
 //!
 //! ```text
 //! repro solve      --dataset sim --lambda-frac 0.1 [--method saif]
+//!                  [--loss ls|logistic|sqhinge|huber[:delta]] [--l2 ALPHA]
 //!                  [--engine native|pjrt] [--eps 1e-6] [--seed 42]
 //!                  [--libsvm path --logistic [--dense]]
 //!                  [--saifbin path.saifbin] [--design mem|ooc]
 //!                  [--threads serial|auto|N] [--epoch-shards auto|N]
 //!                  [--pool persistent|scoped] [--precision f64|mixed-f32]
 //! repro path       --dataset sim --lambdas 0.9:0.01:16 [--method saif]
+//!                  [--loss ...] [--l2 ALPHA]
 //!                  [--engine native|pjrt] [--eps 1e-6] [...]
 //! repro convert    --libsvm in.svm --out out.saifbin [--logistic]
 //! repro experiment --id fig2-sim [--out out]   (or --all)
@@ -27,6 +29,15 @@
 //! the shared scenario grid and rewrites `BENCH_methods.json`. Unknown `--flags` are rejected with
 //! the valid set for the subcommand (a typo like `--epoch-shard` is an
 //! error, not silently ignored).
+//!
+//! `--loss` re-reads the loaded design under another loss (`ls`,
+//! `logistic`, `sqhinge`, `huber[:delta]`) — the request-time surface,
+//! mirroring a serve frame's loss field; classification losses require
+//! the labels to actually be ±1. `--l2 ALPHA` adds an absolute ridge
+//! term (elastic net, least squares only; 0 = pure LASSO, bitwise
+//! identical to omitting the flag). Method-vs-surface conflicts
+//! (`group`/`fused` off their supported losses, any structured method
+//! with `--l2`) are clean `error:` + exit 2, never a panic.
 //!
 //! `--libsvm` loads SPARSE (CSC, no n×p densification) so text-scale
 //! files fit in memory; `--dense` densifies explicitly for dense-path
@@ -55,6 +66,7 @@ use crate::cm::{Engine, EpochShards, PoolMode};
 use crate::coordinator::{Coordinator, EngineKind, SolveRequest};
 use crate::data;
 use crate::linalg::{Parallelism, Precision};
+use crate::model::{LossKind, Penalty};
 use crate::runtime::PjrtEngine;
 use crate::solver::{Method, SolveSpec, Solver};
 use crate::util::tmax;
@@ -145,14 +157,14 @@ fn valid_flags(cmd: &str) -> Option<Vec<&'static str>> {
             v.extend_from_slice(DATASET_FLAGS);
             v.extend_from_slice(&[
                 "lambda", "lambda-frac", "method", "engine", "eps", "threads", "epoch-shards",
-                "pool", "precision",
+                "pool", "precision", "loss", "l2",
             ]);
         }
         "path" => {
             v.extend_from_slice(DATASET_FLAGS);
             v.extend_from_slice(&[
                 "lambdas", "method", "engine", "eps", "threads", "epoch-shards", "pool",
-                "precision",
+                "precision", "loss", "l2",
             ]);
         }
         "convert" => v.extend_from_slice(&["libsvm", "out", "logistic"]),
@@ -160,14 +172,14 @@ fn valid_flags(cmd: &str) -> Option<Vec<&'static str>> {
         "serve" => v.extend_from_slice(&[
             "workers", "datasets", "lambdas", "method", "engine", "eps", "threads",
             "epoch-shards", "pool", "precision", "design", "listen", "max-conns",
-            "high-watermark", "retry-after-ms", "cache-capacity",
+            "high-watermark", "retry-after-ms", "cache-capacity", "loss", "l2",
         ]),
         "bench-serve" => v.extend_from_slice(&["quick"]),
         "cv" => {
             v.extend_from_slice(DATASET_FLAGS);
-            v.extend_from_slice(&["folds", "lambdas", "workers"]);
+            v.extend_from_slice(&["folds", "lambdas", "workers", "loss", "l2"]);
         }
-        "bench-methods" => v.extend_from_slice(&["quick"]),
+        "bench-methods" => v.extend_from_slice(&["quick", "loss", "l2"]),
         "list" => {}
         _ => return None,
     }
@@ -212,20 +224,23 @@ SAIF — Safe Active Incremental Feature selection (paper reproduction)
 USAGE:
   repro solve      --dataset <name> --lambda-frac <f>
                    [--method saif|dyn|blitz|homotopy|fused|group[:K]]
+                   [--loss ls|logistic|sqhinge|huber[:delta]] [--l2 ALPHA]
                    [--engine native|pjrt] [--eps 1e-6] [--seed 42]
                    [--libsvm <path> [--logistic] [--dense]]
                    [--saifbin <path>] [--design mem|ooc]
                    [--threads serial|auto|N] [--epoch-shards auto|N]
                    [--pool persistent|scoped] [--precision f64|mixed-f32]
   repro path       --dataset <name> --lambdas a:b:k   warm-chained λ-path
-                   [--method ...] [--engine ...] [--eps 1e-6] [...]
+                   [--method ...] [--loss ...] [--l2 ALPHA]
+                   [--engine ...] [--eps 1e-6] [...]
                    (k log-spaced λ from a·λ_max down to b·λ_max)
   repro convert    --libsvm <in.svm> --out <out.saifbin> [--logistic]
                                               LibSVM → .saifbin converter
   repro experiment --id <id> [--out out]      run one paper experiment
   repro experiment --all [--out out]          run every experiment
   repro serve      [--workers N] [--datasets D] [--lambdas L]
-                   [--method ...] [--engine native|pjrt]
+                   [--method ...] [--loss ...] [--l2 ALPHA]
+                   [--engine native|pjrt]
                    [--threads serial|auto|N] [--epoch-shards auto|N]
                    [--pool persistent|scoped] [--design mem|ooc]
                                               coordinator demo workload
@@ -244,10 +259,15 @@ USAGE:
                                               generator →
                                               BENCH_serve.json
   repro cv         --dataset <name> [--folds 5] [--lambdas 20]
-                   [--workers 4]              k-fold CV λ selection
-  repro bench-methods [--quick]               method shootout over the
+                   [--workers 4] [--loss ...] [--l2 ALPHA]
+                                              k-fold CV λ selection
+  repro bench-methods [--quick] [--loss ...] [--l2 ALPHA]
+                                              method shootout over the
                                               shared scenario grid →
                                               BENCH_methods.json
+                                              (--loss/--l2 filter the
+                                              grid rows; a filtered run
+                                              never rewrites the record)
   repro list                                  datasets + experiment ids
 
   Unknown --flags are rejected with the valid set for the subcommand.
@@ -258,6 +278,15 @@ USAGE:
   homotopy, fused (chain-tree fused LASSO, or the dataset's tree when
   it has one), group[:K] (contiguous groups of K features, default 8;
   least squares only).
+  --loss re-reads the loaded design under another loss: ls, logistic,
+  sqhinge (squared hinge), huber[:delta] (default delta 1). It never
+  touches the data, so logistic/sqhinge require ±1 labels. --l2 ALPHA
+  adds an absolute ridge term (elastic net, solved via the rescaled-
+  LASSO reduction; least squares only; 0 = pure LASSO, bitwise
+  identical to omitting the flag). Conflicts (group/fused off their
+  supported losses, structured methods with --l2) exit 2 cleanly. In
+  serve --listen mode both flags are rejected: every request frame
+  names its own loss and penalty.
   --libsvm loads sparse (CSC; the file is never densified), so
   rcv1-scale text corpora fit in memory; add --dense to densify.
   --saifbin opens a .saifbin dataset OUT-OF-CORE: only the labels and
@@ -334,6 +363,25 @@ fn load_dataset(args: &Args) -> Result<data::Dataset, String> {
             }
         }
     }
+    // `--loss` re-reads the loaded design under another loss — the
+    // request-time surface, same as a serve frame's loss field. It
+    // never touches the data, so classification losses still need the
+    // labels to actually be ±1.
+    if let Some(loss) = loss_arg(args)? {
+        if args.has("logistic") {
+            return Err(
+                "--loss conflicts with --logistic (one loss source; say --loss logistic)".into(),
+            );
+        }
+        if loss.needs_pm1_labels() && !ds.y.iter().all(|&v| v == 1.0 || v == -1.0) {
+            return Err(format!(
+                "loss {} needs ±1 labels, but dataset '{}' has real-valued responses",
+                loss.name(),
+                ds.name
+            ));
+        }
+        ds.loss = loss;
+    }
     Ok(ds)
 }
 
@@ -386,6 +434,48 @@ fn precision_arg(args: &Args) -> Result<Precision, String> {
         Some(s) => Precision::parse(s)
             .ok_or_else(|| format!("bad --precision value '{s}' (f64|mixed-f32)")),
     }
+}
+
+/// `--loss` override: `None` keeps the loaded dataset's own loss.
+fn loss_arg(args: &Args) -> Result<Option<LossKind>, String> {
+    match args.get("loss") {
+        None => Ok(None),
+        Some(s) => LossKind::parse(s).map(Some).ok_or_else(|| {
+            format!("bad --loss value '{s}' (ls|logistic|sqhinge|huber[:delta], delta finite > 0)")
+        }),
+    }
+}
+
+/// `--l2 ALPHA` → elastic-net penalty (absolute ridge weight added to
+/// the λ·ℓ1 term; 0 ⇒ today's pure-ℓ1 LASSO).
+fn penalty_arg(args: &Args) -> Result<Penalty, String> {
+    match args.get("l2") {
+        None => Ok(Penalty::default()),
+        Some(s) => {
+            let l2: f64 = s
+                .parse()
+                .map_err(|_| format!("bad --l2 value '{s}' (a finite ridge weight >= 0)"))?;
+            if !l2.is_finite() || l2 < 0.0 {
+                return Err(format!("bad --l2 value '{s}' (a finite ridge weight >= 0)"));
+            }
+            Ok(Penalty { l1: 1.0, l2 })
+        }
+    }
+}
+
+/// The elastic-net ridge term is solved through the augmented-design
+/// reduction, which is least-squares-only; reject `--l2` on any other
+/// loss with a clean error (the solver stack asserts on this at the
+/// API boundary, it does not recover).
+fn check_l2_fits(penalty: Penalty, loss: LossKind) -> Result<(), String> {
+    if penalty.l2 > 0.0 && loss != LossKind::Squared {
+        return Err(format!(
+            "--l2 requires least squares (the ridge reduction augments the design), \
+             but the loss here is {}",
+            loss.name()
+        ));
+    }
+    Ok(())
 }
 
 fn engine_arg(args: &Args) -> Result<EngineKind, String> {
@@ -467,13 +557,35 @@ fn with_solver<R>(
 /// Reject method/problem combinations the solvers would panic on, so
 /// the CLI fails with a clean `error:` + exit 2 like every other bad
 /// input.
-fn check_method_fits(method: Method, ds: &data::Dataset) -> Result<(), String> {
-    if matches!(method, Method::Group { .. }) && ds.loss != crate::model::LossKind::Squared {
+/// The loss/penalty part of [`check_method_fits`], usable where only
+/// the solve surface (not a loaded dataset) is known yet.
+fn check_method_fits_loss(method: Method, loss: LossKind, penalty: Penalty) -> Result<(), String> {
+    penalty.validate()?;
+    check_l2_fits(penalty, loss)?;
+    if matches!(method, Method::Fused | Method::Group { .. }) && penalty.l2 > 0.0 {
         return Err(format!(
-            "--method group supports least squares only, but dataset '{}' is {:?}",
-            ds.name, ds.loss
+            "--method {} solves a structured penalty and does not compose with --l2",
+            method.label()
         ));
     }
+    if matches!(method, Method::Group { .. }) && loss != LossKind::Squared {
+        return Err(format!(
+            "--method group supports least squares only, not {}",
+            loss.name()
+        ));
+    }
+    if matches!(method, Method::Fused) && !matches!(loss, LossKind::Squared | LossKind::Logistic)
+    {
+        return Err(format!(
+            "--method fused supports ls and logistic only, not {}",
+            loss.name()
+        ));
+    }
+    Ok(())
+}
+
+fn check_method_fits(method: Method, ds: &data::Dataset, penalty: Penalty) -> Result<(), String> {
+    check_method_fits_loss(method, ds.loss, penalty)?;
     // the fused tree transform needs contiguous dense columns, so it
     // would silently materialize the whole n×p design in RAM —
     // exactly what an out-of-core design exists to avoid
@@ -495,6 +607,7 @@ fn solve_spec(args: &Args) -> Result<SolveSpec, String> {
         epoch_shards: Some(epoch_shards_arg(args)?),
         pool: Some(pool_arg(args)?),
         precision: Some(precision_arg(args)?),
+        penalty: penalty_arg(args)?,
         ..Default::default()
     })
 }
@@ -512,16 +625,17 @@ fn cmd_solve(args: &Args) -> i32 {
         };
         let spec = solve_spec(args)?;
         let method = method_arg(args)?;
-        check_method_fits(method, &ds)?;
+        check_method_fits(method, &ds, spec.penalty)?;
 
         println!(
-            "dataset={} n={} p={} storage={}(nnz={}) loss={:?} λ_max={lam_max:.4e} λ={lam:.4e} eps={:.0e} engine={} method={}",
+            "dataset={} n={} p={} storage={}(nnz={}) loss={} penalty={} λ_max={lam_max:.4e} λ={lam:.4e} eps={:.0e} engine={} method={}",
             ds.name,
             ds.n(),
             ds.p(),
             ds.x.storage(),
             ds.x.nnz(),
-            ds.loss,
+            ds.loss.name(),
+            spec.penalty.label(),
             spec.eps,
             args.get("engine").unwrap_or("native"),
             method.name(),
@@ -573,13 +687,15 @@ fn cmd_path(args: &Args) -> i32 {
         let grid = parse_lambda_grid(args.get("lambdas").unwrap_or("0.9:0.01:16"), lam_max)?;
         let spec = solve_spec(args)?;
         let method = method_arg(args)?;
-        check_method_fits(method, &ds)?;
+        check_method_fits(method, &ds, spec.penalty)?;
 
         println!(
-            "path: dataset={} n={} p={} method={} {} λ in [{:.3e}, {:.3e}] eps={:.0e}",
+            "path: dataset={} n={} p={} loss={} penalty={} method={} {} λ in [{:.3e}, {:.3e}] eps={:.0e}",
             ds.name,
             ds.n(),
             ds.p(),
+            ds.loss.name(),
+            spec.penalty.label(),
             method.name(),
             grid.len(),
             grid.last().unwrap(),
@@ -680,6 +796,22 @@ fn cmd_experiment(args: &Args) -> i32 {
     0
 }
 
+/// A demo dataset for `repro serve`: the synthetic linear design,
+/// re-labeled ±1 when the requested loss is a classification loss
+/// (the synthesized responses are real-valued).
+fn demo_dataset(d: usize, loss: Option<LossKind>) -> data::Dataset {
+    let mut ds = data::synth::synth_linear(100, 1000 + 200 * d, 1000 + d as u64);
+    if let Some(l) = loss {
+        if l.needs_pm1_labels() {
+            for v in ds.y.iter_mut() {
+                *v = if *v >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        ds.loss = l;
+    }
+    ds
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     if args.has("listen") {
         return cmd_serve_listen(args);
@@ -737,6 +869,20 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    let loss = match loss_arg(args) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let penalty = match penalty_arg(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let ooc = design == Some(DesignChoice::Ooc);
     if ooc && matches!(method, Method::Fused) {
         eprintln!(
@@ -745,10 +891,25 @@ fn cmd_serve(args: &Args) -> i32 {
         );
         return 2;
     }
+    let eff_loss = loss.unwrap_or(LossKind::Squared);
+    if let Err(e) = check_method_fits_loss(method, eff_loss, penalty) {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    if ooc && !matches!(eff_loss, LossKind::Squared | LossKind::Logistic) {
+        eprintln!(
+            "error: the out-of-core demo spills datasets to .saifbin, which stores \
+             ls/logistic only; run --loss {} with --design mem",
+            eff_loss.name()
+        );
+        return 2;
+    }
 
     println!(
-        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={}, scan threads={par:?}, epoch shards={shards:?}, pool={}, precision={}, design={}",
+        "coordinator demo: {workers} workers, {n_datasets} datasets × {n_lambdas} λ, engine={engine:?}, method={}, loss={}, penalty={}, scan threads={par:?}, epoch shards={shards:?}, pool={}, precision={}, design={}",
         method.name(),
+        eff_loss.name(),
+        penalty.label(),
         pool.name(),
         precision.as_str(),
         if ooc { "ooc" } else { "mem" },
@@ -780,7 +941,7 @@ fn cmd_serve(args: &Args) -> i32 {
             let mut c = builder.clone().build();
             let mut lam_maxes = Vec::with_capacity(n_datasets);
             for d in 0..n_datasets {
-                let ds = data::synth::synth_linear(100, 1000 + 200 * d, 1000 + d as u64);
+                let ds = demo_dataset(d, loss);
                 let path = std::env::temp_dir().join(format!(
                     "saif_serve_{}_{d}.saifbin",
                     std::process::id()
@@ -801,7 +962,7 @@ fn cmd_serve(args: &Args) -> i32 {
                         d as u64,
                         lam,
                         method,
-                        SolveSpec { eps, ..Default::default() },
+                        SolveSpec { eps, penalty, ..Default::default() },
                     )
                     .map_err(|e| e.to_string())?;
                     id += 1;
@@ -830,7 +991,7 @@ fn cmd_serve(args: &Args) -> i32 {
         let mut reqs = Vec::new();
         let mut id = 0u64;
         for d in 0..n_datasets {
-            let ds = data::synth::synth_linear(100, 1000 + 200 * d, 1000 + d as u64);
+            let ds = demo_dataset(d, loss);
             let prob = Arc::new(ds.problem());
             let lam_max = prob.lambda_max();
             for lam in grid(lam_max) {
@@ -842,7 +1003,7 @@ fn cmd_serve(args: &Args) -> i32 {
                     method,
                     tree: None,
                     warm: None,
-                    spec: SolveSpec { eps, ..Default::default() },
+                    spec: SolveSpec { eps, penalty, ..Default::default() },
                 });
                 id += 1;
             }
@@ -888,6 +1049,14 @@ fn cmd_serve(args: &Args) -> i32 {
 fn cmd_serve_listen(args: &Args) -> i32 {
     use crate::serve::{ServeConfig, ServeDataset, Server};
 
+    if args.has("loss") || args.has("l2") {
+        eprintln!(
+            "error: --loss/--l2 do not apply to --listen mode: every solve/path request \
+             frame names its own loss and penalty (protocol v2), and the server isolates \
+             cache entries per surface"
+        );
+        return 2;
+    }
     let addr = match args.get("listen") {
         // bare `--listen` (no value) gets the conventional local port
         Some("true") | None => "127.0.0.1:7878",
@@ -1022,9 +1191,31 @@ fn cmd_bench_serve(args: &Args) -> i32 {
 }
 
 fn cmd_bench_methods(args: &Args) -> i32 {
-    match crate::shootout::run(args.has("quick")) {
+    // --loss/--l2 restrict the scenario grid; a filtered run never
+    // rewrites BENCH_methods.json (the guard baseline covers the full
+    // grid)
+    let loss = match loss_arg(args) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let l2 = match penalty_arg(args) {
+        Ok(p) => args.get("l2").map(|_| p.l2),
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let filtered = loss.is_some() || l2.is_some();
+    match crate::shootout::run_filtered(args.has("quick"), loss, l2) {
         Ok(res) => {
             println!("{}", res.table.render());
+            if filtered {
+                println!("(filtered grid; BENCH_methods.json left untouched)");
+                return 0;
+            }
             match crate::shootout::write_record(&res.record) {
                 Ok(path) => {
                     println!("wrote {path}");
@@ -1051,16 +1242,28 @@ fn cmd_cv(args: &Args) -> i32 {
             return 2;
         }
     };
+    let penalty = match penalty_arg(args).and_then(|p| {
+        check_l2_fits(p, ds.loss)?;
+        Ok(p)
+    }) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
     let folds = args.get_usize("folds", 5);
     let n_lams = args.get_usize("lambdas", 20);
     let workers = args.get_usize("workers", 4);
     println!(
-        "cross-validation: {} ({}×{}), {folds} folds × {n_lams} λ, {workers} workers",
+        "cross-validation: {} ({}×{}), loss={} penalty={}, {folds} folds × {n_lams} λ, {workers} workers",
         ds.name,
         ds.n(),
-        ds.p()
+        ds.p(),
+        ds.loss.name(),
+        penalty.label()
     );
-    let res = match crate::cv::cross_validate(&ds, folds, n_lams, 1e-3, workers, 42) {
+    let res = match crate::cv::cross_validate(&ds, folds, n_lams, 1e-3, workers, penalty, 42) {
         Ok(res) => res,
         Err(e) => {
             eprintln!("{e}");
@@ -1217,11 +1420,95 @@ mod tests {
 
     #[test]
     fn group_method_rejected_on_logistic_dataset() {
+        let plain = Penalty::default();
         let logistic = crate::data::synth::gisette_like(10, 8, 1);
-        assert!(check_method_fits(Method::Group { size: 2 }, &logistic).is_err());
-        assert!(check_method_fits(Method::Saif, &logistic).is_ok());
+        assert!(check_method_fits(Method::Group { size: 2 }, &logistic, plain).is_err());
+        assert!(check_method_fits(Method::Saif, &logistic, plain).is_ok());
         let ls = crate::data::synth::synth_linear(10, 8, 1);
-        assert!(check_method_fits(Method::Group { size: 2 }, &ls).is_ok());
+        assert!(check_method_fits(Method::Group { size: 2 }, &ls, plain).is_ok());
+    }
+
+    #[test]
+    fn loss_arg_parses_and_rejects() {
+        for (s, l) in [
+            ("ls", LossKind::Squared),
+            ("logistic", LossKind::Logistic),
+            ("sqhinge", LossKind::SquaredHinge),
+            ("huber", LossKind::Huber { delta: 1.0 }),
+            ("huber:0.5", LossKind::Huber { delta: 0.5 }),
+        ] {
+            let a = Args::parse(&argv(&["solve", "--loss", s]));
+            assert_eq!(loss_arg(&a).unwrap(), Some(l), "{s}");
+        }
+        let a = Args::parse(&argv(&["solve"]));
+        assert_eq!(loss_arg(&a).unwrap(), None);
+        for bad in ["hinge", "huber:-1", "huber:nan", "huber:"] {
+            let a = Args::parse(&argv(&["solve", "--loss", bad]));
+            let err = loss_arg(&a).unwrap_err();
+            // the error names the valid set
+            assert!(err.contains("sqhinge") && err.contains("huber"), "{bad}: {err}");
+        }
+        // the flags sit in every allowlist the issue names
+        for cmd in ["solve", "path", "cv", "serve", "bench-methods"] {
+            let v = valid_flags(cmd).unwrap();
+            assert!(v.contains(&"loss") && v.contains(&"l2"), "{cmd}");
+        }
+    }
+
+    #[test]
+    fn l2_arg_parses_and_rejects() {
+        let a = Args::parse(&argv(&["solve", "--l2", "0.25"]));
+        assert_eq!(penalty_arg(&a).unwrap(), Penalty::ridge(0.25));
+        let a = Args::parse(&argv(&["solve", "--l2", "0"]));
+        assert!(penalty_arg(&a).unwrap().is_plain());
+        let a = Args::parse(&argv(&["solve"]));
+        assert!(penalty_arg(&a).unwrap().is_plain());
+        for bad in ["-0.1", "inf", "nan", "ridge"] {
+            let a = Args::parse(&argv(&["solve", "--l2", bad]));
+            assert!(penalty_arg(&a).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn method_vs_surface_conflicts_are_clean_errors() {
+        let ls = crate::data::synth::synth_linear(10, 8, 1);
+        let mut huber = crate::data::synth::synth_linear(10, 8, 1);
+        huber.loss = LossKind::Huber { delta: 1.0 };
+        let plain = Penalty::default();
+        let enet = Penalty::ridge(0.1);
+        // fused is ls/logistic only
+        let err = check_method_fits(Method::Fused, &huber, plain).unwrap_err();
+        assert!(err.contains("fused") && err.contains("huber"), "{err}");
+        // structured methods never compose with --l2
+        for m in [Method::Fused, Method::Group { size: 2 }] {
+            let err = check_method_fits(m, &ls, enet).unwrap_err();
+            assert!(err.contains("--l2"), "{err}");
+        }
+        // the ridge reduction is least-squares-only
+        let logistic = crate::data::synth::gisette_like(10, 8, 1);
+        let err = check_method_fits(Method::Saif, &logistic, enet).unwrap_err();
+        assert!(err.contains("least squares"), "{err}");
+        // and the supported surfaces pass
+        assert!(check_method_fits(Method::Saif, &ls, enet).is_ok());
+        assert!(check_method_fits(Method::Saif, &huber, plain).is_ok());
+        assert!(check_method_fits(Method::Fused, &ls, plain).is_ok());
+    }
+
+    #[test]
+    fn load_dataset_loss_override_validates_labels() {
+        // huber override on a real-valued dataset works
+        let a = Args::parse(&argv(&["solve", "--dataset", "sim-small", "--loss", "huber:0.5"]));
+        assert_eq!(load_dataset(&a).unwrap().loss, LossKind::Huber { delta: 0.5 });
+        // ±1-label losses demand actual ±1 labels
+        let a = Args::parse(&argv(&["solve", "--dataset", "sim-small", "--loss", "sqhinge"]));
+        let err = load_dataset(&a).unwrap_err();
+        assert!(err.contains("±1 labels"), "{err}");
+        // ... and pass on a classification dataset
+        let a = Args::parse(&argv(&["solve", "--dataset", "bc-small", "--loss", "sqhinge"]));
+        assert_eq!(load_dataset(&a).unwrap().loss, LossKind::SquaredHinge);
+        // one loss source: --loss conflicts with --logistic
+        let a = Args::parse(&argv(&["solve", "--dataset", "sim-small", "--loss", "ls", "--logistic"]));
+        assert!(load_dataset(&a).unwrap_err().contains("--logistic"));
     }
 
     #[test]

@@ -130,10 +130,13 @@ impl NativeEngine {
         }
     }
 
-    /// One cyclic CM epoch for logistic over the `sweep` positions.
-    /// `u` are the margins Xβ; each coordinate takes a
-    /// Lipschitz-majorized Newton step (H = n2/4).
-    fn epoch_logistic(
+    /// One cyclic CM epoch for any smooth margins-based loss over the
+    /// `sweep` positions. `u` are the margins Xβ; each coordinate takes
+    /// a Lipschitz-majorized Newton step with H = curv·n2 (curv is the
+    /// loss's f'-Lipschitz constant — 1/4 for logistic, 1 for squared
+    /// hinge and Huber — so the majorization argument is the same for
+    /// every variant).
+    fn epoch_smooth(
         prob: &Problem,
         active: &[usize],
         sweep: &[usize],
@@ -143,6 +146,7 @@ impl NativeEngine {
         lam: f64,
     ) {
         let y = &prob.y;
+        let curv = prob.loss.curv();
         for &a in sweep {
             let i = active[a];
             let n2 = prob.col_nrm2[i];
@@ -150,10 +154,10 @@ impl NativeEngine {
                 continue;
             }
             for j in 0..u.len() {
-                fp[j] = -y[j] / (1.0 + (y[j] * u[j]).exp());
+                fp[j] = prob.loss.deriv(u[j], y[j]);
             }
             let g = prob.x.col_dot(i, fp);
-            let h = 0.25 * n2;
+            let h = curv * n2;
             let bi = beta[a];
             let z = bi - g / h;
             let bn = soft_threshold(z, lam / h);
@@ -192,9 +196,7 @@ impl NativeEngine {
     ) {
         let serial = |beta: &mut [f64], state: &mut [f64], fp: &mut [f64]| match prob.loss {
             LossKind::Squared => Self::epoch_ls(prob, active, sweep, beta, state, lam),
-            LossKind::Logistic => {
-                Self::epoch_logistic(prob, active, sweep, beta, state, fp, lam)
-            }
+            _ => Self::epoch_smooth(prob, active, sweep, beta, state, fp, lam),
         };
         if shards <= 1 || sweep.len() < 2 {
             serial(beta, state, fp);
@@ -237,9 +239,7 @@ impl NativeEngine {
                 LossKind::Squared => {
                     Self::shard_pass_ls(prob, active, shard_sweep, beta, state, lam)
                 }
-                LossKind::Logistic => {
-                    Self::shard_pass_logistic(prob, active, shard_sweep, beta, state, lam)
-                }
+                _ => Self::shard_pass_smooth(prob, active, shard_sweep, beta, state, lam),
             }
         })
         // vet: allow(lib-panic): re-raises a panic that already crossed the
@@ -277,8 +277,9 @@ impl NativeEngine {
         moves
     }
 
-    /// Majorized-Newton pass of one logistic shard on private margins.
-    fn shard_pass_logistic(
+    /// Majorized-Newton pass of one smooth-loss shard on private
+    /// margins (same H = curv·n2 step as [`Self::epoch_smooth`]).
+    fn shard_pass_smooth(
         prob: &Problem,
         active: &[usize],
         shard_sweep: &[usize],
@@ -287,6 +288,7 @@ impl NativeEngine {
         lam: f64,
     ) -> Vec<ShardMove> {
         let y = &prob.y;
+        let curv = prob.loss.curv();
         let mut u_loc = u_frozen.to_vec();
         let mut fp_loc = vec![0.0; u_loc.len()];
         let mut moves = Vec::new();
@@ -297,10 +299,10 @@ impl NativeEngine {
                 continue;
             }
             for j in 0..u_loc.len() {
-                fp_loc[j] = -y[j] / (1.0 + (y[j] * u_loc[j]).exp());
+                fp_loc[j] = prob.loss.deriv(u_loc[j], y[j]);
             }
             let g = prob.x.col_dot(i, &fp_loc);
-            let h = 0.25 * n2;
+            let h = curv * n2;
             let bi = beta[a];
             let z = bi - g / h;
             let bn = soft_threshold(z, lam / h);
@@ -344,7 +346,7 @@ impl NativeEngine {
                 0.5 * crate::linalg::nrm2_sq(state) + lam * l1(beta),
                 0.5 * crate::linalg::nrm2_sq(&merged) + lam * l1_new,
             ),
-            LossKind::Logistic => (
+            _ => (
                 prob.primal_from_margins(state, l1(beta), lam),
                 prob.primal_from_margins(&merged, l1_new, lam),
             ),
@@ -424,7 +426,7 @@ impl Engine for NativeEngine {
                     self.scratch_u[j] = prob.y[j] - self.scratch_u[j];
                 }
             }
-            LossKind::Logistic => {
+            _ => {
                 self.scratch_fp.resize(n, 0.0);
                 let mut done = 0usize;
                 while done < k {

@@ -8,8 +8,8 @@
 //! * a dispatcher routes requests over **logical workers** with
 //!   **dataset affinity** — all requests touching a dataset land on
 //!   the same worker so its warm-start cache (last solution per
-//!   (dataset, method), valid for the next smaller λ) and its packed
-//!   PJRT buffers are reused;
+//!   (dataset, method, loss × penalty signature), valid for the next
+//!   smaller λ) and its packed PJRT buffers are reused;
 //! * within a worker, queued requests for the same dataset are
 //!   **batched, sorted by descending λ and handed to the solver as one
 //!   [`Solver::path_warm`](crate::solver::Solver::path_warm) session**
@@ -330,11 +330,14 @@ struct WorkerSlot {
 struct WorkerState {
     native: NativeEngine,
     pjrt: Option<PjrtEngine>,
-    /// Warm-start cache: (dataset_key, method) → (λ of last solution,
-    /// solution). Keyed per method so a structured-penalty solution
-    /// (fused is piecewise-constant, not sparse) can never seed a
-    /// plain-LASSO session on the same dataset.
-    warm: BTreeMap<(u64, Method), (f64, Vec<(usize, f64)>)>,
+    /// Warm-start cache: (dataset_key, method, problem signature) →
+    /// (λ of last solution, solution). Keyed per method so a
+    /// structured-penalty solution (fused is piecewise-constant, not
+    /// sparse) can never seed a plain-LASSO session on the same
+    /// dataset, and per loss × penalty signature ([`problem_sig`]) so
+    /// the same dataset served under a different loss or elastic-net
+    /// weight — a different optimization problem — never cross-seeds.
+    warm: BTreeMap<(u64, Method, u64), (f64, Vec<(usize, f64)>)>,
     /// Build-time (parallelism, epoch_shards, pool, precision)
     /// defaults that per-request `SolveSpec` overrides fall back to.
     defaults: (Parallelism, EpochShards, PoolMode, Precision),
@@ -344,6 +347,15 @@ struct WorkerState {
 /// `dead` flag keeps it from being reused for solves.
 fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Warm-cache discriminator: which loss × penalty surface a solution
+/// belongs to. The penalty half mirrors the [`crate::solver::Penalized`]
+/// adapter's precedence (a non-plain problem-level penalty wins over
+/// the spec's), so the signature matches what was actually solved.
+fn problem_sig(prob: &Problem, spec: &SolveSpec) -> u64 {
+    let pen = if !prob.penalty.is_plain() { prob.penalty } else { spec.penalty };
+    prob.loss.fingerprint() ^ pen.fingerprint().rotate_left(17)
 }
 
 /// Seed equality for batching: two requests chain into one path session
@@ -712,11 +724,12 @@ fn process_batch(
         let lams: Vec<f64> = chunk.iter().map(|r| r.lam).collect();
         // an explicit per-request seed (the serving cache's nearest
         // cached β) wins over the worker's own warm cache
+        let sig = problem_sig(prob, spec);
         let seed = match &first.warm {
             Some(w) => Some(w.to_vec()),
             None => state
                 .warm
-                .get(&(first.dataset_key, first.method))
+                .get(&(first.dataset_key, first.method, sig))
                 .filter(|(l, _)| *l >= first.lam)
                 .map(|(_, b)| b.clone()),
         };
@@ -743,7 +756,7 @@ fn process_batch(
         if let (Some(req), Some(sol)) = (chunk.last(), path.points.last()) {
             state
                 .warm
-                .insert((req.dataset_key, req.method), (req.lam, sol.beta.clone()));
+                .insert((req.dataset_key, req.method, sig), (req.lam, sol.beta.clone()));
         }
     }
 }
@@ -922,6 +935,30 @@ mod tests {
             let eps = if r.id == 0 { 1e-9 } else { 1e-8 };
             assert!(r.gap <= eps, "req {}: gap {}", r.id, r.gap);
             assert!(r.kkt_violation < 1e-3 * r.lam.max(1.0));
+        }
+    }
+
+    #[test]
+    fn elastic_net_requests_serve_and_certify() {
+        use crate::model::Penalty;
+        let prob = Arc::new(synth::synth_linear(30, 120, 213).problem());
+        let pen = Penalty::ridge(0.3);
+        let mut reqs = requests_for(prob.clone(), 1, &[0.3, 0.15], 0);
+        for r in &mut reqs {
+            r.spec.penalty = pen;
+        }
+        let (responses, _, _) = run(reqs, Coordinator::builder().workers(1));
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert!(r.gap <= 1e-8, "gap {}", r.gap);
+            // the response certificate IS the elastic-net KKT system
+            assert!(
+                r.kkt_violation < 1e-3 * r.lam.max(1.0),
+                "enet kkt {}",
+                r.kkt_violation
+            );
+            let viol = prob.kkt_violation_with(&r.beta, r.lam, pen);
+            assert!((viol - r.kkt_violation).abs() < 1e-12);
         }
     }
 

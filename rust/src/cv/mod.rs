@@ -9,7 +9,7 @@ use std::sync::Arc;
 use crate::coordinator::{Coordinator, EngineKind, Method, SolveRequest, SolveSpec};
 use crate::data::Dataset;
 use crate::linalg::Design;
-use crate::model::{LossKind, Problem};
+use crate::model::{LossKind, Penalty, Problem};
 use crate::util::prng::Rng;
 
 /// Result of a cross-validation sweep.
@@ -17,7 +17,8 @@ use crate::util::prng::Rng;
 pub struct CvResult {
     /// The λ grid used (descending).
     pub lams: Vec<f64>,
-    /// Mean held-out error per λ (MSE for LS, error rate for logistic).
+    /// Mean held-out error per λ: misclassification rate for the
+    /// ±1-label losses, mean per-row loss value otherwise.
     pub cv_error: Vec<f64>,
     /// Std of the held-out error per λ.
     pub cv_std: Vec<f64>,
@@ -26,7 +27,10 @@ pub struct CvResult {
     pub wall_secs: f64,
 }
 
-/// K-fold CV over a log-spaced λ grid.
+/// K-fold CV over a log-spaced λ grid. Every fold×λ solve runs under
+/// `penalty` (the elastic-net axis; [`Penalty::default`] is today's
+/// pure-ℓ1 LASSO) and the dataset's loss; the held-out metric depends
+/// only on the loss.
 ///
 /// Returns `Err` when the λ grid is empty or when the coordinator loses a
 /// worker mid-batch (the fold solves on that worker are unrecoverable).
@@ -36,6 +40,7 @@ pub fn cross_validate(
     n_lams: usize,
     lo_frac: f64,
     workers: usize,
+    penalty: Penalty,
     seed: u64,
 ) -> Result<CvResult, String> {
     assert!(k_folds >= 2);
@@ -89,7 +94,7 @@ pub fn cross_validate(
                 method: Method::Saif,
                 tree: None,
                 warm: None,
-                spec: SolveSpec { eps: 1e-6, ..Default::default() },
+                spec: SolveSpec { eps: 1e-6, penalty, ..Default::default() },
             });
             id += 1;
         }
@@ -116,19 +121,18 @@ pub fn cross_validate(
         }
         // column i of xt is feature i over the test rows — u = X β
         let e = match ds.loss {
-            LossKind::Squared => {
-                let mut s = 0.0;
-                for j in 0..yt.len() {
-                    let d = u[j] - yt[j];
-                    s += d * d;
-                }
-                s / yt.len() as f64
-            }
-            LossKind::Logistic => {
+            // ±1-label losses score by held-out misclassification rate
+            LossKind::Logistic | LossKind::SquaredHinge => {
                 let wrong = (0..yt.len())
                     .filter(|&j| u[j] * yt[j] <= 0.0)
                     .count();
                 wrong as f64 / yt.len() as f64
+            }
+            // regression losses score by their own mean per-row value
+            // (½·MSE for squared, the robustified analogue for Huber)
+            _ => {
+                let s: f64 = (0..yt.len()).map(|j| ds.loss.value(u[j], yt[j])).sum();
+                s / yt.len() as f64
             }
         };
         err[li][f] = e;
@@ -157,7 +161,7 @@ mod tests {
     #[test]
     fn cv_picks_reasonable_lambda_ls() {
         let ds = synth::synth_linear(80, 200, 601);
-        let res = cross_validate(&ds, 4, 8, 1e-3, 2, 1).unwrap();
+        let res = cross_validate(&ds, 4, 8, 1e-3, 2, Penalty::default(), 1).unwrap();
         assert_eq!(res.cv_error.len(), 8);
         // best λ is neither the largest (underfit: β=0-ish) nor does
         // the error curve stay flat
@@ -170,7 +174,7 @@ mod tests {
     #[test]
     fn cv_stays_sparse_end_to_end() {
         let ds = synth::synth_sparse(60, 400, 0.05, 605);
-        let res = cross_validate(&ds, 3, 4, 1e-2, 2, 3).unwrap();
+        let res = cross_validate(&ds, 3, 4, 1e-2, 2, Penalty::default(), 3).unwrap();
         assert_eq!(res.cv_error.len(), 4);
         assert!(res.cv_error.iter().all(|e| e.is_finite()));
         assert!(res.best_lam > 0.0);
@@ -179,12 +183,21 @@ mod tests {
     #[test]
     fn cv_logistic_error_rate_bounded() {
         let ds = synth::gisette_like(120, 80, 603);
-        let res = cross_validate(&ds, 3, 5, 1e-2, 2, 2).unwrap();
+        let res = cross_validate(&ds, 3, 5, 1e-2, 2, Penalty::default(), 2).unwrap();
         for &e in &res.cv_error {
             assert!((0.0..=1.0).contains(&e));
         }
         // learned model beats chance at the best λ
         let best = res.cv_error.iter().cloned().fold(f64::MAX, tmin);
         assert!(best < 0.45, "best CV error {best}");
+    }
+
+    #[test]
+    fn cv_elastic_net_runs_and_scores_finite() {
+        let ds = synth::synth_linear(60, 150, 607);
+        let res = cross_validate(&ds, 3, 4, 1e-2, 2, Penalty::ridge(0.2), 5).unwrap();
+        assert_eq!(res.cv_error.len(), 4);
+        assert!(res.cv_error.iter().all(|e| e.is_finite()));
+        assert!(res.best_lam > 0.0);
     }
 }

@@ -241,6 +241,15 @@ fn write_saifbin_to<W: Write>(ds: &Dataset, w: &mut W) -> std::io::Result<()> {
     let flags = match ds.loss {
         LossKind::Logistic => FLAG_LOGISTIC,
         LossKind::Squared => 0,
+        // the on-disk format stores one logistic flag only; the newer
+        // losses are request-time surfaces layered over ls/logistic
+        // datasets, never a dataset property
+        other => {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!(".saifbin cannot store loss {}", other.name()),
+            ))
+        }
     };
     for v in [u64_of(n), u64_of(p), nnz, flags] {
         w.write_all(&v.to_le_bytes())?;

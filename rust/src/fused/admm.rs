@@ -156,6 +156,10 @@ impl FusedAdmm {
                         }
                     }
                 }
+                // unreachable: the public fused entry points
+                // (fused/solver.rs) reject non-{ls,logistic} losses
+                // before this reference path can run
+                _ => unreachable!("fused ADMM is gated to ls/logistic"),
             }
             // --- z-update (soft threshold) and dual update ---
             let db = tt.d_mul(&beta);

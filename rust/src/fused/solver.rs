@@ -194,6 +194,13 @@ impl<'a> FusedSaif<'a> {
                     max_active: last.3,
                 })
             }
+            // both branches lean on loss-specific structure (the LS
+            // projection / the ¼-bounded logistic Newton), so the new
+            // losses are rejected rather than silently mis-solved
+            _ => Err(format!(
+                "fused solver supports ls and logistic only, not {}",
+                loss.name()
+            )),
         }
     }
 
@@ -232,6 +239,12 @@ impl<'a> FusedSaif<'a> {
                     }
                 }
                 b
+            }
+            _ => {
+                return Err(format!(
+                    "fused λ_max supports ls and logistic only, not {}",
+                    loss.name()
+                ))
             }
         };
         let offset: Vec<f64> = xb.iter().map(|v| v * b).collect();

@@ -102,6 +102,13 @@ pub enum Design {
     Sparse(CscMat),
     CenteredSparse { mat: CscMat, means: Vec<f64> },
     OocCsc(OocCsc),
+    /// Virtual row augmentation `[X; ridge·I]` — the elastic-net
+    /// reduction's design (see `model::penalty`): column j is the
+    /// inner column with one extra entry `ridge` at row
+    /// `inner.n_rows() + j`. O(1) extra memory: the identity block is
+    /// implicit, every kernel adds the single augmented entry
+    /// analytically. Targets gain p trailing zeros to match.
+    Ridged { inner: Box<Design>, ridge: f64 },
 }
 
 impl From<Mat> for Design {
@@ -144,6 +151,13 @@ pub enum ColIter<'a> {
         col: std::sync::Arc<OocCol>,
         k: usize,
     },
+    /// Inner column followed by the single augmented ridge entry
+    /// (whose row index exceeds every inner row, so increasing row
+    /// order is preserved).
+    Ridged {
+        inner: Box<ColIter<'a>>,
+        extra: Option<(usize, f64)>,
+    },
 }
 
 impl<'a> Iterator for ColIter<'a> {
@@ -177,6 +191,7 @@ impl<'a> Iterator for ColIter<'a> {
                 *k += 1;
                 Some(item)
             }
+            ColIter::Ridged { inner, extra } => inner.next().or_else(|| extra.take()),
         }
     }
 }
@@ -197,6 +212,13 @@ impl Design {
         Design::CenteredSparse { mat, means }
     }
 
+    /// Build the virtual row augmentation `[X; ridge·I]` (the
+    /// elastic-net reduction; see the enum docs).
+    pub fn ridged(inner: Design, ridge: f64) -> Design {
+        assert!(ridge.is_finite() && ridge > 0.0, "ridge must be finite and > 0");
+        Design::Ridged { inner: Box::new(inner), ridge }
+    }
+
     #[inline]
     pub fn n_rows(&self) -> usize {
         match self {
@@ -204,6 +226,7 @@ impl Design {
             Design::Sparse(m) => m.n_rows(),
             Design::CenteredSparse { mat, .. } => mat.n_rows(),
             Design::OocCsc(m) => m.n_rows(),
+            Design::Ridged { inner, .. } => inner.n_rows() + inner.n_cols(),
         }
     }
 
@@ -214,44 +237,61 @@ impl Design {
             Design::Sparse(m) => m.n_cols(),
             Design::CenteredSparse { mat, .. } => mat.n_cols(),
             Design::OocCsc(m) => m.n_cols(),
+            Design::Ridged { inner, .. } => inner.n_cols(),
         }
     }
 
     /// Whether the backing storage is CSC (plain, centered, or
-    /// out-of-core).
+    /// out-of-core). A ridged design reports its inner backend — the
+    /// implicit identity block has no storage of its own.
     pub fn is_sparse(&self) -> bool {
-        !matches!(self, Design::Dense(_))
+        match self {
+            Design::Dense(_) => false,
+            Design::Ridged { inner, .. } => inner.is_sparse(),
+            _ => true,
+        }
     }
 
     /// Whether the backing storage is out-of-core (streamed from a
     /// `.saifbin` file).
     pub fn is_ooc(&self) -> bool {
-        matches!(self, Design::OocCsc(_))
+        match self {
+            Design::OocCsc(_) => true,
+            Design::Ridged { inner, .. } => inner.is_ooc(),
+            _ => false,
+        }
     }
 
     /// Whether an implicit (rank-1) mean correction is attached.
     pub fn is_centered(&self) -> bool {
-        matches!(self, Design::CenteredSparse { .. })
+        match self {
+            Design::CenteredSparse { .. } => true,
+            Design::Ridged { inner, .. } => inner.is_centered(),
+            _ => false,
+        }
     }
 
-    /// Stored entries (dense: n·p, sparse/centered: nnz).
+    /// Stored entries (dense: n·p, sparse/centered: nnz, ridged:
+    /// inner + p implicit ridge entries).
     pub fn nnz(&self) -> usize {
         match self {
             Design::Dense(m) => m.n_rows() * m.n_cols(),
             Design::Sparse(m) => m.nnz(),
             Design::CenteredSparse { mat, .. } => mat.nnz(),
             Design::OocCsc(m) => m.nnz(),
+            Design::Ridged { inner, .. } => inner.nnz() + inner.n_cols(),
         }
     }
 
     /// Short storage tag for logs ("dense" / "csc" / "csc+center" /
-    /// "ooc-csc").
+    /// "ooc-csc" / "ridged").
     pub fn storage(&self) -> &'static str {
         match self {
             Design::Dense(_) => "dense",
             Design::Sparse(_) => "csc",
             Design::CenteredSparse { .. } => "csc+center",
             Design::OocCsc(_) => "ooc-csc",
+            Design::Ridged { .. } => "ridged",
         }
     }
 
@@ -261,6 +301,16 @@ impl Design {
             Design::Sparse(m) => m.get(i, j),
             Design::CenteredSparse { mat, means } => mat.get(i, j) - means[j],
             Design::OocCsc(m) => m.get(i, j),
+            Design::Ridged { inner, ridge } => {
+                let n = inner.n_rows();
+                if i < n {
+                    inner.get(i, j)
+                } else if i - n == j {
+                    *ridge
+                } else {
+                    0.0
+                }
+            }
         }
     }
 
@@ -274,6 +324,13 @@ impl Design {
             Design::Sparse(m) => m.col_dot(j, v),
             Design::CenteredSparse { mat, means } => mat.col_dot(j, v) - means[j] * sv,
             Design::OocCsc(m) => m.col_dot(j, v),
+            // delegates through the inner public col_dot (which
+            // computes its own Σv over the inner rows if centered),
+            // then adds the single augmented entry
+            Design::Ridged { inner, ridge } => {
+                let n = inner.n_rows();
+                inner.col_dot(j, &v[..n]) + ridge * v[n + j]
+            }
         }
     }
 
@@ -304,6 +361,11 @@ impl Design {
                     *o -= c;
                 }
             }
+            Design::Ridged { inner, ridge } => {
+                let n = inner.n_rows();
+                inner.col_axpy(alpha, j, &mut out[..n]);
+                out[n + j] += alpha * ridge;
+            }
         }
     }
 
@@ -325,6 +387,11 @@ impl Design {
                 let sv = vsum(v);
                 for (o, &j) in out.iter_mut().zip(cols) {
                     *o = self.col_dot_presum(j, v, sv);
+                }
+            }
+            Design::Ridged { .. } => {
+                for (o, &j) in out.iter_mut().zip(cols) {
+                    *o = self.col_dot_presum(j, v, 0.0);
                 }
             }
         }
@@ -356,7 +423,7 @@ impl Design {
             // the ordered-fold contract (strictly `updates` order,
             // bitwise equal to sequential col_axpy) must hold for the
             // sharded-epoch residual merge, so no fused correction
-            Design::CenteredSparse { .. } => {
+            Design::CenteredSparse { .. } | Design::Ridged { .. } => {
                 for &(j, alpha) in updates {
                     self.col_axpy(alpha, j, out);
                 }
@@ -384,6 +451,10 @@ impl Design {
                 }
             }
             Design::OocCsc(m) => ColIter::Ooc { col: m.col(j), k: 0 },
+            Design::Ridged { inner, ridge } => ColIter::Ridged {
+                extra: Some((inner.n_rows() + j, *ridge)),
+                inner: Box::new(inner.col_iter(j)),
+            },
         }
     }
 
@@ -400,6 +471,13 @@ impl Design {
                     *o -= c;
                 }
             }
+            Design::Ridged { inner, ridge } => {
+                let n = inner.n_rows();
+                inner.mul_vec(v, &mut out[..n]);
+                for (o, &x) in out[n..].iter_mut().zip(v) {
+                    *o = ridge * x;
+                }
+            }
         }
     }
 
@@ -409,10 +487,16 @@ impl Design {
             Design::Dense(m) => m.mul_t_vec(v, out),
             Design::Sparse(m) => m.mul_t_vec(v, out),
             Design::OocCsc(m) => m.mul_t_vec(v, out),
-            Design::CenteredSparse { .. } => {
+            // per-column, exactly the reduction the pooled scan's
+            // generic arm uses — so serial and pooled ridged scans are
+            // bitwise identical by construction
+            Design::CenteredSparse { .. } | Design::Ridged { .. } => {
                 assert_eq!(v.len(), self.n_rows());
                 assert_eq!(out.len(), self.n_cols());
-                let sv = vsum(v);
+                let sv = match self {
+                    Design::CenteredSparse { .. } => vsum(v),
+                    _ => 0.0,
+                };
                 for (j, o) in out.iter_mut().enumerate() {
                     *o = self.col_dot_presum(j, v, sv);
                 }
@@ -494,6 +578,10 @@ impl Design {
                     .map(|((&b, &s), &m)| b - 2.0 * m * s + n * m * m)
                     .collect()
             }
+            Design::Ridged { inner, ridge } => {
+                let r2 = ridge * ridge;
+                inner.col_norms_sq().into_iter().map(|b| b + r2).collect()
+            }
         }
     }
 
@@ -509,6 +597,19 @@ impl Design {
                 means: cols.iter().map(|&j| means[j]).collect(),
             },
             Design::OocCsc(m) => Design::Sparse(m.select_cols(cols)),
+            // the gathered block keeps ALL n+p rows (callers reuse the
+            // full augmented y), so the ridge entry of selected column
+            // cols[k] stays at row n+cols[k] — no longer expressible
+            // as Ridged; materialize the (small, active-block-sized)
+            // sub-matrix as CSC
+            Design::Ridged { .. } => {
+                let n_tot = self.n_rows();
+                let gathered: Vec<Vec<(usize, f64)>> = cols
+                    .iter()
+                    .map(|&j| self.col_iter(j).filter(|&(_, v)| v != 0.0).collect())
+                    .collect();
+                Design::Sparse(CscMat::from_cols(n_tot, gathered))
+            }
         }
     }
 
@@ -526,6 +627,31 @@ impl Design {
                 means: means.clone(),
             },
             Design::OocCsc(m) => Design::Sparse(m.select_rows(rows)),
+            // row selection breaks the [X; ridge·I] structure (a kept
+            // augmented row's ridge entry lands at an arbitrary new
+            // index); materialize. CV splits the BASE problem before
+            // any reduction, so this path is cold by construction.
+            Design::Ridged { .. } => {
+                let mut map: Vec<Vec<usize>> = vec![Vec::new(); self.n_rows()];
+                for (new, &old) in rows.iter().enumerate() {
+                    map[old].push(new);
+                }
+                let gathered: Vec<Vec<(usize, f64)>> = (0..self.n_cols())
+                    .map(|j| {
+                        let mut entries: Vec<(usize, f64)> = Vec::new();
+                        for (i, v) in self.col_iter(j) {
+                            if v != 0.0 {
+                                for &new in &map[i] {
+                                    entries.push((new, v));
+                                }
+                            }
+                        }
+                        entries.sort_by_key(|e| e.0);
+                        entries
+                    })
+                    .collect();
+                Design::Sparse(CscMat::from_cols(rows.len(), gathered))
+            }
         }
     }
 
@@ -559,17 +685,36 @@ impl Design {
                 }
                 m
             }
+            Design::Ridged { inner, ridge } => {
+                let base = inner.to_dense();
+                let n = base.n_rows();
+                Mat::from_fn(self.n_rows(), self.n_cols(), |i, j| {
+                    if i < n {
+                        base.get(i, j)
+                    } else if i - n == j {
+                        *ridge
+                    } else {
+                        0.0
+                    }
+                })
+            }
         }
     }
 
     /// Address of the backing storage — a cheap identity key for packed
-    /// buffer caches (see `runtime::pjrt`).
+    /// buffer caches (see `runtime::pjrt`). A ridged design mixes the
+    /// ridge weight's bits into the inner key: two augmentations of
+    /// the same storage with different ridges are different matrices
+    /// and must never share a packed buffer.
     pub fn data_ptr(&self) -> usize {
         match self {
             Design::Dense(m) => m.data().as_ptr() as usize,
             Design::Sparse(m) => m.values().as_ptr() as usize,
             Design::CenteredSparse { mat, .. } => mat.values().as_ptr() as usize,
             Design::OocCsc(m) => m.identity(),
+            Design::Ridged { inner, ridge } => inner
+                .data_ptr()
+                .wrapping_add((ridge.to_bits() as usize).wrapping_mul(0x9e37_79b9_7f4a_7c15)),
         }
     }
 }
@@ -869,6 +1014,156 @@ mod tests {
             ce.col_axpy(a, j, &mut manual);
         }
         assert_eq!(folded, manual);
+    }
+
+    /// A ridged design and its explicit [X; r·I] dense counterpart.
+    fn ridged_pair(rng: &mut Rng, n: usize, p: usize, ridge: f64) -> (Design, Design) {
+        let (sp, _) = random_pair(rng, n, p);
+        let explicit = Design::Dense(Mat::from_fn(n + p, p, |i, j| {
+            if i < n {
+                sp.get(i, j)
+            } else if i - n == j {
+                ridge
+            } else {
+                0.0
+            }
+        }));
+        (Design::ridged(sp, ridge), explicit)
+    }
+
+    #[test]
+    fn ridged_matches_explicit_augmentation() {
+        let mut rng = Rng::new(94);
+        for _ in 0..6 {
+            let n = 5 + rng.below(12);
+            let p = 3 + rng.below(10);
+            let ridge = 0.1 + rng.uniform();
+            let (rg, ex) = ridged_pair(&mut rng, n, p, ridge);
+            assert_eq!(rg.n_rows(), n + p);
+            assert_eq!(rg.n_cols(), p);
+            assert_eq!(rg.storage(), "ridged");
+            assert!(rg.is_sparse() && !rg.is_ooc() && !rg.is_centered());
+            let v: Vec<f64> = (0..n + p).map(|_| rng.normal()).collect();
+            let w: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            for j in 0..p {
+                assert!((rg.col_dot(j, &v) - ex.col_dot(j, &v)).abs() < 1e-12, "col_dot {j}");
+                for i in 0..n + p {
+                    assert_eq!(rg.get(i, j), ex.get(i, j));
+                }
+                let (mut a, mut b) = (vec![0.25; n + p], vec![0.25; n + p]);
+                rg.col_axpy(-0.8, j, &mut a);
+                ex.col_axpy(-0.8, j, &mut b);
+                for i in 0..n + p {
+                    assert!((a[i] - b[i]).abs() < 1e-12, "col_axpy {j}");
+                }
+                // col_iter reconstructs the augmented column in
+                // increasing row order
+                let mut last = None;
+                let mut col = vec![0.0; n + p];
+                for (i, val) in rg.col_iter(j) {
+                    if let Some(l) = last {
+                        assert!(i > l, "row order");
+                    }
+                    last = Some(i);
+                    col[i] = val;
+                }
+                for i in 0..n + p {
+                    assert!((col[i] - ex.get(i, j)).abs() < 1e-12);
+                }
+            }
+            let (mut a, mut b) = (vec![0.0; p], vec![0.0; p]);
+            rg.mul_t_vec(&v, &mut a);
+            ex.mul_t_vec(&v, &mut b);
+            for j in 0..p {
+                assert!((a[j] - b[j]).abs() < 1e-12, "mul_t_vec {j}");
+            }
+            let (mut ya, mut yb) = (vec![0.0; n + p], vec![0.0; n + p]);
+            rg.mul_vec(&w, &mut ya);
+            ex.mul_vec(&w, &mut yb);
+            for i in 0..n + p {
+                assert!((ya[i] - yb[i]).abs() < 1e-12, "mul_vec {i}");
+            }
+            let (na, nb) = (rg.col_norms_sq(), ex.col_norms_sq());
+            for j in 0..p {
+                assert!((na[j] - nb[j]).abs() < 1e-10, "col_norms_sq {j}");
+            }
+            // batched ops match per-column
+            let shard: Vec<usize> = vec![0, p - 1, 0];
+            let mut batched = vec![0.0; shard.len()];
+            rg.cols_dot(&shard, &v, &mut batched);
+            for (k, &j) in shard.iter().enumerate() {
+                assert_eq!(batched[k], rg.col_dot(j, &v));
+            }
+            let updates = [(0usize, 0.5), (p - 1, -1.25)];
+            let mut folded = v.clone();
+            rg.cols_axpy(&updates, &mut folded);
+            let mut manual = v.clone();
+            for &(j, al) in &updates {
+                rg.col_axpy(al, j, &mut manual);
+            }
+            assert_eq!(folded, manual);
+            // to_dense materializes the identity block
+            let td = rg.to_dense();
+            for j in 0..p {
+                for i in 0..n + p {
+                    assert_eq!(td.get(i, j), ex.get(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ridged_selects_keep_all_rows() {
+        let mut rng = Rng::new(95);
+        let (n, p) = (8, 6);
+        let (rg, ex) = ridged_pair(&mut rng, n, p, 0.7);
+        // column gather keeps all n+p rows, ridge entries at n+old_j
+        let cols = [4usize, 1];
+        let (rc, dc) = (rg.select_cols(&cols), ex.select_cols(&cols));
+        assert_eq!(rc.n_rows(), n + p);
+        for (new, _) in cols.iter().enumerate() {
+            for i in 0..n + p {
+                assert!((rc.get(i, new) - dc.get(i, new)).abs() < 1e-12);
+            }
+        }
+        // row gather (duplicates allowed, augmented rows included)
+        let rows = [n + 4, 2usize, 2, n - 1];
+        let (rr, dr) = (rg.select_rows(&rows), ex.select_rows(&rows));
+        assert_eq!(rr.n_rows(), rows.len());
+        for j in 0..p {
+            for (new, _) in rows.iter().enumerate() {
+                assert!((rr.get(new, j) - dr.get(new, j)).abs() < 1e-12, "row {new} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn ridged_pooled_scan_is_bitwise_serial() {
+        let mut rng = Rng::new(96);
+        let (n, p) = (20, 300);
+        let (rg, _) = ridged_pair(&mut rng, n, p, 1.3);
+        let v: Vec<f64> = (0..n + p).map(|_| rng.normal()).collect();
+        let mut serial = vec![0.0; p];
+        rg.mul_t_vec(&v, &mut serial);
+        for threads in [2, 3, 8] {
+            let par = Parallelism::Fixed(threads);
+            let mut pooled = vec![0.0; p];
+            rg.mul_t_vec_pool(&v, &mut pooled, par, PoolMode::Persistent);
+            assert_eq!(serial, pooled, "pooled threads={threads}");
+            let mut scoped = vec![0.0; p];
+            rg.mul_t_vec_pool(&v, &mut scoped, par, PoolMode::Scoped);
+            assert_eq!(serial, scoped, "scoped threads={threads}");
+        }
+    }
+
+    #[test]
+    fn ridged_data_ptr_separates_ridges() {
+        let mut rng = Rng::new(97);
+        let (sp, _) = random_pair(&mut rng, 6, 4);
+        let a = Design::ridged(sp.clone(), 0.5);
+        let b = Design::ridged(sp.clone(), 0.9);
+        assert_ne!(a.data_ptr(), b.data_ptr(), "different ridges must not share packed buffers");
+        assert_ne!(a.data_ptr(), sp.data_ptr());
     }
 
     #[test]

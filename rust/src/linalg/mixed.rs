@@ -165,6 +165,32 @@ impl MixedShadow {
                 });
                 Layout::Sparse { col_ptr, rows, vals, means: None }
             }
+            // the virtual [X; r·I] augmentation packs its EFFECTIVE
+            // entries (inner column + the single ridge entry) through
+            // col_iter, so the rounding-bound machinery sees exactly
+            // the stored values it sums — no extra correction term
+            Design::Ridged { .. } => {
+                let mut col_ptr = Vec::with_capacity(p + 1);
+                let mut rows = Vec::new();
+                let mut vals = Vec::new();
+                col_ptr.push(0);
+                for j in 0..p {
+                    let mut nrm2 = 0.0f64;
+                    let mut stored = 0usize;
+                    for (i, v) in x.col_iter(j) {
+                        if v != 0.0 {
+                            rows.push(i as u32);
+                            vals.push(v as f32);
+                            nrm2 += v * v;
+                            stored += 1;
+                        }
+                    }
+                    col_ptr.push(rows.len());
+                    nnz.push(stored);
+                    col_nrm.push(nrm2.sqrt());
+                }
+                Layout::Sparse { col_ptr, rows, vals, means: None }
+            }
         };
         MixedShadow {
             n_rows: n,

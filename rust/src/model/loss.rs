@@ -1,17 +1,35 @@
-//! Loss functions: squared (linear regression) and logistic.
+//! Loss functions: squared (linear regression), logistic, squared
+//! hinge, and Huber.
 //!
 //! The paper's general formulation (§1.1) assumes f is α-smooth and
 //! γ-convex; its conjugate f* is then (1/α)-strongly convex, which is
-//! what turns duality gaps into dual ball radii (eq. 6). We implement
-//! the two losses the paper evaluates.
+//! what turns duality gaps into dual ball radii (eq. 6). El Ghaoui et
+//! al.'s SAFE rules (PAPERS.md) develop safe elimination for exactly
+//! this class, so every α-smooth loss here plugs into the same gap-ball
+//! machinery: squared and logistic (the paper's two), plus squared
+//! hinge (classification) and Huber (robust regression), both α = 1.
+//!
+//! `LossKind` is the closed enum the rest of the crate carries around;
+//! every one of its methods routes through the single
+//! [`LossKind::with_loss`] dispatch point (no per-method match
+//! ladders). The `Loss` trait is the per-sample interface, including
+//! the convex conjugate (the dual objective is D(θ) = −Σ f*(−λθ_j,
+//! y_j)) and the per-loss dual-feasibility scaling.
+
+use crate::linalg::dot;
 
 /// Which loss a problem uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LossKind {
     /// f(u, y) = 1/2 (u - y)^2 — linear regression.
     Squared,
     /// f(u, y) = log(1 + exp(-y u)), y ∈ {-1, +1} — logistic regression.
     Logistic,
+    /// f(u, y) = 1/2 max(0, 1 - y u)^2, y ∈ {-1, +1} — L2-SVM.
+    SquaredHinge,
+    /// Huber loss: 1/2 (u-y)^2 for |u-y| ≤ δ, δ|u-y| - δ²/2 beyond —
+    /// robust regression.
+    Huber { delta: f64 },
 }
 
 /// Per-sample loss interface.
@@ -24,6 +42,24 @@ pub trait Loss {
     fn alpha(&self) -> f64;
     /// Coordinate curvature majorizer: H_ii ≤ curv() * ‖x_i‖².
     fn curv(&self) -> f64;
+    /// Convex conjugate f*(v, y) = sup_u {uv − f(u, y)}, evaluated at
+    /// the nearest point of its effective domain (the dual link and
+    /// [`Loss::dual_scale`] keep v inside the domain up to rounding;
+    /// the projection makes the certificate robust to that rounding).
+    fn conjugate(&self, v: f64, y: f64) -> f64;
+    /// Dual-feasibility scaling: a τ such that θ = τ·θ̂ satisfies both
+    /// the constraint max_i |x_iᵀθ| ≤ 1 (`mx` = max_i |x_iᵀθ̂|) and the
+    /// conjugate's domain. LS uses the clipped optimal scaling
+    /// τ* = yᵀθ̂ / (λ‖θ̂‖²) (Theorem 7 specialized to identity
+    /// transform); the other losses use τ = min(1, 1/mx), which keeps
+    /// λθ between 0 and λθ̂ and hence inside the conjugate domain.
+    fn dual_scale(&self, theta_hat: &[f64], y: &[f64], mx: f64, lam: f64) -> f64;
+}
+
+/// Shared `dual_scale` for every non-LS loss: pure feasibility rescale
+/// toward 0, which every conjugate domain here contains.
+fn feasibility_scale(mx: f64) -> f64 {
+    (1.0 / mx).min(1.0)
 }
 
 /// Squared loss.
@@ -48,6 +84,24 @@ impl Loss for Squared {
 
     fn curv(&self) -> f64 {
         1.0
+    }
+
+    #[inline]
+    fn conjugate(&self, v: f64, y: f64) -> f64 {
+        // f*(v) = vy + v²/2, written so the dual −f*(−λθ, y) reproduces
+        // the closed form ½(y² − λ²(θ − y/λ)²) term-by-term
+        let s = v + y;
+        0.5 * (s * s - y * y)
+    }
+
+    fn dual_scale(&self, theta_hat: &[f64], y: &[f64], mx: f64, lam: f64) -> f64 {
+        let denom = lam * dot(theta_hat, theta_hat);
+        let t = if denom.abs() < 1e-300 {
+            0.0
+        } else {
+            dot(y, theta_hat) / denom
+        };
+        t.clamp(-1.0 / mx, 1.0 / mx)
     }
 }
 
@@ -80,42 +134,213 @@ impl Loss for Logistic {
     fn curv(&self) -> f64 {
         0.25
     }
+
+    #[inline]
+    fn conjugate(&self, v: f64, y: f64) -> f64 {
+        // f*(v, y) = s ln s + (1−s) ln(1−s) with s = −vy, domain
+        // s ∈ [0, 1] (the clamp is the domain projection)
+        let s = (-v * y).clamp(0.0, 1.0);
+        xlogx(s) + xlogx(1.0 - s)
+    }
+
+    fn dual_scale(&self, _theta_hat: &[f64], _y: &[f64], mx: f64, _lam: f64) -> f64 {
+        feasibility_scale(mx)
+    }
+}
+
+/// Squared hinge loss with ±1 labels (L2-SVM).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SquaredHinge;
+
+impl Loss for SquaredHinge {
+    #[inline]
+    fn value(&self, u: f64, y: f64) -> f64 {
+        let m = (1.0 - y * u).max(0.0);
+        0.5 * m * m
+    }
+
+    #[inline]
+    fn deriv(&self, u: f64, y: f64) -> f64 {
+        -y * (1.0 - y * u).max(0.0)
+    }
+
+    fn alpha(&self) -> f64 {
+        1.0
+    }
+
+    fn curv(&self) -> f64 {
+        1.0
+    }
+
+    #[inline]
+    fn conjugate(&self, v: f64, y: f64) -> f64 {
+        // f*(v, y) = w + w²/2 with w = vy, domain w ≤ 0 (the link
+        // θ̂ = y(1−yu)₊/λ always lands inside; min projects rounding)
+        let w = (v * y).min(0.0);
+        w + 0.5 * w * w
+    }
+
+    fn dual_scale(&self, _theta_hat: &[f64], _y: &[f64], mx: f64, _lam: f64) -> f64 {
+        feasibility_scale(mx)
+    }
+}
+
+/// Huber loss: quadratic within ±δ of the target, linear beyond.
+#[derive(Debug, Clone, Copy)]
+pub struct Huber {
+    pub delta: f64,
+}
+
+impl Loss for Huber {
+    #[inline]
+    fn value(&self, u: f64, y: f64) -> f64 {
+        let r = u - y;
+        if r.abs() <= self.delta {
+            0.5 * r * r
+        } else {
+            self.delta * r.abs() - 0.5 * self.delta * self.delta
+        }
+    }
+
+    #[inline]
+    fn deriv(&self, u: f64, y: f64) -> f64 {
+        (u - y).clamp(-self.delta, self.delta)
+    }
+
+    fn alpha(&self) -> f64 {
+        1.0
+    }
+
+    fn curv(&self) -> f64 {
+        1.0
+    }
+
+    #[inline]
+    fn conjugate(&self, v: f64, y: f64) -> f64 {
+        // f*(v, y) = vy + v²/2, domain |v| ≤ δ (the link |f'| ≤ δ
+        // always lands inside; the clamp projects rounding)
+        let v = v.clamp(-self.delta, self.delta);
+        v * y + 0.5 * v * v
+    }
+
+    fn dual_scale(&self, _theta_hat: &[f64], _y: &[f64], mx: f64, _lam: f64) -> f64 {
+        feasibility_scale(mx)
+    }
 }
 
 impl LossKind {
-    /// Dispatch to the per-sample implementation.
-    pub fn value(&self, u: f64, y: f64) -> f64 {
+    /// THE dispatch point: the one place the enum meets the trait.
+    /// Every `LossKind` method below (and every per-sample call in the
+    /// solver stack) routes through this single match.
+    #[inline]
+    pub fn with_loss<R>(self, f: impl FnOnce(&dyn Loss) -> R) -> R {
         match self {
-            LossKind::Squared => Squared.value(u, y),
-            LossKind::Logistic => Logistic.value(u, y),
+            LossKind::Squared => f(&Squared),
+            LossKind::Logistic => f(&Logistic),
+            LossKind::SquaredHinge => f(&SquaredHinge),
+            LossKind::Huber { delta } => f(&Huber { delta }),
         }
+    }
+
+    pub fn value(&self, u: f64, y: f64) -> f64 {
+        self.with_loss(|l| l.value(u, y))
     }
 
     pub fn deriv(&self, u: f64, y: f64) -> f64 {
-        match self {
-            LossKind::Squared => Squared.deriv(u, y),
-            LossKind::Logistic => Logistic.deriv(u, y),
-        }
+        self.with_loss(|l| l.deriv(u, y))
     }
 
     pub fn alpha(&self) -> f64 {
-        match self {
-            LossKind::Squared => Squared.alpha(),
-            LossKind::Logistic => Logistic.alpha(),
-        }
+        self.with_loss(|l| l.alpha())
     }
 
     pub fn curv(&self) -> f64 {
-        match self {
-            LossKind::Squared => Squared.curv(),
-            LossKind::Logistic => Logistic.curv(),
+        self.with_loss(|l| l.curv())
+    }
+
+    /// Convex conjugate f*(v, y) (see [`Loss::conjugate`]).
+    pub fn conjugate(&self, v: f64, y: f64) -> f64 {
+        self.with_loss(|l| l.conjugate(v, y))
+    }
+
+    /// Dual-feasibility scaling τ (see [`Loss::dual_scale`]).
+    pub fn dual_scale(&self, theta_hat: &[f64], y: &[f64], mx: f64, lam: f64) -> f64 {
+        self.with_loss(|l| l.dual_scale(theta_hat, y, mx, lam))
+    }
+
+    /// True for the classification losses that require ±1 labels.
+    pub fn needs_pm1_labels(&self) -> bool {
+        matches!(self, LossKind::Logistic | LossKind::SquaredHinge)
+    }
+
+    /// Parse a CLI/protocol loss spec: `ls`, `logistic`, `sqhinge`, or
+    /// `huber[:delta]` (default δ = 1). Returns `None` on anything
+    /// else, including a non-finite or non-positive δ.
+    pub fn parse(s: &str) -> Option<LossKind> {
+        match s {
+            "ls" | "squared" => Some(LossKind::Squared),
+            "logistic" | "logit" => Some(LossKind::Logistic),
+            "sqhinge" => Some(LossKind::SquaredHinge),
+            "huber" => Some(LossKind::Huber { delta: 1.0 }),
+            _ => {
+                let delta: f64 = s.strip_prefix("huber:")?.parse().ok()?;
+                if delta.is_finite() && delta > 0.0 {
+                    Some(LossKind::Huber { delta })
+                } else {
+                    None
+                }
+            }
         }
+    }
+
+    /// Canonical name, parseable back by [`LossKind::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            LossKind::Squared => "ls".into(),
+            LossKind::Logistic => "logistic".into(),
+            LossKind::SquaredHinge => "sqhinge".into(),
+            LossKind::Huber { delta } => format!("huber:{delta}"),
+        }
+    }
+
+    /// Stable 64-bit fingerprint (FNV-1a over the wire tag and the δ
+    /// bits) — folded into serving cache keys and the coordinator's
+    /// warm-seed key so entries can never cross losses.
+    pub fn fingerprint(&self) -> u64 {
+        let (tag, bits) = match self {
+            LossKind::Squared => (0u8, 0u64),
+            LossKind::Logistic => (1, 0),
+            LossKind::SquaredHinge => (2, 0),
+            LossKind::Huber { delta } => (3, delta.to_bits()),
+        };
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in std::iter::once(tag).chain(bits.to_le_bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+}
+
+#[inline]
+pub(crate) fn xlogx(s: f64) -> f64 {
+    if s > 0.0 {
+        s * s.ln()
+    } else {
+        0.0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const ALL: [LossKind; 4] = [
+        LossKind::Squared,
+        LossKind::Logistic,
+        LossKind::SquaredHinge,
+        LossKind::Huber { delta: 0.8 },
+    ];
 
     #[test]
     fn squared_basics() {
@@ -140,9 +365,26 @@ mod tests {
     }
 
     #[test]
+    fn sqhinge_flat_past_the_margin() {
+        assert_eq!(SquaredHinge.value(1.5, 1.0), 0.0);
+        assert_eq!(SquaredHinge.deriv(1.5, 1.0), 0.0);
+        assert!((SquaredHinge.value(0.0, 1.0) - 0.5).abs() < 1e-15);
+        assert_eq!(SquaredHinge.deriv(0.0, 1.0), -1.0);
+    }
+
+    #[test]
+    fn huber_quadratic_then_linear() {
+        let h = Huber { delta: 1.0 };
+        assert!((h.value(1.5, 1.0) - 0.125).abs() < 1e-15);
+        assert!((h.value(4.0, 1.0) - 2.5).abs() < 1e-15);
+        assert_eq!(h.deriv(4.0, 1.0), 1.0);
+        assert_eq!(h.deriv(-4.0, 1.0), -1.0);
+    }
+
+    #[test]
     fn deriv_is_gradient_of_value() {
-        // finite-difference check on both losses
-        for kind in [LossKind::Squared, LossKind::Logistic] {
+        // finite-difference check on every loss
+        for kind in ALL {
             for &(u, y) in &[(0.3, 1.0), (-1.2, -1.0), (2.0, 1.0)] {
                 let h = 1e-6;
                 let fd = (kind.value(u + h, y) - kind.value(u - h, y)) / (2.0 * h);
@@ -157,12 +399,60 @@ mod tests {
     #[test]
     fn curvature_bounds_hold() {
         // f'' <= alpha numerically
-        for kind in [LossKind::Squared, LossKind::Logistic] {
+        for kind in ALL {
             for &u in &[-2.0, 0.0, 0.7, 3.0] {
                 let h = 1e-5;
                 let f2 = (kind.deriv(u + h, 1.0) - kind.deriv(u - h, 1.0)) / (2.0 * h);
                 assert!(f2 <= kind.alpha() + 1e-6, "{kind:?} u={u} f''={f2}");
             }
         }
+    }
+
+    #[test]
+    fn conjugate_satisfies_fenchel_young() {
+        // f(u) + f*(v) ≥ uv for every u, with equality at v = f'(u)
+        for kind in ALL {
+            for &y in &[1.0, -1.0] {
+                for &u in &[-2.0, -0.4, 0.0, 0.9, 2.5] {
+                    let v = kind.deriv(u, y);
+                    let gap = kind.value(u, y) + kind.conjugate(v, y) - u * v;
+                    assert!(
+                        gap.abs() < 1e-10,
+                        "{kind:?} equality at v=f'(u): u={u} y={y} gap={gap}"
+                    );
+                    for &v in &[kind.deriv(-1.3, y), kind.deriv(0.6, y)] {
+                        let slack = kind.value(u, y) + kind.conjugate(v, y) - u * v;
+                        assert!(
+                            slack >= -1e-10,
+                            "{kind:?} Fenchel–Young: u={u} v={v} y={y} slack={slack}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        for kind in ALL {
+            assert_eq!(LossKind::parse(&kind.name()), Some(kind), "{kind:?}");
+        }
+        assert_eq!(LossKind::parse("huber"), Some(LossKind::Huber { delta: 1.0 }));
+        assert_eq!(
+            LossKind::parse("huber:2.5"),
+            Some(LossKind::Huber { delta: 2.5 })
+        );
+        for bad in ["", "hinge", "huber:", "huber:0", "huber:-1", "huber:nan", "l2"] {
+            assert_eq!(LossKind::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn fingerprints_are_distinct() {
+        let mut fps: Vec<u64> = ALL.iter().map(|k| k.fingerprint()).collect();
+        fps.push(LossKind::Huber { delta: 1.0 }.fingerprint());
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), 5, "loss fingerprints must be distinct");
     }
 }

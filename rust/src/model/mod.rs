@@ -12,7 +12,9 @@
 //!   smoothness constant of f (LS: 1, logistic: 1/4).
 
 pub mod loss;
+pub mod penalty;
 pub mod problem;
 
 pub use loss::{Loss, LossKind};
+pub use penalty::Penalty;
 pub use problem::{DualPoint, Problem};

@@ -1,0 +1,136 @@
+//! The penalty surface: elastic net = λ·l1·‖β‖₁ + (l2/2)·‖β‖₂².
+//!
+//! `l1` is a multiplier on the solve's λ (default 1 — today's LASSO);
+//! `l2` is an ABSOLUTE ridge weight, deliberately λ-independent so a
+//! single augmented problem serves a whole λ-path (warm-started
+//! sessions, the serving cache, and coalescing all key on the penalty
+//! once, not per λ).
+//!
+//! The solver stack never implements elastic net directly: for squared
+//! loss, the augmented pure-ℓ1 problem with design [X; √l2·I] and
+//! targets [y; 0] has *pointwise identical* objective
+//!
+//!   ½‖y − Xβ‖² + ½·l2·‖β‖² + λ·l1·‖β‖₁
+//!
+//! so the SAIF ball test, CM epochs, GAP-safe rules, warm-started
+//! λ-path sessions, and the full-problem gap certificate all carry
+//! over verbatim on the augmented problem — its KKT system IS the
+//! elastic-net KKT system, feature indices map 1:1, and its honest
+//! duality gap IS the elastic-net gap. `solver::make` wraps every
+//! method in the reduction adapter; see `linalg::Design::Ridged` for
+//! the O(1)-memory virtual augmentation.
+
+/// Elastic-net penalty: λ·l1·‖β‖₁ + (l2/2)·‖β‖₂².
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Penalty {
+    /// Multiplier on the solve's λ for the ℓ1 term (default 1.0).
+    pub l1: f64,
+    /// Absolute ridge weight (default 0.0 ⇒ pure LASSO).
+    pub l2: f64,
+}
+
+impl Default for Penalty {
+    fn default() -> Penalty {
+        Penalty { l1: 1.0, l2: 0.0 }
+    }
+}
+
+impl Penalty {
+    /// Pure-ℓ1 ridge-free elastic net with the given ridge weight.
+    pub fn ridge(l2: f64) -> Penalty {
+        Penalty { l1: 1.0, l2 }
+    }
+
+    /// Today's LASSO: l1 multiplier 1, no ridge. Everything downstream
+    /// treats this case as a bitwise pass-through (no reduction, no
+    /// rescaled λ).
+    pub fn is_plain(&self) -> bool {
+        self.l1 == 1.0 && self.l2 == 0.0
+    }
+
+    /// Reject non-finite or degenerate weights with a typed message
+    /// (the CLI, the serve decoder, and `Problem::with_penalty` all
+    /// call this before the penalty reaches the solver stack).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.l1.is_finite() && self.l1 > 0.0) {
+            return Err(format!("penalty l1 multiplier must be finite and > 0, got {}", self.l1));
+        }
+        if !(self.l2.is_finite() && self.l2 >= 0.0) {
+            return Err(format!("penalty l2 weight must be finite and ≥ 0, got {}", self.l2));
+        }
+        Ok(())
+    }
+
+    /// Stable 64-bit fingerprint (FNV-1a over both weights' bits) —
+    /// folded into `SolveSpec::fingerprint`, serving cache keys, and
+    /// the coordinator's warm-seed key.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in self.l1.to_bits().to_le_bytes().into_iter().chain(self.l2.to_bits().to_le_bytes())
+        {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// Human-facing label, e.g. `l1` or `l1+0.5·l2`.
+    pub fn label(&self) -> String {
+        if self.l2 == 0.0 {
+            if self.l1 == 1.0 {
+                "l1".into()
+            } else {
+                format!("{}·l1", self.l1)
+            }
+        } else if self.l1 == 1.0 {
+            format!("l1+{}·l2", self.l2)
+        } else {
+            format!("{}·l1+{}·l2", self.l1, self.l2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_plain() {
+        assert!(Penalty::default().is_plain());
+        assert!(!Penalty::ridge(0.1).is_plain());
+        assert!(!Penalty { l1: 0.5, l2: 0.0 }.is_plain());
+        assert!(Penalty::ridge(0.0).is_plain());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_weights() {
+        assert!(Penalty::default().validate().is_ok());
+        assert!(Penalty::ridge(2.0).validate().is_ok());
+        assert!(Penalty { l1: 0.0, l2: 0.0 }.validate().is_err());
+        assert!(Penalty { l1: -1.0, l2: 0.0 }.validate().is_err());
+        assert!(Penalty::ridge(-0.1).validate().is_err());
+        assert!(Penalty::ridge(f64::NAN).validate().is_err());
+        assert!(Penalty { l1: f64::INFINITY, l2: 0.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprints_separate_weights() {
+        let a = Penalty::default().fingerprint();
+        let b = Penalty::ridge(0.1).fingerprint();
+        let c = Penalty::ridge(0.2).fingerprint();
+        let d = Penalty { l1: 0.5, l2: 0.1 }.fingerprint();
+        let mut all = vec![a, b, c, d];
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 4);
+        assert_eq!(a, Penalty::default().fingerprint(), "deterministic");
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Penalty::default().label(), "l1");
+        assert_eq!(Penalty::ridge(0.5).label(), "l1+0.5·l2");
+        assert_eq!(Penalty { l1: 2.0, l2: 0.0 }.label(), "2·l1");
+        assert_eq!(Penalty { l1: 2.0, l2: 0.5 }.label(), "2·l1+0.5·l2");
+    }
+}

@@ -1,10 +1,11 @@
 //! The LASSO problem container and its primal/dual machinery.
 
-use crate::linalg::{dot, Design, Parallelism};
+use crate::linalg::{Design, Parallelism};
 use crate::runtime::pool::PoolMode;
 use crate::util::tmax;
 
 use super::loss::LossKind;
+use super::penalty::Penalty;
 
 /// A feasible dual point together with the data needed by screening.
 #[derive(Debug, Clone)]
@@ -18,14 +19,23 @@ pub struct DualPoint {
 }
 
 /// A (sub-)problem instance: design matrix (dense or sparse
-/// [`Design`]), labels, loss, plus cached column norms. The full
-/// problem owns the full X; SAIF's sub-problems are expressed as index
-/// sets *into* this problem (no column copies on the native path).
+/// [`Design`]), labels, loss, penalty, plus cached column norms. The
+/// full problem owns the full X; SAIF's sub-problems are expressed as
+/// index sets *into* this problem (no column copies on the native
+/// path).
 #[derive(Debug, Clone)]
 pub struct Problem {
     pub x: Design,
     pub y: Vec<f64>,
     pub loss: LossKind,
+    /// Elastic-net penalty (default pure ℓ1). The inner solvers only
+    /// ever see plain-penalty problems — `solver::make`'s reduction
+    /// adapter rewrites a ridged problem into the augmented pure-ℓ1
+    /// LASSO before any method runs (see `model::penalty`); the
+    /// penalty-aware members here ([`Problem::kkt_violation`] and the
+    /// λ_max/λ-grid helpers) are the independent certification
+    /// surface.
+    pub penalty: Penalty,
     /// ‖x_i‖₂² for every column (cached at construction).
     pub col_nrm2: Vec<f64>,
     /// Optional fixed margin offset: u = offset + Xβ. Used by the
@@ -40,12 +50,31 @@ impl Problem {
         let x = x.into();
         assert_eq!(x.n_rows(), y.len());
         let col_nrm2 = x.col_norms_sq();
-        Problem { x, y, loss, col_nrm2, offset: None }
+        Problem { x, y, loss, penalty: Penalty::default(), col_nrm2, offset: None }
+    }
+
+    /// Attach an elastic-net penalty. The ridge reduction is exact for
+    /// squared loss only (the augmented rows enter the loss as ½(√l2
+    /// β_j)² — any other f would distort them), and the fused offset
+    /// block has no augmented-row counterpart.
+    pub fn with_penalty(mut self, penalty: Penalty) -> Problem {
+        assert!(penalty.validate().is_ok(), "invalid penalty {penalty:?}");
+        assert!(
+            penalty.l2 == 0.0 || self.loss == LossKind::Squared,
+            "l2 > 0 requires squared loss (the ridge reduction is LS-exact)"
+        );
+        assert!(
+            penalty.l2 == 0.0 || self.offset.is_none(),
+            "l2 > 0 is incompatible with a margin offset"
+        );
+        self.penalty = penalty;
+        self
     }
 
     /// Attach a fixed margin offset (fused-LASSO unpenalized block).
     pub fn with_offset(mut self, offset: Vec<f64>) -> Problem {
         assert_eq!(offset.len(), self.y.len());
+        assert!(self.penalty.l2 == 0.0, "l2 > 0 is incompatible with a margin offset");
         self.offset = Some(offset);
         self
     }
@@ -71,7 +100,9 @@ impl Problem {
             .collect()
     }
 
-    /// λ_max = max_i |x_iᵀ f'(0)|: the smallest λ with β* = 0.
+    /// λ_max = max_i |x_iᵀ f'(0)| / l1: the smallest λ with β* = 0
+    /// (the ridge term vanishes at β = 0, so l2 does not move λ_max —
+    /// one λ grid serves a whole l2 sweep).
     pub fn lambda_max(&self) -> f64 {
         self.lambda_max_par(Parallelism::Serial)
     }
@@ -81,6 +112,7 @@ impl Problem {
         self.init_corrs_par(par)
             .into_iter()
             .fold(0.0, tmax)
+            / self.penalty.l1
     }
 
     /// Initial screening correlations |x_iᵀ f'(0)| for all columns.
@@ -123,7 +155,10 @@ impl Problem {
         u
     }
 
-    /// Primal objective from margins and the β L1 norm.
+    /// Primal objective from margins and the β L1 norm: Σf + λ‖β‖₁.
+    /// Covers the loss + ℓ1 part only — penalty-aware callers
+    /// (`solver::global_gap_dual`) add the (l2/2)‖β‖₂² term, which
+    /// needs β itself.
     pub fn primal_from_margins(&self, u: &[f64], beta_l1: f64, lam: f64) -> f64 {
         let mut s = 0.0;
         for j in 0..self.n() {
@@ -141,59 +176,43 @@ impl Problem {
 
     /// Project θ̂ into the dual feasible region of the sub-problem whose
     /// max correlation is `mx = max_{i∈A} |x_iᵀθ̂|`, and evaluate D(θ).
-    ///
-    /// LS uses the clipped optimal scaling τ* = yᵀθ̂ / (λ‖θ̂‖²)
-    /// (Theorem 7 specialized to identity transform); logistic uses the
-    /// feasibility rescale τ = min(1, 1/mx) which also preserves
-    /// s = λθy ∈ [0,1].
+    /// The scaling is per-loss ([`super::loss::Loss::dual_scale`]).
     pub fn project_dual(&self, theta_hat: &[f64], mx: f64, lam: f64) -> DualPoint {
         let mx = mx.max(1e-12);
-        let tau = match self.loss {
-            LossKind::Squared => {
-                let denom = lam * dot(theta_hat, theta_hat);
-                let t = if denom.abs() < 1e-300 {
-                    0.0
-                } else {
-                    dot(&self.y, theta_hat) / denom
-                };
-                t.clamp(-1.0 / mx, 1.0 / mx)
-            }
-            LossKind::Logistic => (1.0 / mx).min(1.0),
-        };
+        let tau = self.loss.dual_scale(theta_hat, &self.y, mx, lam);
         let theta: Vec<f64> = theta_hat.iter().map(|t| tau * t).collect();
         let dual = self.dual_value(&theta, lam);
         DualPoint { theta, tau, dual }
     }
 
-    /// Dual objective D(θ) = −Σ f*(−λθ_j, y_j).
+    /// Dual objective D(θ) = −Σ f*(−λθ_j, y_j), via the per-loss
+    /// conjugate ([`super::loss::Loss::conjugate`]).
     pub fn dual_value(&self, theta: &[f64], lam: f64) -> f64 {
-        match self.loss {
-            LossKind::Squared => {
-                // D = 1/2‖y‖² − λ²/2 ‖θ − y/λ‖²
-                let mut s = 0.0;
-                for j in 0..self.n() {
-                    let d = theta[j] - self.y[j] / lam;
-                    s += self.y[j] * self.y[j] - lam * lam * d * d;
-                }
-                0.5 * s
-            }
-            LossKind::Logistic => {
-                // D = −Σ s log s + (1−s) log(1−s), s = λθy ∈ [0,1]
-                let mut s = 0.0;
-                for j in 0..self.n() {
-                    let sj = (lam * theta[j] * self.y[j]).clamp(0.0, 1.0);
-                    s -= xlogx(sj) + xlogx(1.0 - sj);
-                }
-                s
-            }
+        let mut s = 0.0;
+        for j in 0..self.n() {
+            s -= self.loss.conjugate(-lam * theta[j], self.y[j]);
         }
+        s
     }
 
     /// Verify the KKT conditions of the *full* problem for a sparse β.
     /// Returns the worst violation (0 = certified optimal up to tol).
     /// This is the safety certificate used by the tests and the
-    /// coordinator's per-request verification.
+    /// coordinator's per-request verification. Penalty-aware: the
+    /// stationarity residual is x_iᵀf'(u) + l2·β_i + λ·l1·sign(β_i) on
+    /// the active set and (|x_iᵀf'(u)| − λ·l1)₊ off it — the
+    /// elastic-net KKT system, independent of the reduction.
     pub fn kkt_violation(&self, beta: &[(usize, f64)], lam: f64) -> f64 {
+        self.kkt_violation_with(beta, lam, self.penalty)
+    }
+
+    /// [`Problem::kkt_violation`] under an explicit penalty — the
+    /// certification entry point for request-level penalties
+    /// (`SolveSpec::penalty`), where the problem itself stays plain and
+    /// the solver adapter carries the elastic-net weights.
+    pub fn kkt_violation_with(&self, beta: &[(usize, f64)], lam: f64, penalty: Penalty) -> f64 {
+        let lam = lam * penalty.l1;
+        let l2 = penalty.l2;
         let u = self.margins_sparse(beta);
         let fprime: Vec<f64> = (0..self.n())
             .map(|j| self.loss.deriv(u[j], self.y[j]))
@@ -210,8 +229,8 @@ impl Problem {
             let g = self.x.col_dot(i, &fprime);
             match active.get(&i) {
                 Some(&b) => {
-                    // x_iᵀ f'(u) + λ sign(β_i) = 0
-                    worst = worst.max((g + lam * b.signum()).abs());
+                    // x_iᵀ f'(u) + l2 β_i + λ sign(β_i) = 0
+                    worst = worst.max((g + l2 * b + lam * b.signum()).abs());
                 }
                 None => {
                     worst = worst.max((g.abs() - lam).max(0.0));
@@ -219,15 +238,6 @@ impl Problem {
             }
         }
         worst
-    }
-}
-
-#[inline]
-fn xlogx(s: f64) -> f64 {
-    if s > 0.0 {
-        s * s.ln()
-    } else {
-        0.0
     }
 }
 
@@ -241,30 +251,50 @@ mod tests {
     fn random_problem(seed: u64, n: usize, p: usize, loss: LossKind) -> Problem {
         let mut rng = Rng::new(seed);
         let x = Mat::from_fn(n, p, |_, _| rng.normal());
-        let y: Vec<f64> = match loss {
-            LossKind::Squared => (0..n).map(|_| rng.normal()).collect(),
-            LossKind::Logistic => (0..n)
+        let y: Vec<f64> = if loss.needs_pm1_labels() {
+            (0..n)
                 .map(|_| if rng.uniform() > 0.5 { 1.0 } else { -1.0 })
-                .collect(),
+                .collect()
+        } else {
+            (0..n).map(|_| rng.normal()).collect()
         };
         Problem::new(x, y, loss)
     }
 
+    const ALL: [LossKind; 4] = [
+        LossKind::Squared,
+        LossKind::Logistic,
+        LossKind::SquaredHinge,
+        LossKind::Huber { delta: 0.7 },
+    ];
+
     #[test]
     fn lambda_max_kills_all_coefficients() {
         // with λ = λ_max the zero vector satisfies KKT
-        for loss in [LossKind::Squared, LossKind::Logistic] {
+        for loss in ALL {
             let prob = random_problem(5, 30, 12, loss);
             let lam = prob.lambda_max();
-            assert!(prob.kkt_violation(&[], lam) < 1e-9);
+            assert!(prob.kkt_violation(&[], lam) < 1e-9, "{loss:?}");
             // and with λ slightly smaller it does not
-            assert!(prob.kkt_violation(&[], lam * 0.9) > 0.0);
+            assert!(prob.kkt_violation(&[], lam * 0.9) > 0.0, "{loss:?}");
         }
     }
 
     #[test]
+    fn lambda_max_scales_with_l1_multiplier_not_l2() {
+        let base = random_problem(15, 25, 10, LossKind::Squared);
+        let lam0 = base.lambda_max();
+        let ridged = base.clone().with_penalty(Penalty::ridge(3.0));
+        assert_eq!(ridged.lambda_max(), lam0, "l2 must not move λ_max");
+        let halved = base.clone().with_penalty(Penalty { l1: 2.0, l2: 0.0 });
+        assert!((halved.lambda_max() - lam0 / 2.0).abs() < 1e-12 * lam0);
+        // and the zero vector is KKT-certified exactly at the scaled λ_max
+        assert!(halved.kkt_violation(&[], halved.lambda_max()) < 1e-9);
+    }
+
+    #[test]
     fn gap_nonnegative_at_feasible_dual() {
-        for loss in [LossKind::Squared, LossKind::Logistic] {
+        for loss in ALL {
             let prob = random_problem(6, 25, 10, loss);
             let lam = prob.lambda_max() * 0.3;
             // beta = 0
@@ -313,6 +343,29 @@ mod tests {
     }
 
     #[test]
+    fn weak_duality_holds_for_every_loss_at_a_nonzero_beta() {
+        // P(β) ≥ D(θ) at the projected dual of an arbitrary sparse β —
+        // the inequality every gap certificate in the repo rests on
+        for loss in ALL {
+            let prob = random_problem(21, 30, 8, loss);
+            let lam = prob.lambda_max() * 0.4;
+            let beta = vec![(1usize, 0.3), (5usize, -0.2)];
+            let u = prob.margins_sparse(&beta);
+            let th = prob.theta_hat(&u, lam);
+            let mx = (0..prob.p())
+                .map(|i| prob.x.col_dot(i, &th).abs())
+                .fold(0.0, tmax);
+            let dp = prob.project_dual(&th, mx, lam);
+            let primal = prob.primal_from_margins(&u, 0.5, lam);
+            assert!(
+                primal - dp.dual >= -1e-8,
+                "{loss:?}: P={primal} < D={}",
+                dp.dual
+            );
+        }
+    }
+
+    #[test]
     fn margins_sparse_matches_dense() {
         let prob = random_problem(10, 12, 6, LossKind::Squared);
         let beta = vec![(1usize, 0.5), (4usize, -1.2)];
@@ -321,5 +374,21 @@ mod tests {
             let manual = 0.5 * prob.x.get(j, 1) - 1.2 * prob.x.get(j, 4);
             assert!((u[j] - manual).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn kkt_violation_sees_the_ridge_term() {
+        // for an active coordinate, the residual must include l2·β_i:
+        // pick β so the pure-ℓ1 residual is zero, then adding ridge
+        // must produce exactly |l2·β_i|
+        let x = Mat::from_fn(4, 1, |i, _| if i == 0 { 1.0 } else { 0.0 });
+        let y = vec![2.0, 0.0, 0.0, 0.0];
+        let prob = Problem::new(x, y, LossKind::Squared);
+        // g = x₀ᵀ(u − y) = β − 2; β = 1.5, λ = 0.5 ⇒ g + λ = 0 exactly
+        let beta = [(0usize, 1.5)];
+        assert!(prob.kkt_violation(&beta, 0.5) < 1e-12);
+        let ridged = prob.with_penalty(Penalty::ridge(0.2));
+        let v = ridged.kkt_violation(&beta, 0.5);
+        assert!((v - 0.2 * 1.5).abs() < 1e-12, "ridge residual {v}");
     }
 }

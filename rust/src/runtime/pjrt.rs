@@ -59,6 +59,9 @@ impl PjrtEngine {
         let kind = match prob.loss {
             LossKind::Squared => ArtifactKind::CmLs,
             LossKind::Logistic => ArtifactKind::CmLog,
+            // no AOT kernels for the newer losses — callers fall back
+            // to the native engine
+            _ => return false,
         };
         self.manifest.pick(kind, prob.n(), active_len.max(1)).is_some()
             && self
@@ -141,6 +144,11 @@ impl Engine for PjrtEngine {
         let kind = match prob.loss {
             LossKind::Squared => ArtifactKind::CmLs,
             LossKind::Logistic => ArtifactKind::CmLog,
+            _ => panic!(
+                "PJRT engine has no compiled kernels for {} (gate on `supports`, \
+                 or use the native engine)",
+                prob.loss.name()
+            ),
         };
         let n = prob.n();
         let art = self

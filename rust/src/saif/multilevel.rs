@@ -61,7 +61,11 @@ impl<'a> MultiLevelSaif<'a> {
         // Level 1: SAIF restricted to the hot tier (a sub-problem —
         // its solution is a warm start + certificate candidate)
         let hot_x = prob.x.select_cols(&hot);
-        let hot_prob = Problem { offset: prob.offset.clone(), ..Problem::new(hot_x, prob.y.clone(), prob.loss) };
+        let hot_prob = Problem {
+            offset: prob.offset.clone(),
+            penalty: prob.penalty,
+            ..Problem::new(hot_x, prob.y.clone(), prob.loss)
+        };
         let mut inner = Saif::new(self.engine, self.cfg.saif.clone());
         let hot_res = inner.solve(&hot_prob, lam);
         // map hot-tier solution back to full index space

@@ -1,9 +1,12 @@
 //! Per-dataset λ-grid result cache with gap certificates.
 //!
-//! Entries are keyed by (method, cell) where `cell` quantizes ln λ —
-//! λ grids are log-spaced, so equal-width cells in ln λ put "the same
-//! grid point up to jitter" in the same bucket. Three ways a lookup
-//! can serve:
+//! Entries are keyed by (method, surface signature, cell): `cell`
+//! quantizes ln λ — λ grids are log-spaced, so equal-width cells in
+//! ln λ put "the same grid point up to jitter" in the same bucket —
+//! and `sig` discriminates the loss × penalty surface (see
+//! docs/INVARIANTS.md: a β solved under one loss or elastic-net weight
+//! must never be served — or even warm-seed — a request for another).
+//! Three ways a lookup can serve:
 //!
 //! * **Exact** — same λ bits AND same ε bits as a stored solve: the
 //!   reply replays the stored β byte-for-byte (bitwise identical to
@@ -62,7 +65,7 @@ pub struct LambdaCache {
     /// How many cells away a Near seed may come from.
     near_radius: i64,
     gen: u64,
-    entries: BTreeMap<(Method, i64), Entry>,
+    entries: BTreeMap<(Method, u64, i64), Entry>,
 }
 
 impl LambdaCache {
@@ -92,12 +95,14 @@ impl LambdaCache {
         self.entries.is_empty()
     }
 
-    /// Look up λ for `method` at tolerance `eps`.
-    pub fn lookup(&mut self, method: Method, lam: f64, eps: f64) -> Lookup {
+    /// Look up λ for `method` on the loss × penalty surface `sig` at
+    /// tolerance `eps`. Entries under a different signature are
+    /// invisible — no exact hit, no certified hit, no warm seed.
+    pub fn lookup(&mut self, method: Method, sig: u64, lam: f64, eps: f64) -> Lookup {
         let c = self.cell(lam);
         self.gen += 1;
         let gen = self.gen;
-        if let Some(e) = self.entries.get_mut(&(method, c)) {
+        if let Some(e) = self.entries.get_mut(&(method, sig, c)) {
             if e.lam.to_bits() == lam.to_bits() {
                 e.gen = gen;
                 if e.eps.to_bits() == eps.to_bits() {
@@ -120,7 +125,7 @@ impl LambdaCache {
         let hi = c.saturating_add(self.near_radius);
         let mut best_d = i64::MAX;
         let mut best: Option<&Entry> = None;
-        for (&(_, cell), e) in self.entries.range((method, lo)..=(method, hi)) {
+        for (&(_, _, cell), e) in self.entries.range((method, sig, lo)..=(method, sig, hi)) {
             let d = (cell - c).abs();
             if d < best_d {
                 best_d = d;
@@ -139,6 +144,7 @@ impl LambdaCache {
     pub fn insert(
         &mut self,
         method: Method,
+        sig: u64,
         lam: f64,
         eps: f64,
         gap: f64,
@@ -148,7 +154,7 @@ impl LambdaCache {
         let c = self.cell(lam);
         self.gen += 1;
         self.entries
-            .insert((method, c), Entry { lam, eps, gap, kkt, beta, gen: self.gen });
+            .insert((method, sig, c), Entry { lam, eps, gap, kkt, beta, gen: self.gen });
         while self.entries.len() > self.capacity {
             // O(n) min-gen scan; capacity is a few hundred at most
             let lru = self
@@ -181,35 +187,46 @@ mod tests {
     #[test]
     fn exact_certified_near_miss() {
         let mut c = cache();
-        assert!(matches!(c.lookup(Method::Saif, 0.5, 1e-6), Lookup::Miss));
-        c.insert(Method::Saif, 0.5, 1e-6, 5e-7, 1e-8, beta(1.0));
+        assert!(matches!(c.lookup(Method::Saif, 0, 0.5, 1e-6), Lookup::Miss));
+        c.insert(Method::Saif, 0, 0.5, 1e-6, 5e-7, 1e-8, beta(1.0));
 
         // exact: same λ bits, same ε bits
-        match c.lookup(Method::Saif, 0.5, 1e-6) {
+        match c.lookup(Method::Saif, 0, 0.5, 1e-6) {
             Lookup::Exact(e) => assert_eq!(e.beta[0], (0, 1.0)),
             other => panic!("expected Exact, got {other:?}"),
         }
         // certified: looser ε covered by the stored gap
-        assert!(matches!(c.lookup(Method::Saif, 0.5, 1e-4), Lookup::Certified(_)));
+        assert!(matches!(c.lookup(Method::Saif, 0, 0.5, 1e-4), Lookup::Certified(_)));
         // same λ, tighter ε than the stored gap: near (warm re-solve)
-        assert!(matches!(c.lookup(Method::Saif, 0.5, 1e-9), Lookup::Near { .. }));
+        assert!(matches!(c.lookup(Method::Saif, 0, 0.5, 1e-9), Lookup::Near { .. }));
         // nearby λ within the radius: near
-        match c.lookup(Method::Saif, 0.5 * 1.05, 1e-6) {
+        match c.lookup(Method::Saif, 0, 0.5 * 1.05, 1e-6) {
             Lookup::Near { from_lam, .. } => assert_eq!(from_lam, 0.5),
             other => panic!("expected Near, got {other:?}"),
         }
         // far λ: miss
-        assert!(matches!(c.lookup(Method::Saif, 0.001, 1e-6), Lookup::Miss));
+        assert!(matches!(c.lookup(Method::Saif, 0, 0.001, 1e-6), Lookup::Miss));
         // different method never matches
-        assert!(matches!(c.lookup(Method::Blitz, 0.5, 1e-6), Lookup::Miss));
+        assert!(matches!(c.lookup(Method::Blitz, 0, 0.5, 1e-6), Lookup::Miss));
+    }
+
+    #[test]
+    fn different_surface_signatures_never_mix() {
+        let mut c = cache();
+        c.insert(Method::Saif, 1, 0.5, 1e-6, 1e-7, 0.0, beta(1.0));
+        // same method + λ on another surface: no hit AND no warm seed
+        assert!(matches!(c.lookup(Method::Saif, 2, 0.5, 1e-6), Lookup::Miss));
+        assert!(matches!(c.lookup(Method::Saif, 2, 0.5 * 1.02, 1e-6), Lookup::Miss));
+        // its own surface still serves exactly
+        assert!(matches!(c.lookup(Method::Saif, 1, 0.5, 1e-6), Lookup::Exact(_)));
     }
 
     #[test]
     fn nearest_cell_wins() {
         let mut c = cache();
-        c.insert(Method::Saif, 0.5, 1e-6, 1e-7, 0.0, beta(1.0));
-        c.insert(Method::Saif, 0.6, 1e-6, 1e-7, 0.0, beta(2.0));
-        match c.lookup(Method::Saif, 0.59, 1e-6) {
+        c.insert(Method::Saif, 0, 0.5, 1e-6, 1e-7, 0.0, beta(1.0));
+        c.insert(Method::Saif, 0, 0.6, 1e-6, 1e-7, 0.0, beta(2.0));
+        match c.lookup(Method::Saif, 0, 0.59, 1e-6) {
             Lookup::Near { from_lam, .. } => assert_eq!(from_lam, 0.6),
             other => panic!("expected Near from 0.6, got {other:?}"),
         }
@@ -219,21 +236,21 @@ mod tests {
     fn lru_eviction_at_capacity() {
         let mut c = LambdaCache::new(256.0, 3, 64);
         for (i, lam) in [0.1, 0.2, 0.4].iter().enumerate() {
-            c.insert(Method::Saif, *lam, 1e-6, 1e-7, 0.0, beta(i as f64));
+            c.insert(Method::Saif, 0, *lam, 1e-6, 1e-7, 0.0, beta(i as f64));
         }
         assert_eq!(c.len(), 3);
         // touch 0.1 so 0.2 becomes LRU
-        assert!(matches!(c.lookup(Method::Saif, 0.1, 1e-6), Lookup::Exact(_)));
-        c.insert(Method::Saif, 0.8, 1e-6, 1e-7, 0.0, beta(9.0));
+        assert!(matches!(c.lookup(Method::Saif, 0, 0.1, 1e-6), Lookup::Exact(_)));
+        c.insert(Method::Saif, 0, 0.8, 1e-6, 1e-7, 0.0, beta(9.0));
         assert_eq!(c.len(), 3);
-        assert!(matches!(c.lookup(Method::Saif, 0.1, 1e-6), Lookup::Exact(_)));
-        assert!(matches!(c.lookup(Method::Saif, 0.8, 1e-6), Lookup::Exact(_)));
+        assert!(matches!(c.lookup(Method::Saif, 0, 0.1, 1e-6), Lookup::Exact(_)));
+        assert!(matches!(c.lookup(Method::Saif, 0, 0.8, 1e-6), Lookup::Exact(_)));
         // 0.2's cell no longer holds an exact entry — 0.4 is ~96 cells
         // away at 256 cells/e-fold, still within the near radius? No:
         // radius is 64 in `cache()`, but this cache uses 64 too; the
         // lookup may be Near (from 0.4) or Miss — just not Exact.
         assert!(
-            !matches!(c.lookup(Method::Saif, 0.2, 1e-6), Lookup::Exact(_)),
+            !matches!(c.lookup(Method::Saif, 0, 0.2, 1e-6), Lookup::Exact(_)),
             "0.2 should have been evicted"
         );
     }
@@ -241,10 +258,10 @@ mod tests {
     #[test]
     fn same_cell_replaces() {
         let mut c = cache();
-        c.insert(Method::Saif, 0.5, 1e-6, 1e-7, 0.0, beta(1.0));
-        c.insert(Method::Saif, 0.5, 1e-8, 1e-9, 0.0, beta(2.0));
+        c.insert(Method::Saif, 0, 0.5, 1e-6, 1e-7, 0.0, beta(1.0));
+        c.insert(Method::Saif, 0, 0.5, 1e-8, 1e-9, 0.0, beta(2.0));
         assert_eq!(c.len(), 1);
-        match c.lookup(Method::Saif, 0.5, 1e-8) {
+        match c.lookup(Method::Saif, 0, 0.5, 1e-8) {
             Lookup::Exact(e) => assert_eq!(e.beta[0], (0, 2.0)),
             other => panic!("expected Exact, got {other:?}"),
         }

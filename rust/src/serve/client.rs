@@ -6,6 +6,7 @@ use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
+use crate::model::{LossKind, Penalty};
 use crate::solver::Method;
 
 use super::protocol::{
@@ -53,12 +54,13 @@ impl Client {
     pub fn recv(&mut self) -> Result<Response, String> {
         let mut hdr = [0u8; HEADER_LEN];
         self.stream.read_exact(&mut hdr).map_err(|e| format!("read header: {e}"))?;
-        let (kind, len) = protocol::parse_header(&hdr).map_err(|e| e.to_string())?;
+        let (_version, kind, len) = protocol::parse_header(&hdr).map_err(|e| e.to_string())?;
         let mut payload = vec![0u8; len];
         self.stream.read_exact(&mut payload).map_err(|e| format!("read payload: {e}"))?;
         decode_response(kind, &payload).map_err(|e| e.to_string())
     }
 
+    /// Solve on the default surface: squared loss, pure ℓ1.
     pub fn solve(
         &mut self,
         dataset: u64,
@@ -66,9 +68,23 @@ impl Client {
         eps: f64,
         method: Method,
     ) -> Result<Response, String> {
-        self.request(&Request::Solve { dataset, lam, eps, method })
+        self.solve_on(dataset, lam, eps, method, LossKind::Squared, Penalty::default())
     }
 
+    /// Solve on an explicit loss × penalty surface.
+    pub fn solve_on(
+        &mut self,
+        dataset: u64,
+        lam: f64,
+        eps: f64,
+        method: Method,
+        loss: LossKind,
+        penalty: Penalty,
+    ) -> Result<Response, String> {
+        self.request(&Request::Solve { dataset, lam, eps, method, loss, penalty })
+    }
+
+    /// Path on the default surface: squared loss, pure ℓ1.
     pub fn path(
         &mut self,
         dataset: u64,
@@ -76,7 +92,20 @@ impl Client {
         method: Method,
         lams: Vec<f64>,
     ) -> Result<Response, String> {
-        self.request(&Request::Path { dataset, eps, method, lams })
+        self.path_on(dataset, eps, method, LossKind::Squared, Penalty::default(), lams)
+    }
+
+    /// Path on an explicit loss × penalty surface.
+    pub fn path_on(
+        &mut self,
+        dataset: u64,
+        eps: f64,
+        method: Method,
+        loss: LossKind,
+        penalty: Penalty,
+        lams: Vec<f64>,
+    ) -> Result<Response, String> {
+        self.request(&Request::Path { dataset, eps, method, loss, penalty, lams })
     }
 
     pub fn register(&mut self, dataset: u64, path: &str) -> Result<Response, String> {

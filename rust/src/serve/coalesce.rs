@@ -2,10 +2,12 @@
 //! session.
 //!
 //! Identity is the full request tuple — (dataset, λ bits, method, spec
-//! fingerprint) — so two clients asking for byte-identical work attach
-//! to the same pending solve and both receive its (identical) result,
-//! while requests that differ in ANY knob never share. The
-//! [`Inflight`] table is the serving layer's source of truth for
+//! fingerprint, loss fingerprint) — so two clients asking for
+//! byte-identical work attach to the same pending solve and both
+//! receive its (identical) result, while requests that differ in ANY
+//! knob — including the loss or the elastic-net penalty (the penalty
+//! rides in the spec fingerprint) — never share. The [`Inflight`]
+//! table is the serving layer's source of truth for
 //! accepted-but-unanswered work: worker recovery resubmits from it, so
 //! an accepted request is never silently dropped.
 
@@ -13,13 +15,14 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::model::Problem;
+use crate::model::{Penalty, Problem};
 use crate::solver::Method;
 
 use super::protocol::CacheTag;
 
-/// Coalescing identity: (dataset, λ bits, method, spec fingerprint).
-pub type Key = (u64, u64, Method, u64);
+/// Coalescing identity: (dataset, λ bits, method, spec fingerprint,
+/// loss fingerprint).
+pub type Key = (u64, u64, Method, u64, u64);
 
 /// A one-shot completion slot a connection handler blocks on.
 #[derive(Debug, Default)]
@@ -78,9 +81,13 @@ pub struct Pending<T> {
     pub lam: f64,
     pub eps: f64,
     pub method: Method,
-    /// The problem handle the request was submitted against (needed to
+    /// The problem handle the request was submitted against — for a
+    /// non-default loss, the derived per-loss problem (needed to
     /// resubmit after worker recovery).
     pub problem: Arc<Problem>,
+    /// The elastic-net penalty the request runs under (folded into any
+    /// resubmission's spec).
+    pub penalty: Penalty,
     pub tree: Option<Arc<Vec<(usize, usize)>>>,
     /// Warm seed in flight (None after a cold fallback).
     pub warm: Option<Arc<Vec<(usize, f64)>>>,
@@ -179,6 +186,7 @@ mod tests {
             eps: 1e-6,
             method: key.2,
             problem: prob,
+            penalty: Penalty::default(),
             tree: None,
             warm: None,
             cache_tag: CacheTag::Miss,
@@ -191,13 +199,16 @@ mod tests {
     #[test]
     fn coalescing_shares_one_pending() {
         let mut inf: Inflight<u32> = Inflight::new();
-        let key: Key = (1, 0.5f64.to_bits(), Method::Saif, 99);
+        let key: Key = (1, 0.5f64.to_bits(), Method::Saif, 99, 7);
         assert!(inf.attach(&key).is_none());
         let (id, w1) = inf.begin(pending(key));
         let w2 = inf.attach(&key).expect("identical request coalesces");
         // a different λ does NOT coalesce
-        let other: Key = (1, 0.25f64.to_bits(), Method::Saif, 99);
+        let other: Key = (1, 0.25f64.to_bits(), Method::Saif, 99, 7);
         assert!(inf.attach(&other).is_none());
+        // a different loss fingerprint does NOT coalesce either
+        let other_loss: Key = (1, 0.5f64.to_bits(), Method::Saif, 99, 8);
+        assert!(inf.attach(&other_loss).is_none());
         assert_eq!(inf.len(), 1);
 
         let p = inf.finish(id).unwrap();
@@ -223,7 +234,7 @@ mod tests {
     #[test]
     fn finish_unlinks_only_its_own_key() {
         let mut inf: Inflight<u32> = Inflight::new();
-        let key: Key = (2, 1.0f64.to_bits(), Method::Blitz, 0);
+        let key: Key = (2, 1.0f64.to_bits(), Method::Blitz, 0, 0);
         let (id1, _w1) = inf.begin(pending(key));
         // same key begins again (e.g. after the first failed and was
         // re-begun while id1's finish raced): by_key points at id2

@@ -12,7 +12,8 @@
 //!   **The server never serves an uncertified solution** (see
 //!   docs/INVARIANTS.md).
 //! * [`coalesce`] — identical in-flight requests (same dataset, λ
-//!   bits, method, spec fingerprint) share one worker solve; the
+//!   bits, method, spec fingerprint, loss fingerprint — the penalty
+//!   rides in the spec fingerprint) share one worker solve; the
 //!   in-flight table is also the source of truth for
 //!   accepted-but-unanswered work.
 //! * [`stats`] — per-dataset counters + latency percentiles, served by
@@ -54,7 +55,7 @@ use std::time::Duration;
 use crate::cm::{EpochShards, PoolMode};
 use crate::coordinator::{Coordinator, EngineKind, SolveRequest, SolveResponse};
 use crate::linalg::{Parallelism, Precision};
-use crate::model::Problem;
+use crate::model::{LossKind, Penalty, Problem};
 use crate::runtime::pool::{self, SpawnHandle};
 use crate::solver::{Method, SolveSpec};
 use crate::util::Stopwatch;
@@ -167,6 +168,11 @@ struct Route {
     caches: BTreeMap<u64, LambdaCache>,
     /// Per-dataset count of pending (non-coalesced) solves.
     depth: BTreeMap<u64, usize>,
+    /// Per-(dataset, loss fingerprint) derived problems: the same
+    /// design and labels re-read under a requested loss that differs
+    /// from the loaded one. Built once, shared by every such request;
+    /// invalidated when the dataset is re-registered.
+    derived: BTreeMap<(u64, u64), Arc<Problem>>,
 }
 
 struct Inner {
@@ -240,6 +246,7 @@ impl Server {
                 inflight: Inflight::new(),
                 caches: BTreeMap::new(),
                 depth: BTreeMap::new(),
+                derived: BTreeMap::new(),
             }),
             stats: Mutex::new(ServeStats::new()),
         });
@@ -414,7 +421,7 @@ fn connection(inner: &Inner, mut stream: TcpStream) {
                 return;
             }
         }
-        let (kind, len) = match protocol::parse_header(&hdr) {
+        let (version, kind, len) = match protocol::parse_header(&hdr) {
             Ok(x) => x,
             Err(e) => {
                 lock(&inner.stats).protocol_errors += 1;
@@ -431,7 +438,7 @@ fn connection(inner: &Inner, mut stream: TcpStream) {
             }
         }
         lock(&inner.stats).frames += 1;
-        let reply = match protocol::decode_request(kind, &payload) {
+        let reply = match protocol::decode_request(version, kind, &payload) {
             Ok(req) => handle_request(inner, req),
             Err(e) => {
                 lock(&inner.stats).protocol_errors += 1;
@@ -461,8 +468,8 @@ enum SolveOutcome {
 
 fn handle_request(inner: &Inner, req: Request) -> Response {
     match req {
-        Request::Solve { dataset, lam, eps, method } => {
-            match solve_one(inner, dataset, lam, eps, method) {
+        Request::Solve { dataset, lam, eps, method, loss, penalty } => {
+            match solve_one(inner, dataset, lam, eps, method, loss, penalty) {
                 SolveOutcome::Served(s) => Response::Solved(to_point(&s)),
                 SolveOutcome::Busy => {
                     Response::Busy { retry_after_ms: inner.cfg.retry_after_ms }
@@ -470,10 +477,10 @@ fn handle_request(inner: &Inner, req: Request) -> Response {
                 SolveOutcome::Failed(c, m) => Response::Error { code: c, msg: m },
             }
         }
-        Request::Path { dataset, eps, method, lams } => {
+        Request::Path { dataset, eps, method, loss, penalty, lams } => {
             let mut pts = Vec::with_capacity(lams.len());
             for lam in lams {
-                match solve_one(inner, dataset, lam, eps, method) {
+                match solve_one(inner, dataset, lam, eps, method, loss, penalty) {
                     SolveOutcome::Served(s) => pts.push(to_point(&s)),
                     SolveOutcome::Busy => {
                         return Response::Busy { retry_after_ms: inner.cfg.retry_after_ms }
@@ -522,9 +529,14 @@ fn handle_register(inner: &Inner, dataset: u64, path: &str) -> Response {
     };
     let lam_max = prob.lambda_max();
     let (n, p) = (prob.n(), prob.p());
-    lock(&inner.route)
-        .datasets
-        .insert(dataset, DatasetEntry { problem: prob, tree: None, ooc: true });
+    {
+        let mut route = lock(&inner.route);
+        route
+            .datasets
+            .insert(dataset, DatasetEntry { problem: prob, tree: None, ooc: true });
+        // derived per-loss views of the replaced dataset are stale
+        route.derived.retain(|&(d, _), _| d != dataset);
+    }
     Response::Registered {
         n: n.try_into().unwrap_or(u64::MAX),
         p: p.try_into().unwrap_or(u64::MAX),
@@ -532,13 +544,68 @@ fn handle_register(inner: &Inner, dataset: u64, path: &str) -> Response {
     }
 }
 
+/// The loss × penalty surface signature a result is keyed by in the
+/// λ-grid cache and the coordinator's warm cache: a β solved under one
+/// surface must never serve — or warm-seed — another (see
+/// docs/INVARIANTS.md). Mirrors the penalty precedence of
+/// [`crate::solver::Penalized`]: here the penalty always rides in the
+/// spec, so it is used directly.
+fn surface_sig(loss: LossKind, penalty: Penalty) -> u64 {
+    loss.fingerprint() ^ penalty.fingerprint().rotate_left(17)
+}
+
+/// Resolve the problem handle a request solves against: the loaded
+/// problem when the requested loss matches it, otherwise a derived
+/// per-loss view (same design, same labels, requested loss) cached in
+/// `Route.derived`. Classification losses reject datasets whose labels
+/// are not ±1 with a typed error.
+fn derived_problem(
+    derived: &mut BTreeMap<(u64, u64), Arc<Problem>>,
+    entry: &DatasetEntry,
+    dataset: u64,
+    loss: LossKind,
+) -> Result<Arc<Problem>, String> {
+    if loss == entry.problem.loss {
+        return Ok(entry.problem.clone());
+    }
+    let key = (dataset, loss.fingerprint());
+    if let Some(p) = derived.get(&key) {
+        return Ok(p.clone());
+    }
+    if loss.needs_pm1_labels() && !entry.problem.y.iter().all(|&v| v == 1.0 || v == -1.0) {
+        return Err(format!(
+            "loss {} needs ±1 labels, but dataset {dataset} has real-valued responses",
+            loss.name()
+        ));
+    }
+    // the column norms are a property of the design alone, so the
+    // loaded problem's cached norms carry over to the derived loss
+    let p = Arc::new(Problem { loss, ..(*entry.problem).clone() });
+    derived.insert(key, p.clone());
+    Ok(p)
+}
+
 /// One solve: coalesce → cache → admission → submit → wait. All stats
 /// for the request (including Busy rejections) are recorded here.
-fn solve_one(inner: &Inner, dataset: u64, lam: f64, eps: f64, method: Method) -> SolveOutcome {
+fn solve_one(
+    inner: &Inner,
+    dataset: u64,
+    lam: f64,
+    eps: f64,
+    method: Method,
+    loss: LossKind,
+    penalty: Penalty,
+) -> SolveOutcome {
     let sw = Stopwatch::start();
-    let spec =
-        SolveSpec { eps, precision: Some(inner.cfg.precision), ..Default::default() };
-    let key: Key = (dataset, lam.to_bits(), method, spec.fingerprint());
+    let spec = SolveSpec {
+        eps,
+        precision: Some(inner.cfg.precision),
+        penalty,
+        ..Default::default()
+    };
+    let sig = surface_sig(loss, penalty);
+    let key: Key = (dataset, lam.to_bits(), method, spec.fingerprint(), loss.fingerprint());
+    let structured = matches!(method, Method::Fused | Method::Group { .. });
 
     enum Plan {
         Hit(Served),
@@ -558,70 +625,88 @@ fn solve_one(inner: &Inner, dataset: u64, lam: f64, eps: f64, method: Method) ->
                  from memory"
                     .into(),
             ),
+            // the structured-penalty methods are squared-loss pure-ℓ1
+            // constructions: their trees/groups do not compose with the
+            // elastic-net augmentation or the new losses
+            Some(_) if structured && penalty.l2 > 0.0 => Plan::Fail(
+                code::BAD_REQUEST,
+                format!("{} does not support an l2 penalty", method.label()),
+            ),
+            Some(_) if structured && loss != LossKind::Squared => Plan::Fail(
+                code::BAD_REQUEST,
+                format!("{} supports least squares only, not {}", method.label(), loss.name()),
+            ),
             Some(entry) => {
                 if let Some(waiter) = route.inflight.attach(&key) {
                     Plan::Wait { waiter, coalesced: true, submit: None }
                 } else {
-                    let cfg = &inner.cfg;
-                    let cache = route.caches.entry(dataset).or_insert_with(|| {
-                        LambdaCache::new(
-                            cfg.cache_cells_per_efold,
-                            cfg.cache_capacity,
-                            cfg.cache_near_radius,
-                        )
-                    });
-                    let looked = match cache.lookup(method, lam, eps) {
-                        Lookup::Exact(e) => Err((CacheTag::Exact, e)),
-                        Lookup::Certified(e) => Err((CacheTag::Certified, e)),
-                        Lookup::Near { seed, .. } => Ok((CacheTag::Near, Some(seed))),
-                        Lookup::Miss => Ok((CacheTag::Miss, None)),
-                    };
-                    match looked {
-                        Err((tag, e)) => Plan::Hit(Served {
-                            lam: e.lam,
-                            gap: e.gap,
-                            kkt: e.kkt,
-                            secs: 0.0,
-                            warm_started: false,
-                            cache: tag,
-                            beta: e.beta,
-                        }),
-                        Ok((cache_tag, warm)) => {
-                            // admission: the pending depth per dataset is
-                            // bounded; past the high-watermark reply Busy
-                            let depth = route.depth.entry(dataset).or_insert(0);
-                            if *depth >= inner.cfg.high_watermark {
-                                Plan::Busy
+                    match derived_problem(&mut route.derived, entry, dataset, loss) {
+                        Err(msg) => Plan::Fail(code::BAD_REQUEST, msg),
+                        Ok(problem) => {
+                            let cfg = &inner.cfg;
+                            let cache = route.caches.entry(dataset).or_insert_with(|| {
+                                LambdaCache::new(
+                                    cfg.cache_cells_per_efold,
+                                    cfg.cache_capacity,
+                                    cfg.cache_near_radius,
+                                )
+                            });
+                            let looked = match cache.lookup(method, sig, lam, eps) {
+                                Lookup::Exact(e) => Err((CacheTag::Exact, e)),
+                                Lookup::Certified(e) => Err((CacheTag::Certified, e)),
+                                Lookup::Near { seed, .. } => Ok((CacheTag::Near, Some(seed))),
+                                Lookup::Miss => Ok((CacheTag::Miss, None)),
+                            };
+                            match looked {
+                                Err((tag, e)) => Plan::Hit(Served {
+                                    lam: e.lam,
+                                    gap: e.gap,
+                                    kkt: e.kkt,
+                                    secs: 0.0,
+                                    warm_started: false,
+                                    cache: tag,
+                                    beta: e.beta,
+                                }),
+                                Ok((cache_tag, warm)) => {
+                                    // admission: the pending depth per dataset
+                                    // is bounded; past the high-watermark
+                                    // reply Busy
+                                    let depth = route.depth.entry(dataset).or_insert(0);
+                                    if *depth >= inner.cfg.high_watermark {
+                                        Plan::Busy
                                     } else {
-                                *depth += 1;
-                                let (id, waiter) = route.inflight.begin(Pending {
-                                    key,
-                                    dataset,
-                                    lam,
-                                    eps,
-                                    method,
-                                    problem: entry.problem.clone(),
-                                    tree: entry.tree.clone(),
-                                    warm: warm.clone(),
-                                    cache_tag,
-                                    cold_retried: false,
-                                    dead_retried: false,
-                                    waiters: Vec::new(),
-                                });
-                                let submit = SolveRequest {
-                                    id,
-                                    dataset_key: dataset,
-                                    problem: entry.problem.clone(),
-                                    lam,
-                                    method,
-                                    tree: entry.tree.clone(),
-                                    warm,
-                                    spec,
-                                };
-                                Plan::Wait {
-                                    waiter,
-                                    coalesced: false,
-                                    submit: Some(submit),
+                                        *depth += 1;
+                                        let (id, waiter) = route.inflight.begin(Pending {
+                                            key,
+                                            dataset,
+                                            lam,
+                                            eps,
+                                            method,
+                                            problem: problem.clone(),
+                                            penalty,
+                                            tree: entry.tree.clone(),
+                                            warm: warm.clone(),
+                                            cache_tag,
+                                            cold_retried: false,
+                                            dead_retried: false,
+                                            waiters: Vec::new(),
+                                        });
+                                        let submit = SolveRequest {
+                                            id,
+                                            dataset_key: dataset,
+                                            problem,
+                                            lam,
+                                            method,
+                                            tree: entry.tree.clone(),
+                                            warm,
+                                            spec,
+                                        };
+                                        Plan::Wait {
+                                            waiter,
+                                            coalesced: false,
+                                            submit: Some(submit),
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -742,6 +827,7 @@ fn handle_response(inner: &Inner, r: SolveResponse) {
                     spec: SolveSpec {
                         eps: p.eps,
                         precision: Some(inner.cfg.precision),
+                        penalty: p.penalty,
                         ..Default::default()
                     },
                 });
@@ -768,7 +854,15 @@ fn handle_response(inner: &Inner, r: SolveResponse) {
                             cfg.cache_near_radius,
                         )
                     })
-                    .insert(p.method, r.lam, p.eps, r.gap, r.kkt_violation, beta.clone());
+                    .insert(
+                        p.method,
+                        surface_sig(p.problem.loss, p.penalty),
+                        r.lam,
+                        p.eps,
+                        r.gap,
+                        r.kkt_violation,
+                        beta.clone(),
+                    );
                 Ok(Served {
                     lam: r.lam,
                     gap: r.gap,
@@ -837,6 +931,7 @@ fn check_dead_workers(inner: &Inner) {
             spec: SolveSpec {
                 eps: p.eps,
                 precision: Some(inner.cfg.precision),
+                penalty: p.penalty,
                 ..Default::default()
             },
         };

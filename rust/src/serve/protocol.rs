@@ -6,11 +6,18 @@
 //!
 //! ```text
 //! magic    u32  0x53414946 ("SAIF")
-//! version  u16  1
+//! version  u16  2 (v1 accepted; see below)
 //! kind     u16  request/response discriminant (see [`kind`])
 //! len      u32  payload length, ≤ MAX_PAYLOAD
 //! payload  len bytes, little-endian fields
 //! ```
+//!
+//! **v2** extends the `SOLVE`/`PATH` request payloads with a
+//! loss × penalty tail (`u8` loss code, `f64` Huber δ, `f64` l1, `f64`
+//! l2 — see [`encode_request`]). v1 frames carry no tail and decode to
+//! the v1 semantics: squared loss, plain pure-ℓ1 penalty. An unknown
+//! loss code or degenerate penalty is a typed `BAD_REQUEST`, never a
+//! misdecode.
 //!
 //! Decoding treats the peer as untrusted: every length is bounded
 //! before allocation, every `u64 → usize` goes through `try_from`
@@ -19,14 +26,20 @@
 //! yields a typed [`ProtoError`] the server answers with
 //! [`Response::Error`] — it never panics and never kills the process.
 
+use crate::model::{LossKind, Penalty};
 use crate::solver::Method;
 
 /// Frame magic: "SAIF" read as a little-endian u32 of b"FIAS" — the
 /// bytes on the wire are `46 49 41 53`.
 pub const MAGIC: u32 = 0x5341_4946;
-/// Protocol version; a mismatch is a hard [`ProtoError`] so old
-/// clients fail loudly instead of misdecoding.
-pub const VERSION: u16 = 1;
+/// Protocol version written by this build. Decoding accepts
+/// [`MIN_VERSION`]..=[`VERSION`]; anything else is a hard
+/// [`ProtoError`] so incompatible peers fail loudly instead of
+/// misdecoding.
+pub const VERSION: u16 = 2;
+/// Oldest protocol version still decoded (v1: no loss/penalty tail on
+/// solve/path requests — decodes as squared loss + pure ℓ1).
+pub const MIN_VERSION: u16 = 1;
 /// Frame header size in bytes (magic + version + kind + len).
 pub const HEADER_LEN: usize = 12;
 /// Upper bound on a single frame's payload (64 MiB — a dense β at
@@ -128,10 +141,18 @@ impl CacheTag {
 /// A client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// One solve at λ with gap tolerance ε.
-    Solve { dataset: u64, lam: f64, eps: f64, method: Method },
+    /// One solve at λ with gap tolerance ε, under a loss × penalty
+    /// surface (v1 peers always request squared loss + pure ℓ1).
+    Solve { dataset: u64, lam: f64, eps: f64, method: Method, loss: LossKind, penalty: Penalty },
     /// A descending λ-path (convenience loop over [`Request::Solve`]).
-    Path { dataset: u64, eps: f64, method: Method, lams: Vec<f64> },
+    Path {
+        dataset: u64,
+        eps: f64,
+        method: Method,
+        loss: LossKind,
+        penalty: Penalty,
+        lams: Vec<f64>,
+    },
     /// Register a `.saifbin` file (server-local path) under a key.
     Register { dataset: u64, path: String },
     /// Snapshot the serving counters as JSON.
@@ -224,21 +245,62 @@ fn put_point(out: &mut Vec<u8>, pt: &SolvedPoint) {
     put_beta(out, &pt.beta);
 }
 
+/// Wire code for a loss kind: (code, Huber δ). δ is 0 for the
+/// parameter-free losses.
+fn loss_code(loss: LossKind) -> (u8, f64) {
+    match loss {
+        LossKind::Squared => (0, 0.0),
+        LossKind::Logistic => (1, 0.0),
+        LossKind::SquaredHinge => (2, 0.0),
+        LossKind::Huber { delta } => (3, delta),
+    }
+}
+
+fn loss_from_code(c: u8, delta: f64) -> Result<LossKind, ProtoError> {
+    let bad = |msg: String| ProtoError { code: code::BAD_REQUEST, msg };
+    match c {
+        0 => Ok(LossKind::Squared),
+        1 => Ok(LossKind::Logistic),
+        2 => Ok(LossKind::SquaredHinge),
+        3 => {
+            if delta.is_finite() && delta > 0.0 {
+                Ok(LossKind::Huber { delta })
+            } else {
+                Err(bad(format!("bad Huber delta {delta}")))
+            }
+        }
+        other => Err(bad(format!(
+            "unknown loss code {other} (valid: 0=ls 1=logistic 2=sqhinge 3=huber)"
+        ))),
+    }
+}
+
+/// The v2 loss × penalty tail on solve/path requests.
+fn put_surface(out: &mut Vec<u8>, loss: LossKind, penalty: Penalty) {
+    let (c, delta) = loss_code(loss);
+    out.push(c);
+    put_f64(out, delta);
+    put_f64(out, penalty.l1);
+    put_f64(out, penalty.l2);
+}
+
 /// Encode a request as (kind, payload).
 pub fn encode_request(req: &Request) -> (u16, Vec<u8>) {
     let mut out = Vec::new();
     match req {
-        Request::Solve { dataset, lam, eps, method } => {
+        Request::Solve { dataset, lam, eps, method, loss, penalty } => {
             put_u64(&mut out, *dataset);
             put_f64(&mut out, *lam);
             put_f64(&mut out, *eps);
             put_str(&mut out, method.label().as_str());
+            put_surface(&mut out, *loss, *penalty);
             (kind::SOLVE, out)
         }
-        Request::Path { dataset, eps, method, lams } => {
+        Request::Path { dataset, eps, method, loss, penalty, lams } => {
             put_u64(&mut out, *dataset);
             put_f64(&mut out, *eps);
             put_str(&mut out, method.label().as_str());
+            put_surface(&mut out, *loss, *penalty);
             put_u32(&mut out, lams.len().try_into().unwrap_or(u32::MAX));
             for &l in lams {
                 put_f64(&mut out, l);
@@ -306,14 +368,17 @@ pub fn header(kind: u16, payload_len: usize) -> Result<[u8; HEADER_LEN], ProtoEr
     Ok(h)
 }
 
-/// Validate a received header; returns (kind, payload_len).
-pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u16, usize), ProtoError> {
+/// Validate a received header; returns (version, kind, payload_len).
+/// Versions [`MIN_VERSION`]..=[`VERSION`] are accepted — the version
+/// is threaded into [`decode_request`] so v1 frames decode with their
+/// original (no loss/penalty tail) layout.
+pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u16, u16, usize), ProtoError> {
     let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
     if magic != MAGIC {
         return Err(ProtoError::bad(format!("bad magic {magic:#010x}")));
     }
     let version = u16::from_le_bytes([h[4], h[5]]);
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(ProtoError::bad(format!("unsupported protocol version {version}")));
     }
     let kind = u16::from_le_bytes([h[6], h[7]]);
@@ -322,7 +387,7 @@ pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u16, usize), ProtoError> {
         return Err(ProtoError::bad(format!("payload length {len} exceeds MAX_PAYLOAD")));
     }
     let len = usize::try_from(len).map_err(|_| ProtoError::bad("payload length overflow"))?;
-    Ok((kind, len))
+    Ok((version, kind, len))
 }
 
 // ---------------------------------------------------------------------------
@@ -448,8 +513,33 @@ fn check_eps(eps: f64) -> Result<f64, ProtoError> {
     }
 }
 
-/// Decode a request frame.
-pub fn decode_request(kind_: u16, payload: &[u8]) -> Result<Request, ProtoError> {
+/// Decode the v2 loss × penalty tail; v1 frames carry none and mean
+/// squared loss + plain pure-ℓ1. Enforces the surface invariants the
+/// serving layer relies on (valid penalty weights; `l2 > 0` only with
+/// squared loss) as typed `BAD_REQUEST`s.
+fn take_surface(c: &mut Cursor<'_>, version: u16) -> Result<(LossKind, Penalty), ProtoError> {
+    if version < 2 {
+        return Ok((LossKind::Squared, Penalty::default()));
+    }
+    let code_ = c.u8()?;
+    let delta = c.f64()?;
+    let loss = loss_from_code(code_, delta)?;
+    let penalty = Penalty { l1: c.f64()?, l2: c.f64()? };
+    let bad = |msg: String| ProtoError { code: code::BAD_REQUEST, msg };
+    penalty.validate().map_err(bad)?;
+    if penalty.l2 > 0.0 && loss != LossKind::Squared {
+        return Err(bad(format!(
+            "l2 = {} requires squared loss, got {}",
+            penalty.l2,
+            loss.name()
+        )));
+    }
+    Ok((loss, penalty))
+}
+
+/// Decode a request frame received under `version` (from
+/// [`parse_header`]).
+pub fn decode_request(version: u16, kind_: u16, payload: &[u8]) -> Result<Request, ProtoError> {
     let mut c = Cursor::new(payload);
     let req = match kind_ {
         kind::SOLVE => {
@@ -457,12 +547,14 @@ pub fn decode_request(kind_: u16, payload: &[u8]) -> Result<Request, ProtoError>
             let lam = check_lam(c.f64()?)?;
             let eps = check_eps(c.f64()?)?;
             let method = parse_method(&c.str16()?)?;
-            Request::Solve { dataset, lam, eps, method }
+            let (loss, penalty) = take_surface(&mut c, version)?;
+            Request::Solve { dataset, lam, eps, method, loss, penalty }
         }
         kind::PATH => {
             let dataset = c.u64()?;
             let eps = check_eps(c.f64()?)?;
             let method = parse_method(&c.str16()?)?;
+            let (loss, penalty) = take_surface(&mut c, version)?;
             let k = c.u32()?;
             if k == 0 || k > MAX_PATH_LAMS {
                 return Err(ProtoError {
@@ -474,7 +566,7 @@ pub fn decode_request(kind_: u16, payload: &[u8]) -> Result<Request, ProtoError>
             for _ in 0..k {
                 lams.push(check_lam(c.f64()?)?);
             }
-            Request::Path { dataset, eps, method, lams }
+            Request::Path { dataset, eps, method, loss, penalty, lams }
         }
         kind::REGISTER => {
             let dataset = c.u64()?;
@@ -533,10 +625,11 @@ mod tests {
     fn roundtrip_req(req: Request) {
         let (k, payload) = encode_request(&req);
         let h = header(k, payload.len()).unwrap();
-        let (k2, len) = parse_header(&h).unwrap();
+        let (v2, k2, len) = parse_header(&h).unwrap();
+        assert_eq!(v2, VERSION);
         assert_eq!(k, k2);
         assert_eq!(len, payload.len());
-        assert_eq!(decode_request(k, &payload).unwrap(), req);
+        assert_eq!(decode_request(VERSION, k, &payload).unwrap(), req);
     }
 
     fn roundtrip_rsp(rsp: Response) {
@@ -563,21 +656,140 @@ mod tests {
             lam: 0.125,
             eps: 1e-6,
             method: Method::Saif,
+            loss: LossKind::Squared,
+            penalty: Penalty::default(),
         });
         roundtrip_req(Request::Solve {
             dataset: u64::MAX,
             lam: 1e-8,
             eps: 1e-2,
             method: Method::Group { size: 4 },
+            loss: LossKind::Squared,
+            penalty: Penalty::default(),
         });
         roundtrip_req(Request::Path {
             dataset: 0,
             eps: 1e-6,
             method: Method::Homotopy,
+            loss: LossKind::Squared,
+            penalty: Penalty::default(),
             lams: vec![1.0, 0.5, 0.25],
         });
         roundtrip_req(Request::Register { dataset: 3, path: "/tmp/x.saifbin".into() });
         roundtrip_req(Request::Stats);
+    }
+
+    #[test]
+    fn every_loss_and_penalty_roundtrips() {
+        for (loss, penalty) in [
+            (LossKind::Logistic, Penalty::default()),
+            (LossKind::SquaredHinge, Penalty::default()),
+            (LossKind::Huber { delta: 1.35 }, Penalty::default()),
+            (LossKind::Squared, Penalty::ridge(0.25)),
+            (LossKind::Squared, Penalty { l1: 0.5, l2: 0.1 }),
+            (LossKind::Huber { delta: 0.5 }, Penalty { l1: 2.0, l2: 0.0 }),
+        ] {
+            roundtrip_req(Request::Solve {
+                dataset: 1,
+                lam: 0.5,
+                eps: 1e-6,
+                method: Method::Saif,
+                loss,
+                penalty,
+            });
+            roundtrip_req(Request::Path {
+                dataset: 1,
+                eps: 1e-6,
+                method: Method::Saif,
+                loss,
+                penalty,
+                lams: vec![0.5, 0.25],
+            });
+        }
+    }
+
+    #[test]
+    fn v1_frames_decode_to_squared_loss_and_plain_penalty() {
+        // a v1 SOLVE payload has no loss/penalty tail
+        let mut payload = Vec::new();
+        super::put_u64(&mut payload, 9);
+        super::put_f64(&mut payload, 0.25);
+        super::put_f64(&mut payload, 1e-6);
+        super::put_str(&mut payload, "saif");
+        assert_eq!(
+            decode_request(1, kind::SOLVE, &payload).unwrap(),
+            Request::Solve {
+                dataset: 9,
+                lam: 0.25,
+                eps: 1e-6,
+                method: Method::Saif,
+                loss: LossKind::Squared,
+                penalty: Penalty::default(),
+            }
+        );
+        // a v1 PATH payload likewise
+        let mut payload = Vec::new();
+        super::put_u64(&mut payload, 9);
+        super::put_f64(&mut payload, 1e-6);
+        super::put_str(&mut payload, "saif");
+        super::put_u32(&mut payload, 2);
+        super::put_f64(&mut payload, 0.5);
+        super::put_f64(&mut payload, 0.25);
+        match decode_request(1, kind::PATH, &payload).unwrap() {
+            Request::Path { loss, penalty, lams, .. } => {
+                assert_eq!(loss, LossKind::Squared);
+                assert!(penalty.is_plain());
+                assert_eq!(lams, vec![0.5, 0.25]);
+            }
+            other => panic!("expected Path, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_surfaces_are_typed_bad_requests() {
+        let base = |tail: &mut dyn FnMut(&mut Vec<u8>)| {
+            let mut payload = Vec::new();
+            super::put_u64(&mut payload, 1);
+            super::put_f64(&mut payload, 0.5);
+            super::put_f64(&mut payload, 1e-6);
+            super::put_str(&mut payload, "saif");
+            tail(&mut payload);
+            decode_request(VERSION, kind::SOLVE, &payload).unwrap_err()
+        };
+        // unknown loss code
+        let err = base(&mut |p| {
+            p.push(9);
+            super::put_f64(p, 0.0);
+            super::put_f64(p, 1.0);
+            super::put_f64(p, 0.0);
+        });
+        assert_eq!(err.code, code::BAD_REQUEST);
+        assert!(err.msg.contains("loss code"), "{}", err.msg);
+        // degenerate Huber delta
+        let err = base(&mut |p| {
+            p.push(3);
+            super::put_f64(p, -1.0);
+            super::put_f64(p, 1.0);
+            super::put_f64(p, 0.0);
+        });
+        assert_eq!(err.code, code::BAD_REQUEST);
+        // degenerate penalty weights
+        let err = base(&mut |p| {
+            p.push(0);
+            super::put_f64(p, 0.0);
+            super::put_f64(p, 0.0); // l1 = 0
+            super::put_f64(p, 0.0);
+        });
+        assert_eq!(err.code, code::BAD_REQUEST);
+        // l2 > 0 under a non-squared loss
+        let err = base(&mut |p| {
+            p.push(1); // logistic
+            super::put_f64(p, 0.0);
+            super::put_f64(p, 1.0);
+            super::put_f64(p, 0.5);
+        });
+        assert_eq!(err.code, code::BAD_REQUEST);
+        assert!(err.msg.contains("squared"), "{}", err.msg);
     }
 
     #[test]
@@ -603,7 +815,14 @@ mod tests {
             Method::Fused,
             Method::Group { size: 12 },
         ] {
-            roundtrip_req(Request::Solve { dataset: 1, lam: 0.5, eps: 1e-6, method: m });
+            roundtrip_req(Request::Solve {
+                dataset: 1,
+                lam: 0.5,
+                eps: 1e-6,
+                method: m,
+                loss: LossKind::Squared,
+                penalty: Penalty::default(),
+            });
         }
     }
 
@@ -629,9 +848,11 @@ mod tests {
             lam: 0.125,
             eps: 1e-6,
             method: Method::Saif,
+            loss: LossKind::Huber { delta: 1.0 },
+            penalty: Penalty { l1: 2.0, l2: 0.0 },
         });
         for cut in 0..payload.len() {
-            assert!(decode_request(k, &payload[..cut]).is_err(), "cut at {cut}");
+            assert!(decode_request(VERSION, k, &payload[..cut]).is_err(), "cut at {cut}");
         }
         let (k, payload) = encode_response(&Response::Solved(point()));
         for cut in 0..payload.len() {
@@ -643,7 +864,7 @@ mod tests {
     fn trailing_bytes_and_bad_values_are_rejected() {
         let (k, mut payload) = encode_request(&Request::Stats);
         payload.push(0);
-        assert!(decode_request(k, &payload).is_err());
+        assert!(decode_request(VERSION, k, &payload).is_err());
 
         // non-finite / non-positive λ and ε
         for (lam, eps) in [(f64::NAN, 1e-6), (-1.0, 1e-6), (0.5, 0.0), (0.5, f64::INFINITY)] {
@@ -652,21 +873,24 @@ mod tests {
                 lam,
                 eps,
                 method: Method::Saif,
+                loss: LossKind::Squared,
+                penalty: Penalty::default(),
             });
-            assert!(decode_request(k, &payload).is_err(), "λ={lam} ε={eps}");
+            assert!(decode_request(VERSION, k, &payload).is_err(), "λ={lam} ε={eps}");
         }
 
-        // unknown method label
+        // unknown method label (v1 layout: no surface tail needed, the
+        // method is rejected first)
         let mut payload = Vec::new();
         super::put_u64(&mut payload, 1);
         super::put_f64(&mut payload, 0.5);
         super::put_f64(&mut payload, 1e-6);
         super::put_str(&mut payload, "frobnicate");
-        let err = decode_request(kind::SOLVE, &payload).unwrap_err();
+        let err = decode_request(1, kind::SOLVE, &payload).unwrap_err();
         assert_eq!(err.code, code::BAD_METHOD);
 
         // unknown kinds
-        assert!(decode_request(63, &[]).is_err());
+        assert!(decode_request(VERSION, 63, &[]).is_err());
         assert!(decode_response(200, &[]).is_err());
     }
 

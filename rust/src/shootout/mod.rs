@@ -1,6 +1,7 @@
 //! Benchopt-style method shootout: every feature-LASSO method on one
 //! shared scenario grid — {ls, logistic} × {dense, sparse, out-of-core}
-//! designs, each solved over the same descending λ-path — recording
+//! designs plus an elastic-net LS row and a Huber row (both dense,
+//! in-memory) — each solved over the same descending λ-path, recording
 //! wall time and the HONEST (full-problem) certificate per grid point.
 //!
 //! The output is a flat JSON record (`BENCH_methods.json` at the repo
@@ -21,7 +22,7 @@
 use crate::cm::NativeEngine;
 use crate::data::{synth, Dataset};
 use crate::metrics::Table;
-use crate::model::LossKind;
+use crate::model::{LossKind, Penalty};
 use crate::solver::{make, Method, SolveSpec, Solver};
 use crate::util::json::Json;
 use crate::util::{tmax, Stopwatch};
@@ -85,25 +86,42 @@ fn spill_ooc(ds: &Dataset, tag: &str, temp_paths: &mut Vec<String>) -> Result<Da
     Ok(ooc)
 }
 
-/// The shared scenario grid. `quick` shrinks the sizes and the λ grid
-/// for smoke tests; full scale is what CI records.
-fn scenarios(quick: bool, temp_paths: &mut Vec<String>) -> Result<Vec<(&'static str, Dataset)>, String> {
+/// Huber scenario: the dense LS design re-read under the robust loss
+/// (δ = 1), exercising the loss-general screening path.
+fn huber_dense(n: usize, p: usize, seed: u64) -> Dataset {
+    let mut ds = synth::synth_linear(n, p, seed);
+    ds.loss = LossKind::Huber { delta: 1.0 };
+    ds.name = format!("{}-huber", ds.name);
+    ds
+}
+
+/// The shared scenario grid, each row carrying its elastic-net penalty
+/// ([`Penalty::default`] = pure ℓ1). `quick` shrinks the sizes and the
+/// λ grid for smoke tests; full scale is what CI records.
+fn scenarios(
+    quick: bool,
+    temp_paths: &mut Vec<String>,
+) -> Result<Vec<(&'static str, Dataset, Penalty)>, String> {
     let (n_d, p_d, n_s, p_s, dens) = if quick {
         (60, 150, 80, 600, 0.02)
     } else {
         (100, 2000, 256, 10_000, 0.01)
     };
+    let plain = Penalty::default();
     let ls_sparse = synth::synth_sparse(n_s, p_s, dens, 13);
     let logit_sparse = sparse_logit(n_s, p_s, dens, 14);
     let ls_ooc = spill_ooc(&ls_sparse, "ls", temp_paths)?;
     let logit_ooc = spill_ooc(&logit_sparse, "logit", temp_paths)?;
     Ok(vec![
-        ("ls_dense", synth::synth_linear(n_d, p_d, 11)),
-        ("logit_dense", synth::gisette_like(n_d, p_d, 12)),
-        ("ls_sparse", ls_sparse),
-        ("logit_sparse", logit_sparse),
-        ("ls_ooc", ls_ooc),
-        ("logit_ooc", logit_ooc),
+        ("ls_dense", synth::synth_linear(n_d, p_d, 11), plain),
+        ("logit_dense", synth::gisette_like(n_d, p_d, 12), plain),
+        ("ls_sparse", ls_sparse, plain),
+        ("logit_sparse", logit_sparse, plain),
+        ("ls_ooc", ls_ooc, plain),
+        ("logit_ooc", logit_ooc, plain),
+        // the new loss × penalty axes (dense, in-memory only)
+        ("enet_ls_dense", synth::synth_linear(n_d, p_d, 15), Penalty::ridge(0.1)),
+        ("huber_dense", huber_dense(n_d, p_d, 16), plain),
     ])
 }
 
@@ -119,9 +137,21 @@ fn scenarios(quick: bool, temp_paths: &mut Vec<String>) -> Result<Vec<(&'static 
 /// * `<scenario>_<label>_curve_secs` / `_curve_gap` — the time-to-gap
 ///   curve: cumulative seconds and certified gap at each grid point.
 pub fn run(quick: bool) -> Result<ShootoutResult, String> {
+    run_filtered(quick, None, None)
+}
+
+/// [`run`] restricted to the scenario rows matching a loss and/or an
+/// exact ridge weight (the CLI's `--loss`/`--l2` filters on
+/// `bench-methods`). An empty intersection is an error naming the
+/// available rows, not an empty table.
+pub fn run_filtered(
+    quick: bool,
+    loss: Option<LossKind>,
+    l2: Option<f64>,
+) -> Result<ShootoutResult, String> {
     let n_lams = if quick { 3 } else { 8 };
     let mut temp_paths = Vec::new();
-    let result = run_inner(quick, n_lams, &mut temp_paths);
+    let result = run_inner(quick, n_lams, loss, l2, &mut temp_paths);
     // cleanup on success AND on every early-return error path
     for p in &temp_paths {
         std::fs::remove_file(p).ok();
@@ -132,9 +162,24 @@ pub fn run(quick: bool) -> Result<ShootoutResult, String> {
 fn run_inner(
     quick: bool,
     n_lams: usize,
+    loss: Option<LossKind>,
+    l2: Option<f64>,
     temp_paths: &mut Vec<String>,
 ) -> Result<ShootoutResult, String> {
-    let scens = scenarios(quick, temp_paths)?;
+    let all = scenarios(quick, temp_paths)?;
+    let names: Vec<&str> = all.iter().map(|(k, _, _)| *k).collect();
+    let scens: Vec<_> = all
+        .into_iter()
+        .filter(|(_, ds, pen)| {
+            loss.map_or(true, |l| ds.loss == l) && l2.map_or(true, |w| pen.l2 == w)
+        })
+        .collect();
+    if scens.is_empty() {
+        return Err(format!(
+            "no scenario rows match the loss/l2 filter; rows: {}",
+            names.join(", ")
+        ));
+    }
     let mut rec = Json::obj();
     rec.set("bench", Json::Str("methods".into()))
         .set("n_lambdas", Json::Num(n_lams as f64))
@@ -144,7 +189,7 @@ fn run_inner(
         "method shootout: λ-path wall time + honest certificates",
         &["scenario", "method", "secs", "worst_gap", "final_nnz"],
     );
-    for (key, ds) in &scens {
+    for (key, ds, penalty) in &scens {
         let prob = ds.problem();
         let lam_max = prob.lambda_max();
         let denom = (n_lams - 1).max(1) as f64;
@@ -153,7 +198,7 @@ fn run_inner(
             .collect();
         for &method in METHODS {
             let label = key_label(method);
-            let spec = SolveSpec { eps: EPS, ..Default::default() };
+            let spec = SolveSpec { eps: EPS, penalty: *penalty, ..Default::default() };
             let mut eng = NativeEngine::new();
             let sw = Stopwatch::start();
             let path = make(method, &mut eng, &spec).path(&prob, &grid);
@@ -221,6 +266,8 @@ mod tests {
             "logit_sparse",
             "ls_ooc",
             "logit_ooc",
+            "enet_ls_dense",
+            "huber_dense",
         ];
         for scen in scen_keys {
             for &m in METHODS {
@@ -249,7 +296,7 @@ mod tests {
         // module mirrors
         let back = Json::parse(&res.record.to_string()).expect("record parses");
         assert_eq!(back, res.record);
-        // 6 scenarios × all methods in the table
+        // 8 scenarios × all methods in the table
         // (header is not a row; Table::row count is rows only)
         assert!(res.table.rows.len() == scen_keys.len() * METHODS.len());
     }
@@ -261,7 +308,7 @@ mod tests {
         // legitimately exceed ε, which is exactly what the record is
         // for.
         let res = run(true).expect("quick shootout");
-        for scen in ["ls_dense", "logit_dense", "ls_sparse"] {
+        for scen in ["ls_dense", "logit_dense", "ls_sparse", "enet_ls_dense", "huber_dense"] {
             for &m in METHODS {
                 if m == Method::Homotopy {
                     continue;
@@ -275,5 +322,23 @@ mod tests {
                 assert!(gap <= EPS * 1.01, "{scen}/{label}: worst gap {gap}");
             }
         }
+    }
+
+    #[test]
+    fn loss_and_l2_filters_restrict_the_grid() {
+        // huber filter keeps exactly the huber row
+        let res =
+            run_filtered(true, Some(LossKind::Huber { delta: 1.0 }), None).expect("huber row");
+        assert_eq!(res.table.rows.len(), METHODS.len());
+        let rendered = res.table.render();
+        assert!(rendered.contains("huber_dense"), "{rendered}");
+        assert!(!rendered.contains("ls_dense"), "{rendered}");
+        // l2 filter keeps exactly the elastic-net row
+        let res = run_filtered(true, None, Some(0.1)).expect("enet row");
+        assert_eq!(res.table.rows.len(), METHODS.len());
+        assert!(res.table.render().contains("enet_ls_dense"));
+        // an empty intersection is an error naming the rows
+        let err = run_filtered(true, Some(LossKind::SquaredHinge), None).unwrap_err();
+        assert!(err.contains("huber_dense") && err.contains("ls_dense"), "{err}");
     }
 }

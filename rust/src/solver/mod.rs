@@ -50,10 +50,13 @@
 //! ```
 
 use crate::cm::{Engine, EpochShards, PoolMode};
-use crate::linalg::{Parallelism, Precision};
-use crate::model::Problem;
+use crate::linalg::{dot, Parallelism, Precision};
+use crate::model::{Penalty, Problem};
 use crate::saif::TraceEvent;
 use crate::util::{tmax, Stopwatch};
+
+mod penalized;
+pub use penalized::Penalized;
 
 /// Which solve method a caller (coordinator request, CLI flag) wants.
 ///
@@ -182,6 +185,11 @@ pub struct SolveSpec {
     pub precision: Option<Precision>,
     /// Record a solve trace (methods without one return it empty).
     pub trace: bool,
+    /// Elastic-net penalty (default pure ℓ1 — today's LASSO, a bitwise
+    /// pass-through). A non-plain penalty is served through the
+    /// [`Penalized`] reduction adapter that [`make`] wraps around every
+    /// method; `l2 > 0` requires squared loss (see `model::penalty`).
+    pub penalty: Penalty,
 }
 
 impl Default for SolveSpec {
@@ -194,6 +202,7 @@ impl Default for SolveSpec {
             max_outer: None,
             precision: None,
             trace: false,
+            penalty: Penalty::default(),
         }
     }
 }
@@ -242,6 +251,8 @@ impl SolveSpec {
             Some(Precision::MixedF32) => 2,
         });
         mix(u64::from(self.trace));
+        mix(self.penalty.l1.to_bits());
+        mix(self.penalty.l2.to_bits());
         h
     }
 }
@@ -385,14 +396,77 @@ pub fn global_gap_dual(
     beta: &[(usize, f64)],
     lam: f64,
 ) -> (f64, crate::model::DualPoint) {
+    let pen = prob.penalty;
+    if pen.l2 > 0.0 {
+        return penalized_gap_dual(prob, beta, lam);
+    }
+    // pure ℓ1 (possibly with an l1 multiplier): the plain machinery at
+    // the effective λ. `lam_eff == lam` bitwise when the penalty is
+    // plain (l1 = 1.0 exactly), so the default path is unchanged.
+    let lam_eff = lam * pen.l1;
     let u = prob.margins_sparse(beta);
-    let th_hat = prob.theta_hat(&u, lam);
+    let th_hat = prob.theta_hat(&u, lam_eff);
     let scores = engine.scores(prob, &th_hat);
     let mx = scores.iter().cloned().fold(0.0, tmax);
-    let dp = prob.project_dual(&th_hat, mx, lam);
+    let dp = prob.project_dual(&th_hat, mx, lam_eff);
     let l1: f64 = beta.iter().map(|(_, b)| b.abs()).sum();
-    let primal = prob.primal_from_margins(&u, l1, lam);
+    let primal = prob.primal_from_margins(&u, l1, lam_eff);
     ((primal - dp.dual).max(0.0), dp)
+}
+
+/// Honest FULL-problem gap for an elastic-net LS problem, certified on
+/// the augmented formulation [X; √l2·I] WITHOUT materializing it: the
+/// augmented dual direction is (θ̂, φ̂) with φ̂_j = −√l2·β_j/λ_eff (the
+/// augmented residual is 0 − √l2·β_j), the augmented constraint values
+/// are x_jᵀθ̂ + √l2·φ̂_j, and the augmented rows contribute −v²/2 each
+/// to the dual (squared conjugate at target 0). The returned
+/// [`crate::model::DualPoint`] carries the base-row block of the
+/// feasible dual (what screening over X uses); `dual` is the full
+/// augmented dual value.
+fn penalized_gap_dual(
+    prob: &Problem,
+    beta: &[(usize, f64)],
+    lam: f64,
+) -> (f64, crate::model::DualPoint) {
+    let pen = prob.penalty;
+    let lam_eff = lam * pen.l1;
+    let sq = pen.l2.sqrt();
+    let u = prob.margins_sparse(beta);
+    let th_hat = prob.theta_hat(&u, lam_eff);
+    let mut phi = vec![0.0; prob.p()];
+    for &(i, b) in beta {
+        phi[i] = -sq * b / lam_eff;
+    }
+    // signed scores with the ridge correction, then the feasibility max
+    let mut corrs = vec![0.0; prob.p()];
+    prob.x.mul_t_vec(&th_hat, &mut corrs);
+    let mut mx = 0.0f64;
+    for (c, &ph) in corrs.iter_mut().zip(&phi) {
+        *c += sq * ph;
+        mx = tmax(mx, c.abs());
+    }
+    let mx = mx.max(1e-12);
+    // optimal LS scaling on the augmented problem, clipped feasible
+    // (augmented targets are all 0, so ỹᵀθ̃ = yᵀθ̂)
+    let nrm2 = dot(&th_hat, &th_hat) + dot(&phi, &phi);
+    let denom = lam_eff * nrm2;
+    let tau = if denom.abs() < 1e-300 {
+        0.0
+    } else {
+        dot(&prob.y, &th_hat) / denom
+    }
+    .clamp(-1.0 / mx, 1.0 / mx);
+    let theta: Vec<f64> = th_hat.iter().map(|t| tau * t).collect();
+    let mut dual = prob.dual_value(&theta, lam_eff);
+    for &ph in &phi {
+        let v = lam_eff * tau * ph;
+        dual -= 0.5 * v * v;
+    }
+    let beta_l1: f64 = beta.iter().map(|(_, b)| b.abs()).sum();
+    let beta_l2: f64 = beta.iter().map(|(_, b)| b * b).sum();
+    let primal = prob.primal_from_margins(&u, beta_l1, lam_eff) + 0.5 * pen.l2 * beta_l2;
+    let dp = crate::model::DualPoint { theta, tau, dual };
+    ((primal - dual).max(0.0), dp)
 }
 
 /// Build a boxed solver for `method` over `engine`, configured from
@@ -416,7 +490,7 @@ pub fn make_with_tree<'e>(
     spec: &SolveSpec,
     tree: Option<&[(usize, usize)]>,
 ) -> Box<dyn Solver + 'e> {
-    match method {
+    let inner: Box<dyn Solver + 'e> = match method {
         Method::Saif => Box::new(crate::saif::Saif::new(
             engine,
             crate::saif::SaifConfig::from_spec(spec),
@@ -452,7 +526,11 @@ pub fn make_with_tree<'e>(
             crate::saif::GroupSaifConfig::from_spec(spec),
             size,
         )),
-    }
+    };
+    // every method is served through the elastic-net reduction adapter;
+    // with a plain effective penalty it is a pure delegation (bitwise
+    // identical to the unwrapped solver)
+    Box::new(Penalized::new(inner, spec.penalty))
 }
 
 #[cfg(test)]
@@ -523,6 +601,7 @@ mod tests {
         assert!(s.max_outer.is_none());
         assert!(s.precision.is_none());
         assert!(!s.trace);
+        assert!(s.penalty.is_plain(), "default spec must be today's pure-ℓ1 LASSO");
     }
 
     #[test]
@@ -540,6 +619,9 @@ mod tests {
             SolveSpec { precision: Some(Precision::F64), ..Default::default() },
             SolveSpec { precision: Some(Precision::MixedF32), ..Default::default() },
             SolveSpec { trace: true, ..Default::default() },
+            SolveSpec { penalty: Penalty { l1: 0.5, l2: 0.0 }, ..Default::default() },
+            SolveSpec { penalty: Penalty::ridge(0.1), ..Default::default() },
+            SolveSpec { penalty: Penalty::ridge(0.2), ..Default::default() },
         ];
         let mut fps: Vec<u64> = variants.iter().map(|s| s.fingerprint()).collect();
         fps.push(base.fingerprint());

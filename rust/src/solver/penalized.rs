@@ -1,0 +1,254 @@
+//! The elastic-net reduction adapter: every method built through
+//! [`super::make`] is wrapped in [`Penalized`], which rewrites a
+//! non-plain [`Penalty`] into the plain pure-ℓ1 LASSO the inner
+//! solvers implement:
+//!
+//! * `l1 ≠ 1` rescales the solve's λ (λ_eff = λ·l1);
+//! * `l2 > 0` additionally solves on the augmented problem
+//!   `[X; √l2·I]`, `ỹ = [y; 0]` (squared loss only — the reduction is
+//!   LS-exact; see `model::penalty`) via the O(1)-memory virtual
+//!   [`Design::Ridged`] backend.
+//!
+//! The augmented problem's objective is pointwise identical to the
+//! elastic-net objective, its feature indices map 1:1, and its duality
+//! gap IS the elastic-net gap — so the inner method's SAIF ball, CM
+//! epochs, GAP-safe rules, warm-started λ-path sessions, and gap
+//! certificates all apply unchanged, and the [`Solution`]s come back
+//! untranslated. With a plain effective penalty the adapter is a pure
+//! delegation: same calls, same bits, as the unwrapped solver.
+//!
+//! The prepared problem is cached per (design identity, shape, l2), so
+//! a λ-path session or a serving process builds the augmentation once
+//! per dataset × ridge, not once per solve.
+
+use crate::linalg::Design;
+use crate::model::{LossKind, Penalty, Problem};
+
+use super::{PathResult, Solution, Solver};
+
+/// One prepared (plain pure-ℓ1) problem, keyed by the source design's
+/// identity + shape and the ridge weight.
+struct Prepared {
+    key: (usize, usize, usize, u64),
+    prob: Problem,
+}
+
+/// The reduction adapter (module docs). Wraps any [`Solver`].
+pub struct Penalized<'e> {
+    inner: Box<dyn Solver + 'e>,
+    /// Request-level penalty from the spec; a non-plain penalty on the
+    /// problem itself takes precedence (the problem is ground truth).
+    penalty: Penalty,
+    cache: Option<Prepared>,
+}
+
+impl<'e> Penalized<'e> {
+    pub fn new(inner: Box<dyn Solver + 'e>, penalty: Penalty) -> Penalized<'e> {
+        Penalized { inner, penalty, cache: None }
+    }
+
+    /// The penalty this solve runs under: the problem's own if
+    /// non-plain (ground truth), else the spec's.
+    fn effective(&self, prob: &Problem) -> Penalty {
+        if !prob.penalty.is_plain() {
+            prob.penalty
+        } else {
+            self.penalty
+        }
+    }
+}
+
+/// Return the plain problem the inner solver should run on: the
+/// original when nothing needs rewriting, else the cached reduction.
+/// Free function over the split fields so the caller can keep a
+/// disjoint `&mut` on the inner solver.
+fn prepare<'a>(
+    cache: &'a mut Option<Prepared>,
+    prob: &'a Problem,
+    eff: Penalty,
+) -> &'a Problem {
+    if eff.l2 == 0.0 && prob.penalty.is_plain() {
+        // pure λ rescale on an already-plain problem: solve in place
+        return prob;
+    }
+    let key = (prob.x.data_ptr(), prob.n(), prob.p(), eff.l2.to_bits());
+    let hit = matches!(cache, Some(c) if c.key == key);
+    if !hit {
+        *cache = Some(Prepared { key, prob: build_plain(prob, eff) });
+    }
+    match cache {
+        Some(c) => &c.prob,
+        // the line above just filled the cache; this arm is for the
+        // borrow checker, not for runtime
+        None => prob,
+    }
+}
+
+/// Build the plain pure-ℓ1 problem equivalent to `prob` under `eff`
+/// (modulo the λ_eff rescale the caller applies).
+fn build_plain(prob: &Problem, eff: Penalty) -> Problem {
+    if eff.l2 == 0.0 {
+        // problem-level l1 multiplier only: strip the penalty so the
+        // inner solver's internal certificates (which consult
+        // `prob.penalty`) see the plain problem they are solving
+        let mut plain = prob.clone();
+        plain.penalty = Penalty::default();
+        return plain;
+    }
+    assert!(
+        prob.loss == LossKind::Squared,
+        "l2 > 0 requires squared loss (validated at the API boundary)"
+    );
+    assert!(prob.offset.is_none(), "l2 > 0 is incompatible with a margin offset");
+    let mut y = prob.y.clone();
+    y.resize(prob.n() + prob.p(), 0.0);
+    Problem::new(Design::ridged(prob.x.clone(), eff.l2.sqrt()), y, LossKind::Squared)
+}
+
+impl<'e> Solver for Penalized<'e> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn solve_warm(
+        &mut self,
+        prob: &Problem,
+        lam: f64,
+        warm: Option<&[(usize, f64)]>,
+    ) -> Solution {
+        let eff = self.effective(prob);
+        if eff.is_plain() {
+            return self.inner.solve_warm(prob, lam, warm);
+        }
+        let Penalized { inner, cache, .. } = self;
+        let prepared = prepare(cache, prob, eff);
+        inner.solve_warm(prepared, lam * eff.l1, warm)
+    }
+
+    fn path_warm(
+        &mut self,
+        prob: &Problem,
+        lams: &[f64],
+        warm: Option<&[(usize, f64)]>,
+    ) -> PathResult {
+        let eff = self.effective(prob);
+        if eff.is_plain() {
+            return self.inner.path_warm(prob, lams, warm);
+        }
+        // one prepared problem serves the whole session (l2 is
+        // λ-independent by design), so the inner method keeps its
+        // native path behavior — warm chaining, sequential balls —
+        // on the rescaled grid; the reported grid stays the caller's
+        let scaled: Vec<f64> = lams.iter().map(|&l| l * eff.l1).collect();
+        let Penalized { inner, cache, .. } = self;
+        let prepared = prepare(cache, prob, eff);
+        let mut res = inner.path_warm(prepared, &scaled, warm);
+        res.lams = lams.to_vec();
+        res
+    }
+
+    fn kkt_violation(&mut self, prob: &Problem, beta: &[(usize, f64)], lam: f64) -> f64 {
+        let eff = self.effective(prob);
+        if eff.is_plain() {
+            return self.inner.kkt_violation(prob, beta, lam);
+        }
+        // certify on the ORIGINAL problem's elastic-net KKT system —
+        // independent of the reduction the solve went through
+        prob.kkt_violation_with(beta, lam, eff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cm::NativeEngine;
+    use crate::solver::{make, Method, SolveSpec};
+
+    fn spec_with(pen: Penalty) -> SolveSpec {
+        SolveSpec { eps: 1e-9, penalty: pen, ..Default::default() }
+    }
+
+    #[test]
+    fn plain_penalty_is_bitwise_passthrough() {
+        let prob = crate::data::synth::synth_linear(30, 50, 4).problem();
+        let lam_max = prob.lambda_max();
+        let grid = [lam_max * 0.5, lam_max * 0.25, lam_max * 0.1];
+        let mut eng1 = NativeEngine::new();
+        let mut wrapped = make(Method::Saif, &mut eng1, &spec_with(Penalty::default()));
+        let a = wrapped.path(&prob, &grid);
+        let mut eng2 = NativeEngine::new();
+        let mut bare = Box::new(crate::saif::Saif::new(
+            &mut eng2,
+            crate::saif::SaifConfig::from_spec(&spec_with(Penalty::default())),
+        ));
+        let b = Solver::path(bare.as_mut(), &prob, &grid);
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.beta, pb.beta, "l2=0 must be bitwise identical to plain LASSO");
+            assert_eq!(pa.gap.to_bits(), pb.gap.to_bits());
+        }
+    }
+
+    #[test]
+    fn ridge_solve_matches_explicit_augmentation() {
+        let prob = crate::data::synth::synth_linear(25, 40, 4).problem();
+        let pen = Penalty::ridge(0.35);
+        let lam = prob.lambda_max() * 0.2;
+        let mut eng1 = NativeEngine::new();
+        let mut adapted = make(Method::Saif, &mut eng1, &spec_with(pen));
+        let sol = adapted.solve(&prob, lam);
+        // hand-built augmentation, solved by the bare method
+        let aug = build_plain(&prob, pen);
+        let mut eng2 = NativeEngine::new();
+        let mut bare = make(Method::Saif, &mut eng2, &spec_with(Penalty::default()));
+        let ref_sol = bare.solve(&aug, lam);
+        assert_eq!(sol.beta, ref_sol.beta);
+        // and the adapter's certificate is the elastic-net KKT system
+        assert!(adapted.kkt_violation(&prob, &sol.beta, lam) < 1e-3 * lam.max(1.0));
+    }
+
+    #[test]
+    fn l1_multiplier_rescales_lambda() {
+        let prob = crate::data::synth::synth_linear(25, 40, 4).problem();
+        let pen = Penalty { l1: 2.0, l2: 0.0 };
+        let lam = prob.lambda_max() * 0.15;
+        let mut eng1 = NativeEngine::new();
+        let mut adapted = make(Method::Saif, &mut eng1, &spec_with(pen));
+        let sol = adapted.solve(&prob, lam);
+        let mut eng2 = NativeEngine::new();
+        let mut bare = make(Method::Saif, &mut eng2, &spec_with(Penalty::default()));
+        let ref_sol = bare.solve(&prob, lam * 2.0);
+        assert_eq!(sol.beta, ref_sol.beta);
+    }
+
+    #[test]
+    fn problem_level_penalty_takes_precedence() {
+        let base = crate::data::synth::synth_linear(20, 30, 3).problem();
+        let pen = Penalty::ridge(0.5);
+        let prob = base.clone().with_penalty(pen);
+        let lam = base.lambda_max() * 0.2;
+        // spec says plain; the problem's own penalty must still be served
+        let mut eng1 = NativeEngine::new();
+        let mut adapted = make(Method::Saif, &mut eng1, &spec_with(Penalty::default()));
+        let sol = adapted.solve(&prob, lam);
+        let aug = build_plain(&base, pen);
+        let mut eng2 = NativeEngine::new();
+        let mut bare = make(Method::Saif, &mut eng2, &spec_with(Penalty::default()));
+        let ref_sol = bare.solve(&aug, lam);
+        assert_eq!(sol.beta, ref_sol.beta);
+    }
+
+    #[test]
+    fn prepared_problem_is_cached_across_the_path() {
+        let prob = crate::data::synth::synth_linear(20, 30, 3).problem();
+        let lam_max = prob.lambda_max();
+        let mut eng = NativeEngine::new();
+        let mut adapted = make(Method::Saif, &mut eng, &spec_with(Penalty::ridge(0.2)));
+        let res = adapted.path(&prob, &[lam_max * 0.4, lam_max * 0.2, lam_max * 0.1]);
+        assert_eq!(res.lams.len(), 3);
+        // reported grid is the caller's, not the rescaled one
+        assert_eq!(res.lams[0], lam_max * 0.4);
+        for sol in &res.points {
+            assert!(sol.gap <= 1e-6, "augmented gap {} exceeds tolerance", sol.gap);
+        }
+    }
+}

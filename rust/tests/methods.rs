@@ -11,14 +11,20 @@
 //! * the worked counterexample where the plain (unsafe) strong rule —
 //!   and the homotopy baseline built on it — misses an active feature
 //!   that the hybrid rule's KKT post-check catches, with the honest
-//!   full-problem gap exposing the homotopy miss.
+//!   full-problem gap exposing the homotopy miss;
+//! * the loss × penalty surface: elastic-net LS must match the
+//!   explicit hand-built [X; √l2·I] reduction (≤1e-10 objective,
+//!   support equality, l2 = 0 bitwise-plain), and every safe rule
+//!   keeps the no-screening reference support on the squared-hinge,
+//!   Huber, and elastic-net rows, countersigned by the penalized KKT
+//!   oracle.
 
 mod common;
 
 use saif::cm::{solve_subproblem, NativeEngine};
 use saif::data::synth;
 use saif::linalg::Mat;
-use saif::model::{LossKind, Problem};
+use saif::model::{LossKind, Penalty, Problem};
 use saif::screening::dpp::DppPath;
 use saif::screening::strong::strong_rule_keep;
 use saif::solver::{make, Method, SolveSpec, Solver};
@@ -227,4 +233,129 @@ fn strong_rule_misses_an_active_feature_that_hybrid_catches() {
         violations >= 1.0,
         "the catch must be visible in the stats: violations = {violations}"
     );
+}
+
+/// The explicit rescaled-LASSO construction the elastic-net adapter is
+/// specified against: design [X; √l2·I], response ỹ = [y; 0], plain ℓ1
+/// at the same λ. Materialized dense — the test yardstick, not the
+/// production path (which never builds the identity block).
+fn augmented(prob: &Problem, l2: f64) -> Problem {
+    let (n, p) = (prob.n(), prob.p());
+    let mut xa = Mat::zeros(n + p, p);
+    for j in 0..p {
+        for (i, v) in prob.x.col_iter(j) {
+            xa.set(i, j, v);
+        }
+        xa.set(n + j, j, l2.sqrt());
+    }
+    let mut y = prob.y.clone();
+    y.resize(n + p, 0.0);
+    Problem::new(xa, y, LossKind::Squared)
+}
+
+/// Elastic-net primal ½‖y−Xβ‖² + λ‖β‖₁ + ½·l2·‖β‖² — the objective
+/// both sides of the reduction must agree on.
+fn enet_objective(prob: &Problem, beta: &[(usize, f64)], lam: f64, l2: f64) -> f64 {
+    let sq: f64 = beta.iter().map(|&(_, b)| b * b).sum();
+    objective(prob, beta, lam) + 0.5 * l2 * sq
+}
+
+#[test]
+fn elastic_net_matches_the_explicit_augmented_construction() {
+    for (l2, seed) in [(0.1, 91u64), (0.75, 92)] {
+        let prob = synth::synth_linear(40, 120, seed).problem();
+        let pen = Penalty::ridge(l2);
+        let lam = prob.lambda_max() * 0.15;
+        let eps = 1e-12;
+        // the API path: plain problem + SolveSpec penalty
+        let spec = SolveSpec { eps, penalty: pen, ..Default::default() };
+        let mut eng = NativeEngine::new();
+        let sol = make(Method::Saif, &mut eng, &spec).solve(&prob, lam);
+        // the hand-built reduction, solved as today's pure LASSO
+        let aug = augmented(&prob, l2);
+        let mut eng2 = NativeEngine::new();
+        let plain = SolveSpec { eps, ..Default::default() };
+        let ref_sol = make(Method::Saif, &mut eng2, &plain).solve(&aug, lam);
+        let sup = common::support_sparse(&sol.beta, common::SUPPORT_TOL);
+        let ref_sup = common::support_sparse(&ref_sol.beta, common::SUPPORT_TOL);
+        assert_eq!(sup, ref_sup, "l2={l2}: support mismatch");
+        let obj = enet_objective(&prob, &sol.beta, lam, l2);
+        let obj_ref = enet_objective(&prob, &ref_sol.beta, lam, l2);
+        assert!(
+            (obj - obj_ref).abs() <= 1e-10 * obj_ref.abs().max(1.0),
+            "l2={l2}: objective {obj} vs hand-rescaled {obj_ref}"
+        );
+        // both sides certify on the elastic-net KKT system
+        let kkt = prob.kkt_violation_with(&sol.beta, lam, pen);
+        assert!(kkt <= 1e-4 * lam.max(1.0), "l2={l2}: kkt {kkt}");
+    }
+    // l2 = 0 through the same adapter is bitwise today's LASSO
+    let prob = synth::synth_linear(40, 120, 93).problem();
+    let lam = prob.lambda_max() * 0.15;
+    let zero = SolveSpec { penalty: Penalty { l1: 1.0, l2: 0.0 }, ..Default::default() };
+    let plain = SolveSpec::default();
+    let mut ea = NativeEngine::new();
+    let mut eb = NativeEngine::new();
+    let a = make(Method::Saif, &mut ea, &zero).solve(&prob, lam);
+    let b = make(Method::Saif, &mut eb, &plain).solve(&prob, lam);
+    assert_eq!(a.beta, b.beta, "l2=0 must be bitwise identical to plain LASSO");
+    assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+}
+
+#[test]
+fn new_loss_penalty_surfaces_keep_the_reference_support() {
+    prop::check("loss×penalty safe-rule supports", 6, |rng| {
+        let n = 30 + rng.below(30);
+        let p = 60 + rng.below(100);
+        // rotate through the new surfaces: squared hinge, Huber, and
+        // elastic-net least squares
+        let (tag, prob, penalty) = match rng.below(3) {
+            0 => {
+                let mut ds = synth::gisette_like(n, p, rng.next_u64());
+                ds.loss = LossKind::SquaredHinge;
+                ("sqhinge", ds.problem(), Penalty::default())
+            }
+            1 => {
+                let mut ds = synth::synth_linear(n, p, rng.next_u64());
+                ds.loss = LossKind::Huber { delta: 0.5 + rng.uniform() };
+                ("huber", ds.problem(), Penalty::default())
+            }
+            _ => {
+                let ds = synth::synth_linear(n, p, rng.next_u64());
+                ("enet-ls", ds.problem(), Penalty::ridge(0.05 + 0.3 * rng.uniform()))
+            }
+        };
+        let lam = prob.lambda_max() * (0.05 + 0.3 * rng.uniform());
+        let eps = 1e-9;
+        // no-screening reference on the SAME surface — for the enet row
+        // that is the explicit augmented problem, so the reduction
+        // itself is part of what the reference countersigns
+        let reference = if penalty.l2 > 0.0 {
+            reference_support(&augmented(&prob, penalty.l2), lam, eps)
+        } else {
+            reference_support(&prob, lam, eps)
+        };
+        for &method in SAFE_METHODS {
+            let spec = SolveSpec { eps, penalty, ..Default::default() };
+            let mut eng = NativeEngine::new();
+            let sol = make(method, &mut eng, &spec).solve(&prob, lam);
+            let sup = common::support_sparse(&sol.beta, common::SUPPORT_TOL);
+            if sup != reference {
+                return Err(format!(
+                    "{}/{tag}: support {sup:?} differs from reference {reference:?} (λ={lam:.3e})",
+                    method.label(),
+                ));
+            }
+            common::check_gap(sol.gap, eps)?;
+            // KKT oracle countersigned on the full penalized problem
+            let kkt = prob.kkt_violation_with(&sol.beta, lam, penalty);
+            if kkt > common::KKT_REL_TOL * lam.max(1.0) {
+                return Err(format!(
+                    "{}/{tag}: kkt violation {kkt:.3e} at λ={lam:.3e}",
+                    method.label(),
+                ));
+            }
+        }
+        Ok(())
+    });
 }

@@ -156,6 +156,60 @@ fn served_grid_is_bitwise_identical_to_direct_path_and_certified() {
 }
 
 #[test]
+fn loss_and_penalty_surfaces_are_served_and_isolated() {
+    use saif::model::{LossKind, Penalty};
+    let (ds, prob) = linear_dataset(0, 29);
+    let server = start(test_config(), vec![ds]);
+    let lam = prob.lambda_max() * 0.2;
+    let mut c = connect(&server);
+
+    // elastic net end-to-end: the reply certifies on the PENALIZED
+    // objective, and the β satisfies the elastic-net KKT conditions
+    let pen = Penalty::ridge(0.25);
+    let enet = solved(
+        c.solve_on(0, lam, EPS, Method::Saif, LossKind::Squared, pen).expect("enet rpc"),
+    );
+    assert!(enet.gap <= EPS, "enet gap {} must certify the requested ε", enet.gap);
+    let kkt = prob.kkt_violation_with(&enet.beta, lam, pen);
+    assert!(kkt < 1e-4 * lam.max(1.0), "enet KKT residual {kkt}");
+
+    // the plain-lasso request at the SAME λ must not be served from
+    // the enet entry: its first solve is a cache miss and its β differs
+    let plain = solved(c.solve(0, lam, EPS, Method::Saif).expect("plain rpc"));
+    assert_eq!(plain.cache, CacheTag::Miss, "surfaces must never share cache entries");
+    assert_ne!(
+        beta_bits(&plain.beta),
+        beta_bits(&enet.beta),
+        "ridge shrinkage must be visible in the served β"
+    );
+
+    // a non-default loss end-to-end: served off a derived per-loss
+    // problem, still with an honest full-problem certificate
+    let hub = solved(
+        c.solve_on(0, lam, EPS, Method::Saif, LossKind::Huber { delta: 1.0 }, Penalty::default())
+            .expect("huber rpc"),
+    );
+    assert!(hub.gap <= EPS, "huber gap {} must certify the requested ε", hub.gap);
+
+    // a classification loss on real-valued labels is a typed error
+    match c
+        .solve_on(0, lam, EPS, Method::Saif, LossKind::SquaredHinge, Penalty::default())
+        .expect("rpc")
+    {
+        Response::Error { code: ec, .. } => assert_eq!(ec, code::BAD_REQUEST),
+        other => panic!("expected BAD_REQUEST for ±1-label loss on real labels, got {other:?}"),
+    }
+
+    // structured methods reject the l2 penalty with a typed error
+    match c.solve_on(0, lam, EPS, Method::Fused, LossKind::Squared, pen).expect("rpc") {
+        Response::Error { code: ec, .. } => assert_eq!(ec, code::BAD_REQUEST),
+        other => panic!("expected BAD_REQUEST for fused × l2, got {other:?}"),
+    }
+    drop(c);
+    server.shutdown();
+}
+
+#[test]
 fn watermark_zero_makes_every_cold_solve_busy() {
     let (ds, prob) = linear_dataset(0, 11);
     let cfg = ServeConfig { high_watermark: 0, retry_after_ms: 77, ..test_config() };
@@ -250,7 +304,14 @@ fn malformed_frames_get_typed_errors_and_never_kill_the_server() {
         Response::Error { code: ec, .. } => assert_eq!(ec, code::UNKNOWN_DATASET),
         other => panic!("expected UNKNOWN_DATASET, got {other:?}"),
     }
-    match c.request(&Request::Solve { dataset: 0, lam: -1.0, eps: EPS, method: Method::Saif }) {
+    match c.request(&Request::Solve {
+        dataset: 0,
+        lam: -1.0,
+        eps: EPS,
+        method: Method::Saif,
+        loss: saif::model::LossKind::Squared,
+        penalty: saif::model::Penalty::default(),
+    }) {
         Ok(Response::Error { code: ec, .. }) => assert_eq!(ec, code::BAD_REQUEST),
         other => panic!("expected BAD_REQUEST, got {other:?}"),
     }
